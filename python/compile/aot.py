@@ -1,0 +1,133 @@
+"""AOT lowering: JAX graphs → HLO text artifacts for the rust runtime.
+
+Interchange is HLO **text**, not serialized HloModuleProto: jax ≥ 0.5
+emits 64-bit instruction ids which xla_extension 0.5.1 rejects; the text
+parser reassigns ids (see /opt/xla-example/README.md). Lowered with
+``return_tuple=True`` — the rust side unwraps with ``to_tuple``.
+
+Usage:  cd python && python -m compile.aot --out ../artifacts
+Writes one ``<name>.hlo.txt`` per graph plus ``manifest.txt`` describing
+the argument shapes (parsed by ``rust/src/runtime``).
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import LANES, SIMD_OPS
+
+#: Block count per ALU artifact: rust chunks arbitrary vectors into this.
+ALU_BLOCKS = 8
+#: Batch per worker for the training-step artifact.
+TRAIN_BATCH = 256
+
+
+def to_hlo_text(fn, *specs) -> str:
+    lowered = jax.jit(fn).lower(*specs)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def u32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.uint32)
+
+
+def artifact_set():
+    """name → (fn, arg specs). The manifest row format is
+    ``name arg0xarg1x...:dtype ...`` with flat shapes."""
+    n = ALU_BLOCKS * LANES
+    arts = {}
+    for op in SIMD_OPS:
+        arts[f"simd_{op}"] = (model.simd_graph(op, ALU_BLOCKS), [f32(n), f32(n)])
+    arts["block_hash"] = (model.block_hash_graph(ALU_BLOCKS), [f32(n)])
+    arts["guarded_reduce"] = (
+        model.guarded_reduce_graph(ALU_BLOCKS),
+        [f32(n), f32(n), u32(ALU_BLOCKS)],
+    )
+    d_in, d_h, d_out = model.MLP_IN, model.MLP_HIDDEN, model.MLP_OUT
+    arts["mlp_grad"] = (
+        model.mlp_grad_graph(TRAIN_BATCH),
+        [
+            f32(d_in, d_h),
+            f32(d_h),
+            f32(d_h, d_out),
+            f32(d_out),
+            f32(TRAIN_BATCH, d_in),
+            f32(TRAIN_BATCH, d_out),
+        ],
+    )
+    # sgd_apply over the largest parameter block, rust pads smaller ones.
+    sgd_blocks = (d_in * d_h + LANES - 1) // LANES
+    arts["sgd_apply"] = (
+        model.sgd_apply_graph(sgd_blocks),
+        [f32(sgd_blocks * LANES), f32(sgd_blocks * LANES), f32(1, LANES)],
+    )
+    arts["mlp_init"] = (model.mlp_init_graph(0), [])
+    arts["mlp_batch"] = (
+        model.mlp_batch_graph(TRAIN_BATCH, 0),
+        [jax.ShapeDtypeStruct((), jnp.uint32)],
+    )
+    return arts
+
+
+def spec_str(s) -> str:
+    shape = "x".join(str(d) for d in s.shape) or "scalar"
+    return f"{shape}:{s.dtype}"
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts", help="artifact directory")
+    ap.add_argument("--only", default=None, help="lower a single artifact")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    manifest = []
+    for name, (fn, specs) in artifact_set().items():
+        if args.only and name != args.only:
+            continue
+        text = to_hlo_text(fn, *specs)
+        # Guard against the HLO text printer eliding large constants —
+        # those round-trip as zeros through the text interchange.
+        if "constant({...})" in text:
+            raise RuntimeError(
+                f"{name}: lowered HLO contains an elided large constant; "
+                "move the array into the graph (compute it from a key) or "
+                "pass it as an argument"
+            )
+        path = os.path.join(args.out, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        row = f"{name} " + " ".join(spec_str(s) for s in specs)
+        manifest.append(row)
+        print(f"wrote {path} ({len(text)} chars)  [{row}]")
+
+    if not args.only:
+        with open(os.path.join(args.out, "manifest.txt"), "w") as f:
+            f.write("\n".join(manifest) + "\n")
+        # Constants the rust side cross-checks at load time.
+        with open(os.path.join(args.out, "abi.txt"), "w") as f:
+            f.write(f"lanes {LANES}\nalu_blocks {ALU_BLOCKS}\n")
+            f.write(f"train_batch {TRAIN_BATCH}\n")
+            f.write(
+                f"mlp {model.MLP_IN} {model.MLP_HIDDEN} {model.MLP_OUT}\n"
+            )
+        # Oracle loss curve for the rust e2e training example.
+        curve = model.reference_training_curve(steps=50, batch=TRAIN_BATCH, seed=0)
+        with open(os.path.join(args.out, "reference_curve.txt"), "w") as f:
+            f.write("\n".join(f"{v:.9e}" for v in curve) + "\n")
+
+
+if __name__ == "__main__":
+    main()

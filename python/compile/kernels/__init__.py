@@ -1,0 +1,27 @@
+"""L1 — Pallas kernels implementing the NetDAM ALU array.
+
+The paper's device executes one SIMD instruction over a 9000 B jumbo
+payload ≈ 2048 × f32 lanes. Each kernel here maps one block to one VMEM
+tile (`BlockSpec((1, LANES))`), grids over blocks, and vectorizes on the
+VPU — the TPU-shaped analogue of the FPGA's ALU array (see DESIGN.md
+§Hardware-Adaptation). All kernels run `interpret=True` (the CPU PJRT
+plugin cannot execute Mosaic custom-calls) and are verified against the
+pure-jnp oracles in `ref.py`.
+"""
+
+from .block_hash import block_hash_pallas
+from .ref import ref_block_hash, ref_guarded_reduce, ref_simd, HASH_C1, SIMD_OPS
+from .reduce_step import guarded_reduce_pallas
+from .simd_alu import simd_op_pallas, LANES
+
+__all__ = [
+    "LANES",
+    "HASH_C1",
+    "SIMD_OPS",
+    "simd_op_pallas",
+    "block_hash_pallas",
+    "guarded_reduce_pallas",
+    "ref_simd",
+    "ref_block_hash",
+    "ref_guarded_reduce",
+]

@@ -1,0 +1,36 @@
+"""The block-hash kernel (paper §3.1's idempotency guard).
+
+Per block: ``h = Σ_i (bits(x_i) ^ C1) · (2i+1) mod 2^32``. The weighted
+sum is a single vectorized pass — the form was chosen (over a serial FNV
+chain) precisely so a 2048-lane datapath, a TPU VPU tile, and a rust loop
+all compute it the same way in one sweep.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import HASH_C1
+from .simd_alu import LANES
+
+
+def _hash_kernel(x_ref, o_ref):
+    bits = x_ref[...].view(jnp.uint32).reshape(-1)
+    weights = 2 * jnp.arange(LANES, dtype=jnp.uint32) + 1
+    terms = (bits ^ jnp.uint32(HASH_C1)) * weights
+    o_ref[...] = jnp.sum(terms, dtype=jnp.uint32).reshape(1)
+
+
+@jax.jit
+def block_hash_pallas(x: jnp.ndarray) -> jnp.ndarray:
+    """Hash each `(blocks, LANES)` row to one u32: returns `(blocks,)`."""
+    assert x.ndim == 2 and x.shape[1] == LANES, x.shape
+    blocks = x.shape[0]
+    return pl.pallas_call(
+        _hash_kernel,
+        out_shape=jax.ShapeDtypeStruct((blocks,), jnp.uint32),
+        grid=(blocks,),
+        in_specs=[pl.BlockSpec((1, LANES), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((1,), lambda i: (i,)),
+        interpret=True,
+    )(x)

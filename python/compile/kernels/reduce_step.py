@@ -1,0 +1,50 @@
+"""The fused owner step of Ring Reduce-Scatter (§3.1): hash-guard + add.
+
+One kernel performs what the NetDAM device does at the chunk owner:
+recompute the local block's hash, compare against the carried
+`expect_hash`, and produce either the reduced block (guard passed) or
+the unchanged local block (duplicate chain — idempotent). Fusing guard
+and add into one VMEM pass avoids a second HBM read of the local block.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import HASH_C1
+from .simd_alu import LANES
+
+
+def _guarded_kernel(payload_ref, local_ref, expect_ref, out_ref, wrote_ref):
+    payload = payload_ref[...]
+    local = local_ref[...]
+    bits = local.view(jnp.uint32).reshape(-1)
+    weights = 2 * jnp.arange(LANES, dtype=jnp.uint32) + 1
+    h = jnp.sum((bits ^ jnp.uint32(HASH_C1)) * weights, dtype=jnp.uint32)
+    ok = h == expect_ref[0]
+    out_ref[...] = jnp.where(ok, payload + local, local)
+    wrote_ref[...] = ok.astype(jnp.uint32).reshape(1)
+
+
+@jax.jit
+def guarded_reduce_pallas(payload, local, expect_hash):
+    """Per-block guarded reduce.
+
+    Args: `(blocks, LANES)` payload/local f32, `(blocks,)` u32 hashes.
+    Returns `(new_block, wrote)` with shapes `(blocks, LANES)`/`(blocks,)`.
+    """
+    assert payload.shape == local.shape and payload.shape[1] == LANES
+    blocks = payload.shape[0]
+    tile = pl.BlockSpec((1, LANES), lambda i: (i, 0))
+    scalar = pl.BlockSpec((1,), lambda i: (i,))
+    return pl.pallas_call(
+        _guarded_kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct(payload.shape, jnp.float32),
+            jax.ShapeDtypeStruct((blocks,), jnp.uint32),
+        ),
+        grid=(blocks,),
+        in_specs=[tile, tile, scalar],
+        out_specs=(tile, scalar),
+        interpret=True,
+    )(payload, local, expect_hash)

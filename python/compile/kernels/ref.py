@@ -1,0 +1,60 @@
+"""Pure-jnp oracles for the Pallas kernels — the correctness ground truth.
+
+These mirror, operation for operation, what the rust `alu::NativeAlu` and
+`alu::hash` implement; `python/tests/` asserts kernel == ref, and the rust
+integration tests assert NativeAlu == XlaAlu(artifact). The chain closes:
+
+    pallas kernel  ==  jnp ref  ==  rust native  ==  PJRT-compiled HLO
+"""
+
+import jax.numpy as jnp
+
+#: The SIMD extension ops of paper §2.4, opcode order matching rust
+#: `isa::SimdOp`.
+SIMD_OPS = ("add", "sub", "mul", "min", "max", "xor")
+
+#: Lane-whitening constant of the block hash (must equal rust HASH_C1).
+HASH_C1 = 0x9E37_79B9
+
+
+def ref_simd(op: str, a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Lane-wise `op` over two f32 arrays (NaN-propagating min/max)."""
+    if op == "add":
+        return a + b
+    if op == "sub":
+        return a - b
+    if op == "mul":
+        return a * b
+    if op == "min":
+        return jnp.minimum(a, b)  # NaN-propagating, like the rust side
+    if op == "max":
+        return jnp.maximum(a, b)
+    if op == "xor":
+        return (a.view(jnp.uint32) ^ b.view(jnp.uint32)).view(jnp.float32)
+    raise ValueError(f"unknown op {op!r}")
+
+
+def ref_block_hash(x: jnp.ndarray) -> jnp.ndarray:
+    """Weighted-sum block hash over the f32 bit patterns.
+
+    ``h = Σ_i (bits(x_i) ^ C1) · (2i + 1)  (mod 2^32)`` — identical to
+    rust ``alu::hash::block_hash_f32`` (known vector asserted in tests).
+    """
+    bits = x.reshape(-1).view(jnp.uint32)
+    n = bits.shape[0]
+    weights = 2 * jnp.arange(n, dtype=jnp.uint32) + 1
+    terms = (bits ^ jnp.uint32(HASH_C1)) * weights
+    return jnp.sum(terms, dtype=jnp.uint32)
+
+
+def ref_guarded_reduce(payload, local, expect_hash):
+    """The owner step of Ring Reduce-Scatter (§3.1).
+
+    Returns ``(new_block, wrote)``: if ``hash(local) == expect_hash`` (the
+    block is pristine) the reduced sum is produced and ``wrote=1``; else
+    the local block passes through unchanged (``wrote=0``) — the
+    idempotent last hop.
+    """
+    ok = ref_block_hash(local) == jnp.uint32(expect_hash)
+    new_block = jnp.where(ok, payload + local, local)
+    return new_block, ok.astype(jnp.uint32)

@@ -1,0 +1,72 @@
+"""The SIMD ALU kernel: one NetDAM instruction over blocks of 2048 lanes.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the FPGA datapath
+streams a jumbo payload past 2048 parallel f32 ALUs; on TPU the analogue
+is one (1, 2048) VMEM tile per grid step with the op vectorized on the
+VPU. `BlockSpec` expresses the HBM→VMEM schedule the FPGA does with its
+packet-buffer SRAM. No MXU involvement — the ISA is elementwise.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+#: The paper's SIMD width: 2048 × f32 = 8 KiB per instruction.
+LANES = 2048
+
+
+def _make_kernel(op: str):
+    def kernel(a_ref, b_ref, o_ref):
+        a = a_ref[...]
+        b = b_ref[...]
+        if op == "add":
+            o_ref[...] = a + b
+        elif op == "sub":
+            o_ref[...] = a - b
+        elif op == "mul":
+            o_ref[...] = a * b
+        elif op == "min":
+            # Explicit NaN propagation: the HLO `minimum` op's NaN
+            # behaviour is implementation-defined (xla_extension 0.5.1's
+            # CPU backend returns the non-NaN operand), so spell it out —
+            # the artifact must match jnp/rust semantics on every backend.
+            nan = jnp.float32(jnp.nan)
+            o_ref[...] = jnp.where(
+                jnp.isnan(a) | jnp.isnan(b), nan, jnp.minimum(a, b)
+            )
+        elif op == "max":
+            nan = jnp.float32(jnp.nan)
+            o_ref[...] = jnp.where(
+                jnp.isnan(a) | jnp.isnan(b), nan, jnp.maximum(a, b)
+            )
+        elif op == "xor":
+            ai = a.view(jnp.uint32)
+            bi = b.view(jnp.uint32)
+            o_ref[...] = (ai ^ bi).view(jnp.float32)
+        else:  # pragma: no cover - guarded by caller
+            raise ValueError(op)
+
+    return kernel
+
+
+@functools.partial(jax.jit, static_argnames=("op",))
+def simd_op_pallas(a: jnp.ndarray, b: jnp.ndarray, *, op: str = "add") -> jnp.ndarray:
+    """Apply `op` lane-wise over `(blocks, LANES)` f32 arrays.
+
+    One grid step = one block = one device instruction; the VMEM tile is
+    exactly the paper's 8 KiB payload.
+    """
+    assert a.ndim == 2 and a.shape[1] == LANES, a.shape
+    assert a.shape == b.shape
+    blocks = a.shape[0]
+    spec = pl.BlockSpec((1, LANES), lambda i: (i, 0))
+    return pl.pallas_call(
+        _make_kernel(op),
+        out_shape=jax.ShapeDtypeStruct(a.shape, jnp.float32),
+        grid=(blocks,),
+        in_specs=[spec, spec],
+        out_specs=spec,
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(a, b)

@@ -1,0 +1,162 @@
+"""L2 — JAX compute graphs lowered to the AOT artifacts rust executes.
+
+Three families:
+
+* **ALU graphs** — thin jitted wrappers around the L1 Pallas kernels,
+  one artifact per SIMD op (the rust `runtime::XlaAlu` backend executes
+  these for the device ALU data path).
+* **Guarded reduce** — the fused §3.1 owner step (hash guard + add).
+* **MLP training step** — fwd/bwd of a small regression MLP for the
+  data-parallel training example (`examples/train_dataparallel.rs`):
+  workers run this artifact through PJRT, and the resulting gradients are
+  allreduced through the simulated NetDAM fabric. The SGD update is
+  expressed with the Pallas SIMD kernels (`sgd_apply`) so the paper's
+  in-memory-compute path covers the optimizer too.
+
+Everything here is shape-static: `aot.py` lowers each graph once per
+(shape) configuration and writes HLO *text* (see /opt/xla-example:
+serialized protos from jax ≥ 0.5 are rejected by xla_extension 0.5.1).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import simd_op_pallas, block_hash_pallas, guarded_reduce_pallas, LANES
+
+# --------------------------------------------------------------- ALU ----
+
+
+def simd_graph(op: str, blocks: int):
+    """(blocks·LANES,) ⊕ (blocks·LANES,) — flat vectors for the rust side."""
+
+    def fn(a, b):
+        a2 = a.reshape(blocks, LANES)
+        b2 = b.reshape(blocks, LANES)
+        return (simd_op_pallas(a2, b2, op=op).reshape(-1),)
+
+    return fn
+
+
+def block_hash_graph(blocks: int):
+    def fn(x):
+        return (block_hash_pallas(x.reshape(blocks, LANES)),)
+
+    return fn
+
+
+def guarded_reduce_graph(blocks: int):
+    def fn(payload, local, expect):
+        out, wrote = guarded_reduce_pallas(
+            payload.reshape(blocks, LANES), local.reshape(blocks, LANES), expect
+        )
+        return (out.reshape(-1), wrote)
+
+    return fn
+
+
+# --------------------------------------------------------------- MLP ----
+
+#: Default MLP geometry for the training example (≈ 0.6 M params —
+#: small enough for a CPU-interpret run, structured like the real thing).
+MLP_IN, MLP_HIDDEN, MLP_OUT = 64, 512, 16
+
+
+def mlp_init(seed: int = 0, d_in=MLP_IN, d_h=MLP_HIDDEN, d_out=MLP_OUT):
+    """He-initialized parameters as a flat tuple (rust-friendly)."""
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    w1 = jax.random.normal(k1, (d_in, d_h), jnp.float32) * (2.0 / d_in) ** 0.5
+    b1 = jnp.zeros((d_h,), jnp.float32)
+    w2 = jax.random.normal(k2, (d_h, d_out), jnp.float32) * (2.0 / d_h) ** 0.5
+    b2 = jnp.zeros((d_out,), jnp.float32)
+    return w1, b1, w2, b2
+
+
+def mlp_loss(params, x, y):
+    w1, b1, w2, b2 = params
+    h = jnp.tanh(x @ w1 + b1)
+    pred = h @ w2 + b2
+    return jnp.mean((pred - y) ** 2)
+
+
+def mlp_grad_graph(batch: int, d_in=MLP_IN, d_h=MLP_HIDDEN, d_out=MLP_OUT):
+    """(w1,b1,w2,b2,x,y) → (g1,gb1,g2,gb2,loss) — one worker's step."""
+
+    def fn(w1, b1, w2, b2, x, y):
+        loss, grads = jax.value_and_grad(mlp_loss)((w1, b1, w2, b2), x, y)
+        g1, gb1, g2, gb2 = grads
+        return g1, gb1, g2, gb2, loss.reshape(1)
+
+    return fn
+
+
+def sgd_apply_graph(blocks: int):
+    """w ← w − lr·g over flat (blocks·LANES,) vectors, via the Pallas ALU.
+
+    Composes two device instructions — MUL (g·(−lr) broadcast block) and
+    ADD — exactly how an in-memory optimizer would run on NetDAM (§4's
+    "in-memory optimizer" future work, realized).
+    """
+
+    def fn(w, g, neg_lr):
+        w2 = w.reshape(blocks, LANES)
+        g2 = g.reshape(blocks, LANES)
+        step = simd_op_pallas(g2, jnp.broadcast_to(neg_lr, g2.shape), op="mul")
+        return (simd_op_pallas(w2, step, op="add").reshape(-1),)
+
+    return fn
+
+
+# ------------------------------------------------------------ helpers ---
+
+
+def mlp_init_graph(seed: int = 0):
+    """() → (w1,b1,w2,b2): parameter initialization as an artifact so the
+    rust runtime starts from the exact same weights as the oracle."""
+
+    def fn():
+        return mlp_init(seed)
+
+    return fn
+
+
+def mlp_batch_graph(batch: int, seed: int = 0):
+    """(step:u32) → (x, y): the deterministic synthetic regression task.
+    Same stream the python oracle uses, so rust and python train on
+    identical data.
+
+    NOTE: the task matrix `kw` is *recomputed inside the graph* rather
+    than captured as a closure constant — XLA's HLO text printer elides
+    large constants (`constant({...})`), which would silently round-trip
+    as zeros through the text interchange (caught by the e2e oracle
+    check). Keys are tiny constants and survive printing.
+    """
+    key = jax.random.PRNGKey(seed + 1)
+
+    def fn(step):
+        kw = jax.random.normal(key, (MLP_IN, MLP_OUT), jnp.float32)
+        ks = jax.random.fold_in(key, step)
+        x = jax.random.normal(ks, (batch, MLP_IN), jnp.float32)
+        y = jnp.tanh(x @ kw)
+        return x, y
+
+    return fn
+
+
+@functools.lru_cache(maxsize=None)
+def reference_training_curve(steps: int = 50, batch: int = 256, seed: int = 0):
+    """Pure-jax training loss curve — oracle for the rust e2e example.
+    Uses exactly the graphs exported as artifacts (same init, same data,
+    same lr) so the rust-side curve must match to float precision."""
+    params = mlp_init(seed)
+    gen = mlp_batch_graph(batch, seed)
+    losses = []
+    grad_fn = jax.jit(jax.value_and_grad(mlp_loss))
+    gen_fn = jax.jit(gen)
+    for s in range(steps):
+        x, y = gen_fn(jnp.uint32(s))
+        loss, grads = grad_fn(params, x, y)
+        params = tuple(p - 0.05 * g for p, g in zip(params, grads))
+        losses.append(float(loss))
+    return losses

@@ -1,0 +1,58 @@
+"""AOT path: every artifact lowers to parseable HLO text with the ABI the
+rust runtime expects (entry computation with the declared parameter count,
+tuple root)."""
+
+import re
+
+import jax.numpy as jnp
+import pytest
+
+from compile import aot
+
+
+@pytest.fixture(scope="module")
+def artifacts():
+    return aot.artifact_set()
+
+
+def test_artifact_set_is_complete(artifacts):
+    names = set(artifacts)
+    for op in ("add", "sub", "mul", "min", "max", "xor"):
+        assert f"simd_{op}" in names
+    for extra in ("block_hash", "guarded_reduce", "mlp_grad", "sgd_apply"):
+        assert extra in names
+
+
+@pytest.mark.parametrize(
+    "name", ["simd_add", "block_hash", "guarded_reduce", "sgd_apply"]
+)
+def test_lowering_produces_entry_hlo(artifacts, name):
+    fn, specs = artifacts[name]
+    text = aot.to_hlo_text(fn, *specs)
+    assert "ENTRY" in text
+    # Parameter count in the ENTRY computation matches the manifest row
+    # (nested computations — reducers, fusions — have their own params).
+    entry = text[text.index("ENTRY"):]
+    params = re.findall(r"parameter\(\d+\)", entry)
+    assert len(set(params)) == len(specs), (name, sorted(set(params)))
+    # Tuple root (return_tuple=True) — rust unwraps with to_tuple.
+    assert re.search(r"ROOT .*tuple", text), name
+
+
+def test_simd_artifact_executes_in_jax(artifacts):
+    """The lowered graph, run through jax itself, matches a direct add —
+    guards against lowering to a wrong-but-parseable module."""
+    import jax
+
+    fn, specs = artifacts["simd_add"]
+    n = specs[0].shape[0]
+    a = jnp.arange(n, dtype=jnp.float32)
+    b = jnp.ones((n,), jnp.float32)
+    (out,) = jax.jit(fn)(a, b)
+    assert out.shape == (n,)
+    assert float(out[5]) == 6.0
+
+
+def test_spec_str_format():
+    assert aot.spec_str(jnp.zeros((4, 8))) in ("4x8:float32",)
+    assert aot.spec_str(jnp.zeros((16,), jnp.uint32)) == "16:uint32"

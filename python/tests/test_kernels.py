@@ -1,0 +1,146 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle (`ref.py`).
+
+Hypothesis sweeps shapes and value regimes; dedicated cases pin the
+special values (NaN/Inf/−0.0) and the cross-language hash vector.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import (
+    LANES,
+    SIMD_OPS,
+    block_hash_pallas,
+    guarded_reduce_pallas,
+    ref_block_hash,
+    ref_guarded_reduce,
+    ref_simd,
+    simd_op_pallas,
+)
+
+settings.register_profile("ci", deadline=None, max_examples=20)
+settings.load_profile("ci")
+
+
+def rand_blocks(seed: int, blocks: int, lo=-1e3, hi=1e3) -> jnp.ndarray:
+    r = np.random.RandomState(seed)
+    return jnp.asarray(r.uniform(lo, hi, size=(blocks, LANES)).astype("float32"))
+
+
+@pytest.mark.parametrize("op", SIMD_OPS)
+def test_ops_match_ref_basic(op):
+    a = rand_blocks(1, 2)
+    b = rand_blocks(2, 2)
+    got = simd_op_pallas(a, b, op=op)
+    want = ref_simd(op, a, b)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@given(
+    op=st.sampled_from(SIMD_OPS),
+    blocks=st.integers(min_value=1, max_value=6),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+    scale=st.sampled_from([1e-6, 1.0, 1e6, 3e38]),
+)
+def test_ops_match_ref_swept(op, blocks, seed, scale):
+    a = rand_blocks(seed, blocks, -scale, scale)
+    b = rand_blocks(seed + 1, blocks, -scale, scale)
+    got = simd_op_pallas(a, b, op=op)
+    want = ref_simd(op, a, b)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("op", SIMD_OPS)
+def test_ops_handle_specials(op):
+    specials = np.array(
+        [np.nan, np.inf, -np.inf, 0.0, -0.0, 1.0, np.float32(3.4e38)],
+        dtype="float32",
+    )
+    a = np.tile(np.resize(specials, LANES), (1, 1)).astype("float32")
+    b = a[:, ::-1].copy()
+    got = np.asarray(simd_op_pallas(jnp.asarray(a), jnp.asarray(b), op=op))
+    want = np.asarray(ref_simd(op, jnp.asarray(a), jnp.asarray(b)))
+    np.testing.assert_array_equal(got.view("uint32"), want.view("uint32"))
+
+
+def test_xor_is_involution():
+    a = rand_blocks(5, 3)
+    b = rand_blocks(6, 3)
+    x = simd_op_pallas(a, b, op="xor")
+    back = simd_op_pallas(x, b, op="xor")
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(a))
+
+
+# ------------------------------------------------------------- hash ----
+
+
+def test_hash_known_vector_matches_rust():
+    # rust: alu::hash::tests::known_vector_matches_python_kernel
+    xs = jnp.arange(8, dtype=jnp.float32)
+    assert int(ref_block_hash(xs)) == 0xB5DE_6E40
+
+
+def test_hash_kernel_matches_ref_per_block():
+    x = rand_blocks(7, 4)
+    got = np.asarray(block_hash_pallas(x))
+    want = np.asarray(jnp.stack([ref_block_hash(x[i]) for i in range(4)]))
+    np.testing.assert_array_equal(got, want)
+
+
+@given(seed=st.integers(min_value=0, max_value=2**31 - 1))
+def test_hash_detects_single_lane_flip(seed):
+    x = rand_blocks(seed, 1)
+    h0 = int(block_hash_pallas(x)[0])
+    lane = seed % LANES
+    x2 = np.asarray(x).copy()
+    x2[0, lane] += 1.0
+    h1 = int(block_hash_pallas(jnp.asarray(x2))[0])
+    assert h0 != h1
+
+
+def test_hash_detects_permutation():
+    x = rand_blocks(9, 1)
+    perm = np.asarray(x).copy()
+    perm[0, :2] = perm[0, [1, 0]]
+    assert int(block_hash_pallas(x)[0]) != int(block_hash_pallas(jnp.asarray(perm))[0])
+
+
+# --------------------------------------------------- guarded reduce ----
+
+
+def test_guarded_reduce_pass_and_block():
+    payload = rand_blocks(11, 2)
+    local = rand_blocks(12, 2)
+    good = block_hash_pallas(local)
+    out, wrote = guarded_reduce_pallas(payload, local, good)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(payload + local))
+    assert np.asarray(wrote).tolist() == [1, 1]
+
+    bad = good + np.uint32(1)
+    out2, wrote2 = guarded_reduce_pallas(payload, local, bad)
+    np.testing.assert_array_equal(np.asarray(out2), np.asarray(local))
+    assert np.asarray(wrote2).tolist() == [0, 0]
+
+
+@given(seed=st.integers(min_value=0, max_value=2**31 - 1))
+def test_guarded_reduce_matches_ref(seed):
+    payload = rand_blocks(seed, 1)
+    local = rand_blocks(seed + 1, 1)
+    expect = block_hash_pallas(local)
+    out, wrote = guarded_reduce_pallas(payload, local, expect)
+    ref_out, ref_wrote = ref_guarded_reduce(payload[0], local[0], expect[0])
+    np.testing.assert_array_equal(np.asarray(out[0]), np.asarray(ref_out))
+    assert int(wrote[0]) == int(ref_wrote)
+
+
+def test_mixed_guard_per_block():
+    payload = rand_blocks(21, 3)
+    local = rand_blocks(22, 3)
+    h = np.asarray(block_hash_pallas(local)).copy()
+    h[1] ^= 0xDEAD  # corrupt the middle block's guard
+    out, wrote = guarded_reduce_pallas(payload, local, jnp.asarray(h))
+    assert np.asarray(wrote).tolist() == [1, 0, 1]
+    np.testing.assert_array_equal(np.asarray(out[1]), np.asarray(local[1]))
+    np.testing.assert_array_equal(np.asarray(out[0]), np.asarray(payload[0] + local[0]))

@@ -1,0 +1,151 @@
+//! Ablation bench A1 — the design knobs DESIGN.md calls out, on the E2
+//! workload:
+//!
+//! * SIMD block width (the 2048-lane claim vs narrower packets);
+//! * window (self-clocking depth);
+//! * fused all-gather vs reduce-scatter only;
+//! * reliability machinery on a lossless fabric (overhead check);
+//! * loss tolerance: idempotent retransmit under 1% loss.
+
+use netdam::collectives::{run_ring_allreduce, RingSpec};
+use netdam::device::DeviceConfig;
+use netdam::metrics::Table;
+use netdam::net::{Cluster, LinkConfig, Switch};
+use netdam::sim::{fmt_ns, Engine};
+use netdam::wire::DeviceIp;
+
+fn cluster(seed: u64, loss_p: f64) -> (Cluster, Vec<netdam::net::NodeId>) {
+    let mut cl = Cluster::new(seed);
+    let sw = cl.add_switch(Switch::tor(None));
+    let mut devices = Vec::new();
+    for i in 0..4u8 {
+        let d = cl.add_device(DeviceConfig::paper_default(DeviceIp::lan(1 + i)).timing_only());
+        cl.connect(sw, d, LinkConfig::dc_100g());
+        devices.push(d);
+    }
+    cl.compute_routes();
+    cl.fault.loss_p = loss_p;
+    (cl, devices)
+}
+
+fn run(spec: &RingSpec, loss_p: f64) -> (u64, u64, usize) {
+    let (mut cl, devices) = cluster(0xAB, loss_p);
+    let mut eng: Engine<Cluster> = Engine::new();
+    let out = run_ring_allreduce(&mut cl, &mut eng, &devices, spec).expect("run");
+    assert_eq!(
+        out.blocks_done, out.blocks,
+        "incomplete run in ablation (drops: {}) — deep unreliable windows \
+         can overrun the switch buffer; use reliable mode",
+        cl.metrics.counter("link_drops")
+    );
+    (out.elapsed_ns, out.retransmits, out.blocks)
+}
+
+fn main() {
+    let wall = std::time::Instant::now();
+    let elements = 1 << 22;
+    println!("# A1 — ablations on the {elements}-element allreduce\n");
+
+    println!("## SIMD lanes per packet (9000B jumbo = 2048 lanes)\n");
+    let mut t = Table::new(&["lanes/packet", "time", "slowdown vs 2048"]);
+    let (base, ..) = run(
+        &RingSpec {
+            elements,
+            lanes: 2048,
+            window: 32,
+            ..Default::default()
+        },
+        0.0,
+    );
+    for lanes in [256usize, 512, 1024, 2048] {
+        let (ns, ..) = run(
+            &RingSpec {
+                elements,
+                lanes,
+                window: 32,
+                ..Default::default()
+            },
+            0.0,
+        );
+        t.row(&[
+            lanes.to_string(),
+            fmt_ns(ns),
+            format!("{:.2}x", ns as f64 / base as f64),
+        ]);
+    }
+    println!("{}", t.render());
+
+    println!("## window (outstanding blocks per rank)\n");
+    // Beyond ~55 blocks the initial burst (window x 9 KB) overruns the
+    // 500 KB switch egress buffer: deeper windows need reliable mode.
+    // That interaction is itself a finding — shown as the last two rows.
+    let mut t = Table::new(&["window", "time", "retransmits"]);
+    for window in [1usize, 2, 4, 8, 16, 32] {
+        let (ns, retx, _) = run(
+            &RingSpec {
+                elements,
+                window,
+                ..Default::default()
+            },
+            0.0,
+        );
+        t.row(&[window.to_string(), fmt_ns(ns), retx.to_string()]);
+    }
+    for window in [64usize, 128] {
+        let (ns, retx, _) = run(
+            &RingSpec {
+                elements,
+                window,
+                reliable: true,
+                ..Default::default()
+            },
+            0.0,
+        );
+        t.row(&[
+            format!("{window} (reliable)"),
+            fmt_ns(ns),
+            retx.to_string(),
+        ]);
+    }
+    println!("{}", t.render());
+
+    println!("## fused all-gather vs reduce-scatter only\n");
+    let mut t = Table::new(&["mode", "time", "note"]);
+    for (fused, label, note) in [
+        (true, "fused allreduce", "full §3 path"),
+        (false, "reduce-scatter only", "≈ half the volume"),
+    ] {
+        let (ns, ..) = run(
+            &RingSpec {
+                elements,
+                window: 32,
+                fused,
+                ..Default::default()
+            },
+            0.0,
+        );
+        t.row(&[label.to_string(), fmt_ns(ns), note.to_string()]);
+    }
+    println!("{}", t.render());
+
+    println!("## reliability machinery (lossless vs 1% loss)\n");
+    let mut t = Table::new(&["arm", "time", "retransmits"]);
+    for (reliable, loss, label) in [
+        (false, 0.0, "unreliable, lossless"),
+        (true, 0.0, "reliable, lossless (overhead)"),
+        (true, 0.01, "reliable, 1% loss (idempotent retry)"),
+    ] {
+        let (ns, retx, _) = run(
+            &RingSpec {
+                elements: 1 << 20, // smaller: lossy runs retransmit
+                window: 16,
+                reliable,
+                ..Default::default()
+            },
+            loss,
+        );
+        t.row(&[label.to_string(), fmt_ns(ns), retx.to_string()]);
+    }
+    println!("{}", t.render());
+    println!("bench wallclock: {:.2?}", wall.elapsed());
+}

@@ -1,0 +1,50 @@
+//! Bench E2 — regenerates the §3.3 allreduce table (native MPI 2.8 s /
+//! ring 2.1 s / NetDAM ≈0.4 s at 2 GiB).
+//!
+//! Default sweep runs up to 2^24 elements (64 MiB). Set
+//! `NETDAM_PAPER_SCALE=1` to run the full 536,870,912-float vector
+//! (timing-only payloads; several minutes of wallclock).
+
+use netdam::coordinator::{run_e2, E2Config};
+use netdam::sim::fmt_ns;
+
+fn main() {
+    println!("# E2 — 4-node MPI allreduce (paper §3.3)\n");
+    let wall = std::time::Instant::now();
+    let paper = std::env::var("NETDAM_PAPER_SCALE").is_ok();
+    let sizes: Vec<usize> = if paper {
+        vec![536_870_912]
+    } else {
+        vec![1 << 20, 1 << 22, 1 << 24]
+    };
+    for elements in sizes {
+        let cfg = E2Config {
+            elements,
+            ranks: 4,
+            timing_only: true,
+            window: 32,
+            seed: 0xE2,
+            with_baselines: true,
+        };
+        println!(
+            "## {} x f32 ({:.0} MiB)\n",
+            elements,
+            elements as f64 * 4.0 / (1 << 20) as f64
+        );
+        let r = run_e2(&cfg).expect("e2");
+        println!("{}", r.table.render());
+        println!(
+            "speedups: {:.2}x vs ring (paper 5.3x), {:.2}x vs native (paper 7x); floor ratio {:.2}x\n",
+            r.ring_roce_ns as f64 / r.netdam_ns as f64,
+            r.mpi_native_ns as f64 / r.netdam_ns as f64,
+            r.netdam_ns as f64 / r.line_rate_floor_ns as f64,
+        );
+        if paper {
+            println!(
+                "paper scale: NetDAM {} vs paper's ~400 ms initial measurement",
+                fmt_ns(r.netdam_ns)
+            );
+        }
+    }
+    println!("bench wallclock: {:.2?}", wall.elapsed());
+}

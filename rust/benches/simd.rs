@@ -1,0 +1,90 @@
+//! Bench E6 — the ALU claim of §2.2/§3.1: one NetDAM instruction covers
+//! 2048 × f32 lanes where AVX-512 covers 32.
+//!
+//! Three views:
+//! * the *timing model* (what the DES charges): NetDAM ALU array vs an
+//!   AVX-512 host core, per instruction;
+//! * measured host throughput of the native backend (the DES hot path);
+//! * the compiled Pallas artifact through PJRT (the compute plane),
+//!   including per-call overhead amortization.
+
+use netdam::alu::{AluBackend, AluCostModel, NativeAlu};
+use netdam::isa::SimdOp;
+use netdam::metrics::Table;
+use netdam::runtime::{XlaAlu, ALU_CHUNK};
+use netdam::util::Xoshiro256;
+
+fn main() {
+    let wall = std::time::Instant::now();
+    println!("# E6 — SIMD ALU: 2048-lane in-memory instruction (paper §2.2)\n");
+
+    // --- the cost model the simulator charges --------------------------
+    let nd = AluCostModel::paper_default();
+    let host = AluCostModel::avx512_host();
+    let mut t = Table::new(&["block", "NetDAM ALU ns", "AVX-512 core ns", "ratio"]);
+    for lanes in [2048usize, 8192, 65536, 1 << 20] {
+        let a = nd.exec_ns(lanes);
+        let b = host.exec_ns(lanes);
+        t.row(&[
+            format!("{lanes} x f32"),
+            a.to_string(),
+            b.to_string(),
+            format!("{:.1}x", b as f64 / a as f64),
+        ]);
+    }
+    println!("## modeled instruction latency\n\n{}", t.render());
+
+    // --- native backend (DES hot path) ---------------------------------
+    let mut rng = Xoshiro256::seed_from(6);
+    let n = 1 << 22; // 16 MiB of lanes
+    let a = rng.f32_vec(n, -10.0, 10.0);
+    let b = rng.f32_vec(n, -10.0, 10.0);
+    let mut t = Table::new(&["op", "native GB/s", "ns/2048-block"]);
+    for op in SimdOp::ALL {
+        let mut acc = a.clone();
+        let t0 = std::time::Instant::now();
+        NativeAlu::new().apply(op, &mut acc, &b);
+        let dt = t0.elapsed();
+        let gbs = (n as f64 * 4.0 * 2.0) / dt.as_nanos() as f64; // r+w streams
+        t.row(&[
+            op.name().to_string(),
+            format!("{gbs:.1}"),
+            format!("{:.0}", dt.as_nanos() as f64 / (n / 2048) as f64),
+        ]);
+        std::hint::black_box(&acc);
+    }
+    println!("## native backend throughput ({n} lanes)\n\n{}", t.render());
+
+    // --- the Pallas/PJRT compute plane ----------------------------------
+    match XlaAlu::open_default() {
+        Ok(mut xla) => {
+            let mut t = Table::new(&["lanes per call", "xla-pallas GB/s", "call overhead amortized"]);
+            for total in [ALU_CHUNK, 8 * ALU_CHUNK, 32 * ALU_CHUNK] {
+                let a2 = &a[..total];
+                let b2 = &b[..total];
+                // warm (compile once)
+                let mut acc = a2.to_vec();
+                xla.apply(SimdOp::Add, &mut acc, b2);
+                let reps = 5;
+                let t0 = std::time::Instant::now();
+                for _ in 0..reps {
+                    let mut acc = a2.to_vec();
+                    xla.apply(SimdOp::Add, &mut acc, b2);
+                    std::hint::black_box(&acc);
+                }
+                let dt = t0.elapsed() / reps;
+                let gbs = (total as f64 * 4.0 * 2.0) / dt.as_nanos() as f64;
+                t.row(&[
+                    total.to_string(),
+                    format!("{gbs:.2}"),
+                    format!("{:.1} us/call", dt.as_micros() as f64 / (total / ALU_CHUNK) as f64),
+                ]);
+            }
+            println!("## compiled Pallas kernel via PJRT (add)\n\n{}", t.render());
+            println!("note: interpret-mode Pallas on CPU measures the *integration*, not TPU perf;");
+            println!("TPU perf is estimated from VMEM/BlockSpec structure in DESIGN.md §Perf.");
+        }
+        Err(e) => println!("(xla artifacts unavailable: {e}; run `make artifacts`)"),
+    }
+    println!("\nbench wallclock: {:.2?}", wall.elapsed());
+}

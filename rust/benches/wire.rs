@@ -1,0 +1,87 @@
+//! Bench E7 — the wire codec (paper §2.2, Figure 3): encode/decode
+//! throughput of the full IPv4/UDP/NetDAM byte format, and DES event
+//! throughput (the § Perf L3 headline number).
+
+use netdam::isa::{Instruction, SimdOp};
+use netdam::metrics::Table;
+use netdam::net::{Cluster, LinkConfig, Topology};
+use netdam::sim::Engine;
+use netdam::wire::{DeviceIp, Packet, Payload, SrouHeader};
+
+fn main() {
+    let wall = std::time::Instant::now();
+    println!("# E7 — wire format + DES throughput\n");
+
+    // --- codec ----------------------------------------------------------
+    let mk = |payload: usize| {
+        Packet::new(
+            DeviceIp::lan(1),
+            77,
+            SrouHeader::direct(DeviceIp::lan(2)),
+            Instruction::Simd {
+                op: SimdOp::Add,
+                addr: 0x8000,
+            },
+        )
+        .with_payload(Payload::from_bytes(vec![0xA5; payload]))
+    };
+    let mut t = Table::new(&["payload B", "encode Mpkt/s", "decode Mpkt/s", "GB/s decoded"]);
+    for payload in [0usize, 128, 2048, 8192] {
+        let pkt = mk(payload);
+        let n = 200_000;
+        let t0 = std::time::Instant::now();
+        let mut bytes = Vec::new();
+        for _ in 0..n {
+            bytes = pkt.encode().unwrap();
+            std::hint::black_box(&bytes);
+        }
+        let enc = t0.elapsed();
+        let t1 = std::time::Instant::now();
+        for _ in 0..n {
+            let p = Packet::decode(&bytes).unwrap();
+            std::hint::black_box(&p);
+        }
+        let dec = t1.elapsed();
+        t.row(&[
+            payload.to_string(),
+            format!("{:.2}", n as f64 / enc.as_micros() as f64),
+            format!("{:.2}", n as f64 / dec.as_micros() as f64),
+            format!("{:.2}", (n * bytes.len()) as f64 / dec.as_nanos() as f64),
+        ]);
+    }
+    println!("## codec round trip\n\n{}", t.render());
+
+    // --- DES event throughput -------------------------------------------
+    // A read-request storm across the testbed: measures events/second,
+    // the number that bounds paper-scale runs (§ Perf).
+    let t0 = std::time::Instant::now();
+    let topo = Topology::star(1, 4, 1, LinkConfig::dc_100g());
+    let mut cl = topo.cluster;
+    let host = topo.hosts[0];
+    let mut eng: Engine<Cluster> = Engine::new();
+    let n_req = 50_000usize;
+    for i in 0..n_req {
+        let dst = DeviceIp::lan(1 + (i % 4) as u8);
+        let seq = cl.alloc_seq(host);
+        let pkt = Packet::new(
+            DeviceIp::lan(101),
+            seq,
+            SrouHeader::direct(dst),
+            Instruction::Read { addr: 0, len: 128 },
+        );
+        let at = (i as u64) * 200; // 5 Mpps offered
+        eng.schedule_at(at, move |cl: &mut Cluster, eng| {
+            cl.send_from(eng, host, pkt);
+        });
+    }
+    eng.run(&mut cl);
+    let dt = t0.elapsed();
+    let events = eng.events_processed();
+    println!("## DES throughput\n");
+    println!(
+        "{n_req} READ round-trips -> {events} events in {:.2?} = {:.2} M events/s",
+        dt,
+        events as f64 / dt.as_micros() as f64
+    );
+    println!("\nbench wallclock: {:.2?}", wall.elapsed());
+}

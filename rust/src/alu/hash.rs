@@ -1,0 +1,97 @@
+//! The block hash (paper §3.1).
+//!
+//! "we defined a block based hash algorithm to keep the last hop
+//! idempotent. *block-hash* instruction added to calculate block-hash,
+//! each blocks may contains 2048 x float32 data."
+//!
+//! The hash must be computable by a wide SIMD datapath in one pass, so it
+//! is an order-sensitive weighted sum over u32 lanes rather than a serial
+//! chain: `h = Σ_i (lane_i ⊕ C1) · (2i+1)  (mod 2^32)`. Odd multipliers
+//! keep each term invertible; the position weight makes permutations
+//! collide with probability ~2^-32 like any 32-bit hash. **This exact
+//! definition is mirrored by the Pallas kernel** (`kernels/block_hash.py`)
+//! and asserted equal in the integration tests — the FPGA, the rust
+//! simulator and the compiled XLA artifact must all agree or the
+//! idempotency guard would mis-fire.
+
+/// Lane whitening constant (golden ratio, same as the Pallas kernel).
+pub const HASH_C1: u32 = 0x9E37_79B9;
+
+/// Hash a block of bytes. Length is padded conceptually with zeros to a
+/// multiple of 4 (the FPGA datapath always sees whole u32 lanes).
+pub fn block_hash(block: &[u8]) -> u64 {
+    let mut h: u32 = 0;
+    let mut chunks = block.chunks_exact(4);
+    let mut i: u32 = 0;
+    for c in &mut chunks {
+        let lane = u32::from_le_bytes([c[0], c[1], c[2], c[3]]);
+        h = h.wrapping_add((lane ^ HASH_C1).wrapping_mul(2 * i + 1));
+        i += 1;
+    }
+    let rem = chunks.remainder();
+    if !rem.is_empty() {
+        let mut last = [0u8; 4];
+        last[..rem.len()].copy_from_slice(rem);
+        let lane = u32::from_le_bytes(last);
+        h = h.wrapping_add((lane ^ HASH_C1).wrapping_mul(2 * i + 1));
+    }
+    h as u64
+}
+
+/// Hash f32 lanes directly (collectives call this on payload vectors).
+pub fn block_hash_f32(lanes: &[f32]) -> u64 {
+    let mut h: u32 = 0;
+    for (i, x) in lanes.iter().enumerate() {
+        h = h.wrapping_add((x.to_bits() ^ HASH_C1).wrapping_mul(2 * i as u32 + 1));
+    }
+    h as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_and_fits_u32() {
+        let b = vec![7u8; 8192];
+        let h1 = block_hash(&b);
+        assert_eq!(h1, block_hash(&b));
+        assert!(h1 <= u32::MAX as u64);
+    }
+
+    #[test]
+    fn sensitive_to_content_and_position() {
+        let a = vec![1u8, 2, 3, 4, 5, 6, 7, 8];
+        let mut flipped = a.clone();
+        flipped[0] ^= 1;
+        assert_ne!(block_hash(&a), block_hash(&flipped));
+        // Swap the two u32 lanes — a pure permutation must change the hash.
+        let swapped = vec![5u8, 6, 7, 8, 1, 2, 3, 4];
+        assert_ne!(block_hash(&a), block_hash(&swapped));
+    }
+
+    #[test]
+    fn byte_and_f32_views_agree() {
+        let xs = vec![1.5f32, -2.0, 3.25, 0.0, f32::INFINITY];
+        let bytes = crate::util::bytes::f32s_to_bytes(&xs);
+        assert_eq!(block_hash(&bytes), block_hash_f32(&xs));
+    }
+
+    #[test]
+    fn ragged_tail_zero_pads() {
+        // [1,0,0,0] as one lane == [1] padded
+        assert_eq!(block_hash(&[1, 0, 0, 0]), block_hash(&[1]));
+        // but an extra zero *lane* changes the hash (length-extension
+        // distinct blocks) — position weight covers it only if nonzero:
+        // here lane value 0^C1 * weight ≠ 0, so lengths differ.
+        assert_ne!(block_hash(&[1, 0, 0, 0]), block_hash(&[1, 0, 0, 0, 0]));
+    }
+
+    #[test]
+    fn known_vector_matches_python_kernel() {
+        // This constant is asserted on the python side too
+        // (python/tests/test_block_hash.py::test_known_vector).
+        let xs: Vec<f32> = (0..8).map(|i| i as f32).collect();
+        assert_eq!(block_hash_f32(&xs), 0xB5DE_6E40);
+    }
+}

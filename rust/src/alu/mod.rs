@@ -1,0 +1,129 @@
+//! The NetDAM ALU array (paper §2.4/§3.1).
+//!
+//! "Traditional CPU may only has AVX512 instruction support, each cycle may
+//! only support 32× float32 value add operation. NetDAM could leverage
+//! directly memory access and implement multiple ALUs to support 2048 ×
+//! float32 add operation with single instruction."
+//!
+//! Two concerns live here, deliberately separated:
+//!
+//! * **Semantics** — [`AluBackend`]: apply a [`SimdOp`] lane-wise over f32
+//!   vectors, and compute the block hash. Implementations:
+//!   [`native::NativeAlu`] (pure rust, used inside the per-packet DES hot
+//!   path) and `runtime::XlaAlu` (executes the AOT-compiled Pallas kernel
+//!   through PJRT — the compute plane the three-layer design mandates; it
+//!   lives in [`crate::runtime`] to keep this module xla-free).
+//!   Both are verified against each other and against the python oracle.
+//! * **Timing** — [`AluCostModel`]: how many ns the device pipeline charges
+//!   for one instruction, as a function of lanes-per-cycle and clock. The
+//!   DES uses this regardless of which backend computed the numbers.
+
+pub mod hash;
+pub mod native;
+
+pub use hash::block_hash;
+pub use native::NativeAlu;
+
+use crate::isa::SimdOp;
+use crate::sim::SimTime;
+
+/// Lane-wise SIMD execution over f32.
+/// (Not `Send`: the XLA-backed implementation holds a PJRT client.)
+pub trait AluBackend {
+    /// `acc[i] = op(acc[i], operand[i])` for all lanes.
+    /// Lengths must match; implementations may process in blocks.
+    fn apply(&mut self, op: SimdOp, acc: &mut [f32], operand: &[f32]);
+
+    /// Block hash of raw bytes (idempotency guard, §3.1).
+    fn hash(&mut self, block: &[u8]) -> u64 {
+        block_hash(block)
+    }
+
+    fn name(&self) -> &'static str;
+}
+
+/// Time model of the ALU array + memory path on the device.
+#[derive(Debug, Clone)]
+pub struct AluCostModel {
+    /// f32 lanes processed per fabric cycle (paper: 2048).
+    pub lanes: usize,
+    /// Fabric clock in GHz (Alveo U55N fabric ≈ 0.25–0.45 GHz).
+    pub clock_ghz: f64,
+    /// Fixed instruction issue overhead (decode, operand fetch setup).
+    pub issue_ns: SimTime,
+}
+
+impl AluCostModel {
+    /// The paper's device: 2048 lanes at 250 MHz fabric clock.
+    pub fn paper_default() -> Self {
+        Self {
+            lanes: 2048,
+            clock_ghz: 0.25,
+            issue_ns: 8,
+        }
+    }
+
+    /// An AVX-512 host core for the RoCE baseline: 32 lanes, 3 GHz.
+    pub fn avx512_host() -> Self {
+        Self {
+            lanes: 32,
+            clock_ghz: 3.0,
+            issue_ns: 0,
+        }
+    }
+
+    /// Nanoseconds to run one SIMD instruction over `n_lanes` f32 values.
+    pub fn exec_ns(&self, n_lanes: usize) -> SimTime {
+        let cycles = n_lanes.div_ceil(self.lanes) as f64;
+        self.issue_ns + (cycles / self.clock_ghz).round() as SimTime
+    }
+
+    /// Effective f32 throughput in lanes/ns (for roofline reporting).
+    pub fn lanes_per_ns(&self) -> f64 {
+        self.lanes as f64 * self.clock_ghz
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_alu_one_block_is_one_cycle() {
+        let m = AluCostModel::paper_default();
+        // 2048 lanes at 250MHz: one cycle = 4ns (+8ns issue).
+        assert_eq!(m.exec_ns(2048), 12);
+        assert_eq!(m.exec_ns(1), 12);
+        // two blocks = two cycles
+        assert_eq!(m.exec_ns(4096), 16);
+    }
+
+    #[test]
+    fn netdam_alu_outruns_avx512_per_instruction() {
+        // The paper's comparison: one NetDAM instruction covers 2048 lanes;
+        // an AVX-512 core needs 64 cycles for the same block.
+        let nd = AluCostModel::paper_default();
+        let host = AluCostModel::avx512_host();
+        let nd_t = nd.exec_ns(2048);
+        let host_t = host.exec_ns(2048);
+        assert!(
+            (host_t as f64) > 1.5 * nd_t as f64,
+            "netdam {nd_t}ns vs host {host_t}ns"
+        );
+    }
+
+    #[test]
+    fn throughput_scales_with_lanes() {
+        let a = AluCostModel {
+            lanes: 512,
+            clock_ghz: 0.25,
+            issue_ns: 0,
+        };
+        let b = AluCostModel {
+            lanes: 2048,
+            clock_ghz: 0.25,
+            issue_ns: 0,
+        };
+        assert!(b.lanes_per_ns() > 3.9 * a.lanes_per_ns());
+    }
+}

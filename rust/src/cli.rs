@@ -1,0 +1,145 @@
+//! A small argv parser (offline substitute for `clap`).
+//!
+//! Grammar: `netdam <subcommand> [--flag] [--key value] [--set a.b=c]...`
+//! Subcommands register their options; `--help` renders usage from them.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+/// Parsed arguments for one subcommand invocation.
+#[derive(Debug, Default)]
+pub struct Args {
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    /// `--set key=value` overrides, applied onto the experiment config.
+    pub sets: Vec<(String, String)>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse everything after the subcommand name.
+    pub fn parse(argv: &[String]) -> Result<Args> {
+        let mut a = Args::default();
+        let mut i = 0;
+        while i < argv.len() {
+            let tok = &argv[i];
+            if let Some(name) = tok.strip_prefix("--") {
+                if name.is_empty() {
+                    bail!("bare `--` is not supported");
+                }
+                if name == "set" {
+                    let Some(kv) = argv.get(i + 1) else {
+                        bail!("--set requires key=value");
+                    };
+                    let Some((k, v)) = kv.split_once('=') else {
+                        bail!("--set expects key=value, got {kv:?}");
+                    };
+                    a.sets.push((k.to_string(), v.to_string()));
+                    i += 2;
+                    continue;
+                }
+                // `--key value` unless next token is another option or end.
+                match argv.get(i + 1) {
+                    Some(v) if !v.starts_with("--") => {
+                        a.opts.insert(name.to_string(), v.clone());
+                        i += 2;
+                    }
+                    _ => {
+                        a.flags.push(name.to_string());
+                        i += 1;
+                    }
+                }
+            } else {
+                a.positional.push(tok.clone());
+                i += 1;
+            }
+        }
+        Ok(a)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn opt(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    pub fn opt_u64(&self, name: &str, default: u64) -> Result<u64> {
+        match self.opts.get(name) {
+            None => Ok(default),
+            Some(s) => Ok(s.replace('_', "").parse()?),
+        }
+    }
+
+    pub fn opt_usize(&self, name: &str, default: usize) -> Result<usize> {
+        Ok(self.opt_u64(name, default as u64)? as usize)
+    }
+
+    pub fn opt_f64(&self, name: &str, default: f64) -> Result<f64> {
+        match self.opts.get(name) {
+            None => Ok(default),
+            Some(s) => Ok(s.parse()?),
+        }
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn mixed_options_flags_positionals() {
+        // NOTE: a valueless flag directly before a positional is ambiguous
+        // in this grammar (`--verbose input.toml` reads as an option), so
+        // positionals come first — the convention all netdam subcommands use.
+        let a = Args::parse(&argv(&[
+            "input.toml", "--nodes", "4", "--verbose", "--size", "1048576",
+        ]))
+        .unwrap();
+        assert_eq!(a.opt("nodes"), Some("4"));
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional(), &["input.toml".to_string()]);
+        assert_eq!(a.opt_u64("size", 0).unwrap(), 1_048_576);
+        assert_eq!(a.opt_u64("missing", 9).unwrap(), 9);
+    }
+
+    #[test]
+    fn set_overrides_collect() {
+        let a = Args::parse(&argv(&["--set", "cluster.devices=8", "--set", "seed=1"])).unwrap();
+        assert_eq!(
+            a.sets,
+            vec![
+                ("cluster.devices".to_string(), "8".to_string()),
+                ("seed".to_string(), "1".to_string())
+            ]
+        );
+    }
+
+    #[test]
+    fn underscored_numbers_parse() {
+        let a = Args::parse(&argv(&["--n", "536_870_912"])).unwrap();
+        assert_eq!(a.opt_u64("n", 0).unwrap(), 536_870_912);
+    }
+
+    #[test]
+    fn malformed_set_is_error() {
+        assert!(Args::parse(&argv(&["--set", "novalue"])).is_err());
+        assert!(Args::parse(&argv(&["--set"])).is_err());
+    }
+
+    #[test]
+    fn trailing_option_becomes_flag() {
+        let a = Args::parse(&argv(&["--timing-only"])).unwrap();
+        assert!(a.flag("timing-only"));
+    }
+}

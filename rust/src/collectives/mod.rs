@@ -1,0 +1,40 @@
+//! MPI collectives (paper §3): the NetDAM ring allreduce built from the
+//! `ReduceScatter`/`AllGather` instructions, plus the two baselines the
+//! evaluation compares against (ring-allreduce over RoCE hosts, and a
+//! "native MPI" recursive-doubling allreduce).
+//!
+//! | impl | where the add runs | transport |
+//! |---|---|---|
+//! | [`netdam_ring`] | in-memory ALU on each NetDAM device, chained by SROU | NetDAM/UDP, idempotent retransmit |
+//! | [`ring_roce`] | host CPU (AVX-512 class) after PCIe DMA | RoCE-like, lossless assumed |
+//! | [`mpi_native`] | host CPU, full vector per round | RoCE-like, lossless assumed |
+
+pub mod mpi_native;
+pub mod netdam_ring;
+pub mod oracle;
+pub mod ring_roce;
+
+pub use netdam_ring::{run_ring_allreduce, AllreduceOutcome, RingSpec};
+pub use oracle::{oracle_sum, read_vector, seed_gradients};
+
+use crate::sim::SimTime;
+
+/// A completed collective run, as the benches report it.
+#[derive(Debug, Clone)]
+pub struct CollectiveReport {
+    pub algorithm: &'static str,
+    pub elements: usize,
+    pub elapsed_ns: SimTime,
+    pub link_drops: u64,
+    pub retransmits: u64,
+}
+
+impl CollectiveReport {
+    /// Effective allreduce bandwidth: 2·(N−1)/N · V / t, the standard
+    /// ring-allreduce "algorithm bandwidth" (bytes/ns = GB/s).
+    pub fn algo_bw_gbps(&self, n_ranks: usize) -> f64 {
+        let v = self.elements as f64 * 4.0;
+        let moved = 2.0 * (n_ranks as f64 - 1.0) / n_ranks as f64 * v;
+        moved * 8.0 / self.elapsed_ns as f64
+    }
+}

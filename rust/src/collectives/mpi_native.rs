@@ -1,0 +1,212 @@
+//! "Native MPI" allreduce baseline: recursive doubling.
+//!
+//! The paper's slowest arm (2.8 s at full scale). Classic recursive
+//! doubling exchanges the **full vector** with a partner at distance
+//! `2^k` each round and reduces the whole vector on the CPU every round —
+//! log₂(N) rounds, each costing wire(V) + DMA(V) + reduce(V). The CPU
+//! term is paid log₂(N) times on the *full* volume (vs `(N−1)/N·V` once
+//! for ring) which is exactly why it loses at scale.
+
+use crate::host::{HostConfig, HostModel};
+use crate::isa::Instruction;
+use crate::net::{App, AppCtx};
+use crate::sim::SimTime;
+use crate::wire::{DeviceIp, Packet, Payload, SrouHeader};
+use std::collections::HashMap;
+
+const TOK_SEND: u64 = 1;
+const TOK_PROC: u64 = 2;
+
+use super::ring_roce::MTU_PAYLOAD;
+
+pub struct RecursiveDoublingPeer {
+    /// Rank id (diagnostics).
+    pub rank: usize,
+    rounds: usize,
+    peers: Vec<DeviceIp>, // partner ip per round
+    vector_bytes: usize,
+    pkts_per_round: usize,
+    gap_ns: SimTime,
+    host: HostModel,
+    round: usize,
+    sent_pkts: usize,
+    send_done: bool,
+    recv_processed: bool,
+    rcvd: HashMap<u64, usize>,
+    done: bool,
+}
+
+impl RecursiveDoublingPeer {
+    pub fn new(
+        rank: usize,
+        all_ips: &[DeviceIp],
+        elements: usize,
+        line_gbps: f64,
+        seed: u64,
+    ) -> Self {
+        let n = all_ips.len();
+        assert!(n.is_power_of_two() && n >= 2);
+        let rounds = n.trailing_zeros() as usize;
+        let peers = (0..rounds).map(|k| all_ips[rank ^ (1 << k)]).collect();
+        let vector_bytes = elements * 4;
+        Self {
+            rank,
+            rounds,
+            peers,
+            vector_bytes,
+            pkts_per_round: vector_bytes.div_ceil(MTU_PAYLOAD),
+            gap_ns: ((MTU_PAYLOAD + 96) as f64 * 8.0 / line_gbps).ceil() as SimTime,
+            host: HostModel::new(HostConfig::paper_default(), seed ^ (rank as u64) << 8),
+            round: 0,
+            sent_pkts: 0,
+            send_done: false,
+            recv_processed: false,
+            rcvd: HashMap::new(),
+            done: false,
+        }
+    }
+
+    fn begin_round(&mut self, ctx: &mut AppCtx) {
+        self.sent_pkts = 0;
+        self.send_done = false;
+        self.recv_processed = false;
+        let t = self.host.post_send_ns();
+        ctx.timer(t, TOK_SEND);
+        self.check_recv(ctx);
+    }
+
+    fn send_next(&mut self, ctx: &mut AppCtx) {
+        if self.sent_pkts >= self.pkts_per_round {
+            self.send_done = true;
+            self.maybe_advance(ctx);
+            return;
+        }
+        let remaining = self.vector_bytes - self.sent_pkts * MTU_PAYLOAD;
+        let len = remaining.min(MTU_PAYLOAD);
+        let seq = ctx.alloc_seq();
+        let pkt = Packet::new(
+            ctx.self_ip,
+            seq,
+            SrouHeader::direct(self.peers[self.round]),
+            Instruction::Write {
+                addr: self.round as u64,
+            },
+        )
+        .with_payload(Payload::phantom(len));
+        ctx.send(pkt);
+        self.sent_pkts += 1;
+        ctx.timer(self.gap_ns, TOK_SEND);
+    }
+
+    fn check_recv(&mut self, ctx: &mut AppCtx) {
+        if self.recv_processed || self.done {
+            return;
+        }
+        let tag = self.round as u64;
+        if self.rcvd.get(&tag).copied().unwrap_or(0) >= self.vector_bytes {
+            // Full vector arrived: DMA + full-vector CPU reduce.
+            let t = self.host.nic_write_ns(self.vector_bytes)
+                + self.host.reduce_ns(self.vector_bytes);
+            ctx.timer(t, TOK_PROC);
+        }
+    }
+
+    fn maybe_advance(&mut self, ctx: &mut AppCtx) {
+        if self.done || !(self.send_done && self.recv_processed) {
+            return;
+        }
+        self.round += 1;
+        if self.round == self.rounds {
+            self.done = true;
+            ctx.record("mpi_native_done_ns", ctx.now);
+            ctx.count("mpi_native_finished", 1);
+            return;
+        }
+        self.begin_round(ctx);
+    }
+}
+
+impl App for RecursiveDoublingPeer {
+    fn on_start(&mut self, ctx: &mut AppCtx) {
+        self.begin_round(ctx);
+    }
+
+    fn on_packet(&mut self, pkt: Packet, ctx: &mut AppCtx) {
+        if let Instruction::Write { addr } = pkt.instr {
+            *self.rcvd.entry(addr).or_insert(0) += pkt.payload.len();
+            self.check_recv(ctx);
+        }
+    }
+
+    fn on_timer(&mut self, token: u64, ctx: &mut AppCtx) {
+        match token {
+            TOK_SEND => self.send_next(ctx),
+            TOK_PROC => {
+                self.recv_processed = true;
+                self.maybe_advance(ctx);
+            }
+            _ => {}
+        }
+    }
+}
+
+/// Build a star of `n` hosts and run recursive-doubling allreduce.
+pub fn run_mpi_native(seed: u64, n: usize, elements: usize) -> crate::collectives::CollectiveReport {
+    use crate::net::{Cluster, LinkConfig, Switch};
+    use crate::sim::Engine;
+
+    let mut cl = Cluster::new(seed);
+    let sw = cl.add_switch(Switch::tor(None));
+    let link = LinkConfig::dc_100g();
+    let ips: Vec<DeviceIp> = (0..n).map(|i| DeviceIp::lan(151 + i as u8)).collect();
+    for (r, &ip) in ips.iter().enumerate() {
+        let app = RecursiveDoublingPeer::new(r, &ips, elements, link.rate.0, seed);
+        let h = cl.add_host(ip, Some(Box::new(app)));
+        cl.connect(sw, h, link.clone());
+    }
+    cl.compute_routes();
+    let mut eng: Engine<Cluster> = Engine::new();
+    cl.start_apps(&mut eng);
+    eng.run(&mut cl);
+    assert_eq!(cl.metrics.counter("mpi_native_finished") as usize, n);
+    let elapsed = cl
+        .metrics
+        .hist("mpi_native_done_ns")
+        .map(|h| h.max())
+        .unwrap_or(0);
+    crate::collectives::CollectiveReport {
+        algorithm: "mpi-native",
+        elements,
+        elapsed_ns: elapsed,
+        link_drops: cl.metrics.counter("link_drops"),
+        retransmits: 0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::ring_roce::run_ring_roce;
+
+    #[test]
+    fn completes_on_power_of_two_ranks() {
+        let r = run_mpi_native(3, 4, 4 * 8192);
+        assert!(r.elapsed_ns > 0);
+        assert_eq!(r.link_drops, 0);
+    }
+
+    #[test]
+    fn native_slower_than_ring_at_scale() {
+        // The paper's ordering (2.8 s vs 2.1 s at 2 GiB): recursive
+        // doubling reduces the full vector every round.
+        let elements = 1 << 20;
+        let native = run_mpi_native(7, 4, elements);
+        let ring = run_ring_roce(7, 4, elements);
+        assert!(
+            native.elapsed_ns > ring.elapsed_ns,
+            "native {} !> ring {}",
+            native.elapsed_ns,
+            ring.elapsed_ns
+        );
+    }
+}

@@ -1,0 +1,232 @@
+//! Experiment configuration: a small TOML-subset parser plus typed config
+//! structs. (`serde`/`toml` are unavailable in this offline build; the
+//! subset — `[section]`, `key = value` with string/int/float/bool values
+//! and `#` comments — covers every config the launcher needs.)
+
+use std::collections::BTreeMap;
+use std::fmt;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+/// A parsed scalar value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+}
+
+impl fmt::Display for Value {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Value::Str(s) => write!(f, "{s}"),
+            Value::Int(i) => write!(f, "{i}"),
+            Value::Float(x) => write!(f, "{x}"),
+            Value::Bool(b) => write!(f, "{b}"),
+        }
+    }
+}
+
+/// `section.key -> value` map with typed accessors.
+#[derive(Debug, Default, Clone)]
+pub struct Config {
+    values: BTreeMap<String, Value>,
+}
+
+impl Config {
+    /// Parse the TOML subset from a string.
+    pub fn parse(text: &str) -> Result<Config> {
+        let mut values = BTreeMap::new();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[') {
+                let name = name
+                    .strip_suffix(']')
+                    .ok_or_else(|| anyhow!("line {}: unterminated section", lineno + 1))?
+                    .trim();
+                if name.is_empty() {
+                    bail!("line {}: empty section name", lineno + 1);
+                }
+                section = name.to_string();
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .ok_or_else(|| anyhow!("line {}: expected key = value", lineno + 1))?;
+            let key = if section.is_empty() {
+                k.trim().to_string()
+            } else {
+                format!("{section}.{}", k.trim())
+            };
+            if key.is_empty() || key.ends_with('.') {
+                bail!("line {}: empty key", lineno + 1);
+            }
+            let val = parse_value(v.trim())
+                .with_context(|| format!("line {}: bad value {v:?}", lineno + 1))?;
+            if values.insert(key.clone(), val).is_some() {
+                bail!("line {}: duplicate key {key}", lineno + 1);
+            }
+        }
+        Ok(Config { values })
+    }
+
+    pub fn load(path: &Path) -> Result<Config> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    /// Overlay `key=value` overrides (CLI `--set section.key=value`).
+    pub fn set(&mut self, key: &str, raw: &str) -> Result<()> {
+        self.values.insert(key.to_string(), parse_value(raw)?);
+        Ok(())
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.values.get(key)
+    }
+
+    pub fn str(&self, key: &str, default: &str) -> String {
+        match self.values.get(key) {
+            Some(Value::Str(s)) => s.clone(),
+            Some(v) => v.to_string(),
+            None => default.to_string(),
+        }
+    }
+
+    pub fn u64(&self, key: &str, default: u64) -> u64 {
+        match self.values.get(key) {
+            Some(Value::Int(i)) if *i >= 0 => *i as u64,
+            _ => default,
+        }
+    }
+
+    pub fn usize(&self, key: &str, default: usize) -> usize {
+        self.u64(key, default as u64) as usize
+    }
+
+    pub fn f64(&self, key: &str, default: f64) -> f64 {
+        match self.values.get(key) {
+            Some(Value::Float(x)) => *x,
+            Some(Value::Int(i)) => *i as f64,
+            _ => default,
+        }
+    }
+
+    pub fn bool(&self, key: &str, default: bool) -> bool {
+        match self.values.get(key) {
+            Some(Value::Bool(b)) => *b,
+            _ => default,
+        }
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.values.keys().map(|s| s.as_str())
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' starts a comment unless inside a quoted string.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<Value> {
+    if s.is_empty() {
+        bail!("empty value");
+    }
+    if let Some(q) = s.strip_prefix('"') {
+        let inner = q
+            .strip_suffix('"')
+            .ok_or_else(|| anyhow!("unterminated string"))?;
+        return Ok(Value::Str(inner.to_string()));
+    }
+    match s {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    let cleaned = s.replace('_', "");
+    if let Ok(i) = cleaned.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(x) = cleaned.parse::<f64>() {
+        return Ok(Value::Float(x));
+    }
+    // Bare word → string (friendlier for enum-ish settings).
+    if s.chars().all(|c| c.is_alphanumeric() || "-_./:".contains(c)) {
+        return Ok(Value::Str(s.to_string()));
+    }
+    bail!("cannot parse value {s:?}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# experiment config
+seed = 42
+[cluster]
+devices = 4
+link_gbps = 100.0
+topology = "star"
+timing_only = false
+[workload]
+elements = 536_870_912   # paper scale
+name = ring-allreduce
+"#;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let c = Config::parse(SAMPLE).unwrap();
+        assert_eq!(c.u64("seed", 0), 42);
+        assert_eq!(c.usize("cluster.devices", 0), 4);
+        assert_eq!(c.f64("cluster.link_gbps", 0.0), 100.0);
+        assert_eq!(c.str("cluster.topology", ""), "star");
+        assert!(!c.bool("cluster.timing_only", true));
+        assert_eq!(c.u64("workload.elements", 0), 536_870_912);
+        assert_eq!(c.str("workload.name", ""), "ring-allreduce");
+    }
+
+    #[test]
+    fn defaults_apply_for_missing_keys() {
+        let c = Config::parse("").unwrap();
+        assert_eq!(c.u64("nope", 7), 7);
+        assert_eq!(c.str("nope", "x"), "x");
+    }
+
+    #[test]
+    fn cli_override_wins() {
+        let mut c = Config::parse(SAMPLE).unwrap();
+        c.set("cluster.devices", "8").unwrap();
+        assert_eq!(c.usize("cluster.devices", 0), 8);
+    }
+
+    #[test]
+    fn hash_inside_string_is_not_comment() {
+        let c = Config::parse("k = \"a#b\"").unwrap();
+        assert_eq!(c.str("k", ""), "a#b");
+    }
+
+    #[test]
+    fn errors_are_informative() {
+        assert!(Config::parse("[unterminated").is_err());
+        assert!(Config::parse("novalue").is_err());
+        assert!(Config::parse("k = 1\nk = 2").is_err());
+        assert!(Config::parse("k = \"open").is_err());
+    }
+}

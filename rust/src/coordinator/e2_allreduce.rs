@@ -1,0 +1,162 @@
+//! E2 — the §3.3 allreduce comparison.
+//!
+//! Paper (536,870,912 × f32, 4 nodes, 100G): native MPI 2.8 s, ring
+//! (Horovod-style) 2.1 s, NetDAM ≈ 0.4 s. We reproduce the *shape*:
+//! ordering NetDAM ≪ ring < native, NetDAM ≥ 4× vs ring, with the
+//! absolute NetDAM time approaching the ring-allreduce line-rate floor
+//! `2·(N−1)/N · V / 100G`.
+
+use anyhow::Result;
+
+use crate::collectives::mpi_native::run_mpi_native;
+use crate::collectives::ring_roce::run_ring_roce;
+use crate::collectives::{run_ring_allreduce, RingSpec};
+use crate::device::DeviceConfig;
+use crate::metrics::Table;
+use crate::net::{Cluster, LinkConfig, Switch, Topology};
+use crate::sim::{fmt_ns, Engine, SimTime};
+use crate::wire::DeviceIp;
+
+#[derive(Debug, Clone)]
+pub struct E2Config {
+    pub elements: usize,
+    pub ranks: usize,
+    /// Timing-only payloads (needed for the full 2^29 paper scale).
+    pub timing_only: bool,
+    pub window: usize,
+    pub seed: u64,
+    /// Also run the host baselines (slow at paper scale).
+    pub with_baselines: bool,
+}
+
+impl Default for E2Config {
+    fn default() -> Self {
+        Self {
+            elements: 1 << 20,
+            ranks: 4,
+            timing_only: false,
+            window: 16,
+            seed: 0xE2,
+            with_baselines: true,
+        }
+    }
+}
+
+#[derive(Debug)]
+pub struct E2Result {
+    pub netdam_ns: SimTime,
+    pub ring_roce_ns: SimTime,
+    pub mpi_native_ns: SimTime,
+    pub line_rate_floor_ns: SimTime,
+    pub table: Table,
+}
+
+pub fn run_e2(cfg: &E2Config) -> Result<E2Result> {
+    let n = cfg.ranks;
+    // --- NetDAM -----------------------------------------------------
+    let (mut cl, devices) = if cfg.timing_only {
+        let mut cl = Cluster::new(cfg.seed);
+        let sw = cl.add_switch(Switch::tor(None));
+        let mut devices = Vec::new();
+        for i in 0..n {
+            let d = cl.add_device(
+                DeviceConfig::paper_default(DeviceIp::lan(1 + i as u8)).timing_only(),
+            );
+            cl.connect(sw, d, LinkConfig::dc_100g());
+            devices.push(d);
+        }
+        cl.compute_routes();
+        (cl, devices)
+    } else {
+        let t = Topology::star(cfg.seed, n, 0, LinkConfig::dc_100g());
+        (t.cluster, t.devices)
+    };
+    if !cfg.timing_only {
+        crate::collectives::seed_gradients(&mut cl, &devices, cfg.elements, 0, cfg.seed);
+    }
+    let spec = RingSpec {
+        elements: cfg.elements,
+        window: cfg.window,
+        ..Default::default()
+    };
+    let mut eng: Engine<Cluster> = Engine::new();
+    let out = run_ring_allreduce(&mut cl, &mut eng, &devices, &spec)?;
+    anyhow::ensure!(out.blocks_done == out.blocks, "netdam allreduce incomplete");
+    let netdam_ns = out.elapsed_ns;
+
+    // --- baselines ----------------------------------------------------
+    let (ring_ns, native_ns) = if cfg.with_baselines {
+        let ring = run_ring_roce(cfg.seed, n, cfg.elements);
+        let native = run_mpi_native(cfg.seed, n, cfg.elements);
+        (ring.elapsed_ns, native.elapsed_ns)
+    } else {
+        (0, 0)
+    };
+
+    let v_bytes = cfg.elements as f64 * 4.0;
+    let floor = (2.0 * (n as f64 - 1.0) / n as f64 * v_bytes / 12.5) as SimTime;
+
+    let mut table = Table::new(&["algorithm", "time", "vs NetDAM", "paper (2GiB)"]);
+    let speed = |t: SimTime| {
+        if t == 0 {
+            "-".to_string()
+        } else {
+            format!("{:.2}x", t as f64 / netdam_ns as f64)
+        }
+    };
+    table.row(&[
+        "NetDAM ring (in-memory ALU)".into(),
+        fmt_ns(netdam_ns),
+        "1.00x".into(),
+        "~0.4 s".into(),
+    ]);
+    table.row(&[
+        "Ring allreduce over RoCE".into(),
+        fmt_ns(ring_ns),
+        speed(ring_ns),
+        "2.1 s".into(),
+    ]);
+    table.row(&[
+        "Native MPI (recursive doubling)".into(),
+        fmt_ns(native_ns),
+        speed(native_ns),
+        "2.8 s".into(),
+    ]);
+    table.row(&[
+        "line-rate floor 2(N-1)/N.V".into(),
+        fmt_ns(floor),
+        speed(floor),
+        "0.26 s".into(),
+    ]);
+
+    Ok(E2Result {
+        netdam_ns,
+        ring_roce_ns: ring_ns,
+        mpi_native_ns: native_ns,
+        line_rate_floor_ns: floor,
+        table,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn e2_shape_holds_at_reduced_scale() {
+        // 2^20 elements (4 MiB): the ordering and ratios of the paper's
+        // table must already hold.
+        let r = run_e2(&E2Config {
+            elements: 1 << 20,
+            timing_only: true,
+            ..Default::default()
+        })
+        .unwrap();
+        assert!(r.netdam_ns < r.ring_roce_ns, "NetDAM beats ring");
+        assert!(r.ring_roce_ns < r.mpi_native_ns, "ring beats native");
+        let speedup = r.ring_roce_ns as f64 / r.netdam_ns as f64;
+        assert!(speedup > 3.0, "paper shows ~5x, got {speedup:.2}x");
+        // NetDAM within 3× of the line-rate floor.
+        assert!(r.netdam_ns < 3 * r.line_rate_floor_ns);
+    }
+}

@@ -1,0 +1,243 @@
+//! E4 — SROU multipath vs classic ECMP (paper §2.3).
+//!
+//! "NetDAM design Segment Routing Header in UDP (SROU) enable topology
+//! independent transport, source node could select dedicated path to
+//! avoid switch buffer overrun and fully utilize the fabric bandwidth."
+//!
+//! Topology: two leaves × two spines, capacity-matched: as many
+//! cross-leaf elephant flows as spines, so perfect placement runs at
+//! full line rate. Arms:
+//! * **FlowHash ECMP** — per-flow hashing. The flow set is chosen (by
+//!   predicting the hash, as an unlucky production pairing would) so two
+//!   elephants **collide** on a spine: effective bandwidth halves.
+//! * **SROU spray** — each *source* alternates spine waypoints per
+//!   packet: both spines loaded evenly by construction, line rate.
+
+use anyhow::Result;
+
+use crate::isa::Instruction;
+use crate::metrics::Table;
+use crate::net::switch::flow_hash;
+use crate::net::{Cluster, EcmpMode, LinkConfig, Node, Topology};
+use crate::sim::{fmt_ns, Engine, SimTime};
+use crate::srou::SprayPlan;
+use crate::wire::{DeviceIp, Packet, Payload, SrouHeader};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum E4Mode {
+    EcmpFlowHash,
+    SrouSpray,
+}
+
+#[derive(Debug, Clone)]
+pub struct E4Config {
+    /// Devices per leaf (= max concurrent flows; 2 spines ⇒ use 2).
+    pub devs_per_leaf: usize,
+    pub bytes_per_flow: usize,
+    pub seed: u64,
+}
+
+impl Default for E4Config {
+    fn default() -> Self {
+        Self {
+            devs_per_leaf: 2,
+            bytes_per_flow: 4 << 20,
+            seed: 0xE4,
+        }
+    }
+}
+
+#[derive(Debug)]
+pub struct E4Result {
+    pub mode: E4Mode,
+    pub completion_ns: SimTime,
+    pub drops: u64,
+    /// Fraction of offered blocks that actually arrived (unreliable
+    /// writes: ECMP collisions shed load at the hot spine).
+    pub delivered_pct: f64,
+    /// Delivered payload bandwidth over the run (Gbit/s).
+    pub goodput_gbps: f64,
+    /// Bytes forwarded per spine (imbalance indicator).
+    pub spine_bytes: Vec<u64>,
+    /// Predicted hash collisions in the flow set (ECMP arm).
+    pub predicted_collisions: usize,
+}
+
+const BLOCK: usize = 8192;
+
+/// Pick a dst rotation whose flow set collides under the ECMP hash —
+/// the pairing an unlucky tenant gets. Returns (pairs, collisions).
+fn colliding_pairs(cfg: &E4Config) -> (Vec<(DeviceIp, DeviceIp)>, usize) {
+    let n = cfg.devs_per_leaf;
+    let mut best: (Vec<(DeviceIp, DeviceIp)>, usize) = (Vec::new(), 0);
+    for rot in 0..n {
+        let pairs: Vec<(DeviceIp, DeviceIp)> = (0..n)
+            .map(|f| {
+                (
+                    DeviceIp::lan(1 + f as u8),
+                    DeviceIp::lan(1 + (n + (f + rot) % n) as u8),
+                )
+            })
+            .collect();
+        let picks: Vec<usize> = pairs.iter().map(|&(s, d)| flow_hash(s, d, 2)).collect();
+        let on_zero = picks.iter().filter(|&&p| p == 0).count();
+        let collisions = on_zero.max(n - on_zero) - n.div_ceil(2);
+        if collisions >= best.1 {
+            best = (pairs, collisions);
+        }
+    }
+    best
+}
+
+fn run_mode(cfg: &E4Config, mode: E4Mode) -> Result<E4Result> {
+    let t = Topology::dual_spine(
+        cfg.seed,
+        cfg.devs_per_leaf,
+        LinkConfig::dc_100g(),
+        EcmpMode::FlowHash,
+    );
+    let mut cl = t.cluster;
+    let spine_ips = [DeviceIp::lan(201), DeviceIp::lan(202)];
+    let mut eng: Engine<Cluster> = Engine::new();
+
+    let (pairs, predicted) = colliding_pairs(cfg);
+    let blocks = cfg.bytes_per_flow / BLOCK;
+    let gap = ((BLOCK + 96) as f64 * 8.0 / 100.0).ceil() as SimTime; // line rate
+    for (f, &(src_ip, dst_ip)) in pairs.iter().enumerate() {
+        let src_node = t.devices[f];
+        let mut spray = SprayPlan::new(spine_ips.to_vec());
+        for b in 0..blocks {
+            let srou = match mode {
+                E4Mode::EcmpFlowHash => SrouHeader::direct(dst_ip),
+                E4Mode::SrouSpray => spray.path(dst_ip),
+            };
+            let seq = cl.alloc_seq(src_node);
+            let pkt = Packet::new(
+                src_ip,
+                seq,
+                srou,
+                Instruction::Write {
+                    addr: (b * BLOCK) as u64,
+                },
+            )
+            .with_payload(Payload::phantom(BLOCK));
+            let at = b as u64 * gap;
+            eng.schedule_at(at, move |cl: &mut Cluster, eng| {
+                cl.send_from(eng, src_node, pkt);
+            });
+        }
+    }
+    eng.run(&mut cl);
+
+    // All devices idle once the engine drains: end time = last delivery.
+    let completion = eng.now();
+    let drops = cl.metrics.counter("link_drops");
+    // Goodput: blocks that actually landed at the leaf-2 devices.
+    let offered_blocks = (cfg.devs_per_leaf * blocks) as u64;
+    let delivered: u64 = (cfg.devs_per_leaf..2 * cfg.devs_per_leaf)
+        .map(|i| cl.device(t.devices[i]).pkts_in)
+        .sum();
+    let delivered_pct = 100.0 * delivered as f64 / offered_blocks as f64;
+    let goodput_gbps = (delivered * BLOCK as u64 * 8) as f64 / completion.max(1) as f64;
+    let mut spine_bytes = Vec::new();
+    for (i, node) in cl.nodes.iter().enumerate() {
+        if let Node::Switch(sw) = node {
+            if sw.ip.is_some() {
+                let bytes: u64 = cl
+                    .links
+                    .iter()
+                    .filter(|l| l.from == i)
+                    .map(|l| l.tx_bytes)
+                    .sum();
+                spine_bytes.push(bytes);
+            }
+        }
+    }
+    Ok(E4Result {
+        mode,
+        completion_ns: completion,
+        drops,
+        delivered_pct,
+        goodput_gbps,
+        spine_bytes,
+        predicted_collisions: predicted,
+    })
+}
+
+pub fn run_e4(cfg: &E4Config) -> Result<(Vec<E4Result>, Table)> {
+    let ecmp = run_mode(cfg, E4Mode::EcmpFlowHash)?;
+    let spray = run_mode(cfg, E4Mode::SrouSpray)?;
+    let mut table = Table::new(&[
+        "mode",
+        "completion",
+        "delivered",
+        "goodput",
+        "drops",
+        "spine bytes (balance)",
+    ]);
+    for r in [&ecmp, &spray] {
+        table.row(&[
+            match r.mode {
+                E4Mode::EcmpFlowHash => {
+                    format!("ECMP flow-hash ({} collisions)", r.predicted_collisions)
+                }
+                E4Mode::SrouSpray => "SROU source spray".into(),
+            },
+            fmt_ns(r.completion_ns),
+            format!("{:.1}%", r.delivered_pct),
+            format!("{:.1} Gbps", r.goodput_gbps),
+            r.drops.to_string(),
+            format!("{:?}", r.spine_bytes),
+        ]);
+    }
+    Ok((vec![ecmp, spray], table))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn srou_spray_balances_and_finishes_faster() {
+        let cfg = E4Config {
+            bytes_per_flow: 1 << 20,
+            ..Default::default()
+        };
+        let (results, _) = run_e4(&cfg).unwrap();
+        let ecmp = &results[0];
+        let spray = &results[1];
+        assert!(
+            ecmp.predicted_collisions >= 1,
+            "flow set must contain a hash collision"
+        );
+        // Spray balances the spines nearly perfectly.
+        let imb = |r: &E4Result| {
+            let a = r.spine_bytes[0] as f64;
+            let b = r.spine_bytes[1] as f64;
+            (a - b).abs() / (a + b).max(1.0)
+        };
+        assert!(imb(spray) < 0.05, "spray imbalance {}", imb(spray));
+        // Spray delivers everything at full fabric bandwidth; the
+        // collision arm either sheds load (drops) or crawls.
+        assert!(
+            spray.delivered_pct > 99.9,
+            "spray delivered {}",
+            spray.delivered_pct
+        );
+        assert_eq!(spray.drops, 0);
+        assert!(
+            ecmp.delivered_pct < 95.0 || ecmp.completion_ns > spray.completion_ns * 13 / 10,
+            "collision must cost goodput or time: {} % in {} ns",
+            ecmp.delivered_pct,
+            ecmp.completion_ns
+        );
+        assert!(
+            spray.goodput_gbps > 1.2 * ecmp.goodput_gbps * ecmp.delivered_pct / 100.0
+                || spray.goodput_gbps > 1.2 * ecmp.goodput_gbps,
+            "spray {} vs ecmp {} Gbps",
+            spray.goodput_gbps,
+            ecmp.goodput_gbps
+        );
+        assert!(imb(ecmp) > 0.3, "collision shows as imbalance: {}", imb(ecmp));
+    }
+}

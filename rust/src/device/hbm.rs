@@ -1,0 +1,240 @@
+//! The device-attached HBM model.
+//!
+//! * **Storage** — page-sparse (64 KiB pages, allocate on first touch):
+//!   a 2 GB device that only ever touches a few MB costs a few MB of host
+//!   RAM, and a full 4-device cluster at paper scale stays resident.
+//! * **Timing** — first-access latency + streaming bandwidth, with bank
+//!   jitter and an occasional refresh penalty. HBM2 on the Alveo U55N:
+//!   ~400 GB/s per stack, a few hundred ns load-to-use through the AXI
+//!   fabric.
+//! * **Phantom mode** — no backing pages at all; reads return zeros.
+//!   Timing-only experiments (paper-scale E2) run the same code path.
+
+use anyhow::{bail, Result};
+use std::collections::HashMap;
+
+use crate::isa::registry::MemAccess;
+use crate::sim::SimTime;
+use crate::util::Xoshiro256;
+
+const PAGE_BITS: u32 = 16;
+const PAGE_SIZE: usize = 1 << PAGE_BITS; // 64 KiB
+
+/// Timing parameters of the HBM stack + AXI path.
+#[derive(Debug, Clone)]
+pub struct HbmConfig {
+    pub capacity: u64,
+    /// Fixed load-to-use latency through the memory controller (ns).
+    pub access_ns: SimTime,
+    /// Streaming bandwidth (bytes per ns; 400 GB/s = 400 B/ns).
+    pub bytes_per_ns: f64,
+    /// Gaussian bank-conflict jitter (σ, ns), clamped at ±3σ.
+    pub bank_jitter_ns: f64,
+    /// Probability an access collides with a refresh cycle...
+    pub refresh_p: f64,
+    /// ...and the extra latency it costs (ns).
+    pub refresh_ns: SimTime,
+}
+
+impl HbmConfig {
+    /// One Alveo U55N NetDAM device: 2 GB HBM @ ~400 GB/s.
+    /// `access_ns` is calibrated so E1 reproduces the paper's 618 ns mean
+    /// (see `DeviceConfig::paper_default` for the full budget).
+    pub fn paper_default() -> Self {
+        Self {
+            capacity: 2 << 30,
+            access_ns: 339,
+            bytes_per_ns: 400.0,
+            bank_jitter_ns: 34.0,
+            refresh_p: 0.015,
+            refresh_ns: 210,
+        }
+    }
+}
+
+/// The memory itself.
+pub struct Hbm {
+    cfg: HbmConfig,
+    /// `None` = phantom (timing-only) storage.
+    pages: Option<HashMap<u64, Box<[u8]>>>,
+}
+
+impl Hbm {
+    pub fn new(cfg: HbmConfig) -> Self {
+        Self {
+            cfg,
+            pages: Some(HashMap::new()),
+        }
+    }
+
+    /// Timing-only HBM: reads return zeros, writes are discarded.
+    pub fn new_phantom(cfg: HbmConfig) -> Self {
+        Self { cfg, pages: None }
+    }
+
+    pub fn is_phantom(&self) -> bool {
+        self.pages.is_none()
+    }
+
+    pub fn cfg(&self) -> &HbmConfig {
+        &self.cfg
+    }
+
+    fn check_range(&self, addr: u64, len: usize) -> Result<()> {
+        if addr.checked_add(len as u64).is_none_or(|end| end > self.cfg.capacity) {
+            bail!(
+                "HBM access [{addr:#x}..+{len}) out of range (capacity {:#x})",
+                self.cfg.capacity
+            );
+        }
+        Ok(())
+    }
+
+    /// Access time for `len` bytes (one burst). Deterministic given `rng`.
+    pub fn access_ns(&self, len: usize, rng: &mut Xoshiro256) -> SimTime {
+        let stream = (len as f64 / self.cfg.bytes_per_ns).round() as SimTime;
+        let jitter = (rng.next_gaussian() * self.cfg.bank_jitter_ns)
+            .clamp(-3.0 * self.cfg.bank_jitter_ns, 3.0 * self.cfg.bank_jitter_ns);
+        let refresh = if rng.chance(self.cfg.refresh_p) {
+            self.cfg.refresh_ns
+        } else {
+            0
+        };
+        let base = self.cfg.access_ns as f64 + jitter;
+        base.max(1.0) as SimTime + stream + refresh
+    }
+
+    /// Resident bytes (for memory accounting in § Perf).
+    pub fn resident_bytes(&self) -> usize {
+        self.pages.as_ref().map_or(0, |p| p.len() * PAGE_SIZE)
+    }
+}
+
+impl MemAccess for Hbm {
+    fn capacity(&self) -> u64 {
+        self.cfg.capacity
+    }
+
+    fn read(&self, addr: u64, len: usize) -> Result<Vec<u8>> {
+        self.check_range(addr, len)?;
+        let mut out = vec![0u8; len];
+        let Some(pages) = &self.pages else {
+            return Ok(out); // phantom: zeros
+        };
+        let mut off = 0usize;
+        while off < len {
+            let a = addr + off as u64;
+            let page = a >> PAGE_BITS;
+            let in_page = (a as usize) & (PAGE_SIZE - 1);
+            let n = (PAGE_SIZE - in_page).min(len - off);
+            if let Some(p) = pages.get(&page) {
+                out[off..off + n].copy_from_slice(&p[in_page..in_page + n]);
+            } // untouched pages read as zeros
+            off += n;
+        }
+        Ok(out)
+    }
+
+    fn write(&mut self, addr: u64, data: &[u8]) -> Result<()> {
+        self.check_range(addr, data.len())?;
+        let Some(pages) = &mut self.pages else {
+            return Ok(()); // phantom: discard
+        };
+        let mut off = 0usize;
+        while off < data.len() {
+            let a = addr + off as u64;
+            let page = a >> PAGE_BITS;
+            let in_page = (a as usize) & (PAGE_SIZE - 1);
+            let n = (PAGE_SIZE - in_page).min(data.len() - off);
+            let p = pages
+                .entry(page)
+                .or_insert_with(|| vec![0u8; PAGE_SIZE].into_boxed_slice());
+            p[in_page..in_page + n].copy_from_slice(&data[off..off + n]);
+            off += n;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn hbm() -> Hbm {
+        Hbm::new(HbmConfig::paper_default())
+    }
+
+    #[test]
+    fn write_read_round_trip() {
+        let mut m = hbm();
+        let data: Vec<u8> = (0..=255).collect();
+        m.write(0x1234, &data).unwrap();
+        assert_eq!(m.read(0x1234, 256).unwrap(), data);
+    }
+
+    #[test]
+    fn cross_page_access() {
+        let mut m = hbm();
+        let addr = (PAGE_SIZE - 8) as u64; // straddles pages 0 and 1
+        let data = vec![0xAB; 16];
+        m.write(addr, &data).unwrap();
+        assert_eq!(m.read(addr, 16).unwrap(), data);
+        // Each side landed on its own page.
+        assert_eq!(m.resident_bytes(), 2 * PAGE_SIZE);
+    }
+
+    #[test]
+    fn untouched_memory_reads_zero() {
+        let m = hbm();
+        assert_eq!(m.read(0x4000_0000, 16).unwrap(), vec![0; 16]);
+    }
+
+    #[test]
+    fn out_of_range_rejected() {
+        let mut m = hbm();
+        let cap = m.capacity();
+        assert!(m.read(cap - 4, 8).is_err());
+        assert!(m.write(cap, &[1]).is_err());
+        assert!(m.read(u64::MAX, 1).is_err()); // overflow guard
+    }
+
+    #[test]
+    fn phantom_mode_times_but_stores_nothing() {
+        let mut m = Hbm::new_phantom(HbmConfig::paper_default());
+        m.write(0, &[1, 2, 3]).unwrap();
+        assert_eq!(m.read(0, 3).unwrap(), vec![0; 3]);
+        assert_eq!(m.resident_bytes(), 0);
+        let mut rng = Xoshiro256::seed_from(1);
+        assert!(m.access_ns(128, &mut rng) > 0);
+    }
+
+    #[test]
+    fn access_time_statistics_match_config() {
+        let m = hbm();
+        let mut rng = Xoshiro256::seed_from(2);
+        let mut run = crate::util::stats::Running::new();
+        for _ in 0..20_000 {
+            run.push(m.access_ns(128, &mut rng) as f64);
+        }
+        let expected = m.cfg().access_ns as f64
+            + (128.0 / m.cfg().bytes_per_ns)
+            + m.cfg().refresh_p * m.cfg().refresh_ns as f64;
+        assert!(
+            (run.mean() - expected).abs() < 5.0,
+            "mean {} vs expected {expected}",
+            run.mean()
+        );
+        // Jitter dominated by bank σ plus refresh spikes.
+        assert!(run.std_dev() > 25.0 && run.std_dev() < 60.0);
+    }
+
+    #[test]
+    fn sparse_residency_is_bounded() {
+        let mut m = hbm();
+        // Touch 1 MB scattered over the 2 GB space.
+        for i in 0..16 {
+            m.write(i * (128 << 20), &[1u8; 65536]).unwrap();
+        }
+        assert!(m.resident_bytes() <= 32 * PAGE_SIZE);
+    }
+}

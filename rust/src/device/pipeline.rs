@@ -1,0 +1,108 @@
+//! Per-stage pipeline costs and the full device configuration.
+//!
+//! Calibration (experiment E1): the paper measures a wire-to-wire SIMD
+//! READ of 32 × f32 at **618 ns average, 39 ns jitter, 920 ns max**. The
+//! budget below reproduces it:
+//!
+//! ```text
+//!   rx_mac 90 + parse 50 + iommu 25           = 165 ns
+//!   HBM access 339 ± 34 (+128 B stream ≈ 0.3) ≈ 339 ns
+//!   route 25 + tx_mac 86 + alu 0              = 111 ns  (READ skips ALU)
+//!   refresh collision (+210 ns, p = 1.5%)     ≈ 3 ns mean, sets the max
+//!   total                                     ≈ 618 ns ± ~36, max ≈ 920
+//! ```
+
+use crate::alu::AluCostModel;
+use crate::sim::SimTime;
+use crate::wire::DeviceIp;
+
+use super::hbm::HbmConfig;
+
+/// Fixed per-stage costs of the packet pipeline.
+#[derive(Debug, Clone)]
+pub struct PipelineCosts {
+    /// RX MAC/PHY + packet-buffer landing.
+    pub rx_mac_ns: SimTime,
+    /// Header parse / instruction decode.
+    pub parse_ns: SimTime,
+    /// IOMMU lookup (VA→PA).
+    pub iommu_ns: SimTime,
+    /// SROU processing + next-hop selection.
+    pub route_ns: SimTime,
+    /// TX MAC/PHY.
+    pub tx_mac_ns: SimTime,
+}
+
+impl PipelineCosts {
+    pub fn paper_default() -> Self {
+        Self {
+            rx_mac_ns: 90,
+            parse_ns: 50,
+            iommu_ns: 25,
+            route_ns: 25,
+            tx_mac_ns: 86,
+        }
+    }
+
+    /// Fixed cost excluding memory/ALU (both directions of the MAC).
+    pub fn fixed_ns(&self) -> SimTime {
+        self.rx_mac_ns + self.parse_ns + self.iommu_ns + self.route_ns + self.tx_mac_ns
+    }
+}
+
+/// Everything needed to instantiate one NetDAM device.
+#[derive(Debug, Clone)]
+pub struct DeviceConfig {
+    pub ip: DeviceIp,
+    pub pipeline: PipelineCosts,
+    pub hbm: HbmConfig,
+    pub alu: AluCostModel,
+    /// Store payload contents (false = timing-only phantom device).
+    pub data_bearing: bool,
+    /// RNG stream id (mixed with the cluster seed).
+    pub seed: u64,
+}
+
+impl DeviceConfig {
+    /// The paper's prototype device at address `ip`.
+    pub fn paper_default(ip: DeviceIp) -> Self {
+        Self {
+            ip,
+            pipeline: PipelineCosts::paper_default(),
+            hbm: HbmConfig::paper_default(),
+            alu: AluCostModel::paper_default(),
+            data_bearing: true,
+            seed: ip.0 as u64,
+        }
+    }
+
+    pub fn timing_only(mut self) -> Self {
+        self.data_bearing = false;
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn e1_budget_sums_to_paper_mean() {
+        // The static parts of the E1 budget (everything but jitter):
+        // fixed pipeline + HBM access + 128B stream time.
+        let p = PipelineCosts::paper_default();
+        let h = HbmConfig::paper_default();
+        let static_ns = p.fixed_ns() + h.access_ns + (128.0 / h.bytes_per_ns).round() as SimTime;
+        let expected_mean = static_ns as f64 + h.refresh_p * h.refresh_ns as f64;
+        assert!(
+            (expected_mean - 618.0).abs() < 15.0,
+            "budget drifted: {expected_mean} ns"
+        );
+    }
+
+    #[test]
+    fn timing_only_flag() {
+        let c = DeviceConfig::paper_default(DeviceIp::lan(1)).timing_only();
+        assert!(!c.data_bearing);
+    }
+}

@@ -1,0 +1,128 @@
+//! Shared driver for the end-to-end example: data-parallel MLP training
+//! with the gradient allreduce routed through the simulated NetDAM fabric.
+//!
+//! The full loop per step:
+//! 1. every worker executes the `mlp_grad` artifact through PJRT (L2
+//!    compute, python-free at runtime);
+//! 2. the flattened gradients are written into the 4 simulated NetDAM
+//!    devices and ring-allreduced by the in-memory `ReduceScatter`/
+//!    `AllGather` instruction chain (the paper's §3 datapath) — the real
+//!    gradient bits flow through the DES and the device ALUs;
+//! 3. the reduced sum is scaled by 1/workers and applied via the
+//!    `sgd_apply` artifact (Pallas SIMD kernels — the "in-memory
+//!    optimizer").
+//!
+//! Workers intentionally compute on the *same* batch so the resulting
+//! curve is comparable to the single-worker python oracle
+//! (`artifacts/reference_curve.txt`): allreduce-sum of `w` identical
+//! gradients scaled by `1/w` recovers the oracle's gradient up to f32
+//! ring-order rounding.
+
+use anyhow::{ensure, Context, Result};
+
+use crate::collectives::{read_vector, run_ring_allreduce, RingSpec};
+use crate::isa::registry::MemAccess;
+use crate::net::{Cluster, LinkConfig, Topology};
+use crate::runtime::mlp::MlpTrainer;
+use crate::sim::{fmt_ns, Engine, SimTime};
+use crate::util::bytes::f32s_to_bytes;
+
+/// Train for `steps`; returns the loss curve. `verbose` prints a table.
+pub fn train_dataparallel(steps: usize, workers: usize, verbose: bool) -> Result<Vec<f32>> {
+    ensure!(workers >= 2, "data parallelism needs >= 2 workers");
+    let mut trainer =
+        MlpTrainer::open("artifacts").context("run `make artifacts` first")?;
+    let n_params = trainer.shape.n_params();
+    let lens = trainer.shape.param_lens();
+    // Pad the flat gradient vector so it splits into whole SIMD blocks
+    // across the ranks.
+    let chunk = workers * crate::runtime::LANES;
+    let padded = n_params.div_ceil(chunk) * chunk;
+
+    let mut curve = Vec::with_capacity(steps);
+    let mut fabric_ns_total: SimTime = 0;
+    if verbose {
+        println!("| step | loss | allreduce (sim) | retransmits |");
+        println!("|---|---|---|---|");
+    }
+    for step in 0..steps {
+        // --- worker compute (identical batch ⇒ oracle-comparable) -----
+        let (x, y) = trainer.batch(step as u32)?;
+        let (grads, loss) = trainer.grad_step(&x, &y)?;
+        let mut flat = Vec::with_capacity(padded);
+        for g in &grads {
+            flat.extend_from_slice(g);
+        }
+        flat.resize(padded, 0.0);
+
+        // --- gradient allreduce through the NetDAM fabric --------------
+        let t = Topology::star(0xE2E + step as u64, workers, 0, LinkConfig::dc_100g());
+        let mut cl = t.cluster;
+        let devices = t.devices;
+        let bytes = f32s_to_bytes(&flat);
+        for &d in &devices {
+            cl.device_mut(d).mem().write(0, &bytes)?;
+        }
+        let spec = RingSpec {
+            elements: padded,
+            window: 8,
+            ..Default::default()
+        };
+        let mut eng: Engine<Cluster> = Engine::new();
+        let out = run_ring_allreduce(&mut cl, &mut eng, &devices, &spec)?;
+        ensure!(out.blocks_done == out.blocks, "allreduce incomplete");
+        fabric_ns_total += out.elapsed_ns;
+        let summed = read_vector(&mut cl, devices[0], 0, padded)?;
+
+        // --- average + SGD via the Pallas artifact ---------------------
+        let inv = 1.0 / workers as f32;
+        let mut avg = Vec::with_capacity(4);
+        let mut off = 0;
+        for &len in &lens {
+            avg.push(summed[off..off + len].iter().map(|v| v * inv).collect::<Vec<f32>>());
+            off += len;
+        }
+        trainer.sgd_apply(&avg, 0.05)?;
+        curve.push(loss);
+        if verbose && (step < 5 || step % 10 == 0 || step == steps - 1) {
+            println!(
+                "| {step} | {loss:.6} | {} | {} |",
+                fmt_ns(out.elapsed_ns),
+                out.retransmits
+            );
+        }
+    }
+    if verbose {
+        println!(
+            "total simulated fabric time for {steps} allreduces: {}",
+            fmt_ns(fabric_ns_total)
+        );
+        // Compare against the python oracle when available.
+        if let Ok(reference) = MlpTrainer::reference_curve("artifacts") {
+            let n = reference.len().min(curve.len());
+            let max_rel = (0..n)
+                .map(|i| ((curve[i] - reference[i]) / reference[i].max(1e-9)).abs())
+                .fold(0.0f32, f32::max);
+            println!(
+                "oracle check: max relative loss deviation over {n} steps = {max_rel:.2e}"
+            );
+        }
+    }
+    Ok(curve)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    #[ignore = "needs artifacts/ (make artifacts) and ~20s"]
+    fn training_matches_python_oracle() {
+        let curve = train_dataparallel(10, 4, false).unwrap();
+        let reference = MlpTrainer::reference_curve("artifacts").unwrap();
+        for i in 0..10 {
+            let rel = ((curve[i] - reference[i]) / reference[i]).abs();
+            assert!(rel < 1e-3, "step {i}: {} vs {} ({rel})", curve[i], reference[i]);
+        }
+    }
+}

@@ -1,0 +1,165 @@
+//! The conventional-host cost model (paper §1.1, §3.1, and reference [10],
+//! "Understanding PCIe Performance for End Host Networking").
+//!
+//! The RoCE baseline's latency and throughput are dominated by exactly the
+//! costs NetDAM bypasses: PCIe doorbells and DMA, host DRAM contention,
+//! interrupt/scheduling jitter, and CPU-side reduction at AVX-512 width.
+//! This module provides those constants + samplers; [`crate::roce`] and
+//! the baseline collectives consume them.
+
+use crate::sim::SimTime;
+use crate::util::Xoshiro256;
+
+/// Calibrated host parameters (2× Xeon Gold 6230R, CX516A, PCIe3 x16).
+#[derive(Debug, Clone)]
+pub struct HostConfig {
+    /// Doorbell + DMA descriptor fetch + completion round trip.
+    pub pcie_rtt_ns: SimTime,
+    /// DMA streaming bandwidth (bytes/ns). PCIe3 x16 ≈ 12–13 GB/s
+    /// effective with descriptor overhead.
+    pub pcie_bytes_per_ns: f64,
+    /// Host DRAM streaming bandwidth available to the NIC path.
+    pub dram_bytes_per_ns: f64,
+    /// Effective CPU reduction throughput (bytes of *output* per ns) for
+    /// the MPI sum loop: load a + load b + store, cache misses, MPI
+    /// progress engine. Measured Horovod-class efficiency ≈ 1.2 B/ns.
+    pub reduce_bytes_per_ns: f64,
+    /// NIC pipeline latency each way.
+    pub nic_ns: SimTime,
+    /// Probability a request eats an interrupt/scheduler stall...
+    pub stall_p: f64,
+    /// ...mean of the (exponential) stall when it happens.
+    pub stall_mean_ns: f64,
+    /// Gaussian σ on the PCIe/DRAM service path.
+    pub jitter_ns: f64,
+    /// Per-message software overhead (verbs post + completion handling).
+    pub sw_overhead_ns: SimTime,
+}
+
+impl HostConfig {
+    pub fn paper_default() -> Self {
+        Self {
+            pcie_rtt_ns: 900,
+            pcie_bytes_per_ns: 12.0,
+            dram_bytes_per_ns: 40.0,
+            reduce_bytes_per_ns: 1.2,
+            nic_ns: 250,
+            stall_p: 0.03,
+            stall_mean_ns: 2500.0,
+            jitter_ns: 150.0,
+            sw_overhead_ns: 350,
+        }
+    }
+}
+
+/// Samples service times for one host.
+#[derive(Debug, Clone)]
+pub struct HostModel {
+    pub cfg: HostConfig,
+    rng: Xoshiro256,
+}
+
+impl HostModel {
+    pub fn new(cfg: HostConfig, seed: u64) -> Self {
+        Self {
+            cfg,
+            rng: Xoshiro256::seed_from(seed ^ 0x57_05_7E_11),
+        }
+    }
+
+    fn jitter(&mut self) -> f64 {
+        let g = self.rng.next_gaussian() * self.cfg.jitter_ns;
+        let stall = if self.rng.chance(self.cfg.stall_p) {
+            // Exponential tail: -mean · ln(U)
+            -self.cfg.stall_mean_ns * (1.0 - self.rng.next_f64()).ln()
+        } else {
+            0.0
+        };
+        g.max(-3.0 * self.cfg.jitter_ns) + stall
+    }
+
+    /// Time for the NIC to satisfy a remote READ of `len` bytes:
+    /// NIC rx → PCIe DMA from host DRAM → NIC tx. (RDMA READ is
+    /// NIC-terminated; no CPU, but the PCIe+DRAM path jitters.)
+    pub fn nic_read_ns(&mut self, len: usize) -> SimTime {
+        let stream = len as f64 / self.cfg.pcie_bytes_per_ns
+            + len as f64 / self.cfg.dram_bytes_per_ns;
+        let t = self.cfg.nic_ns as f64 * 2.0
+            + self.cfg.pcie_rtt_ns as f64
+            + stream
+            + self.jitter();
+        t.max(100.0) as SimTime
+    }
+
+    /// Same for a remote WRITE landing in host memory.
+    pub fn nic_write_ns(&mut self, len: usize) -> SimTime {
+        let stream = len as f64 / self.cfg.pcie_bytes_per_ns;
+        let t = self.cfg.nic_ns as f64 * 2.0 + self.cfg.pcie_rtt_ns as f64 * 0.5
+            + stream
+            + self.jitter();
+        t.max(100.0) as SimTime
+    }
+
+    /// CPU-side lane-wise reduction of `bytes` of f32 (the per-iteration
+    /// sum the paper's Figure 7 shows needing explicit load/store).
+    pub fn reduce_ns(&mut self, bytes: usize) -> SimTime {
+        let t = self.cfg.sw_overhead_ns as f64
+            + bytes as f64 / self.cfg.reduce_bytes_per_ns
+            + self.jitter().max(0.0);
+        t as SimTime
+    }
+
+    /// Post-send overhead for one verbs message.
+    pub fn post_send_ns(&mut self) -> SimTime {
+        (self.cfg.sw_overhead_ns as f64 + self.cfg.pcie_rtt_ns as f64 * 0.5 + self.jitter().max(0.0))
+            as SimTime
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roce_read_is_slower_and_jitterier_than_netdam() {
+        // E1's qualitative claim: the host path is several × slower with a
+        // heavy tail. NetDAM mean is 618 ns; host READ should be ≥ 2×.
+        let mut h = HostModel::new(HostConfig::paper_default(), 42);
+        let mut run = crate::util::stats::Running::new();
+        for _ in 0..20_000 {
+            run.push(h.nic_read_ns(128) as f64);
+        }
+        assert!(run.mean() > 1400.0, "mean {}", run.mean());
+        assert!(run.mean() < 5000.0, "mean {}", run.mean());
+        // Jitter: must dwarf NetDAM's 39 ns.
+        assert!(run.std_dev() > 200.0, "std {}", run.std_dev());
+        // Tail: max should blow past 2× mean (interrupt stalls).
+        assert!(run.max() > 2.0 * run.mean());
+    }
+
+    #[test]
+    fn reduce_throughput_matches_config() {
+        let mut h = HostModel::new(HostConfig::paper_default(), 1);
+        let bytes = 64 << 20; // 64 MB fusion buffer
+        let t = h.reduce_ns(bytes);
+        let eff = bytes as f64 / t as f64;
+        assert!((eff - 1.2).abs() < 0.1, "effective {eff} B/ns");
+    }
+
+    #[test]
+    fn costs_scale_with_length() {
+        let mut h = HostModel::new(HostConfig::paper_default(), 2);
+        let small: f64 = (0..200).map(|_| h.nic_read_ns(128) as f64).sum();
+        let big: f64 = (0..200).map(|_| h.nic_read_ns(65536) as f64).sum();
+        assert!(big > small * 1.8, "streaming term must matter");
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let mut a = HostModel::new(HostConfig::paper_default(), 9);
+        let mut b = HostModel::new(HostConfig::paper_default(), 9);
+        for _ in 0..100 {
+            assert_eq!(a.nic_read_ns(4096), b.nic_read_ns(4096));
+        }
+    }
+}

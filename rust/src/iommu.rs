@@ -1,0 +1,200 @@
+//! Per-device IOMMU (paper §2.5).
+//!
+//! "IOMMU may implement on NetDAM for Virtual Address and Physical Address
+//! translation. Remote Memory could also mapping to local Virtual Address
+//! by this IOMMU."
+//!
+//! The model is a flat page table over 2 MiB pages with R/W permission
+//! bits. Identity mapping (the FPGA prototype's default) is the fast path:
+//! an empty table translates 1:1 with full access — so simulations that
+//! don't exercise virtualization pay nothing.
+
+use anyhow::{bail, Result};
+use std::collections::HashMap;
+
+/// 2 MiB translation granule.
+pub const IOMMU_PAGE_BITS: u32 = 21;
+pub const IOMMU_PAGE_SIZE: u64 = 1 << IOMMU_PAGE_BITS;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Perms {
+    pub read: bool,
+    pub write: bool,
+}
+
+impl Perms {
+    pub const RW: Perms = Perms {
+        read: true,
+        write: true,
+    };
+    pub const RO: Perms = Perms {
+        read: true,
+        write: false,
+    };
+}
+
+#[derive(Debug, Clone, Copy)]
+struct Entry {
+    pa_page: u64,
+    perms: Perms,
+}
+
+/// The translation table. `Access::Read`/`Write` select the permission bit.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Access {
+    Read,
+    Write,
+}
+
+#[derive(Debug, Default)]
+pub struct Iommu {
+    table: HashMap<u64, Entry>,
+}
+
+impl Iommu {
+    /// Identity-mapping IOMMU (empty table).
+    pub fn identity() -> Self {
+        Self::default()
+    }
+
+    pub fn is_identity(&self) -> bool {
+        self.table.is_empty()
+    }
+
+    /// Map `va..va+len` → `pa..pa+len`. All three must be page-aligned.
+    pub fn map(&mut self, va: u64, pa: u64, len: u64, perms: Perms) -> Result<()> {
+        if va % IOMMU_PAGE_SIZE != 0 || pa % IOMMU_PAGE_SIZE != 0 || len % IOMMU_PAGE_SIZE != 0 {
+            bail!("IOMMU mappings must be 2MiB-aligned (va={va:#x} pa={pa:#x} len={len:#x})");
+        }
+        for i in 0..len / IOMMU_PAGE_SIZE {
+            let vp = (va >> IOMMU_PAGE_BITS) + i;
+            if self.table.contains_key(&vp) {
+                bail!("VA page {:#x} already mapped", vp << IOMMU_PAGE_BITS);
+            }
+            self.table.insert(
+                vp,
+                Entry {
+                    pa_page: (pa >> IOMMU_PAGE_BITS) + i,
+                    perms,
+                },
+            );
+        }
+        Ok(())
+    }
+
+    pub fn unmap(&mut self, va: u64, len: u64) -> Result<()> {
+        if va % IOMMU_PAGE_SIZE != 0 || len % IOMMU_PAGE_SIZE != 0 {
+            bail!("IOMMU unmap must be 2MiB-aligned");
+        }
+        for i in 0..len / IOMMU_PAGE_SIZE {
+            let vp = (va >> IOMMU_PAGE_BITS) + i;
+            if self.table.remove(&vp).is_none() {
+                bail!("VA page {:#x} not mapped", vp << IOMMU_PAGE_BITS);
+            }
+        }
+        Ok(())
+    }
+
+    /// Translate one address for an access of `len` bytes. The access must
+    /// not cross a page boundary into a differently-mapped page unless the
+    /// mapping is contiguous (checked).
+    pub fn translate(&self, va: u64, len: usize, access: Access) -> Result<u64> {
+        if self.table.is_empty() {
+            return Ok(va); // identity fast path
+        }
+        let first = va >> IOMMU_PAGE_BITS;
+        let last = (va + len.max(1) as u64 - 1) >> IOMMU_PAGE_BITS;
+        let Some(e0) = self.table.get(&first) else {
+            bail!("IOMMU fault: VA {va:#x} not mapped");
+        };
+        let ok = match access {
+            Access::Read => e0.perms.read,
+            Access::Write => e0.perms.write,
+        };
+        if !ok {
+            bail!("IOMMU permission fault at VA {va:#x} ({access:?})");
+        }
+        // Verify spanned pages are mapped contiguously with same perms.
+        for (k, vp) in (first..=last).enumerate() {
+            let Some(e) = self.table.get(&vp) else {
+                bail!("IOMMU fault: VA page {:#x} not mapped", vp << IOMMU_PAGE_BITS);
+            };
+            if e.pa_page != e0.pa_page + k as u64 || e.perms != e0.perms {
+                bail!("IOMMU: access at {va:#x}+{len} crosses a mapping break");
+            }
+        }
+        Ok((e0.pa_page << IOMMU_PAGE_BITS) + (va & (IOMMU_PAGE_SIZE - 1)))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identity_passes_through() {
+        let m = Iommu::identity();
+        assert_eq!(m.translate(0x1234_5678, 64, Access::Read).unwrap(), 0x1234_5678);
+        assert_eq!(m.translate(0, 1, Access::Write).unwrap(), 0);
+    }
+
+    #[test]
+    fn mapped_translation() {
+        let mut m = Iommu::identity();
+        m.map(0, 4 * IOMMU_PAGE_SIZE, 2 * IOMMU_PAGE_SIZE, Perms::RW)
+            .unwrap();
+        assert_eq!(
+            m.translate(100, 8, Access::Read).unwrap(),
+            4 * IOMMU_PAGE_SIZE + 100
+        );
+        // Second page maps contiguously.
+        assert_eq!(
+            m.translate(IOMMU_PAGE_SIZE + 8, 8, Access::Write).unwrap(),
+            5 * IOMMU_PAGE_SIZE + 8
+        );
+    }
+
+    #[test]
+    fn unmapped_va_faults_once_table_nonempty() {
+        let mut m = Iommu::identity();
+        m.map(0, 0, IOMMU_PAGE_SIZE, Perms::RW).unwrap();
+        assert!(m.translate(IOMMU_PAGE_SIZE * 10, 4, Access::Read).is_err());
+    }
+
+    #[test]
+    fn write_to_readonly_faults() {
+        let mut m = Iommu::identity();
+        m.map(0, 0, IOMMU_PAGE_SIZE, Perms::RO).unwrap();
+        assert!(m.translate(0, 4, Access::Read).is_ok());
+        assert!(m.translate(0, 4, Access::Write).is_err());
+    }
+
+    #[test]
+    fn cross_page_contiguous_ok_break_faults() {
+        let mut m = Iommu::identity();
+        m.map(0, 0, IOMMU_PAGE_SIZE, Perms::RW).unwrap();
+        // Map second VA page to a NON-contiguous PA page.
+        m.map(IOMMU_PAGE_SIZE, 8 * IOMMU_PAGE_SIZE, IOMMU_PAGE_SIZE, Perms::RW)
+            .unwrap();
+        let straddle = IOMMU_PAGE_SIZE - 8;
+        assert!(m.translate(straddle, 16, Access::Read).is_err());
+    }
+
+    #[test]
+    fn double_map_and_misalignment_rejected() {
+        let mut m = Iommu::identity();
+        m.map(0, 0, IOMMU_PAGE_SIZE, Perms::RW).unwrap();
+        assert!(m.map(0, IOMMU_PAGE_SIZE, IOMMU_PAGE_SIZE, Perms::RW).is_err());
+        assert!(m.map(123, 0, IOMMU_PAGE_SIZE, Perms::RW).is_err());
+        assert!(m.unmap(4096, IOMMU_PAGE_SIZE).is_err());
+    }
+
+    #[test]
+    fn unmap_restores_fault() {
+        let mut m = Iommu::identity();
+        m.map(0, 0, 2 * IOMMU_PAGE_SIZE, Perms::RW).unwrap();
+        m.unmap(0, IOMMU_PAGE_SIZE).unwrap();
+        assert!(m.translate(0, 4, Access::Read).is_err());
+        assert!(m.translate(IOMMU_PAGE_SIZE, 4, Access::Read).is_ok());
+    }
+}

@@ -1,0 +1,376 @@
+//! DPU-offload instruction library (paper §2.4, §2.6).
+//!
+//! "For DPU offload case, compress, crypto, hash and longest prefix match
+//! instruction could be added." and §2.6: "*encryption-write* and
+//! *decryption-read* instruction could be added for secure computing."
+//!
+//! These are real [`UserInstruction`] implementations registered in the
+//! user opcode range — they demonstrate (and test) the programmable-ISA
+//! extension mechanism with the exact offloads the paper names:
+//!
+//! | opcode | instruction | semantics |
+//! |---|---|---|
+//! | `0x8001` | [`CryptoWrite`]  | XOR-keystream encrypt payload → memory |
+//! | `0x8002` | [`CryptoRead`]   | decrypt `b` bytes at `a` → reply |
+//! | `0x8010` | [`Crc32Region`]  | CRC-32 over `b` bytes at `a` → reply |
+//! | `0x8020` | [`RleCompress`]  | run-length-encode region → store + reply len |
+//! | `0x8030` | [`LpmLookup`]    | longest-prefix-match in an in-memory table |
+//!
+//! The "crypto" is a keyed XOR keystream (a toy cipher standing in for
+//! AES-GCM hardware — the *offload structure* is what's modeled; swapping
+//! in a real cipher changes none of the plumbing).
+
+use anyhow::Result;
+
+use super::registry::{ExecCtx, ExecOutcome, InstructionRegistry, UserInstruction};
+use crate::sim::SimTime;
+
+pub const OP_CRYPTO_WRITE: u16 = 0x8001;
+pub const OP_CRYPTO_READ: u16 = 0x8002;
+pub const OP_CRC32: u16 = 0x8010;
+pub const OP_RLE_COMPRESS: u16 = 0x8020;
+pub const OP_LPM_LOOKUP: u16 = 0x8030;
+
+/// Register the whole library onto a registry.
+pub fn register_dpu_instructions(reg: &mut InstructionRegistry, key: u64) -> Result<()> {
+    reg.register(OP_CRYPTO_WRITE, Box::new(CryptoWrite { key }))?;
+    reg.register(OP_CRYPTO_READ, Box::new(CryptoRead { key }))?;
+    reg.register(OP_CRC32, Box::new(Crc32Region))?;
+    reg.register(OP_RLE_COMPRESS, Box::new(RleCompress))?;
+    reg.register(OP_LPM_LOOKUP, Box::new(LpmLookup))?;
+    Ok(())
+}
+
+/// SplitMix-based XOR keystream seeded by (key, address) — position-bound
+/// so identical plaintext at different addresses encrypts differently.
+fn keystream(key: u64, addr: u64, len: usize) -> Vec<u8> {
+    let mut out = Vec::with_capacity(len);
+    let mut s = crate::util::SplitMix64::new(key ^ addr.rotate_left(17));
+    while out.len() < len {
+        out.extend_from_slice(&s.next_u64().to_le_bytes());
+    }
+    out.truncate(len);
+    out
+}
+
+/// `a` = destination address. Payload is plaintext; ciphertext lands in
+/// memory. Idempotent (pure function of packet + address).
+pub struct CryptoWrite {
+    key: u64,
+}
+
+impl UserInstruction for CryptoWrite {
+    fn name(&self) -> &'static str {
+        "crypto_write"
+    }
+    fn idempotent(&self) -> bool {
+        true
+    }
+    fn execute(&self, ctx: &mut ExecCtx) -> Result<ExecOutcome> {
+        let ks = keystream(self.key, ctx.a, ctx.payload.len());
+        let ct: Vec<u8> = ctx.payload.iter().zip(&ks).map(|(p, k)| p ^ k).collect();
+        ctx.mem.write(ctx.a, &ct)?;
+        Ok(ExecOutcome::Reply {
+            opcode: OP_CRYPTO_WRITE,
+            a: ctx.a,
+            b: ct.len() as u64,
+            c: 0,
+            payload: vec![],
+        })
+    }
+    fn cost_ns(&self, payload_len: usize) -> SimTime {
+        // AES-GCM-class engine: ~64 B/cycle at 250 MHz + setup.
+        20 + 4 * (payload_len as u64 / 64 + 1)
+    }
+}
+
+/// `a` = source address, `b` = length. Replies with plaintext.
+pub struct CryptoRead {
+    key: u64,
+}
+
+impl UserInstruction for CryptoRead {
+    fn name(&self) -> &'static str {
+        "crypto_read"
+    }
+    fn idempotent(&self) -> bool {
+        true
+    }
+    fn execute(&self, ctx: &mut ExecCtx) -> Result<ExecOutcome> {
+        let ct = ctx.mem.read(ctx.a, ctx.b as usize)?;
+        let ks = keystream(self.key, ctx.a, ct.len());
+        let pt: Vec<u8> = ct.iter().zip(&ks).map(|(c, k)| c ^ k).collect();
+        Ok(ExecOutcome::Reply {
+            opcode: OP_CRYPTO_READ,
+            a: ctx.a,
+            b: pt.len() as u64,
+            c: 0,
+            payload: pt,
+        })
+    }
+    fn cost_ns(&self, payload_len: usize) -> SimTime {
+        20 + 4 * (payload_len as u64 / 64 + 1)
+    }
+}
+
+/// `a` = address, `b` = length. Replies with the CRC-32 in operand `c`.
+pub struct Crc32Region;
+
+impl UserInstruction for Crc32Region {
+    fn name(&self) -> &'static str {
+        "crc32_region"
+    }
+    fn idempotent(&self) -> bool {
+        true
+    }
+    fn execute(&self, ctx: &mut ExecCtx) -> Result<ExecOutcome> {
+        let data = ctx.mem.read(ctx.a, ctx.b as usize)?;
+        let crc = crc32fast::hash(&data);
+        Ok(ExecOutcome::Reply {
+            opcode: OP_CRC32,
+            a: ctx.a,
+            b: ctx.b,
+            c: crc as u64,
+            payload: vec![],
+        })
+    }
+}
+
+/// `a` = source, `b` = length, `c` = destination. Byte-wise RLE
+/// (`(count, byte)` pairs) written at `c`; replies with encoded length.
+pub struct RleCompress;
+
+pub fn rle_encode(data: &[u8]) -> Vec<u8> {
+    let mut out = Vec::new();
+    let mut i = 0;
+    while i < data.len() {
+        let b = data[i];
+        let mut run = 1usize;
+        while i + run < data.len() && data[i + run] == b && run < 255 {
+            run += 1;
+        }
+        out.push(run as u8);
+        out.push(b);
+        i += run;
+    }
+    out
+}
+
+pub fn rle_decode(enc: &[u8]) -> Result<Vec<u8>> {
+    anyhow::ensure!(enc.len() % 2 == 0, "ragged RLE stream");
+    let mut out = Vec::new();
+    for pair in enc.chunks_exact(2) {
+        anyhow::ensure!(pair[0] > 0, "zero-length run");
+        out.extend(std::iter::repeat_n(pair[1], pair[0] as usize));
+    }
+    Ok(out)
+}
+
+impl UserInstruction for RleCompress {
+    fn name(&self) -> &'static str {
+        "rle_compress"
+    }
+    fn execute(&self, ctx: &mut ExecCtx) -> Result<ExecOutcome> {
+        let data = ctx.mem.read(ctx.a, ctx.b as usize)?;
+        let enc = rle_encode(&data);
+        ctx.mem.write(ctx.c, &enc)?;
+        Ok(ExecOutcome::Reply {
+            opcode: OP_RLE_COMPRESS,
+            a: ctx.c,
+            b: enc.len() as u64,
+            c: ctx.b,
+            payload: vec![],
+        })
+    }
+}
+
+/// Longest-prefix match against a table stored in device memory at `a`:
+/// `b` = entry count, `c` = the IPv4 address to look up. Table entries
+/// are 12 bytes: `prefix:u32 | plen:u32 | next_hop:u32` (LE). Replies
+/// with the best next hop in `c` (0 = no route).
+pub struct LpmLookup;
+
+impl UserInstruction for LpmLookup {
+    fn name(&self) -> &'static str {
+        "lpm_lookup"
+    }
+    fn idempotent(&self) -> bool {
+        true
+    }
+    fn execute(&self, ctx: &mut ExecCtx) -> Result<ExecOutcome> {
+        let n = ctx.b as usize;
+        let table = ctx.mem.read(ctx.a, n * 12)?;
+        let ip = ctx.c as u32;
+        let mut best: Option<(u32, u32)> = None; // (plen, next_hop)
+        for e in table.chunks_exact(12) {
+            let prefix = u32::from_le_bytes(e[0..4].try_into().unwrap());
+            let plen = u32::from_le_bytes(e[4..8].try_into().unwrap());
+            let hop = u32::from_le_bytes(e[8..12].try_into().unwrap());
+            if plen > 32 {
+                continue;
+            }
+            let mask = if plen == 0 { 0 } else { u32::MAX << (32 - plen) };
+            if ip & mask == prefix & mask && best.is_none_or(|(bl, _)| plen > bl) {
+                best = Some((plen, hop));
+            }
+        }
+        Ok(ExecOutcome::Reply {
+            opcode: OP_LPM_LOOKUP,
+            a: ctx.a,
+            b: 0,
+            c: best.map(|(_, h)| h as u64).unwrap_or(0),
+            payload: vec![],
+        })
+    }
+    fn cost_ns(&self, _payload_len: usize) -> SimTime {
+        12 // TCAM-class lookup
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::registry::MemAccess;
+    use crate::isa::Flags;
+
+    struct VecMem(Vec<u8>);
+    impl MemAccess for VecMem {
+        fn capacity(&self) -> u64 {
+            self.0.len() as u64
+        }
+        fn read(&self, addr: u64, len: usize) -> Result<Vec<u8>> {
+            Ok(self.0[addr as usize..addr as usize + len].to_vec())
+        }
+        fn write(&mut self, addr: u64, data: &[u8]) -> Result<()> {
+            self.0[addr as usize..addr as usize + data.len()].copy_from_slice(data);
+            Ok(())
+        }
+    }
+
+    fn ctx<'a>(mem: &'a mut VecMem, payload: &'a [u8], a: u64, b: u64, c: u64) -> ExecCtx<'a> {
+        ExecCtx {
+            mem,
+            payload,
+            a,
+            b,
+            c,
+            flags: Flags::default(),
+        }
+    }
+
+    #[test]
+    fn crypto_write_read_round_trips() {
+        let mut mem = VecMem(vec![0; 4096]);
+        let plaintext = b"the paper's secure-computing story".to_vec();
+        let w = CryptoWrite { key: 0xC0FFEE };
+        let out = w
+            .execute(&mut ctx(&mut mem, &plaintext, 128, 0, 0))
+            .unwrap();
+        assert!(matches!(out, ExecOutcome::Reply { .. }));
+        // Ciphertext in memory differs from plaintext...
+        assert_ne!(&mem.0[128..128 + plaintext.len()], &plaintext[..]);
+        // ...and decrypt-read recovers it.
+        let r = CryptoRead { key: 0xC0FFEE };
+        let out = r
+            .execute(&mut ctx(&mut mem, &[], 128, plaintext.len() as u64, 0))
+            .unwrap();
+        match out {
+            ExecOutcome::Reply { payload, .. } => assert_eq!(payload, plaintext),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn crypto_is_address_bound() {
+        let mut m1 = VecMem(vec![0; 256]);
+        let mut m2 = VecMem(vec![0; 256]);
+        let w = CryptoWrite { key: 7 };
+        w.execute(&mut ctx(&mut m1, b"same", 0, 0, 0)).unwrap();
+        w.execute(&mut ctx(&mut m2, b"same", 64, 0, 0)).unwrap();
+        assert_ne!(&m1.0[..4], &m2.0[64..68], "same plaintext, different ct");
+    }
+
+    #[test]
+    fn wrong_key_garbles() {
+        let mut mem = VecMem(vec![0; 256]);
+        CryptoWrite { key: 1 }
+            .execute(&mut ctx(&mut mem, b"secret!!", 0, 0, 0))
+            .unwrap();
+        let out = CryptoRead { key: 2 }
+            .execute(&mut ctx(&mut mem, &[], 0, 8, 0))
+            .unwrap();
+        match out {
+            ExecOutcome::Reply { payload, .. } => assert_ne!(payload, b"secret!!"),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn crc32_matches_library() {
+        let mut mem = VecMem(b"123456789".to_vec());
+        let out = Crc32Region.execute(&mut ctx(&mut mem, &[], 0, 9, 0)).unwrap();
+        match out {
+            // The canonical CRC-32 check value for "123456789".
+            ExecOutcome::Reply { c, .. } => assert_eq!(c, 0xCBF4_3926),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn rle_round_trips_and_compresses_runs() {
+        let data = [b"AAAAAAAABBBCZZZZZZZZZZZZ".to_vec(), vec![7u8; 1000]].concat();
+        let enc = rle_encode(&data);
+        assert!(enc.len() < data.len() / 2);
+        assert_eq!(rle_decode(&enc).unwrap(), data);
+        // Through the instruction:
+        let mut mem = VecMem(vec![0; 4096]);
+        mem.write(0, &data).unwrap();
+        let out = RleCompress
+            .execute(&mut ctx(&mut mem, &[], 0, data.len() as u64, 2048))
+            .unwrap();
+        match out {
+            ExecOutcome::Reply { a: 2048, b, .. } => {
+                let stored = mem.read(2048, b as usize).unwrap();
+                assert_eq!(rle_decode(&stored).unwrap(), data);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn lpm_prefers_longest_prefix() {
+        let mut table = Vec::new();
+        let mut push = |prefix: [u8; 4], plen: u32, hop: u32| {
+            table.extend_from_slice(&u32::from_be_bytes(prefix).to_le_bytes());
+            table.extend_from_slice(&plen.to_le_bytes());
+            table.extend_from_slice(&hop.to_le_bytes());
+        };
+        push([10, 0, 0, 0], 8, 1);
+        push([10, 1, 0, 0], 16, 2);
+        push([10, 1, 2, 0], 24, 3);
+        push([0, 0, 0, 0], 0, 9); // default route
+        let mut mem = VecMem(table);
+        let lookup = |mem: &mut VecMem, ip: [u8; 4]| {
+            let out = LpmLookup
+                .execute(&mut ctx(mem, &[], 0, 4, u32::from_be_bytes(ip) as u64))
+                .unwrap();
+            match out {
+                ExecOutcome::Reply { c, .. } => c,
+                other => panic!("{other:?}"),
+            }
+        };
+        assert_eq!(lookup(&mut mem, [10, 1, 2, 55]), 3);
+        assert_eq!(lookup(&mut mem, [10, 1, 9, 1]), 2);
+        assert_eq!(lookup(&mut mem, [10, 200, 0, 1]), 1);
+        assert_eq!(lookup(&mut mem, [192, 168, 0, 1]), 9);
+    }
+
+    #[test]
+    fn library_registers_cleanly() {
+        let mut reg = InstructionRegistry::new();
+        register_dpu_instructions(&mut reg, 42).unwrap();
+        assert_eq!(reg.len(), 5);
+        // Double registration is rejected.
+        assert!(register_dpu_instructions(&mut reg, 42).is_err());
+    }
+}

@@ -1,0 +1,433 @@
+//! Instruction encoding: the typed [`Instruction`] enum and its wire codec.
+//!
+//! On the wire an instruction is `opcode:u16 | flags:u16 | operands...`
+//! (operands are opcode-specific, always fixed-width so the FPGA pipeline
+//! the paper describes could parse them in one cycle). The data payload is
+//! *not* part of the instruction — it follows in the packet body.
+
+use anyhow::{bail, Result};
+
+use super::opcode::{Opcode, SimdOp, USER_OPCODE_BASE};
+use crate::util::bytes::{Reader, Writer};
+
+/// Per-instruction flag bits (the paper's "reserved bits").
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct Flags(pub u16);
+
+impl Flags {
+    /// Request an ACK / reliable delivery (reliability is *optional* in
+    /// NetDAM; idempotent operators may simply re-transmit — §2.3).
+    pub const RELIABLE: u16 = 1 << 0;
+    /// Deliver through the receive reorder buffer (strict ordering).
+    pub const ORDERED: u16 = 1 << 1;
+    /// For SIMD: store the result to memory instead of replying with it.
+    pub const STORE: u16 = 1 << 2;
+    /// Marks the last packet of a multi-packet operation.
+    pub const LAST: u16 = 1 << 3;
+    /// Congestion-experienced mark set by a switch queue above its
+    /// threshold (consumed by the RoCE baseline's DCQCN-lite).
+    pub const ECN: u16 = 1 << 4;
+
+    pub fn reliable(self) -> bool {
+        self.0 & Self::RELIABLE != 0
+    }
+    pub fn ordered(self) -> bool {
+        self.0 & Self::ORDERED != 0
+    }
+    pub fn store(self) -> bool {
+        self.0 & Self::STORE != 0
+    }
+    pub fn last(self) -> bool {
+        self.0 & Self::LAST != 0
+    }
+    pub fn ecn(self) -> bool {
+        self.0 & Self::ECN != 0
+    }
+    pub fn with(self, bit: u16) -> Flags {
+        Flags(self.0 | bit)
+    }
+}
+
+/// A decoded NetDAM instruction. Operand meanings follow paper §2.2/§2.4.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Instruction {
+    Nop,
+    /// Read `len` bytes at `addr`; device answers with `ReadResp` + data.
+    Read { addr: u64, len: u32 },
+    /// Response carrying the data payload for a `Read`.
+    ReadResp { addr: u64 },
+    /// Write the packet payload at `addr`; `WriteAck` if RELIABLE.
+    Write { addr: u64 },
+    WriteAck { addr: u64 },
+    /// Compare-and-swap one u64 at `addr` — the paper's atomic, used to
+    /// build idempotent operators.
+    Cas { addr: u64, expected: u64, new: u64 },
+    CasResp { addr: u64, old: u64, swapped: bool },
+    /// Device-local DMA: copy `len` bytes from `src` to `dst`.
+    Memcopy { src: u64, dst: u64, len: u32 },
+    /// Transport-level acknowledgement of sequence `acked`.
+    Ack { acked: u64 },
+    Nack { acked: u64, reason: u8 },
+
+    /// SIMD ALU op: payload lanes ⊕ mem[addr..addr+payload_len].
+    /// Result goes to the reply (SimdResp) or to memory (STORE flag).
+    Simd { op: SimdOp, addr: u64 },
+    SimdResp { addr: u64 },
+    /// Compute the block hash of `len` bytes at `addr` (idempotency guard).
+    BlockHash { addr: u64, len: u32 },
+    BlockHashResp { hash: u64 },
+    /// Write payload at `addr` only if the current block hash equals
+    /// `expect_hash` — the paper's idempotent last-hop WRITE (§3.1).
+    WriteIfHash { addr: u64, expect_hash: u64 },
+
+    /// Ring Reduce-Scatter step: add payload into the accumulator carried
+    /// in the packet buffer, then self-route to the next segment.
+    /// `rs_left` counts reduce hops remaining *including this one*: at
+    /// `rs_left == 1` this device is the chunk owner — it performs the
+    /// hash-guarded reduced write (idempotent, §3.1) and, if the SROU
+    /// stack continues, emits the fused All-Gather chain carrying the
+    /// fully-reduced block (one instruction = whole MPI allreduce chunk).
+    ReduceScatter {
+        op: SimdOp,
+        addr: u64,
+        block: u32,
+        rs_left: u8,
+        expect_hash: u64,
+    },
+    /// Ring All-Gather step: write payload at `addr`, forward to next hop.
+    AllGather { addr: u64, block: u32 },
+    /// Completion notification sent to the controller/leader.
+    CollectiveDone { block: u32 },
+
+    /// Pool control plane (SDN controller as MMU, §2.6).
+    Malloc { bytes: u64, tag: u32 },
+    MallocResp { gva: u64, tag: u32 },
+    Free { gva: u64 },
+    FreeResp { gva: u64 },
+
+    /// A user-defined instruction (opcode >= USER_OPCODE_BASE) with three
+    /// raw operands; semantics come from the instruction registry.
+    User { opcode: u16, a: u64, b: u64, c: u64 },
+}
+
+impl Instruction {
+    /// The wire opcode for this instruction.
+    pub fn opcode_u16(&self) -> u16 {
+        use Instruction::*;
+        match self {
+            Nop => Opcode::Nop as u16,
+            Read { .. } => Opcode::Read as u16,
+            ReadResp { .. } => Opcode::ReadResp as u16,
+            Write { .. } => Opcode::Write as u16,
+            WriteAck { .. } => Opcode::WriteAck as u16,
+            Cas { .. } => Opcode::Cas as u16,
+            CasResp { .. } => Opcode::CasResp as u16,
+            Memcopy { .. } => Opcode::Memcopy as u16,
+            Ack { .. } => Opcode::Ack as u16,
+            Nack { .. } => Opcode::Nack as u16,
+            Simd { .. } => Opcode::Simd as u16,
+            SimdResp { .. } => Opcode::SimdResp as u16,
+            BlockHash { .. } => Opcode::BlockHash as u16,
+            BlockHashResp { .. } => Opcode::BlockHashResp as u16,
+            WriteIfHash { .. } => Opcode::WriteIfHash as u16,
+            ReduceScatter { .. } => Opcode::ReduceScatter as u16,
+            AllGather { .. } => Opcode::AllGather as u16,
+            CollectiveDone { .. } => Opcode::CollectiveDone as u16,
+            Malloc { .. } => Opcode::Malloc as u16,
+            MallocResp { .. } => Opcode::MallocResp as u16,
+            Free { .. } => Opcode::Free as u16,
+            FreeResp { .. } => Opcode::FreeResp as u16,
+            User { opcode, .. } => *opcode,
+        }
+    }
+
+    /// Encode `opcode | flags | operands` into `w`.
+    pub fn encode(&self, flags: Flags, w: &mut Writer) {
+        use Instruction::*;
+        w.u16(self.opcode_u16());
+        w.u16(flags.0);
+        match self {
+            Nop => {}
+            Read { addr, len } => {
+                w.u64(*addr);
+                w.u32(*len);
+            }
+            ReadResp { addr } | Write { addr } | WriteAck { addr } | SimdResp { addr } => {
+                w.u64(*addr);
+            }
+            Cas {
+                addr,
+                expected,
+                new,
+            } => {
+                w.u64(*addr);
+                w.u64(*expected);
+                w.u64(*new);
+            }
+            CasResp { addr, old, swapped } => {
+                w.u64(*addr);
+                w.u64(*old);
+                w.u8(*swapped as u8);
+            }
+            Memcopy { src, dst, len } => {
+                w.u64(*src);
+                w.u64(*dst);
+                w.u32(*len);
+            }
+            Ack { acked } => w.u64(*acked),
+            Nack { acked, reason } => {
+                w.u64(*acked);
+                w.u8(*reason);
+            }
+            Simd { op, addr } => {
+                w.u8(*op as u8);
+                w.u64(*addr);
+            }
+            BlockHash { addr, len } => {
+                w.u64(*addr);
+                w.u32(*len);
+            }
+            BlockHashResp { hash } => w.u64(*hash),
+            WriteIfHash { addr, expect_hash } => {
+                w.u64(*addr);
+                w.u64(*expect_hash);
+            }
+            ReduceScatter {
+                op,
+                addr,
+                block,
+                rs_left,
+                expect_hash,
+            } => {
+                w.u8(*op as u8);
+                w.u64(*addr);
+                w.u32(*block);
+                w.u8(*rs_left);
+                w.u64(*expect_hash);
+            }
+            AllGather { addr, block } => {
+                w.u64(*addr);
+                w.u32(*block);
+            }
+            CollectiveDone { block } => w.u32(*block),
+            Malloc { bytes, tag } => {
+                w.u64(*bytes);
+                w.u32(*tag);
+            }
+            MallocResp { gva, tag } => {
+                w.u64(*gva);
+                w.u32(*tag);
+            }
+            Free { gva } | FreeResp { gva } => w.u64(*gva),
+            User { opcode: _, a, b, c } => {
+                w.u64(*a);
+                w.u64(*b);
+                w.u64(*c);
+            }
+        }
+    }
+
+    /// Decode from `r`; returns `(instruction, flags)`.
+    pub fn decode(r: &mut Reader) -> Result<(Instruction, Flags)> {
+        let raw_op = r.u16()?;
+        let flags = Flags(r.u16()?);
+        if raw_op >= USER_OPCODE_BASE {
+            return Ok((
+                Instruction::User {
+                    opcode: raw_op,
+                    a: r.u64()?,
+                    b: r.u64()?,
+                    c: r.u64()?,
+                },
+                flags,
+            ));
+        }
+        let op = Opcode::from_u16(raw_op)?;
+        use Instruction as I;
+        let instr = match op {
+            Opcode::Nop => I::Nop,
+            Opcode::Read => I::Read {
+                addr: r.u64()?,
+                len: r.u32()?,
+            },
+            Opcode::ReadResp => I::ReadResp { addr: r.u64()? },
+            Opcode::Write => I::Write { addr: r.u64()? },
+            Opcode::WriteAck => I::WriteAck { addr: r.u64()? },
+            Opcode::Cas => I::Cas {
+                addr: r.u64()?,
+                expected: r.u64()?,
+                new: r.u64()?,
+            },
+            Opcode::CasResp => {
+                let addr = r.u64()?;
+                let old = r.u64()?;
+                let swapped = match r.u8()? {
+                    0 => false,
+                    1 => true,
+                    v => bail!("bad bool {v} in CasResp"),
+                };
+                I::CasResp { addr, old, swapped }
+            }
+            Opcode::Memcopy => I::Memcopy {
+                src: r.u64()?,
+                dst: r.u64()?,
+                len: r.u32()?,
+            },
+            Opcode::Ack => I::Ack { acked: r.u64()? },
+            Opcode::Nack => I::Nack {
+                acked: r.u64()?,
+                reason: r.u8()?,
+            },
+            Opcode::Simd => I::Simd {
+                op: SimdOp::from_u8(r.u8()?)?,
+                addr: r.u64()?,
+            },
+            Opcode::SimdResp => I::SimdResp { addr: r.u64()? },
+            Opcode::BlockHash => I::BlockHash {
+                addr: r.u64()?,
+                len: r.u32()?,
+            },
+            Opcode::BlockHashResp => I::BlockHashResp { hash: r.u64()? },
+            Opcode::WriteIfHash => I::WriteIfHash {
+                addr: r.u64()?,
+                expect_hash: r.u64()?,
+            },
+            Opcode::ReduceScatter => I::ReduceScatter {
+                op: SimdOp::from_u8(r.u8()?)?,
+                addr: r.u64()?,
+                block: r.u32()?,
+                rs_left: r.u8()?,
+                expect_hash: r.u64()?,
+            },
+            Opcode::AllGather => I::AllGather {
+                addr: r.u64()?,
+                block: r.u32()?,
+            },
+            Opcode::CollectiveDone => I::CollectiveDone { block: r.u32()? },
+            Opcode::Malloc => I::Malloc {
+                bytes: r.u64()?,
+                tag: r.u32()?,
+            },
+            Opcode::MallocResp => I::MallocResp {
+                gva: r.u64()?,
+                tag: r.u32()?,
+            },
+            Opcode::Free => I::Free { gva: r.u64()? },
+            Opcode::FreeResp => I::FreeResp { gva: r.u64()? },
+        };
+        Ok((instr, flags))
+    }
+
+    /// Is this instruction idempotent (safe to blindly re-execute)?
+    /// §3.1: everything that only reads, or writes a value derived solely
+    /// from the packet, is idempotent; accumulating into local memory
+    /// (`Simd` with STORE) is not — hence `WriteIfHash`.
+    pub fn idempotent(&self, flags: Flags) -> bool {
+        use Instruction::*;
+        match self {
+            Read { .. } | ReadResp { .. } | Write { .. } | WriteAck { .. } | Nop
+            | BlockHash { .. } | BlockHashResp { .. } | WriteIfHash { .. } | AllGather { .. }
+            | Ack { .. } | Nack { .. } | SimdResp { .. } | MallocResp { .. }
+            | CollectiveDone { .. } | FreeResp { .. } => true,
+            // CAS is idempotent wrt retry only if expected != new.
+            Cas { expected, new, .. } => expected != new,
+            CasResp { .. } => true,
+            Memcopy { src, dst, len } => {
+                // Idempotent unless ranges overlap (self-clobbering copy).
+                let (s, d, l) = (*src, *dst, *len as u64);
+                s + l <= d || d + l <= s
+            }
+            Simd { .. } => !flags.store(),
+            ReduceScatter { .. } => true, // interim hops: packet-buffer only;
+            // last hop uses the hash guard — see device::exec.
+            Malloc { .. } | Free { .. } => false,
+            User { .. } => false, // unknown semantics: assume not
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn round_trip(i: &Instruction, f: Flags) {
+        let mut w = Writer::default();
+        i.encode(f, &mut w);
+        let bytes = w.into_vec();
+        let mut r = Reader::new(&bytes);
+        let (j, g) = Instruction::decode(&mut r).unwrap();
+        assert_eq!(&j, i);
+        assert_eq!(g, f);
+        assert_eq!(r.remaining(), 0, "codec consumed everything");
+    }
+
+    #[test]
+    fn all_core_instructions_round_trip() {
+        use Instruction::*;
+        let cases = vec![
+            Nop,
+            Read { addr: 0x1000, len: 128 },
+            ReadResp { addr: 0x1000 },
+            Write { addr: u64::MAX },
+            WriteAck { addr: 7 },
+            Cas { addr: 8, expected: 1, new: 2 },
+            CasResp { addr: 8, old: 1, swapped: true },
+            Memcopy { src: 0, dst: 4096, len: 9000 },
+            Ack { acked: 55 },
+            Nack { acked: 56, reason: 2 },
+            Simd { op: SimdOp::Add, addr: 0x2000 },
+            SimdResp { addr: 0x2000 },
+            BlockHash { addr: 0x3000, len: 8192 },
+            BlockHashResp { hash: 0xDEAD_BEEF },
+            WriteIfHash { addr: 0x4000, expect_hash: 42 },
+            ReduceScatter { op: SimdOp::Add, addr: 0x5000, block: 3, rs_left: 3, expect_hash: 9 },
+            AllGather { addr: 0x6000, block: 1 },
+            CollectiveDone { block: 2 },
+            Malloc { bytes: 1 << 30, tag: 77 },
+            MallocResp { gva: 0xA000_0000, tag: 77 },
+            Free { gva: 0xA000_0000 },
+            FreeResp { gva: 0xA000_0000 },
+            User { opcode: 0x8001, a: 1, b: 2, c: 3 },
+        ];
+        for i in &cases {
+            round_trip(i, Flags::default());
+            round_trip(i, Flags(Flags::RELIABLE | Flags::STORE));
+        }
+    }
+
+    #[test]
+    fn flags_accessors() {
+        let f = Flags::default()
+            .with(Flags::RELIABLE)
+            .with(Flags::ORDERED)
+            .with(Flags::LAST);
+        assert!(f.reliable() && f.ordered() && f.last() && !f.store());
+    }
+
+    #[test]
+    fn idempotency_classification() {
+        use Instruction::*;
+        let f = Flags::default();
+        assert!(Read { addr: 0, len: 4 }.idempotent(f));
+        assert!(Write { addr: 0 }.idempotent(f));
+        assert!(WriteIfHash { addr: 0, expect_hash: 1 }.idempotent(f));
+        assert!(Simd { op: SimdOp::Add, addr: 0 }.idempotent(f));
+        assert!(!Simd { op: SimdOp::Add, addr: 0 }.idempotent(Flags(Flags::STORE)));
+        assert!(!Cas { addr: 0, expected: 3, new: 3 }.idempotent(f));
+        assert!(Cas { addr: 0, expected: 0, new: 1 }.idempotent(f));
+        // Overlapping memcopy is not idempotent.
+        assert!(!Memcopy { src: 0, dst: 8, len: 64 }.idempotent(f));
+        assert!(Memcopy { src: 0, dst: 64, len: 64 }.idempotent(f));
+    }
+
+    #[test]
+    fn truncated_instruction_is_error() {
+        let mut w = Writer::default();
+        Instruction::Read { addr: 1, len: 2 }.encode(Flags::default(), &mut w);
+        let bytes = w.into_vec();
+        for cut in 1..bytes.len() {
+            let mut r = Reader::new(&bytes[..cut]);
+            assert!(Instruction::decode(&mut r).is_err(), "cut={cut}");
+        }
+    }
+}

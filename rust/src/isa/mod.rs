@@ -1,0 +1,19 @@
+//! The NetDAM programmable ISA (paper §2.4).
+//!
+//! NetDAM instructions are RPC-like: a packet carries one instruction, the
+//! memory address it operates on, and (for SIMD ops) a data payload of up to
+//! 9000 B ≈ 2048 × f32 lanes. The "template" defines the basic memory
+//! instructions (READ / WRITE / CAS / MEMCOPY); the instruction field
+//! reserves an opcode range for *user-defined* instructions — we model that
+//! extensibility with [`registry::InstructionRegistry`], and use it
+//! ourselves to add the paper's SIMD ALU ops, the MPI collective steps
+//! (Ring Reduce-Scatter / All-Gather), and the block-hash idempotency
+//! guard, exactly as §3 describes.
+
+pub mod dpu;
+mod instr;
+mod opcode;
+pub mod registry;
+
+pub use instr::{Flags, Instruction};
+pub use opcode::{Opcode, SimdOp, USER_OPCODE_BASE};

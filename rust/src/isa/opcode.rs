@@ -1,0 +1,199 @@
+//! Opcode numbering and the SIMD ALU operation set.
+
+use anyhow::{bail, Result};
+
+/// Opcodes `>= USER_OPCODE_BASE` are the user-defined range the paper
+/// reserves ("we reserve multiple bits in this field, user could define
+/// their own instructions").
+pub const USER_OPCODE_BASE: u16 = 0x8000;
+
+/// Wire opcodes. The core template set is 0x00xx; SIMD extensions 0x01xx;
+/// collective extensions 0x02xx; pool/control 0x03xx.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+#[repr(u16)]
+pub enum Opcode {
+    Nop = 0x0000,
+    Read = 0x0001,
+    ReadResp = 0x0002,
+    Write = 0x0003,
+    WriteAck = 0x0004,
+    Cas = 0x0005,
+    CasResp = 0x0006,
+    Memcopy = 0x0007,
+    Ack = 0x0008,
+    Nack = 0x0009,
+
+    Simd = 0x0100,
+    SimdResp = 0x0101,
+    BlockHash = 0x0102,
+    BlockHashResp = 0x0103,
+    WriteIfHash = 0x0104,
+
+    ReduceScatter = 0x0200,
+    AllGather = 0x0201,
+    CollectiveDone = 0x0202,
+
+    Malloc = 0x0300,
+    MallocResp = 0x0301,
+    Free = 0x0302,
+    FreeResp = 0x0303,
+}
+
+impl Opcode {
+    pub fn from_u16(v: u16) -> Result<Opcode> {
+        use Opcode::*;
+        Ok(match v {
+            0x0000 => Nop,
+            0x0001 => Read,
+            0x0002 => ReadResp,
+            0x0003 => Write,
+            0x0004 => WriteAck,
+            0x0005 => Cas,
+            0x0006 => CasResp,
+            0x0007 => Memcopy,
+            0x0008 => Ack,
+            0x0009 => Nack,
+            0x0100 => Simd,
+            0x0101 => SimdResp,
+            0x0102 => BlockHash,
+            0x0103 => BlockHashResp,
+            0x0104 => WriteIfHash,
+            0x0200 => ReduceScatter,
+            0x0201 => AllGather,
+            0x0202 => CollectiveDone,
+            0x0300 => Malloc,
+            0x0301 => MallocResp,
+            0x0302 => Free,
+            0x0303 => FreeResp,
+            other => bail!("unknown opcode {other:#06x}"),
+        })
+    }
+}
+
+/// The SIMD ALU operation set the paper lists for the neural-network case:
+/// "user may define SIMD (ADD, SUB, MUL, XOR, MIN, MAX) and compute them
+/// directly near the memory".
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+#[repr(u8)]
+pub enum SimdOp {
+    Add = 0,
+    Sub = 1,
+    Mul = 2,
+    Min = 3,
+    Max = 4,
+    Xor = 5,
+}
+
+impl SimdOp {
+    pub const ALL: [SimdOp; 6] = [
+        SimdOp::Add,
+        SimdOp::Sub,
+        SimdOp::Mul,
+        SimdOp::Min,
+        SimdOp::Max,
+        SimdOp::Xor,
+    ];
+
+    pub fn from_u8(v: u8) -> Result<SimdOp> {
+        Ok(match v {
+            0 => SimdOp::Add,
+            1 => SimdOp::Sub,
+            2 => SimdOp::Mul,
+            3 => SimdOp::Min,
+            4 => SimdOp::Max,
+            5 => SimdOp::Xor,
+            other => bail!("unknown simd op {other}"),
+        })
+    }
+
+    /// Apply to two f32 lanes (Xor operates on the raw bits, as the FPGA
+    /// datapath would; useful for masks/checksums).
+    #[inline]
+    pub fn apply_f32(&self, a: f32, b: f32) -> f32 {
+        match self {
+            SimdOp::Add => a + b,
+            SimdOp::Sub => a - b,
+            SimdOp::Mul => a * b,
+            SimdOp::Min => a.min(b),
+            SimdOp::Max => a.max(b),
+            SimdOp::Xor => f32::from_bits(a.to_bits() ^ b.to_bits()),
+        }
+    }
+
+    /// True when the op is commutative+associative, i.e. safe under the
+    /// paper's relaxed ordering / out-of-order execution rule (§2.3).
+    pub fn commutative(&self) -> bool {
+        !matches!(self, SimdOp::Sub)
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            SimdOp::Add => "add",
+            SimdOp::Sub => "sub",
+            SimdOp::Mul => "mul",
+            SimdOp::Min => "min",
+            SimdOp::Max => "max",
+            SimdOp::Xor => "xor",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn opcode_round_trip() {
+        for op in [
+            Opcode::Nop,
+            Opcode::Read,
+            Opcode::ReadResp,
+            Opcode::Write,
+            Opcode::WriteAck,
+            Opcode::Cas,
+            Opcode::CasResp,
+            Opcode::Memcopy,
+            Opcode::Ack,
+            Opcode::Nack,
+            Opcode::Simd,
+            Opcode::SimdResp,
+            Opcode::BlockHash,
+            Opcode::BlockHashResp,
+            Opcode::WriteIfHash,
+            Opcode::ReduceScatter,
+            Opcode::AllGather,
+            Opcode::CollectiveDone,
+            Opcode::Malloc,
+            Opcode::MallocResp,
+            Opcode::Free,
+            Opcode::FreeResp,
+        ] {
+            assert_eq!(Opcode::from_u16(op as u16).unwrap(), op);
+        }
+    }
+
+    #[test]
+    fn unknown_opcode_rejected() {
+        assert!(Opcode::from_u16(0x7FFF).is_err());
+    }
+
+    #[test]
+    fn simd_round_trip_and_semantics() {
+        for op in SimdOp::ALL {
+            assert_eq!(SimdOp::from_u8(op as u8).unwrap(), op);
+        }
+        assert_eq!(SimdOp::Add.apply_f32(2.0, 3.0), 5.0);
+        assert_eq!(SimdOp::Sub.apply_f32(2.0, 3.0), -1.0);
+        assert_eq!(SimdOp::Mul.apply_f32(2.0, 3.0), 6.0);
+        assert_eq!(SimdOp::Min.apply_f32(2.0, 3.0), 2.0);
+        assert_eq!(SimdOp::Max.apply_f32(2.0, 3.0), 3.0);
+        assert_eq!(SimdOp::Xor.apply_f32(1.5, 1.5), 0.0);
+    }
+
+    #[test]
+    fn only_sub_is_noncommutative() {
+        for op in SimdOp::ALL {
+            assert_eq!(op.commutative(), op != SimdOp::Sub, "{op:?}");
+        }
+    }
+}

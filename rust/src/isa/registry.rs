@@ -1,0 +1,204 @@
+//! User-defined instruction registry — the "programmable" in the
+//! programmable ISA.
+//!
+//! The paper reserves the high opcode range for user-defined behaviour
+//! ("user could define their own instructions for different computation
+//! jobs": DPU offload would add compress/crypto/hash/LPM; NN training adds
+//! SIMD and the collective steps). We model that with a registry of
+//! [`UserInstruction`] handlers a device consults for any opcode `>=
+//! USER_OPCODE_BASE`. Handlers see device memory through the [`MemAccess`]
+//! trait and return an [`ExecOutcome`], and declare an execution *cost* so
+//! the DES charges pipeline time for them.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Result};
+
+use super::instr::Flags;
+use super::opcode::USER_OPCODE_BASE;
+use crate::sim::SimTime;
+
+/// Device-memory access as seen by instruction handlers.
+///
+/// `read` returns an owned buffer because device memory is page-sparse
+/// (2 GB HBM per device would not fit resident ×N devices); reads may
+/// cross page boundaries.
+pub trait MemAccess {
+    fn capacity(&self) -> u64;
+    fn read(&self, addr: u64, len: usize) -> Result<Vec<u8>>;
+    fn write(&mut self, addr: u64, data: &[u8]) -> Result<()>;
+}
+
+/// What the device should do after executing a user instruction.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ExecOutcome {
+    /// Nothing to send; packet is consumed.
+    Consume,
+    /// Reply to the source with a user instruction + payload.
+    Reply {
+        opcode: u16,
+        a: u64,
+        b: u64,
+        c: u64,
+        payload: Vec<u8>,
+    },
+    /// Replace the packet payload and continue along the SROU segment list
+    /// (the chained-computation / DAG model of §2.2).
+    Forward { payload: Vec<u8> },
+    /// Drop silently (e.g. guard failed).
+    Drop,
+}
+
+/// Execution context handed to a user instruction.
+pub struct ExecCtx<'a> {
+    pub mem: &'a mut dyn MemAccess,
+    pub payload: &'a [u8],
+    pub a: u64,
+    pub b: u64,
+    pub c: u64,
+    pub flags: Flags,
+}
+
+/// A user-defined instruction implementation.
+pub trait UserInstruction: Send {
+    /// Human-readable name (for metrics and errors).
+    fn name(&self) -> &'static str;
+    /// Execute against device memory; pure function of (mem, packet).
+    fn execute(&self, ctx: &mut ExecCtx) -> Result<ExecOutcome>;
+    /// Pipeline time charged by the DES. Default: ALU-array cost of one
+    /// pass over the payload at 64 B/cycle, 250 MHz fabric clock (4 ns).
+    fn cost_ns(&self, payload_len: usize) -> SimTime {
+        4 * (payload_len as u64 / 64 + 1)
+    }
+    /// Whether blind re-execution is safe (drives retransmit policy).
+    fn idempotent(&self) -> bool {
+        false
+    }
+}
+
+/// Opcode → handler table. One registry is shared by all devices in a
+/// simulation (instructions are "flashed" into every NetDAM).
+#[derive(Default)]
+pub struct InstructionRegistry {
+    handlers: HashMap<u16, Box<dyn UserInstruction>>,
+}
+
+impl InstructionRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Register a handler. Fails on opcodes below the user range or on
+    /// double registration — both are deployment bugs worth surfacing.
+    pub fn register(&mut self, opcode: u16, h: Box<dyn UserInstruction>) -> Result<()> {
+        if opcode < USER_OPCODE_BASE {
+            bail!(
+                "opcode {opcode:#06x} is below the user range ({USER_OPCODE_BASE:#06x})"
+            );
+        }
+        if self.handlers.contains_key(&opcode) {
+            bail!("opcode {opcode:#06x} already registered");
+        }
+        self.handlers.insert(opcode, h);
+        Ok(())
+    }
+
+    pub fn get(&self, opcode: u16) -> Option<&dyn UserInstruction> {
+        self.handlers.get(&opcode).map(|b| b.as_ref())
+    }
+
+    pub fn len(&self) -> usize {
+        self.handlers.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.handlers.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Toy vector memory for handler tests.
+    pub(crate) struct VecMem(pub Vec<u8>);
+
+    impl MemAccess for VecMem {
+        fn capacity(&self) -> u64 {
+            self.0.len() as u64
+        }
+        fn read(&self, addr: u64, len: usize) -> Result<Vec<u8>> {
+            let a = addr as usize;
+            if a + len > self.0.len() {
+                bail!("oob read");
+            }
+            Ok(self.0[a..a + len].to_vec())
+        }
+        fn write(&mut self, addr: u64, data: &[u8]) -> Result<()> {
+            let a = addr as usize;
+            if a + data.len() > self.0.len() {
+                bail!("oob write");
+            }
+            self.0[a..a + data.len()].copy_from_slice(data);
+            Ok(())
+        }
+    }
+
+    /// Example user instruction: byte-wise XOR payload into memory
+    /// (a stand-in for the paper's "crypto" DPU offload example).
+    struct XorWrite;
+
+    impl UserInstruction for XorWrite {
+        fn name(&self) -> &'static str {
+            "xor_write"
+        }
+        fn execute(&self, ctx: &mut ExecCtx) -> Result<ExecOutcome> {
+            let cur = ctx.mem.read(ctx.a, ctx.payload.len())?;
+            let mixed: Vec<u8> = cur.iter().zip(ctx.payload).map(|(m, p)| m ^ p).collect();
+            ctx.mem.write(ctx.a, &mixed)?;
+            Ok(ExecOutcome::Reply {
+                opcode: 0x8002,
+                a: ctx.a,
+                b: 0,
+                c: 0,
+                payload: vec![],
+            })
+        }
+    }
+
+    #[test]
+    fn register_and_execute() {
+        let mut reg = InstructionRegistry::new();
+        reg.register(0x8001, Box::new(XorWrite)).unwrap();
+        assert_eq!(reg.len(), 1);
+        let mut mem = VecMem(vec![0xFF; 16]);
+        let payload = vec![0x0F; 4];
+        let mut ctx = ExecCtx {
+            mem: &mut mem,
+            payload: &payload,
+            a: 4,
+            b: 0,
+            c: 0,
+            flags: Flags::default(),
+        };
+        let out = reg.get(0x8001).unwrap().execute(&mut ctx).unwrap();
+        assert!(matches!(out, ExecOutcome::Reply { opcode: 0x8002, .. }));
+        assert_eq!(&mem.0[4..8], &[0xF0; 4]);
+        assert_eq!(&mem.0[0..4], &[0xFF; 4]);
+    }
+
+    #[test]
+    fn rejects_core_range_and_duplicates() {
+        let mut reg = InstructionRegistry::new();
+        assert!(reg.register(0x0100, Box::new(XorWrite)).is_err());
+        reg.register(0x8001, Box::new(XorWrite)).unwrap();
+        assert!(reg.register(0x8001, Box::new(XorWrite)).is_err());
+    }
+
+    #[test]
+    fn default_cost_scales_with_payload() {
+        let x = XorWrite;
+        assert!(x.cost_ns(9000) > x.cost_ns(64));
+        assert!(x.cost_ns(0) > 0);
+    }
+}

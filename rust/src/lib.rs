@@ -1,0 +1,47 @@
+//! NetDAM: Network Direct Attached Memory with a programmable in-memory
+//! computing ISA — a full-system reproduction of Fang & Peng (2021).
+//!
+//! The original system is an FPGA (Xilinx Alveo U55N) prototype: HBM memory
+//! attached directly to a 100G Ethernet MAC with a fixed packet-processing
+//! pipeline and a programmable instruction set executed near memory. This
+//! crate reproduces the *system* in software as a deterministic,
+//! cycle-approximate discrete-event simulation plus a real compute plane:
+//! the SIMD/in-memory ALU operations are authored as JAX/Pallas kernels,
+//! AOT-lowered to HLO, and executed from rust through the PJRT C API
+//! (see [`runtime`]), so the actual arithmetic of every collective runs
+//! through the same compiled artifacts a hardware ALU array would model.
+//!
+//! # Layers
+//! * **L3 (this crate)** — the coordinator and every substrate the paper
+//!   depends on: the DES engine ([`sim`]), packet format ([`wire`]),
+//!   programmable ISA ([`isa`]), device pipeline model ([`device`]),
+//!   Ethernet fabric ([`net`]), segment routing ([`srou`]), transport
+//!   ([`transport`]), IOMMU ([`iommu`]), global memory pool ([`pool`]),
+//!   host/PCIe/RoCE baselines ([`host`], [`roce`]), collectives
+//!   ([`collectives`]) and the experiment coordinator ([`coordinator`]).
+//! * **L2 (python/compile/model.py)** — JAX compute graphs (SIMD block ops,
+//!   reduce step, block hash, MLP train step) lowered once to HLO text.
+//! * **L1 (python/compile/kernels/)** — Pallas kernels implementing the
+//!   paper's 2048-lane SIMD ALU semantics, verified against a pure-jnp
+//!   oracle.
+
+pub mod alu;
+pub mod cli;
+pub mod collectives;
+pub mod config;
+pub mod coordinator;
+pub mod device;
+pub mod examples_support;
+pub mod host;
+pub mod iommu;
+pub mod isa;
+pub mod metrics;
+pub mod net;
+pub mod pool;
+pub mod roce;
+pub mod runtime;
+pub mod sim;
+pub mod srou;
+pub mod transport;
+pub mod util;
+pub mod wire;

@@ -1,0 +1,171 @@
+//! `netdam` — the experiment launcher.
+//!
+//! ```text
+//! netdam latency    [--samples N] [--len BYTES]          # E1 (§2.3)
+//! netdam allreduce  [--elements N] [--timing-only] ...   # E2 (§3.3)
+//! netdam incast     [--senders N] [--bytes B]            # E3 (§2.5)
+//! netdam multipath  [--bytes B]                          # E4 (§2.3)
+//! netdam alu        [--lanes N]                          # E6: native vs Pallas/PJRT
+//! netdam train      [--steps N] [--workers N]            # e2e data-parallel MLP
+//! netdam info                                            # artifact inventory
+//! ```
+//!
+//! Every subcommand accepts `--config FILE` (mini-TOML, see
+//! `rust/src/config.rs`) plus `--set key=value` overrides.
+
+use anyhow::{bail, Result};
+
+use netdam::cli::Args;
+use netdam::config::Config;
+use netdam::coordinator::{run_e1, run_e2, run_e3, run_e4, E1Config, E2Config, E3Config, E4Config};
+
+fn load_config(args: &Args) -> Result<Config> {
+    let mut cfg = match args.opt("config") {
+        Some(path) => Config::load(std::path::Path::new(path))?,
+        None => Config::parse("")?,
+    };
+    for (k, v) in &args.sets {
+        cfg.set(k, v)?;
+    }
+    Ok(cfg)
+}
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let Some((cmd, rest)) = argv.split_first() else {
+        print_usage();
+        return Ok(());
+    };
+    let args = Args::parse(rest)?;
+    let cfg = load_config(&args)?;
+
+    match cmd.as_str() {
+        "latency" => {
+            let c = E1Config {
+                read_len: args.opt_u64("len", cfg.u64("latency.len", 128))? as u32,
+                samples: args.opt_usize("samples", cfg.usize("latency.samples", 20_000))?,
+                seed: args.opt_u64("seed", cfg.u64("seed", 0xE1))?,
+            };
+            let r = run_e1(&c);
+            println!("E1 — wire-to-wire READ of {} B, {} samples", c.read_len, c.samples);
+            print!("{}", r.table.render());
+        }
+        "allreduce" => {
+            let c = E2Config {
+                elements: args.opt_usize("elements", cfg.usize("allreduce.elements", 1 << 20))?,
+                ranks: args.opt_usize("ranks", cfg.usize("allreduce.ranks", 4))?,
+                timing_only: args.flag("timing-only") || cfg.bool("allreduce.timing_only", false),
+                window: args.opt_usize("window", cfg.usize("allreduce.window", 16))?,
+                seed: args.opt_u64("seed", cfg.u64("seed", 0xE2))?,
+                with_baselines: !args.flag("no-baselines"),
+            };
+            println!(
+                "E2 — {} x f32 allreduce over {} ranks ({})",
+                c.elements,
+                c.ranks,
+                if c.timing_only { "timing-only" } else { "data-bearing" }
+            );
+            let r = run_e2(&c)?;
+            print!("{}", r.table.render());
+        }
+        "incast" => {
+            let c = E3Config {
+                senders: args.opt_usize("senders", cfg.usize("incast.senders", 4))?,
+                devices: args.opt_usize("devices", cfg.usize("incast.devices", 4))?,
+                bytes_per_sender: args
+                    .opt_usize("bytes", cfg.usize("incast.bytes_per_sender", 2 << 20))?,
+                pull_fraction: args.opt_f64("pull-fraction", 0.92)?,
+                seed: args.opt_u64("seed", cfg.u64("seed", 0xE3))?,
+            };
+            println!(
+                "E3 — {} senders x {} B, direct incast vs interleaved pool",
+                c.senders, c.bytes_per_sender
+            );
+            let r = run_e3(&c)?;
+            print!("{}", r.table.render());
+        }
+        "multipath" => {
+            let c = E4Config {
+                devs_per_leaf: args.opt_usize("devs", 2)?,
+                bytes_per_flow: args.opt_usize("bytes", cfg.usize("multipath.bytes", 4 << 20))?,
+                seed: args.opt_u64("seed", cfg.u64("seed", 0xE4))?,
+            };
+            println!("E4 — elephant flows across dual spines");
+            let (_, table) = run_e4(&c)?;
+            print!("{}", table.render());
+        }
+        "alu" => {
+            run_alu_compare(&args)?;
+        }
+        "train" => {
+            let steps = args.opt_usize("steps", 50)?;
+            let workers = args.opt_usize("workers", 4)?;
+            let curve = netdam::examples_support::train_dataparallel(steps, workers, true)?;
+            println!(
+                "final loss after {steps} steps: {:.6}",
+                curve.last().copied().unwrap_or(f32::NAN)
+            );
+        }
+        "info" => {
+            let rt = netdam::runtime::Runtime::open_default()?;
+            println!("artifacts:");
+            for name in rt.artifact_names()? {
+                println!("  {name}");
+            }
+        }
+        other => {
+            print_usage();
+            bail!("unknown subcommand {other:?}");
+        }
+    }
+    Ok(())
+}
+
+/// E6: ALU backend comparison — native rust vs the compiled Pallas kernel.
+fn run_alu_compare(args: &Args) -> Result<()> {
+    use netdam::alu::{AluBackend, NativeAlu};
+    use netdam::isa::SimdOp;
+    use netdam::runtime::XlaAlu;
+    use netdam::util::Xoshiro256;
+
+    let lanes = args.opt_usize("lanes", 1 << 20)?;
+    let mut rng = Xoshiro256::seed_from(7);
+    let a = rng.f32_vec(lanes, -100.0, 100.0);
+    let b = rng.f32_vec(lanes, -100.0, 100.0);
+    let mut xla = XlaAlu::open_default()?;
+    println!("| op | native | xla-pallas | bitwise equal |");
+    println!("|---|---|---|---|");
+    for op in SimdOp::ALL {
+        let t0 = std::time::Instant::now();
+        let mut acc_n = a.clone();
+        NativeAlu::new().apply(op, &mut acc_n, &b);
+        let native_t = t0.elapsed();
+        let t1 = std::time::Instant::now();
+        let mut acc_x = a.clone();
+        xla.apply(op, &mut acc_x, &b);
+        let xla_t = t1.elapsed();
+        let equal = acc_n
+            .iter()
+            .zip(acc_x.iter())
+            .all(|(x, y)| x.to_bits() == y.to_bits());
+        println!(
+            "| {} | {:.2?} | {:.2?} | {} |",
+            op.name(),
+            native_t,
+            xla_t,
+            equal
+        );
+        if !equal {
+            bail!("backend mismatch on {op:?}");
+        }
+    }
+    Ok(())
+}
+
+fn print_usage() {
+    println!(
+        "netdam — NetDAM reproduction launcher\n\
+         subcommands: latency | allreduce | incast | multipath | alu | train | info\n\
+         common flags: --config FILE, --set key=value, --seed N"
+    );
+}

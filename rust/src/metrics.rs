@@ -1,0 +1,289 @@
+//! Metrics: counters, log-bucketed latency histograms, and table rendering.
+//!
+//! The DES produces millions of latency samples; storing them all is
+//! wasteful, so the histogram is HDR-style: log2 major buckets with linear
+//! sub-buckets, giving <4% relative error across ns..s while staying O(1)
+//! per record. Exact min/max/mean/stddev are tracked on the side (the paper
+//! reports avg / jitter / max — experiment E1 needs those exactly).
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+use crate::util::stats::Running;
+
+const SUB_BITS: u32 = 5; // 32 linear sub-buckets per power of two
+const SUB: usize = 1 << SUB_BITS;
+
+/// Log-bucketed histogram of u64 values (nanoseconds, bytes, ...).
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    buckets: Vec<u64>,
+    run: Running,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Self {
+            // 64 majors × 32 subs covers the whole u64 range.
+            buckets: vec![0; 64 * SUB],
+            run: Running::new(),
+        }
+    }
+
+    #[inline]
+    fn index(v: u64) -> usize {
+        if v < SUB as u64 {
+            return v as usize;
+        }
+        let major = 63 - v.leading_zeros() as usize; // floor(log2 v), >= SUB_BITS
+        let sub = ((v >> (major as u32 - SUB_BITS)) - SUB as u64) as usize;
+        (major - SUB_BITS as usize) * SUB + SUB + sub
+    }
+
+    /// Representative (lower-bound) value of bucket `i` — inverse of `index`.
+    fn bucket_low(i: usize) -> u64 {
+        if i < SUB {
+            return i as u64;
+        }
+        let major = (i - SUB) / SUB + SUB_BITS as usize;
+        let sub = (i - SUB) % SUB;
+        (1u64 << major) + ((sub as u64) << (major as u32 - SUB_BITS))
+    }
+
+    #[inline]
+    pub fn record(&mut self, v: u64) {
+        self.buckets[Self::index(v)] += 1;
+        self.run.push(v as f64);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.run.count()
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.run.mean()
+    }
+
+    /// Standard deviation — the paper's "jitter" metric for E1.
+    pub fn jitter(&self) -> f64 {
+        self.run.std_dev()
+    }
+
+    pub fn min(&self) -> u64 {
+        self.run.min() as u64
+    }
+
+    pub fn max(&self) -> u64 {
+        self.run.max() as u64
+    }
+
+    /// Approximate percentile (bucket lower bound; ≤4% low).
+    pub fn percentile(&self, p: f64) -> u64 {
+        let total = self.count();
+        if total == 0 {
+            return 0;
+        }
+        let target = ((p / 100.0) * total as f64).ceil().max(1.0) as u64;
+        let mut acc = 0;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            acc += c;
+            if acc >= target {
+                return Self::bucket_low(i);
+            }
+        }
+        self.max()
+    }
+}
+
+/// A named collection of counters and histograms, rendered as a table.
+#[derive(Debug, Default, Clone)]
+pub struct Metrics {
+    counters: BTreeMap<String, u64>,
+    hists: BTreeMap<String, Histogram>,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn inc(&mut self, name: &str) {
+        self.add(name, 1);
+    }
+
+    pub fn add(&mut self, name: &str, v: u64) {
+        *self.counters.entry(name.to_string()).or_insert(0) += v;
+    }
+
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.get(name).copied().unwrap_or(0)
+    }
+
+    pub fn record(&mut self, name: &str, v: u64) {
+        self.hists.entry(name.to_string()).or_default().record(v);
+    }
+
+    pub fn hist(&self, name: &str) -> Option<&Histogram> {
+        self.hists.get(name)
+    }
+
+    pub fn counters(&self) -> impl Iterator<Item = (&str, u64)> {
+        self.counters.iter().map(|(k, &v)| (k.as_str(), v))
+    }
+
+    /// Render a markdown summary (used by the CLI and EXPERIMENTS.md).
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        if !self.counters.is_empty() {
+            let _ = writeln!(out, "| counter | value |");
+            let _ = writeln!(out, "|---|---|");
+            for (k, v) in &self.counters {
+                let _ = writeln!(out, "| {k} | {v} |");
+            }
+        }
+        if !self.hists.is_empty() {
+            let _ = writeln!(out, "| histogram | n | mean | p50 | p99 | max | jitter |");
+            let _ = writeln!(out, "|---|---|---|---|---|---|---|");
+            for (k, h) in &self.hists {
+                let _ = writeln!(
+                    out,
+                    "| {k} | {} | {:.1} | {} | {} | {} | {:.1} |",
+                    h.count(),
+                    h.mean(),
+                    h.percentile(50.0),
+                    h.percentile(99.0),
+                    h.max(),
+                    h.jitter()
+                );
+            }
+        }
+        out
+    }
+}
+
+/// A fixed-width, markdown-compatible table printer for bench output.
+#[derive(Debug)]
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Self {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "table arity mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        fn line(cells: &[String], widths: &[usize], out: &mut String) {
+            let _ = write!(out, "|");
+            for (c, w) in cells.iter().zip(widths) {
+                let _ = write!(out, " {c:<w$} |");
+            }
+            let _ = writeln!(out);
+        }
+        let mut out = String::new();
+        line(&self.headers, &widths, &mut out);
+        let sep: Vec<String> = widths.iter().map(|w| "-".repeat(*w)).collect();
+        line(&sep, &widths, &mut out);
+        for r in &self.rows {
+            line(r, &widths, &mut out);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_exact_small_values() {
+        let mut h = Histogram::new();
+        for v in [1u64, 2, 3, 3, 3, 31] {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 6);
+        assert_eq!(h.min(), 1);
+        assert_eq!(h.max(), 31);
+        assert_eq!(h.percentile(50.0), 3);
+    }
+
+    #[test]
+    fn histogram_relative_error_bounded() {
+        for v in [618u64, 920, 1000, 123_456, 5_000_000_000] {
+            let i = Histogram::index(v);
+            let low = Histogram::bucket_low(i);
+            let next = Histogram::bucket_low(i + 1);
+            assert!(low <= v && v < next, "v={v} low={low} next={next}");
+            let err = (v - low) as f64 / v as f64;
+            assert!(err < 0.04, "err {err} for {v}");
+        }
+    }
+
+    #[test]
+    fn histogram_mean_and_jitter() {
+        let mut h = Histogram::new();
+        for v in [600u64, 620, 640] {
+            h.record(v);
+        }
+        assert!((h.mean() - 620.0).abs() < 1e-9);
+        assert!((h.jitter() - 20.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn percentile_monotone() {
+        let mut h = Histogram::new();
+        let mut rng = crate::util::Xoshiro256::seed_from(1);
+        for _ in 0..10_000 {
+            h.record(rng.range_u64(100, 1_000_000));
+        }
+        let mut last = 0;
+        for p in [1.0, 10.0, 50.0, 90.0, 99.0, 99.9] {
+            let v = h.percentile(p);
+            assert!(v >= last, "p{p}: {v} < {last}");
+            last = v;
+        }
+    }
+
+    #[test]
+    fn metrics_counters_and_render() {
+        let mut m = Metrics::new();
+        m.inc("pkts");
+        m.add("pkts", 2);
+        m.record("lat_ns", 618);
+        assert_eq!(m.counter("pkts"), 3);
+        let s = m.render();
+        assert!(s.contains("pkts"));
+        assert!(s.contains("lat_ns"));
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["name", "value"]);
+        t.row(&["a".into(), "1".into()]);
+        t.row(&["long-name".into(), "22".into()]);
+        let s = t.render();
+        assert!(s.contains("| long-name | 22"));
+        assert_eq!(s.lines().count(), 4);
+    }
+}

@@ -1,0 +1,255 @@
+//! Point-to-point link model.
+//!
+//! A link is unidirectional (topology builders create pairs) with a line
+//! rate, propagation delay, and a finite egress buffer. Serialization is
+//! tracked in **picoseconds** so back-to-back 64 B frames at 100G (5.12 ns
+//! each) don't accumulate rounding drift over millions of packets.
+
+use std::collections::VecDeque;
+
+use crate::sim::{SimTime, GBPS};
+
+use super::cluster::NodeId;
+
+pub type LinkId = usize;
+
+#[derive(Debug, Clone)]
+pub struct LinkConfig {
+    pub rate: GBPS,
+    /// Propagation + PHY delay one way.
+    pub prop_ns: SimTime,
+    /// Egress buffer (bytes) shared by everything queued on this link.
+    pub buffer_bytes: usize,
+    /// ECN mark threshold (bytes queued). `usize::MAX` disables marking.
+    pub ecn_threshold: usize,
+}
+
+impl LinkConfig {
+    /// 100G datacenter port: ~500 KB egress buffer per port (shallow
+    /// Nexus-class shared buffer share), ECN at 20%.
+    pub fn dc_100g() -> Self {
+        Self {
+            rate: GBPS(100.0),
+            prop_ns: 500, // ~100 m fiber equivalent incl. PHY
+            buffer_bytes: 500_000,
+            ecn_threshold: 100_000,
+        }
+    }
+
+    pub fn with_rate(mut self, gbps: f64) -> Self {
+        self.rate = GBPS(gbps);
+        self
+    }
+
+    pub fn with_buffer(mut self, bytes: usize) -> Self {
+        self.buffer_bytes = bytes;
+        self
+    }
+}
+
+#[derive(Debug)]
+pub struct Link {
+    pub from: NodeId,
+    pub to: NodeId,
+    pub cfg: LinkConfig,
+    /// Picosecond time until which the transmitter is busy.
+    busy_until_ps: u64,
+    /// Bytes currently queued (including the frame in flight).
+    queued_bytes: usize,
+    /// Frames awaiting their departure instant `(departure_ps, bytes)`.
+    /// Drained lazily on the next `transmit`/`backlog` call — this keeps
+    /// buffer accounting exact *without a DES event per frame* (§ Perf:
+    /// removed one third of all events).
+    in_flight: VecDeque<(u64, usize)>,
+    // --- counters ---
+    pub tx_pkts: u64,
+    pub tx_bytes: u64,
+    pub drops: u64,
+    pub ecn_marks: u64,
+}
+
+/// Result of attempting to enqueue a frame.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum TxResult {
+    /// Frame accepted; arrives at `.0` ns at the far end; `.1` is the
+    /// departure (end of serialization) used to release buffer space.
+    Sent { arrival: SimTime, departure: SimTime, ecn: bool },
+    /// Buffer full — tail drop.
+    Dropped,
+}
+
+impl Link {
+    pub fn new(from: NodeId, to: NodeId, cfg: LinkConfig) -> Self {
+        Self {
+            from,
+            to,
+            cfg,
+            busy_until_ps: 0,
+            queued_bytes: 0,
+            in_flight: VecDeque::new(),
+            tx_pkts: 0,
+            tx_bytes: 0,
+            drops: 0,
+            ecn_marks: 0,
+        }
+    }
+
+    /// Release every frame whose serialization finished by `now_ps`.
+    #[inline]
+    fn drain(&mut self, now_ps: u64) {
+        while let Some(&(dep, b)) = self.in_flight.front() {
+            if dep > now_ps {
+                break;
+            }
+            self.in_flight.pop_front();
+            debug_assert!(self.queued_bytes >= b);
+            self.queued_bytes -= b;
+        }
+    }
+
+    /// Attempt to transmit `bytes` at time `now`.
+    pub fn transmit(&mut self, now: SimTime, bytes: usize) -> TxResult {
+        self.drain(now * 1000);
+        if self.queued_bytes + bytes > self.cfg.buffer_bytes {
+            self.drops += 1;
+            return TxResult::Dropped;
+        }
+        let ecn = self.queued_bytes > self.cfg.ecn_threshold;
+        if ecn {
+            self.ecn_marks += 1;
+        }
+        let now_ps = now * 1000;
+        let start = self.busy_until_ps.max(now_ps);
+        let end = start + self.cfg.rate.ser_ps(bytes);
+        self.busy_until_ps = end;
+        self.queued_bytes += bytes;
+        self.in_flight.push_back((end, bytes));
+        self.tx_pkts += 1;
+        self.tx_bytes += bytes as u64;
+        let departure = end.div_ceil(1000);
+        TxResult::Sent {
+            arrival: departure + self.cfg.prop_ns,
+            departure,
+            ecn,
+        }
+    }
+
+    /// Current backlog in bytes at time `now`.
+    pub fn backlog_at(&mut self, now: SimTime) -> usize {
+        self.drain(now * 1000);
+        self.queued_bytes
+    }
+
+    /// Backlog without draining (tests/diagnostics).
+    pub fn backlog(&self) -> usize {
+        self.queued_bytes
+    }
+
+    /// Queueing delay a new frame would see right now (ns).
+    pub fn queue_delay_ns(&self, now: SimTime) -> SimTime {
+        (self.busy_until_ps / 1000).saturating_sub(now)
+    }
+
+    /// Utilization over an interval, given bytes sent in it.
+    pub fn utilization(&self, interval_ns: SimTime) -> f64 {
+        if interval_ns == 0 {
+            return 0.0;
+        }
+        (self.tx_bytes as f64 * 8.0) / (self.cfg.rate.0 * interval_ns as f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn link() -> Link {
+        Link::new(0, 1, LinkConfig::dc_100g())
+    }
+
+    #[test]
+    fn first_frame_arrival_time() {
+        let mut l = link();
+        // 9000B at 100G = 720ns serialization + 500ns prop.
+        match l.transmit(0, 9000) {
+            TxResult::Sent { arrival, departure, ecn } => {
+                assert_eq!(departure, 720);
+                assert_eq!(arrival, 1220);
+                assert!(!ecn);
+            }
+            _ => panic!("dropped"),
+        }
+    }
+
+    #[test]
+    fn back_to_back_frames_queue() {
+        let mut l = link();
+        let TxResult::Sent { departure: d1, .. } = l.transmit(0, 9000) else {
+            panic!()
+        };
+        let TxResult::Sent { departure: d2, .. } = l.transmit(0, 9000) else {
+            panic!()
+        };
+        assert_eq!(d2, d1 + 720, "second frame serializes after the first");
+        assert_eq!(l.backlog(), 18000);
+        // Lazy release: once the first frame's departure time passes,
+        // the next backlog query reclaims its bytes.
+        assert_eq!(l.backlog_at(d1), 9000);
+        assert_eq!(l.backlog_at(d2), 0);
+    }
+
+    #[test]
+    fn no_rounding_drift_at_64b() {
+        let mut l = link();
+        // 1000 × 64B = 64000B = 5.12us exactly at 100G.
+        let mut last = 0;
+        for _ in 0..1000 {
+            if let TxResult::Sent { departure, .. } = l.transmit(0, 64) {
+                last = departure;
+            }
+        }
+        assert_eq!(last, 5120);
+    }
+
+    #[test]
+    fn buffer_overflow_drops() {
+        let mut l = Link::new(0, 1, LinkConfig::dc_100g().with_buffer(20_000));
+        assert!(matches!(l.transmit(0, 9000), TxResult::Sent { .. }));
+        assert!(matches!(l.transmit(0, 9000), TxResult::Sent { .. }));
+        assert_eq!(l.transmit(0, 9000), TxResult::Dropped);
+        assert_eq!(l.drops, 1);
+    }
+
+    #[test]
+    fn ecn_marks_above_threshold() {
+        let mut cfg = LinkConfig::dc_100g();
+        cfg.ecn_threshold = 10_000;
+        let mut l = Link::new(0, 1, cfg);
+        let TxResult::Sent { ecn, .. } = l.transmit(0, 9000) else {
+            panic!()
+        };
+        assert!(!ecn);
+        let TxResult::Sent { ecn, .. } = l.transmit(0, 9000) else {
+            panic!()
+        };
+        assert!(!ecn, "9000 < 10000 threshold");
+        let TxResult::Sent { ecn, .. } = l.transmit(0, 9000) else {
+            panic!()
+        };
+        assert!(ecn, "18000 > threshold");
+        assert_eq!(l.ecn_marks, 1);
+    }
+
+    #[test]
+    fn idle_link_resets_to_now() {
+        let mut l = link();
+        l.transmit(0, 9000);
+        // Much later, a new frame starts fresh from `now` (and the lazy
+        // drain reclaims the first frame's buffer).
+        if let TxResult::Sent { departure, .. } = l.transmit(1_000_000, 64) {
+            assert_eq!(departure, 1_000_006); // 5.12ns → ceil 6
+        } else {
+            panic!()
+        }
+    }
+}

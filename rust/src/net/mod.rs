@@ -1,0 +1,21 @@
+//! The Ethernet fabric: links, switches, topologies, and the [`Cluster`]
+//! world that ties devices, switches and hosts onto the DES engine.
+//!
+//! This is the substrate the paper's testbed provides physically (100G
+//! ports + a Cisco Nexus 93180FX): store-and-forward switching with finite
+//! egress buffers (tail-drop + ECN), picosecond-accurate serialization,
+//! ECMP (flow-hash or per-packet spray), and SROU waypoint routing so a
+//! source can pin a packet's path through a named spine (§2.3 multipath).
+
+mod cluster;
+mod link;
+pub mod switch;
+mod topology;
+
+pub use cluster::{
+    App, AppCtx, Cluster, CompletionHook, CompletionRecord, FaultModel, Host, InjectCmd, Node,
+    NodeId,
+};
+pub use link::{Link, LinkConfig, LinkId, TxResult};
+pub use switch::{flow_hash, EcmpMode, Switch};
+pub use topology::Topology;

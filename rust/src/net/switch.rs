@@ -1,0 +1,122 @@
+//! Switch model: store-and-forward pipeline + ECMP next-hop selection.
+//!
+//! The paper's testbed switch (Nexus 93180FX) is modeled as a fixed
+//! forwarding latency plus per-egress-port queues (the queues live in
+//! [`super::link::Link`]). The FIB is computed by the topology builder
+//! (BFS equal-cost sets); selection is either per-flow hashing (classic
+//! ECMP) or per-packet spray — the paper's SROU multipath argument (E4)
+//! compares exactly these two against source-pinned waypoints.
+
+use crate::sim::SimTime;
+use crate::wire::{DeviceIp, Packet};
+
+/// How a switch picks among equal-cost egress links.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EcmpMode {
+    /// Hash (src, dst) — one path per flow, collisions possible.
+    FlowHash,
+    /// Per-packet round-robin spray — maximal utilization, reorders.
+    Spray,
+}
+
+#[derive(Debug)]
+pub struct Switch {
+    /// Optional address so SROU segments can name this switch as a
+    /// waypoint (§2.3 "source node could select dedicated path").
+    pub ip: Option<DeviceIp>,
+    /// Forwarding pipeline latency (cut-through ASIC ~ 300–900 ns).
+    pub latency_ns: SimTime,
+    pub ecmp: EcmpMode,
+    /// Per-packet spray round-robin cursor.
+    rr: usize,
+    pub forwarded: u64,
+    pub no_route_drops: u64,
+}
+
+impl Switch {
+    pub fn new(ip: Option<DeviceIp>, latency_ns: SimTime, ecmp: EcmpMode) -> Self {
+        Self {
+            ip,
+            latency_ns,
+            ecmp,
+            rr: 0,
+            forwarded: 0,
+            no_route_drops: 0,
+        }
+    }
+
+    /// Nexus-class ToR: ~600 ns forwarding, flow-hash ECMP.
+    pub fn tor(ip: Option<DeviceIp>) -> Self {
+        Self::new(ip, 600, EcmpMode::FlowHash)
+    }
+
+    /// Pick one index among `n` equal-cost candidates for `pkt`.
+    pub fn pick(&mut self, pkt: &Packet, dst: DeviceIp, n: usize) -> usize {
+        debug_assert!(n > 0);
+        match self.ecmp {
+            EcmpMode::FlowHash => flow_hash(pkt.src, dst, n),
+            EcmpMode::Spray => {
+                self.rr = (self.rr + 1) % n;
+                self.rr
+            }
+        }
+    }
+}
+
+/// The deterministic per-flow ECMP hash: (src, dst) only — sequence is
+/// deliberately excluded so a flow sticks to one path. Public so
+/// experiments can *predict* collisions (E4 picks a colliding flow set
+/// the way an unlucky production workload would encounter one).
+pub fn flow_hash(src: DeviceIp, dst: DeviceIp, n: usize) -> usize {
+    let mut h = src.0 as u64 ^ ((dst.0 as u64) << 32);
+    h ^= h >> 33;
+    h = h.wrapping_mul(0xFF51_AFD7_ED55_8CCD);
+    h ^= h >> 33;
+    (h % n as u64) as usize
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::Instruction;
+    use crate::wire::SrouHeader;
+
+    fn pkt(src: u8, dst: u8) -> Packet {
+        Packet::new(
+            DeviceIp::lan(src),
+            1,
+            SrouHeader::direct(DeviceIp::lan(dst)),
+            Instruction::Nop,
+        )
+    }
+
+    #[test]
+    fn flow_hash_is_sticky_per_flow() {
+        let mut sw = Switch::tor(None);
+        let p = pkt(1, 2);
+        let first = sw.pick(&p, DeviceIp::lan(2), 4);
+        for _ in 0..100 {
+            assert_eq!(sw.pick(&p, DeviceIp::lan(2), 4), first);
+        }
+    }
+
+    #[test]
+    fn flow_hash_spreads_across_flows() {
+        let mut sw = Switch::tor(None);
+        let mut seen = std::collections::HashSet::new();
+        for s in 1..64 {
+            for d in 64..72 {
+                seen.insert(sw.pick(&pkt(s, d), DeviceIp::lan(d), 4));
+            }
+        }
+        assert_eq!(seen.len(), 4, "all 4 paths used across many flows");
+    }
+
+    #[test]
+    fn spray_round_robins() {
+        let mut sw = Switch::new(None, 600, EcmpMode::Spray);
+        let p = pkt(1, 2);
+        let picks: Vec<usize> = (0..8).map(|_| sw.pick(&p, DeviceIp::lan(2), 4)).collect();
+        assert_eq!(picks, vec![1, 2, 3, 0, 1, 2, 3, 0]);
+    }
+}

@@ -1,0 +1,189 @@
+//! Topology builders for the experiments.
+//!
+//! * [`Topology::star`] — the paper's testbed: N NetDAM devices (+ hosts)
+//!   on one ToR switch (Nexus 93180FX).
+//! * [`Topology::dual_spine`] — two parallel spines between leaves: the
+//!   multipath scenario of §2.3 (experiment E4).
+//! * [`Topology::fat_tree`] — a k-ary 2-level Clos for pool-scale runs.
+
+use crate::device::DeviceConfig;
+use crate::wire::DeviceIp;
+
+use super::cluster::{Cluster, NodeId};
+use super::link::LinkConfig;
+use super::switch::{EcmpMode, Switch};
+
+/// Handles to the nodes a builder created.
+pub struct Topology {
+    pub cluster: Cluster,
+    pub devices: Vec<NodeId>,
+    pub hosts: Vec<NodeId>,
+    pub switches: Vec<NodeId>,
+}
+
+impl Topology {
+    /// N devices and H plain hosts on one switch. Device ips are
+    /// 10.0.0.1.., host ips 10.0.0.101.., switch unaddressed.
+    pub fn star(seed: u64, n_devices: usize, n_hosts: usize, link: LinkConfig) -> Topology {
+        let mut cl = Cluster::new(seed);
+        let sw = cl.add_switch(Switch::tor(None));
+        let mut devices = Vec::new();
+        let mut hosts = Vec::new();
+        for i in 0..n_devices {
+            let d = cl.add_device(DeviceConfig::paper_default(DeviceIp::lan(1 + i as u8)));
+            cl.connect(sw, d, link.clone());
+            devices.push(d);
+        }
+        for i in 0..n_hosts {
+            let h = cl.add_host(DeviceIp::lan(101 + i as u8), None);
+            cl.connect(sw, h, link.clone());
+            hosts.push(h);
+        }
+        cl.compute_routes();
+        Topology {
+            cluster: cl,
+            devices,
+            hosts,
+            switches: vec![sw],
+        }
+    }
+
+    /// The paper's 4-device testbed (2× U55N, 2 devices each) + 1 driver
+    /// host, 100G everywhere.
+    pub fn paper_testbed(seed: u64) -> Topology {
+        Self::star(seed, 4, 1, LinkConfig::dc_100g())
+    }
+
+    /// Two leaves, two spines, everything dual-homed: equal-cost pair of
+    /// paths between any cross-leaf pair. Spines are SROU-addressable
+    /// (ips 10.0.0.201/202) so sources can pin paths.
+    pub fn dual_spine(
+        seed: u64,
+        devs_per_leaf: usize,
+        link: LinkConfig,
+        ecmp: EcmpMode,
+    ) -> Topology {
+        let mut cl = Cluster::new(seed);
+        let leaf1 = cl.add_switch(Switch::new(None, 600, ecmp));
+        let leaf2 = cl.add_switch(Switch::new(None, 600, ecmp));
+        let spine1 = cl.add_switch(Switch::new(Some(DeviceIp::lan(201)), 600, ecmp));
+        let spine2 = cl.add_switch(Switch::new(Some(DeviceIp::lan(202)), 600, ecmp));
+        for leaf in [leaf1, leaf2] {
+            cl.connect(leaf, spine1, link.clone());
+            cl.connect(leaf, spine2, link.clone());
+        }
+        let mut devices = Vec::new();
+        for i in 0..devs_per_leaf * 2 {
+            let leaf = if i < devs_per_leaf { leaf1 } else { leaf2 };
+            let d = cl.add_device(DeviceConfig::paper_default(DeviceIp::lan(1 + i as u8)));
+            cl.connect(leaf, d, link.clone());
+            devices.push(d);
+        }
+        cl.compute_routes();
+        Topology {
+            cluster: cl,
+            devices,
+            hosts: vec![],
+            switches: vec![leaf1, leaf2, spine1, spine2],
+        }
+    }
+
+    /// Two-level Clos: `pods` leaf switches × `devs_per_leaf` devices,
+    /// `spines` spine switches, every leaf connected to every spine.
+    pub fn fat_tree(
+        seed: u64,
+        pods: usize,
+        devs_per_leaf: usize,
+        spines: usize,
+        link: LinkConfig,
+        ecmp: EcmpMode,
+    ) -> Topology {
+        assert!(pods * devs_per_leaf <= 96, "device ip space is 8-bit here");
+        let mut cl = Cluster::new(seed);
+        let spine_ids: Vec<NodeId> = (0..spines)
+            .map(|s| cl.add_switch(Switch::new(Some(DeviceIp::lan(200 + s as u8)), 600, ecmp)))
+            .collect();
+        let mut devices = Vec::new();
+        let mut switches = spine_ids.clone();
+        for p in 0..pods {
+            let leaf = cl.add_switch(Switch::new(None, 600, ecmp));
+            switches.push(leaf);
+            for &s in &spine_ids {
+                cl.connect(leaf, s, link.clone());
+            }
+            for d in 0..devs_per_leaf {
+                let ip = DeviceIp::lan(1 + (p * devs_per_leaf + d) as u8);
+                let dev = cl.add_device(DeviceConfig::paper_default(ip));
+                cl.connect(leaf, dev, link.clone());
+                devices.push(dev);
+            }
+        }
+        cl.compute_routes();
+        Topology {
+            cluster: cl,
+            devices,
+            hosts: vec![],
+            switches,
+        }
+    }
+
+    /// Device ip of the i-th device.
+    pub fn device_ip(&self, i: usize) -> DeviceIp {
+        self.cluster.device(self.devices[i]).ip()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::Instruction;
+    use crate::sim::Engine;
+    use crate::wire::{Packet, SrouHeader};
+
+    #[test]
+    fn paper_testbed_shape() {
+        let t = Topology::paper_testbed(1);
+        assert_eq!(t.devices.len(), 4);
+        assert_eq!(t.hosts.len(), 1);
+        // 5 endpoints × 2 directions.
+        assert_eq!(t.cluster.links.len(), 10);
+    }
+
+    #[test]
+    fn dual_spine_has_two_equal_paths() {
+        let t = Topology::dual_spine(1, 1, LinkConfig::dc_100g(), EcmpMode::FlowHash);
+        let d0 = t.devices[0]; // leaf1
+        let ip1 = t.device_ip(1); // leaf2
+        let cands = &t.cluster.fib_of(d0)[&ip1];
+        assert_eq!(cands.len(), 1, "device has one uplink");
+        // The leaf switch sees two equal-cost spine links.
+        let leaf1 = t.switches[0];
+        assert_eq!(t.cluster.fib_of(leaf1)[&ip1].len(), 2);
+    }
+
+    #[test]
+    fn fat_tree_cross_pod_reachability() {
+        let t = Topology::fat_tree(5, 3, 2, 2, LinkConfig::dc_100g(), EcmpMode::FlowHash);
+        assert_eq!(t.devices.len(), 6);
+        let mut cl = t.cluster;
+        let mut eng: Engine<Cluster> = Engine::new();
+        // Device 0 (pod 0) reads from device 5 (pod 2).
+        let from = t.devices[0];
+        let seq = cl.alloc_seq(from);
+        let target = DeviceIp::lan(6);
+        let pkt = Packet::new(
+            DeviceIp::lan(1),
+            seq,
+            SrouHeader::direct(target),
+            Instruction::Read { addr: 0, len: 64 },
+        );
+        cl.inject(&mut eng, from, pkt);
+        eng.run(&mut cl);
+        // The response lands in device 0's completion queue.
+        let comps = cl.device_mut(from).drain_completions();
+        assert_eq!(comps.len(), 1);
+        assert_eq!(cl.total_drops(), 0);
+    }
+
+    use super::super::cluster::Cluster;
+}

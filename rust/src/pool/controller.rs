@@ -1,0 +1,260 @@
+//! The SDN controller as pool MMU (paper §2.6).
+//!
+//! "SDN controller could act as a MMU to simply apply malloc/free request
+//! and translate request to access-control-list and apply to each NetDAM
+//! or in datacenter switch."
+//!
+//! The controller owns the GVA space: tenants `malloc`/`free` ranges, get
+//! back GVAs, and every data-plane access is checked against the ACL
+//! (tenant, range, rw) before translation. A first-fit free-list keeps the
+//! allocator simple and deterministic.
+
+use std::collections::BTreeMap;
+
+use thiserror::Error;
+
+use crate::wire::DeviceIp;
+
+use super::interleave::{Extent, InterleaveMap};
+
+pub type TenantId = u32;
+
+#[derive(Debug, Error, PartialEq)]
+pub enum AllocError {
+    #[error("pool exhausted: requested {requested} bytes, largest hole {largest}")]
+    Exhausted { requested: u64, largest: u64 },
+    #[error("gva {0:#x} is not an allocation of this tenant")]
+    NotOwned(u64),
+    #[error("access [{gva:#x}..+{len}) denied for tenant {tenant}")]
+    Denied { tenant: TenantId, gva: u64, len: u64 },
+    #[error("zero-byte allocation")]
+    Zero,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Allocation {
+    pub gva: u64,
+    pub len: u64,
+    pub tenant: TenantId,
+    pub writable: bool,
+}
+
+/// Controller state: allocations + free list over the GVA space.
+#[derive(Debug)]
+pub struct SdnController {
+    map: InterleaveMap,
+    capacity: u64,
+    /// start → hole length.
+    holes: BTreeMap<u64, u64>,
+    /// start → allocation.
+    allocs: BTreeMap<u64, Allocation>,
+    /// Allocation granularity (whole blocks so extents stay aligned).
+    granule: u64,
+}
+
+impl SdnController {
+    pub fn new(map: InterleaveMap, per_device_capacity: u64) -> Self {
+        let capacity = map.pool_capacity(per_device_capacity);
+        let granule = map.block_bytes();
+        let mut holes = BTreeMap::new();
+        holes.insert(0, capacity);
+        Self {
+            map,
+            capacity,
+            holes,
+            allocs: BTreeMap::new(),
+            granule,
+        }
+    }
+
+    pub fn capacity(&self) -> u64 {
+        self.capacity
+    }
+
+    pub fn allocated_bytes(&self) -> u64 {
+        self.allocs.values().map(|a| a.len).sum()
+    }
+
+    pub fn map(&self) -> &InterleaveMap {
+        &self.map
+    }
+
+    /// First-fit malloc, rounded up to the block granule.
+    pub fn malloc(
+        &mut self,
+        tenant: TenantId,
+        bytes: u64,
+        writable: bool,
+    ) -> Result<Allocation, AllocError> {
+        if bytes == 0 {
+            return Err(AllocError::Zero);
+        }
+        let len = bytes.div_ceil(self.granule) * self.granule;
+        let mut chosen = None;
+        let mut largest = 0;
+        for (&start, &hole) in &self.holes {
+            largest = largest.max(hole);
+            if hole >= len {
+                chosen = Some((start, hole));
+                break;
+            }
+        }
+        let Some((start, hole)) = chosen else {
+            return Err(AllocError::Exhausted {
+                requested: len,
+                largest,
+            });
+        };
+        self.holes.remove(&start);
+        if hole > len {
+            self.holes.insert(start + len, hole - len);
+        }
+        let alloc = Allocation {
+            gva: start,
+            len,
+            tenant,
+            writable,
+        };
+        self.allocs.insert(start, alloc.clone());
+        Ok(alloc)
+    }
+
+    /// Free a previous allocation (must be owned by `tenant`).
+    pub fn free(&mut self, tenant: TenantId, gva: u64) -> Result<(), AllocError> {
+        match self.allocs.get(&gva) {
+            Some(a) if a.tenant == tenant => {}
+            _ => return Err(AllocError::NotOwned(gva)),
+        }
+        let a = self.allocs.remove(&gva).unwrap();
+        // Insert hole and coalesce with neighbors.
+        let mut start = a.gva;
+        let mut len = a.len;
+        if let Some((&ps, &pl)) = self.holes.range(..start).next_back() {
+            if ps + pl == start {
+                self.holes.remove(&ps);
+                start = ps;
+                len += pl;
+            }
+        }
+        if let Some(&nl) = self.holes.get(&(a.gva + a.len)) {
+            self.holes.remove(&(a.gva + a.len));
+            len += nl;
+        }
+        self.holes.insert(start, len);
+        Ok(())
+    }
+
+    /// ACL check + translation for a data-plane access.
+    pub fn access(
+        &self,
+        tenant: TenantId,
+        gva: u64,
+        len: u64,
+        write: bool,
+    ) -> Result<Vec<Extent>, AllocError> {
+        let denied = AllocError::Denied { tenant, gva, len };
+        let Some((_, a)) = self.allocs.range(..=gva).next_back() else {
+            return Err(denied);
+        };
+        let inside = gva >= a.gva && gva + len <= a.gva + a.len;
+        if !inside || a.tenant != tenant || (write && !a.writable) {
+            return Err(denied);
+        }
+        Ok(self.map.scatter(gva, len))
+    }
+
+    /// Which device holds the GVA (no ACL; controller-internal use).
+    pub fn locate(&self, gva: u64) -> (DeviceIp, u64) {
+        self.map.translate(gva)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctl() -> SdnController {
+        let map = InterleaveMap::paper_default((1..=4).map(DeviceIp::lan).collect());
+        SdnController::new(map, 1 << 20) // 1 MiB per device → 4 MiB pool
+    }
+
+    #[test]
+    fn malloc_rounds_to_blocks_and_translates() {
+        let mut c = ctl();
+        let a = c.malloc(1, 100, true).unwrap();
+        assert_eq!(a.len, 8192);
+        let ext = c.access(1, a.gva, 100, true).unwrap();
+        assert_eq!(ext.len(), 1);
+        assert_eq!(ext[0].device, DeviceIp::lan(1));
+    }
+
+    #[test]
+    fn distinct_allocations_dont_overlap() {
+        let mut c = ctl();
+        let a = c.malloc(1, 8192, true).unwrap();
+        let b = c.malloc(2, 8192, true).unwrap();
+        assert!(a.gva + a.len <= b.gva || b.gva + b.len <= a.gva);
+    }
+
+    #[test]
+    fn acl_denies_foreign_and_readonly() {
+        let mut c = ctl();
+        let a = c.malloc(1, 16384, false).unwrap();
+        // Wrong tenant.
+        assert!(matches!(
+            c.access(2, a.gva, 8, false),
+            Err(AllocError::Denied { .. })
+        ));
+        // Read-only allocation rejects writes, allows reads.
+        assert!(c.access(1, a.gva, 8, false).is_ok());
+        assert!(c.access(1, a.gva, 8, true).is_err());
+        // Out-of-bounds tail.
+        assert!(c.access(1, a.gva + a.len - 4, 8, false).is_err());
+    }
+
+    #[test]
+    fn free_coalesces_holes() {
+        let mut c = ctl();
+        let a = c.malloc(1, 8192, true).unwrap();
+        let b = c.malloc(1, 8192, true).unwrap();
+        let d = c.malloc(1, 8192, true).unwrap();
+        // Free middle then neighbors; a full-size alloc must fit again.
+        c.free(1, b.gva).unwrap();
+        c.free(1, a.gva).unwrap();
+        c.free(1, d.gva).unwrap();
+        let whole = c.capacity();
+        let big = c.malloc(9, whole, true).unwrap();
+        assert_eq!(big.len, whole);
+    }
+
+    #[test]
+    fn exhaustion_reports_largest_hole() {
+        let mut c = ctl();
+        let cap = c.capacity();
+        c.malloc(1, cap, true).unwrap();
+        match c.malloc(1, 8192, true) {
+            Err(AllocError::Exhausted { largest, .. }) => assert_eq!(largest, 0),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn double_free_rejected() {
+        let mut c = ctl();
+        let a = c.malloc(1, 8192, true).unwrap();
+        c.free(1, a.gva).unwrap();
+        assert_eq!(c.free(1, a.gva), Err(AllocError::NotOwned(a.gva)));
+        // Freeing someone else's allocation rejected too.
+        let b = c.malloc(2, 8192, true).unwrap();
+        assert_eq!(c.free(1, b.gva), Err(AllocError::NotOwned(b.gva)));
+    }
+
+    #[test]
+    fn alloc_spreads_over_all_devices() {
+        let mut c = ctl();
+        let a = c.malloc(1, 8 * 8192, true).unwrap();
+        let ext = c.access(1, a.gva, a.len, true).unwrap();
+        let devs: std::collections::HashSet<_> = ext.iter().map(|e| e.device).collect();
+        assert_eq!(devs.len(), 4, "interleaving uses the whole pool");
+    }
+}

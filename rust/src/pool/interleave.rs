@@ -1,0 +1,167 @@
+//! Block-interleaved global addressing.
+//!
+//! GVA block `i` lives on device `i mod N` at local block `i div N`.
+//! A linear GVA write therefore sprays round-robin across all devices —
+//! that is the incast-avoidance mechanism of §2.5 (experiment E3).
+
+use crate::wire::DeviceIp;
+
+/// One contiguous piece of a GVA range on a single device.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Extent {
+    pub device: DeviceIp,
+    pub local_addr: u64,
+    /// Offset of this extent within the original GVA range.
+    pub range_off: u64,
+    pub len: u64,
+}
+
+/// The GVA ↔ (device, local address) bijection.
+#[derive(Debug, Clone)]
+pub struct InterleaveMap {
+    devices: Vec<DeviceIp>,
+    block: u64,
+    /// Local base offset where pool blocks start on every device.
+    base: u64,
+}
+
+impl InterleaveMap {
+    pub fn new(devices: Vec<DeviceIp>, block_bytes: u64, local_base: u64) -> Self {
+        assert!(!devices.is_empty());
+        assert!(block_bytes.is_power_of_two(), "block size must be 2^k");
+        Self {
+            devices,
+            block: block_bytes,
+            base: local_base,
+        }
+    }
+
+    /// The paper's natural block: 2048 × f32 = 8 KiB.
+    pub fn paper_default(devices: Vec<DeviceIp>) -> Self {
+        Self::new(devices, 8192, 0)
+    }
+
+    pub fn n_devices(&self) -> usize {
+        self.devices.len()
+    }
+
+    pub fn block_bytes(&self) -> u64 {
+        self.block
+    }
+
+    /// Translate one GVA to its device + local address.
+    pub fn translate(&self, gva: u64) -> (DeviceIp, u64) {
+        let n = self.devices.len() as u64;
+        let blk = gva / self.block;
+        let off = gva % self.block;
+        let dev = self.devices[(blk % n) as usize];
+        let local = self.base + (blk / n) * self.block + off;
+        (dev, local)
+    }
+
+    /// Inverse: (device, local) → GVA.
+    pub fn inverse(&self, dev: DeviceIp, local: u64) -> Option<u64> {
+        let idx = self.devices.iter().position(|&d| d == dev)? as u64;
+        let rel = local.checked_sub(self.base)?;
+        let lblk = rel / self.block;
+        let off = rel % self.block;
+        let n = self.devices.len() as u64;
+        Some((lblk * n + idx) * self.block + off)
+    }
+
+    /// Split a linear GVA range into per-device extents, in range order.
+    pub fn scatter(&self, gva: u64, len: u64) -> Vec<Extent> {
+        let mut out = Vec::new();
+        let mut off = 0;
+        while off < len {
+            let a = gva + off;
+            let in_block = a % self.block;
+            let chunk = (self.block - in_block).min(len - off);
+            let (device, local_addr) = self.translate(a);
+            out.push(Extent {
+                device,
+                local_addr,
+                range_off: off,
+                len: chunk,
+            });
+            off += chunk;
+        }
+        out
+    }
+
+    /// Total pool capacity given per-device capacity.
+    pub fn pool_capacity(&self, per_device: u64) -> u64 {
+        per_device.saturating_sub(self.base) * self.devices.len() as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    fn map() -> InterleaveMap {
+        InterleaveMap::paper_default((1..=4).map(DeviceIp::lan).collect())
+    }
+
+    #[test]
+    fn round_robin_blocks() {
+        let m = map();
+        assert_eq!(m.translate(0).0, DeviceIp::lan(1));
+        assert_eq!(m.translate(8192).0, DeviceIp::lan(2));
+        assert_eq!(m.translate(3 * 8192).0, DeviceIp::lan(4));
+        assert_eq!(m.translate(4 * 8192), (DeviceIp::lan(1), 8192));
+    }
+
+    #[test]
+    fn translate_inverse_is_bijective() {
+        let m = map();
+        prop::check(|rng, _| {
+            let gva = rng.next_below(1 << 40);
+            let (d, local) = m.translate(gva);
+            assert_eq!(m.inverse(d, local), Some(gva));
+        });
+    }
+
+    #[test]
+    fn scatter_covers_range_exactly_once() {
+        let m = map();
+        prop::check(|rng, _| {
+            let gva = rng.next_below(1 << 30);
+            let len = 1 + rng.next_below(200_000);
+            let extents = m.scatter(gva, len);
+            // Coverage: extents tile [0, len) in order.
+            let mut expect_off = 0;
+            for e in &extents {
+                assert_eq!(e.range_off, expect_off);
+                assert!(e.len > 0 && e.len <= m.block_bytes());
+                // Each extent translates consistently.
+                let (d, l) = m.translate(gva + e.range_off);
+                assert_eq!((e.device, e.local_addr), (d, l));
+                expect_off += e.len;
+            }
+            assert_eq!(expect_off, len);
+        });
+    }
+
+    #[test]
+    fn aligned_scatter_balances_perfectly() {
+        let m = map();
+        // 64 aligned blocks over 4 devices → exactly 16 each.
+        let extents = m.scatter(0, 64 * 8192);
+        let mut per: std::collections::HashMap<DeviceIp, u64> = Default::default();
+        for e in extents {
+            *per.entry(e.device).or_insert(0) += e.len;
+        }
+        assert_eq!(per.len(), 4);
+        assert!(per.values().all(|&v| v == 16 * 8192));
+    }
+
+    #[test]
+    fn local_base_offsets_pool_region() {
+        let m = InterleaveMap::new(vec![DeviceIp::lan(1)], 4096, 1 << 20);
+        let (_, local) = m.translate(0);
+        assert_eq!(local, 1 << 20);
+        assert_eq!(m.inverse(DeviceIp::lan(1), (1 << 20) - 1), None);
+    }
+}

@@ -1,0 +1,17 @@
+//! The global memory pool (paper §2.5, Figure 5).
+//!
+//! "multiple NetDAM device with switch construct a big memory pool with
+//! multi-terabytes memory capacity with multi-terabits bandwidth. [...]
+//! The global memory pool could be operated in block interleaved mode,
+//! thus many-to-one communication could be equally load balance to
+//! multiple NetDAM device [and] the incast problem can be easily avoid."
+//!
+//! * [`interleave::InterleaveMap`] — the GVA ↔ (device, local) bijection.
+//! * [`controller::SdnController`] — the SDN-controller-as-MMU of §2.6:
+//!   malloc/free over the pool, access-control lists, address translation.
+
+pub mod controller;
+pub mod interleave;
+
+pub use controller::{AllocError, Allocation, SdnController, TenantId};
+pub use interleave::{Extent, InterleaveMap};

@@ -1,0 +1,163 @@
+//! DCQCN-lite rate controller (Zhu et al., SIGCOMM'15 — paper ref [14]).
+//!
+//! The shape that matters for the comparison: multiplicative decrease on
+//! CNP (ECN feedback), then fast-recovery toward the rate before the cut,
+//! then additive probing. We keep the canonical α-EWMA form with the
+//! byte-counter stages folded into time-based recovery — enough fidelity
+//! to show throttling under incast (E3's "complex congestion control"
+//! arm) without modeling every QP timer of the real spec.
+
+use crate::sim::SimTime;
+
+#[derive(Debug, Clone)]
+pub struct DcqcnConfig {
+    pub line_gbps: f64,
+    /// α EWMA gain.
+    pub g: f64,
+    /// Additive increase per recovery period (Gbps).
+    pub ai_gbps: f64,
+    /// Recovery/probe period.
+    pub period_ns: SimTime,
+    /// Minimum rate floor (Gbps).
+    pub min_gbps: f64,
+}
+
+impl Default for DcqcnConfig {
+    fn default() -> Self {
+        Self {
+            line_gbps: 100.0,
+            g: 1.0 / 16.0,
+            ai_gbps: 5.0,
+            period_ns: 55_000, // ≈ DCQCN's 55 us rate timer
+            min_gbps: 1.0,
+        }
+    }
+}
+
+#[derive(Debug)]
+pub struct RateController {
+    cfg: DcqcnConfig,
+    /// Current sending rate (Gbps).
+    rate: f64,
+    /// Target rate remembered from before the last cut.
+    target: f64,
+    /// α — EWMA congestion estimate.
+    alpha: f64,
+    last_update: SimTime,
+    pub cnps: u64,
+}
+
+impl RateController {
+    pub fn new(cfg: DcqcnConfig) -> Self {
+        let line = cfg.line_gbps;
+        Self {
+            cfg,
+            rate: line,
+            target: line,
+            alpha: 1.0,
+            last_update: 0,
+            cnps: 0,
+        }
+    }
+
+    /// Congestion notification received (an ECN-echo).
+    pub fn on_cnp(&mut self, now: SimTime) {
+        self.advance(now);
+        self.cnps += 1;
+        self.alpha = (1.0 - self.cfg.g) * self.alpha + self.cfg.g;
+        self.target = self.rate;
+        self.rate = (self.rate * (1.0 - self.alpha / 2.0)).max(self.cfg.min_gbps);
+    }
+
+    /// Time-based recovery: α decays; rate climbs toward target, then
+    /// probes additively past it.
+    fn advance(&mut self, now: SimTime) {
+        while now.saturating_sub(self.last_update) >= self.cfg.period_ns {
+            self.last_update += self.cfg.period_ns;
+            self.alpha *= 1.0 - self.cfg.g;
+            if self.rate < self.target {
+                // fast recovery: halfway to target
+                self.rate = (self.rate + self.target) / 2.0;
+            } else {
+                // additive probe
+                self.target += self.cfg.ai_gbps;
+                self.rate = ((self.rate + self.target) / 2.0).min(self.cfg.line_gbps);
+                self.target = self.target.min(self.cfg.line_gbps);
+            }
+        }
+    }
+
+    /// Current rate (Gbps) at `now`.
+    pub fn rate_gbps(&mut self, now: SimTime) -> f64 {
+        self.advance(now);
+        self.rate
+    }
+
+    /// Inter-packet gap for `bytes` at the current rate.
+    pub fn pacing_ns(&mut self, now: SimTime, bytes: usize) -> SimTime {
+        let r = self.rate_gbps(now);
+        ((bytes as f64 * 8.0) / r).ceil() as SimTime
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn starts_at_line_rate() {
+        let mut rc = RateController::new(DcqcnConfig::default());
+        assert_eq!(rc.rate_gbps(0), 100.0);
+        assert_eq!(rc.pacing_ns(0, 1250), 100); // 1250B at 100G = 100ns
+    }
+
+    #[test]
+    fn cnp_cuts_rate_multiplicatively() {
+        let mut rc = RateController::new(DcqcnConfig::default());
+        rc.on_cnp(1000);
+        // First CNP with α=1: cut toward half.
+        assert!(rc.rate_gbps(1000) < 55.0);
+        let r1 = rc.rate_gbps(1000);
+        rc.on_cnp(2000);
+        assert!(rc.rate_gbps(2000) < r1);
+    }
+
+    #[test]
+    fn recovers_after_quiet_period() {
+        let mut rc = RateController::new(DcqcnConfig::default());
+        rc.on_cnp(0);
+        let cut = rc.rate_gbps(0);
+        // 2 ms without CNPs → substantial recovery.
+        let later = rc.rate_gbps(2_000_000);
+        assert!(later > cut * 1.5, "cut {cut}, later {later}");
+        // 50 ms → essentially line rate again.
+        assert!(rc.rate_gbps(50_000_000) > 95.0);
+    }
+
+    #[test]
+    fn sustained_cnps_pin_near_floor() {
+        let mut rc = RateController::new(DcqcnConfig::default());
+        let mut now = 0;
+        for _ in 0..200 {
+            rc.on_cnp(now);
+            now += 10_000;
+        }
+        assert!(rc.rate_gbps(now) < 10.0);
+        assert_eq!(rc.cnps, 200);
+    }
+
+    #[test]
+    fn rate_never_exceeds_line_or_drops_below_floor() {
+        let mut rc = RateController::new(DcqcnConfig::default());
+        let mut now = 0;
+        let mut rng = crate::util::Xoshiro256::seed_from(4);
+        for _ in 0..2000 {
+            now += rng.next_below(100_000);
+            if rng.chance(0.3) {
+                rc.on_cnp(now);
+            }
+            let r = rc.rate_gbps(now);
+            assert!((1.0..=100.0).contains(&r), "rate {r}");
+        }
+    }
+}

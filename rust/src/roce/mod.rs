@@ -1,0 +1,22 @@
+//! The RoCEv2 baseline (paper §3.3's comparison platform).
+//!
+//! RoCE's cost structure is what NetDAM eliminates, so the baseline models
+//! it explicitly:
+//!
+//! * the **host path** — PCIe doorbells/DMA, DRAM, interrupt jitter —
+//!   comes from [`crate::host::HostModel`];
+//! * **go-back-N** ([`qp::GoBackN`]) — RoCE's loss recovery, which is why
+//!   it wants lossless Ethernet/PFC: one drop rewinds the window;
+//! * **DCQCN-lite** ([`dcqcn::RateController`]) — ECN-driven rate control
+//!   (reference [14]), the congestion machinery NetDAM's deterministic
+//!   latency + receiver-paced READs make unnecessary;
+//! * [`responder::RoceResponder`] — a host app serving remote READ/WRITE
+//!   like an RDMA NIC would, for the E1 latency comparison.
+
+pub mod dcqcn;
+pub mod qp;
+pub mod responder;
+
+pub use dcqcn::RateController;
+pub use qp::{GoBackN, TxEvent};
+pub use responder::RoceResponder;

@@ -1,0 +1,186 @@
+//! Go-back-N sender state (one RC queue pair, simplified).
+//!
+//! RoCE RC transports retransmit from the first unacknowledged PSN on a
+//! NAK or timeout — everything after the loss is resent even if it
+//! arrived. This is the behaviour that makes RoCE demand lossless
+//! Ethernet (PFC), and the contrast with NetDAM's idempotent-retransmit
+//! model (E5): under the same loss rate, go-back-N wastes a window per
+//! drop where NetDAM re-sends exactly the lost operation.
+
+use std::collections::VecDeque;
+
+/// What the sender should put on the wire next.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TxEvent {
+    /// Transmit PSN (fresh or retransmit).
+    Send { psn: u64, retransmit: bool },
+    /// Window full / nothing to do.
+    Idle,
+}
+
+#[derive(Debug)]
+pub struct GoBackN {
+    /// Next fresh PSN to send.
+    next_psn: u64,
+    /// Lowest unacked PSN.
+    base: u64,
+    /// Total PSNs to send (message length in packets).
+    total: u64,
+    /// Send window (packets).
+    window: u64,
+    /// Rewind queue after a NAK/timeout: PSNs to resend in order.
+    rewind: VecDeque<u64>,
+    pub retransmitted: u64,
+}
+
+impl GoBackN {
+    pub fn new(total: u64, window: u64) -> Self {
+        assert!(window > 0);
+        Self {
+            next_psn: 0,
+            base: 0,
+            total,
+            window,
+            rewind: VecDeque::new(),
+            retransmitted: 0,
+        }
+    }
+
+    /// Ask for the next transmission opportunity.
+    pub fn next_tx(&mut self) -> TxEvent {
+        if let Some(psn) = self.rewind.pop_front() {
+            self.retransmitted += 1;
+            return TxEvent::Send {
+                psn,
+                retransmit: true,
+            };
+        }
+        if self.next_psn < self.total && self.next_psn < self.base + self.window {
+            let psn = self.next_psn;
+            self.next_psn += 1;
+            return TxEvent::Send {
+                psn,
+                retransmit: false,
+            };
+        }
+        TxEvent::Idle
+    }
+
+    /// Cumulative ACK up to and including `psn`.
+    pub fn ack(&mut self, psn: u64) {
+        if psn >= self.base {
+            self.base = psn + 1;
+        }
+    }
+
+    /// NAK at `psn` (receiver saw a gap): rewind — resend `psn..next_psn`.
+    pub fn nak(&mut self, psn: u64) {
+        if psn < self.base {
+            return; // stale
+        }
+        self.rewind.clear();
+        for p in psn..self.next_psn {
+            self.rewind.push_back(p);
+        }
+    }
+
+    /// Timeout with nothing acked: rewind the whole window.
+    pub fn timeout(&mut self) {
+        self.nak(self.base);
+    }
+
+    pub fn done(&self) -> bool {
+        self.base >= self.total
+    }
+
+    pub fn in_flight(&self) -> u64 {
+        self.next_psn - self.base
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn drain_sends(q: &mut GoBackN, n: usize) -> Vec<u64> {
+        let mut out = Vec::new();
+        for _ in 0..n {
+            match q.next_tx() {
+                TxEvent::Send { psn, .. } => out.push(psn),
+                TxEvent::Idle => break,
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn window_limits_in_flight() {
+        let mut q = GoBackN::new(100, 4);
+        assert_eq!(drain_sends(&mut q, 10), vec![0, 1, 2, 3]);
+        assert_eq!(q.next_tx(), TxEvent::Idle);
+        q.ack(1);
+        assert_eq!(drain_sends(&mut q, 10), vec![4, 5]);
+    }
+
+    #[test]
+    fn completes_in_order() {
+        let mut q = GoBackN::new(3, 8);
+        drain_sends(&mut q, 3);
+        q.ack(2);
+        assert!(q.done());
+        assert_eq!(q.next_tx(), TxEvent::Idle);
+    }
+
+    #[test]
+    fn nak_rewinds_everything_after_loss() {
+        let mut q = GoBackN::new(10, 8);
+        drain_sends(&mut q, 6); // sent 0..6
+        q.ack(1); // 0,1 acked
+        q.nak(3); // 3 lost: must resend 3,4,5
+        let resent = drain_sends(&mut q, 3);
+        assert_eq!(resent, vec![3, 4, 5]);
+        assert_eq!(q.retransmitted, 3);
+        // Then fresh ones continue.
+        match q.next_tx() {
+            TxEvent::Send { psn: 6, retransmit: false } => {}
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn timeout_rewinds_window() {
+        let mut q = GoBackN::new(5, 8);
+        drain_sends(&mut q, 5);
+        q.timeout();
+        assert_eq!(drain_sends(&mut q, 5), vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn stale_nak_ignored() {
+        let mut q = GoBackN::new(5, 8);
+        drain_sends(&mut q, 5);
+        q.ack(4);
+        q.nak(2);
+        assert!(q.done());
+        assert_eq!(q.next_tx(), TxEvent::Idle);
+    }
+
+    #[test]
+    fn goback_n_wastes_a_window_vs_selective() {
+        // The E5 contrast quantified: 1 loss in a 64-window costs ~window
+        // retransmissions for go-back-N vs exactly 1 for NetDAM's
+        // idempotent re-send.
+        let mut q = GoBackN::new(128, 64);
+        drain_sends(&mut q, 64);
+        q.ack(30);
+        q.nak(32); // one loss at 32
+        let mut resent = 0;
+        loop {
+            match q.next_tx() {
+                TxEvent::Send { retransmit: true, .. } => resent += 1,
+                _ => break,
+            }
+        }
+        assert_eq!(resent, 32); // 32..64 all resent for one drop
+    }
+}

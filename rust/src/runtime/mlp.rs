@@ -1,0 +1,158 @@
+//! Data-parallel MLP training harness over the AOT artifacts.
+//!
+//! Each worker executes the `mlp_grad` artifact (fwd/bwd through PJRT);
+//! the *gradient allreduce* between workers is the part NetDAM
+//! accelerates, and `examples/train_dataparallel.rs` routes it through
+//! the simulated fabric. Parameter updates go through the `sgd_apply`
+//! artifact — i.e. the Pallas SIMD kernels — closing the loop on the
+//! paper's "in-memory optimizer" direction.
+
+use anyhow::{anyhow, Result};
+
+use super::{Runtime, ALU_CHUNK, LANES};
+
+/// MLP geometry, read from `abi.txt` at open time.
+#[derive(Debug, Clone, Copy)]
+pub struct MlpShape {
+    pub d_in: usize,
+    pub d_h: usize,
+    pub d_out: usize,
+    pub batch: usize,
+}
+
+impl MlpShape {
+    /// Flat lengths of (w1, b1, w2, b2).
+    pub fn param_lens(&self) -> [usize; 4] {
+        [
+            self.d_in * self.d_h,
+            self.d_h,
+            self.d_h * self.d_out,
+            self.d_out,
+        ]
+    }
+
+    pub fn n_params(&self) -> usize {
+        self.param_lens().iter().sum()
+    }
+}
+
+/// One training worker (or the leader applying updates).
+pub struct MlpTrainer {
+    rt: Runtime,
+    pub shape: MlpShape,
+    /// Flat parameters in (w1, b1, w2, b2) order.
+    pub params: Vec<Vec<f32>>,
+}
+
+impl MlpTrainer {
+    pub fn open(dir: impl AsRef<std::path::Path>) -> Result<MlpTrainer> {
+        let dir = dir.as_ref();
+        let abi = std::fs::read_to_string(dir.join("abi.txt"))?;
+        let mut shape = MlpShape {
+            d_in: 0,
+            d_h: 0,
+            d_out: 0,
+            batch: 0,
+        };
+        for line in abi.lines() {
+            let f: Vec<&str> = line.split_whitespace().collect();
+            match f.as_slice() {
+                ["mlp", a, b, c] => {
+                    shape.d_in = a.parse()?;
+                    shape.d_h = b.parse()?;
+                    shape.d_out = c.parse()?;
+                }
+                ["train_batch", v] => shape.batch = v.parse()?,
+                _ => {}
+            }
+        }
+        anyhow::ensure!(shape.d_in > 0 && shape.batch > 0, "abi.txt missing mlp/batch");
+        let mut rt = Runtime::open(dir)?;
+        // Initialize parameters from the artifact (identical to python).
+        let outs = rt.exec("mlp_init", &[])?;
+        anyhow::ensure!(outs.len() == 4, "mlp_init must return 4 params");
+        let params = outs
+            .iter()
+            .map(|l| l.to_vec::<f32>().map_err(|e| anyhow!("param: {e:?}")))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(MlpTrainer { rt, shape, params })
+    }
+
+    /// Generate the deterministic batch for `step` (same stream the
+    /// python oracle trains on).
+    pub fn batch(&mut self, step: u32) -> Result<(xla::Literal, xla::Literal)> {
+        let step_lit = xla::Literal::from(step);
+        let mut outs = self.rt.exec("mlp_batch", &[step_lit])?;
+        let y = outs.pop().unwrap();
+        let x = outs.pop().unwrap();
+        Ok((x, y))
+    }
+
+    /// Forward/backward on the worker's current params; returns flat
+    /// gradients in param order + the scalar loss.
+    pub fn grad_step(&mut self, x: &xla::Literal, y: &xla::Literal) -> Result<(Vec<Vec<f32>>, f32)> {
+        let lens = self.shape.param_lens();
+        let args = vec![
+            xla::Literal::vec1(&self.params[0])
+                .reshape(&[self.shape.d_in as i64, self.shape.d_h as i64])
+                .map_err(|e| anyhow!("reshape w1: {e:?}"))?,
+            xla::Literal::vec1(&self.params[1]),
+            xla::Literal::vec1(&self.params[2])
+                .reshape(&[self.shape.d_h as i64, self.shape.d_out as i64])
+                .map_err(|e| anyhow!("reshape w2: {e:?}"))?,
+            xla::Literal::vec1(&self.params[3]),
+            x.clone(),
+            y.clone(),
+        ];
+        let outs = self.rt.exec("mlp_grad", &args)?;
+        anyhow::ensure!(outs.len() == 5, "mlp_grad returns 4 grads + loss");
+        let mut grads = Vec::with_capacity(4);
+        for (i, l) in outs[..4].iter().enumerate() {
+            let g = l.to_vec::<f32>().map_err(|e| anyhow!("grad {i}: {e:?}"))?;
+            anyhow::ensure!(g.len() == lens[i], "grad {i} length");
+            grads.push(g);
+        }
+        let loss = outs[4].to_vec::<f32>().map_err(|e| anyhow!("loss: {e:?}"))?[0];
+        Ok((grads, loss))
+    }
+
+    /// Apply `p ← p − lr·g` through the `sgd_apply` Pallas artifact.
+    /// Parameters shorter than the artifact's block count are zero-padded.
+    pub fn sgd_apply(&mut self, grads: &[Vec<f32>], lr: f32) -> Result<()> {
+        let sgd_len = {
+            // artifact is sized for the largest parameter (w1).
+            let w1 = self.shape.d_in * self.shape.d_h;
+            w1.div_ceil(LANES) * LANES
+        };
+        let neg_lr = vec![-lr; LANES];
+        for (p, g) in self.params.iter_mut().zip(grads.iter()) {
+            let mut pw = vec![0f32; sgd_len];
+            let mut gw = vec![0f32; sgd_len];
+            pw[..p.len()].copy_from_slice(p);
+            gw[..g.len()].copy_from_slice(g);
+            let args = vec![
+                xla::Literal::vec1(&pw),
+                xla::Literal::vec1(&gw),
+                xla::Literal::vec1(&neg_lr)
+                    .reshape(&[1, LANES as i64])
+                    .map_err(|e| anyhow!("reshape lr: {e:?}"))?,
+            ];
+            let outs = self.rt.exec("sgd_apply", &args)?;
+            let new_p = outs[0]
+                .to_vec::<f32>()
+                .map_err(|e| anyhow!("sgd out: {e:?}"))?;
+            let n = p.len();
+            p.copy_from_slice(&new_p[..n]);
+        }
+        let _ = ALU_CHUNK;
+        Ok(())
+    }
+
+    /// The python oracle's loss curve (written at `make artifacts` time).
+    pub fn reference_curve(dir: impl AsRef<std::path::Path>) -> Result<Vec<f32>> {
+        let text = std::fs::read_to_string(dir.as_ref().join("reference_curve.txt"))?;
+        text.lines()
+            .map(|l| l.trim().parse::<f32>().map_err(Into::into))
+            .collect()
+    }
+}

@@ -1,0 +1,198 @@
+//! The PJRT runtime: loads the AOT-compiled HLO artifacts and executes
+//! them from rust. Python never runs at request time — `make artifacts`
+//! is the only python step, and the `netdam` binary is self-contained
+//! afterwards.
+//!
+//! * [`Runtime`] — PJRT CPU client + a compile-once executable cache over
+//!   `artifacts/*.hlo.txt` (manifest-driven).
+//! * [`XlaAlu`] — an [`crate::alu::AluBackend`] that runs the device ALU
+//!   through the compiled Pallas kernels (the L1→L3 integration).
+//! * [`mlp`] — the training-step harness for the data-parallel example.
+
+pub mod mlp;
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::alu::{AluBackend, NativeAlu};
+use crate::isa::SimdOp;
+
+/// Lanes per Pallas block (must match `kernels.LANES`; checked vs abi.txt).
+pub const LANES: usize = 2048;
+/// Blocks per ALU artifact invocation (`aot.ALU_BLOCKS`).
+pub const ALU_BLOCKS: usize = 8;
+/// Flat element count per ALU artifact call.
+pub const ALU_CHUNK: usize = LANES * ALU_BLOCKS;
+
+/// Compile-once, execute-many PJRT wrapper.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Runtime {
+    /// Open the artifact directory (validates `abi.txt`).
+    pub fn open(dir: impl AsRef<Path>) -> Result<Runtime> {
+        let dir = dir.as_ref().to_path_buf();
+        let abi = std::fs::read_to_string(dir.join("abi.txt"))
+            .with_context(|| format!("reading {}/abi.txt — run `make artifacts`", dir.display()))?;
+        for line in abi.lines() {
+            let mut it = line.split_whitespace();
+            match (it.next(), it.next()) {
+                (Some("lanes"), Some(v)) => {
+                    let v: usize = v.parse()?;
+                    if v != LANES {
+                        bail!("artifact lanes {v} != runtime LANES {LANES}");
+                    }
+                }
+                (Some("alu_blocks"), Some(v)) => {
+                    let v: usize = v.parse()?;
+                    if v != ALU_BLOCKS {
+                        bail!("artifact alu_blocks {v} != runtime ALU_BLOCKS {ALU_BLOCKS}");
+                    }
+                }
+                _ => {}
+            }
+        }
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(Runtime {
+            client,
+            dir,
+            cache: HashMap::new(),
+        })
+    }
+
+    /// Default location relative to the repo root.
+    pub fn open_default() -> Result<Runtime> {
+        Self::open("artifacts")
+    }
+
+    /// Compile (or fetch) the named artifact.
+    fn executable(&mut self, name: &str) -> Result<&xla::PjRtLoadedExecutable> {
+        if !self.cache.contains_key(name) {
+            let path = self.dir.join(format!("{name}.hlo.txt"));
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
+            self.cache.insert(name.to_string(), exe);
+        }
+        Ok(&self.cache[name])
+    }
+
+    /// Execute `name` over the given literals; returns the untupled
+    /// outputs (artifacts are lowered with `return_tuple=True`).
+    pub fn exec(&mut self, name: &str, args: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let exe = self.executable(name)?;
+        let result = exe
+            .execute::<xla::Literal>(args)
+            .map_err(|e| anyhow!("executing {name}: {e:?}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching {name} result: {e:?}"))?;
+        lit.to_tuple().map_err(|e| anyhow!("untupling {name}: {e:?}"))
+    }
+
+    /// Convenience: run a flat-f32 → flat-f32 artifact.
+    pub fn exec_f32(&mut self, name: &str, args: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
+        let lits: Vec<xla::Literal> = args.iter().map(|a| xla::Literal::vec1(a)).collect();
+        let outs = self.exec(name, &lits)?;
+        outs.iter()
+            .map(|l| l.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}")))
+            .collect()
+    }
+
+    pub fn artifact_names(&self) -> Result<Vec<String>> {
+        let manifest = std::fs::read_to_string(self.dir.join("manifest.txt"))?;
+        Ok(manifest
+            .lines()
+            .filter_map(|l| l.split_whitespace().next())
+            .map(str::to_string)
+            .collect())
+    }
+}
+
+/// ALU backend executing the compiled Pallas kernels through PJRT.
+///
+/// Arbitrary lane counts are processed in `ALU_CHUNK` slices; the ragged
+/// tail is zero-padded (padding lanes are discarded on the way out).
+pub struct XlaAlu {
+    rt: Runtime,
+    /// Artifact invocations served (perf counter for the simd bench).
+    pub calls: u64,
+}
+
+impl XlaAlu {
+    pub fn new(rt: Runtime) -> Self {
+        Self { rt, calls: 0 }
+    }
+
+    pub fn open_default() -> Result<Self> {
+        Ok(Self::new(Runtime::open_default()?))
+    }
+
+    fn artifact(op: SimdOp) -> &'static str {
+        match op {
+            SimdOp::Add => "simd_add",
+            SimdOp::Sub => "simd_sub",
+            SimdOp::Mul => "simd_mul",
+            SimdOp::Min => "simd_min",
+            SimdOp::Max => "simd_max",
+            SimdOp::Xor => "simd_xor",
+        }
+    }
+
+    /// Block hash through the compiled kernel (whole chunks only).
+    pub fn hash_blocks(&mut self, x: &[f32]) -> Result<Vec<u32>> {
+        anyhow::ensure!(x.len() == ALU_CHUNK, "hash_blocks wants one full chunk");
+        let outs = self.rt.exec("block_hash", &[xla::Literal::vec1(x)])?;
+        outs[0]
+            .to_vec::<u32>()
+            .map_err(|e| anyhow!("hash result: {e:?}"))
+    }
+}
+
+impl AluBackend for XlaAlu {
+    fn apply(&mut self, op: SimdOp, acc: &mut [f32], operand: &[f32]) {
+        assert_eq!(acc.len(), operand.len(), "SIMD lane count mismatch");
+        let name = Self::artifact(op);
+        let mut off = 0;
+        while off < acc.len() {
+            let n = (acc.len() - off).min(ALU_CHUNK);
+            let mut a = vec![0f32; ALU_CHUNK];
+            let mut b = vec![0f32; ALU_CHUNK];
+            a[..n].copy_from_slice(&acc[off..off + n]);
+            b[..n].copy_from_slice(&operand[off..off + n]);
+            let out = self
+                .rt
+                .exec_f32(name, &[&a, &b])
+                .unwrap_or_else(|e| panic!("XlaAlu {name}: {e}"));
+            acc[off..off + n].copy_from_slice(&out[0][..n]);
+            self.calls += 1;
+            off += n;
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "xla-pallas"
+    }
+}
+
+/// Cross-backend equivalence: the integration seal between L1 and L3.
+/// Bitwise equality is demanded except NaN-vs-NaN (any payload accepted).
+pub fn backends_agree(op: SimdOp, a: &[f32], b: &[f32], xla_alu: &mut XlaAlu) -> bool {
+    let mut native = a.to_vec();
+    NativeAlu::new().apply(op, &mut native, b);
+    let mut xla_v = a.to_vec();
+    xla_alu.apply(op, &mut xla_v, b);
+    native
+        .iter()
+        .zip(xla_v.iter())
+        .all(|(x, y)| x.to_bits() == y.to_bits() || (x.is_nan() && y.is_nan()))
+}

@@ -1,0 +1,272 @@
+//! The event engine.
+//!
+//! `Engine<W>` is generic over a *world* type `W` (the component graph:
+//! devices, switches, hosts). Events are boxed `FnOnce(&mut W, &mut
+//! Engine<W>)` closures: a handler mutates the world and schedules follow-up
+//! events. The engine never borrows the world except while running one
+//! event, so handlers can freely schedule.
+//!
+//! Ordering: min-heap on `(time, seq)` where `seq` is a monotone insertion
+//! counter — simultaneous events run in the order they were scheduled,
+//! which makes runs bit-reproducible regardless of heap internals.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+use super::time::SimTime;
+
+/// Identifier returned by `schedule_*`; usable for cancellation.
+pub type EventId = u64;
+
+/// The boxed event handler type.
+pub type EventFn<W> = Box<dyn FnOnce(&mut W, &mut Engine<W>)>;
+
+struct Entry<W> {
+    time: SimTime,
+    seq: u64,
+    cancelled: bool,
+    f: Option<EventFn<W>>,
+}
+
+impl<W> PartialEq for Entry<W> {
+    fn eq(&self, other: &Self) -> bool {
+        self.time == other.time && self.seq == other.seq
+    }
+}
+impl<W> Eq for Entry<W> {}
+impl<W> PartialOrd for Entry<W> {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl<W> Ord for Entry<W> {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // BinaryHeap is a max-heap; invert to get earliest-first.
+        other
+            .time
+            .cmp(&self.time)
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+/// Deterministic discrete-event engine.
+pub struct Engine<W> {
+    now: SimTime,
+    seq: u64,
+    heap: BinaryHeap<Entry<W>>,
+    cancelled: std::collections::HashSet<EventId>,
+    processed: u64,
+    stopped: bool,
+}
+
+impl<W> Default for Engine<W> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<W> Engine<W> {
+    pub fn new() -> Self {
+        Self {
+            now: 0,
+            seq: 0,
+            heap: BinaryHeap::new(),
+            cancelled: std::collections::HashSet::new(),
+            processed: 0,
+            stopped: false,
+        }
+    }
+
+    /// Current simulation time (ns).
+    #[inline]
+    pub fn now(&self) -> SimTime {
+        self.now
+    }
+
+    /// Number of events executed so far (perf counter for § Perf).
+    pub fn events_processed(&self) -> u64 {
+        self.processed
+    }
+
+    /// Events still pending.
+    pub fn pending(&self) -> usize {
+        self.heap.len()
+    }
+
+    /// Schedule `f` at absolute time `t` (must be `>= now`).
+    pub fn schedule_at<F>(&mut self, t: SimTime, f: F) -> EventId
+    where
+        F: FnOnce(&mut W, &mut Engine<W>) + 'static,
+    {
+        debug_assert!(
+            t >= self.now,
+            "scheduling into the past: t={t} now={}",
+            self.now
+        );
+        let seq = self.seq;
+        self.seq += 1;
+        self.heap.push(Entry {
+            time: t.max(self.now),
+            seq,
+            cancelled: false,
+            f: Some(Box::new(f)),
+        });
+        seq
+    }
+
+    /// Schedule `f` after a relative delay `dt`.
+    pub fn schedule_in<F>(&mut self, dt: SimTime, f: F) -> EventId
+    where
+        F: FnOnce(&mut W, &mut Engine<W>) + 'static,
+    {
+        let t = self.now.saturating_add(dt);
+        self.schedule_at(t, f)
+    }
+
+    /// Cancel a pending event (e.g. a retransmit timer whose ACK arrived).
+    /// Lazy cancellation: the entry stays in the heap and is skipped on pop.
+    pub fn cancel(&mut self, id: EventId) {
+        self.cancelled.insert(id);
+    }
+
+    /// Ask the engine to stop after the current event returns.
+    pub fn stop(&mut self) {
+        self.stopped = true;
+    }
+
+    fn pop_live(&mut self) -> Option<Entry<W>> {
+        while let Some(e) = self.heap.pop() {
+            if e.cancelled || self.cancelled.remove(&e.seq) {
+                continue;
+            }
+            return Some(e);
+        }
+        None
+    }
+
+    /// Run until the queue is empty or `stop()` was called.
+    /// Returns the final simulation time.
+    pub fn run(&mut self, world: &mut W) -> SimTime {
+        while !self.stopped {
+            let Some(mut e) = self.pop_live() else { break };
+            self.now = e.time;
+            self.processed += 1;
+            let f = e.f.take().expect("event fn present");
+            f(world, self);
+        }
+        self.stopped = false;
+        self.now
+    }
+
+    /// Run until simulation time would exceed `deadline` (events at exactly
+    /// `deadline` still run). Pending later events remain queued.
+    pub fn run_until(&mut self, world: &mut W, deadline: SimTime) -> SimTime {
+        while !self.stopped {
+            match self.heap.peek() {
+                Some(e) if e.time <= deadline => {}
+                _ => break,
+            }
+            let Some(mut e) = self.pop_live() else { break };
+            if e.time > deadline {
+                // pop_live may skip past the peeked entry; re-queue.
+                self.heap.push(e);
+                break;
+            }
+            self.now = e.time;
+            self.processed += 1;
+            let f = e.f.take().expect("event fn present");
+            f(world, self);
+        }
+        self.stopped = false;
+        // Clock advances to the deadline even if the queue drained earlier,
+        // so callers can schedule relative to it.
+        self.now = self.now.max(deadline);
+        self.now
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[derive(Default)]
+    struct World {
+        log: Vec<(SimTime, u32)>,
+    }
+
+    #[test]
+    fn events_run_in_time_order() {
+        let mut eng: Engine<World> = Engine::new();
+        let mut w = World::default();
+        eng.schedule_at(30, |w, e| w.log.push((e.now(), 3)));
+        eng.schedule_at(10, |w, e| w.log.push((e.now(), 1)));
+        eng.schedule_at(20, |w, e| w.log.push((e.now(), 2)));
+        eng.run(&mut w);
+        assert_eq!(w.log, vec![(10, 1), (20, 2), (30, 3)]);
+    }
+
+    #[test]
+    fn ties_break_by_insertion_order() {
+        let mut eng: Engine<World> = Engine::new();
+        let mut w = World::default();
+        for i in 0..10 {
+            eng.schedule_at(5, move |w, e| w.log.push((e.now(), i)));
+        }
+        eng.run(&mut w);
+        let order: Vec<u32> = w.log.iter().map(|&(_, i)| i).collect();
+        assert_eq!(order, (0..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn handlers_can_schedule_follow_ups() {
+        let mut eng: Engine<World> = Engine::new();
+        let mut w = World::default();
+        eng.schedule_at(1, |_, e| {
+            e.schedule_in(4, |w: &mut World, e: &mut Engine<World>| {
+                w.log.push((e.now(), 99))
+            });
+        });
+        let end = eng.run(&mut w);
+        assert_eq!(w.log, vec![(5, 99)]);
+        assert_eq!(end, 5);
+        assert_eq!(eng.events_processed(), 2);
+    }
+
+    #[test]
+    fn cancel_skips_event() {
+        let mut eng: Engine<World> = Engine::new();
+        let mut w = World::default();
+        let id = eng.schedule_at(10, |w, e| w.log.push((e.now(), 1)));
+        eng.schedule_at(20, |w, e| w.log.push((e.now(), 2)));
+        eng.cancel(id);
+        eng.run(&mut w);
+        assert_eq!(w.log, vec![(20, 2)]);
+    }
+
+    #[test]
+    fn run_until_leaves_later_events() {
+        let mut eng: Engine<World> = Engine::new();
+        let mut w = World::default();
+        eng.schedule_at(10, |w, e| w.log.push((e.now(), 1)));
+        eng.schedule_at(100, |w, e| w.log.push((e.now(), 2)));
+        eng.run_until(&mut w, 50);
+        assert_eq!(w.log, vec![(10, 1)]);
+        assert_eq!(eng.pending(), 1);
+        eng.run(&mut w);
+        assert_eq!(w.log, vec![(10, 1), (100, 2)]);
+    }
+
+    #[test]
+    fn stop_halts_mid_run() {
+        let mut eng: Engine<World> = Engine::new();
+        let mut w = World::default();
+        eng.schedule_at(1, |w, e| {
+            w.log.push((e.now(), 1));
+            e.stop();
+        });
+        eng.schedule_at(2, |w, e| w.log.push((e.now(), 2)));
+        eng.run(&mut w);
+        assert_eq!(w.log, vec![(1, 1)]);
+        assert_eq!(eng.pending(), 1);
+    }
+}

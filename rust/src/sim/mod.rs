@@ -1,0 +1,18 @@
+//! Deterministic discrete-event simulation (DES) core.
+//!
+//! Every hardware component the paper's testbed provides — FPGA pipeline,
+//! HBM, 100G links, the Nexus switch, host NICs/PCIe — is modeled as event
+//! handlers scheduled on this engine. Time is `u64` nanoseconds (the paper
+//! reports latencies in ns; 1 ns resolution also cleanly expresses 100G
+//! serialization: 1 byte = 0.08 ns, so we track *picosecond* residue in the
+//! link models and round there, keeping the global clock integral).
+//!
+//! Determinism contract: given the same seed and the same sequence of
+//! `schedule` calls, a run is bit-reproducible. Ties in time break by
+//! insertion order (a monotone sequence number), never by heap internals.
+
+mod engine;
+mod time;
+
+pub use engine::{Engine, EventFn, EventId};
+pub use time::{fmt_ns, SimTime, GBPS, MICROS, MILLIS, SECS};

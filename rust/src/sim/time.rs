@@ -1,0 +1,82 @@
+//! Simulation time: u64 nanoseconds with helpers for rates and units.
+
+/// Nanoseconds since simulation start.
+pub type SimTime = u64;
+
+/// One microsecond in [`SimTime`] units.
+pub const MICROS: SimTime = 1_000;
+/// One millisecond.
+pub const MILLIS: SimTime = 1_000_000;
+/// One second.
+pub const SECS: SimTime = 1_000_000_000;
+
+/// Serialization helpers for a line rate expressed in Gbit/s.
+///
+/// 100G Ethernet moves 12.5 bytes/ns; a 64 B frame takes 5.12 ns. We keep
+/// sub-ns residue by computing in picoseconds and letting the caller
+/// accumulate (see `net::Link`), so back-to-back frames don't drift.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct GBPS(pub f64);
+
+impl GBPS {
+    /// Picoseconds to serialize `bytes` at this rate (exact to 1 ps).
+    #[inline]
+    pub fn ser_ps(&self, bytes: usize) -> u64 {
+        // bits * 1000 / gbps = ps
+        ((bytes as u64 * 8) as f64 * 1000.0 / self.0).round() as u64
+    }
+
+    /// Nanoseconds (rounded) to serialize `bytes` — convenience for tests.
+    #[inline]
+    pub fn ser_ns(&self, bytes: usize) -> SimTime {
+        (self.ser_ps(bytes) + 500) / 1000
+    }
+
+    /// Bytes per nanosecond.
+    #[inline]
+    pub fn bytes_per_ns(&self) -> f64 {
+        self.0 / 8.0
+    }
+}
+
+/// Render a [`SimTime`] human-readably (used by the table printers).
+pub fn fmt_ns(t: SimTime) -> String {
+    if t >= SECS {
+        format!("{:.3} s", t as f64 / SECS as f64)
+    } else if t >= MILLIS {
+        format!("{:.3} ms", t as f64 / MILLIS as f64)
+    } else if t >= MICROS {
+        format!("{:.3} us", t as f64 / MICROS as f64)
+    } else {
+        format!("{t} ns")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn serialization_100g() {
+        let r = GBPS(100.0);
+        // 64B @ 100G = 5.12 ns = 5120 ps
+        assert_eq!(r.ser_ps(64), 5120);
+        assert_eq!(r.ser_ns(64), 5);
+        // 9000B jumbo = 720 ns
+        assert_eq!(r.ser_ns(9000), 720);
+    }
+
+    #[test]
+    fn serialization_is_linear() {
+        let r = GBPS(25.0);
+        assert_eq!(r.ser_ps(2000), 2 * r.ser_ps(1000));
+    }
+
+    #[test]
+    fn fmt_spans_units() {
+        assert_eq!(fmt_ns(618), "618 ns");
+        assert_eq!(fmt_ns(2 * MICROS + 500), "2.500 us");
+        assert_eq!(fmt_ns(400 * MILLIS), "400.000 ms");
+        assert_eq!(fmt_ns(2 * SECS + 100 * MILLIS), "2.100 s");
+    }
+}

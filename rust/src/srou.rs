@@ -1,0 +1,134 @@
+//! SROU path planning (paper §2.3 and the Ruta draft).
+//!
+//! The *header* lives in [`crate::wire::srou_hdr`]; this module builds the
+//! segment lists: ring chains for the collectives (§3), spine-pinned
+//! multipath plans (E4), and general function-chaining for DAG dataflow.
+
+use crate::wire::{DeviceIp, Segment, SrouHeader};
+
+/// Segment list that walks `ips[start+1], ips[start+2], ... , ips[start+k]`
+/// around a logical ring (the reduce-scatter chain for the chunk owned by
+/// rank `start`). `k = ips.len()-1` visits every *other* rank once.
+pub fn ring_chain(ips: &[DeviceIp], start: usize, hops: usize) -> SrouHeader {
+    // `hops` may exceed the ring size: the fused allreduce walks the ring
+    // almost twice (2·(N−1) hops). Only the wire header caps the length.
+    assert!(!ips.is_empty() && hops >= 1);
+    assert!(
+        hops <= crate::wire::srou_hdr::MAX_SEGMENTS,
+        "{hops} hops exceed the SROU stack"
+    );
+    let n = ips.len();
+    let segs: Vec<Segment> = (1..=hops)
+        .map(|i| Segment::to(ips[(start + i) % n]))
+        .collect();
+    SrouHeader::through(segs)
+}
+
+/// Full ring for rank `start`: every other rank exactly once (N−1 hops).
+pub fn full_ring(ips: &[DeviceIp], start: usize) -> SrouHeader {
+    ring_chain(ips, start, ips.len() - 1)
+}
+
+/// A source-routed multipath plan: packet `i` is pinned through
+/// `spines[i % spines.len()]` on its way to `dst` — per-packet spraying
+/// decided at the *source*, the paper's alternative to in-fabric ECMP.
+#[derive(Debug, Clone)]
+pub struct SprayPlan {
+    spines: Vec<DeviceIp>,
+    next: usize,
+}
+
+impl SprayPlan {
+    pub fn new(spines: Vec<DeviceIp>) -> Self {
+        assert!(!spines.is_empty());
+        Self { spines, next: 0 }
+    }
+
+    /// The path for the next packet toward `dst`.
+    pub fn path(&mut self, dst: DeviceIp) -> SrouHeader {
+        let spine = self.spines[self.next];
+        self.next = (self.next + 1) % self.spines.len();
+        SrouHeader::through(vec![Segment::to(spine), Segment::to(dst)])
+    }
+
+    /// Pin every packet through one fixed spine (the "single path" arm of
+    /// experiment E4).
+    pub fn pinned(spine: DeviceIp, dst: DeviceIp) -> SrouHeader {
+        SrouHeader::through(vec![Segment::to(spine), Segment::to(dst)])
+    }
+}
+
+/// Chain arbitrary (node, function) pairs — the DAG / dataflow use case
+/// ("Segment Routing Header could be a chaining function to processing
+/// packet on different node").
+pub fn chain(stages: &[(DeviceIp, u16)]) -> SrouHeader {
+    SrouHeader::through(
+        stages
+            .iter()
+            .map(|&(ip, f)| Segment::call(ip, f))
+            .collect(),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ips(n: u8) -> Vec<DeviceIp> {
+        (1..=n).map(DeviceIp::lan).collect()
+    }
+
+    #[test]
+    fn full_ring_visits_everyone_once() {
+        let v = ips(4);
+        let h = full_ring(&v, 0);
+        let visited: Vec<DeviceIp> = h.segments.iter().map(|s| s.node).collect();
+        assert_eq!(visited, vec![v[1], v[2], v[3]]);
+    }
+
+    #[test]
+    fn ring_wraps_around() {
+        let v = ips(4);
+        let h = full_ring(&v, 2);
+        let visited: Vec<DeviceIp> = h.segments.iter().map(|s| s.node).collect();
+        assert_eq!(visited, vec![v[3], v[0], v[1]]);
+    }
+
+    #[test]
+    fn every_start_covers_all_other_ranks() {
+        let v = ips(7);
+        for start in 0..7 {
+            let h = full_ring(&v, start);
+            let mut seen: Vec<u32> = h.segments.iter().map(|s| s.node.0).collect();
+            seen.sort_unstable();
+            let mut expect: Vec<u32> =
+                (0..7).filter(|&i| i != start).map(|i| v[i].0).collect();
+            expect.sort_unstable();
+            assert_eq!(seen, expect);
+        }
+    }
+
+    #[test]
+    fn spray_alternates_spines() {
+        let mut plan = SprayPlan::new(vec![DeviceIp::lan(201), DeviceIp::lan(202)]);
+        let d = DeviceIp::lan(9);
+        let p1 = plan.path(d);
+        let p2 = plan.path(d);
+        let p3 = plan.path(d);
+        assert_eq!(p1.segments[0].node, DeviceIp::lan(201));
+        assert_eq!(p2.segments[0].node, DeviceIp::lan(202));
+        assert_eq!(p3.segments[0].node, DeviceIp::lan(201));
+        // All terminate at dst.
+        for p in [p1, p2, p3] {
+            assert_eq!(p.segments.last().unwrap().node, d);
+        }
+    }
+
+    #[test]
+    fn chain_carries_functions() {
+        let h = chain(&[(DeviceIp::lan(2), 7), (DeviceIp::lan(3), 9)]);
+        assert_eq!(h.segments[0].func, 7);
+        assert_eq!(h.segments[1].func, 9);
+        assert_eq!(h.hops_remaining(), 2);
+    }
+}

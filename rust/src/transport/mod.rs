@@ -1,0 +1,22 @@
+//! Transport-layer mechanisms (paper §2.3).
+//!
+//! NetDAM's transport choices are deliberately *à la carte*:
+//!
+//! * **Reliable transmit is optional** — idempotent operators simply
+//!   retransmit on timeout ([`reliability::ReliabilityTable`]); there is
+//!   no go-back-N and no lossless-Ethernet/PFC requirement.
+//! * **Relaxed ordering by default** — commutative SIMD ops execute
+//!   out-of-order; an optional receive-side [`reorder::ReorderBuffer`]
+//!   restores sequence order for flows that set `Flags::ORDERED`.
+//! * **Rate-limited READ pull** ([`rate::TokenBucket`]) — the receiver
+//!   paces its own reads from the block-interleaved pool, which is how
+//!   the paper dissolves incast without a congestion-control protocol
+//!   (§2.5, experiment E3).
+
+pub mod rate;
+pub mod reliability;
+pub mod reorder;
+
+pub use rate::TokenBucket;
+pub use reliability::{PendingKey, ReliabilityTable, RetryVerdict};
+pub use reorder::ReorderBuffer;

@@ -1,0 +1,96 @@
+//! Token-bucket pacing for receiver-driven READ pull (§2.5).
+//!
+//! "the receiving host could pull them back from global memory pool based
+//! sequencing and rate-limited READ command, the incast problem can be
+//! easily avoid without complex congestion control mechanism."
+//!
+//! The bucket is expressed in bytes so the puller can pace to a fraction
+//! of its line rate regardless of packet size mix.
+
+use crate::sim::SimTime;
+
+#[derive(Debug, Clone)]
+pub struct TokenBucket {
+    /// Fill rate in bytes per ns.
+    rate: f64,
+    /// Burst capacity in bytes.
+    burst: f64,
+    tokens: f64,
+    last_ns: SimTime,
+}
+
+impl TokenBucket {
+    /// `gbps` fill rate with `burst` bytes of depth.
+    pub fn new(gbps: f64, burst: usize) -> Self {
+        Self {
+            rate: gbps / 8.0,
+            burst: burst as f64,
+            tokens: burst as f64,
+            last_ns: 0,
+        }
+    }
+
+    fn refill(&mut self, now: SimTime) {
+        let dt = now.saturating_sub(self.last_ns);
+        self.tokens = (self.tokens + dt as f64 * self.rate).min(self.burst);
+        self.last_ns = now;
+    }
+
+    /// Try to spend `bytes` at `now`. On failure returns the time at which
+    /// the bucket will have enough tokens (callers re-arm a timer there).
+    pub fn try_take(&mut self, now: SimTime, bytes: usize) -> Result<(), SimTime> {
+        self.refill(now);
+        let need = bytes as f64;
+        if self.tokens >= need {
+            self.tokens -= need;
+            Ok(())
+        } else {
+            let wait = ((need - self.tokens) / self.rate).ceil() as SimTime;
+            Err(now + wait.max(1))
+        }
+    }
+
+    pub fn tokens(&self) -> f64 {
+        self.tokens
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn burst_then_paced() {
+        // 80 Gbps = 10 B/ns, burst 9000.
+        let mut tb = TokenBucket::new(80.0, 9000);
+        assert!(tb.try_take(0, 9000).is_ok());
+        // Immediately again: need 9000 bytes = 900ns of refill.
+        match tb.try_take(0, 9000) {
+            Err(at) => assert_eq!(at, 900),
+            Ok(()) => panic!("should have paced"),
+        }
+        assert!(tb.try_take(900, 9000).is_ok());
+    }
+
+    #[test]
+    fn tokens_cap_at_burst() {
+        let mut tb = TokenBucket::new(80.0, 1000);
+        assert!(tb.try_take(1_000_000, 1000).is_ok());
+        assert!(tb.try_take(1_000_001, 1000).is_err(), "no over-accumulation");
+    }
+
+    #[test]
+    fn steady_state_matches_rate() {
+        let mut tb = TokenBucket::new(8.0, 1500); // 1 B/ns
+        let mut now = 0;
+        let mut sent = 0usize;
+        while now < 1_000_000 {
+            match tb.try_take(now, 1500) {
+                Ok(()) => sent += 1500,
+                Err(at) => now = at,
+            }
+        }
+        let rate = sent as f64 / 1_000_000.0;
+        assert!((rate - 1.0).abs() < 0.01, "achieved {rate} B/ns");
+    }
+}

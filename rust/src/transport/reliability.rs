@@ -1,0 +1,172 @@
+//! Timeout-retransmit reliability for idempotent operations.
+//!
+//! The table tracks outstanding request packets keyed by (origin node,
+//! sequence). A completion delivered back to the origin clears the entry;
+//! a timer firing on a still-pending entry yields the packet to re-send.
+//! Because every retried instruction is idempotent (plain WRITE, READ,
+//! hash-guarded WRITE, interim reduce-scatter), duplicates are harmless —
+//! that is the paper's §3.1 argument, and test E5 injects loss to prove it.
+
+use std::collections::HashMap;
+
+use crate::net::NodeId;
+use crate::sim::SimTime;
+use crate::wire::Packet;
+
+/// (origin node, sequence number).
+pub type PendingKey = (NodeId, u64);
+
+#[derive(Debug)]
+struct Pending {
+    pkt: Packet,
+    retries: u32,
+    /// Epoch guard: timers from before the latest (re)send are stale.
+    epoch: u32,
+}
+
+/// What to do when a retransmit timer fires.
+#[derive(Debug, PartialEq)]
+pub enum RetryVerdict {
+    /// Already acked (or stale timer) — nothing to do.
+    Done,
+    /// Re-send this packet and re-arm the timer.
+    Resend(Packet),
+    /// Gave up after max retries.
+    Failed,
+}
+
+#[derive(Debug)]
+pub struct ReliabilityTable {
+    pending: HashMap<PendingKey, Pending>,
+    pub timeout_ns: SimTime,
+    pub max_retries: u32,
+    // --- counters ---
+    pub retransmits: u64,
+    pub failures: u64,
+    pub completed: u64,
+}
+
+impl ReliabilityTable {
+    pub fn new(timeout_ns: SimTime, max_retries: u32) -> Self {
+        Self {
+            pending: HashMap::new(),
+            timeout_ns,
+            max_retries,
+            retransmits: 0,
+            failures: 0,
+            completed: 0,
+        }
+    }
+
+    /// Track an injected packet. Returns the epoch to stamp on the timer.
+    pub fn track(&mut self, origin: NodeId, pkt: Packet) -> u32 {
+        let key = (origin, pkt.seq);
+        let e = self.pending.entry(key).or_insert(Pending {
+            pkt,
+            retries: 0,
+            epoch: 0,
+        });
+        e.epoch
+    }
+
+    /// A completion with `seq` arrived at `origin`.
+    pub fn complete(&mut self, origin: NodeId, seq: u64) -> bool {
+        let hit = self.pending.remove(&(origin, seq)).is_some();
+        if hit {
+            self.completed += 1;
+        }
+        hit
+    }
+
+    /// Retransmit timer for (origin, seq) at `epoch` fired.
+    pub fn on_timeout(&mut self, origin: NodeId, seq: u64, epoch: u32) -> RetryVerdict {
+        let key = (origin, seq);
+        let Some(p) = self.pending.get_mut(&key) else {
+            return RetryVerdict::Done;
+        };
+        if p.epoch != epoch {
+            return RetryVerdict::Done; // stale timer from an older send
+        }
+        if p.retries >= self.max_retries {
+            self.pending.remove(&key);
+            self.failures += 1;
+            return RetryVerdict::Failed;
+        }
+        p.retries += 1;
+        p.epoch += 1;
+        self.retransmits += 1;
+        RetryVerdict::Resend(p.pkt.clone())
+    }
+
+    /// Epoch of a pending entry (for arming the follow-up timer).
+    pub fn epoch(&self, origin: NodeId, seq: u64) -> Option<u32> {
+        self.pending.get(&(origin, seq)).map(|p| p.epoch)
+    }
+
+    pub fn outstanding(&self) -> usize {
+        self.pending.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::Instruction;
+    use crate::wire::{DeviceIp, SrouHeader};
+
+    fn pkt(seq: u64) -> Packet {
+        Packet::new(
+            DeviceIp::lan(1),
+            seq,
+            SrouHeader::direct(DeviceIp::lan(2)),
+            Instruction::Write { addr: 0 },
+        )
+    }
+
+    #[test]
+    fn ack_before_timeout_completes() {
+        let mut t = ReliabilityTable::new(1000, 3);
+        let epoch = t.track(0, pkt(7));
+        assert!(t.complete(0, 7));
+        assert_eq!(t.on_timeout(0, 7, epoch), RetryVerdict::Done);
+        assert_eq!(t.completed, 1);
+        assert_eq!(t.outstanding(), 0);
+    }
+
+    #[test]
+    fn timeout_resends_until_max() {
+        let mut t = ReliabilityTable::new(1000, 2);
+        let mut epoch = t.track(0, pkt(9));
+        for _ in 0..2 {
+            match t.on_timeout(0, 9, epoch) {
+                RetryVerdict::Resend(p) => assert_eq!(p.seq, 9),
+                v => panic!("expected resend, got {v:?}"),
+            }
+            epoch = t.epoch(0, 9).unwrap();
+        }
+        assert_eq!(t.on_timeout(0, 9, epoch), RetryVerdict::Failed);
+        assert_eq!(t.retransmits, 2);
+        assert_eq!(t.failures, 1);
+    }
+
+    #[test]
+    fn stale_timer_is_ignored() {
+        let mut t = ReliabilityTable::new(1000, 5);
+        let epoch = t.track(0, pkt(3));
+        // First timeout bumps the epoch...
+        assert!(matches!(t.on_timeout(0, 3, epoch), RetryVerdict::Resend(_)));
+        // ...so the original timer firing again is stale.
+        assert_eq!(t.on_timeout(0, 3, epoch), RetryVerdict::Done);
+        assert_eq!(t.retransmits, 1);
+    }
+
+    #[test]
+    fn same_seq_different_origin_is_distinct() {
+        let mut t = ReliabilityTable::new(1000, 3);
+        t.track(0, pkt(5));
+        t.track(1, pkt(5));
+        assert!(t.complete(0, 5));
+        assert_eq!(t.outstanding(), 1);
+        assert!(!t.complete(0, 5), "double complete is a no-op");
+    }
+}

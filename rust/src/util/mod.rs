@@ -1,0 +1,10 @@
+//! Small shared utilities: deterministic PRNGs, byte helpers, statistics,
+//! and a miniature property-testing driver (`prop`) used because `proptest`
+//! is unavailable in this offline build.
+
+pub mod bytes;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+
+pub use rng::{SplitMix64, Xoshiro256};

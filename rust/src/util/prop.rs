@@ -1,0 +1,109 @@
+//! A miniature property-testing driver.
+//!
+//! `proptest` is not available in this offline build, so we provide the
+//! 10% of it the test suite needs: run a property over many seeded random
+//! cases, and on failure report the *seed and case index* so the exact
+//! failing input can be replayed deterministically. There is no shrinking;
+//! generators are encouraged to start small (sizes are drawn
+//! log-uniformly, so small cases are tried often).
+
+use crate::util::rng::Xoshiro256;
+
+/// Configuration for a property run.
+#[derive(Debug, Clone)]
+pub struct Config {
+    /// Base seed; each case derives its own stream from `seed ^ case_index`.
+    pub seed: u64,
+    /// Number of random cases to run.
+    pub cases: u32,
+}
+
+/// Default seed for all property runs ("NetDAM!1" in ASCII).
+const NETDAM_DEFAULT_SEED: u64 = 0x4E65_7444_414D_2131;
+
+impl Default for Config {
+    fn default() -> Self {
+        Self {
+            seed: NETDAM_DEFAULT_SEED,
+            cases: 128,
+        }
+    }
+}
+
+/// Run `property` for `cfg.cases` random cases. The property receives a
+/// per-case RNG and the case index; it should panic (assert) on violation.
+pub fn check_with<F: FnMut(&mut Xoshiro256, u32)>(cfg: Config, mut property: F) {
+    for case in 0..cfg.cases {
+        let mut rng = Xoshiro256::seed_from(cfg.seed ^ (case as u64).wrapping_mul(0x9E37_79B9));
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            property(&mut rng, case)
+        }));
+        if let Err(payload) = result {
+            let msg = payload
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".to_string());
+            panic!(
+                "property failed at case {case}/{} (replay: seed={:#x}): {msg}",
+                cfg.cases, cfg.seed
+            );
+        }
+    }
+}
+
+/// Run with the default config (128 cases, fixed seed).
+pub fn check<F: FnMut(&mut Xoshiro256, u32)>(property: F) {
+    check_with(
+        Config {
+            seed: NETDAM_DEFAULT_SEED,
+            cases: 128,
+        },
+        property,
+    )
+}
+
+/// Draw a size log-uniformly in `[1, max]` — biases coverage toward small
+/// cases (where bugs reproduce quickly) while still exercising large ones.
+pub fn log_size(rng: &mut Xoshiro256, max: usize) -> usize {
+    debug_assert!(max >= 1);
+    let bits = 64 - (max as u64).leading_zeros() as u64; // ceil(log2)+1-ish
+    let b = rng.next_below(bits) + 1;
+    let hi = (1u64 << b).min(max as u64);
+    rng.range_u64(1, hi) as usize
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        check_with(Config { seed: 1, cases: 50 }, |_rng, _i| count += 1);
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed at case")]
+    fn failing_property_reports_case() {
+        check_with(Config { seed: 1, cases: 50 }, |rng, _i| {
+            let v = rng.next_below(10);
+            assert!(v != 3, "hit the forbidden value");
+        });
+    }
+
+    #[test]
+    fn log_size_in_bounds_and_small_biased() {
+        let mut rng = Xoshiro256::seed_from(2);
+        let mut small = 0;
+        for _ in 0..2000 {
+            let s = log_size(&mut rng, 1 << 20);
+            assert!((1..=(1 << 20)).contains(&s));
+            if s <= 64 {
+                small += 1;
+            }
+        }
+        assert!(small > 200, "small sizes should be common, got {small}");
+    }
+}

@@ -1,0 +1,30 @@
+//! The NetDAM wire format (paper §2.2, Figure 3).
+//!
+//! A NetDAM packet rides in UDP/IPv4/Ethernet and carries:
+//!
+//! ```text
+//! | Sequence | Segment Routing Header | Instruction | Address | Data |
+//! ```
+//!
+//! * **Sequence** — packet ordering and (optional) reliable transmit.
+//! * **Segment Routing Header** — SROU: a stack of (device, function)
+//!   segments enabling topology-independent multipath *and* chained
+//!   computation (the DAG/dataflow model; §2.3).
+//! * **Instruction + Address** — see [`crate::isa`]; the address field is
+//!   encoded inside the instruction operands.
+//! * **Data** — up to 9000 B jumbo payload ≈ 2048 × f32 SIMD lanes.
+//!
+//! [`packet::Packet`] is the structured form the simulator passes around;
+//! [`packet::Packet::encode`]/[`decode`](packet::Packet::decode) give the
+//! exact byte representation (tested round-trip + fuzz), and
+//! [`packet::Packet::wire_bytes`] is what the timing models charge.
+
+pub mod frame;
+pub mod packet;
+pub mod payload;
+pub mod srou_hdr;
+
+pub use frame::{DeviceIp, ETH_OVERHEAD, IPV4_HEADER, UDP_HEADER, WIRE_OVERHEAD};
+pub use packet::Packet;
+pub use payload::Payload;
+pub use srou_hdr::{Segment, SrouHeader, FUNC_NONE};

@@ -1,0 +1,256 @@
+//! The NetDAM packet: structured form + exact byte codec.
+
+use anyhow::{bail, Result};
+
+use super::frame::{CarrierHeader, DeviceIp, UDP_HEADER, WIRE_OVERHEAD};
+use super::payload::Payload;
+use super::srou_hdr::SrouHeader;
+use crate::isa::{Flags, Instruction};
+use crate::util::bytes::{Reader, Writer};
+
+/// Maximum NetDAM data payload: 9000 B jumbo frame budget minus carrier
+/// and NetDAM headers leaves room for 2048 × f32 = 8192 B SIMD blocks.
+pub const MAX_PAYLOAD: usize = 8832;
+/// The paper's SIMD block: 2048 × f32.
+pub const SIMD_LANES: usize = 2048;
+pub const SIMD_BLOCK_BYTES: usize = SIMD_LANES * 4;
+
+/// A NetDAM packet as the simulator passes it around.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Packet {
+    /// Source device (fills the IPv4 source on the wire).
+    pub src: DeviceIp,
+    /// Sequence number — ordering + reliable transmit (§2.2).
+    pub seq: u64,
+    /// Segment routing header; `srou.current()` is where it's headed.
+    pub srou: SrouHeader,
+    /// The instruction (includes the Address operand).
+    pub instr: Instruction,
+    pub flags: Flags,
+    /// SIMD data payload.
+    pub payload: Payload,
+}
+
+impl Packet {
+    pub fn new(src: DeviceIp, seq: u64, srou: SrouHeader, instr: Instruction) -> Self {
+        Packet {
+            src,
+            seq,
+            srou,
+            instr,
+            flags: Flags::default(),
+            payload: Payload::empty(),
+        }
+    }
+
+    pub fn with_flags(mut self, flags: Flags) -> Self {
+        self.flags = flags;
+        self
+    }
+
+    pub fn with_payload(mut self, payload: Payload) -> Self {
+        debug_assert!(payload.len() <= MAX_PAYLOAD, "payload exceeds jumbo MTU");
+        self.payload = payload;
+        self
+    }
+
+    /// The device this packet is currently routed toward.
+    pub fn dst(&self) -> Option<DeviceIp> {
+        self.srou.current().map(|s| s.node)
+    }
+
+    /// NetDAM header length (sequence + SROU + instruction + length field).
+    fn netdam_header_len(&self) -> usize {
+        // seq(8) + srou + instr is variable; measure by encoding.
+        let mut w = Writer::with_capacity(64);
+        w.u64(self.seq);
+        self.srou.encode(&mut w);
+        self.instr.encode(self.flags, &mut w);
+        w.u32(0); // payload length field
+        w.len()
+    }
+
+    /// Total bytes this packet occupies on a link, including Ethernet/IP/
+    /// UDP overhead and preamble+IFG — the number the timing model charges.
+    pub fn wire_bytes(&self) -> usize {
+        WIRE_OVERHEAD + self.netdam_header_len() + self.payload.len()
+    }
+
+    /// Encode the full IPv4+UDP+NetDAM byte image (no Ethernet MAC bytes —
+    /// the examples exchange L3 datagrams). Phantom payloads cannot be
+    /// encoded (they exist only inside the DES).
+    pub fn encode(&self) -> Result<Vec<u8>> {
+        let Some(data) = self.payload.bytes() else {
+            bail!("cannot encode a phantom payload to bytes");
+        };
+        let mut body = Writer::with_capacity(64 + data.len());
+        body.u64(self.seq);
+        self.srou.encode(&mut body);
+        self.instr.encode(self.flags, &mut body);
+        body.u32(data.len() as u32);
+        body.bytes(data);
+        let body = body.into_vec();
+
+        let dst = self
+            .dst()
+            .ok_or_else(|| anyhow::anyhow!("packet has no remaining segment"))?;
+        let mut w = Writer::with_capacity(body.len() + 28);
+        CarrierHeader {
+            src: self.src,
+            dst,
+            udp_len: (UDP_HEADER + body.len()) as u16,
+        }
+        .encode(&mut w);
+        w.bytes(&body);
+        Ok(w.into_vec())
+    }
+
+    /// Decode from the byte image produced by [`encode`](Self::encode).
+    pub fn decode(bytes: &[u8]) -> Result<Packet> {
+        let mut r = Reader::new(bytes);
+        let carrier = CarrierHeader::decode(&mut r)?;
+        let seq = r.u64()?;
+        let srou = SrouHeader::decode(&mut r)?;
+        let (instr, flags) = Instruction::decode(&mut r)?;
+        let plen = r.u32()? as usize;
+        if plen > MAX_PAYLOAD {
+            bail!("payload length {plen} exceeds MTU budget");
+        }
+        let data = r.slice(plen)?.to_vec();
+        if r.remaining() != 0 {
+            bail!("{} trailing bytes after payload", r.remaining());
+        }
+        let pkt = Packet {
+            src: carrier.src,
+            seq,
+            srou,
+            instr,
+            flags,
+            payload: Payload::from_bytes(data),
+        };
+        // Cross-check carrier routing against the SROU stack.
+        if let Some(dst) = pkt.dst() {
+            if dst != carrier.dst {
+                bail!("carrier dst {} != SROU current {}", carrier.dst, dst);
+            }
+        }
+        Ok(pkt)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::SimdOp;
+    use crate::wire::srou_hdr::Segment;
+
+    fn ip(x: u8) -> DeviceIp {
+        DeviceIp::lan(x)
+    }
+
+    #[test]
+    fn encode_decode_round_trip() {
+        let pkt = Packet::new(
+            ip(1),
+            42,
+            SrouHeader::through(vec![Segment::call(ip(2), 5), Segment::to(ip(3))]),
+            Instruction::Simd {
+                op: SimdOp::Add,
+                addr: 0x8000,
+            },
+        )
+        .with_flags(Flags(Flags::RELIABLE))
+        .with_payload(Payload::from_f32s(&[1.0, 2.0, 3.0, 4.0]));
+        let bytes = pkt.encode().unwrap();
+        let back = Packet::decode(&bytes).unwrap();
+        assert_eq!(back, pkt);
+    }
+
+    #[test]
+    fn wire_bytes_matches_encoding_plus_l2() {
+        let pkt = Packet::new(
+            ip(1),
+            7,
+            SrouHeader::direct(ip(2)),
+            Instruction::Read { addr: 0, len: 128 },
+        );
+        let encoded = pkt.encode().unwrap().len();
+        // encode() covers IP+UDP+NetDAM; wire adds Ethernet 18 + gap 20.
+        assert_eq!(pkt.wire_bytes(), encoded + 38);
+    }
+
+    #[test]
+    fn simd_read_request_is_small() {
+        // E1's request packet: READ of 32 × f32. The request itself
+        // carries no payload — it must be well under 200 B on the wire.
+        let pkt = Packet::new(
+            ip(1),
+            1,
+            SrouHeader::direct(ip(2)),
+            Instruction::Read { addr: 0, len: 128 },
+        );
+        assert!(pkt.wire_bytes() < 120, "got {}", pkt.wire_bytes());
+    }
+
+    #[test]
+    fn jumbo_block_fits_mtu() {
+        let pkt = Packet::new(
+            ip(1),
+            1,
+            SrouHeader::direct(ip(2)),
+            Instruction::Write { addr: 0 },
+        )
+        .with_payload(Payload::from_bytes(vec![0; SIMD_BLOCK_BYTES]));
+        assert!(pkt.wire_bytes() <= 9000 + 38, "got {}", pkt.wire_bytes());
+    }
+
+    #[test]
+    fn phantom_cannot_encode_but_has_timing() {
+        let pkt = Packet::new(
+            ip(1),
+            1,
+            SrouHeader::direct(ip(2)),
+            Instruction::Write { addr: 0 },
+        )
+        .with_payload(Payload::phantom(8192));
+        assert!(pkt.encode().is_err());
+        assert!(pkt.wire_bytes() > 8192);
+    }
+
+    #[test]
+    fn trailing_garbage_rejected() {
+        let pkt = Packet::new(
+            ip(1),
+            3,
+            SrouHeader::direct(ip(2)),
+            Instruction::Nop,
+        );
+        let mut bytes = pkt.encode().unwrap();
+        bytes.push(0xFF);
+        assert!(Packet::decode(&bytes).is_err());
+    }
+
+    #[test]
+    fn fuzz_decode_never_panics() {
+        let mut rng = crate::util::Xoshiro256::seed_from(0xF077);
+        let base = Packet::new(
+            ip(1),
+            9,
+            SrouHeader::direct(ip(2)),
+            Instruction::Read { addr: 64, len: 32 },
+        )
+        .encode()
+        .unwrap();
+        for _ in 0..2000 {
+            let mut m = base.clone();
+            let idx = rng.next_below(m.len() as u64) as usize;
+            m[idx] ^= (rng.next_u64() & 0xFF) as u8;
+            let _ = Packet::decode(&m); // must not panic
+        }
+        for _ in 0..500 {
+            let n = rng.next_below(128) as usize;
+            let junk: Vec<u8> = (0..n).map(|_| (rng.next_u64() & 0xFF) as u8).collect();
+            let _ = Packet::decode(&junk);
+        }
+    }
+}

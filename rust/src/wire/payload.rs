@@ -1,0 +1,104 @@
+//! Packet payloads: real bytes, or a phantom length.
+//!
+//! The full paper-scale experiment (E2: 2 GiB allreduce) would need ~8 GiB
+//! of payload buffers if every in-flight packet carried real data. The DES
+//! therefore supports two payload modes:
+//!
+//! * [`Payload::Data`] — real bytes (`Arc`-shared so store-and-forward
+//!   hops don't copy). All correctness tests run in this mode; the ALU
+//!   actually computes.
+//! * [`Payload::Phantom`] — length only. Timing-exact, contents elided;
+//!   used for paper-scale timing runs. ALU cost is still charged.
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::util::bytes::{bytes_to_f32s, f32s_to_bytes};
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Payload {
+    /// Real data, shared between hops.
+    Data(Arc<Vec<u8>>),
+    /// Timing-only payload of the given byte length.
+    Phantom(u32),
+}
+
+impl Payload {
+    pub fn empty() -> Self {
+        Payload::Data(Arc::new(Vec::new()))
+    }
+
+    pub fn from_bytes(v: Vec<u8>) -> Self {
+        Payload::Data(Arc::new(v))
+    }
+
+    pub fn from_f32s(xs: &[f32]) -> Self {
+        Payload::Data(Arc::new(f32s_to_bytes(xs)))
+    }
+
+    pub fn phantom(len: usize) -> Self {
+        Payload::Phantom(len as u32)
+    }
+
+    /// Length in bytes (what the wire charges).
+    pub fn len(&self) -> usize {
+        match self {
+            Payload::Data(d) => d.len(),
+            Payload::Phantom(n) => *n as usize,
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn is_phantom(&self) -> bool {
+        matches!(self, Payload::Phantom(_))
+    }
+
+    /// Borrow the bytes; `None` for phantom payloads.
+    pub fn bytes(&self) -> Option<&[u8]> {
+        match self {
+            Payload::Data(d) => Some(d),
+            Payload::Phantom(_) => None,
+        }
+    }
+
+    /// Decode as f32 lanes; `None` for phantom.
+    pub fn f32s(&self) -> Option<Result<Vec<f32>>> {
+        self.bytes().map(bytes_to_f32s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn data_payload_round_trips_f32() {
+        let xs = vec![1.0f32, 2.5, -3.0];
+        let p = Payload::from_f32s(&xs);
+        assert_eq!(p.len(), 12);
+        assert_eq!(p.f32s().unwrap().unwrap(), xs);
+    }
+
+    #[test]
+    fn phantom_has_length_but_no_bytes() {
+        let p = Payload::phantom(9000);
+        assert_eq!(p.len(), 9000);
+        assert!(p.bytes().is_none());
+        assert!(p.is_phantom());
+    }
+
+    #[test]
+    fn clone_is_shallow_for_data() {
+        let p = Payload::from_bytes(vec![0u8; 4096]);
+        let q = p.clone();
+        if let (Payload::Data(a), Payload::Data(b)) = (&p, &q) {
+            assert!(Arc::ptr_eq(a, b));
+        } else {
+            panic!("expected data payloads");
+        }
+    }
+}

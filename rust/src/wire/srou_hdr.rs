@@ -1,0 +1,207 @@
+//! Segment Routing over UDP (SROU) header (paper §2.2/§2.3, draft-zartbot-
+//! sr-udp).
+//!
+//! The header is a stack of segments, each naming a NetDAM device and an
+//! optional *function* to invoke there ("function callback could add in
+//! segment routing stack for chaining computations over multiple node").
+//! `left` is the classic SRv6-style Segments-Left pointer: it indexes the
+//! *next* segment to process, counting down to 0 at the final destination.
+//!
+//! Ring Reduce-Scatter is literally a segment list `[n2:RS, n3:RS, n4:RS]`
+//! — each hop executes the reduce function and self-routes onward.
+
+use anyhow::{bail, Result};
+
+use super::frame::DeviceIp;
+use crate::util::bytes::{Reader, Writer};
+
+/// "No function, just forward/deliver."
+pub const FUNC_NONE: u16 = 0;
+
+/// One segment: where to go, and what to run there.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Segment {
+    pub node: DeviceIp,
+    /// Function selector executed at this hop; `FUNC_NONE` = plain deliver.
+    /// For collective packets the function is implied by the instruction,
+    /// so this field doubles as a per-hop argument (e.g. chunk index).
+    pub func: u16,
+}
+
+impl Segment {
+    pub fn to(node: DeviceIp) -> Self {
+        Segment {
+            node,
+            func: FUNC_NONE,
+        }
+    }
+
+    pub fn call(node: DeviceIp, func: u16) -> Self {
+        Segment { node, func }
+    }
+}
+
+/// The SROU segment stack.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct SrouHeader {
+    /// Segment list in travel order: `segments[0]` is the first hop.
+    /// (SRv6 stores it reversed on the wire; we keep travel order in
+    /// memory and reverse in the codec to stay faithful to the RFC style.)
+    pub segments: Vec<Segment>,
+    /// Index of the next segment to visit. `== segments.len()` means the
+    /// packet hasn't departed; 0 means final delivery done.
+    pub left: u8,
+}
+
+/// Hard cap (wire field is one byte; real SROU stacks are short).
+pub const MAX_SEGMENTS: usize = 16;
+
+impl SrouHeader {
+    /// A direct path to one destination (degenerate single segment).
+    pub fn direct(dst: DeviceIp) -> Self {
+        Self::through(vec![Segment::to(dst)])
+    }
+
+    /// A path through the given segments, ready to travel.
+    pub fn through(segments: Vec<Segment>) -> Self {
+        assert!(
+            (1..=MAX_SEGMENTS).contains(&segments.len()),
+            "segment count {} out of range",
+            segments.len()
+        );
+        let left = segments.len() as u8;
+        Self { segments, left }
+    }
+
+    /// The segment the packet is currently travelling toward.
+    pub fn current(&self) -> Option<Segment> {
+        if self.left == 0 {
+            return None;
+        }
+        self.segments
+            .get(self.segments.len() - self.left as usize)
+            .copied()
+    }
+
+    /// Advance the pointer after arriving at the current segment. Returns
+    /// the *next* segment if any (i.e. the packet must be forwarded).
+    pub fn advance(&mut self) -> Option<Segment> {
+        if self.left == 0 {
+            return None;
+        }
+        self.left -= 1;
+        self.current()
+    }
+
+    /// Is the currently-targeted segment the last one?
+    pub fn at_last_hop(&self) -> bool {
+        self.left == 1
+    }
+
+    /// Remaining hops including the current target.
+    pub fn hops_remaining(&self) -> usize {
+        self.left as usize
+    }
+
+    pub fn encode(&self, w: &mut Writer) {
+        w.u8(self.segments.len() as u8);
+        w.u8(self.left);
+        // Wire order is reversed (last segment first), SRv6-style.
+        for seg in self.segments.iter().rev() {
+            w.u32(seg.node.0);
+            w.u16(seg.func);
+        }
+    }
+
+    pub fn decode(r: &mut Reader) -> Result<SrouHeader> {
+        let n = r.u8()? as usize;
+        if n == 0 || n > MAX_SEGMENTS {
+            bail!("bad segment count {n}");
+        }
+        let left = r.u8()?;
+        if left as usize > n {
+            bail!("segments-left {left} exceeds count {n}");
+        }
+        let mut segments = vec![
+            Segment {
+                node: DeviceIp(0),
+                func: 0
+            };
+            n
+        ];
+        for i in (0..n).rev() {
+            segments[i] = Segment {
+                node: DeviceIp(r.u32()?),
+                func: r.u16()?,
+            };
+        }
+        Ok(SrouHeader { segments, left })
+    }
+
+    /// Encoded size in bytes.
+    pub fn wire_len(&self) -> usize {
+        2 + 6 * self.segments.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ip(x: u8) -> DeviceIp {
+        DeviceIp::lan(x)
+    }
+
+    #[test]
+    fn direct_header_travels_one_hop() {
+        let mut h = SrouHeader::direct(ip(9));
+        assert_eq!(h.current().unwrap().node, ip(9));
+        assert!(h.at_last_hop());
+        assert_eq!(h.advance(), None);
+        assert_eq!(h.current(), None);
+    }
+
+    #[test]
+    fn ring_traversal_order() {
+        let mut h = SrouHeader::through(vec![
+            Segment::call(ip(2), 1),
+            Segment::call(ip(3), 2),
+            Segment::call(ip(4), 3),
+        ]);
+        assert_eq!(h.hops_remaining(), 3);
+        assert_eq!(h.current().unwrap().node, ip(2));
+        assert!(!h.at_last_hop());
+        let nxt = h.advance().unwrap();
+        assert_eq!(nxt.node, ip(3));
+        let nxt = h.advance().unwrap();
+        assert_eq!(nxt.node, ip(4));
+        assert!(h.at_last_hop());
+        assert_eq!(h.advance(), None);
+    }
+
+    #[test]
+    fn codec_round_trip_mid_flight() {
+        let mut h = SrouHeader::through(vec![
+            Segment::call(ip(2), 7),
+            Segment::to(ip(3)),
+            Segment::call(ip(4), 9),
+        ]);
+        h.advance(); // simulate one hop done
+        let mut w = Writer::default();
+        h.encode(&mut w);
+        let v = w.into_vec();
+        assert_eq!(v.len(), h.wire_len());
+        let g = SrouHeader::decode(&mut Reader::new(&v)).unwrap();
+        assert_eq!(g, h);
+    }
+
+    #[test]
+    fn bad_headers_rejected() {
+        // count 0
+        assert!(SrouHeader::decode(&mut Reader::new(&[0, 0])).is_err());
+        // left > count
+        assert!(SrouHeader::decode(&mut Reader::new(&[1, 2, 0, 0, 0, 1, 0, 0])).is_err());
+        // truncated segment
+        assert!(SrouHeader::decode(&mut Reader::new(&[1, 1, 0, 0])).is_err());
+    }
+}

@@ -1,0 +1,178 @@
+//! Property-style integration tests over the whole fabric
+//! (`util::prop` is the offline stand-in for proptest — see DESIGN.md).
+
+use netdam::collectives::{oracle_sum, read_vector, run_ring_allreduce, seed_gradients, RingSpec};
+use netdam::device::DeviceConfig;
+use netdam::isa::registry::MemAccess;
+use netdam::isa::{Flags, Instruction};
+use netdam::net::{Cluster, EcmpMode, LinkConfig, Topology};
+use netdam::pool::InterleaveMap;
+use netdam::sim::Engine;
+use netdam::util::bytes::f32s_to_bytes;
+use netdam::util::{prop, Xoshiro256};
+use netdam::wire::{DeviceIp, Packet, Payload, SrouHeader};
+
+/// Random remote writes through the fabric land byte-exactly, regardless
+/// of size, alignment and interleaving of requests.
+#[test]
+fn random_remote_writes_read_back_exactly() {
+    prop::check_with(prop::Config { seed: 0xFAB, cases: 24 }, |rng, case| {
+        let t = Topology::star(case as u64, 2, 1, LinkConfig::dc_100g());
+        let mut cl = t.cluster;
+        let host = t.hosts[0];
+        let host_ip = DeviceIp::lan(101);
+        let mut eng: Engine<Cluster> = Engine::new();
+        // Up to 8 writes at random addresses/lengths (no overlap: spaced).
+        let n_writes = 1 + rng.next_below(8) as usize;
+        let mut blobs = Vec::new();
+        for w in 0..n_writes {
+            let len = 4 * (1 + prop::log_size(rng, 2048));
+            let addr = (w as u64) * 65536 + rng.next_below(1024) * 4;
+            let data = rng.f32_vec(len / 4, -1e3, 1e3);
+            let seq = cl.alloc_seq(host);
+            let pkt = Packet::new(
+                host_ip,
+                seq,
+                SrouHeader::direct(DeviceIp::lan(1)),
+                Instruction::Write { addr },
+            )
+            .with_flags(Flags(Flags::RELIABLE))
+            .with_payload(Payload::from_f32s(&data));
+            cl.inject(&mut eng, host, pkt);
+            blobs.push((addr, data));
+        }
+        eng.run(&mut cl);
+        let d1 = cl.node_by_ip(DeviceIp::lan(1)).unwrap();
+        for (addr, data) in blobs {
+            let got = cl
+                .device_mut(d1)
+                .mem()
+                .read(addr, data.len() * 4)
+                .unwrap();
+            assert_eq!(got, f32s_to_bytes(&data));
+        }
+    });
+}
+
+/// Allreduce is exact for arbitrary rank counts (2..=8), element counts
+/// and windows, on both star and fat-tree fabrics.
+#[test]
+fn allreduce_exact_over_random_configs() {
+    prop::check_with(prop::Config { seed: 0xA11, cases: 10 }, |rng, case| {
+        let ranks = 2 + rng.next_below(7) as usize; // 2..=8
+        let blocks_per_chunk = 1 + rng.next_below(3) as usize;
+        let lanes = 2048usize;
+        let elements = ranks * blocks_per_chunk * lanes;
+        let window = 1 + rng.next_below(8) as usize;
+        let fat_tree = rng.chance(0.5);
+        let (mut cl, devices) = if fat_tree {
+            let pods = 2;
+            let t = Topology::fat_tree(
+                case as u64,
+                pods,
+                ranks.div_ceil(2),
+                2,
+                LinkConfig::dc_100g(),
+                EcmpMode::FlowHash,
+            );
+            (t.cluster, t.devices[..ranks].to_vec())
+        } else {
+            let t = Topology::star(case as u64, ranks, 0, LinkConfig::dc_100g());
+            (t.cluster, t.devices)
+        };
+        let grads = seed_gradients(&mut cl, &devices, elements, 0, case as u64);
+        let mut eng: Engine<Cluster> = Engine::new();
+        let out = run_ring_allreduce(
+            &mut cl,
+            &mut eng,
+            &devices,
+            &RingSpec {
+                elements,
+                window,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        assert_eq!(out.blocks_done, out.blocks);
+        let oracle = oracle_sum(&grads);
+        for &d in &devices {
+            assert_eq!(
+                read_vector(&mut cl, d, 0, elements).unwrap(),
+                oracle,
+                "ranks={ranks} window={window} fat_tree={fat_tree}"
+            );
+        }
+    });
+}
+
+/// The interleave map scatter, executed as real packets through the
+/// fabric, reassembles to the original buffer on pull-back.
+#[test]
+fn pool_scatter_gather_round_trips() {
+    let t = Topology::star(3, 4, 1, LinkConfig::dc_100g());
+    let mut cl = t.cluster;
+    let host = t.hosts[0];
+    let host_ip = DeviceIp::lan(101);
+    let map = InterleaveMap::paper_default((1..=4).map(DeviceIp::lan).collect());
+    let mut rng = Xoshiro256::seed_from(88);
+    let data = rng.f32_vec(24 * 1024, -1.0, 1.0); // 96 KiB
+    let bytes = f32s_to_bytes(&data);
+    let mut eng: Engine<Cluster> = Engine::new();
+    for e in map.scatter(0, bytes.len() as u64) {
+        let seq = cl.alloc_seq(host);
+        let chunk = &bytes[e.range_off as usize..(e.range_off + e.len) as usize];
+        let pkt = Packet::new(
+            host_ip,
+            seq,
+            SrouHeader::direct(e.device),
+            Instruction::Write { addr: e.local_addr },
+        )
+        .with_flags(Flags(Flags::RELIABLE))
+        .with_payload(Payload::from_bytes(chunk.to_vec()));
+        cl.inject(&mut eng, host, pkt);
+    }
+    eng.run(&mut cl);
+    // Reassemble by reading each device's memory directly (memif view).
+    let mut back = vec![0u8; bytes.len()];
+    for e in map.scatter(0, bytes.len() as u64) {
+        let node = cl.node_by_ip(e.device).unwrap();
+        let got = cl
+            .device_mut(node)
+            .mem()
+            .read(e.local_addr, e.len as usize)
+            .unwrap();
+        back[e.range_off as usize..(e.range_off + e.len) as usize].copy_from_slice(&got);
+    }
+    assert_eq!(back, bytes);
+}
+
+/// Ordered flows deliver in sequence order even with duplication faults.
+#[test]
+fn ordered_flag_restores_sequence_under_duplication() {
+    let mut cl = Cluster::new(4);
+    let sw = cl.add_switch(netdam::net::Switch::tor(None));
+    let h = cl.add_host(DeviceIp::lan(101), None);
+    let d = cl.add_device(DeviceConfig::paper_default(DeviceIp::lan(1)));
+    cl.connect(sw, h, LinkConfig::dc_100g());
+    cl.connect(sw, d, LinkConfig::dc_100g());
+    cl.compute_routes();
+    cl.fault.dup_p = 0.2;
+    let mut eng: Engine<Cluster> = Engine::new();
+    // Writes 1..=20 all target the same address; ordered delivery means
+    // the final value is from seq 20.
+    for i in 1..=20u64 {
+        let pkt = Packet::new(
+            DeviceIp::lan(101),
+            i,
+            SrouHeader::direct(DeviceIp::lan(1)),
+            Instruction::Write { addr: 0 },
+        )
+        .with_flags(Flags(Flags::ORDERED))
+        .with_payload(Payload::from_f32s(&[i as f32]));
+        cl.inject(&mut eng, h, pkt);
+    }
+    eng.run(&mut cl);
+    let node = cl.node_by_ip(DeviceIp::lan(1)).unwrap();
+    let got = cl.device_mut(node).mem().read(0, 4).unwrap();
+    assert_eq!(got, 20.0f32.to_le_bytes());
+}

@@ -1,0 +1,99 @@
+//! E5 — idempotency under faults (paper §3.1).
+//!
+//! The paper's reliability story: interim reduce-scatter hops have no
+//! local side effects, the last hop is guarded by the block hash, so
+//! *blind retransmission is always safe*. These tests inject loss,
+//! duplication, and both, and demand bit-exact allreduce results.
+
+use netdam::collectives::{oracle_sum, read_vector, run_ring_allreduce, seed_gradients, RingSpec};
+use netdam::net::{Cluster, LinkConfig, Topology};
+use netdam::sim::Engine;
+
+fn run_with_faults(loss_p: f64, dup_p: f64, reliable: bool, seed: u64) -> (bool, u64, u64) {
+    let elements = 4 * 2048 * 4;
+    let t = Topology::star(seed, 4, 0, LinkConfig::dc_100g());
+    let mut cl = t.cluster;
+    cl.fault.loss_p = loss_p;
+    cl.fault.dup_p = dup_p;
+    let devices = t.devices;
+    let grads = seed_gradients(&mut cl, &devices, elements, 0, seed ^ 0x9E);
+    let spec = RingSpec {
+        elements,
+        reliable,
+        window: 4,
+        ..Default::default()
+    };
+    let mut eng: Engine<Cluster> = Engine::new();
+    let out = run_ring_allreduce(&mut cl, &mut eng, &devices, &spec).unwrap();
+    assert_eq!(out.blocks_done, out.blocks, "collective incomplete");
+    let oracle = oracle_sum(&grads);
+    let mut exact = true;
+    for &d in &devices {
+        let got = read_vector(&mut cl, d, 0, elements).unwrap();
+        exact &= got == oracle;
+    }
+    (exact, out.retransmits, out.hash_guard_drops)
+}
+
+#[test]
+fn duplication_alone_cannot_double_add() {
+    // 5% duplication, no retransmit machinery: the hash guard at the
+    // chunk owner must absorb every duplicate chain.
+    let (exact, retx, guard_drops) = run_with_faults(0.0, 0.05, false, 51);
+    assert!(exact, "duplicated chains must not double-add");
+    assert_eq!(retx, 0);
+    assert!(guard_drops > 0, "guard must actually have fired");
+}
+
+#[test]
+fn loss_with_retransmit_is_exactly_once() {
+    let (exact, retx, _) = run_with_faults(0.01, 0.0, true, 52);
+    assert!(exact, "retransmitted chains must converge to the exact sum");
+    assert!(retx > 0, "1% loss must trigger retransmissions");
+}
+
+#[test]
+fn loss_and_duplication_together() {
+    let (exact, _retx, _) = run_with_faults(0.01, 0.03, true, 53);
+    assert!(exact, "combined faults still bit-exact");
+}
+
+#[test]
+fn fault_free_baseline_no_guard_hits() {
+    let (exact, retx, guard_drops) = run_with_faults(0.0, 0.0, false, 54);
+    assert!(exact);
+    assert_eq!(retx, 0);
+    assert_eq!(guard_drops, 0);
+}
+
+#[test]
+fn results_identical_across_fault_patterns() {
+    // The whole point of §3.1: the final memory image is a function of
+    // the inputs only, not of the fault pattern (same seed for data).
+    let elements = 4 * 2048 * 2;
+    let mut images: Vec<Vec<f32>> = Vec::new();
+    for (loss, dup, reliable) in [(0.0, 0.0, false), (0.02, 0.0, true), (0.0, 0.04, false)] {
+        let t = Topology::star(99, 4, 0, LinkConfig::dc_100g());
+        let mut cl = t.cluster;
+        cl.fault.loss_p = loss;
+        cl.fault.dup_p = dup;
+        let devices = t.devices;
+        seed_gradients(&mut cl, &devices, elements, 0, 1234);
+        let mut eng: Engine<Cluster> = Engine::new();
+        let out = run_ring_allreduce(
+            &mut cl,
+            &mut eng,
+            &devices,
+            &RingSpec {
+                elements,
+                reliable,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        assert_eq!(out.blocks_done, out.blocks);
+        images.push(read_vector(&mut cl, devices[0], 0, elements).unwrap());
+    }
+    assert_eq!(images[0], images[1], "loss+retry image matches clean run");
+    assert_eq!(images[0], images[2], "duplication image matches clean run");
+}
