@@ -1,8 +1,10 @@
 //! The paper's headline experiment (§3.3), end to end.
 //!
-//! Runs the 4-node allreduce three ways — NetDAM in-memory ring,
-//! Horovod-style ring over RoCE hosts, and native-MPI recursive
-//! doubling — and prints the §3.3 comparison table. Two modes:
+//! Runs the 4-node allreduce through the unified collective engine —
+//! the NetDAM in-memory ring, the Horovod-style ring over RoCE hosts,
+//! and native-MPI recursive doubling — prints the §3.3 comparison table,
+//! then sweeps the full algorithm menu (halving-doubling, hierarchical
+//! two-level, and the standalone primitives) on the same grid. Two modes:
 //!
 //! ```sh
 //! cargo run --release --example allreduce_e2e                 # data-bearing, verified
@@ -14,8 +16,12 @@
 //! the numbers that land.
 
 use anyhow::Result;
-use netdam::collectives::{oracle_sum, read_vector, run_ring_allreduce, seed_gradients, RingSpec};
+use netdam::collectives::{
+    oracle_sum, read_vector, run_collective, run_ring_allreduce, seed_gradients, AlgoKind,
+    RingSpec, RunOpts,
+};
 use netdam::coordinator::{run_e2, E2Config};
+use netdam::metrics::Table;
 use netdam::net::{Cluster, LinkConfig, Topology};
 use netdam::sim::{fmt_ns, Engine};
 
@@ -78,6 +84,7 @@ fn main() -> Result<()> {
         window: 32,
         seed: 0xE2E2,
         with_baselines: true,
+        ..Default::default()
     };
     let r = run_e2(&cfg)?;
     print!("{}", r.table.render());
@@ -90,5 +97,36 @@ fn main() -> Result<()> {
         "NetDAM vs line-rate floor: {:.2}x",
         r.netdam_ns as f64 / r.line_rate_floor_ns as f64
     );
+
+    // --- the unified engine's algorithm menu ----------------------------
+    if !paper_scale {
+        println!("\n== collective menu (shared driver, same grid) ==\n");
+        let mut table = Table::new(&["algorithm", "time", "bus bw (Gbit/s)"]);
+        for kind in AlgoKind::ALL {
+            // The paper triple already ran inside run_e2 with identical
+            // parameters — reuse those reports instead of re-simulating.
+            let rep = match r.reports.iter().find(|rep| rep.algorithm == kind.name()) {
+                Some(rep) => rep.clone(),
+                None => run_collective(
+                    kind,
+                    &RunOpts {
+                        elements,
+                        ranks: 4,
+                        seed: 0xE2E2,
+                        window: 32,
+                        timing_only: true,
+                        ..Default::default()
+                    },
+                )?,
+            };
+            table.row(&[
+                rep.algorithm.to_string(),
+                fmt_ns(rep.elapsed_ns),
+                format!("{:.1}", rep.bus_bw_gbps(kind.bw_fraction(4))),
+            ]);
+        }
+        print!("{}", table.render());
+        println!("\n(select on the CLI with `netdam allreduce --algo <list|all>`)");
+    }
     Ok(())
 }

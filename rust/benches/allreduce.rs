@@ -1,50 +1,85 @@
 //! Bench E2 — regenerates the §3.3 allreduce table (native MPI 2.8 s /
-//! ring 2.1 s / NetDAM ≈0.4 s at 2 GiB).
+//! ring 2.1 s / NetDAM ≈0.4 s at 2 GiB), extended to the full collective
+//! menu riding the shared `collectives::driver`.
 //!
-//! Default sweep runs up to 2^24 elements (64 MiB). Set
-//! `NETDAM_PAPER_SCALE=1` to run the full 536,870,912-float vector
-//! (timing-only payloads; several minutes of wallclock).
+//! Default sweep runs up to 2^24 elements (64 MiB), every algorithm on
+//! the same grid. Set `NETDAM_PAPER_SCALE=1` to run the full
+//! 536,870,912-float vector on the classic paper triple (timing-only
+//! payloads; several minutes of wallclock).
 
+use netdam::collectives::{run_collective, AlgoKind, RunOpts};
 use netdam::coordinator::{run_e2, E2Config};
+use netdam::metrics::Table;
 use netdam::sim::fmt_ns;
 
 fn main() {
     println!("# E2 — 4-node MPI allreduce (paper §3.3)\n");
     let wall = std::time::Instant::now();
     let paper = std::env::var("NETDAM_PAPER_SCALE").is_ok();
-    let sizes: Vec<usize> = if paper {
-        vec![536_870_912]
-    } else {
-        vec![1 << 20, 1 << 22, 1 << 24]
-    };
-    for elements in sizes {
+    let ranks = 4usize;
+
+    if paper {
         let cfg = E2Config {
-            elements,
-            ranks: 4,
+            elements: 536_870_912,
+            ranks,
             timing_only: true,
             window: 32,
             seed: 0xE2,
             with_baselines: true,
+            ..Default::default()
         };
-        println!(
-            "## {} x f32 ({:.0} MiB)\n",
-            elements,
-            elements as f64 * 4.0 / (1 << 20) as f64
-        );
         let r = run_e2(&cfg).expect("e2");
-        println!("{}", r.table.render());
+        println!("## 536870912 x f32 (2048 MiB)\n\n{}", r.table.render());
+        println!(
+            "paper scale: NetDAM {} vs paper's ~400 ms initial measurement",
+            fmt_ns(r.netdam_ns)
+        );
+        println!("\nbench wallclock: {:.2?}", wall.elapsed());
+        return;
+    }
+
+    for elements in [1usize << 20, 1 << 22, 1 << 24] {
+        println!(
+            "## {} x f32 ({:.0} MiB), {} ranks — full algorithm menu\n",
+            elements,
+            elements as f64 * 4.0 / (1 << 20) as f64,
+            ranks
+        );
+        let mut table = Table::new(&["algorithm", "time", "bus bw (Gbit/s)", "retransmits"]);
+        let mut netdam_ns = 0;
+        let mut ring_ns = 0;
+        let mut native_ns = 0;
+        for kind in AlgoKind::ALL {
+            let opts = RunOpts {
+                elements,
+                ranks,
+                seed: 0xE2,
+                window: 32,
+                timing_only: true,
+                ..Default::default()
+            };
+            let r = run_collective(kind, &opts).expect("collective run");
+            match kind {
+                AlgoKind::NetdamRing => netdam_ns = r.elapsed_ns,
+                AlgoKind::RingRoce => ring_ns = r.elapsed_ns,
+                AlgoKind::MpiNative => native_ns = r.elapsed_ns,
+                _ => {}
+            }
+            table.row(&[
+                r.algorithm.to_string(),
+                fmt_ns(r.elapsed_ns),
+                format!("{:.1}", r.bus_bw_gbps(kind.bw_fraction(ranks))),
+                r.retransmits.to_string(),
+            ]);
+        }
+        println!("{}", table.render());
+        let floor = netdam::coordinator::e2_allreduce::line_rate_floor_ns(ranks, elements);
         println!(
             "speedups: {:.2}x vs ring (paper 5.3x), {:.2}x vs native (paper 7x); floor ratio {:.2}x\n",
-            r.ring_roce_ns as f64 / r.netdam_ns as f64,
-            r.mpi_native_ns as f64 / r.netdam_ns as f64,
-            r.netdam_ns as f64 / r.line_rate_floor_ns as f64,
+            ring_ns as f64 / netdam_ns as f64,
+            native_ns as f64 / netdam_ns as f64,
+            netdam_ns as f64 / floor as f64,
         );
-        if paper {
-            println!(
-                "paper scale: NetDAM {} vs paper's ~400 ms initial measurement",
-                fmt_ns(r.netdam_ns)
-            );
-        }
     }
     println!("bench wallclock: {:.2?}", wall.elapsed());
 }

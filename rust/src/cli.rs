@@ -66,6 +66,17 @@ impl Args {
         self.opts.get(name).map(|s| s.as_str())
     }
 
+    /// Comma-separated list option: `--algo ring,hd,bcast`. Empty items
+    /// are dropped; `None` when the option is absent.
+    pub fn opt_list(&self, name: &str) -> Option<Vec<String>> {
+        self.opt(name).map(|s| {
+            s.split(',')
+                .map(|x| x.trim().to_string())
+                .filter(|x| !x.is_empty())
+                .collect()
+        })
+    }
+
     pub fn opt_u64(&self, name: &str, default: u64) -> Result<u64> {
         match self.opts.get(name) {
             None => Ok(default),
@@ -123,6 +134,16 @@ mod tests {
                 ("seed".to_string(), "1".to_string())
             ]
         );
+    }
+
+    #[test]
+    fn list_options_split_on_commas() {
+        let a = Args::parse(&argv(&["--algo", "ring, hd,,bcast"])).unwrap();
+        assert_eq!(
+            a.opt_list("algo").unwrap(),
+            vec!["ring".to_string(), "hd".to_string(), "bcast".to_string()]
+        );
+        assert_eq!(a.opt_list("missing"), None);
     }
 
     #[test]

@@ -1,0 +1,576 @@
+//! The shared collective driver (the "software-defined collective" layer).
+//!
+//! Every collective in this crate — the NetDAM in-memory algorithms and
+//! the host baselines alike — is split into two halves:
+//!
+//! * a [`CollectiveAlgorithm`]: a pure *schedule generator* that decides
+//!   which chunk moves where and which instruction runs at each hop
+//!   (ring chains, halving-doubling exchanges, hierarchical two-level
+//!   plans, ...), expressed as [`ScheduledOp`]s, or — for the host
+//!   baselines — as installed [`crate::net::App`]s;
+//! * the [`Driver`]: one engine-facing loop that owns sequence
+//!   allocation, the self-clocked per-rank window, reliability setup,
+//!   completion matching and dedupe, timeout/retransmit accounting, and
+//!   [`CollectiveReport`] production.
+//!
+//! Adding a new collective therefore means writing a planner, not another
+//! copy of the windowing/completion state machine — the refactor the
+//! paper's §3 "one instruction per chunk" design invites.
+//!
+//! Multi-phase algorithms (halving-doubling, hierarchical) return one
+//! schedule per phase; the driver drains the DES between phases. That
+//! barrier is honest: those algorithms are *round-synchronous* by
+//! construction, unlike the single-phase NetDAM ring whose freedom from
+//! barriers is exactly the paper's Figure 7 contrast.
+
+use std::cell::RefCell;
+use std::collections::{HashMap, HashSet, VecDeque};
+use std::rc::Rc;
+
+use anyhow::{ensure, Result};
+
+use crate::alu::block_hash;
+use crate::isa::registry::MemAccess;
+use crate::isa::{Flags, Instruction};
+use crate::net::{Cluster, InjectCmd, NodeId};
+use crate::sim::{Engine, SimTime};
+use crate::transport::ReliabilityTable;
+use crate::wire::{DeviceIp, Packet, Payload};
+
+use super::halving_doubling::HalvingDoubling;
+use super::hierarchical::HierarchicalAllreduce;
+use super::mpi_native::MpiRecursiveDoubling;
+use super::netdam_ring::RingAllreduce;
+use super::primitives::{RingAllGather, RingBroadcast};
+use super::ring_roce::RingRoceAllreduce;
+use super::{seed_gradients, CollectiveReport};
+
+/// Knobs shared by every driver-run collective.
+#[derive(Debug, Clone)]
+pub struct CollectiveSpec {
+    /// Total f32 elements of the collective's vector.
+    pub elements: usize,
+    /// SIMD lanes per packet (the paper's 2048 × f32 blocks).
+    pub lanes: usize,
+    /// Outstanding ops per rank (self-clocked window).
+    pub window: usize,
+    /// Track with timeout-retransmit (for lossy fabrics, E5).
+    pub reliable: bool,
+    /// Device-local base address of the vector.
+    pub base_addr: u64,
+}
+
+impl Default for CollectiveSpec {
+    fn default() -> Self {
+        Self {
+            elements: 1 << 16,
+            lanes: 2048,
+            window: 16,
+            reliable: false,
+            base_addr: 0,
+        }
+    }
+}
+
+/// What a planner sees when generating one phase.
+pub struct PlanCtx<'a> {
+    /// Participating NetDAM devices, rank order (empty for host baselines).
+    pub devices: &'a [NodeId],
+    /// Their IPs, same order.
+    pub ips: &'a [DeviceIp],
+    pub spec: &'a CollectiveSpec,
+    /// First completion id this phase may use; a phase planning `k` ops
+    /// must use exactly the ids `done_id_base .. done_id_base + k`.
+    pub done_id_base: u32,
+}
+
+/// One planned injection: `rank` injects `pkt`, and the driver expects a
+/// `CollectiveDone { block: done_id }` back at that rank's device.
+pub struct ScheduledOp {
+    pub rank: usize,
+    pub done_id: u32,
+    pub pkt: Packet,
+}
+
+/// A phase's schedule.
+pub enum Phase {
+    /// Packet ops, window-injected and completion-refilled by the driver.
+    Ops(Vec<ScheduledOp>),
+    /// Host apps were installed into the cluster; the driver starts them,
+    /// drains the DES, and reads completion metrics.
+    Apps {
+        finished_counter: &'static str,
+        done_hist: &'static str,
+        expect_finished: u64,
+    },
+}
+
+/// A collective algorithm = a named, possibly multi-phase schedule
+/// generator. Planning happens against live device memory (payloads and
+/// idempotency-guard hashes are captured per phase).
+pub trait CollectiveAlgorithm {
+    fn name(&self) -> &'static str;
+
+    /// Number of sequential phases (the driver drains the DES between
+    /// phases). Single-phase algorithms keep the default.
+    fn phases(&self) -> usize {
+        1
+    }
+
+    fn plan_phase(&mut self, cl: &mut Cluster, ctx: &PlanCtx<'_>, phase: usize) -> Result<Phase>;
+}
+
+/// What one driver run produced.
+#[derive(Debug, Clone)]
+pub struct DriverOutcome {
+    pub elapsed_ns: SimTime,
+    /// Ops planned (or expected app completions) across all phases.
+    pub ops: usize,
+    /// Ops actually completed. `< ops` means the run did not converge
+    /// (e.g. unrecovered loss on an unreliable fabric).
+    pub ops_done: usize,
+    pub retransmits: u64,
+    pub hash_guard_drops: u64,
+    pub link_drops: u64,
+}
+
+impl DriverOutcome {
+    /// Shape the outcome into the bench-facing report.
+    pub fn report(&self, algorithm: &'static str, elements: usize) -> CollectiveReport {
+        CollectiveReport {
+            algorithm,
+            elements,
+            elapsed_ns: self.elapsed_ns,
+            link_drops: self.link_drops,
+            retransmits: self.retransmits,
+        }
+    }
+}
+
+/// Per-phase windowing state shared with the completion hook.
+struct PhaseState {
+    /// Per-rank FIFO of not-yet-injected ops.
+    queues: Vec<VecDeque<(u32, Packet)>>,
+    origin: Vec<NodeId>,
+    rank_of: HashMap<u32, usize>,
+    done: HashSet<u32>,
+    last_done: SimTime,
+    reliable: bool,
+}
+
+impl PhaseState {
+    fn next_cmd(&mut self, rank: usize) -> Option<InjectCmd> {
+        let (_, pkt) = self.queues[rank].pop_front()?;
+        Some(InjectCmd {
+            origin: self.origin[rank],
+            pkt,
+            reliable: self.reliable,
+        })
+    }
+}
+
+/// The shared engine-facing loop. See the module docs.
+pub struct Driver;
+
+impl Driver {
+    /// Run `algo` over `devices` in `cl`. Blocks until the DES drains
+    /// (every phase); returns timing + integrity counters. Completion is
+    /// *reported*, not asserted — callers decide whether `ops_done <
+    /// ops` is an error (it is expected on lossy unreliable fabrics).
+    pub fn run(
+        cl: &mut Cluster,
+        eng: &mut Engine<Cluster>,
+        devices: &[NodeId],
+        algo: &mut dyn CollectiveAlgorithm,
+        spec: &CollectiveSpec,
+    ) -> Result<DriverOutcome> {
+        let ips: Vec<DeviceIp> = devices.iter().map(|&d| cl.device(d).ip()).collect();
+        if spec.reliable {
+            // Chains take ~10 us idle but queue under load; a generous
+            // timeout avoids spurious (harmless but wasteful) duplicates.
+            cl.xport = ReliabilityTable::new(2_000_000, 12);
+        }
+        let mut ops_total = 0usize;
+        let mut ops_done = 0usize;
+        let mut elapsed: SimTime = eng.now();
+        let mut done_id_base = 0u32;
+        let n_phases = algo.phases();
+        for phase in 0..n_phases {
+            let plan = {
+                let ctx = PlanCtx {
+                    devices,
+                    ips: &ips,
+                    spec,
+                    done_id_base,
+                };
+                algo.plan_phase(cl, &ctx, phase)?
+            };
+            match plan {
+                Phase::Ops(ops) => {
+                    if ops.is_empty() {
+                        continue;
+                    }
+                    let n_ops = ops.len();
+                    done_id_base = done_id_base
+                        .checked_add(n_ops as u32)
+                        .expect("completion id space exhausted");
+                    let n_ranks = devices.len();
+                    let mut queues: Vec<VecDeque<(u32, Packet)>> =
+                        vec![VecDeque::new(); n_ranks];
+                    let mut rank_of = HashMap::with_capacity(n_ops);
+                    for mut op in ops {
+                        ensure!(op.rank < n_ranks, "op rank {} out of range", op.rank);
+                        op.pkt.seq = cl.alloc_seq(devices[op.rank]);
+                        let prev = rank_of.insert(op.done_id, op.rank);
+                        ensure!(prev.is_none(), "duplicate completion id {}", op.done_id);
+                        queues[op.rank].push_back((op.done_id, op.pkt));
+                    }
+                    let state = Rc::new(RefCell::new(PhaseState {
+                        queues,
+                        origin: devices.to_vec(),
+                        rank_of,
+                        done: HashSet::with_capacity(n_ops),
+                        last_done: eng.now(),
+                        reliable: spec.reliable,
+                    }));
+                    // Completion hook: windowed self-clocking. Every op
+                    // got its seq up front, so the hook only pops queues.
+                    let hook_state = Rc::clone(&state);
+                    cl.on_completion = Some(Box::new(move |rec| {
+                        let Instruction::CollectiveDone { block } = rec.instr else {
+                            return Vec::new();
+                        };
+                        let mut st = hook_state.borrow_mut();
+                        let Some(&rank) = st.rank_of.get(&block) else {
+                            return Vec::new(); // foreign completion id
+                        };
+                        if !st.done.insert(block) {
+                            return Vec::new(); // duplicate Done (retransmit)
+                        }
+                        st.last_done = rec.time;
+                        match st.next_cmd(rank) {
+                            Some(cmd) => vec![cmd],
+                            None => Vec::new(),
+                        }
+                    }));
+                    // Kick the initial window.
+                    let mut kicks = Vec::new();
+                    {
+                        let mut st = state.borrow_mut();
+                        for rank in 0..n_ranks {
+                            for _ in 0..spec.window.max(1) {
+                                match st.next_cmd(rank) {
+                                    Some(cmd) => kicks.push(cmd),
+                                    None => break,
+                                }
+                            }
+                        }
+                    }
+                    for cmd in kicks {
+                        cl.inject_cmd(eng, cmd);
+                    }
+                    eng.run(cl);
+                    cl.on_completion = None;
+                    let st = state.borrow();
+                    ops_total += n_ops;
+                    ops_done += st.done.len();
+                    elapsed = st.last_done;
+                    if st.done.len() < n_ops {
+                        break; // later phases would compute on stale data
+                    }
+                }
+                Phase::Apps {
+                    finished_counter,
+                    done_hist,
+                    expect_finished,
+                } => {
+                    cl.start_apps(eng);
+                    eng.run(cl);
+                    let fin = cl.metrics.counter(finished_counter);
+                    elapsed = cl
+                        .metrics
+                        .hist(done_hist)
+                        .map(|h| h.max())
+                        .unwrap_or_else(|| eng.now());
+                    ops_total += expect_finished as usize;
+                    ops_done += fin.min(expect_finished) as usize;
+                    if fin < expect_finished {
+                        break;
+                    }
+                }
+            }
+        }
+        let hash_guard_drops: u64 = devices
+            .iter()
+            .map(|&d| cl.device(d).drops_hash_guard)
+            .sum();
+        Ok(DriverOutcome {
+            elapsed_ns: elapsed,
+            ops: ops_total,
+            ops_done,
+            retransmits: cl.xport.retransmits,
+            hash_guard_drops,
+            link_drops: cl.metrics.counter("link_drops"),
+        })
+    }
+}
+
+// ---------------------------------------------------------------- helpers
+
+/// Wire flags for driver-scheduled ops.
+pub(crate) fn op_flags(reliable: bool) -> Flags {
+    if reliable {
+        Flags(Flags::RELIABLE)
+    } else {
+        Flags::default()
+    }
+}
+
+/// Read a payload block from device memory (phantom-aware).
+pub(crate) fn read_block(cl: &mut Cluster, node: NodeId, addr: u64, len: usize) -> Result<Payload> {
+    let dev = cl.device_mut(node);
+    if dev.mem_ref().is_phantom() {
+        Ok(Payload::phantom(len))
+    } else {
+        Ok(Payload::from_bytes(dev.mem().read(addr, len)?))
+    }
+}
+
+/// Hash of a device's pristine block — the §3.1 idempotency guard.
+/// Phantom (timing-only) devices return 0; their guard always passes.
+pub(crate) fn guard_hash(cl: &mut Cluster, node: NodeId, addr: u64, len: usize) -> Result<u64> {
+    let dev = cl.device_mut(node);
+    if dev.mem_ref().is_phantom() {
+        Ok(0)
+    } else {
+        Ok(block_hash(&dev.mem().read(addr, len)?))
+    }
+}
+
+// ------------------------------------------------------- the algorithm menu
+
+/// The collectives the driver can run off the shelf.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AlgoKind {
+    /// The paper's §3 in-memory ring allreduce (fused all-gather).
+    NetdamRing,
+    /// Latency-optimal recursive halving/doubling allreduce (2^k ranks).
+    HalvingDoubling,
+    /// Two-level allreduce: reduce within each leaf, ring across leaves,
+    /// broadcast back — for the `fat_tree` topology.
+    Hierarchical,
+    /// Ring reduce-scatter only (each chunk reduced at its owner).
+    ReduceScatter,
+    /// Ring all-gather of per-rank chunks.
+    AllGather,
+    /// Ring broadcast of rank 0's vector.
+    Broadcast,
+    /// Host baseline: Horovod-style ring allreduce over RoCE hosts.
+    RingRoce,
+    /// Host baseline: native-MPI recursive doubling.
+    MpiNative,
+}
+
+impl AlgoKind {
+    pub const ALL: [AlgoKind; 8] = [
+        AlgoKind::NetdamRing,
+        AlgoKind::HalvingDoubling,
+        AlgoKind::Hierarchical,
+        AlgoKind::ReduceScatter,
+        AlgoKind::AllGather,
+        AlgoKind::Broadcast,
+        AlgoKind::RingRoce,
+        AlgoKind::MpiNative,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            AlgoKind::NetdamRing => "netdam-ring",
+            AlgoKind::HalvingDoubling => "halving-doubling",
+            AlgoKind::Hierarchical => "hierarchical-2level",
+            AlgoKind::ReduceScatter => "reduce-scatter",
+            AlgoKind::AllGather => "all-gather",
+            AlgoKind::Broadcast => "broadcast",
+            AlgoKind::RingRoce => "ring-roce",
+            AlgoKind::MpiNative => "mpi-native",
+        }
+    }
+
+    /// Parse a CLI name (accepts a few aliases).
+    pub fn parse(s: &str) -> Result<AlgoKind> {
+        Ok(match s.trim().to_ascii_lowercase().as_str() {
+            "netdam-ring" | "ring" | "netdam" => AlgoKind::NetdamRing,
+            "halving-doubling" | "hd" => AlgoKind::HalvingDoubling,
+            "hierarchical-2level" | "hierarchical" | "2level" => AlgoKind::Hierarchical,
+            "reduce-scatter" | "rs" => AlgoKind::ReduceScatter,
+            "all-gather" | "ag" | "allgather" => AlgoKind::AllGather,
+            "broadcast" | "bcast" => AlgoKind::Broadcast,
+            "ring-roce" | "roce" => AlgoKind::RingRoce,
+            "mpi-native" | "native" => AlgoKind::MpiNative,
+            other => anyhow::bail!(
+                "unknown algorithm {other:?} (menu: {})",
+                AlgoKind::ALL
+                    .iter()
+                    .map(|a| a.name())
+                    .collect::<Vec<_>>()
+                    .join(", ")
+            ),
+        })
+    }
+
+    /// Host-CPU baselines build their own host fabric instead of running
+    /// on NetDAM devices.
+    pub fn is_host_baseline(self) -> bool {
+        matches!(self, AlgoKind::RingRoce | AlgoKind::MpiNative)
+    }
+
+    /// Bytes moved per rank as a fraction of the vector size V — the
+    /// nccl-tests "bus bandwidth" convention. Allreduces move
+    /// 2·(N−1)/N·V, reduce-scatter/all-gather (N−1)/N·V, broadcast V.
+    pub fn bw_fraction(self, n_ranks: usize) -> f64 {
+        let n = n_ranks as f64;
+        match self {
+            AlgoKind::NetdamRing
+            | AlgoKind::HalvingDoubling
+            | AlgoKind::Hierarchical
+            | AlgoKind::RingRoce
+            | AlgoKind::MpiNative => 2.0 * (n - 1.0) / n,
+            AlgoKind::ReduceScatter | AlgoKind::AllGather => (n - 1.0) / n,
+            AlgoKind::Broadcast => 1.0,
+        }
+    }
+}
+
+/// Options for [`run_collective`] — the one-call bench/CLI front door.
+#[derive(Debug, Clone)]
+pub struct RunOpts {
+    pub elements: usize,
+    pub ranks: usize,
+    pub seed: u64,
+    pub window: usize,
+    /// Phantom payloads (timing-only devices) for paper-scale vectors.
+    pub timing_only: bool,
+    pub reliable: bool,
+    /// Per-wire loss probability (fault injection).
+    pub loss_p: f64,
+}
+
+impl Default for RunOpts {
+    fn default() -> Self {
+        Self {
+            elements: 1 << 20,
+            ranks: 4,
+            seed: 0xC011,
+            window: 16,
+            timing_only: false,
+            reliable: false,
+            loss_p: 0.0,
+        }
+    }
+}
+
+/// Build the right fabric for `kind`, run it through the shared
+/// [`Driver`], and return the report. This is the data-driven entry the
+/// CLI (`--algo`), bench grid, and E2 coordinator share.
+pub fn run_collective(kind: AlgoKind, opts: &RunOpts) -> Result<CollectiveReport> {
+    use crate::net::{DeviceProfile, EcmpMode, LinkConfig, Topology};
+
+    let spec = CollectiveSpec {
+        elements: opts.elements,
+        window: opts.window,
+        reliable: opts.reliable,
+        ..Default::default()
+    };
+    let mut eng: Engine<Cluster> = Engine::new();
+
+    if kind.is_host_baseline() {
+        // The host baselines model a PFC-lossless RoCE fabric and have no
+        // retransmit machinery; reject fault injection instead of
+        // silently dropping the knob.
+        ensure!(
+            opts.loss_p == 0.0,
+            "{} assumes a lossless fabric (loss_p must be 0)",
+            kind.name()
+        );
+        let mut cl = Cluster::new(opts.seed);
+        let out = match kind {
+            AlgoKind::RingRoce => {
+                let mut algo = RingRoceAllreduce {
+                    ranks: opts.ranks,
+                    elements: opts.elements,
+                    seed: opts.seed,
+                };
+                Driver::run(&mut cl, &mut eng, &[], &mut algo, &spec)?
+            }
+            _ => {
+                let mut algo = MpiRecursiveDoubling {
+                    ranks: opts.ranks,
+                    elements: opts.elements,
+                    seed: opts.seed,
+                };
+                Driver::run(&mut cl, &mut eng, &[], &mut algo, &spec)?
+            }
+        };
+        ensure!(
+            out.ops_done == out.ops,
+            "{} incomplete: {}/{} ranks finished",
+            kind.name(),
+            out.ops_done,
+            out.ops
+        );
+        return Ok(out.report(kind.name(), opts.elements));
+    }
+
+    let profile = if opts.timing_only {
+        DeviceProfile::TimingOnly
+    } else {
+        DeviceProfile::Data
+    };
+    let topo = if kind == AlgoKind::Hierarchical {
+        ensure!(
+            opts.ranks >= 4 && opts.ranks % 2 == 0,
+            "hierarchical needs an even rank count >= 4"
+        );
+        Topology::fat_tree_with(
+            opts.seed,
+            2,
+            opts.ranks / 2,
+            2,
+            LinkConfig::dc_100g(),
+            EcmpMode::FlowHash,
+            profile,
+        )
+    } else {
+        Topology::star_with(opts.seed, opts.ranks, 0, LinkConfig::dc_100g(), profile)
+    };
+    let groups = topo.leaf_groups.clone();
+    let mut cl = topo.cluster;
+    let devices = topo.devices;
+    if !opts.timing_only {
+        seed_gradients(&mut cl, &devices, opts.elements, spec.base_addr, opts.seed);
+    }
+    if opts.loss_p > 0.0 {
+        cl.fault.loss_p = opts.loss_p;
+    }
+
+    let mut algo: Box<dyn CollectiveAlgorithm> = match kind {
+        AlgoKind::NetdamRing => Box::new(RingAllreduce { fused: true }),
+        AlgoKind::ReduceScatter => Box::new(RingAllreduce { fused: false }),
+        AlgoKind::HalvingDoubling => Box::new(HalvingDoubling::new(opts.ranks)?),
+        AlgoKind::Hierarchical => Box::new(HierarchicalAllreduce::new(groups)?),
+        AlgoKind::AllGather => Box::new(RingAllGather),
+        AlgoKind::Broadcast => Box::new(RingBroadcast { root: 0 }),
+        AlgoKind::RingRoce | AlgoKind::MpiNative => unreachable!("handled above"),
+    };
+    let out = Driver::run(&mut cl, &mut eng, &devices, algo.as_mut(), &spec)?;
+    if opts.loss_p == 0.0 || opts.reliable {
+        ensure!(
+            out.ops_done == out.ops,
+            "{} incomplete: {}/{} ops done",
+            kind.name(),
+            out.ops_done,
+            out.ops
+        );
+    }
+    Ok(out.report(kind.name(), opts.elements))
+}

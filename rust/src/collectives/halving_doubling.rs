@@ -1,0 +1,271 @@
+//! Recursive halving-doubling allreduce (Rabenseifner-style).
+//!
+//! Latency-optimal at small message sizes: 2·log₂(N) rounds against the
+//! ring's 2·(N−1), at the cost of round synchrony. Every exchange maps
+//! onto the NetDAM ISA directly:
+//!
+//! * **reduce rounds** (vector halving): rank `r` sends the half of its
+//!   currently-owned segment that partner `p = r ⊕ d` keeps, as a 1-hop
+//!   `ReduceScatter` — a hash-guarded reduced write at `p` (§3.1's
+//!   exactly-once trick, so blind retransmission stays safe);
+//! * **gather rounds** (vector doubling): `r` streams its whole owned
+//!   segment to `p` as idempotent `AllGather` writes.
+//!
+//! Each round is one driver phase: guards and payloads are captured from
+//! live device memory at phase-plan time, which is exactly when the
+//! previous round's writes have landed (the driver drains the DES between
+//! phases). Within a round every rank has exactly one writer per block,
+//! so the per-block guard hashes stay valid for first delivery and reject
+//! duplicates.
+
+use anyhow::{ensure, Result};
+
+use crate::isa::{Instruction, SimdOp};
+use crate::net::Cluster;
+use crate::wire::{Packet, SrouHeader};
+
+use super::driver::{
+    guard_hash, op_flags, read_block, CollectiveAlgorithm, PlanCtx, Phase, ScheduledOp,
+};
+
+/// Which instruction a planned exchange uses.
+enum ExchangeKind {
+    /// Hash-guarded reduced write at the destination (reduce rounds).
+    GuardedReduce,
+    /// Plain idempotent write at the destination (gather rounds).
+    Gather,
+}
+
+pub struct HalvingDoubling {
+    n: usize,
+    log_n: usize,
+    /// Per-rank currently-owned segment as `(elem offset, elem len)`.
+    owned: Vec<(usize, usize)>,
+}
+
+impl HalvingDoubling {
+    pub fn new(n_ranks: usize) -> Result<Self> {
+        ensure!(
+            n_ranks >= 2 && n_ranks.is_power_of_two(),
+            "halving-doubling needs a power-of-two rank count, got {n_ranks}"
+        );
+        Ok(Self {
+            n: n_ranks,
+            log_n: n_ranks.trailing_zeros() as usize,
+            owned: Vec::new(),
+        })
+    }
+
+    /// Plan one rank's exchange of `[elem_off, elem_off+elem_len)` toward
+    /// `to`, blocked into `spec.lanes`-sized packets.
+    #[allow(clippy::too_many_arguments)]
+    fn push_exchange(
+        &self,
+        cl: &mut Cluster,
+        ctx: &PlanCtx<'_>,
+        ops: &mut Vec<ScheduledOp>,
+        next_id: &mut u32,
+        from: usize,
+        to: usize,
+        elem_off: usize,
+        elem_len: usize,
+        kind: &ExchangeKind,
+    ) -> Result<()> {
+        let lanes = ctx.spec.lanes;
+        let mut off = 0;
+        while off < elem_len {
+            let blk = lanes.min(elem_len - off);
+            let addr = ctx.spec.base_addr + (elem_off + off) as u64 * 4;
+            let len = blk * 4;
+            let payload = read_block(cl, ctx.devices[from], addr, len)?;
+            let done_id = *next_id;
+            *next_id += 1;
+            let instr = match kind {
+                ExchangeKind::GuardedReduce => {
+                    let expect_hash = guard_hash(cl, ctx.devices[to], addr, len)?;
+                    Instruction::ReduceScatter {
+                        op: SimdOp::Add,
+                        addr,
+                        block: done_id,
+                        rs_left: 1,
+                        expect_hash,
+                    }
+                }
+                ExchangeKind::Gather => Instruction::AllGather {
+                    addr,
+                    block: done_id,
+                },
+            };
+            let pkt = Packet::new(ctx.ips[from], 0, SrouHeader::direct(ctx.ips[to]), instr)
+                .with_flags(op_flags(ctx.spec.reliable))
+                .with_payload(payload);
+            ops.push(ScheduledOp {
+                rank: from,
+                done_id,
+                pkt,
+            });
+            off += blk;
+        }
+        Ok(())
+    }
+}
+
+impl CollectiveAlgorithm for HalvingDoubling {
+    fn name(&self) -> &'static str {
+        "halving-doubling"
+    }
+
+    fn phases(&self) -> usize {
+        2 * self.log_n
+    }
+
+    fn plan_phase(&mut self, cl: &mut Cluster, ctx: &PlanCtx<'_>, phase: usize) -> Result<Phase> {
+        let n = self.n;
+        ensure!(ctx.devices.len() == n, "rank count mismatch");
+        if phase == 0 {
+            ensure!(
+                ctx.spec.elements % n == 0,
+                "elements must divide by rank count"
+            );
+            self.owned = vec![(0, ctx.spec.elements); n];
+        }
+        let mut ops = Vec::new();
+        let mut next_id = ctx.done_id_base;
+        if phase < self.log_n {
+            // Reduce round: exchange halves at distance d = n / 2^(k+1).
+            let d = n >> (phase + 1);
+            let mut new_owned = self.owned.clone();
+            for r in 0..n {
+                let p = r ^ d;
+                let (lo, len) = self.owned[r];
+                let half = len / 2;
+                // The d-bit decides which half a rank keeps: bit clear →
+                // lower half, bit set → upper half. `r` sends the other
+                // half — exactly the half `p` keeps.
+                let (keep, send) = if r & d == 0 {
+                    ((lo, half), (lo + half, half))
+                } else {
+                    ((lo + half, half), (lo, half))
+                };
+                new_owned[r] = keep;
+                self.push_exchange(
+                    cl,
+                    ctx,
+                    &mut ops,
+                    &mut next_id,
+                    r,
+                    p,
+                    send.0,
+                    send.1,
+                    &ExchangeKind::GuardedReduce,
+                )?;
+            }
+            self.owned = new_owned;
+        } else {
+            // Gather round: same partners in reverse order, d = 2^k.
+            let d = 1usize << (phase - self.log_n);
+            let mut new_owned = self.owned.clone();
+            for r in 0..n {
+                let p = r ^ d;
+                let (lo, len) = self.owned[r];
+                self.push_exchange(
+                    cl,
+                    ctx,
+                    &mut ops,
+                    &mut next_id,
+                    r,
+                    p,
+                    lo,
+                    len,
+                    &ExchangeKind::Gather,
+                )?;
+                let (plo, plen) = self.owned[p];
+                new_owned[r] = (lo.min(plo), len + plen);
+            }
+            self.owned = new_owned;
+        }
+        Ok(Phase::Ops(ops))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::driver::{CollectiveSpec, Driver};
+    use crate::collectives::oracle::{naive_sum, read_vector, seed_gradients_exact};
+    use crate::net::{Cluster, LinkConfig, Topology};
+    use crate::sim::Engine;
+
+    fn run(ranks: usize, elements: usize, window: usize) {
+        let t = Topology::star(9, ranks, 0, LinkConfig::dc_100g());
+        let mut cl = t.cluster;
+        let devices = t.devices;
+        let grads = seed_gradients_exact(&mut cl, &devices, elements, 0, 0x4D);
+        let spec = CollectiveSpec {
+            elements,
+            window,
+            ..Default::default()
+        };
+        let mut algo = HalvingDoubling::new(ranks).unwrap();
+        let mut eng: Engine<Cluster> = Engine::new();
+        let out = Driver::run(&mut cl, &mut eng, &devices, &mut algo, &spec).unwrap();
+        assert_eq!(out.ops_done, out.ops, "all exchanges completed");
+        assert!(out.elapsed_ns > 0);
+        let oracle = naive_sum(&grads);
+        for &d in &devices {
+            assert_eq!(
+                read_vector(&mut cl, d, 0, elements).unwrap(),
+                oracle,
+                "ranks={ranks} elements={elements}"
+            );
+        }
+    }
+
+    #[test]
+    fn two_ranks_single_block() {
+        run(2, 2 * 2048, 4);
+    }
+
+    #[test]
+    fn four_ranks_multi_block() {
+        run(4, 4 * 2048 * 2, 8);
+    }
+
+    #[test]
+    fn eight_ranks_ragged_blocks() {
+        // elements/8 = 1536: sub-lane segments exercise ragged packets.
+        run(8, 8 * 1536, 4);
+    }
+
+    #[test]
+    fn rejects_non_power_of_two() {
+        assert!(HalvingDoubling::new(3).is_err());
+        assert!(HalvingDoubling::new(6).is_err());
+        assert!(HalvingDoubling::new(1).is_err());
+    }
+
+    #[test]
+    fn survives_loss_with_reliability() {
+        let ranks = 4;
+        let elements = 4 * 2048;
+        let t = Topology::star(11, ranks, 0, LinkConfig::dc_100g());
+        let mut cl = t.cluster;
+        cl.fault.loss_p = 0.02;
+        let devices = t.devices;
+        let grads = seed_gradients_exact(&mut cl, &devices, elements, 0, 0x4E);
+        let spec = CollectiveSpec {
+            elements,
+            window: 2,
+            reliable: true,
+            ..Default::default()
+        };
+        let mut algo = HalvingDoubling::new(ranks).unwrap();
+        let mut eng: Engine<Cluster> = Engine::new();
+        let out = Driver::run(&mut cl, &mut eng, &devices, &mut algo, &spec).unwrap();
+        assert_eq!(out.ops_done, out.ops, "loss recovered");
+        let oracle = naive_sum(&grads);
+        for &d in &devices {
+            assert_eq!(read_vector(&mut cl, d, 0, elements).unwrap(), oracle);
+        }
+    }
+}

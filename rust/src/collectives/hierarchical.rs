@@ -1,0 +1,228 @@
+//! Hierarchical two-level allreduce for Clos fabrics.
+//!
+//! On a `fat_tree` topology every leaf hosts a group of devices whose
+//! mutual traffic never crosses a spine. The two-level plan exploits
+//! that (the NetReduce / SHArP-style hierarchy, built from NetDAM's ISA):
+//!
+//! 1. **intra-leaf reduce** — per leaf, one `ReduceScatter` chain per
+//!    block walks every member and terminates at the leaf *leader* with
+//!    the hash-guarded write: leaf-local traffic only;
+//! 2. **inter-leader ring allreduce** — the leaders run the §3 ring
+//!    (reduce-scatter + fused all-gather) across the spines, on the full
+//!    vector chunked by leader count — the only phase that pays
+//!    spine bandwidth;
+//! 3. **intra-leaf broadcast** — each leader streams the finished vector
+//!    back through its members as an idempotent `AllGather` chain.
+//!
+//! All three phases are plain schedules over the shared
+//! [`Driver`](super::driver::Driver); phase 2 literally reuses the ring
+//! planner ([`plan_ring_ops`](super::netdam_ring::plan_ring_ops)) over
+//! the leader subset.
+
+use anyhow::{ensure, Result};
+
+use crate::isa::{Instruction, SimdOp};
+use crate::net::Cluster;
+use crate::wire::{Packet, Segment, SrouHeader};
+
+use super::driver::{
+    guard_hash, op_flags, read_block, CollectiveAlgorithm, PlanCtx, Phase, ScheduledOp,
+};
+use super::netdam_ring::plan_ring_ops;
+
+pub struct HierarchicalAllreduce {
+    /// Rank indices per leaf; `groups[g][0]` is leaf `g`'s leader.
+    groups: Vec<Vec<usize>>,
+}
+
+impl HierarchicalAllreduce {
+    pub fn new(groups: Vec<Vec<usize>>) -> Result<Self> {
+        ensure!(groups.len() >= 2, "hierarchical allreduce needs >= 2 leaf groups");
+        ensure!(
+            groups.iter().all(|g| !g.is_empty()),
+            "every leaf group needs at least one member"
+        );
+        Ok(Self { groups })
+    }
+
+    fn leaders(&self) -> Vec<usize> {
+        self.groups.iter().map(|g| g[0]).collect()
+    }
+}
+
+impl CollectiveAlgorithm for HierarchicalAllreduce {
+    fn name(&self) -> &'static str {
+        "hierarchical-2level"
+    }
+
+    fn phases(&self) -> usize {
+        3
+    }
+
+    fn plan_phase(&mut self, cl: &mut Cluster, ctx: &PlanCtx<'_>, phase: usize) -> Result<Phase> {
+        let n_ranks: usize = self.groups.iter().map(|g| g.len()).sum();
+        ensure!(
+            ctx.devices.len() == n_ranks,
+            "rank count {} != grouped members {n_ranks}",
+            ctx.devices.len()
+        );
+        let spec = ctx.spec;
+        let blocks = |elements: usize| elements.div_ceil(spec.lanes);
+        let mut ops = Vec::new();
+        let mut next_id = ctx.done_id_base;
+        match phase {
+            // ---- intra-leaf reduce chains into the leader -------------
+            0 => {
+                for group in &self.groups {
+                    let k = group.len();
+                    if k == 1 {
+                        continue; // the leader alone already holds its sum
+                    }
+                    ensure!(
+                        k - 1 <= crate::wire::srou_hdr::MAX_SEGMENTS,
+                        "leaf group of {k} exceeds the SROU stack"
+                    );
+                    let leader = group[0];
+                    let initiator = group[1];
+                    // Chain: initiator → interims (members 2..) → leader.
+                    let segs: Vec<Segment> = group[2..]
+                        .iter()
+                        .chain(std::iter::once(&leader))
+                        .map(|&m| Segment::to(ctx.ips[m]))
+                        .collect();
+                    for j in 0..blocks(spec.elements) {
+                        let elem_off = j * spec.lanes;
+                        let lanes = spec.lanes.min(spec.elements - elem_off);
+                        let len = lanes * 4;
+                        let addr = spec.base_addr + elem_off as u64 * 4;
+                        let payload = read_block(cl, ctx.devices[initiator], addr, len)?;
+                        let expect_hash = guard_hash(cl, ctx.devices[leader], addr, len)?;
+                        let done_id = next_id;
+                        next_id += 1;
+                        let pkt = Packet::new(
+                            ctx.ips[initiator],
+                            0,
+                            SrouHeader::through(segs.clone()),
+                            Instruction::ReduceScatter {
+                                op: SimdOp::Add,
+                                addr,
+                                block: done_id,
+                                rs_left: (k - 1) as u8,
+                                expect_hash,
+                            },
+                        )
+                        .with_flags(op_flags(spec.reliable))
+                        .with_payload(payload);
+                        ops.push(ScheduledOp {
+                            rank: initiator,
+                            done_id,
+                            pkt,
+                        });
+                    }
+                }
+            }
+            // ---- inter-leader ring allreduce over the spines ----------
+            1 => {
+                let leaders = self.leaders();
+                let sub_devices: Vec<_> = leaders.iter().map(|&r| ctx.devices[r]).collect();
+                let sub_ips: Vec<_> = leaders.iter().map(|&r| ctx.ips[r]).collect();
+                let mut ring =
+                    plan_ring_ops(cl, &sub_devices, &sub_ips, spec, true, ctx.done_id_base)?;
+                // Ring ranks are leader-local; remap onto the global space.
+                for op in &mut ring {
+                    op.rank = leaders[op.rank];
+                }
+                ops = ring;
+            }
+            // ---- intra-leaf broadcast from the leader -----------------
+            _ => {
+                for group in &self.groups {
+                    let k = group.len();
+                    if k == 1 {
+                        continue;
+                    }
+                    let leader = group[0];
+                    let segs: Vec<Segment> =
+                        group[1..].iter().map(|&m| Segment::to(ctx.ips[m])).collect();
+                    for j in 0..blocks(spec.elements) {
+                        let elem_off = j * spec.lanes;
+                        let lanes = spec.lanes.min(spec.elements - elem_off);
+                        let len = lanes * 4;
+                        let addr = spec.base_addr + elem_off as u64 * 4;
+                        let payload = read_block(cl, ctx.devices[leader], addr, len)?;
+                        let done_id = next_id;
+                        next_id += 1;
+                        let pkt = Packet::new(
+                            ctx.ips[leader],
+                            0,
+                            SrouHeader::through(segs.clone()),
+                            Instruction::AllGather {
+                                addr,
+                                block: done_id,
+                            },
+                        )
+                        .with_flags(op_flags(spec.reliable))
+                        .with_payload(payload);
+                        ops.push(ScheduledOp {
+                            rank: leader,
+                            done_id,
+                            pkt,
+                        });
+                    }
+                }
+            }
+        }
+        Ok(Phase::Ops(ops))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::driver::{CollectiveSpec, Driver};
+    use crate::collectives::oracle::{naive_sum, read_vector, seed_gradients_exact};
+    use crate::net::{EcmpMode, LinkConfig, Topology};
+    use crate::sim::Engine;
+
+    fn run_fat_tree(pods: usize, per_leaf: usize, elements: usize) {
+        let t = Topology::fat_tree(7, pods, per_leaf, 2, LinkConfig::dc_100g(), EcmpMode::FlowHash);
+        let groups = t.leaf_groups.clone();
+        let mut cl = t.cluster;
+        let devices = t.devices;
+        let grads = seed_gradients_exact(&mut cl, &devices, elements, 0, 0x2F);
+        let spec = CollectiveSpec {
+            elements,
+            window: 8,
+            ..Default::default()
+        };
+        let mut algo = HierarchicalAllreduce::new(groups).unwrap();
+        let mut eng: Engine<crate::net::Cluster> = Engine::new();
+        let out = Driver::run(&mut cl, &mut eng, &devices, &mut algo, &spec).unwrap();
+        assert_eq!(out.ops_done, out.ops, "all phases completed");
+        let oracle = naive_sum(&grads);
+        for &d in &devices {
+            assert_eq!(
+                read_vector(&mut cl, d, 0, elements).unwrap(),
+                oracle,
+                "pods={pods} per_leaf={per_leaf}"
+            );
+        }
+    }
+
+    #[test]
+    fn two_leaves_of_two() {
+        run_fat_tree(2, 2, 2 * 2048);
+    }
+
+    #[test]
+    fn three_leaves_of_three_multi_block() {
+        // 3 leaders: elements must divide by 3 for the ring phase.
+        run_fat_tree(3, 3, 3 * 2048 * 2);
+    }
+
+    #[test]
+    fn rejects_single_group() {
+        assert!(HierarchicalAllreduce::new(vec![vec![0, 1]]).is_err());
+        assert!(HierarchicalAllreduce::new(vec![vec![0], vec![]]).is_err());
+    }
+}

@@ -1,21 +1,40 @@
-//! MPI collectives (paper §3): the NetDAM ring allreduce built from the
-//! `ReduceScatter`/`AllGather` instructions, plus the two baselines the
-//! evaluation compares against (ring-allreduce over RoCE hosts, and a
-//! "native MPI" recursive-doubling allreduce).
+//! MPI collectives (paper §3): software-defined collectives over the
+//! NetDAM ISA, plus the host baselines the evaluation compares against.
 //!
-//! | impl | where the add runs | transport |
+//! The subsystem is layered: algorithms are *schedule generators*
+//! ([`driver::CollectiveAlgorithm`]) and one shared [`driver::Driver`]
+//! owns windowing, reliability, completion tracking, and report
+//! production — see [`driver`] for the architecture.
+//!
+//! | algorithm | where the add runs | shape |
 //! |---|---|---|
-//! | [`netdam_ring`] | in-memory ALU on each NetDAM device, chained by SROU | NetDAM/UDP, idempotent retransmit |
-//! | [`ring_roce`] | host CPU (AVX-512 class) after PCIe DMA | RoCE-like, lossless assumed |
-//! | [`mpi_native`] | host CPU, full vector per round | RoCE-like, lossless assumed |
+//! | [`netdam_ring::RingAllreduce`] | in-memory ALU, SROU-chained | single-phase ring, fused all-gather |
+//! | [`halving_doubling::HalvingDoubling`] | in-memory ALU | 2·log₂N rounds, latency-optimal |
+//! | [`hierarchical::HierarchicalAllreduce`] | in-memory ALU | leaf reduce → leader ring → leaf broadcast |
+//! | [`primitives::RingAllGather`] / [`primitives::RingBroadcast`] | — (pure writes) | standalone primitives |
+//! | [`ring_roce::RingRoceAllreduce`] | host CPU after PCIe DMA | Horovod-style baseline |
+//! | [`mpi_native::MpiRecursiveDoubling`] | host CPU, full vector/round | native-MPI baseline |
 
+pub mod driver;
+pub mod halving_doubling;
+pub mod hierarchical;
 pub mod mpi_native;
 pub mod netdam_ring;
 pub mod oracle;
+pub mod primitives;
 pub mod ring_roce;
 
-pub use netdam_ring::{run_ring_allreduce, AllreduceOutcome, RingSpec};
-pub use oracle::{oracle_sum, read_vector, seed_gradients};
+pub use driver::{
+    run_collective, AlgoKind, CollectiveAlgorithm, CollectiveSpec, Driver, DriverOutcome, Phase,
+    PlanCtx, RunOpts, ScheduledOp,
+};
+pub use halving_doubling::HalvingDoubling;
+pub use hierarchical::HierarchicalAllreduce;
+pub use netdam_ring::{run_ring_allreduce, AllreduceOutcome, RingAllreduce, RingSpec};
+pub use oracle::{
+    naive_sum, oracle_sum, read_vector, seed_gradients, seed_gradients_exact,
+};
+pub use primitives::{RingAllGather, RingBroadcast};
 
 use crate::sim::SimTime;
 
@@ -31,10 +50,54 @@ pub struct CollectiveReport {
 
 impl CollectiveReport {
     /// Effective allreduce bandwidth: 2·(N−1)/N · V / t, the standard
-    /// ring-allreduce "algorithm bandwidth" (bytes/ns = GB/s).
+    /// ring-allreduce "algorithm bandwidth" (Gbit/s). Degenerate inputs
+    /// (no elapsed time recorded, or fewer than 2 ranks) report 0 rather
+    /// than an infinite/negative bandwidth. For non-allreduce collectives
+    /// use [`CollectiveReport::bus_bw_gbps`] with the algorithm's own
+    /// data-movement fraction ([`AlgoKind::bw_fraction`]).
     pub fn algo_bw_gbps(&self, n_ranks: usize) -> f64 {
+        if n_ranks < 2 {
+            return 0.0;
+        }
+        self.bus_bw_gbps(2.0 * (n_ranks as f64 - 1.0) / n_ranks as f64)
+    }
+
+    /// Generic bus bandwidth (Gbit/s): `moved_fraction · V / t`, where
+    /// `moved_fraction` is the bytes-moved multiple of the vector size.
+    pub fn bus_bw_gbps(&self, moved_fraction: f64) -> f64 {
+        if self.elapsed_ns == 0 || moved_fraction <= 0.0 {
+            return 0.0;
+        }
         let v = self.elements as f64 * 4.0;
-        let moved = 2.0 * (n_ranks as f64 - 1.0) / n_ranks as f64 * v;
-        moved * 8.0 / self.elapsed_ns as f64
+        moved_fraction * v * 8.0 / self.elapsed_ns as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bw_guards_degenerate_inputs() {
+        let r = CollectiveReport {
+            algorithm: "x",
+            elements: 1 << 20,
+            elapsed_ns: 0,
+            link_drops: 0,
+            retransmits: 0,
+        };
+        assert_eq!(r.algo_bw_gbps(4), 0.0, "zero elapsed must not be inf");
+        let r = CollectiveReport {
+            elapsed_ns: 1000,
+            ..r
+        };
+        assert_eq!(r.algo_bw_gbps(0), 0.0, "n=0 must not be negative");
+        assert_eq!(r.algo_bw_gbps(1), 0.0, "n=1 must not be zero-div");
+        assert!(r.algo_bw_gbps(4) > 0.0);
+        // Generic bus bandwidth: fraction scales linearly, guards hold.
+        assert_eq!(r.bus_bw_gbps(0.0), 0.0);
+        let broadcast = r.bus_bw_gbps(AlgoKind::Broadcast.bw_fraction(4));
+        let allreduce = r.bus_bw_gbps(AlgoKind::NetdamRing.bw_fraction(4));
+        assert!(allreduce > broadcast, "allreduce moves 2(N-1)/N x V > V");
     }
 }

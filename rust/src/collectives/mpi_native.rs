@@ -6,13 +6,21 @@
 //! log₂(N) rounds, each costing wire(V) + DMA(V) + reduce(V). The CPU
 //! term is paid log₂(N) times on the *full* volume (vs `(N−1)/N·V` once
 //! for ring) which is exactly why it loses at scale.
+//!
+//! The per-rank state machine lives in [`RecursiveDoublingPeer`]; cluster
+//! construction and the run loop go through the shared
+//! [`Driver`](super::driver::Driver) via [`MpiRecursiveDoubling`].
 
 use crate::host::{HostConfig, HostModel};
 use crate::isa::Instruction;
-use crate::net::{App, AppCtx};
+use crate::net::{App, AppCtx, Cluster};
 use crate::sim::SimTime;
 use crate::wire::{DeviceIp, Packet, Payload, SrouHeader};
 use std::collections::HashMap;
+
+use anyhow::{ensure, Result};
+
+use super::driver::{CollectiveAlgorithm, Phase, PlanCtx};
 
 const TOK_SEND: u64 = 1;
 const TOK_PROC: u64 = 2;
@@ -150,37 +158,57 @@ impl App for RecursiveDoublingPeer {
     }
 }
 
+/// The driver-facing baseline: installs a star of recursive-doubling host
+/// peers into an empty cluster.
+pub struct MpiRecursiveDoubling {
+    pub ranks: usize,
+    pub elements: usize,
+    pub seed: u64,
+}
+
+impl CollectiveAlgorithm for MpiRecursiveDoubling {
+    fn name(&self) -> &'static str {
+        "mpi-native"
+    }
+
+    fn plan_phase(&mut self, cl: &mut Cluster, _ctx: &PlanCtx<'_>, _phase: usize) -> Result<Phase> {
+        use crate::net::{LinkConfig, Switch};
+        ensure!(
+            cl.nodes.is_empty(),
+            "mpi-native builds its own host fabric; pass a fresh cluster"
+        );
+        let sw = cl.add_switch(Switch::tor(None));
+        let link = LinkConfig::dc_100g();
+        let ips: Vec<DeviceIp> = (0..self.ranks)
+            .map(|i| DeviceIp::lan(151 + i as u8))
+            .collect();
+        for (r, &ip) in ips.iter().enumerate() {
+            let app = RecursiveDoublingPeer::new(r, &ips, self.elements, link.rate.0, self.seed);
+            let h = cl.add_host(ip, Some(Box::new(app)));
+            cl.connect(sw, h, link.clone());
+        }
+        cl.compute_routes();
+        Ok(Phase::Apps {
+            finished_counter: "mpi_native_finished",
+            done_hist: "mpi_native_done_ns",
+            expect_finished: self.ranks as u64,
+        })
+    }
+}
+
 /// Build a star of `n` hosts and run recursive-doubling allreduce.
 pub fn run_mpi_native(seed: u64, n: usize, elements: usize) -> crate::collectives::CollectiveReport {
-    use crate::net::{Cluster, LinkConfig, Switch};
-    use crate::sim::Engine;
-
-    let mut cl = Cluster::new(seed);
-    let sw = cl.add_switch(Switch::tor(None));
-    let link = LinkConfig::dc_100g();
-    let ips: Vec<DeviceIp> = (0..n).map(|i| DeviceIp::lan(151 + i as u8)).collect();
-    for (r, &ip) in ips.iter().enumerate() {
-        let app = RecursiveDoublingPeer::new(r, &ips, elements, link.rate.0, seed);
-        let h = cl.add_host(ip, Some(Box::new(app)));
-        cl.connect(sw, h, link.clone());
-    }
-    cl.compute_routes();
-    let mut eng: Engine<Cluster> = Engine::new();
-    cl.start_apps(&mut eng);
-    eng.run(&mut cl);
-    assert_eq!(cl.metrics.counter("mpi_native_finished") as usize, n);
-    let elapsed = cl
-        .metrics
-        .hist("mpi_native_done_ns")
-        .map(|h| h.max())
-        .unwrap_or(0);
-    crate::collectives::CollectiveReport {
-        algorithm: "mpi-native",
-        elements,
-        elapsed_ns: elapsed,
-        link_drops: cl.metrics.counter("link_drops"),
-        retransmits: 0,
-    }
+    use super::driver::{run_collective, AlgoKind, RunOpts};
+    run_collective(
+        AlgoKind::MpiNative,
+        &RunOpts {
+            elements,
+            ranks: n,
+            seed,
+            ..Default::default()
+        },
+    )
+    .expect("mpi-native run")
 }
 
 #[cfg(test)]

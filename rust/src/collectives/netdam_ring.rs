@@ -12,26 +12,26 @@
 //! Interim hops add their local contribution into the packet buffer (no
 //! local side effects — idempotent); the owner performs the hash-guarded
 //! write (§3.1's block-hash idempotency trick); the fused all-gather
-//! carries the finished block back around. A window of outstanding blocks
-//! per rank self-clocks against CollectiveDone completions — no barriers,
-//! no per-iteration synchronization (the contrast with Figure 7's RoCE
-//! flow).
-
-use std::cell::RefCell;
-use std::collections::{HashSet, VecDeque};
-use std::rc::Rc;
+//! carries the finished block back around. Windowing, completion
+//! tracking, and reliability live in the shared
+//! [`Driver`](super::driver::Driver) — this module only *plans* the ring
+//! schedule ([`RingAllreduce`]), which is also reused as the cross-leaf
+//! stage of the hierarchical allreduce.
 
 use anyhow::{ensure, Result};
 
-use crate::alu::block_hash;
-use crate::isa::registry::MemAccess;
-use crate::isa::{Flags, Instruction, SimdOp};
-use crate::net::{Cluster, InjectCmd, NodeId};
+use crate::isa::{Instruction, SimdOp};
+use crate::net::{Cluster, NodeId};
 use crate::sim::{Engine, SimTime};
-use crate::transport::ReliabilityTable;
-use crate::wire::{DeviceIp, Packet, Payload};
+use crate::wire::{DeviceIp, Packet};
 
-/// Parameters of one allreduce run.
+use super::driver::{
+    guard_hash, op_flags, read_block, CollectiveAlgorithm, CollectiveSpec, Driver, PlanCtx, Phase,
+    ScheduledOp,
+};
+
+/// Parameters of one allreduce run (back-compat shell over
+/// [`CollectiveSpec`] plus the ring's own `fused` knob).
 #[derive(Debug, Clone)]
 pub struct RingSpec {
     /// Total f32 elements (must divide evenly by the rank count).
@@ -72,185 +72,118 @@ pub struct AllreduceOutcome {
     pub hash_guard_drops: u64,
 }
 
-struct BlockPlan {
-    initiator_rank: usize,
-    pkt: Packet, // seq filled at injection
+/// The ring schedule generator: one `ReduceScatter` chain per block, the
+/// paper's "whole MPI allreduce chunk in one instruction".
+pub struct RingAllreduce {
+    /// Fused all-gather tail (`false` = reduce-scatter only).
+    pub fused: bool,
 }
 
-struct Driver {
-    pending: Vec<VecDeque<usize>>, // per-rank queue of global block ids
-    plans: Vec<Option<BlockPlan>>,
-    devices: Vec<NodeId>,
-    blocks_per_chunk: usize,
-    done: HashSet<u32>,
-    last_done: SimTime,
-    reliable: bool,
-}
+impl CollectiveAlgorithm for RingAllreduce {
+    fn name(&self) -> &'static str {
+        if self.fused {
+            "netdam-ring"
+        } else {
+            "reduce-scatter"
+        }
+    }
 
-impl Driver {
-    /// Pop the next pending block for `rank` (sequence numbers were
-    /// pre-assigned at plan time).
-    fn next_cmd(&mut self, rank: usize) -> Option<InjectCmd> {
-        let g = self.pending[rank].pop_front()?;
-        let plan = self.plans[g].take().expect("block injected once");
-        Some(InjectCmd {
-            origin: self.devices[plan.initiator_rank],
-            pkt: plan.pkt,
-            reliable: self.reliable,
-        })
+    fn plan_phase(&mut self, cl: &mut Cluster, ctx: &PlanCtx<'_>, _phase: usize) -> Result<Phase> {
+        let ops = plan_ring_ops(
+            cl,
+            ctx.devices,
+            ctx.ips,
+            ctx.spec,
+            self.fused,
+            ctx.done_id_base,
+        )?;
+        Ok(Phase::Ops(ops))
     }
 }
 
-/// Run a ring allreduce over `devices` in `cl`. Blocks until the DES
-/// drains; returns timing + integrity counters.
+/// Build the ring chain schedule over an arbitrary device subset. Ranks
+/// in the returned ops index into `devices`; the hierarchical allreduce
+/// remaps them onto its global rank space.
+pub(crate) fn plan_ring_ops(
+    cl: &mut Cluster,
+    devices: &[NodeId],
+    ips: &[DeviceIp],
+    spec: &CollectiveSpec,
+    fused: bool,
+    id_base: u32,
+) -> Result<Vec<ScheduledOp>> {
+    let n = devices.len();
+    ensure!(n >= 2, "allreduce needs at least 2 ranks");
+    ensure!(spec.elements % n == 0, "elements must divide by rank count");
+    let hops = if fused { 2 * (n - 1) } else { n - 1 };
+    ensure!(
+        hops <= crate::wire::srou_hdr::MAX_SEGMENTS,
+        "{hops} ring hops exceed the SROU stack"
+    );
+    let chunk_elems = spec.elements / n;
+    let blocks_per_chunk = chunk_elems.div_ceil(spec.lanes);
+    let mut ops = Vec::with_capacity(blocks_per_chunk * n);
+    for c in 0..n {
+        for j in 0..blocks_per_chunk {
+            let g = (c * blocks_per_chunk + j) as u32;
+            let elem_off = c * chunk_elems + j * spec.lanes;
+            let lanes = spec.lanes.min(chunk_elems - j * spec.lanes);
+            let len = lanes * 4;
+            let addr = spec.base_addr + elem_off as u64 * 4;
+            // Payload: the initiator's pristine block. Guard: hash of the
+            // owner's pristine block (§3.1 exactly-once write).
+            let payload = read_block(cl, devices[c], addr, len)?;
+            let owner = (c + n - 1) % n;
+            let expect_hash = guard_hash(cl, devices[owner], addr, len)?;
+            let srou = crate::srou::ring_chain(ips, c, hops);
+            let done_id = id_base + g;
+            let pkt = Packet::new(
+                ips[c],
+                0, // seq assigned by the driver
+                srou,
+                Instruction::ReduceScatter {
+                    op: SimdOp::Add,
+                    addr,
+                    block: done_id,
+                    rs_left: (n - 1) as u8,
+                    expect_hash,
+                },
+            )
+            .with_flags(op_flags(spec.reliable))
+            .with_payload(payload);
+            ops.push(ScheduledOp {
+                rank: c,
+                done_id,
+                pkt,
+            });
+        }
+    }
+    Ok(ops)
+}
+
+/// Run a ring allreduce over `devices` in `cl` through the shared driver.
+/// Blocks until the DES drains; returns timing + integrity counters.
 pub fn run_ring_allreduce(
     cl: &mut Cluster,
     eng: &mut Engine<Cluster>,
     devices: &[NodeId],
     spec: &RingSpec,
 ) -> Result<AllreduceOutcome> {
-    let n = devices.len();
-    ensure!(n >= 2, "allreduce needs at least 2 ranks");
-    ensure!(spec.elements % n == 0, "elements must divide by rank count");
-    ensure!(2 * (n - 1) <= crate::wire::srou_hdr::MAX_SEGMENTS);
-    let chunk_elems = spec.elements / n;
-    let blocks_per_chunk = chunk_elems.div_ceil(spec.lanes);
-    let total_blocks = blocks_per_chunk * n;
-    let ips: Vec<DeviceIp> = devices.iter().map(|&d| cl.device(d).ip()).collect();
-
-    if spec.reliable {
-        // Chains take ~10 us idle but queue under load; a generous timeout
-        // avoids spurious (harmless but wasteful) duplicate chains.
-        cl.xport = ReliabilityTable::new(2_000_000, 12);
-    }
-
-    // ---- build one packet plan per block ------------------------------
-    let mut plans: Vec<Option<BlockPlan>> = Vec::with_capacity(total_blocks);
-    let mut pending: Vec<VecDeque<usize>> = vec![VecDeque::new(); n];
-    for c in 0..n {
-        for j in 0..blocks_per_chunk {
-            let g = c * blocks_per_chunk + j;
-            let elem_off = c * chunk_elems + j * spec.lanes;
-            let lanes = spec.lanes.min(chunk_elems - j * spec.lanes);
-            let len = lanes * 4;
-            let addr = spec.base_addr + elem_off as u64 * 4;
-            // Payload: the initiator's pristine block.
-            let init_dev = cl.device_mut(devices[c]);
-            let payload = if init_dev.mem_ref().is_phantom() {
-                Payload::phantom(len)
-            } else {
-                Payload::from_bytes(init_dev.mem().read(addr, len)?)
-            };
-            // Guard: hash of the owner's pristine block.
-            let owner = (c + n - 1) % n;
-            let owner_dev = cl.device_mut(devices[owner]);
-            let expect_hash = if owner_dev.mem_ref().is_phantom() {
-                0
-            } else {
-                block_hash(&owner_dev.mem().read(addr, len)?)
-            };
-            // SROU: N−1 reduce hops (+ N−1 gather hops when fused).
-            let hops = if spec.fused { 2 * (n - 1) } else { n - 1 };
-            let srou = crate::srou::ring_chain(&ips, c, hops);
-            let pkt = Packet::new(
-                ips[c],
-                0, // seq at injection
-                srou,
-                Instruction::ReduceScatter {
-                    op: SimdOp::Add,
-                    addr,
-                    block: g as u32,
-                    rs_left: (n - 1) as u8,
-                    expect_hash,
-                },
-            )
-            .with_flags(if spec.reliable {
-                Flags(Flags::RELIABLE)
-            } else {
-                Flags::default()
-            })
-            .with_payload(payload);
-            plans.push(Some(BlockPlan {
-                initiator_rank: c,
-                pkt,
-            }));
-            pending[c].push_back(g);
-        }
-    }
-
-    let driver = Rc::new(RefCell::new(Driver {
-        pending,
-        plans,
-        devices: devices.to_vec(),
-        blocks_per_chunk,
-        done: HashSet::new(),
-        last_done: 0,
+    let cspec = CollectiveSpec {
+        elements: spec.elements,
+        lanes: spec.lanes,
+        window: spec.window,
         reliable: spec.reliable,
-    }));
-
-    // ---- completion hook: windowed self-clocking ----------------------
-    // Sequence allocation must go through the cluster, so the hook only
-    // *marks* and the actual refill happens via a pre-allocated seq pool:
-    // we give every block a unique seq up front instead.
-    {
-        let mut d = driver.borrow_mut();
-        for g in 0..total_blocks {
-            let rank = d.plans[g].as_ref().unwrap().initiator_rank;
-            let seq = cl.alloc_seq(devices[rank]);
-            d.plans[g].as_mut().unwrap().pkt.seq = seq;
-        }
-    }
-    let hook_driver = Rc::clone(&driver);
-    cl.on_completion = Some(Box::new(move |rec| {
-        let mut d = hook_driver.borrow_mut();
-        let Instruction::CollectiveDone { block } = rec.instr else {
-            return Vec::new();
-        };
-        if !d.done.insert(block) {
-            return Vec::new(); // duplicate Done (retransmit) — ignore
-        }
-        d.last_done = rec.time;
-        let rank = block as usize / d.blocks_per_chunk;
-        match d.next_cmd(rank) {
-            Some(cmd) => vec![cmd],
-            None => Vec::new(),
-        }
-    }));
-
-    // ---- kick the initial window --------------------------------------
-    let mut kicks = Vec::new();
-    {
-        let mut d = driver.borrow_mut();
-        for rank in 0..n {
-            for _ in 0..spec.window.min(blocks_per_chunk) {
-                if let Some(cmd) = d.next_cmd(rank) {
-                    kicks.push(cmd);
-                }
-            }
-        }
-    }
-    for cmd in kicks {
-        if cmd.reliable {
-            cl.inject_reliable(eng, cmd.origin, cmd.pkt);
-        } else {
-            cl.inject(eng, cmd.origin, cmd.pkt);
-        }
-    }
-
-    eng.run(cl);
-    cl.on_completion = None;
-
-    let d = driver.borrow();
-    let guard_drops: u64 = devices
-        .iter()
-        .map(|&n| cl.device(n).drops_hash_guard)
-        .sum();
+        base_addr: spec.base_addr,
+    };
+    let mut algo = RingAllreduce { fused: spec.fused };
+    let out = Driver::run(cl, eng, devices, &mut algo, &cspec)?;
     Ok(AllreduceOutcome {
-        elapsed_ns: d.last_done,
-        blocks: total_blocks,
-        blocks_done: d.done.len(),
-        retransmits: cl.xport.retransmits,
-        hash_guard_drops: guard_drops,
+        elapsed_ns: out.elapsed_ns,
+        blocks: out.ops,
+        blocks_done: out.ops_done,
+        retransmits: out.retransmits,
+        hash_guard_drops: out.hash_guard_drops,
     })
 }
 
@@ -367,22 +300,15 @@ mod tests {
     fn timing_mode_runs_at_paper_shape() {
         // Phantom devices, 1M elements: elapsed should be within 3× of
         // the line-rate floor 2(N−1)/N·V/rate.
-        let t = {
-            let mut cl = Cluster::new(1);
-            let sw = cl.add_switch(crate::net::Switch::tor(None));
-            let mut devices = Vec::new();
-            for i in 0..4u8 {
-                let d = cl.add_device(
-                    crate::device::DeviceConfig::paper_default(DeviceIp::lan(1 + i))
-                        .timing_only(),
-                );
-                cl.connect(sw, d, LinkConfig::dc_100g());
-                devices.push(d);
-            }
-            cl.compute_routes();
-            (cl, devices)
-        };
-        let (mut cl, devices) = t;
+        let t = Topology::star_with(
+            1,
+            4,
+            0,
+            LinkConfig::dc_100g(),
+            crate::net::DeviceProfile::TimingOnly,
+        );
+        let mut cl = t.cluster;
+        let devices = t.devices;
         let elements = 1 << 20;
         let spec = RingSpec {
             elements,

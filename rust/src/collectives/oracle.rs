@@ -7,6 +7,28 @@ use crate::net::{Cluster, NodeId};
 use crate::util::bytes::{bytes_to_f32s, f32s_to_bytes};
 use crate::util::Xoshiro256;
 
+/// The shared seeding loop: writes `gen(rank)`'s vector into each
+/// data-bearing device at `base`; phantom devices contribute an empty vec.
+fn seed_with(
+    cl: &mut Cluster,
+    devices: &[NodeId],
+    base: u64,
+    mut gen: impl FnMut(usize) -> Vec<f32>,
+) -> Vec<Vec<f32>> {
+    let mut out = Vec::with_capacity(devices.len());
+    for (r, &node) in devices.iter().enumerate() {
+        let dev = cl.device_mut(node);
+        if dev.mem_ref().is_phantom() {
+            out.push(Vec::new());
+            continue;
+        }
+        let data = gen(r);
+        dev.mem().write(base, &f32s_to_bytes(&data)).unwrap();
+        out.push(data);
+    }
+    out
+}
+
 /// Write per-rank gradient vectors into each device's HBM at `base`.
 /// Returns the vectors for oracle computation (empty inner vecs when the
 /// devices are phantom/timing-only).
@@ -17,19 +39,47 @@ pub fn seed_gradients(
     base: u64,
     seed: u64,
 ) -> Vec<Vec<f32>> {
-    let mut out = Vec::with_capacity(devices.len());
-    for (r, &node) in devices.iter().enumerate() {
-        let dev = cl.device_mut(node);
-        if dev.mem_ref().is_phantom() {
-            out.push(Vec::new());
-            continue;
-        }
+    seed_with(cl, devices, base, |r| {
         let mut rng = Xoshiro256::seed_from(seed ^ (r as u64 + 1).wrapping_mul(0x9E37));
         // Values in a range where f32 ring-order addition is exact enough
         // to compare bitwise against the oracle's identical order.
-        let data = rng.f32_vec(elements, -8.0, 8.0);
-        dev.mem().write(base, &f32s_to_bytes(&data)).unwrap();
-        out.push(data);
+        rng.f32_vec(elements, -8.0, 8.0)
+    })
+}
+
+/// Like [`seed_gradients`], but with *integer-valued* f32s in [-32, 32].
+/// Small-integer sums are exact in f32 under **any** association, so this
+/// seeding lets algorithms with different reduction orders (halving-
+/// doubling, hierarchical) be verified bit-exactly against [`naive_sum`].
+pub fn seed_gradients_exact(
+    cl: &mut Cluster,
+    devices: &[NodeId],
+    elements: usize,
+    base: u64,
+    seed: u64,
+) -> Vec<Vec<f32>> {
+    seed_with(cl, devices, base, |r| {
+        let mut rng = Xoshiro256::seed_from(seed ^ (r as u64 + 1).wrapping_mul(0x51ED));
+        (0..elements)
+            .map(|_| rng.range_u64(0, 64) as f32 - 32.0)
+            .collect()
+    })
+}
+
+/// Element-wise sum in rank order. With integer-valued data (see
+/// [`seed_gradients_exact`]) this equals the result of *any* reduction
+/// order bit-for-bit, making it the oracle for order-shuffling
+/// algorithms.
+pub fn naive_sum(per_rank: &[Vec<f32>]) -> Vec<f32> {
+    let n = per_rank.len();
+    assert!(n > 0);
+    let elements = per_rank[0].len();
+    assert!(per_rank.iter().all(|v| v.len() == elements));
+    let mut out = per_rank[0].clone();
+    for v in &per_rank[1..] {
+        for (o, x) in out.iter_mut().zip(v.iter()) {
+            *o += x;
+        }
     }
     out
 }
@@ -84,6 +134,21 @@ mod tests {
         for i in 0..8 {
             assert_eq!(oracle[i], a[i] + b[i] + c[i] + d[i]);
         }
+    }
+
+    #[test]
+    fn exact_seeding_is_integer_valued_and_order_free() {
+        use crate::device::DeviceConfig;
+        use crate::wire::DeviceIp;
+        let mut cl = Cluster::new(1);
+        let d1 = cl.add_device(DeviceConfig::paper_default(DeviceIp::lan(1)));
+        let d2 = cl.add_device(DeviceConfig::paper_default(DeviceIp::lan(2)));
+        let g = seed_gradients_exact(&mut cl, &[d1, d2], 128, 0, 5);
+        for v in &g {
+            assert!(v.iter().all(|x| x.fract() == 0.0 && x.abs() <= 32.0));
+        }
+        // Any association is exact: ring-order oracle == naive sum.
+        assert_eq!(oracle_sum(&g), naive_sum(&g));
     }
 
     #[test]

@@ -1,0 +1,240 @@
+//! Standalone collective primitives on the NetDAM ISA.
+//!
+//! The §3 allreduce is reduce-scatter ∘ all-gather fused into one
+//! instruction chain; these planners expose the building blocks as
+//! first-class collectives over the shared
+//! [`Driver`](super::driver::Driver):
+//!
+//! * **reduce-scatter** — [`super::netdam_ring::RingAllreduce`] with
+//!   `fused: false` (chunk `c` reduced at its ring owner);
+//! * **all-gather** ([`RingAllGather`]) — every rank streams its chunk
+//!   around the ring as idempotent `AllGather` writes;
+//! * **broadcast** ([`RingBroadcast`]) — the root streams the whole
+//!   vector through the ring chain.
+//!
+//! Both planners emit pure `AllGather` ops: writes derived solely from
+//! the packet, so blind retransmission is safe (§3.1) and no guard hash
+//! is needed.
+
+use anyhow::{ensure, Result};
+
+use crate::isa::Instruction;
+use crate::net::Cluster;
+use crate::wire::Packet;
+
+use super::driver::{op_flags, read_block, CollectiveAlgorithm, PlanCtx, Phase, ScheduledOp};
+
+/// Ring all-gather: rank `r` owns chunk `r`; after the run every rank
+/// holds every chunk.
+pub struct RingAllGather;
+
+impl CollectiveAlgorithm for RingAllGather {
+    fn name(&self) -> &'static str {
+        "all-gather"
+    }
+
+    fn plan_phase(&mut self, cl: &mut Cluster, ctx: &PlanCtx<'_>, _phase: usize) -> Result<Phase> {
+        let n = ctx.devices.len();
+        ensure!(n >= 2, "all-gather needs at least 2 ranks");
+        ensure!(
+            ctx.spec.elements % n == 0,
+            "elements must divide by rank count"
+        );
+        ensure!(
+            n - 1 <= crate::wire::srou_hdr::MAX_SEGMENTS,
+            "ring of {n} exceeds the SROU stack"
+        );
+        let spec = ctx.spec;
+        let chunk_elems = spec.elements / n;
+        let mut ops = Vec::new();
+        let mut next_id = ctx.done_id_base;
+        for r in 0..n {
+            let mut off = 0;
+            while off < chunk_elems {
+                let lanes = spec.lanes.min(chunk_elems - off);
+                let len = lanes * 4;
+                let addr = spec.base_addr + (r * chunk_elems + off) as u64 * 4;
+                let payload = read_block(cl, ctx.devices[r], addr, len)?;
+                let done_id = next_id;
+                next_id += 1;
+                let pkt = Packet::new(
+                    ctx.ips[r],
+                    0,
+                    crate::srou::ring_chain(ctx.ips, r, n - 1),
+                    Instruction::AllGather {
+                        addr,
+                        block: done_id,
+                    },
+                )
+                .with_flags(op_flags(spec.reliable))
+                .with_payload(payload);
+                ops.push(ScheduledOp {
+                    rank: r,
+                    done_id,
+                    pkt,
+                });
+                off += lanes;
+            }
+        }
+        Ok(Phase::Ops(ops))
+    }
+}
+
+/// Ring broadcast of `root`'s whole vector to every other rank.
+pub struct RingBroadcast {
+    pub root: usize,
+}
+
+impl CollectiveAlgorithm for RingBroadcast {
+    fn name(&self) -> &'static str {
+        "broadcast"
+    }
+
+    fn plan_phase(&mut self, cl: &mut Cluster, ctx: &PlanCtx<'_>, _phase: usize) -> Result<Phase> {
+        let n = ctx.devices.len();
+        ensure!(n >= 2, "broadcast needs at least 2 ranks");
+        ensure!(self.root < n, "broadcast root {} out of range", self.root);
+        ensure!(
+            n - 1 <= crate::wire::srou_hdr::MAX_SEGMENTS,
+            "ring of {n} exceeds the SROU stack"
+        );
+        let spec = ctx.spec;
+        let mut ops = Vec::new();
+        let mut next_id = ctx.done_id_base;
+        let mut off = 0;
+        while off < spec.elements {
+            let lanes = spec.lanes.min(spec.elements - off);
+            let len = lanes * 4;
+            let addr = spec.base_addr + off as u64 * 4;
+            let payload = read_block(cl, ctx.devices[self.root], addr, len)?;
+            let done_id = next_id;
+            next_id += 1;
+            let pkt = Packet::new(
+                ctx.ips[self.root],
+                0,
+                crate::srou::ring_chain(ctx.ips, self.root, n - 1),
+                Instruction::AllGather {
+                    addr,
+                    block: done_id,
+                },
+            )
+            .with_flags(op_flags(spec.reliable))
+            .with_payload(payload);
+            ops.push(ScheduledOp {
+                rank: self.root,
+                done_id,
+                pkt,
+            });
+            off += lanes;
+        }
+        Ok(Phase::Ops(ops))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::driver::{CollectiveSpec, Driver};
+    use crate::collectives::oracle::read_vector;
+    use crate::isa::registry::MemAccess;
+    use crate::net::{LinkConfig, Topology};
+    use crate::sim::Engine;
+    use crate::util::bytes::f32s_to_bytes;
+    use crate::util::Xoshiro256;
+
+    /// Seed each rank with rank-tagged data so misplaced chunks are
+    /// detectable.
+    fn seed_distinct(
+        cl: &mut crate::net::Cluster,
+        devices: &[crate::net::NodeId],
+        elements: usize,
+    ) -> Vec<Vec<f32>> {
+        let mut out = Vec::new();
+        for (r, &d) in devices.iter().enumerate() {
+            let mut rng = Xoshiro256::seed_from(0xD1 ^ (r as u64) << 4);
+            let data = rng.f32_vec(elements, -4.0, 4.0);
+            cl.device_mut(d).mem().write(0, &f32s_to_bytes(&data)).unwrap();
+            out.push(data);
+        }
+        out
+    }
+
+    #[test]
+    fn all_gather_distributes_every_chunk() {
+        let n = 4;
+        let elements = n * 2048 + n * 512; // ragged chunks too
+        let t = Topology::star(3, n, 0, LinkConfig::dc_100g());
+        let mut cl = t.cluster;
+        let devices = t.devices;
+        let data = seed_distinct(&mut cl, &devices, elements);
+        let spec = CollectiveSpec {
+            elements,
+            window: 4,
+            ..Default::default()
+        };
+        let mut algo = RingAllGather;
+        let mut eng: Engine<crate::net::Cluster> = Engine::new();
+        let out = Driver::run(&mut cl, &mut eng, &devices, &mut algo, &spec).unwrap();
+        assert_eq!(out.ops_done, out.ops);
+        // Expected image: chunk r everywhere is rank r's chunk r.
+        let chunk = elements / n;
+        let mut expect = vec![0f32; elements];
+        for r in 0..n {
+            expect[r * chunk..(r + 1) * chunk].copy_from_slice(&data[r][r * chunk..(r + 1) * chunk]);
+        }
+        for &d in &devices {
+            assert_eq!(read_vector(&mut cl, d, 0, elements).unwrap(), expect);
+        }
+    }
+
+    #[test]
+    fn broadcast_replicates_root() {
+        let n = 5;
+        let elements = 3 * 2048 + 100;
+        let t = Topology::star(4, n, 0, LinkConfig::dc_100g());
+        let mut cl = t.cluster;
+        let devices = t.devices;
+        let data = seed_distinct(&mut cl, &devices, elements);
+        let spec = CollectiveSpec {
+            elements,
+            window: 8,
+            ..Default::default()
+        };
+        let root = 2;
+        let mut algo = RingBroadcast { root };
+        let mut eng: Engine<crate::net::Cluster> = Engine::new();
+        let out = Driver::run(&mut cl, &mut eng, &devices, &mut algo, &spec).unwrap();
+        assert_eq!(out.ops_done, out.ops);
+        for &d in &devices {
+            assert_eq!(
+                read_vector(&mut cl, d, 0, elements).unwrap(),
+                data[root],
+                "every rank holds the root vector"
+            );
+        }
+    }
+
+    #[test]
+    fn broadcast_survives_duplication() {
+        // AllGather writes are idempotent: duplicated packets are harmless.
+        let n = 4;
+        let elements = 2 * 2048;
+        let t = Topology::star(8, n, 0, LinkConfig::dc_100g());
+        let mut cl = t.cluster;
+        cl.fault.dup_p = 0.05;
+        let devices = t.devices;
+        let data = seed_distinct(&mut cl, &devices, elements);
+        let spec = CollectiveSpec {
+            elements,
+            window: 2,
+            ..Default::default()
+        };
+        let mut algo = RingBroadcast { root: 0 };
+        let mut eng: Engine<crate::net::Cluster> = Engine::new();
+        let out = Driver::run(&mut cl, &mut eng, &devices, &mut algo, &spec).unwrap();
+        assert_eq!(out.ops_done, out.ops);
+        for &d in &devices {
+            assert_eq!(read_vector(&mut cl, d, 0, elements).unwrap(), data[0]);
+        }
+    }
+}

@@ -7,13 +7,21 @@
 //! costs NetDAM avoids: PCIe DMA of the chunk + the CPU reduction loop.
 //! Steps are self-synchronizing (a rank cannot send step `s+1` before it
 //! reduced step `s`) — the implicit barrier the paper points at.
+//!
+//! The per-rank state machine lives in [`RingRocePeer`]; cluster
+//! construction, app start, drain, and report production go through the
+//! shared [`Driver`](super::driver::Driver) via [`RingRoceAllreduce`].
 
 use crate::host::{HostConfig, HostModel};
 use crate::isa::Instruction;
-use crate::net::{App, AppCtx};
+use crate::net::{App, AppCtx, Cluster};
 use crate::sim::SimTime;
 use crate::wire::{DeviceIp, Packet, Payload, SrouHeader};
 use std::collections::HashMap;
+
+use anyhow::{ensure, Result};
+
+use super::driver::{CollectiveAlgorithm, Phase, PlanCtx};
 
 const TOK_SEND: u64 = 1;
 const TOK_PROC: u64 = 2;
@@ -22,7 +30,7 @@ const TOK_PROC: u64 = 2;
 pub const MTU_PAYLOAD: usize = 8192;
 
 #[derive(Debug, Clone, Copy, PartialEq)]
-enum Phase {
+enum PhaseSm {
     ReduceScatter,
     AllGather,
     Done,
@@ -38,7 +46,7 @@ pub struct RingRocePeer {
     /// Inter-packet pacing at line rate.
     gap_ns: SimTime,
     host: HostModel,
-    phase: Phase,
+    phase: PhaseSm,
     step: usize,
     sent_pkts: usize,
     send_done: bool,
@@ -71,7 +79,7 @@ impl RingRocePeer {
             pkts_per_chunk: pkts,
             gap_ns: gap,
             host: HostModel::new(HostConfig::paper_default(), seed ^ rank as u64),
-            phase: Phase::ReduceScatter,
+            phase: PhaseSm::ReduceScatter,
             step: 0,
             sent_pkts: 0,
             send_done: false,
@@ -83,9 +91,9 @@ impl RingRocePeer {
 
     fn tag(&self) -> u64 {
         let p = match self.phase {
-            Phase::ReduceScatter => 0,
-            Phase::AllGather => 1,
-            Phase::Done => unreachable!(),
+            PhaseSm::ReduceScatter => 0,
+            PhaseSm::AllGather => 1,
+            PhaseSm::Done => unreachable!(),
         };
         p * 1000 + self.step as u64
     }
@@ -124,7 +132,7 @@ impl RingRocePeer {
     }
 
     fn check_recv(&mut self, ctx: &mut AppCtx) {
-        if self.recv_processed || self.phase == Phase::Done {
+        if self.recv_processed || self.phase == PhaseSm::Done {
             return;
         }
         let tag = self.tag();
@@ -133,7 +141,7 @@ impl RingRocePeer {
             // the CPU reduction before the step barrier clears.
             let dma = self.host.nic_write_ns(self.chunk_bytes);
             let t = match self.phase {
-                Phase::ReduceScatter => dma + self.host.reduce_ns(self.chunk_bytes),
+                PhaseSm::ReduceScatter => dma + self.host.reduce_ns(self.chunk_bytes),
                 _ => dma,
             };
             ctx.timer(t, TOK_PROC);
@@ -141,23 +149,23 @@ impl RingRocePeer {
     }
 
     fn maybe_advance(&mut self, ctx: &mut AppCtx) {
-        if !(self.send_done && self.recv_processed) || self.phase == Phase::Done {
+        if !(self.send_done && self.recv_processed) || self.phase == PhaseSm::Done {
             return;
         }
         self.step += 1;
         if self.step == self.n - 1 {
             match self.phase {
-                Phase::ReduceScatter => {
-                    self.phase = Phase::AllGather;
+                PhaseSm::ReduceScatter => {
+                    self.phase = PhaseSm::AllGather;
                     self.step = 0;
                 }
-                Phase::AllGather => {
-                    self.phase = Phase::Done;
+                PhaseSm::AllGather => {
+                    self.phase = PhaseSm::Done;
                     ctx.record(self.metric, ctx.now);
                     ctx.count("ring_roce_finished", 1);
                     return;
                 }
-                Phase::Done => unreachable!(),
+                PhaseSm::Done => unreachable!(),
             }
         }
         self.begin_step(ctx);
@@ -188,34 +196,64 @@ impl App for RingRocePeer {
     }
 }
 
-/// Build a star of `n` RoCE hosts, run ring allreduce, return elapsed ns.
-pub fn run_ring_roce(seed: u64, n: usize, elements: usize) -> crate::collectives::CollectiveReport {
-    use crate::net::{Cluster, LinkConfig, Switch};
-    use crate::sim::Engine;
+/// The driver-facing baseline: installs a star of RoCE host peers into an
+/// empty cluster; the shared driver starts them and reads the metrics.
+pub struct RingRoceAllreduce {
+    pub ranks: usize,
+    pub elements: usize,
+    pub seed: u64,
+}
 
-    let mut cl = Cluster::new(seed);
-    let sw = cl.add_switch(Switch::tor(None));
-    let link = LinkConfig::dc_100g();
-    let ips: Vec<DeviceIp> = (0..n).map(|i| DeviceIp::lan(101 + i as u8)).collect();
-    for (r, &ip) in ips.iter().enumerate() {
-        let app = RingRocePeer::new(r, n, ips[(r + 1) % n], elements, link.rate.0, seed);
-        let h = cl.add_host(ip, Some(Box::new(app)));
-        cl.connect(sw, h, link.clone());
+impl CollectiveAlgorithm for RingRoceAllreduce {
+    fn name(&self) -> &'static str {
+        "ring-roce"
     }
-    cl.compute_routes();
-    let mut eng: Engine<Cluster> = Engine::new();
-    cl.start_apps(&mut eng);
-    eng.run(&mut cl);
-    let finished = cl.metrics.counter("ring_roce_finished");
-    assert_eq!(finished as usize, n, "all ranks completed");
-    let elapsed = cl.metrics.hist("ring_roce_done_ns").map(|h| h.max()).unwrap_or(0);
-    crate::collectives::CollectiveReport {
-        algorithm: "ring-roce",
-        elements,
-        elapsed_ns: elapsed,
-        link_drops: cl.metrics.counter("link_drops"),
-        retransmits: 0,
+
+    fn plan_phase(&mut self, cl: &mut Cluster, _ctx: &PlanCtx<'_>, _phase: usize) -> Result<Phase> {
+        use crate::net::{LinkConfig, Switch};
+        ensure!(
+            cl.nodes.is_empty(),
+            "ring-roce builds its own host fabric; pass a fresh cluster"
+        );
+        let sw = cl.add_switch(Switch::tor(None));
+        let link = LinkConfig::dc_100g();
+        let ips: Vec<DeviceIp> = (0..self.ranks)
+            .map(|i| DeviceIp::lan(101 + i as u8))
+            .collect();
+        for (r, &ip) in ips.iter().enumerate() {
+            let app = RingRocePeer::new(
+                r,
+                self.ranks,
+                ips[(r + 1) % self.ranks],
+                self.elements,
+                link.rate.0,
+                self.seed,
+            );
+            let h = cl.add_host(ip, Some(Box::new(app)));
+            cl.connect(sw, h, link.clone());
+        }
+        cl.compute_routes();
+        Ok(Phase::Apps {
+            finished_counter: "ring_roce_finished",
+            done_hist: "ring_roce_done_ns",
+            expect_finished: self.ranks as u64,
+        })
     }
+}
+
+/// Build a star of `n` RoCE hosts, run ring allreduce, return the report.
+pub fn run_ring_roce(seed: u64, n: usize, elements: usize) -> crate::collectives::CollectiveReport {
+    use super::driver::{run_collective, AlgoKind, RunOpts};
+    run_collective(
+        AlgoKind::RingRoce,
+        &RunOpts {
+            elements,
+            ranks: n,
+            seed,
+            ..Default::default()
+        },
+    )
+    .expect("ring-roce run")
 }
 
 #[cfg(test)]

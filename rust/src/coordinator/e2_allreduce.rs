@@ -1,21 +1,20 @@
-//! E2 — the §3.3 allreduce comparison.
+//! E2 — the §3.3 allreduce comparison, data-driven over the algorithm
+//! menu.
 //!
 //! Paper (536,870,912 × f32, 4 nodes, 100G): native MPI 2.8 s, ring
 //! (Horovod-style) 2.1 s, NetDAM ≈ 0.4 s. We reproduce the *shape*:
 //! ordering NetDAM ≪ ring < native, NetDAM ≥ 4× vs ring, with the
 //! absolute NetDAM time approaching the ring-allreduce line-rate floor
-//! `2·(N−1)/N · V / 100G`.
+//! `2·(N−1)/N · V / 100G`. Since the collective layer became a shared
+//! driver (`collectives::driver`), the comparison set is just a list of
+//! [`AlgoKind`]s — `--algo` on the CLI swaps algorithms in and out
+//! without touching this coordinator.
 
 use anyhow::Result;
 
-use crate::collectives::mpi_native::run_mpi_native;
-use crate::collectives::ring_roce::run_ring_roce;
-use crate::collectives::{run_ring_allreduce, RingSpec};
-use crate::device::DeviceConfig;
+use crate::collectives::{run_collective, AlgoKind, CollectiveReport, RunOpts};
 use crate::metrics::Table;
-use crate::net::{Cluster, LinkConfig, Switch, Topology};
-use crate::sim::{fmt_ns, Engine, SimTime};
-use crate::wire::DeviceIp;
+use crate::sim::{fmt_ns, SimTime};
 
 #[derive(Debug, Clone)]
 pub struct E2Config {
@@ -27,6 +26,8 @@ pub struct E2Config {
     pub seed: u64,
     /// Also run the host baselines (slow at paper scale).
     pub with_baselines: bool,
+    /// Which collectives to run; the classic paper triple by default.
+    pub algos: Vec<AlgoKind>,
 }
 
 impl Default for E2Config {
@@ -38,6 +39,11 @@ impl Default for E2Config {
             window: 16,
             seed: 0xE2,
             with_baselines: true,
+            algos: vec![
+                AlgoKind::NetdamRing,
+                AlgoKind::RingRoce,
+                AlgoKind::MpiNative,
+            ],
         }
     }
 }
@@ -48,80 +54,78 @@ pub struct E2Result {
     pub ring_roce_ns: SimTime,
     pub mpi_native_ns: SimTime,
     pub line_rate_floor_ns: SimTime,
+    /// One report per algorithm actually run, menu order.
+    pub reports: Vec<CollectiveReport>,
     pub table: Table,
+}
+
+/// The ring-allreduce line-rate floor `2·(N−1)/N · V / 100G` in ns —
+/// the single source for the coordinator table and the bench grid.
+pub fn line_rate_floor_ns(ranks: usize, elements: usize) -> SimTime {
+    let v_bytes = elements as f64 * 4.0;
+    (2.0 * (ranks as f64 - 1.0) / ranks as f64 * v_bytes / 12.5) as SimTime
+}
+
+/// Paper-measured reference time at the 2 GiB scale, where known.
+fn paper_ref(kind: AlgoKind) -> &'static str {
+    match kind {
+        AlgoKind::NetdamRing => "~0.4 s",
+        AlgoKind::RingRoce => "2.1 s",
+        AlgoKind::MpiNative => "2.8 s",
+        _ => "-",
+    }
 }
 
 pub fn run_e2(cfg: &E2Config) -> Result<E2Result> {
     let n = cfg.ranks;
-    // --- NetDAM -----------------------------------------------------
-    let (mut cl, devices) = if cfg.timing_only {
-        let mut cl = Cluster::new(cfg.seed);
-        let sw = cl.add_switch(Switch::tor(None));
-        let mut devices = Vec::new();
-        for i in 0..n {
-            let d = cl.add_device(
-                DeviceConfig::paper_default(DeviceIp::lan(1 + i as u8)).timing_only(),
-            );
-            cl.connect(sw, d, LinkConfig::dc_100g());
-            devices.push(d);
-        }
-        cl.compute_routes();
-        (cl, devices)
-    } else {
-        let t = Topology::star(cfg.seed, n, 0, LinkConfig::dc_100g());
-        (t.cluster, t.devices)
-    };
-    if !cfg.timing_only {
-        crate::collectives::seed_gradients(&mut cl, &devices, cfg.elements, 0, cfg.seed);
-    }
-    let spec = RingSpec {
+    let opts = RunOpts {
         elements: cfg.elements,
+        ranks: n,
+        seed: cfg.seed,
         window: cfg.window,
+        timing_only: cfg.timing_only,
         ..Default::default()
     };
-    let mut eng: Engine<Cluster> = Engine::new();
-    let out = run_ring_allreduce(&mut cl, &mut eng, &devices, &spec)?;
-    anyhow::ensure!(out.blocks_done == out.blocks, "netdam allreduce incomplete");
-    let netdam_ns = out.elapsed_ns;
+    // Keep each report paired with its kind so the table can never
+    // mislabel a row if the skip logic changes.
+    let mut runs: Vec<(AlgoKind, CollectiveReport)> = Vec::new();
+    for &kind in &cfg.algos {
+        if kind.is_host_baseline() && !cfg.with_baselines {
+            continue;
+        }
+        // Host baselines model phantom traffic regardless; the NetDAM
+        // arms honor `timing_only`.
+        runs.push((kind, run_collective(kind, &opts)?));
+    }
 
-    // --- baselines ----------------------------------------------------
-    let (ring_ns, native_ns) = if cfg.with_baselines {
-        let ring = run_ring_roce(cfg.seed, n, cfg.elements);
-        let native = run_mpi_native(cfg.seed, n, cfg.elements);
-        (ring.elapsed_ns, native.elapsed_ns)
-    } else {
-        (0, 0)
+    let elapsed_of = |kind: AlgoKind| {
+        runs.iter()
+            .find(|(k, _)| *k == kind)
+            .map(|(_, r)| r.elapsed_ns)
+            .unwrap_or(0)
     };
+    let netdam_ns = elapsed_of(AlgoKind::NetdamRing);
+    let ring_ns = elapsed_of(AlgoKind::RingRoce);
+    let native_ns = elapsed_of(AlgoKind::MpiNative);
 
-    let v_bytes = cfg.elements as f64 * 4.0;
-    let floor = (2.0 * (n as f64 - 1.0) / n as f64 * v_bytes / 12.5) as SimTime;
+    let floor = line_rate_floor_ns(n, cfg.elements);
 
     let mut table = Table::new(&["algorithm", "time", "vs NetDAM", "paper (2GiB)"]);
     let speed = |t: SimTime| {
-        if t == 0 {
+        if t == 0 || netdam_ns == 0 {
             "-".to_string()
         } else {
             format!("{:.2}x", t as f64 / netdam_ns as f64)
         }
     };
-    table.row(&[
-        "NetDAM ring (in-memory ALU)".into(),
-        fmt_ns(netdam_ns),
-        "1.00x".into(),
-        "~0.4 s".into(),
-    ]);
-    table.row(&[
-        "Ring allreduce over RoCE".into(),
-        fmt_ns(ring_ns),
-        speed(ring_ns),
-        "2.1 s".into(),
-    ]);
-    table.row(&[
-        "Native MPI (recursive doubling)".into(),
-        fmt_ns(native_ns),
-        speed(native_ns),
-        "2.8 s".into(),
-    ]);
+    for (kind, r) in &runs {
+        table.row(&[
+            r.algorithm.to_string(),
+            fmt_ns(r.elapsed_ns),
+            speed(r.elapsed_ns),
+            paper_ref(*kind).to_string(),
+        ]);
+    }
     table.row(&[
         "line-rate floor 2(N-1)/N.V".into(),
         fmt_ns(floor),
@@ -134,6 +138,7 @@ pub fn run_e2(cfg: &E2Config) -> Result<E2Result> {
         ring_roce_ns: ring_ns,
         mpi_native_ns: native_ns,
         line_rate_floor_ns: floor,
+        reports: runs.into_iter().map(|(_, r)| r).collect(),
         table,
     })
 }
@@ -158,5 +163,22 @@ mod tests {
         assert!(speedup > 3.0, "paper shows ~5x, got {speedup:.2}x");
         // NetDAM within 3× of the line-rate floor.
         assert!(r.netdam_ns < 3 * r.line_rate_floor_ns);
+    }
+
+    #[test]
+    fn e2_runs_the_extended_menu() {
+        // Every algorithm produces a report on the same config/grid.
+        let r = run_e2(&E2Config {
+            elements: 4 * 2048 * 2,
+            timing_only: true,
+            window: 4,
+            algos: AlgoKind::ALL.to_vec(),
+            ..Default::default()
+        })
+        .unwrap();
+        assert_eq!(r.reports.len(), AlgoKind::ALL.len());
+        for rep in &r.reports {
+            assert!(rep.elapsed_ns > 0, "{} produced no timing", rep.algorithm);
+        }
     }
 }

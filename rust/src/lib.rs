@@ -17,13 +17,18 @@
 //!   programmable ISA ([`isa`]), device pipeline model ([`device`]),
 //!   Ethernet fabric ([`net`]), segment routing ([`srou`]), transport
 //!   ([`transport`]), IOMMU ([`iommu`]), global memory pool ([`pool`]),
-//!   host/PCIe/RoCE baselines ([`host`], [`roce`]), collectives
-//!   ([`collectives`]) and the experiment coordinator ([`coordinator`]).
+//!   host/PCIe/RoCE baselines ([`host`], [`roce`]), the unified
+//!   collective engine ([`collectives`] — a shared
+//!   [`collectives::driver`] running a menu of schedule-generating
+//!   algorithms: NetDAM ring, halving-doubling, hierarchical two-level,
+//!   reduce-scatter/all-gather/broadcast primitives, and the host
+//!   baselines) and the experiment coordinator ([`coordinator`]).
 //! * **L2 (python/compile/model.py)** — JAX compute graphs (SIMD block ops,
 //!   reduce step, block hash, MLP train step) lowered once to HLO text.
 //! * **L1 (python/compile/kernels/)** — Pallas kernels implementing the
 //!   paper's 2048-lane SIMD ALU semantics, verified against a pure-jnp
-//!   oracle.
+//!   oracle. The [`runtime`] module executes their ABI; in this offline
+//!   build it computes through the bit-identical native ALU (PJRT stub).
 
 pub mod alu;
 pub mod cli;

@@ -2,7 +2,7 @@
 //!
 //! ```text
 //! netdam latency    [--samples N] [--len BYTES]          # E1 (§2.3)
-//! netdam allreduce  [--elements N] [--timing-only] ...   # E2 (§3.3)
+//! netdam allreduce  [--elements N] [--algo LIST|all] ... # E2 (§3.3)
 //! netdam incast     [--senders N] [--bytes B]            # E3 (§2.5)
 //! netdam multipath  [--bytes B]                          # E4 (§2.3)
 //! netdam alu        [--lanes N]                          # E6: native vs Pallas/PJRT
@@ -51,6 +51,22 @@ fn main() -> Result<()> {
             print!("{}", r.table.render());
         }
         "allreduce" => {
+            use netdam::collectives::AlgoKind;
+            // `--algo ring,hd,...` (or `--algo all`) selects the
+            // collective menu; default is the classic paper triple.
+            let algos = match args.opt_list("algo") {
+                None => E2Config::default().algos,
+                Some(names) if names.is_empty() => {
+                    bail!("--algo requires at least one algorithm name (or `all`)")
+                }
+                Some(names) if names.iter().any(|n| n.eq_ignore_ascii_case("all")) => {
+                    AlgoKind::ALL.to_vec()
+                }
+                Some(names) => names
+                    .iter()
+                    .map(|n| AlgoKind::parse(n))
+                    .collect::<Result<Vec<_>>>()?,
+            };
             let c = E2Config {
                 elements: args.opt_usize("elements", cfg.usize("allreduce.elements", 1 << 20))?,
                 ranks: args.opt_usize("ranks", cfg.usize("allreduce.ranks", 4))?,
@@ -58,6 +74,7 @@ fn main() -> Result<()> {
                 window: args.opt_usize("window", cfg.usize("allreduce.window", 16))?,
                 seed: args.opt_u64("seed", cfg.u64("seed", 0xE2))?,
                 with_baselines: !args.flag("no-baselines"),
+                algos,
             };
             println!(
                 "E2 — {} x f32 allreduce over {} ranks ({})",
@@ -166,6 +183,8 @@ fn print_usage() {
     println!(
         "netdam — NetDAM reproduction launcher\n\
          subcommands: latency | allreduce | incast | multipath | alu | train | info\n\
-         common flags: --config FILE, --set key=value, --seed N"
+         common flags: --config FILE, --set key=value, --seed N\n\
+         allreduce: --algo netdam-ring|halving-doubling|hierarchical|reduce-scatter|\n\
+                    all-gather|broadcast|ring-roce|mpi-native (comma list, or `all`)"
     );
 }

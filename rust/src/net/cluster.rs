@@ -338,6 +338,17 @@ impl Cluster {
         });
     }
 
+    /// Inject a deferred command (the collective driver's currency): one
+    /// entry point for plain and reliability-tracked injection, usable
+    /// both from completion hooks and from driver kick-off code.
+    pub fn inject_cmd(&mut self, eng: &mut Engine<Cluster>, cmd: InjectCmd) {
+        if cmd.reliable {
+            self.inject_reliable(eng, cmd.origin, cmd.pkt);
+        } else {
+            self.inject(eng, cmd.origin, cmd.pkt);
+        }
+    }
+
     /// Inject with timeout-retransmit tracking. The instruction should be
     /// idempotent (debug-asserted) — that is NetDAM's reliability model.
     pub fn inject_reliable(&mut self, eng: &mut Engine<Cluster>, origin: NodeId, pkt: Packet) {
@@ -544,11 +555,7 @@ impl Cluster {
             let cmds = hook(&rec);
             self.on_completion = Some(hook);
             for c in cmds {
-                if c.reliable {
-                    self.inject_reliable(eng, c.origin, c.pkt);
-                } else {
-                    self.inject(eng, c.origin, c.pkt);
-                }
+                self.inject_cmd(eng, c);
             }
         }
         self.completions.push(rec);

@@ -18,4 +18,4 @@ pub use cluster::{
 };
 pub use link::{Link, LinkConfig, LinkId, TxResult};
 pub use switch::{flow_hash, EcmpMode, Switch};
-pub use topology::Topology;
+pub use topology::{DeviceProfile, Topology};

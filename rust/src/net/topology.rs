@@ -5,6 +5,11 @@
 //! * [`Topology::dual_spine`] — two parallel spines between leaves: the
 //!   multipath scenario of §2.3 (experiment E4).
 //! * [`Topology::fat_tree`] — a k-ary 2-level Clos for pool-scale runs.
+//!
+//! Every builder has a `*_with` variant taking a [`DeviceProfile`]
+//! (data-bearing vs timing-only phantom HBM) and records the leaf
+//! membership of each device in [`Topology::leaf_groups`] — the grouping
+//! the hierarchical collectives consume.
 
 use crate::device::DeviceConfig;
 use crate::wire::DeviceIp;
@@ -13,24 +18,59 @@ use super::cluster::{Cluster, NodeId};
 use super::link::LinkConfig;
 use super::switch::{EcmpMode, Switch};
 
+/// How the builders configure each NetDAM device.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub enum DeviceProfile {
+    /// Real HBM contents (verifiable collectives).
+    #[default]
+    Data,
+    /// Phantom payload accounting only — paper-scale vectors at simulation
+    /// speed (2^29 floats without 2 GiB per device).
+    TimingOnly,
+}
+
+impl DeviceProfile {
+    fn config(self, ip: DeviceIp) -> DeviceConfig {
+        let cfg = DeviceConfig::paper_default(ip);
+        match self {
+            DeviceProfile::Data => cfg,
+            DeviceProfile::TimingOnly => cfg.timing_only(),
+        }
+    }
+}
+
 /// Handles to the nodes a builder created.
 pub struct Topology {
     pub cluster: Cluster,
     pub devices: Vec<NodeId>,
     pub hosts: Vec<NodeId>,
     pub switches: Vec<NodeId>,
+    /// Indices into `devices`, grouped by the leaf switch they hang off
+    /// (one group for the star). Group order follows device order.
+    pub leaf_groups: Vec<Vec<usize>>,
 }
 
 impl Topology {
     /// N devices and H plain hosts on one switch. Device ips are
     /// 10.0.0.1.., host ips 10.0.0.101.., switch unaddressed.
     pub fn star(seed: u64, n_devices: usize, n_hosts: usize, link: LinkConfig) -> Topology {
+        Self::star_with(seed, n_devices, n_hosts, link, DeviceProfile::Data)
+    }
+
+    /// [`Topology::star`] with an explicit device profile.
+    pub fn star_with(
+        seed: u64,
+        n_devices: usize,
+        n_hosts: usize,
+        link: LinkConfig,
+        profile: DeviceProfile,
+    ) -> Topology {
         let mut cl = Cluster::new(seed);
         let sw = cl.add_switch(Switch::tor(None));
         let mut devices = Vec::new();
         let mut hosts = Vec::new();
         for i in 0..n_devices {
-            let d = cl.add_device(DeviceConfig::paper_default(DeviceIp::lan(1 + i as u8)));
+            let d = cl.add_device(profile.config(DeviceIp::lan(1 + i as u8)));
             cl.connect(sw, d, link.clone());
             devices.push(d);
         }
@@ -42,6 +82,7 @@ impl Topology {
         cl.compute_routes();
         Topology {
             cluster: cl,
+            leaf_groups: vec![(0..devices.len()).collect()],
             devices,
             hosts,
             switches: vec![sw],
@@ -82,6 +123,10 @@ impl Topology {
         cl.compute_routes();
         Topology {
             cluster: cl,
+            leaf_groups: vec![
+                (0..devs_per_leaf).collect(),
+                (devs_per_leaf..devs_per_leaf * 2).collect(),
+            ],
             devices,
             hosts: vec![],
             switches: vec![leaf1, leaf2, spine1, spine2],
@@ -98,12 +143,34 @@ impl Topology {
         link: LinkConfig,
         ecmp: EcmpMode,
     ) -> Topology {
+        Self::fat_tree_with(
+            seed,
+            pods,
+            devs_per_leaf,
+            spines,
+            link,
+            ecmp,
+            DeviceProfile::Data,
+        )
+    }
+
+    /// [`Topology::fat_tree`] with an explicit device profile.
+    pub fn fat_tree_with(
+        seed: u64,
+        pods: usize,
+        devs_per_leaf: usize,
+        spines: usize,
+        link: LinkConfig,
+        ecmp: EcmpMode,
+        profile: DeviceProfile,
+    ) -> Topology {
         assert!(pods * devs_per_leaf <= 96, "device ip space is 8-bit here");
         let mut cl = Cluster::new(seed);
         let spine_ids: Vec<NodeId> = (0..spines)
             .map(|s| cl.add_switch(Switch::new(Some(DeviceIp::lan(200 + s as u8)), 600, ecmp)))
             .collect();
         let mut devices = Vec::new();
+        let mut leaf_groups = Vec::new();
         let mut switches = spine_ids.clone();
         for p in 0..pods {
             let leaf = cl.add_switch(Switch::new(None, 600, ecmp));
@@ -111,12 +178,15 @@ impl Topology {
             for &s in &spine_ids {
                 cl.connect(leaf, s, link.clone());
             }
+            let mut group = Vec::new();
             for d in 0..devs_per_leaf {
                 let ip = DeviceIp::lan(1 + (p * devs_per_leaf + d) as u8);
-                let dev = cl.add_device(DeviceConfig::paper_default(ip));
+                let dev = cl.add_device(profile.config(ip));
                 cl.connect(leaf, dev, link.clone());
+                group.push(devices.len());
                 devices.push(dev);
             }
+            leaf_groups.push(group);
         }
         cl.compute_routes();
         Topology {
@@ -124,6 +194,7 @@ impl Topology {
             devices,
             hosts: vec![],
             switches,
+            leaf_groups,
         }
     }
 
@@ -147,6 +218,7 @@ mod tests {
         assert_eq!(t.hosts.len(), 1);
         // 5 endpoints × 2 directions.
         assert_eq!(t.cluster.links.len(), 10);
+        assert_eq!(t.leaf_groups, vec![vec![0, 1, 2, 3]]);
     }
 
     #[test]
@@ -165,6 +237,7 @@ mod tests {
     fn fat_tree_cross_pod_reachability() {
         let t = Topology::fat_tree(5, 3, 2, 2, LinkConfig::dc_100g(), EcmpMode::FlowHash);
         assert_eq!(t.devices.len(), 6);
+        assert_eq!(t.leaf_groups, vec![vec![0, 1], vec![2, 3], vec![4, 5]]);
         let mut cl = t.cluster;
         let mut eng: Engine<Cluster> = Engine::new();
         // Device 0 (pod 0) reads from device 5 (pod 2).
@@ -183,6 +256,24 @@ mod tests {
         let comps = cl.device_mut(from).drain_completions();
         assert_eq!(comps.len(), 1);
         assert_eq!(cl.total_drops(), 0);
+    }
+
+    #[test]
+    fn timing_profile_builds_phantom_devices() {
+        let t = Topology::star_with(
+            2,
+            2,
+            0,
+            LinkConfig::dc_100g(),
+            DeviceProfile::TimingOnly,
+        );
+        for &d in &t.devices {
+            assert!(t.cluster.device(d).mem_ref().is_phantom());
+        }
+        let t = Topology::star(2, 2, 0, LinkConfig::dc_100g());
+        for &d in &t.devices {
+            assert!(!t.cluster.device(d).mem_ref().is_phantom());
+        }
     }
 
     use super::super::cluster::Cluster;

@@ -10,8 +10,7 @@
 //! allocator simple and deterministic.
 
 use std::collections::BTreeMap;
-
-use thiserror::Error;
+use std::fmt;
 
 use crate::wire::DeviceIp;
 
@@ -19,17 +18,33 @@ use super::interleave::{Extent, InterleaveMap};
 
 pub type TenantId = u32;
 
-#[derive(Debug, Error, PartialEq)]
+#[derive(Debug, PartialEq)]
 pub enum AllocError {
-    #[error("pool exhausted: requested {requested} bytes, largest hole {largest}")]
     Exhausted { requested: u64, largest: u64 },
-    #[error("gva {0:#x} is not an allocation of this tenant")]
     NotOwned(u64),
-    #[error("access [{gva:#x}..+{len}) denied for tenant {tenant}")]
     Denied { tenant: TenantId, gva: u64, len: u64 },
-    #[error("zero-byte allocation")]
     Zero,
 }
+
+impl fmt::Display for AllocError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            AllocError::Exhausted { requested, largest } => write!(
+                f,
+                "pool exhausted: requested {requested} bytes, largest hole {largest}"
+            ),
+            AllocError::NotOwned(gva) => {
+                write!(f, "gva {gva:#x} is not an allocation of this tenant")
+            }
+            AllocError::Denied { tenant, gva, len } => {
+                write!(f, "access [{gva:#x}..+{len}) denied for tenant {tenant}")
+            }
+            AllocError::Zero => write!(f, "zero-byte allocation"),
+        }
+    }
+}
+
+impl std::error::Error for AllocError {}
 
 #[derive(Debug, Clone, PartialEq)]
 pub struct Allocation {

@@ -3,13 +3,14 @@
 //! Each worker executes the `mlp_grad` artifact (fwd/bwd through PJRT);
 //! the *gradient allreduce* between workers is the part NetDAM
 //! accelerates, and `examples/train_dataparallel.rs` routes it through
-//! the simulated fabric. Parameter updates go through the `sgd_apply`
-//! artifact — i.e. the Pallas SIMD kernels — closing the loop on the
-//! paper's "in-memory optimizer" direction.
+//! the simulated fabric. In this offline build the PJRT backend is
+//! stubbed (see [`super`]): the shape/ABI plumbing works, but
+//! [`MlpTrainer::open`] fails with a clear message unless artifacts and a
+//! PJRT plugin are present.
 
-use anyhow::{anyhow, Result};
+use anyhow::Result;
 
-use super::{Runtime, ALU_CHUNK, LANES};
+use super::{Literal, Runtime, LANES};
 
 /// MLP geometry, read from `abi.txt` at open time.
 #[derive(Debug, Clone, Copy)]
@@ -71,18 +72,16 @@ impl MlpTrainer {
         // Initialize parameters from the artifact (identical to python).
         let outs = rt.exec("mlp_init", &[])?;
         anyhow::ensure!(outs.len() == 4, "mlp_init must return 4 params");
-        let params = outs
-            .iter()
-            .map(|l| l.to_vec::<f32>().map_err(|e| anyhow!("param: {e:?}")))
-            .collect::<Result<Vec<_>>>()?;
+        let params = outs.iter().map(|l| l.to_vec()).collect();
         Ok(MlpTrainer { rt, shape, params })
     }
 
     /// Generate the deterministic batch for `step` (same stream the
     /// python oracle trains on).
-    pub fn batch(&mut self, step: u32) -> Result<(xla::Literal, xla::Literal)> {
-        let step_lit = xla::Literal::from(step);
+    pub fn batch(&mut self, step: u32) -> Result<(Literal, Literal)> {
+        let step_lit = Literal::vec1(&[step as f32]);
         let mut outs = self.rt.exec("mlp_batch", &[step_lit])?;
+        anyhow::ensure!(outs.len() == 2, "mlp_batch returns (x, y)");
         let y = outs.pop().unwrap();
         let x = outs.pop().unwrap();
         Ok((x, y))
@@ -90,17 +89,13 @@ impl MlpTrainer {
 
     /// Forward/backward on the worker's current params; returns flat
     /// gradients in param order + the scalar loss.
-    pub fn grad_step(&mut self, x: &xla::Literal, y: &xla::Literal) -> Result<(Vec<Vec<f32>>, f32)> {
+    pub fn grad_step(&mut self, x: &Literal, y: &Literal) -> Result<(Vec<Vec<f32>>, f32)> {
         let lens = self.shape.param_lens();
         let args = vec![
-            xla::Literal::vec1(&self.params[0])
-                .reshape(&[self.shape.d_in as i64, self.shape.d_h as i64])
-                .map_err(|e| anyhow!("reshape w1: {e:?}"))?,
-            xla::Literal::vec1(&self.params[1]),
-            xla::Literal::vec1(&self.params[2])
-                .reshape(&[self.shape.d_h as i64, self.shape.d_out as i64])
-                .map_err(|e| anyhow!("reshape w2: {e:?}"))?,
-            xla::Literal::vec1(&self.params[3]),
+            Literal::vec1(&self.params[0]),
+            Literal::vec1(&self.params[1]),
+            Literal::vec1(&self.params[2]),
+            Literal::vec1(&self.params[3]),
             x.clone(),
             y.clone(),
         ];
@@ -108,16 +103,16 @@ impl MlpTrainer {
         anyhow::ensure!(outs.len() == 5, "mlp_grad returns 4 grads + loss");
         let mut grads = Vec::with_capacity(4);
         for (i, l) in outs[..4].iter().enumerate() {
-            let g = l.to_vec::<f32>().map_err(|e| anyhow!("grad {i}: {e:?}"))?;
+            let g = l.to_vec();
             anyhow::ensure!(g.len() == lens[i], "grad {i} length");
             grads.push(g);
         }
-        let loss = outs[4].to_vec::<f32>().map_err(|e| anyhow!("loss: {e:?}"))?[0];
+        let loss = outs[4].to_vec()[0];
         Ok((grads, loss))
     }
 
-    /// Apply `p ← p − lr·g` through the `sgd_apply` Pallas artifact.
-    /// Parameters shorter than the artifact's block count are zero-padded.
+    /// Apply `p ← p − lr·g` through the `sgd_apply` artifact. Parameters
+    /// shorter than the artifact's block count are zero-padded.
     pub fn sgd_apply(&mut self, grads: &[Vec<f32>], lr: f32) -> Result<()> {
         let sgd_len = {
             // artifact is sized for the largest parameter (w1).
@@ -131,20 +126,15 @@ impl MlpTrainer {
             pw[..p.len()].copy_from_slice(p);
             gw[..g.len()].copy_from_slice(g);
             let args = vec![
-                xla::Literal::vec1(&pw),
-                xla::Literal::vec1(&gw),
-                xla::Literal::vec1(&neg_lr)
-                    .reshape(&[1, LANES as i64])
-                    .map_err(|e| anyhow!("reshape lr: {e:?}"))?,
+                Literal::vec1(&pw),
+                Literal::vec1(&gw),
+                Literal::vec1(&neg_lr),
             ];
             let outs = self.rt.exec("sgd_apply", &args)?;
-            let new_p = outs[0]
-                .to_vec::<f32>()
-                .map_err(|e| anyhow!("sgd out: {e:?}"))?;
+            let new_p = outs[0].to_vec();
             let n = p.len();
             p.copy_from_slice(&new_p[..n]);
         }
-        let _ = ALU_CHUNK;
         Ok(())
     }
 

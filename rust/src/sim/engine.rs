@@ -24,7 +24,6 @@ pub type EventFn<W> = Box<dyn FnOnce(&mut W, &mut Engine<W>)>;
 struct Entry<W> {
     time: SimTime,
     seq: u64,
-    cancelled: bool,
     f: Option<EventFn<W>>,
 }
 
@@ -54,6 +53,11 @@ pub struct Engine<W> {
     now: SimTime,
     seq: u64,
     heap: BinaryHeap<Entry<W>>,
+    /// Ids of events still sitting in the heap. Guards `cancel` against
+    /// ids that already executed: without the check, every such id would
+    /// sit in `cancelled` forever (unbounded growth on long runs).
+    pending_ids: std::collections::HashSet<EventId>,
+    /// Pending ids whose events were cancelled (lazily skipped on pop).
     cancelled: std::collections::HashSet<EventId>,
     processed: u64,
     stopped: bool,
@@ -71,6 +75,7 @@ impl<W> Engine<W> {
             now: 0,
             seq: 0,
             heap: BinaryHeap::new(),
+            pending_ids: std::collections::HashSet::new(),
             cancelled: std::collections::HashSet::new(),
             processed: 0,
             stopped: false,
@@ -105,10 +110,10 @@ impl<W> Engine<W> {
         );
         let seq = self.seq;
         self.seq += 1;
+        self.pending_ids.insert(seq);
         self.heap.push(Entry {
             time: t.max(self.now),
             seq,
-            cancelled: false,
             f: Some(Box::new(f)),
         });
         seq
@@ -124,9 +129,19 @@ impl<W> Engine<W> {
     }
 
     /// Cancel a pending event (e.g. a retransmit timer whose ACK arrived).
-    /// Lazy cancellation: the entry stays in the heap and is skipped on pop.
+    /// Lazy cancellation: the entry stays in the heap and is skipped on
+    /// pop. Cancelling an id that already executed (or was never issued)
+    /// is a no-op — stale ids are not retained.
     pub fn cancel(&mut self, id: EventId) {
-        self.cancelled.insert(id);
+        if self.pending_ids.contains(&id) {
+            self.cancelled.insert(id);
+        }
+    }
+
+    /// Cancelled-but-not-yet-popped entries (diagnostic; bounded by
+    /// `pending()`).
+    pub fn cancelled_backlog(&self) -> usize {
+        self.cancelled.len()
     }
 
     /// Ask the engine to stop after the current event returns.
@@ -136,7 +151,8 @@ impl<W> Engine<W> {
 
     fn pop_live(&mut self) -> Option<Entry<W>> {
         while let Some(e) = self.heap.pop() {
-            if e.cancelled || self.cancelled.remove(&e.seq) {
+            self.pending_ids.remove(&e.seq);
+            if self.cancelled.remove(&e.seq) {
                 continue;
             }
             return Some(e);
@@ -169,6 +185,7 @@ impl<W> Engine<W> {
             let Some(mut e) = self.pop_live() else { break };
             if e.time > deadline {
                 // pop_live may skip past the peeked entry; re-queue.
+                self.pending_ids.insert(e.seq);
                 self.heap.push(e);
                 break;
             }
@@ -241,6 +258,52 @@ mod tests {
         eng.cancel(id);
         eng.run(&mut w);
         assert_eq!(w.log, vec![(20, 2)]);
+    }
+
+    #[test]
+    fn cancel_after_execution_does_not_accumulate() {
+        let mut eng: Engine<World> = Engine::new();
+        let mut w = World::default();
+        let ids: Vec<EventId> = (0..100)
+            .map(|i| eng.schedule_at(i, |_, _| {}))
+            .collect();
+        eng.run(&mut w);
+        // All ids are stale now; cancelling them must not grow the set.
+        for id in ids {
+            eng.cancel(id);
+        }
+        assert_eq!(eng.cancelled_backlog(), 0, "stale ids must not be kept");
+    }
+
+    #[test]
+    fn cancelled_pending_event_is_purged_on_pop() {
+        let mut eng: Engine<World> = Engine::new();
+        let mut w = World::default();
+        let id = eng.schedule_at(10, |w, e| w.log.push((e.now(), 1)));
+        eng.cancel(id);
+        assert_eq!(eng.cancelled_backlog(), 1);
+        eng.run(&mut w);
+        assert!(w.log.is_empty());
+        assert_eq!(eng.cancelled_backlog(), 0, "set drains as entries pop");
+    }
+
+    #[test]
+    fn run_until_requeue_keeps_event_cancellable() {
+        let mut eng: Engine<World> = Engine::new();
+        let mut w = World::default();
+        // A cancelled early event forces pop_live to skip past the peeked
+        // entry inside run_until, exercising the re-queue path.
+        let early = eng.schedule_at(40, |w, e| w.log.push((e.now(), 1)));
+        let late = eng.schedule_at(60, |w, e| w.log.push((e.now(), 2)));
+        eng.cancel(early);
+        eng.run_until(&mut w, 50);
+        assert!(w.log.is_empty());
+        assert_eq!(eng.pending(), 1);
+        // The re-queued event must still be cancellable.
+        eng.cancel(late);
+        eng.run(&mut w);
+        assert!(w.log.is_empty());
+        assert_eq!(eng.cancelled_backlog(), 0);
     }
 
     #[test]

@@ -1,0 +1,229 @@
+//! Driver-level acceptance tests: every algorithm in the menu runs
+//! through the shared `collectives::driver`, produces a report on the
+//! same grid, and — in data-payload mode — lands bit-exactly on the
+//! oracle, on lossless *and* lossy fabrics.
+
+use netdam::collectives::{
+    naive_sum, read_vector, run_collective, seed_gradients_exact, AlgoKind, CollectiveSpec,
+    Driver, HalvingDoubling, HierarchicalAllreduce, RingAllreduce, RunOpts,
+};
+use netdam::net::{Cluster, EcmpMode, LinkConfig, Topology};
+use netdam::sim::Engine;
+
+/// Allreduce algorithms that leave every device holding the exact sum.
+/// Exact integer seeding makes the oracle order-free, so the ring, the
+/// halving-doubling exchange order, and the two-level hierarchy must all
+/// match `naive_sum` bit-for-bit (§3's Data-payload claim).
+fn verify_allreduce(kind: AlgoKind, ranks: usize, elements: usize, loss_p: f64, reliable: bool) {
+    let (topo, groups) = if kind == AlgoKind::Hierarchical {
+        let t = Topology::fat_tree(
+            0xA5,
+            2,
+            ranks / 2,
+            2,
+            LinkConfig::dc_100g(),
+            EcmpMode::FlowHash,
+        );
+        let g = t.leaf_groups.clone();
+        (t, g)
+    } else {
+        let t = Topology::star(0xA5, ranks, 0, LinkConfig::dc_100g());
+        let g = t.leaf_groups.clone();
+        (t, g)
+    };
+    let mut cl = topo.cluster;
+    let devices = topo.devices;
+    cl.fault.loss_p = loss_p;
+    let grads = seed_gradients_exact(&mut cl, &devices, elements, 0, 0x77);
+    let spec = CollectiveSpec {
+        elements,
+        window: 4,
+        reliable,
+        ..Default::default()
+    };
+    let mut eng: Engine<Cluster> = Engine::new();
+    let out = match kind {
+        AlgoKind::NetdamRing => {
+            let mut algo = RingAllreduce { fused: true };
+            Driver::run(&mut cl, &mut eng, &devices, &mut algo, &spec).unwrap()
+        }
+        AlgoKind::HalvingDoubling => {
+            let mut algo = HalvingDoubling::new(ranks).unwrap();
+            Driver::run(&mut cl, &mut eng, &devices, &mut algo, &spec).unwrap()
+        }
+        AlgoKind::Hierarchical => {
+            let mut algo = HierarchicalAllreduce::new(groups).unwrap();
+            Driver::run(&mut cl, &mut eng, &devices, &mut algo, &spec).unwrap()
+        }
+        other => panic!("not an allreduce: {other:?}"),
+    };
+    assert_eq!(
+        out.ops_done, out.ops,
+        "{kind:?} incomplete (loss_p={loss_p}, reliable={reliable})"
+    );
+    if loss_p > 0.0 {
+        assert!(out.retransmits > 0, "{kind:?}: loss must trigger retries");
+    }
+    let oracle = naive_sum(&grads);
+    for &d in &devices {
+        assert_eq!(
+            read_vector(&mut cl, d, 0, elements).unwrap(),
+            oracle,
+            "{kind:?} diverged (loss_p={loss_p})"
+        );
+    }
+}
+
+#[test]
+fn ring_matches_oracle_lossless_and_lossy() {
+    verify_allreduce(AlgoKind::NetdamRing, 4, 4 * 2048 * 2, 0.0, false);
+    verify_allreduce(AlgoKind::NetdamRing, 4, 4 * 2048 * 2, 0.01, true);
+}
+
+#[test]
+fn halving_doubling_matches_oracle_lossless_and_lossy() {
+    verify_allreduce(AlgoKind::HalvingDoubling, 4, 4 * 2048 * 2, 0.0, false);
+    verify_allreduce(AlgoKind::HalvingDoubling, 4, 4 * 2048 * 2, 0.01, true);
+}
+
+#[test]
+fn hierarchical_matches_oracle_lossless_and_lossy() {
+    verify_allreduce(AlgoKind::Hierarchical, 4, 2 * 2048 * 2, 0.0, false);
+    verify_allreduce(AlgoKind::Hierarchical, 4, 2 * 2048 * 2, 0.01, true);
+}
+
+#[test]
+fn all_allreduces_agree_with_each_other() {
+    // Same data, three algorithms, one answer — the driver refactor's
+    // contract in a single assertion.
+    let ranks = 4;
+    let elements = 4 * 2048;
+    let mut images: Vec<Vec<f32>> = Vec::new();
+    for kind in [
+        AlgoKind::NetdamRing,
+        AlgoKind::HalvingDoubling,
+        AlgoKind::Hierarchical,
+    ] {
+        let (topo, groups) = if kind == AlgoKind::Hierarchical {
+            let t = Topology::fat_tree(
+                3,
+                2,
+                ranks / 2,
+                2,
+                LinkConfig::dc_100g(),
+                EcmpMode::FlowHash,
+            );
+            let g = t.leaf_groups.clone();
+            (t, g)
+        } else {
+            let t = Topology::star(3, ranks, 0, LinkConfig::dc_100g());
+            let g = t.leaf_groups.clone();
+            (t, g)
+        };
+        let mut cl = topo.cluster;
+        let devices = topo.devices;
+        seed_gradients_exact(&mut cl, &devices, elements, 0, 0xF00D);
+        let spec = CollectiveSpec {
+            elements,
+            window: 8,
+            ..Default::default()
+        };
+        let mut eng: Engine<Cluster> = Engine::new();
+        let out = match kind {
+            AlgoKind::NetdamRing => {
+                let mut a = RingAllreduce { fused: true };
+                Driver::run(&mut cl, &mut eng, &devices, &mut a, &spec).unwrap()
+            }
+            AlgoKind::HalvingDoubling => {
+                let mut a = HalvingDoubling::new(ranks).unwrap();
+                Driver::run(&mut cl, &mut eng, &devices, &mut a, &spec).unwrap()
+            }
+            _ => {
+                let mut a = HierarchicalAllreduce::new(groups).unwrap();
+                Driver::run(&mut cl, &mut eng, &devices, &mut a, &spec).unwrap()
+            }
+        };
+        assert_eq!(out.ops_done, out.ops);
+        images.push(read_vector(&mut cl, devices[0], 0, elements).unwrap());
+    }
+    assert_eq!(images[0], images[1], "ring vs halving-doubling");
+    assert_eq!(images[0], images[2], "ring vs hierarchical");
+}
+
+#[test]
+fn whole_menu_reports_on_one_grid() {
+    // The bench-facing front door: every algorithm, one call shape, one
+    // report type — including the host baselines.
+    for kind in AlgoKind::ALL {
+        let r = run_collective(
+            kind,
+            &RunOpts {
+                elements: 4 * 2048,
+                ranks: 4,
+                seed: 0xBE,
+                window: 8,
+                timing_only: !kind.is_host_baseline(),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        assert!(r.elapsed_ns > 0, "{kind:?} reported no elapsed time");
+        assert_eq!(r.elements, 4 * 2048);
+        assert_eq!(r.algorithm, kind.name());
+    }
+}
+
+#[test]
+fn latency_ordering_small_vs_large() {
+    // Halving-doubling wins at small sizes (2·log₂N rounds vs 2·(N−1)
+    // serialized chain hops); the ring's bandwidth optimality shows at
+    // large sizes where both are wire-bound. At minimum the small-message
+    // advantage must hold on the timing model.
+    let run = |kind: AlgoKind, elements: usize| {
+        run_collective(
+            kind,
+            &RunOpts {
+                elements,
+                ranks: 8,
+                seed: 0x1A,
+                window: 32,
+                timing_only: true,
+                ..Default::default()
+            },
+        )
+        .unwrap()
+        .elapsed_ns
+    };
+    let small = 8 * 2048; // one block per rank chunk
+    let hd = run(AlgoKind::HalvingDoubling, small);
+    let ring = run(AlgoKind::NetdamRing, small);
+    assert!(
+        hd < ring,
+        "halving-doubling must win small messages: hd={hd} ring={ring}"
+    );
+}
+
+#[test]
+fn run_collective_rejects_bad_shapes() {
+    // Halving-doubling needs 2^k ranks; hierarchical needs an even count.
+    assert!(run_collective(
+        AlgoKind::HalvingDoubling,
+        &RunOpts {
+            ranks: 6,
+            elements: 6 * 2048,
+            timing_only: true,
+            ..Default::default()
+        }
+    )
+    .is_err());
+    assert!(run_collective(
+        AlgoKind::Hierarchical,
+        &RunOpts {
+            ranks: 5,
+            elements: 5 * 2048,
+            timing_only: true,
+            ..Default::default()
+        }
+    )
+    .is_err());
+}

@@ -1,0 +1,185 @@
+//! A minimal, dependency-free stand-in for the `anyhow` crate.
+//!
+//! This build runs fully offline (no crates.io access), so the repo
+//! vendors the ~10% of `anyhow` its code actually uses:
+//!
+//! * [`Error`] — an opaque, message-carrying error type;
+//! * [`Result<T>`] — `std::result::Result<T, Error>`;
+//! * [`anyhow!`], [`bail!`], [`ensure!`] — format-style constructors;
+//! * [`Context`] — `.context(..)` / `.with_context(..)` on `Result` and
+//!   `Option`.
+//!
+//! Like the real crate, [`Error`] deliberately does **not** implement
+//! `std::error::Error`; that is what makes the blanket
+//! `From<E: std::error::Error>` conversion (the `?` operator's entry
+//! point) coherent. Unlike the real crate it flattens the source chain
+//! into the rendered message instead of keeping live backtraces — ample
+//! for a deterministic simulator's diagnostics.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// An opaque error: a rendered message (source chain included).
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Construct from anything displayable (the `anyhow!` entry point).
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error {
+            msg: message.to_string(),
+        }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        let mut msg = e.to_string();
+        let mut src = e.source();
+        while let Some(s) = src {
+            msg.push_str(": ");
+            msg.push_str(&s.to_string());
+            src = s.source();
+        }
+        Error { msg }
+    }
+}
+
+/// `anyhow`-style result alias.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach human context to an error as it crosses an abstraction boundary.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| {
+            let e: Error = e.into();
+            Error::msg(format!("{context}: {e}"))
+        })
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| {
+            let e: Error = e.into();
+            Error::msg(format!("{}: {e}", f()))
+        })
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context.to_string()))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f().to_string()))
+    }
+}
+
+/// Build an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return Err($crate::Error::msg(concat!(
+                "Condition failed: `",
+                stringify!($cond),
+                "`"
+            )));
+        }
+    };
+    ($cond:expr, $($arg:tt)+) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)+));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Result<u32> {
+        let v: u32 = s.parse()?; // ParseIntError -> Error via blanket From
+        ensure!(v < 100, "value {v} too large");
+        Ok(v)
+    }
+
+    #[test]
+    fn question_mark_and_ensure() {
+        assert_eq!(parse("42").unwrap(), 42);
+        assert!(parse("xx").is_err());
+        assert_eq!(parse("500").unwrap_err().to_string(), "value 500 too large");
+    }
+
+    #[test]
+    fn ensure_without_message() {
+        fn check(x: u32) -> Result<()> {
+            ensure!(x > 0);
+            Ok(())
+        }
+        let e = check(0).unwrap_err();
+        assert!(e.to_string().contains("Condition failed"), "{e}");
+    }
+
+    #[test]
+    fn context_wraps_message() {
+        let r: std::result::Result<(), std::io::Error> = Err(std::io::Error::new(
+            std::io::ErrorKind::NotFound,
+            "missing",
+        ));
+        let e = r.context("opening config").unwrap_err();
+        let s = e.to_string();
+        assert!(s.starts_with("opening config: "), "{s}");
+        assert!(s.contains("missing"), "{s}");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        assert_eq!(v.context("empty").unwrap_err().to_string(), "empty");
+        let e = Some(5u32).with_context(|| "unused").unwrap();
+        assert_eq!(e, 5);
+    }
+
+    #[test]
+    fn bail_formats() {
+        fn f() -> Result<()> {
+            bail!("bad state {}", 7)
+        }
+        assert_eq!(f().unwrap_err().to_string(), "bad state 7");
+    }
+}
