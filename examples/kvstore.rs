@@ -48,13 +48,17 @@ impl Kv {
         let Instruction::CasResp { swapped: true, .. } = resp.instr else {
             return Ok(false); // contended
         };
-        // 2. replicated write: primary then replica via segment chaining
+        // 2. replicated write: a 2-hop store program writes the value at
+        //    the primary, then self-routes to the replica.
         let seq = cl.alloc_seq(self.host);
+        let prog = netdam::isa::ProgramBuilder::new()
+            .store(data, 2)
+            .build_unchecked();
         let w = Packet::new(
             self.host_ip,
             seq,
             SrouHeader::through(vec![Segment::to(self.primary), Segment::to(self.replica)]),
-            Instruction::AllGather { addr: data, block: key as u32 },
+            Instruction::Program(Box::new(prog)),
         )
         .with_payload(Payload::from_bytes(f32s_to_bytes(value)));
         cl.inject(eng, self.host, w);

@@ -86,27 +86,28 @@ fn main() -> Result<()> {
     );
     assert_eq!(sums[3], 3.5);
 
-    // 5. A chained computation: add device 2's block into the payload and
-    //    deliver the result at device 3 (SROU function chaining).
+    // 5. A chained computation as a packet *program*: add device 2's
+    //    block into the payload, then guarded-write the result at
+    //    device 3 (SROU chaining + the programmable ISA in one packet).
     let seq = cl.alloc_seq(host);
+    use netdam::isa::ProgramBuilder;
     use netdam::wire::Segment;
+    let prog = ProgramBuilder::new()
+        .reduce(SimdOp::Add, 0x3_0000, 2)
+        .guarded_write(0x3_0000, netdam::alu::block_hash(&[0u8; 8192]))
+        .on_retire(0)
+        .build_unchecked();
     let chain = Packet::new(
         host_ip,
         seq,
         SrouHeader::through(vec![Segment::to(DeviceIp::lan(2)), Segment::to(DeviceIp::lan(3))]),
-        Instruction::ReduceScatter {
-            op: SimdOp::Add,
-            addr: 0x3_0000,
-            block: 0,
-            rs_left: 2,
-            expect_hash: netdam::alu::block_hash(&[0u8; 8192]),
-        },
+        Instruction::Program(Box::new(prog)),
     )
     .with_payload(Payload::from_f32s(&vec![1.0f32; 2048]));
     cl.inject(&mut eng, host, chain);
     eng.run(&mut cl);
     println!(
-        "chained reduce hop dev2 -> dev3 completed ({} completions logged)",
+        "program chain dev2 -> dev3 completed ({} completions logged)",
         cl.completions.len()
     );
 

@@ -5,8 +5,9 @@
 //! * **L1/L2** — the `mlp_grad` / `sgd_apply` / `mlp_batch` HLO artifacts
 //!   (JAX + Pallas, AOT-lowered) execute through PJRT from rust;
 //! * **L3** — the gradients are written into 4 simulated NetDAM devices
-//!   and ring-allreduced by the in-memory `ReduceScatter` instruction
-//!   chain (§3), with the real gradient bits flowing through the DES;
+//!   and ring-allreduced by in-memory packet programs
+//!   (`reduce → guarded_write → store`, §3), with the real gradient bits
+//!   flowing through the DES;
 //! * the loss curve is compared against the pure-python oracle
 //!   (`artifacts/reference_curve.txt`) — deviation is reported and must
 //!   stay at f32 noise level.

@@ -1,11 +1,15 @@
 //! Bench E2 — regenerates the §3.3 allreduce table (native MPI 2.8 s /
 //! ring 2.1 s / NetDAM ≈0.4 s at 2 GiB), extended to the full collective
-//! menu riding the shared `collectives::driver`.
+//! menu riding the shared `collectives::driver` (every NetDAM algorithm
+//! now executes as device-run packet programs).
 //!
 //! Default sweep runs up to 2^24 elements (64 MiB), every algorithm on
-//! the same grid. Set `NETDAM_PAPER_SCALE=1` to run the full
-//! 536,870,912-float vector on the classic paper triple (timing-only
-//! payloads; several minutes of wallclock).
+//! the same grid, and writes the machine-readable artifact
+//! `BENCH_allreduce.json` (per-algo, per-size bus-bandwidth numbers) so
+//! the perf trajectory is tracked across PRs. Set `NETDAM_BENCH_SMOKE=1`
+//! for a single tiny size (CI smoke); `NETDAM_PAPER_SCALE=1` runs the
+//! full 536,870,912-float vector on the classic paper triple
+//! (timing-only payloads; several minutes of wallclock).
 
 use netdam::collectives::{run_collective, AlgoKind, RunOpts};
 use netdam::coordinator::{run_e2, E2Config};
@@ -16,6 +20,7 @@ fn main() {
     println!("# E2 — 4-node MPI allreduce (paper §3.3)\n");
     let wall = std::time::Instant::now();
     let paper = std::env::var("NETDAM_PAPER_SCALE").is_ok();
+    let smoke = std::env::var("NETDAM_BENCH_SMOKE").is_ok();
     let ranks = 4usize;
 
     if paper {
@@ -38,7 +43,13 @@ fn main() {
         return;
     }
 
-    for elements in [1usize << 20, 1 << 22, 1 << 24] {
+    let sizes: &[usize] = if smoke {
+        &[1 << 16]
+    } else {
+        &[1 << 20, 1 << 22, 1 << 24]
+    };
+    let mut json_rows: Vec<String> = Vec::new();
+    for &elements in sizes {
         println!(
             "## {} x f32 ({:.0} MiB), {} ranks — full algorithm menu\n",
             elements,
@@ -65,12 +76,20 @@ fn main() {
                 AlgoKind::MpiNative => native_ns = r.elapsed_ns,
                 _ => {}
             }
+            let frac = kind.bw_fraction(ranks);
+            let bus_bw = r.bus_bw_gbps(frac);
             table.row(&[
                 r.algorithm.to_string(),
                 fmt_ns(r.elapsed_ns),
-                format!("{:.1}", r.bus_bw_gbps(kind.bw_fraction(ranks))),
+                format!("{bus_bw:.1}"),
                 r.retransmits.to_string(),
             ]);
+            json_rows.push(format!(
+                "    {{\"algorithm\": \"{}\", \"elements\": {}, \"ranks\": {}, \
+                 \"elapsed_ns\": {}, \"bw_fraction\": {:.4}, \"bus_bw_gbps\": {:.3}, \
+                 \"retransmits\": {}}}",
+                r.algorithm, elements, ranks, r.elapsed_ns, frac, bus_bw, r.retransmits
+            ));
         }
         println!("{}", table.render());
         let floor = netdam::coordinator::e2_allreduce::line_rate_floor_ns(ranks, elements);
@@ -81,5 +100,11 @@ fn main() {
             netdam_ns as f64 / floor as f64,
         );
     }
+    let json = format!(
+        "{{\n  \"bench\": \"allreduce\",\n  \"ranks\": {ranks},\n  \"smoke\": {smoke},\n  \"results\": [\n{}\n  ]\n}}\n",
+        json_rows.join(",\n")
+    );
+    std::fs::write("BENCH_allreduce.json", &json).expect("write BENCH_allreduce.json");
+    println!("wrote BENCH_allreduce.json ({} rows)", json_rows.len());
     println!("bench wallclock: {:.2?}", wall.elapsed());
 }

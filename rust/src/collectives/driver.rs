@@ -17,6 +17,13 @@
 //! copy of the windowing/completion state machine — the refactor the
 //! paper's §3 "one instruction per chunk" design invites.
 //!
+//! Planners do not emit bespoke opcodes: schedules lower onto **verified
+//! packet programs** ([`lower_ring_chunk`] / [`lower_store_chain`]) built
+//! from the ordinary ISA (`Simd`, `WriteIfHash`, `Write`). The verifier
+//! environment ([`prog_env`]) is derived from the live fabric, so a
+//! planner cannot inject a chain that violates the §2.3 relaxed-ordering
+//! rule (commutativity on unordered paths, idempotency on lossy ones).
+//!
 //! Multi-phase algorithms (halving-doubling, hierarchical) return one
 //! schedule per phase; the driver drains the DES between phases. That
 //! barrier is honest: those algorithms are *round-synchronous* by
@@ -31,7 +38,9 @@ use anyhow::{ensure, Result};
 
 use crate::alu::block_hash;
 use crate::isa::registry::MemAccess;
-use crate::isa::{Flags, Instruction};
+use crate::isa::{
+    Flags, Instruction, ProgramBuilder, ProgramError, SimdOp, VerifyEnv,
+};
 use crate::net::{Cluster, InjectCmd, NodeId};
 use crate::sim::{Engine, SimTime};
 use crate::transport::ReliabilityTable;
@@ -313,6 +322,78 @@ impl Driver {
             link_drops: cl.metrics.counter("link_drops"),
         })
     }
+}
+
+// ------------------------------------------------- schedule → Program
+
+/// Build the verification environment for a program injected into `cl`
+/// whose writes land on device `target`. The §2.3 relaxed-ordering rule
+/// becomes a machine-checked property here: collective packets ride an
+/// unordered path, and the path is lossless only when no fault injection
+/// or timeout-retransmit can replay a chain.
+pub fn prog_env<'a>(
+    cl: &'a Cluster,
+    target: NodeId,
+    payload_len: usize,
+    srou_hops: usize,
+    reliable: bool,
+) -> VerifyEnv<'a> {
+    VerifyEnv {
+        capacity: cl.device(target).mem_ref().capacity(),
+        payload_len,
+        ordered: false,
+        lossless: cl.fault.loss_p == 0.0 && cl.fault.dup_p == 0.0 && !reliable,
+        srou_hops,
+        registry: Some(cl.registry.as_ref()),
+    }
+}
+
+/// Lower one §3 ring-allreduce chunk onto a verified packet program:
+///
+/// ```text
+/// reduce(op, addr) ×(N−1)  →  guarded_write(addr, hash)  [→ store(addr) ×(N−1)]
+/// ```
+///
+/// Interim hops fold their local block into the packet buffer, the chain
+/// owner performs the hash-guarded exactly-once write, and (when `fused`)
+/// the finished block is stored at every remaining ring hop — the whole
+/// MPI allreduce chunk in one self-routing packet. This is the lowering
+/// every planner shares; it fails with a typed [`ProgramError`] instead
+/// of injecting an unsafe chain.
+pub fn lower_ring_chunk(
+    op: SimdOp,
+    addr: u64,
+    ranks: usize,
+    fused: bool,
+    expect_hash: u64,
+    done_id: u32,
+    env: &VerifyEnv<'_>,
+) -> Result<Instruction, ProgramError> {
+    let mut b = ProgramBuilder::new()
+        .reduce(op, addr, (ranks - 1) as u8)
+        .guarded_write(addr, expect_hash);
+    if fused {
+        b = b.store(addr, (ranks - 1) as u8);
+    }
+    Ok(Instruction::Program(Box::new(
+        b.on_retire(done_id).build(env)?,
+    )))
+}
+
+/// Lower an idempotent store chain (the all-gather / broadcast shape):
+/// the payload is written at each of the next `hops` SROU hops.
+pub fn lower_store_chain(
+    addr: u64,
+    hops: usize,
+    done_id: u32,
+    env: &VerifyEnv<'_>,
+) -> Result<Instruction, ProgramError> {
+    Ok(Instruction::Program(Box::new(
+        ProgramBuilder::new()
+            .store(addr, hops as u8)
+            .on_retire(done_id)
+            .build(env)?,
+    )))
 }
 
 // ---------------------------------------------------------------- helpers

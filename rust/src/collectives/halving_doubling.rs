@@ -6,10 +6,10 @@
 //!
 //! * **reduce rounds** (vector halving): rank `r` sends the half of its
 //!   currently-owned segment that partner `p = r ⊕ d` keeps, as a 1-hop
-//!   `ReduceScatter` — a hash-guarded reduced write at `p` (§3.1's
-//!   exactly-once trick, so blind retransmission stays safe);
+//!   `reduce → guarded_write` program — a hash-guarded reduced write at
+//!   `p` (§3.1's exactly-once trick, so blind retransmission stays safe);
 //! * **gather rounds** (vector doubling): `r` streams its whole owned
-//!   segment to `p` as idempotent `AllGather` writes.
+//!   segment to `p` as idempotent 1-hop store programs.
 //!
 //! Each round is one driver phase: guards and payloads are captured from
 //! live device memory at phase-plan time, which is exactly when the
@@ -20,12 +20,13 @@
 
 use anyhow::{ensure, Result};
 
-use crate::isa::{Instruction, SimdOp};
+use crate::isa::SimdOp;
 use crate::net::Cluster;
 use crate::wire::{Packet, SrouHeader};
 
 use super::driver::{
-    guard_hash, op_flags, read_block, CollectiveAlgorithm, PlanCtx, Phase, ScheduledOp,
+    guard_hash, lower_ring_chunk, lower_store_chain, op_flags, prog_env, read_block,
+    CollectiveAlgorithm, PlanCtx, Phase, ScheduledOp,
 };
 
 /// Which instruction a planned exchange uses.
@@ -82,19 +83,16 @@ impl HalvingDoubling {
             *next_id += 1;
             let instr = match kind {
                 ExchangeKind::GuardedReduce => {
+                    // A degenerate 2-rank ring chunk: reduce at the
+                    // partner, guarded write fused there.
                     let expect_hash = guard_hash(cl, ctx.devices[to], addr, len)?;
-                    Instruction::ReduceScatter {
-                        op: SimdOp::Add,
-                        addr,
-                        block: done_id,
-                        rs_left: 1,
-                        expect_hash,
-                    }
+                    let env = prog_env(cl, ctx.devices[to], len, 1, ctx.spec.reliable);
+                    lower_ring_chunk(SimdOp::Add, addr, 2, false, expect_hash, done_id, &env)?
                 }
-                ExchangeKind::Gather => Instruction::AllGather {
-                    addr,
-                    block: done_id,
-                },
+                ExchangeKind::Gather => {
+                    let env = prog_env(cl, ctx.devices[to], len, 1, ctx.spec.reliable);
+                    lower_store_chain(addr, 1, done_id, &env)?
+                }
             };
             let pkt = Packet::new(ctx.ips[from], 0, SrouHeader::direct(ctx.ips[to]), instr)
                 .with_flags(op_flags(ctx.spec.reliable))

@@ -1,37 +1,47 @@
-//! Hierarchical two-level allreduce for Clos fabrics.
+//! Hierarchical two-level allreduce for Clos fabrics, with **rotating
+//! leaders**.
 //!
 //! On a `fat_tree` topology every leaf hosts a group of devices whose
 //! mutual traffic never crosses a spine. The two-level plan exploits
-//! that (the NetReduce / SHArP-style hierarchy, built from NetDAM's ISA):
+//! that (the NetReduce / SHArP-style hierarchy, built from NetDAM's
+//! packet programs):
 //!
-//! 1. **intra-leaf reduce** — per leaf, one `ReduceScatter` chain per
-//!    block walks every member and terminates at the leaf *leader* with
-//!    the hash-guarded write: leaf-local traffic only;
-//! 2. **inter-leader ring allreduce** — the leaders run the §3 ring
-//!    (reduce-scatter + fused all-gather) across the spines, on the full
-//!    vector chunked by leader count — the only phase that pays
-//!    spine bandwidth;
-//! 3. **intra-leaf broadcast** — each leader streams the finished vector
-//!    back through its members as an idempotent `AllGather` chain.
+//! 1. **intra-leaf reduce** — per leaf and per block, one
+//!    `reduce → guarded_write` program chain walks every member and
+//!    terminates at that block's leaf leader: leaf-local traffic only;
+//! 2. **inter-leader ring allreduce** — per block, the block's leader
+//!    set runs the §3 fused ring (`reduce → guarded_write → store`)
+//!    across the spines — the only phase that pays spine bandwidth;
+//! 3. **intra-leaf broadcast** — each block's leader streams the
+//!    finished block back through its leaf as an idempotent store chain.
+//!
+//! Leadership is **sharded by block**: block `j`'s leader in leaf `g` is
+//! `groups[g][j % |g|]`, and the phase-2 ring initiator/owner rotate
+//! with `j` too. A fixed leader (`groups[g][0]`, the previous design)
+//! funnels the entire spine phase and the whole leaf broadcast through
+//! one device's 100G port; rotation spreads that load across every
+//! member, lifting the leader bandwidth bottleneck at scale.
 //!
 //! All three phases are plain schedules over the shared
-//! [`Driver`](super::driver::Driver); phase 2 literally reuses the ring
-//! planner ([`plan_ring_ops`](super::netdam_ring::plan_ring_ops)) over
-//! the leader subset.
+//! [`Driver`](super::driver::Driver), lowered through the same
+//! [`lower_ring_chunk`](super::driver::lower_ring_chunk) /
+//! [`lower_store_chain`](super::driver::lower_store_chain) as the flat
+//! ring.
 
 use anyhow::{ensure, Result};
 
-use crate::isa::{Instruction, SimdOp};
+use crate::isa::SimdOp;
 use crate::net::Cluster;
 use crate::wire::{Packet, Segment, SrouHeader};
 
 use super::driver::{
-    guard_hash, op_flags, read_block, CollectiveAlgorithm, PlanCtx, Phase, ScheduledOp,
+    guard_hash, lower_ring_chunk, lower_store_chain, op_flags, prog_env, read_block,
+    CollectiveAlgorithm, PlanCtx, Phase, ScheduledOp,
 };
-use super::netdam_ring::plan_ring_ops;
 
 pub struct HierarchicalAllreduce {
-    /// Rank indices per leaf; `groups[g][0]` is leaf `g`'s leader.
+    /// Rank indices per leaf; block `j`'s leader in leaf `g` is
+    /// `groups[g][j % groups[g].len()]`.
     groups: Vec<Vec<usize>>,
 }
 
@@ -45,8 +55,9 @@ impl HierarchicalAllreduce {
         Ok(Self { groups })
     }
 
-    fn leaders(&self) -> Vec<usize> {
-        self.groups.iter().map(|g| g[0]).collect()
+    /// Block `j`'s leader within `group` (chunk-sharded leadership).
+    fn leader_of(group: &[usize], block: usize) -> usize {
+        group[block % group.len()]
     }
 }
 
@@ -67,11 +78,17 @@ impl CollectiveAlgorithm for HierarchicalAllreduce {
             ctx.devices.len()
         );
         let spec = ctx.spec;
-        let blocks = |elements: usize| elements.div_ceil(spec.lanes);
+        let n_blocks = spec.elements.div_ceil(spec.lanes);
+        // Block geometry shared by every phase.
+        let block_geom = |j: usize| {
+            let elem_off = j * spec.lanes;
+            let lanes = spec.lanes.min(spec.elements - elem_off);
+            (spec.base_addr + elem_off as u64 * 4, lanes * 4)
+        };
         let mut ops = Vec::new();
         let mut next_id = ctx.done_id_base;
         match phase {
-            // ---- intra-leaf reduce chains into the leader -------------
+            // ---- intra-leaf reduce chains into the block's leader ------
             0 => {
                 for group in &self.groups {
                     let k = group.len();
@@ -82,37 +99,30 @@ impl CollectiveAlgorithm for HierarchicalAllreduce {
                         k - 1 <= crate::wire::srou_hdr::MAX_SEGMENTS,
                         "leaf group of {k} exceeds the SROU stack"
                     );
-                    let leader = group[0];
-                    let initiator = group[1];
-                    // Chain: initiator → interims (members 2..) → leader.
-                    let segs: Vec<Segment> = group[2..]
-                        .iter()
-                        .chain(std::iter::once(&leader))
-                        .map(|&m| Segment::to(ctx.ips[m]))
-                        .collect();
-                    for j in 0..blocks(spec.elements) {
-                        let elem_off = j * spec.lanes;
-                        let lanes = spec.lanes.min(spec.elements - elem_off);
-                        let len = lanes * 4;
-                        let addr = spec.base_addr + elem_off as u64 * 4;
+                    for j in 0..n_blocks {
+                        let rot = j % k;
+                        let leader = group[rot];
+                        // Members after the leader in rotated order; the
+                        // first initiates, the rest are reduce hops.
+                        let others: Vec<usize> =
+                            (1..k).map(|i| group[(rot + i) % k]).collect();
+                        let initiator = others[0];
+                        let segs: Vec<Segment> = others[1..]
+                            .iter()
+                            .chain(std::iter::once(&leader))
+                            .map(|&m| Segment::to(ctx.ips[m]))
+                            .collect();
+                        let (addr, len) = block_geom(j);
                         let payload = read_block(cl, ctx.devices[initiator], addr, len)?;
                         let expect_hash = guard_hash(cl, ctx.devices[leader], addr, len)?;
                         let done_id = next_id;
                         next_id += 1;
-                        let pkt = Packet::new(
-                            ctx.ips[initiator],
-                            0,
-                            SrouHeader::through(segs.clone()),
-                            Instruction::ReduceScatter {
-                                op: SimdOp::Add,
-                                addr,
-                                block: done_id,
-                                rs_left: (k - 1) as u8,
-                                expect_hash,
-                            },
-                        )
-                        .with_flags(op_flags(spec.reliable))
-                        .with_payload(payload);
+                        let env = prog_env(cl, ctx.devices[leader], len, segs.len(), spec.reliable);
+                        let instr =
+                            lower_ring_chunk(SimdOp::Add, addr, k, false, expect_hash, done_id, &env)?;
+                        let pkt = Packet::new(ctx.ips[initiator], 0, SrouHeader::through(segs), instr)
+                            .with_flags(op_flags(spec.reliable))
+                            .with_payload(payload);
                         ops.push(ScheduledOp {
                             rank: initiator,
                             done_id,
@@ -121,48 +131,73 @@ impl CollectiveAlgorithm for HierarchicalAllreduce {
                     }
                 }
             }
-            // ---- inter-leader ring allreduce over the spines ----------
+            // ---- per-block ring allreduce over that block's leaders ----
             1 => {
-                let leaders = self.leaders();
-                let sub_devices: Vec<_> = leaders.iter().map(|&r| ctx.devices[r]).collect();
-                let sub_ips: Vec<_> = leaders.iter().map(|&r| ctx.ips[r]).collect();
-                let mut ring =
-                    plan_ring_ops(cl, &sub_devices, &sub_ips, spec, true, ctx.done_id_base)?;
-                // Ring ranks are leader-local; remap onto the global space.
-                for op in &mut ring {
-                    op.rank = leaders[op.rank];
+                let g_cnt = self.groups.len();
+                ensure!(
+                    2 * (g_cnt - 1) <= crate::wire::srou_hdr::MAX_SEGMENTS,
+                    "{g_cnt} leaf groups exceed the SROU stack"
+                );
+                for j in 0..n_blocks {
+                    let leaders: Vec<usize> = self
+                        .groups
+                        .iter()
+                        .map(|g| Self::leader_of(g, j))
+                        .collect();
+                    // Rotate the ring start with the block index so no
+                    // single leader set member initiates everything.
+                    let g0 = j % g_cnt;
+                    let order: Vec<usize> =
+                        (0..g_cnt).map(|i| leaders[(g0 + i) % g_cnt]).collect();
+                    let initiator = order[0];
+                    let owner = order[g_cnt - 1];
+                    let hops = 2 * (g_cnt - 1);
+                    let segs: Vec<Segment> = order[1..]
+                        .iter()
+                        .chain(order[..g_cnt - 1].iter())
+                        .map(|&m| Segment::to(ctx.ips[m]))
+                        .collect();
+                    let (addr, len) = block_geom(j);
+                    let payload = read_block(cl, ctx.devices[initiator], addr, len)?;
+                    let expect_hash = guard_hash(cl, ctx.devices[owner], addr, len)?;
+                    let done_id = next_id;
+                    next_id += 1;
+                    let env = prog_env(cl, ctx.devices[owner], len, hops, spec.reliable);
+                    let instr =
+                        lower_ring_chunk(SimdOp::Add, addr, g_cnt, true, expect_hash, done_id, &env)?;
+                    let pkt = Packet::new(ctx.ips[initiator], 0, SrouHeader::through(segs), instr)
+                        .with_flags(op_flags(spec.reliable))
+                        .with_payload(payload);
+                    ops.push(ScheduledOp {
+                        rank: initiator,
+                        done_id,
+                        pkt,
+                    });
                 }
-                ops = ring;
             }
-            // ---- intra-leaf broadcast from the leader -----------------
+            // ---- intra-leaf broadcast from the block's leader ----------
             _ => {
                 for group in &self.groups {
                     let k = group.len();
                     if k == 1 {
                         continue;
                     }
-                    let leader = group[0];
-                    let segs: Vec<Segment> =
-                        group[1..].iter().map(|&m| Segment::to(ctx.ips[m])).collect();
-                    for j in 0..blocks(spec.elements) {
-                        let elem_off = j * spec.lanes;
-                        let lanes = spec.lanes.min(spec.elements - elem_off);
-                        let len = lanes * 4;
-                        let addr = spec.base_addr + elem_off as u64 * 4;
+                    for j in 0..n_blocks {
+                        let rot = j % k;
+                        let leader = group[rot];
+                        let others: Vec<usize> =
+                            (1..k).map(|i| group[(rot + i) % k]).collect();
+                        let segs: Vec<Segment> =
+                            others.iter().map(|&m| Segment::to(ctx.ips[m])).collect();
+                        let (addr, len) = block_geom(j);
                         let payload = read_block(cl, ctx.devices[leader], addr, len)?;
                         let done_id = next_id;
                         next_id += 1;
-                        let pkt = Packet::new(
-                            ctx.ips[leader],
-                            0,
-                            SrouHeader::through(segs.clone()),
-                            Instruction::AllGather {
-                                addr,
-                                block: done_id,
-                            },
-                        )
-                        .with_flags(op_flags(spec.reliable))
-                        .with_payload(payload);
+                        let env = prog_env(cl, ctx.devices[leader], len, k - 1, spec.reliable);
+                        let instr = lower_store_chain(addr, k - 1, done_id, &env)?;
+                        let pkt = Packet::new(ctx.ips[leader], 0, SrouHeader::through(segs), instr)
+                            .with_flags(op_flags(spec.reliable))
+                            .with_payload(payload);
                         ops.push(ScheduledOp {
                             rank: leader,
                             done_id,
@@ -216,8 +251,57 @@ mod tests {
 
     #[test]
     fn three_leaves_of_three_multi_block() {
-        // 3 leaders: elements must divide by 3 for the ring phase.
         run_fat_tree(3, 3, 3 * 2048 * 2);
+    }
+
+    #[test]
+    fn odd_block_count_no_divisibility_needed() {
+        // Per-block leader rings have no elements-divide-by-leaders
+        // constraint (the old fixed-leader ring required it).
+        run_fat_tree(3, 2, 5 * 2048);
+    }
+
+    /// The ROADMAP open item: leadership must shard across members, not
+    /// funnel through `groups[g][0]` — and stay bit-exact (checked here
+    /// against the oracle through `run_fat_tree`).
+    #[test]
+    fn leader_rotation_spreads_the_bottleneck() {
+        // Correctness under rotation, multi-block so rotation engages.
+        run_fat_tree(2, 3, 6 * 2048);
+        // And structurally: plan the phases and count distinct initiators.
+        let t = Topology::fat_tree(7, 2, 3, 2, LinkConfig::dc_100g(), EcmpMode::FlowHash);
+        let groups = t.leaf_groups.clone();
+        let mut cl = t.cluster;
+        let devices = t.devices;
+        let elements = 6 * 2048; // 6 blocks over groups of 3
+        seed_gradients_exact(&mut cl, &devices, elements, 0, 0x2F);
+        let spec = CollectiveSpec {
+            elements,
+            window: 8,
+            ..Default::default()
+        };
+        let mut algo = HierarchicalAllreduce::new(groups.clone()).unwrap();
+        let ips: Vec<crate::wire::DeviceIp> =
+            devices.iter().map(|&d| cl.device(d).ip()).collect();
+        let ctx = PlanCtx {
+            devices: &devices,
+            ips: &ips,
+            spec: &spec,
+            done_id_base: 0,
+        };
+        for phase in [1usize, 2] {
+            let Phase::Ops(ops) = algo.plan_phase(&mut cl, &ctx, phase).unwrap() else {
+                panic!("hierarchical plans packet ops");
+            };
+            let mut initiators: Vec<usize> = ops.iter().map(|o| o.rank).collect();
+            initiators.sort_unstable();
+            initiators.dedup();
+            assert!(
+                initiators.len() > groups.len().min(2),
+                "phase {phase}: load funnels through {} initiators",
+                initiators.len()
+            );
+        }
     }
 
     #[test]

@@ -4,7 +4,10 @@
 //! The subsystem is layered: algorithms are *schedule generators*
 //! ([`driver::CollectiveAlgorithm`]) and one shared [`driver::Driver`]
 //! owns windowing, reliability, completion tracking, and report
-//! production — see [`driver`] for the architecture.
+//! production — see [`driver`] for the architecture. Schedules lower
+//! onto verified packet programs ([`driver::lower_ring_chunk`] /
+//! [`driver::lower_store_chain`]) rather than bespoke opcodes; the
+//! devices execute them hop-locally (see [`crate::isa::program`]).
 //!
 //! | algorithm | where the add runs | shape |
 //! |---|---|---|
@@ -25,8 +28,8 @@ pub mod primitives;
 pub mod ring_roce;
 
 pub use driver::{
-    run_collective, AlgoKind, CollectiveAlgorithm, CollectiveSpec, Driver, DriverOutcome, Phase,
-    PlanCtx, RunOpts, ScheduledOp,
+    lower_ring_chunk, lower_store_chain, prog_env, run_collective, AlgoKind, CollectiveAlgorithm,
+    CollectiveSpec, Driver, DriverOutcome, Phase, PlanCtx, RunOpts, ScheduledOp,
 };
 pub use halving_doubling::HalvingDoubling;
 pub use hierarchical::HierarchicalAllreduce;

@@ -1,33 +1,35 @@
 //! The NetDAM ring allreduce (paper §3.1/§3.2, Figures 6 & 8).
 //!
 //! Each rank owns chunk `r` of the vector. For every 2048-lane block of
-//! its chunk, the rank injects **one** `ReduceScatter` packet whose SROU
-//! stack walks the whole ring twice-minus-one:
+//! its chunk, the rank injects **one** packet carrying a compiled
+//! [`Program`](crate::isa::Program) whose SROU stack walks the whole ring
+//! twice-minus-one:
 //!
 //! ```text
-//!   r → r+1 → ... → r+N−1 (owner: guarded reduced write)
-//!       └ fused All-Gather: → r → r+1 → ... → r+N−2 → Done → r
+//!   r → r+1 → ... → r+N−1 (owner: fused guarded write)
+//!       └ store chain: → r → r+1 → ... → r+N−2 → Done → r
 //! ```
 //!
-//! Interim hops add their local contribution into the packet buffer (no
+//! The program is `reduce ×(N−1) → guarded_write → store ×(N−1)`:
+//! interim hops fold their local contribution into the packet buffer (no
 //! local side effects — idempotent); the owner performs the hash-guarded
-//! write (§3.1's block-hash idempotency trick); the fused all-gather
-//! carries the finished block back around. Windowing, completion
-//! tracking, and reliability live in the shared
-//! [`Driver`](super::driver::Driver) — this module only *plans* the ring
-//! schedule ([`RingAllreduce`]), which is also reused as the cross-leaf
-//! stage of the hierarchical allreduce.
+//! write (§3.1's block-hash idempotency trick); the store tail carries
+//! the finished block back around. Windowing, completion tracking, and
+//! reliability live in the shared [`Driver`](super::driver::Driver) —
+//! this module only *plans* the ring schedule ([`RingAllreduce`]) and
+//! lowers it through
+//! [`lower_ring_chunk`](super::driver::lower_ring_chunk).
 
 use anyhow::{ensure, Result};
 
-use crate::isa::{Instruction, SimdOp};
+use crate::isa::SimdOp;
 use crate::net::{Cluster, NodeId};
 use crate::sim::{Engine, SimTime};
 use crate::wire::{DeviceIp, Packet};
 
 use super::driver::{
-    guard_hash, op_flags, read_block, CollectiveAlgorithm, CollectiveSpec, Driver, PlanCtx, Phase,
-    ScheduledOp,
+    guard_hash, lower_ring_chunk, op_flags, prog_env, read_block, CollectiveAlgorithm,
+    CollectiveSpec, Driver, PlanCtx, Phase, ScheduledOp,
 };
 
 /// Parameters of one allreduce run (back-compat shell over
@@ -72,8 +74,8 @@ pub struct AllreduceOutcome {
     pub hash_guard_drops: u64,
 }
 
-/// The ring schedule generator: one `ReduceScatter` chain per block, the
-/// paper's "whole MPI allreduce chunk in one instruction".
+/// The ring schedule generator: one compiled program-chain per block,
+/// the paper's "whole MPI allreduce chunk in one packet".
 pub struct RingAllreduce {
     /// Fused all-gather tail (`false` = reduce-scatter only).
     pub fused: bool,
@@ -137,17 +139,21 @@ pub(crate) fn plan_ring_ops(
             let expect_hash = guard_hash(cl, devices[owner], addr, len)?;
             let srou = crate::srou::ring_chain(ips, c, hops);
             let done_id = id_base + g;
+            let env = prog_env(cl, devices[owner], len, hops, spec.reliable);
+            let instr = lower_ring_chunk(
+                SimdOp::Add,
+                addr,
+                n,
+                fused,
+                expect_hash,
+                done_id,
+                &env,
+            )?;
             let pkt = Packet::new(
                 ips[c],
                 0, // seq assigned by the driver
                 srou,
-                Instruction::ReduceScatter {
-                    op: SimdOp::Add,
-                    addr,
-                    block: done_id,
-                    rs_left: (n - 1) as u8,
-                    expect_hash,
-                },
+                instr,
             )
             .with_flags(op_flags(spec.reliable))
             .with_payload(payload);

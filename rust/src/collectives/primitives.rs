@@ -8,21 +8,23 @@
 //! * **reduce-scatter** — [`super::netdam_ring::RingAllreduce`] with
 //!   `fused: false` (chunk `c` reduced at its ring owner);
 //! * **all-gather** ([`RingAllGather`]) — every rank streams its chunk
-//!   around the ring as idempotent `AllGather` writes;
+//!   around the ring as an idempotent store-chain program;
 //! * **broadcast** ([`RingBroadcast`]) — the root streams the whole
 //!   vector through the ring chain.
 //!
-//! Both planners emit pure `AllGather` ops: writes derived solely from
-//! the packet, so blind retransmission is safe (§3.1) and no guard hash
-//! is needed.
+//! Both planners lower onto pure store-chain programs: writes derived
+//! solely from the packet, so blind retransmission is safe (§3.1) and no
+//! guard hash is needed.
 
 use anyhow::{ensure, Result};
 
-use crate::isa::Instruction;
 use crate::net::Cluster;
 use crate::wire::Packet;
 
-use super::driver::{op_flags, read_block, CollectiveAlgorithm, PlanCtx, Phase, ScheduledOp};
+use super::driver::{
+    lower_store_chain, op_flags, prog_env, read_block, CollectiveAlgorithm, PlanCtx, Phase,
+    ScheduledOp,
+};
 
 /// Ring all-gather: rank `r` owns chunk `r`; after the run every rank
 /// holds every chunk.
@@ -57,14 +59,13 @@ impl CollectiveAlgorithm for RingAllGather {
                 let payload = read_block(cl, ctx.devices[r], addr, len)?;
                 let done_id = next_id;
                 next_id += 1;
+                let env = prog_env(cl, ctx.devices[(r + 1) % n], len, n - 1, spec.reliable);
+                let instr = lower_store_chain(addr, n - 1, done_id, &env)?;
                 let pkt = Packet::new(
                     ctx.ips[r],
                     0,
                     crate::srou::ring_chain(ctx.ips, r, n - 1),
-                    Instruction::AllGather {
-                        addr,
-                        block: done_id,
-                    },
+                    instr,
                 )
                 .with_flags(op_flags(spec.reliable))
                 .with_payload(payload);
@@ -109,14 +110,13 @@ impl CollectiveAlgorithm for RingBroadcast {
             let payload = read_block(cl, ctx.devices[self.root], addr, len)?;
             let done_id = next_id;
             next_id += 1;
+            let env = prog_env(cl, ctx.devices[(self.root + 1) % n], len, n - 1, spec.reliable);
+            let instr = lower_store_chain(addr, n - 1, done_id, &env)?;
             let pkt = Packet::new(
                 ctx.ips[self.root],
                 0,
                 crate::srou::ring_chain(ctx.ips, self.root, n - 1),
-                Instruction::AllGather {
-                    addr,
-                    block: done_id,
-                },
+                instr,
             )
             .with_flags(op_flags(spec.reliable))
             .with_payload(payload);
@@ -216,7 +216,7 @@ mod tests {
 
     #[test]
     fn broadcast_survives_duplication() {
-        // AllGather writes are idempotent: duplicated packets are harmless.
+        // Store-chain writes are idempotent: duplicated packets are harmless.
         let n = 4;
         let elements = 2 * 2048;
         let t = Topology::star(8, n, 0, LinkConfig::dc_100g());

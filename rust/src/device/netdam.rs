@@ -1,13 +1,21 @@
 //! The NetDAM device: instruction execution in the fixed pipeline.
+//!
+//! Single instructions execute exactly as before; packets carrying an
+//! [`Instruction::Program`] run through the **micro-executor loop**
+//! (`execute_program`): each step executes hop-locally
+//! against HBM with per-step cost accounting, fused steps chain on the
+//! same device with operand forwarding, and `repeat` steps self-route
+//! along the SROU segment list — the §3 fused allreduce and chained DPU
+//! offloads without any bespoke opcode.
 
 use std::sync::Arc;
 
-use anyhow::Result;
+use anyhow::{bail, ensure, Result};
 
 use crate::alu::{block_hash, AluBackend, NativeAlu};
 use crate::iommu::{Access, Iommu};
 use crate::isa::registry::{ExecCtx, ExecOutcome, InstructionRegistry, MemAccess};
-use crate::isa::{Instruction, USER_OPCODE_BASE};
+use crate::isa::{Instruction, Program, Step, NO_COMPLETION, USER_OPCODE_BASE};
 use crate::sim::SimTime;
 use crate::util::bytes::{bytes_to_f32s, f32s_to_bytes};
 use crate::util::Xoshiro256;
@@ -22,6 +30,23 @@ use super::pipeline::DeviceConfig;
 pub struct Emit {
     pub delay: SimTime,
     pub pkt: Packet,
+}
+
+/// Side channel out of one program step.
+enum StepNote {
+    /// Nothing beyond the payload transformation.
+    None,
+    /// A user handler produced a reply (emitted if the program retires
+    /// on this step and carries no completion id).
+    Reply {
+        opcode: u16,
+        a: u64,
+        b: u64,
+        c: u64,
+        payload: Vec<u8>,
+    },
+    /// A user handler dropped the packet (guard failed): abort silently.
+    Halt,
 }
 
 /// One NetDAM device.
@@ -42,6 +67,8 @@ pub struct NetDamDevice {
     pub pkts_out: u64,
     pub drops_hash_guard: u64,
     pub exec_errors: u64,
+    /// Program steps executed locally (micro-executor throughput).
+    pub prog_steps: u64,
 }
 
 impl NetDamDevice {
@@ -65,6 +92,7 @@ impl NetDamDevice {
             pkts_out: 0,
             drops_hash_guard: 0,
             exec_errors: 0,
+            prog_steps: 0,
         }
     }
 
@@ -147,7 +175,7 @@ impl NetDamDevice {
         self.reply_seq(dst, seq, instr).with_payload(payload)
     }
 
-    fn execute(&mut self, now: SimTime, mut pkt: Packet) -> Result<Vec<Emit>> {
+    fn execute(&mut self, now: SimTime, pkt: Packet) -> Result<Vec<Emit>> {
         let flags = pkt.flags;
         let src = pkt.src;
         let mut emits = Vec::new();
@@ -156,6 +184,17 @@ impl NetDamDevice {
         // Raw user-defined opcode? Dispatch through the registry.
         if let Instruction::User { opcode, a, b, c } = pkt.instr {
             return self.execute_user(now, pkt, opcode, a, b, c);
+        }
+        // Packet program? Run the micro-executor loop. The program is
+        // moved out (and its box reused on forward) — no per-hop clone
+        // on the collective hot path.
+        if matches!(pkt.instr, Instruction::Program(_)) {
+            let mut pkt = pkt;
+            let Instruction::Program(prog) = std::mem::replace(&mut pkt.instr, Instruction::Nop)
+            else {
+                unreachable!()
+            };
+            return self.execute_program(pkt, prog);
         }
 
         match pkt.instr.clone() {
@@ -283,104 +322,6 @@ impl NetDamDevice {
                 }
             }
 
-            Instruction::ReduceScatter {
-                op,
-                addr,
-                block,
-                rs_left,
-                expect_hash,
-            } => {
-                let len = pkt.payload.len();
-                let lanes = len / 4;
-                let owner = rs_left <= 1;
-                let access = if owner { Access::Write } else { Access::Read };
-                let pa = self.iommu.translate(addr, len, access)?;
-                if !owner {
-                    // Interim hop: payload ⊕= local contribution, forward.
-                    // No side effect on local memory — idempotent (§3.1).
-                    let t = fixed + self.mem_ns(len) + self.alu_ns(lanes);
-                    let new_payload = match pkt.payload.bytes() {
-                        Some(bytes) => {
-                            let mut acc = bytes_to_f32s(bytes)?;
-                            let local = bytes_to_f32s(&self.hbm.read(pa, len)?)?;
-                            self.alu.apply(op, &mut acc, &local);
-                            Payload::from_bytes(f32s_to_bytes(&acc))
-                        }
-                        None => Payload::phantom(len),
-                    };
-                    pkt.srou.advance();
-                    pkt.instr = Instruction::ReduceScatter {
-                        op,
-                        addr,
-                        block,
-                        rs_left: rs_left - 1,
-                        expect_hash,
-                    };
-                    pkt.payload = new_payload;
-                    emits.push(Emit { delay: t, pkt });
-                } else {
-                    // Chunk owner: add local contribution, hash-guarded
-                    // write (exactly-once under retransmission), then if
-                    // the SROU stack continues, emit the fused All-Gather
-                    // chain carrying the fully-reduced block.
-                    let t = fixed + self.mem_ns(len) * 2 + self.alu_ns(lanes) * 2;
-                    let pristine_ok = if self.hbm.is_phantom() {
-                        true
-                    } else {
-                        let local = self.hbm.read(pa, len)?;
-                        block_hash(&local) == expect_hash
-                    };
-                    let reduced: Payload = if let Some(bytes) = pkt.payload.bytes() {
-                        if pristine_ok {
-                            let mut acc = bytes_to_f32s(bytes)?;
-                            let local = bytes_to_f32s(&self.hbm.read(pa, len)?)?;
-                            self.alu.apply(op, &mut acc, &local);
-                            self.hbm.write(pa, &f32s_to_bytes(&acc))?;
-                            Payload::from_bytes(self.hbm.read(pa, len)?)
-                        } else {
-                            // Duplicate chain (retransmit): memory already
-                            // holds the reduced block; replay the gather
-                            // from it so end-to-end retries still finish.
-                            self.drops_hash_guard += 1;
-                            Payload::from_bytes(self.hbm.read(pa, len)?)
-                        }
-                    } else {
-                        Payload::phantom(len)
-                    };
-                    match pkt.srou.advance() {
-                        Some(_) => {
-                            pkt.instr = Instruction::AllGather { addr, block };
-                            pkt.payload = reduced;
-                            emits.push(Emit { delay: t, pkt });
-                        }
-                        None => {
-                            let done = self.reply_seq(
-                                src,
-                                pkt.seq,
-                                Instruction::CollectiveDone { block },
-                            );
-                            emits.push(Emit { delay: t, pkt: done });
-                        }
-                    }
-                }
-            }
-
-            Instruction::AllGather { addr, block } => {
-                let len = pkt.payload.len();
-                let pa = self.iommu.translate(addr, len, Access::Write)?;
-                let t = fixed + self.mem_ns(len);
-                if let Some(bytes) = pkt.payload.bytes() {
-                    self.hbm.write(pa, bytes)?; // plain write: idempotent
-                }
-                if pkt.srou.at_last_hop() {
-                    let done = self.reply_seq(src, pkt.seq, Instruction::CollectiveDone { block });
-                    emits.push(Emit { delay: t, pkt: done });
-                } else {
-                    pkt.srou.advance();
-                    emits.push(Emit { delay: t, pkt });
-                }
-            }
-
             // Responses / completions: land in the completion queue for the
             // attached host (memif poll-mode driver).
             Instruction::ReadResp { .. }
@@ -401,12 +342,262 @@ impl NetDamDevice {
             // Pool control is handled by the SDN controller (pool module),
             // not by devices; receiving one here is a misdelivery.
             Instruction::Malloc { .. } | Instruction::Free { .. } => {
-                anyhow::bail!("pool control packet delivered to a device");
+                bail!("pool control packet delivered to a device");
             }
 
-            Instruction::User { .. } => unreachable!("handled above"),
+            Instruction::Program(_) | Instruction::User { .. } => unreachable!("handled above"),
         }
         Ok(emits)
+    }
+
+    // ------------------------------------------------- program executor
+
+    /// The micro-executor loop: run the current step (and any fused
+    /// successors) locally, then either forward the packet along the
+    /// SROU path with the updated cursor, or retire the program.
+    fn execute_program(&mut self, mut pkt: Packet, mut prog: Box<Program>) -> Result<Vec<Emit>> {
+        let mut t = self.fixed_ns();
+        let mut fwd: Option<(u64, u64, u64)> = None;
+        loop {
+            let pc = prog.pc as usize;
+            ensure!(pc < prog.steps.len(), "program pc {pc} out of range");
+            let payload = std::mem::replace(&mut pkt.payload, Payload::empty());
+            let (cost, new_payload, note) = {
+                let step = &prog.steps[pc];
+                ensure!(step.repeat >= 1, "program step with repeat 0");
+                self.exec_step(step, payload, &mut fwd)?
+            };
+            self.prog_steps += 1;
+            t += cost;
+            pkt.payload = new_payload;
+            if matches!(note, StepNote::Halt) {
+                return Ok(Vec::new());
+            }
+            prog.reps_done = prog.reps_done.saturating_add(1);
+            if prog.reps_done < prog.steps[pc].repeat {
+                // Same step again at the next hop.
+                ensure!(
+                    pkt.srou.advance().is_some(),
+                    "program ran out of SROU segments mid-step"
+                );
+                pkt.instr = Instruction::Program(prog);
+                return Ok(vec![Emit { delay: t, pkt }]);
+            }
+            prog.pc += 1;
+            prog.reps_done = 0;
+            if prog.pc as usize >= prog.steps.len() {
+                // Program retires at this device: completion id wins,
+                // otherwise a final user reply, otherwise an Ack when the
+                // sender asked for reliability.
+                if prog.completion != NO_COMPLETION {
+                    let done = self.reply_seq(
+                        pkt.src,
+                        pkt.seq,
+                        Instruction::CollectiveDone {
+                            block: prog.completion,
+                        },
+                    );
+                    return Ok(vec![Emit { delay: t, pkt: done }]);
+                }
+                if let StepNote::Reply {
+                    opcode,
+                    a,
+                    b,
+                    c,
+                    payload,
+                } = note
+                {
+                    let resp = self.reply(
+                        pkt.src,
+                        pkt.seq,
+                        Instruction::User { opcode, a, b, c },
+                        Payload::from_bytes(payload),
+                    );
+                    return Ok(vec![Emit { delay: t, pkt: resp }]);
+                }
+                if pkt.flags.reliable() {
+                    let ack = self.reply_seq(pkt.src, pkt.seq, Instruction::Ack { acked: pkt.seq });
+                    return Ok(vec![Emit { delay: t, pkt: ack }]);
+                }
+                return Ok(Vec::new());
+            }
+            if !prog.steps[prog.pc as usize].fused {
+                ensure!(
+                    pkt.srou.advance().is_some(),
+                    "program ran out of SROU segments between steps"
+                );
+                pkt.instr = Instruction::Program(prog);
+                return Ok(vec![Emit { delay: t, pkt }]);
+            }
+            // Fused successor: keep executing on this device, with the
+            // step's result payload as input (operand forwarding).
+        }
+    }
+
+    /// Execute one program step against local memory. Returns the charged
+    /// pipeline time, the step's result payload (the next step's input),
+    /// and any side note.
+    fn exec_step(
+        &mut self,
+        step: &Step,
+        payload: Payload,
+        fwd: &mut Option<(u64, u64, u64)>,
+    ) -> Result<(SimTime, Payload, StepNote)> {
+        use Instruction as I;
+        let flags = step.flags;
+        match &step.instr {
+            I::Read { addr, len } => {
+                let len = *len as usize;
+                let pa = self.iommu.translate(*addr, len, Access::Read)?;
+                let t = self.mem_ns(len);
+                let out = if self.hbm.is_phantom() {
+                    Payload::phantom(len)
+                } else {
+                    Payload::from_bytes(self.hbm.read(pa, len)?)
+                };
+                *fwd = None;
+                Ok((t, out, StepNote::None))
+            }
+            I::Write { addr } => {
+                let len = payload.len();
+                let pa = self.iommu.translate(*addr, len, Access::Write)?;
+                let t = self.mem_ns(len);
+                if let Some(bytes) = payload.bytes() {
+                    self.hbm.write(pa, bytes)?;
+                }
+                *fwd = None;
+                Ok((t, payload, StepNote::None))
+            }
+            I::Memcopy { src, dst, len } => {
+                let len = *len as usize;
+                let ps = self.iommu.translate(*src, len, Access::Read)?;
+                let pd = self.iommu.translate(*dst, len, Access::Write)?;
+                let t = self.mem_ns(len) + self.mem_ns(len);
+                let data = self.hbm.read(ps, len)?;
+                self.hbm.write(pd, &data)?;
+                *fwd = None;
+                Ok((t, payload, StepNote::None))
+            }
+            I::Simd { op, addr } => {
+                let len = payload.len();
+                let lanes = len / 4;
+                let access = if flags.store() { Access::Write } else { Access::Read };
+                let pa = self.iommu.translate(*addr, len, access)?;
+                let mut t = self.mem_ns(len) + self.alu_ns(lanes);
+                let out = match payload.bytes() {
+                    Some(bytes) => {
+                        let mut acc = bytes_to_f32s(bytes)?;
+                        let operand = bytes_to_f32s(&self.hbm.read(pa, len)?)?;
+                        self.alu.apply(*op, &mut acc, &operand);
+                        Payload::from_bytes(f32s_to_bytes(&acc))
+                    }
+                    None => Payload::phantom(len),
+                };
+                if flags.store() {
+                    t += self.mem_ns(len);
+                    if let Some(bytes) = out.bytes() {
+                        self.hbm.write(pa, bytes)?;
+                    }
+                }
+                *fwd = None;
+                Ok((t, out, StepNote::None))
+            }
+            I::BlockHash { addr, len } => {
+                let len = *len as usize;
+                let pa = self.iommu.translate(*addr, len, Access::Read)?;
+                let t = self.mem_ns(len) + self.alu_ns(len / 4);
+                let hash = block_hash(&self.hbm.read(pa, len)?);
+                *fwd = None;
+                Ok((t, Payload::from_u64(hash), StepNote::None))
+            }
+            I::WriteIfHash { addr, expect_hash } => {
+                // Guarded write + read-back: on first delivery the payload
+                // lands and reads back unchanged; on a replayed chain the
+                // guard fails and the read-back substitutes the already-
+                // written block, so downstream hops still see the truth.
+                let len = payload.len();
+                let pa = self.iommu.translate(*addr, len, Access::Write)?;
+                let t = self.mem_ns(len) * 2 + self.alu_ns(len / 4);
+                if payload.is_phantom() {
+                    *fwd = None;
+                    return Ok((t, Payload::phantom(len), StepNote::None));
+                }
+                let ok = if self.hbm.is_phantom() {
+                    true
+                } else {
+                    block_hash(&self.hbm.read(pa, len)?) == *expect_hash
+                };
+                if ok {
+                    if let Some(bytes) = payload.bytes() {
+                        self.hbm.write(pa, bytes)?;
+                    }
+                } else {
+                    self.drops_hash_guard += 1;
+                }
+                let back = if self.hbm.is_phantom() {
+                    Payload::phantom(len)
+                } else {
+                    Payload::from_bytes(self.hbm.read(pa, len)?)
+                };
+                *fwd = None;
+                Ok((t, back, StepNote::None))
+            }
+            I::User { opcode, a, b, c } => {
+                ensure!(*opcode >= USER_OPCODE_BASE, "user opcode below range");
+                let registry = Arc::clone(&self.registry);
+                let Some(handler) = registry.get(*opcode) else {
+                    bail!("no handler for user opcode {opcode:#06x}");
+                };
+                let empty: &[u8] = &[];
+                let payload_bytes = payload.bytes().unwrap_or(empty).to_vec();
+                let t = self.mem_ns(payload_bytes.len().max(8)) + handler.cost_ns(payload_bytes.len());
+                let mut ctx = ExecCtx {
+                    mem: &mut self.hbm,
+                    payload: &payload_bytes,
+                    a: *a,
+                    b: *b,
+                    c: *c,
+                    flags,
+                    fwd: *fwd,
+                };
+                let outcome = handler.execute(&mut ctx)?;
+                match outcome {
+                    ExecOutcome::Consume => {
+                        *fwd = None;
+                        Ok((t, Payload::empty(), StepNote::None))
+                    }
+                    ExecOutcome::Drop => Ok((t, payload, StepNote::Halt)),
+                    ExecOutcome::Forward { payload } => {
+                        *fwd = None;
+                        Ok((t, Payload::from_bytes(payload), StepNote::None))
+                    }
+                    ExecOutcome::Reply {
+                        opcode,
+                        a,
+                        b,
+                        c,
+                        payload,
+                    } => {
+                        *fwd = Some((a, b, c));
+                        Ok((
+                            t,
+                            Payload::from_bytes(payload.clone()),
+                            StepNote::Reply {
+                                opcode,
+                                a,
+                                b,
+                                c,
+                                payload,
+                            },
+                        ))
+                    }
+                }
+            }
+            other => bail!(
+                "instruction {:#06x} cannot run as a program step",
+                other.opcode_u16()
+            ),
+        }
     }
 
     fn execute_user(
@@ -421,7 +612,7 @@ impl NetDamDevice {
         debug_assert!(opcode >= USER_OPCODE_BASE);
         let registry = Arc::clone(&self.registry);
         let Some(handler) = registry.get(opcode) else {
-            anyhow::bail!("no handler for user opcode {opcode:#06x}");
+            bail!("no handler for user opcode {opcode:#06x}");
         };
         let empty: &[u8] = &[];
         let payload_bytes = pkt.payload.bytes().unwrap_or(empty).to_vec();
@@ -434,6 +625,7 @@ impl NetDamDevice {
             b,
             c,
             flags: pkt.flags,
+            fwd: None,
         };
         let outcome = handler.execute(&mut ctx)?;
         let mut emits = Vec::new();
@@ -469,7 +661,8 @@ impl NetDamDevice {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::isa::{Flags, SimdOp};
+    use crate::isa::dpu::{register_dpu_instructions, OP_CRC32, OP_CRYPTO_WRITE};
+    use crate::isa::{Flags, ProgramBuilder, SimdOp};
     use crate::wire::Segment;
 
     fn dev(ip: u8) -> NetDamDevice {
@@ -589,24 +782,19 @@ mod tests {
         );
     }
 
+    /// The §3 reduce chain as a program: interim hop accumulates into the
+    /// packet buffer and self-routes onward, pc/reps advancing on the wire.
     #[test]
-    fn reduce_scatter_interim_hop_accumulates_and_forwards() {
+    fn program_reduce_hop_accumulates_and_forwards() {
         let mut d = dev(2);
         d.mem().write(0, &f32s_to_bytes(&[10.0, 10.0])).unwrap();
         let srou = SrouHeader::through(vec![Segment::to(ip(2)), Segment::to(ip(3))]);
-        let pkt = Packet::new(
-            ip(1),
-            1,
-            srou,
-            Instruction::ReduceScatter {
-                op: SimdOp::Add,
-                addr: 0,
-                block: 0,
-                rs_left: 2,
-                expect_hash: 0,
-            },
-        )
-        .with_payload(Payload::from_f32s(&[1.0, 2.0]));
+        let prog = ProgramBuilder::new()
+            .reduce(SimdOp::Add, 0, 2)
+            .guarded_write(0, 0)
+            .build_unchecked();
+        let pkt = Packet::new(ip(1), 1, srou, Instruction::Program(Box::new(prog)))
+            .with_payload(Payload::from_f32s(&[1.0, 2.0]));
         let emits = d.handle_packet(0, pkt);
         assert_eq!(emits.len(), 1);
         let fwd = &emits[0].pkt;
@@ -616,31 +804,38 @@ mod tests {
             vec![11.0, 12.0],
             "payload accumulated in packet buffer"
         );
+        let Instruction::Program(p) = &fwd.instr else {
+            panic!("still a program");
+        };
+        assert_eq!((p.pc, p.reps_done), (0, 1), "cursor travels on the wire");
         // Local memory untouched: interim hop is idempotent.
         assert_eq!(
             bytes_to_f32s(&d.mem().read(0, 8).unwrap()).unwrap(),
             vec![10.0, 10.0]
         );
+        assert_eq!(d.prog_steps, 1);
     }
 
+    /// Chain owner: fused guarded write retires the program with a
+    /// CollectiveDone; a replayed chain is absorbed by the guard but the
+    /// Done is re-emitted (the retry may exist because it was lost).
     #[test]
-    fn reduce_scatter_last_hop_writes_with_guard() {
+    fn program_owner_writes_with_guard_and_completes() {
         let mut d = dev(4);
         let local = vec![100.0f32, 200.0];
         d.mem().write(64, &f32s_to_bytes(&local)).unwrap();
         let guard = block_hash(&f32s_to_bytes(&local));
         let mk = || {
+            let prog = ProgramBuilder::new()
+                .reduce(SimdOp::Add, 64, 1)
+                .guarded_write(64, guard)
+                .on_retire(5)
+                .build_unchecked();
             Packet::new(
                 ip(3),
                 9,
                 SrouHeader::direct(ip(4)),
-                Instruction::ReduceScatter {
-                    op: SimdOp::Add,
-                    addr: 64,
-                    block: 5,
-                    rs_left: 1,
-                    expect_hash: guard,
-                },
+                Instruction::Program(Box::new(prog)),
             )
             .with_payload(Payload::from_f32s(&[1.0, 2.0]))
         };
@@ -653,8 +848,7 @@ mod tests {
             bytes_to_f32s(&d.mem().read(64, 8).unwrap()).unwrap(),
             vec![101.0, 202.0]
         );
-        // Retransmit: guard fails, memory stable; the Done is *re-emitted*
-        // (the retry may exist because the original Done was lost).
+        // Retransmit: guard fails, memory stable; the Done is re-emitted.
         let emits = d.handle_packet(0, mk());
         assert!(matches!(
             emits[0].pkt.instr,
@@ -667,11 +861,13 @@ mod tests {
         );
     }
 
+    /// The all-gather tail as a program store chain.
     #[test]
-    fn all_gather_writes_and_chains() {
+    fn program_store_chain_writes_and_forwards() {
         let mut d = dev(2);
         let srou = SrouHeader::through(vec![Segment::to(ip(2)), Segment::to(ip(3))]);
-        let pkt = Packet::new(ip(1), 1, srou, Instruction::AllGather { addr: 0, block: 1 })
+        let prog = ProgramBuilder::new().store(0, 2).on_retire(1).build_unchecked();
+        let pkt = Packet::new(ip(1), 1, srou, Instruction::Program(Box::new(prog)))
             .with_payload(Payload::from_f32s(&[5.0]));
         let emits = d.handle_packet(0, pkt);
         assert_eq!(emits[0].pkt.dst().unwrap(), ip(3));
@@ -679,6 +875,58 @@ mod tests {
             bytes_to_f32s(&d.mem().read(0, 4).unwrap()).unwrap(),
             vec![5.0]
         );
+    }
+
+    /// Chained DPU offload in one packet: encrypt-write then CRC the
+    /// ciphertext region, operands forwarded between the fused steps.
+    #[test]
+    fn program_chains_dpu_offloads_with_operand_forwarding() {
+        let mut reg = InstructionRegistry::new();
+        register_dpu_instructions(&mut reg, 0xC0FFEE).unwrap();
+        let mut d = NetDamDevice::new(
+            DeviceConfig::paper_default(ip(2)),
+            Arc::new(reg),
+        );
+        let plaintext = b"one packet, two offloads".to_vec();
+        let prog = ProgramBuilder::new()
+            .hop(Instruction::User {
+                opcode: OP_CRYPTO_WRITE,
+                a: 256,
+                b: 0,
+                c: 0,
+            })
+            .then(Instruction::User {
+                opcode: OP_CRC32,
+                a: 0,
+                b: 0,
+                c: 0,
+            })
+            .build_unchecked();
+        let pkt = direct(1, 2, Instruction::Program(Box::new(prog)))
+            .with_payload(Payload::from_bytes(plaintext.clone()));
+        let emits = d.handle_packet(0, pkt);
+        assert_eq!(emits.len(), 1);
+        let Instruction::User { opcode, a, b, c } = emits[0].pkt.instr else {
+            panic!("expected a user reply, got {:?}", emits[0].pkt.instr);
+        };
+        assert_eq!(opcode, OP_CRC32);
+        assert_eq!((a, b), (256, plaintext.len() as u64));
+        // The CRC covers the *ciphertext* the first step wrote.
+        let ct = d.mem().read(256, plaintext.len()).unwrap();
+        assert_ne!(ct, plaintext);
+        assert_eq!(c, crate::util::crc32::hash(&ct) as u64);
+        assert_eq!(d.prog_steps, 2);
+    }
+
+    #[test]
+    fn program_without_segments_is_exec_error() {
+        let mut d = dev(2);
+        // Two travelling steps but a single-segment SROU header.
+        let prog = ProgramBuilder::new().store(0, 2).build_unchecked();
+        let pkt = direct(1, 2, Instruction::Program(Box::new(prog)))
+            .with_payload(Payload::from_f32s(&[1.0]));
+        assert!(d.handle_packet(0, pkt).is_empty());
+        assert_eq!(d.exec_errors, 1);
     }
 
     #[test]

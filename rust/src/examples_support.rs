@@ -5,9 +5,9 @@
 //! 1. every worker executes the `mlp_grad` artifact through PJRT (L2
 //!    compute, python-free at runtime);
 //! 2. the flattened gradients are written into the 4 simulated NetDAM
-//!    devices and ring-allreduced by the in-memory `ReduceScatter`/
-//!    `AllGather` instruction chain (the paper's §3 datapath) — the real
-//!    gradient bits flow through the DES and the device ALUs;
+//!    devices and ring-allreduced by in-memory packet programs
+//!    (`reduce → guarded_write → store`, the paper's §3 datapath) — the
+//!    real gradient bits flow through the DES and the device ALUs;
 //! 3. the reduced sum is scaled by 1/workers and applied via the
 //!    `sgd_apply` artifact (Pallas SIMD kernels — the "in-memory
 //!    optimizer").

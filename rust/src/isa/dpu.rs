@@ -124,12 +124,18 @@ impl UserInstruction for Crc32Region {
         true
     }
     fn execute(&self, ctx: &mut ExecCtx) -> Result<ExecOutcome> {
-        let data = ctx.mem.read(ctx.a, ctx.b as usize)?;
-        let crc = crc32fast::hash(&data);
+        // Chained form (`crypto_write → crc32` in one program): the
+        // previous step's reply operands name the region it produced.
+        let (addr, len) = match ctx.fwd {
+            Some((a, b, _)) if ctx.b == 0 => (a, b),
+            _ => (ctx.a, ctx.b),
+        };
+        let data = ctx.mem.read(addr, len as usize)?;
+        let crc = crate::util::crc32::hash(&data);
         Ok(ExecOutcome::Reply {
             opcode: OP_CRC32,
-            a: ctx.a,
-            b: ctx.b,
+            a: addr,
+            b: len,
             c: crc as u64,
             payload: vec![],
         })
@@ -255,6 +261,7 @@ mod tests {
             b,
             c,
             flags: Flags::default(),
+            fwd: None,
         }
     }
 

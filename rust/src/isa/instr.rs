@@ -4,10 +4,16 @@
 //! (operands are opcode-specific, always fixed-width so the FPGA pipeline
 //! the paper describes could parse them in one cycle). The data payload is
 //! *not* part of the instruction — it follows in the packet body.
+//!
+//! Fused behaviours (the §3 reduce-scatter → all-gather chain, DPU
+//! offload chains) are **not** special-cased opcodes: they are
+//! [`Program`]s — bounded step sequences built from the ordinary
+//! instructions below (see [`super::program`]).
 
 use anyhow::{bail, Result};
 
 use super::opcode::{Opcode, SimdOp, USER_OPCODE_BASE};
+use super::program::Program;
 use crate::util::bytes::{Reader, Writer};
 
 /// Per-instruction flag bits (the paper's "reserved bits").
@@ -80,23 +86,8 @@ pub enum Instruction {
     /// `expect_hash` — the paper's idempotent last-hop WRITE (§3.1).
     WriteIfHash { addr: u64, expect_hash: u64 },
 
-    /// Ring Reduce-Scatter step: add payload into the accumulator carried
-    /// in the packet buffer, then self-route to the next segment.
-    /// `rs_left` counts reduce hops remaining *including this one*: at
-    /// `rs_left == 1` this device is the chunk owner — it performs the
-    /// hash-guarded reduced write (idempotent, §3.1) and, if the SROU
-    /// stack continues, emits the fused All-Gather chain carrying the
-    /// fully-reduced block (one instruction = whole MPI allreduce chunk).
-    ReduceScatter {
-        op: SimdOp,
-        addr: u64,
-        block: u32,
-        rs_left: u8,
-        expect_hash: u64,
-    },
-    /// Ring All-Gather step: write payload at `addr`, forward to next hop.
-    AllGather { addr: u64, block: u32 },
-    /// Completion notification sent to the controller/leader.
+    /// Completion notification sent to the controller/leader when a
+    /// packet [`Program`] retires with a completion id.
     CollectiveDone { block: u32 },
 
     /// Pool control plane (SDN controller as MMU, §2.6).
@@ -104,6 +95,11 @@ pub enum Instruction {
     MallocResp { gva: u64, tag: u32 },
     Free { gva: u64 },
     FreeResp { gva: u64 },
+
+    /// A bounded multi-instruction packet program executed hop-locally
+    /// by the devices on the SROU path (see [`super::program`]). The §3
+    /// fused allreduce chunk is one of these.
+    Program(Box<Program>),
 
     /// A user-defined instruction (opcode >= USER_OPCODE_BASE) with three
     /// raw operands; semantics come from the instruction registry.
@@ -130,13 +126,12 @@ impl Instruction {
             BlockHash { .. } => Opcode::BlockHash as u16,
             BlockHashResp { .. } => Opcode::BlockHashResp as u16,
             WriteIfHash { .. } => Opcode::WriteIfHash as u16,
-            ReduceScatter { .. } => Opcode::ReduceScatter as u16,
-            AllGather { .. } => Opcode::AllGather as u16,
             CollectiveDone { .. } => Opcode::CollectiveDone as u16,
             Malloc { .. } => Opcode::Malloc as u16,
             MallocResp { .. } => Opcode::MallocResp as u16,
             Free { .. } => Opcode::Free as u16,
             FreeResp { .. } => Opcode::FreeResp as u16,
+            Program(_) => Opcode::Program as u16,
             User { opcode, .. } => *opcode,
         }
     }
@@ -192,23 +187,6 @@ impl Instruction {
                 w.u64(*addr);
                 w.u64(*expect_hash);
             }
-            ReduceScatter {
-                op,
-                addr,
-                block,
-                rs_left,
-                expect_hash,
-            } => {
-                w.u8(*op as u8);
-                w.u64(*addr);
-                w.u32(*block);
-                w.u8(*rs_left);
-                w.u64(*expect_hash);
-            }
-            AllGather { addr, block } => {
-                w.u64(*addr);
-                w.u32(*block);
-            }
             CollectiveDone { block } => w.u32(*block),
             Malloc { bytes, tag } => {
                 w.u64(*bytes);
@@ -219,6 +197,7 @@ impl Instruction {
                 w.u32(*tag);
             }
             Free { gva } | FreeResp { gva } => w.u64(*gva),
+            Program(p) => p.encode_body(w),
             User { opcode: _, a, b, c } => {
                 w.u64(*a);
                 w.u64(*b);
@@ -229,6 +208,16 @@ impl Instruction {
 
     /// Decode from `r`; returns `(instruction, flags)`.
     pub fn decode(r: &mut Reader) -> Result<(Instruction, Flags)> {
+        Self::decode_inner(r, true)
+    }
+
+    /// Decode a program *step*: identical wire format, but a nested
+    /// `Program` opcode is rejected (bounds decode recursion at one).
+    pub(crate) fn decode_step(r: &mut Reader) -> Result<(Instruction, Flags)> {
+        Self::decode_inner(r, false)
+    }
+
+    fn decode_inner(r: &mut Reader, allow_program: bool) -> Result<(Instruction, Flags)> {
         let raw_op = r.u16()?;
         let flags = Flags(r.u16()?);
         if raw_op >= USER_OPCODE_BASE {
@@ -292,17 +281,6 @@ impl Instruction {
                 addr: r.u64()?,
                 expect_hash: r.u64()?,
             },
-            Opcode::ReduceScatter => I::ReduceScatter {
-                op: SimdOp::from_u8(r.u8()?)?,
-                addr: r.u64()?,
-                block: r.u32()?,
-                rs_left: r.u8()?,
-                expect_hash: r.u64()?,
-            },
-            Opcode::AllGather => I::AllGather {
-                addr: r.u64()?,
-                block: r.u32()?,
-            },
             Opcode::CollectiveDone => I::CollectiveDone { block: r.u32()? },
             Opcode::Malloc => I::Malloc {
                 bytes: r.u64()?,
@@ -314,6 +292,12 @@ impl Instruction {
             },
             Opcode::Free => I::Free { gva: r.u64()? },
             Opcode::FreeResp => I::FreeResp { gva: r.u64()? },
+            Opcode::Program => {
+                if !allow_program {
+                    bail!("nested program rejected");
+                }
+                I::Program(Box::new(Program::decode_body(r)?))
+            }
         };
         Ok((instr, flags))
     }
@@ -321,12 +305,13 @@ impl Instruction {
     /// Is this instruction idempotent (safe to blindly re-execute)?
     /// §3.1: everything that only reads, or writes a value derived solely
     /// from the packet, is idempotent; accumulating into local memory
-    /// (`Simd` with STORE) is not — hence `WriteIfHash`.
+    /// (`Simd` with STORE) is not — hence `WriteIfHash`. A program is
+    /// idempotent iff every step is.
     pub fn idempotent(&self, flags: Flags) -> bool {
         use Instruction::*;
         match self {
             Read { .. } | ReadResp { .. } | Write { .. } | WriteAck { .. } | Nop
-            | BlockHash { .. } | BlockHashResp { .. } | WriteIfHash { .. } | AllGather { .. }
+            | BlockHash { .. } | BlockHashResp { .. } | WriteIfHash { .. }
             | Ack { .. } | Nack { .. } | SimdResp { .. } | MallocResp { .. }
             | CollectiveDone { .. } | FreeResp { .. } => true,
             // CAS is idempotent wrt retry only if expected != new.
@@ -338,8 +323,7 @@ impl Instruction {
                 s + l <= d || d + l <= s
             }
             Simd { .. } => !flags.store(),
-            ReduceScatter { .. } => true, // interim hops: packet-buffer only;
-            // last hop uses the hash guard — see device::exec.
+            Program(p) => p.idempotent(),
             Malloc { .. } | Free { .. } => false,
             User { .. } => false, // unknown semantics: assume not
         }
@@ -349,6 +333,7 @@ impl Instruction {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::isa::program::ProgramBuilder;
 
     fn round_trip(i: &Instruction, f: Flags) {
         let mut w = Writer::default();
@@ -359,6 +344,17 @@ mod tests {
         assert_eq!(&j, i);
         assert_eq!(g, f);
         assert_eq!(r.remaining(), 0, "codec consumed everything");
+    }
+
+    fn demo_program() -> Instruction {
+        Instruction::Program(Box::new(
+            ProgramBuilder::new()
+                .reduce(SimdOp::Add, 0x5000, 3)
+                .guarded_write(0x5000, 9)
+                .store(0x5000, 3)
+                .on_retire(3)
+                .build_unchecked(),
+        ))
     }
 
     #[test]
@@ -380,19 +376,42 @@ mod tests {
             BlockHash { addr: 0x3000, len: 8192 },
             BlockHashResp { hash: 0xDEAD_BEEF },
             WriteIfHash { addr: 0x4000, expect_hash: 42 },
-            ReduceScatter { op: SimdOp::Add, addr: 0x5000, block: 3, rs_left: 3, expect_hash: 9 },
-            AllGather { addr: 0x6000, block: 1 },
             CollectiveDone { block: 2 },
             Malloc { bytes: 1 << 30, tag: 77 },
             MallocResp { gva: 0xA000_0000, tag: 77 },
             Free { gva: 0xA000_0000 },
             FreeResp { gva: 0xA000_0000 },
+            demo_program(),
             User { opcode: 0x8001, a: 1, b: 2, c: 3 },
         ];
         for i in &cases {
             round_trip(i, Flags::default());
             round_trip(i, Flags(Flags::RELIABLE | Flags::STORE));
         }
+    }
+
+    #[test]
+    fn mid_flight_program_round_trips() {
+        // The executor cursor (pc / reps_done) travels on the wire.
+        let Instruction::Program(mut p) = demo_program() else {
+            unreachable!()
+        };
+        p.pc = 1;
+        p.reps_done = 0;
+        round_trip(&Instruction::Program(p), Flags::default());
+    }
+
+    #[test]
+    fn nested_program_rejected_by_decoder() {
+        let inner = demo_program();
+        let nested = Instruction::Program(Box::new(
+            ProgramBuilder::new().hop(inner).build_unchecked(),
+        ));
+        let mut w = Writer::default();
+        nested.encode(Flags::default(), &mut w);
+        let bytes = w.into_vec();
+        let err = Instruction::decode(&mut Reader::new(&bytes)).unwrap_err();
+        assert!(err.to_string().contains("nested"), "{err}");
     }
 
     #[test]
@@ -418,12 +437,31 @@ mod tests {
         // Overlapping memcopy is not idempotent.
         assert!(!Memcopy { src: 0, dst: 8, len: 64 }.idempotent(f));
         assert!(Memcopy { src: 0, dst: 64, len: 64 }.idempotent(f));
+        // A program is as idempotent as its steps.
+        assert!(demo_program().idempotent(f));
+        let dirty = Instruction::Program(Box::new(
+            ProgramBuilder::new()
+                .hop(Instruction::Cas { addr: 0, expected: 1, new: 1 })
+                .build_unchecked(),
+        ));
+        assert!(!dirty.idempotent(f));
     }
 
     #[test]
     fn truncated_instruction_is_error() {
         let mut w = Writer::default();
         Instruction::Read { addr: 1, len: 2 }.encode(Flags::default(), &mut w);
+        let bytes = w.into_vec();
+        for cut in 1..bytes.len() {
+            let mut r = Reader::new(&bytes[..cut]);
+            assert!(Instruction::decode(&mut r).is_err(), "cut={cut}");
+        }
+    }
+
+    #[test]
+    fn truncated_program_is_error() {
+        let mut w = Writer::default();
+        demo_program().encode(Flags::default(), &mut w);
         let bytes = w.into_vec();
         for cut in 1..bytes.len() {
             let mut r = Reader::new(&bytes[..cut]);

@@ -1,19 +1,29 @@
 //! The NetDAM programmable ISA (paper §2.4).
 //!
-//! NetDAM instructions are RPC-like: a packet carries one instruction, the
-//! memory address it operates on, and (for SIMD ops) a data payload of up to
-//! 9000 B ≈ 2048 × f32 lanes. The "template" defines the basic memory
+//! NetDAM instructions are RPC-like: a packet carries an instruction, the
+//! memory address it operates on, and (for SIMD ops) a data payload of up
+//! to 9000 B ≈ 2048 × f32 lanes. The "template" defines the basic memory
 //! instructions (READ / WRITE / CAS / MEMCOPY); the instruction field
-//! reserves an opcode range for *user-defined* instructions — we model that
-//! extensibility with [`registry::InstructionRegistry`], and use it
-//! ourselves to add the paper's SIMD ALU ops, the MPI collective steps
-//! (Ring Reduce-Scatter / All-Gather), and the block-hash idempotency
-//! guard, exactly as §3 describes.
+//! reserves an opcode range for *user-defined* instructions — modeled by
+//! [`registry::InstructionRegistry`] and exercised by the DPU offload
+//! library ([`dpu`]).
+//!
+//! Programmability goes beyond single opcodes: a packet may carry a
+//! bounded, statically verified **program** ([`program::Program`]) — a
+//! step sequence the devices on the SROU path execute hop-locally with
+//! operand forwarding. The §3 fused allreduce chunk and chained DPU
+//! offloads are programs, not bespoke opcodes; [`program::Program::verify`]
+//! machine-checks the §2.3 relaxed-ordering rule (commutativity on
+//! unordered paths, idempotency on lossy paths) before injection.
 
 pub mod dpu;
 mod instr;
 mod opcode;
+pub mod program;
 pub mod registry;
 
 pub use instr::{Flags, Instruction};
 pub use opcode::{Opcode, SimdOp, USER_OPCODE_BASE};
+pub use program::{
+    Program, ProgramBuilder, ProgramError, Step, VerifyEnv, MAX_PROGRAM_STEPS, NO_COMPLETION,
+};

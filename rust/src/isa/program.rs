@@ -1,0 +1,656 @@
+//! Packet programs: verified multi-instruction NetDAM packets.
+//!
+//! The paper's headline is a *programmable* in-memory computing ISA, and
+//! its killer application (§3) is a fused behaviour: one packet that
+//! reduce-scatters around a ring and all-gathers the finished block back.
+//! Instead of hardcoding each such fusion as a bespoke opcode, a packet
+//! may carry a bounded **program**: a sequence of [`Step`]s the devices
+//! on the SROU path execute hop-locally, with an operand-forwarding
+//! convention — each step's result payload is the next step's input.
+//!
+//! * A [`Step`] wraps one ordinary [`Instruction`] plus placement:
+//!   `repeat` spreads the step over that many consecutive SROU hops
+//!   (forwarding the packet between executions), and `fused` pins the
+//!   step to the device where the previous step finished (local
+//!   chaining, e.g. `crypto_write → crc32` in one packet).
+//! * A [`ProgramBuilder`] assembles programs; [`Program::verify`] is the
+//!   static checker: bounded length, memory ranges against the device
+//!   capacity, SROU hop-count consistency, and the paper's §2.3 relaxed-
+//!   ordering rule as a *machine-checked property* — a non-commutative
+//!   reduce on an unordered path, or a non-idempotent step on a lossy
+//!   path, is rejected with a typed [`ProgramError`] before anything is
+//!   injected.
+//! * The micro-executor loop lives in `device::netdam` and charges
+//!   per-step pipeline cost through the existing timing model.
+//!
+//! The §3 fused allreduce chunk is now literally
+//! `reduce(op, addr) ×(N−1) → guarded_write(addr, hash) → store(addr)
+//! ×(N−1)` — see `collectives::driver::lower_ring_chunk`.
+
+use std::fmt;
+
+use anyhow::{bail, Result};
+
+use super::instr::{Flags, Instruction};
+use super::opcode::SimdOp;
+use super::registry::InstructionRegistry;
+use crate::util::bytes::{Reader, Writer};
+
+/// Hard bound on program length (the FPGA pipeline the paper describes
+/// would unroll the step table into a fixed micro-sequencer).
+pub const MAX_PROGRAM_STEPS: usize = 8;
+
+/// `completion` sentinel: retire silently instead of emitting a
+/// `CollectiveDone`.
+pub const NO_COMPLETION: u32 = u32::MAX;
+
+/// One program step: an instruction plus its placement on the SROU path.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Step {
+    pub instr: Instruction,
+    /// Per-step flag bits (e.g. `STORE` for an accumulating SIMD step).
+    pub flags: Flags,
+    /// Number of consecutive SROU hops this step executes at (the packet
+    /// is forwarded between executions). Must be >= 1.
+    pub repeat: u8,
+    /// Execute the first repetition at the device where the previous
+    /// step finished (operand forwarding) instead of the next SROU hop.
+    /// Must be false on the first step.
+    pub fused: bool,
+}
+
+/// A bounded instruction sequence carried by one packet, plus its
+/// execution cursor (`pc`/`reps_done` travel on the wire like the SROU
+/// segments-left pointer).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Program {
+    pub steps: Vec<Step>,
+    /// `CollectiveDone { block }` id emitted to the packet source when
+    /// the program retires; [`NO_COMPLETION`] = silent retirement.
+    pub completion: u32,
+    /// Index of the step currently executing.
+    pub pc: u8,
+    /// Repetitions of the current step already performed.
+    pub reps_done: u8,
+}
+
+/// What the verifier knows about the path a program will take. Built by
+/// the planner (see `collectives::driver`) from the live fabric.
+/// (No `Debug` derive: the registry holds opaque handler objects.)
+#[derive(Clone)]
+pub struct VerifyEnv<'a> {
+    /// Device memory capacity in bytes (range checks).
+    pub capacity: u64,
+    /// Payload length the packet is injected with.
+    pub payload_len: usize,
+    /// Strict in-order delivery (`Flags::ORDERED` path). When false, the
+    /// §2.3 rule applies: reduce steps must be commutative.
+    pub ordered: bool,
+    /// No loss, duplication, or timeout-retransmit on the path. When
+    /// false, every step must be idempotent (blind re-execution safe).
+    pub lossless: bool,
+    /// Segments in the SROU header the program will ride.
+    pub srou_hops: usize,
+    /// Resolve user opcodes (existence + idempotency). `None` = reject
+    /// user steps on lossy paths conservatively.
+    pub registry: Option<&'a InstructionRegistry>,
+}
+
+/// Typed rejection from [`Program::verify`].
+#[derive(Debug, Clone, PartialEq)]
+pub enum ProgramError {
+    /// A program must have at least one step.
+    Empty,
+    /// More than [`MAX_PROGRAM_STEPS`] steps.
+    TooLong { steps: usize },
+    /// A step declared `repeat == 0`.
+    ZeroRepeat { pc: usize },
+    /// The first step cannot be fused (there is no previous step).
+    LeadingFusion,
+    /// Programs cannot nest.
+    NestedProgram { pc: usize },
+    /// The instruction kind cannot run as a program step.
+    UnsupportedStep { pc: usize, opcode: u16 },
+    /// A step touches memory outside the device capacity.
+    OutOfRange {
+        pc: usize,
+        addr: u64,
+        len: u64,
+        capacity: u64,
+    },
+    /// §2.3: a non-commutative reduce is illegal on an unordered path.
+    NonCommutativeReduce { pc: usize, op: SimdOp },
+    /// §3.1: a non-idempotent step is illegal where blind retransmission
+    /// or duplication can replay it.
+    NonIdempotentStep { pc: usize, opcode: u16 },
+    /// An unregistered user opcode.
+    UnknownUserOpcode { pc: usize, opcode: u16 },
+    /// Program hop count does not match the SROU segment list.
+    HopMismatch { program: usize, srou: usize },
+}
+
+impl fmt::Display for ProgramError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ProgramError::Empty => write!(f, "program has no steps"),
+            ProgramError::TooLong { steps } => {
+                write!(f, "program has {steps} steps (max {MAX_PROGRAM_STEPS})")
+            }
+            ProgramError::ZeroRepeat { pc } => write!(f, "step {pc} has repeat 0"),
+            ProgramError::LeadingFusion => {
+                write!(f, "first step cannot be fused to a previous step")
+            }
+            ProgramError::NestedProgram { pc } => {
+                write!(f, "step {pc} nests a program inside a program")
+            }
+            ProgramError::UnsupportedStep { pc, opcode } => {
+                write!(f, "step {pc}: opcode {opcode:#06x} cannot run as a program step")
+            }
+            ProgramError::OutOfRange {
+                pc,
+                addr,
+                len,
+                capacity,
+            } => write!(
+                f,
+                "step {pc}: [{addr:#x}, +{len}) exceeds device capacity {capacity:#x}"
+            ),
+            ProgramError::NonCommutativeReduce { pc, op } => write!(
+                f,
+                "step {pc}: non-commutative reduce {:?} on an unordered path (§2.3)",
+                op
+            ),
+            ProgramError::NonIdempotentStep { pc, opcode } => write!(
+                f,
+                "step {pc}: opcode {opcode:#06x} is not idempotent but the path can replay it (§3.1)"
+            ),
+            ProgramError::UnknownUserOpcode { pc, opcode } => {
+                write!(f, "step {pc}: user opcode {opcode:#06x} is not registered")
+            }
+            ProgramError::HopMismatch { program, srou } => write!(
+                f,
+                "program needs {program} SROU hops but the header carries {srou}"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for ProgramError {}
+
+impl Program {
+    /// SROU segments the program consumes: every repetition travels one
+    /// hop except fused first-repetitions (which stay on the device where
+    /// the previous step finished).
+    pub fn hops(&self) -> usize {
+        self.steps
+            .iter()
+            .enumerate()
+            .map(|(i, s)| s.repeat as usize - usize::from(i > 0 && s.fused))
+            .sum()
+    }
+
+    /// Are all steps safe to blindly re-execute? Drives the transport's
+    /// retransmit policy, like [`Instruction::idempotent`].
+    pub fn idempotent(&self) -> bool {
+        self.steps.iter().all(|s| s.instr.idempotent(s.flags))
+    }
+
+    /// The static checker — see the module docs for the property list.
+    pub fn verify(&self, env: &VerifyEnv<'_>) -> Result<(), ProgramError> {
+        use Instruction as I;
+        if self.steps.is_empty() {
+            return Err(ProgramError::Empty);
+        }
+        if self.steps.len() > MAX_PROGRAM_STEPS {
+            return Err(ProgramError::TooLong {
+                steps: self.steps.len(),
+            });
+        }
+        if self.steps[0].fused {
+            return Err(ProgramError::LeadingFusion);
+        }
+        if self.hops() != env.srou_hops {
+            return Err(ProgramError::HopMismatch {
+                program: self.hops(),
+                srou: env.srou_hops,
+            });
+        }
+        // Payload length as it flows through the steps (operand
+        // forwarding): Read/BlockHash replace it, User makes it unknown
+        // (handler-defined), the rest preserve it. Unknown lengths skip
+        // the static range check — the executor still bounds-checks at
+        // runtime.
+        let mut cur_len = Some(env.payload_len as u64);
+        for (pc, s) in self.steps.iter().enumerate() {
+            if s.repeat == 0 {
+                return Err(ProgramError::ZeroRepeat { pc });
+            }
+            let opcode = s.instr.opcode_u16();
+            let check_range = |addr: u64, len: Option<u64>| -> Result<(), ProgramError> {
+                let Some(len) = len else { return Ok(()) };
+                if addr.checked_add(len).is_none_or(|end| end > env.capacity) {
+                    return Err(ProgramError::OutOfRange {
+                        pc,
+                        addr,
+                        len,
+                        capacity: env.capacity,
+                    });
+                }
+                Ok(())
+            };
+            match &s.instr {
+                I::Program(_) => return Err(ProgramError::NestedProgram { pc }),
+                I::Read { addr, len } => {
+                    check_range(*addr, Some(*len as u64))?;
+                    cur_len = Some(*len as u64);
+                }
+                I::Write { addr } => check_range(*addr, cur_len)?,
+                I::Memcopy { src, dst, len } => {
+                    check_range(*src, Some(*len as u64))?;
+                    check_range(*dst, Some(*len as u64))?;
+                }
+                I::Simd { op, addr } => {
+                    check_range(*addr, cur_len)?;
+                    if !env.ordered && !op.commutative() {
+                        return Err(ProgramError::NonCommutativeReduce { pc, op: *op });
+                    }
+                }
+                I::BlockHash { addr, len } => {
+                    check_range(*addr, Some(*len as u64))?;
+                    cur_len = Some(8);
+                }
+                I::WriteIfHash { addr, .. } => check_range(*addr, cur_len)?,
+                I::User { opcode, .. } => {
+                    if let Some(reg) = env.registry {
+                        if reg.get(*opcode).is_none() {
+                            return Err(ProgramError::UnknownUserOpcode {
+                                pc,
+                                opcode: *opcode,
+                            });
+                        }
+                    }
+                    cur_len = None; // handler-defined result length
+                }
+                _ => return Err(ProgramError::UnsupportedStep { pc, opcode }),
+            }
+            if !env.lossless {
+                let safe = match &s.instr {
+                    I::User { opcode, .. } => env
+                        .registry
+                        .and_then(|r| r.get(*opcode))
+                        .is_some_and(|h| h.idempotent()),
+                    other => other.idempotent(s.flags),
+                };
+                if !safe {
+                    return Err(ProgramError::NonIdempotentStep { pc, opcode });
+                }
+            }
+        }
+        Ok(())
+    }
+
+    // ----------------------------------------------------------- codec
+
+    /// Encode the program body (everything after `opcode|flags`):
+    /// `completion:u32 | pc:u8 | reps_done:u8 | n:u8 | steps...` where a
+    /// step is `fused:u8 | repeat:u8 | instruction`.
+    pub(crate) fn encode_body(&self, w: &mut Writer) {
+        w.u32(self.completion);
+        w.u8(self.pc);
+        w.u8(self.reps_done);
+        w.u8(self.steps.len() as u8);
+        for s in &self.steps {
+            w.u8(s.fused as u8);
+            w.u8(s.repeat);
+            s.instr.encode(s.flags, w);
+        }
+    }
+
+    /// Decode the program body. Steps are decoded through the
+    /// nesting-rejecting entry point, bounding recursion depth at one.
+    pub(crate) fn decode_body(r: &mut Reader) -> Result<Program> {
+        let completion = r.u32()?;
+        let pc = r.u8()?;
+        let reps_done = r.u8()?;
+        let n = r.u8()? as usize;
+        if n == 0 || n > MAX_PROGRAM_STEPS {
+            bail!("program step count {n} out of range");
+        }
+        if pc as usize > n {
+            bail!("program pc {pc} exceeds step count {n}");
+        }
+        let mut steps = Vec::with_capacity(n);
+        for i in 0..n {
+            let fused = match r.u8()? {
+                0 => false,
+                1 => true,
+                v => bail!("bad fused flag {v} in step {i}"),
+            };
+            let repeat = r.u8()?;
+            if repeat == 0 {
+                bail!("step {i} has repeat 0");
+            }
+            let (instr, flags) = Instruction::decode_step(r)?;
+            steps.push(Step {
+                instr,
+                flags,
+                repeat,
+                fused,
+            });
+        }
+        Ok(Program {
+            steps,
+            completion,
+            pc,
+            reps_done,
+        })
+    }
+}
+
+/// Typed assembler for [`Program`]s. Semantic helpers cover the lowered
+/// collective shapes; [`hop`](ProgramBuilder::hop) /
+/// [`then`](ProgramBuilder::then) add arbitrary steps.
+#[derive(Debug)]
+pub struct ProgramBuilder {
+    steps: Vec<Step>,
+    completion: u32,
+}
+
+impl Default for ProgramBuilder {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ProgramBuilder {
+    pub fn new() -> Self {
+        Self {
+            steps: Vec::new(),
+            completion: NO_COMPLETION,
+        }
+    }
+
+    fn push(mut self, instr: Instruction, flags: Flags, repeat: u8, fused: bool) -> Self {
+        // The first step always rides the first SROU segment.
+        let fused = fused && !self.steps.is_empty();
+        self.steps.push(Step {
+            instr,
+            flags,
+            repeat,
+            fused,
+        });
+        self
+    }
+
+    /// Add a step executing at the next `1` SROU hop.
+    pub fn hop(self, instr: Instruction) -> Self {
+        self.push(instr, Flags::default(), 1, false)
+    }
+
+    /// Add a step fused to the device where the previous step finished
+    /// (operand forwarding: it sees the previous step's result payload).
+    pub fn then(self, instr: Instruction) -> Self {
+        self.push(instr, Flags::default(), 1, true)
+    }
+
+    /// Reduce step: payload lanes `⊕=` local memory at `addr`, spread
+    /// over `hops` consecutive ring hops (packet-buffer only — no local
+    /// side effects, idempotent by construction).
+    pub fn reduce(self, op: SimdOp, addr: u64, hops: u8) -> Self {
+        if hops == 0 {
+            return self;
+        }
+        self.push(Instruction::Simd { op, addr }, Flags::default(), hops, false)
+    }
+
+    /// Hash-guarded write at the device where the reduce chain ended —
+    /// §3.1's exactly-once trick. After the step the payload is the
+    /// block re-read from memory, so a retransmitted chain forwards the
+    /// already-reduced block instead of double-adding.
+    pub fn guarded_write(self, addr: u64, expect_hash: u64) -> Self {
+        self.push(
+            Instruction::WriteIfHash { addr, expect_hash },
+            Flags::default(),
+            1,
+            true,
+        )
+    }
+
+    /// Plain idempotent writes of the carried payload at the next `hops`
+    /// ring hops (the all-gather / broadcast shape).
+    pub fn store(self, addr: u64, hops: u8) -> Self {
+        if hops == 0 {
+            return self;
+        }
+        self.push(Instruction::Write { addr }, Flags::default(), hops, false)
+    }
+
+    /// Emit `CollectiveDone { block: done_id }` to the source on retire.
+    pub fn on_retire(mut self, done_id: u32) -> Self {
+        self.completion = done_id;
+        self
+    }
+
+    /// Verify against `env` and produce the program.
+    pub fn build(self, env: &VerifyEnv<'_>) -> Result<Program, ProgramError> {
+        let p = self.build_unchecked();
+        p.verify(env)?;
+        Ok(p)
+    }
+
+    /// Skip verification (tests and executor-error paths only).
+    pub fn build_unchecked(self) -> Program {
+        Program {
+            steps: self.steps,
+            completion: self.completion,
+            pc: 0,
+            reps_done: 0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn env(hops: usize) -> VerifyEnv<'static> {
+        VerifyEnv {
+            capacity: 1 << 20,
+            payload_len: 8192,
+            ordered: false,
+            lossless: true,
+            srou_hops: hops,
+            registry: None,
+        }
+    }
+
+    fn ring_program(n: usize, fused: bool) -> ProgramBuilder {
+        let mut b = ProgramBuilder::new()
+            .reduce(SimdOp::Add, 0x1000, (n - 1) as u8)
+            .guarded_write(0x1000, 42);
+        if fused {
+            b = b.store(0x1000, (n - 1) as u8);
+        }
+        b.on_retire(7)
+    }
+
+    #[test]
+    fn fused_ring_shape_and_hops() {
+        let p = ring_program(4, true).build(&env(6)).unwrap();
+        assert_eq!(p.steps.len(), 3);
+        assert_eq!(p.hops(), 6, "2(N-1) hops for N=4");
+        assert_eq!(p.completion, 7);
+        assert!(p.idempotent(), "whole fused chain is §3.1-safe");
+        // Reduce-scatter only: N-1 hops.
+        let p = ring_program(4, false).build(&env(3)).unwrap();
+        assert_eq!(p.hops(), 3);
+    }
+
+    #[test]
+    fn two_rank_ring_has_no_interim_reduce() {
+        // N=2: reduce spans 1 hop (the owner), guarded write fused there.
+        let p = ring_program(2, true).build(&env(2)).unwrap();
+        assert_eq!(p.steps.len(), 3);
+        assert_eq!(p.hops(), 2);
+    }
+
+    #[test]
+    fn hop_mismatch_is_typed() {
+        let err = ring_program(4, true).build(&env(5)).unwrap_err();
+        assert_eq!(err, ProgramError::HopMismatch { program: 6, srou: 5 });
+    }
+
+    #[test]
+    fn noncommutative_reduce_rejected_on_unordered_path() {
+        let err = ProgramBuilder::new()
+            .reduce(SimdOp::Sub, 0, 2)
+            .guarded_write(0, 1)
+            .build(&env(2))
+            .unwrap_err();
+        assert_eq!(
+            err,
+            ProgramError::NonCommutativeReduce {
+                pc: 0,
+                op: SimdOp::Sub
+            }
+        );
+        // The same program is legal on a strictly ordered path.
+        let mut ordered = env(2);
+        ordered.ordered = true;
+        assert!(ProgramBuilder::new()
+            .reduce(SimdOp::Sub, 0, 2)
+            .guarded_write(0, 1)
+            .build(&ordered)
+            .is_ok());
+    }
+
+    #[test]
+    fn nonidempotent_step_rejected_on_lossy_path() {
+        let mut lossy = env(1);
+        lossy.lossless = false;
+        // STORE'd SIMD accumulates into memory: replay would double-add.
+        let err = ProgramBuilder::new()
+            .push_test(
+                Instruction::Simd {
+                    op: SimdOp::Add,
+                    addr: 0,
+                },
+                Flags(Flags::STORE),
+            )
+            .build(&lossy)
+            .unwrap_err();
+        assert!(matches!(err, ProgramError::NonIdempotentStep { pc: 0, .. }));
+        // The guarded-write version of the same intent is accepted.
+        assert!(ProgramBuilder::new()
+            .reduce(SimdOp::Add, 0, 1)
+            .guarded_write(0, 9)
+            .build(&VerifyEnv {
+                lossless: false,
+                srou_hops: 1,
+                ..env(1)
+            })
+            .is_ok());
+    }
+
+    #[test]
+    fn range_and_shape_errors() {
+        assert_eq!(
+            ProgramBuilder::new().build(&env(0)).unwrap_err(),
+            ProgramError::Empty
+        );
+        let mut b = ProgramBuilder::new();
+        for _ in 0..(MAX_PROGRAM_STEPS + 1) {
+            b = b.hop(Instruction::Write { addr: 0 });
+        }
+        assert!(matches!(
+            b.build(&env(MAX_PROGRAM_STEPS + 1)).unwrap_err(),
+            ProgramError::TooLong { .. }
+        ));
+        let err = ProgramBuilder::new()
+            .hop(Instruction::Write { addr: (1 << 20) - 4 })
+            .build(&env(1))
+            .unwrap_err();
+        assert!(matches!(err, ProgramError::OutOfRange { pc: 0, .. }), "{err}");
+        // Unsupported step kind (a response opcode).
+        let err = ProgramBuilder::new()
+            .hop(Instruction::Ack { acked: 1 })
+            .build(&env(1))
+            .unwrap_err();
+        assert!(matches!(err, ProgramError::UnsupportedStep { .. }));
+    }
+
+    #[test]
+    fn read_updates_flowing_payload_length() {
+        // Read replaces the payload: the following Write is checked
+        // against the *read* length, not the injected payload length.
+        let p = ProgramBuilder::new()
+            .hop(Instruction::Read { addr: 0, len: 64 })
+            .then(Instruction::Write { addr: (1 << 20) - 64 })
+            .build(&env(1));
+        assert!(p.is_ok(), "{p:?}");
+        let err = ProgramBuilder::new()
+            .hop(Instruction::Read { addr: 0, len: 128 })
+            .then(Instruction::Write { addr: (1 << 20) - 64 })
+            .build(&env(1))
+            .unwrap_err();
+        assert!(matches!(err, ProgramError::OutOfRange { pc: 1, .. }));
+    }
+
+    #[test]
+    fn user_step_makes_payload_length_unknown() {
+        // A user handler's result length is handler-defined, so a
+        // following Write cannot be statically range-checked — it must
+        // not be rejected against the stale injected length (the
+        // executor still bounds-checks at runtime).
+        let p = ProgramBuilder::new()
+            .hop(Instruction::User {
+                opcode: 0x8001,
+                a: 0,
+                b: 0,
+                c: 0,
+            })
+            .then(Instruction::Write { addr: (1 << 20) - 4 })
+            .build(&env(1));
+        assert!(p.is_ok(), "{p:?}");
+    }
+
+    #[test]
+    fn unknown_user_opcode_rejected_when_registry_known() {
+        let reg = InstructionRegistry::new();
+        let mut e = env(1);
+        e.registry = Some(&reg);
+        let err = ProgramBuilder::new()
+            .hop(Instruction::User {
+                opcode: 0x9999,
+                a: 0,
+                b: 0,
+                c: 0,
+            })
+            .build(&e)
+            .unwrap_err();
+        assert_eq!(
+            err,
+            ProgramError::UnknownUserOpcode {
+                pc: 0,
+                opcode: 0x9999
+            }
+        );
+    }
+
+    #[test]
+    fn error_display_is_informative() {
+        let e = ProgramError::NonCommutativeReduce {
+            pc: 2,
+            op: SimdOp::Sub,
+        };
+        let s = e.to_string();
+        assert!(s.contains("non-commutative") && s.contains("§2.3"), "{s}");
+    }
+
+    impl ProgramBuilder {
+        /// Test-only: push a step with explicit flags.
+        fn push_test(self, instr: Instruction, flags: Flags) -> Self {
+            self.push(instr, flags, 1, false)
+        }
+    }
+}

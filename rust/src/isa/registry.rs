@@ -50,6 +50,11 @@ pub enum ExecOutcome {
 }
 
 /// Execution context handed to a user instruction.
+///
+/// In a packet [`Program`](super::program::Program), user steps chain:
+/// `payload` is the previous step's result payload and `fwd` carries the
+/// previous user step's reply operands — the operand-forwarding
+/// convention that lets e.g. `crypto_write → crc32` ride one packet.
 pub struct ExecCtx<'a> {
     pub mem: &'a mut dyn MemAccess,
     pub payload: &'a [u8],
@@ -57,6 +62,9 @@ pub struct ExecCtx<'a> {
     pub b: u64,
     pub c: u64,
     pub flags: Flags,
+    /// `(a, b, c)` replied by the previous user step of the same program,
+    /// if any. `None` outside programs or after non-user steps.
+    pub fwd: Option<(u64, u64, u64)>,
 }
 
 /// A user-defined instruction implementation.
@@ -180,6 +188,7 @@ mod tests {
             b: 0,
             c: 0,
             flags: Flags::default(),
+            fwd: None,
         };
         let out = reg.get(0x8001).unwrap().execute(&mut ctx).unwrap();
         assert!(matches!(out, ExecOutcome::Reply { opcode: 0x8002, .. }));

@@ -23,6 +23,25 @@
 //!   algorithms: NetDAM ring, halving-doubling, hierarchical two-level,
 //!   reduce-scatter/all-gather/broadcast primitives, and the host
 //!   baselines) and the experiment coordinator ([`coordinator`]).
+//!
+//! # The program layer (builder → verifier → executor)
+//!
+//! The ISA's fused behaviours are **packet programs**
+//! ([`isa::Program`]): a packet carries a bounded step sequence that the
+//! devices on its SROU path execute hop-locally, each step consuming the
+//! previous step's result payload. Programs are assembled with
+//! [`isa::ProgramBuilder`], statically checked by [`isa::Program::verify`]
+//! (bounded length, memory ranges, SROU hop budget, and the paper's §2.3
+//! relaxed-ordering rule — non-commutative reduces on unordered paths and
+//! non-idempotent steps on lossy paths are rejected with a typed
+//! [`isa::ProgramError`]), and executed by the micro-executor loop in
+//! [`device`] with per-step cost accounting. Collective planners lower
+//! their schedules onto programs via
+//! [`collectives::driver::lower_ring_chunk`] /
+//! [`collectives::driver::lower_store_chain`]: the §3 fused allreduce
+//! chunk is `reduce ×(N−1) → guarded_write → store ×(N−1)` in one
+//! self-routing packet, and DPU offloads chain the same way
+//! (`crypto_write → crc32` — see `netdam prog`).
 //! * **L2 (python/compile/model.py)** — JAX compute graphs (SIMD block ops,
 //!   reduce step, block hash, MLP train step) lowered once to HLO text.
 //! * **L1 (python/compile/kernels/)** — Pallas kernels implementing the

@@ -841,20 +841,20 @@ mod tests {
     fn completion_log_records_collective_done() {
         let (mut cl, _h, d1, _d2) = star();
         let mut eng: Engine<Cluster> = Engine::new();
-        // d1 sends a guarded reduce directly to d2 (single hop).
+        // d1 sends a guarded-reduce *program* directly to d2 (single hop);
+        // retiring it emits the CollectiveDone completion.
         let seq = cl.alloc_seq(d1);
-        use crate::isa::SimdOp;
+        use crate::isa::{ProgramBuilder, SimdOp};
+        let prog = ProgramBuilder::new()
+            .reduce(SimdOp::Add, 0, 1)
+            .guarded_write(0, crate::alu::block_hash(&[0u8; 8]))
+            .on_retire(3)
+            .build_unchecked();
         let pkt = Packet::new(
             ip(1),
             seq,
             SrouHeader::direct(ip(2)),
-            Instruction::ReduceScatter {
-                op: SimdOp::Add,
-                addr: 0,
-                block: 3,
-                rs_left: 1,
-                expect_hash: crate::alu::block_hash(&[0u8; 8]),
-            },
+            Instruction::Program(Box::new(prog)),
         )
         .with_payload(Payload::from_f32s(&[1.0, 2.0]));
         cl.inject(&mut eng, d1, pkt);

@@ -1,0 +1,61 @@
+//! CRC-32 (ISO-HDLC / IEEE 802.3, the `cksum`-family polynomial).
+//!
+//! The DPU offload library models the paper's "hash" offload with a real
+//! CRC-32; this build is offline (no `crc32fast`), so the classic
+//! reflected table-driven implementation lives here. Parameters:
+//! polynomial `0xEDB88320` (reflected `0x04C11DB7`), init `0xFFFFFFFF`,
+//! final xor `0xFFFFFFFF` — the variant whose check value over
+//! `"123456789"` is `0xCBF43926`.
+
+/// The reflected CRC-32 lookup table, built at compile time.
+const TABLE: [u32; 256] = build_table();
+
+const fn build_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut crc = i as u32;
+        let mut bit = 0;
+        while bit < 8 {
+            crc = if crc & 1 != 0 {
+                (crc >> 1) ^ 0xEDB8_8320
+            } else {
+                crc >> 1
+            };
+            bit += 1;
+        }
+        table[i] = crc;
+        i += 1;
+    }
+    table
+}
+
+/// CRC-32 of `data` (one-shot).
+pub fn hash(data: &[u8]) -> u32 {
+    let mut crc = 0xFFFF_FFFFu32;
+    for &b in data {
+        crc = (crc >> 8) ^ TABLE[((crc ^ b as u32) & 0xFF) as usize];
+    }
+    crc ^ 0xFFFF_FFFF
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn check_value() {
+        // The canonical CRC-32 check value.
+        assert_eq!(hash(b"123456789"), 0xCBF4_3926);
+    }
+
+    #[test]
+    fn empty_and_incremental_properties() {
+        assert_eq!(hash(&[]), 0);
+        // Deterministic, and sensitive to edits/truncation.
+        let base = hash(b"netdam block");
+        assert_eq!(base, hash(b"netdam block"));
+        assert_ne!(base, hash(b"netdam block!"));
+        assert_ne!(base, hash(b"netdam bloc"));
+    }
+}

@@ -3,6 +3,7 @@
 //! is unavailable in this offline build.
 
 pub mod bytes;
+pub mod crc32;
 pub mod prop;
 pub mod rng;
 pub mod stats;

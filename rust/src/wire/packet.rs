@@ -218,6 +218,28 @@ mod tests {
     }
 
     #[test]
+    fn program_packet_round_trips() {
+        // A full §3 fused-ring program rides the ordinary packet codec.
+        use crate::isa::ProgramBuilder;
+        let prog = ProgramBuilder::new()
+            .reduce(SimdOp::Add, 0x1000, 3)
+            .guarded_write(0x1000, 7)
+            .store(0x1000, 3)
+            .on_retire(9)
+            .build_unchecked();
+        let segs: Vec<Segment> = (2u8..8).map(|i| Segment::to(ip(i))).collect();
+        let pkt = Packet::new(
+            ip(1),
+            11,
+            SrouHeader::through(segs),
+            Instruction::Program(Box::new(prog)),
+        )
+        .with_payload(Payload::from_f32s(&[1.5; 16]));
+        let bytes = pkt.encode().unwrap();
+        assert_eq!(Packet::decode(&bytes).unwrap(), pkt);
+    }
+
+    #[test]
     fn trailing_garbage_rejected() {
         let pkt = Packet::new(
             ip(1),

@@ -37,6 +37,12 @@ impl Payload {
         Payload::Data(Arc::new(f32s_to_bytes(xs)))
     }
 
+    /// A single little-endian u64 — the shape program steps forward
+    /// scalar results in (e.g. a `BlockHash` step's digest).
+    pub fn from_u64(v: u64) -> Self {
+        Payload::Data(Arc::new(v.to_le_bytes().to_vec()))
+    }
+
     pub fn phantom(len: usize) -> Self {
         Payload::Phantom(len as u32)
     }
@@ -81,6 +87,13 @@ mod tests {
         let p = Payload::from_f32s(&xs);
         assert_eq!(p.len(), 12);
         assert_eq!(p.f32s().unwrap().unwrap(), xs);
+    }
+
+    #[test]
+    fn u64_payload_is_8_le_bytes() {
+        let p = Payload::from_u64(0x0102_0304_0506_0708);
+        assert_eq!(p.len(), 8);
+        assert_eq!(p.bytes().unwrap(), 0x0102_0304_0506_0708u64.to_le_bytes());
     }
 
     #[test]

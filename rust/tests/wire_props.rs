@@ -1,0 +1,244 @@
+//! Property tests for the wire layer: `Packet` / `Instruction` /
+//! `Program` encode↔decode round-trips under random generation, and
+//! truncated-buffer rejection — driven by the in-tree `util::prop`
+//! harness (offline stand-in for proptest).
+
+use netdam::isa::{Flags, Instruction, ProgramBuilder, SimdOp, VerifyEnv};
+use netdam::util::bytes::{Reader, Writer};
+use netdam::util::prop;
+use netdam::util::rng::Xoshiro256;
+use netdam::wire::{DeviceIp, Packet, Payload, Segment, SrouHeader};
+
+fn rand_op(rng: &mut Xoshiro256) -> SimdOp {
+    SimdOp::ALL[rng.next_below(SimdOp::ALL.len() as u64) as usize]
+}
+
+fn rand_flags(rng: &mut Xoshiro256) -> Flags {
+    Flags((rng.next_u64() & 0x1F) as u16)
+}
+
+fn rand_simple_instr(rng: &mut Xoshiro256) -> Instruction {
+    use Instruction as I;
+    match rng.next_below(18) {
+        0 => I::Nop,
+        1 => I::Read {
+            addr: rng.next_u64(),
+            len: rng.next_u32(),
+        },
+        2 => I::ReadResp { addr: rng.next_u64() },
+        3 => I::Write { addr: rng.next_u64() },
+        4 => I::WriteAck { addr: rng.next_u64() },
+        5 => I::Cas {
+            addr: rng.next_u64(),
+            expected: rng.next_u64(),
+            new: rng.next_u64(),
+        },
+        6 => I::CasResp {
+            addr: rng.next_u64(),
+            old: rng.next_u64(),
+            swapped: rng.chance(0.5),
+        },
+        7 => I::Memcopy {
+            src: rng.next_u64(),
+            dst: rng.next_u64(),
+            len: rng.next_u32(),
+        },
+        8 => I::Ack { acked: rng.next_u64() },
+        9 => I::Nack {
+            acked: rng.next_u64(),
+            reason: (rng.next_u64() & 0xFF) as u8,
+        },
+        10 => I::Simd {
+            op: rand_op(rng),
+            addr: rng.next_u64(),
+        },
+        11 => I::SimdResp { addr: rng.next_u64() },
+        12 => I::BlockHash {
+            addr: rng.next_u64(),
+            len: rng.next_u32(),
+        },
+        13 => I::BlockHashResp { hash: rng.next_u64() },
+        14 => I::WriteIfHash {
+            addr: rng.next_u64(),
+            expect_hash: rng.next_u64(),
+        },
+        15 => I::CollectiveDone {
+            block: rng.next_u32(),
+        },
+        16 => I::User {
+            opcode: 0x8000 | (rng.next_u32() as u16 & 0x7FFF),
+            a: rng.next_u64(),
+            b: rng.next_u64(),
+            c: rng.next_u64(),
+        },
+        _ => I::Malloc {
+            bytes: rng.next_u64(),
+            tag: rng.next_u32(),
+        },
+    }
+}
+
+/// A random (not necessarily verifiable) program through the builder.
+fn rand_program(rng: &mut Xoshiro256) -> Instruction {
+    let mut b = ProgramBuilder::new().reduce(
+        rand_op(rng),
+        rng.next_u64(),
+        (rng.next_below(4) + 1) as u8,
+    );
+    if rng.chance(0.7) {
+        b = b.guarded_write(rng.next_u64(), rng.next_u64());
+    }
+    if rng.chance(0.7) {
+        b = b.store(rng.next_u64(), (rng.next_below(4) + 1) as u8);
+    }
+    if rng.chance(0.3) {
+        b = b.then(rand_simple_instr_steppable(rng));
+    }
+    if rng.chance(0.5) {
+        b = b.on_retire(rng.next_u32());
+    }
+    let mut p = b.build_unchecked();
+    // Mid-flight cursor values must survive the codec too.
+    p.pc = rng.next_below(p.steps.len() as u64 + 1) as u8;
+    if (p.pc as usize) < p.steps.len() {
+        p.reps_done = rng.next_below(p.steps[p.pc as usize].repeat as u64) as u8;
+    }
+    Instruction::Program(Box::new(p))
+}
+
+/// Step-legal instruction kinds for random fused tails.
+fn rand_simple_instr_steppable(rng: &mut Xoshiro256) -> Instruction {
+    use Instruction as I;
+    match rng.next_below(4) {
+        0 => I::Write { addr: rng.next_u64() },
+        1 => I::Read {
+            addr: rng.next_u64(),
+            len: rng.next_u32(),
+        },
+        2 => I::BlockHash {
+            addr: rng.next_u64(),
+            len: rng.next_u32(),
+        },
+        _ => I::User {
+            opcode: 0x8000 | (rng.next_u32() as u16 & 0x7FFF),
+            a: rng.next_u64(),
+            b: rng.next_u64(),
+            c: rng.next_u64(),
+        },
+    }
+}
+
+fn rand_instr(rng: &mut Xoshiro256) -> Instruction {
+    if rng.chance(0.25) {
+        rand_program(rng)
+    } else {
+        rand_simple_instr(rng)
+    }
+}
+
+#[test]
+fn instruction_round_trips_and_rejects_truncation() {
+    prop::check(|rng, _case| {
+        let instr = rand_instr(rng);
+        let flags = rand_flags(rng);
+        let mut w = Writer::default();
+        instr.encode(flags, &mut w);
+        let bytes = w.into_vec();
+        let mut r = Reader::new(&bytes);
+        let (back, back_flags) = Instruction::decode(&mut r).unwrap();
+        assert_eq!(back, instr);
+        assert_eq!(back_flags, flags);
+        assert_eq!(r.remaining(), 0, "codec must consume exactly its bytes");
+        // Every strict prefix must be rejected, never mis-parsed.
+        for cut in 0..bytes.len() {
+            let mut r = Reader::new(&bytes[..cut]);
+            assert!(Instruction::decode(&mut r).is_err(), "cut={cut}");
+        }
+    });
+}
+
+fn rand_packet(rng: &mut Xoshiro256) -> Packet {
+    let n_segs = rng.next_below(4) + 1;
+    let segs: Vec<Segment> = (0..n_segs)
+        .map(|i| {
+            Segment::call(
+                DeviceIp::lan((10 + i) as u8),
+                (rng.next_u64() & 0xFFFF) as u16,
+            )
+        })
+        .collect();
+    let payload_len = prop::log_size(rng, 64);
+    let payload: Vec<u8> = (0..payload_len)
+        .map(|_| (rng.next_u64() & 0xFF) as u8)
+        .collect();
+    Packet::new(
+        DeviceIp::lan(1),
+        rng.next_u64(),
+        SrouHeader::through(segs),
+        rand_instr(rng),
+    )
+    .with_flags(rand_flags(rng))
+    .with_payload(Payload::from_bytes(payload))
+}
+
+#[test]
+fn packet_round_trips_and_rejects_truncation() {
+    prop::check(|rng, case| {
+        let pkt = rand_packet(rng);
+        let bytes = pkt.encode().unwrap();
+        let back = Packet::decode(&bytes).unwrap();
+        assert_eq!(back, pkt, "case {case}");
+        // Truncations: check all short cuts cheaply, plus random cuts.
+        for cut in 0..bytes.len().min(48) {
+            assert!(Packet::decode(&bytes[..cut]).is_err(), "cut={cut}");
+        }
+        for _ in 0..16 {
+            let cut = rng.next_below(bytes.len() as u64) as usize;
+            assert!(Packet::decode(&bytes[..cut]).is_err(), "cut={cut}");
+        }
+        // Trailing garbage is rejected too.
+        let mut longer = bytes.clone();
+        longer.push(0);
+        assert!(Packet::decode(&longer).is_err());
+    });
+}
+
+#[test]
+fn verified_ring_programs_match_their_srou_budget() {
+    prop::check(|rng, _case| {
+        let ranks = (rng.next_below(7) + 2) as usize; // 2..=8
+        let fused = rng.chance(0.5);
+        let hops = if fused { 2 * (ranks - 1) } else { ranks - 1 };
+        let env = VerifyEnv {
+            capacity: 1 << 20,
+            payload_len: 1024,
+            ordered: false,
+            lossless: rng.chance(0.5),
+            srou_hops: hops,
+            registry: None,
+        };
+        let mut b = ProgramBuilder::new()
+            .reduce(SimdOp::Add, 0x2000, (ranks - 1) as u8)
+            .guarded_write(0x2000, rng.next_u64());
+        if fused {
+            b = b.store(0x2000, (ranks - 1) as u8);
+        }
+        let p = b.on_retire(1).build(&env).expect("safe ring chain verifies");
+        assert_eq!(p.hops(), hops);
+        assert!(p.idempotent());
+        // The same chain with a non-commutative op must be rejected on
+        // this (unordered) path.
+        let err = ProgramBuilder::new()
+            .reduce(SimdOp::Sub, 0x2000, (ranks - 1) as u8)
+            .guarded_write(0x2000, 0)
+            .build(&VerifyEnv {
+                srou_hops: ranks - 1,
+                ..env
+            })
+            .unwrap_err();
+        assert!(
+            matches!(err, netdam::isa::ProgramError::NonCommutativeReduce { .. }),
+            "{err}"
+        );
+    });
+}
