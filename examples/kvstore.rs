@@ -1,140 +1,135 @@
-//! A replicated KV store on raw NetDAM instructions — the "RPC-like"
-//! programming model of §2.4: clients talk straight to device memory
-//! with WRITE / READ / CAS; a CAS word serializes writers (the paper's
-//! atomic-instruction-as-idempotent-operator pattern); values replicate
-//! to a second device through an SROU-chained write.
+//! A KV store on the **pooled memory plane** (paper §2.4–§2.6): the SDN
+//! controller leases lock and value regions out of the block-interleaved
+//! global pool and programs every device IOMMU with the lease; the store
+//! then runs entirely on global virtual addresses through `MemClient` —
+//! a CAS word serializes writers (the paper's atomic-instruction
+//! pattern), values spray across all devices via scatter-gather WRITEs,
+//! and a foreign tenant is fenced *by the devices themselves*: its reads
+//! come back as wire-level NAKs, not host-side errors.
 //!
 //! ```sh
 //! cargo run --release --example kvstore
 //! ```
 
 use anyhow::Result;
-use netdam::isa::{Flags, Instruction};
-use netdam::net::{Cluster, LinkConfig, NodeId, Topology};
-use netdam::sim::{fmt_ns, Engine};
+use netdam::mem::{MemClient, MemError};
+use netdam::net::{Cluster, LinkConfig, Topology};
+use netdam::pool::{InterleaveMap, SdnController, TenantId};
+use netdam::sim::Engine;
 use netdam::util::bytes::{bytes_to_f32s, f32s_to_bytes};
-use netdam::wire::{DeviceIp, Packet, Payload, Segment, SrouHeader};
+use netdam::wire::DeviceIp;
 
 const SLOT_BYTES: u64 = 256;
-const LOCK_BASE: u64 = 0;
-const DATA_BASE: u64 = 1 << 20;
+// 128 slots x 256 B = 4 interleave blocks: the value region genuinely
+// spans every device of the 4-wide pool.
+const N_KEYS: u64 = 128;
+const KV_TENANT: TenantId = 1;
 
 struct Kv {
-    host: NodeId,
-    host_ip: DeviceIp,
-    primary: DeviceIp,
-    replica: DeviceIp,
+    client: MemClient,
+    /// GVA of the lock word region (one u64 per key).
+    locks: u64,
+    /// GVA of the value region (one slot per key).
+    data: u64,
 }
 
 impl Kv {
-    fn slot(key: u64) -> (u64, u64) {
-        (LOCK_BASE + key * 8, DATA_BASE + key * SLOT_BYTES)
+    fn slot(&self, key: u64) -> (u64, u64) {
+        (self.locks + key * 8, self.data + key * SLOT_BYTES)
     }
 
-    /// CAS-acquire the slot lock, write value to primary + replica
-    /// (chained), release the lock.
-    fn put(&self, cl: &mut Cluster, eng: &mut Engine<Cluster>, key: u64, value: &[f32]) -> Result<bool> {
-        let (lock, data) = Self::slot(key);
-        // 1. acquire
-        let seq = cl.alloc_seq(self.host);
-        let cas = Packet::new(self.host_ip, seq, SrouHeader::direct(self.primary), Instruction::Cas {
-            addr: lock,
-            expected: 0,
-            new: 1,
-        });
-        cl.inject(eng, self.host, cas);
-        eng.run(cl);
-        let (_, resp) = cl.host_mut(self.host).mailbox.pop().unwrap();
-        let Instruction::CasResp { swapped: true, .. } = resp.instr else {
+    /// CAS-acquire the slot lock, scatter the value over the pool,
+    /// release the lock. Returns false if another writer holds the lock.
+    fn put(
+        &self,
+        cl: &mut Cluster,
+        eng: &mut Engine<Cluster>,
+        key: u64,
+        value: &[f32],
+    ) -> Result<bool> {
+        let (lock, slot) = self.slot(key);
+        let (_, acquired) = self.client.cas(cl, eng, lock, 0, 1)?;
+        if !acquired {
             return Ok(false); // contended
-        };
-        // 2. replicated write: a 2-hop store program writes the value at
-        //    the primary, then self-routes to the replica.
-        let seq = cl.alloc_seq(self.host);
-        let prog = netdam::isa::ProgramBuilder::new()
-            .store(data, 2)
-            .build_unchecked();
-        let w = Packet::new(
-            self.host_ip,
-            seq,
-            SrouHeader::through(vec![Segment::to(self.primary), Segment::to(self.replica)]),
-            Instruction::Program(Box::new(prog)),
-        )
-        .with_payload(Payload::from_bytes(f32s_to_bytes(value)));
-        cl.inject(eng, self.host, w);
-        eng.run(cl);
-        // 3. release
-        let seq = cl.alloc_seq(self.host);
-        let rel = Packet::new(self.host_ip, seq, SrouHeader::direct(self.primary), Instruction::Cas {
-            addr: lock,
-            expected: 1,
-            new: 0,
-        });
-        cl.inject(eng, self.host, rel);
-        eng.run(cl);
-        cl.host_mut(self.host).mailbox.clear();
+        }
+        self.client.write(cl, eng, slot, &f32s_to_bytes(value))?;
+        let (_, released) = self.client.cas(cl, eng, lock, 1, 0)?;
+        assert!(released, "lock holder always releases");
         Ok(true)
     }
 
-    fn get(&self, cl: &mut Cluster, eng: &mut Engine<Cluster>, key: u64, len: usize, from_replica: bool) -> Result<Vec<f32>> {
-        let (_, data) = Self::slot(key);
-        let target = if from_replica { self.replica } else { self.primary };
-        let seq = cl.alloc_seq(self.host);
-        let r = Packet::new(self.host_ip, seq, SrouHeader::direct(target), Instruction::Read {
-            addr: data,
-            len: (len * 4) as u32,
-        });
-        cl.inject(eng, self.host, r);
-        eng.run(cl);
-        let (t, resp) = cl.host_mut(self.host).mailbox.pop().unwrap();
-        println!(
-            "  GET key={key} from {} -> {} at {}",
-            if from_replica { "replica" } else { "primary" },
-            len,
-            fmt_ns(t)
-        );
-        bytes_to_f32s(resp.payload.bytes().unwrap())
+    fn get(
+        &self,
+        cl: &mut Cluster,
+        eng: &mut Engine<Cluster>,
+        key: u64,
+        len: usize,
+    ) -> Result<Vec<f32>> {
+        let (_, slot) = self.slot(key);
+        let bytes = self.client.read(cl, eng, slot, len * 4)?;
+        bytes_to_f32s(&bytes)
     }
 }
 
 fn main() -> Result<()> {
-    println!("== KV store over raw NetDAM instructions ==\n");
-    let t = Topology::paper_testbed(11);
+    println!("== KV store on the pooled memory plane ==\n");
+    // The paper testbed (4 devices, one ToR) plus a second host that will
+    // play the intruder.
+    let t = Topology::star(11, 4, 2, LinkConfig::dc_100g());
     let mut cl = t.cluster;
     let mut eng: Engine<Cluster> = Engine::new();
+
+    // Control plane: the SDN controller leases the store's regions and
+    // programs every device IOMMU (malloc → map + perms + tenant fence).
+    let map = InterleaveMap::paper_default((1..=4).map(DeviceIp::lan).collect());
+    let mut ctl = SdnController::new(map, 2 << 30);
+    ctl.grant_host(&mut cl, KV_TENANT, DeviceIp::lan(101));
+    let locks = ctl.malloc_mapped(&mut cl, KV_TENANT, N_KEYS * 8, true)?;
+    let data = ctl.malloc_mapped(&mut cl, KV_TENANT, N_KEYS * SLOT_BYTES, true)?;
+    println!(
+        "leases: locks at gva {:#x} (+{}), values at gva {:#x} (+{})",
+        locks.gva, locks.len, data.gva, data.len
+    );
     let kv = Kv {
-        host: t.hosts[0],
-        host_ip: DeviceIp::lan(101),
-        primary: DeviceIp::lan(1),
-        replica: DeviceIp::lan(2),
+        client: MemClient::new(t.hosts[0], DeviceIp::lan(101), KV_TENANT, ctl.map().clone()),
+        locks: locks.gva,
+        data: data.gva,
     };
 
     let v1: Vec<f32> = (0..32).map(|i| i as f32 * 1.5).collect();
     assert!(kv.put(&mut cl, &mut eng, 3, &v1)?);
-    println!("PUT key=3 (32 x f32, replicated via SROU chain)");
+    println!("PUT key=3 (32 x f32, scatter-gathered over the pool)");
 
-    let got_p = kv.get(&mut cl, &mut eng, 3, 32, false)?;
-    let got_r = kv.get(&mut cl, &mut eng, 3, 32, true)?;
-    assert_eq!(got_p, v1);
-    assert_eq!(got_r, v1, "replica consistent through the chained write");
-    println!("primary == replica == written value ✓");
+    let got = kv.get(&mut cl, &mut eng, 3, 32)?;
+    assert_eq!(got, v1, "value reassembles in GVA order");
+    println!("GET key=3 == written value ✓");
 
-    // Lock contention: a second writer fails CAS while locked.
-    let seq = cl.alloc_seq(kv.host);
-    let hold = Packet::new(kv.host_ip, seq, SrouHeader::direct(kv.primary), Instruction::Cas {
-        addr: Kv::slot(9).0,
-        expected: 0,
-        new: 1,
-    });
-    cl.inject(&mut eng, kv.host, hold);
-    eng.run(&mut cl);
-    cl.host_mut(kv.host).mailbox.clear();
+    // The slot genuinely interleaves: the controller's translation shows
+    // the value region spread over every device.
+    let extents = ctl.access(KV_TENANT, data.gva, data.len, false)?;
+    let devs: std::collections::BTreeSet<_> = extents.iter().map(|e| e.device).collect();
+    println!("value region interleaves over {} devices", devs.len());
+    assert_eq!(devs.len(), 4);
+
+    // Lock contention: a second writer fails the CAS while locked.
+    let (lock9, _) = kv.slot(9);
+    let (_, held) = kv.client.cas(&mut cl, &mut eng, lock9, 0, 1)?;
+    assert!(held);
     let stole = kv.put(&mut cl, &mut eng, 9, &v1)?;
     println!("second writer while locked: put accepted = {stole} (expected false)");
     assert!(!stole);
 
+    // Device-enforced ACL: an intruder host (never granted) reads the
+    // value region — the *device IOMMU* rejects it with a wire NAK.
+    let intruder = MemClient::new(t.hosts[1], DeviceIp::lan(102), 9, kv.client.map().clone());
+    match intruder.read(&mut cl, &mut eng, data.gva, 64) {
+        Err(MemError::Nak { device, reason, .. }) => {
+            println!("intruder read NAK'd by device {device}: {reason}")
+        }
+        other => panic!("expected a device NAK, got {other:?}"),
+    }
+
     println!("\nfabric counters:");
     print!("{}", cl.metrics.render());
-    let _ = LinkConfig::dc_100g();
     Ok(())
 }

@@ -1,19 +1,30 @@
-//! Memory pooling (paper §2.5/§2.6): the SDN controller as MMU, block
-//! interleaving, ACLs, and the incast experiment.
+//! Memory pooling (paper §2.5/§2.6) as a *data plane*: the SDN
+//! controller leases GVA ranges and programs every device IOMMU;
+//! `MemClient` compiles GVA reads/writes into scatter-gather packet
+//! plans; denials come back as device-issued wire NAKs; and the incast
+//! experiment (E3) runs through the same pool path.
 //!
 //! ```sh
-//! cargo run --release --example mempool
+//! cargo run --release --example mempool          # full E3
+//! NETDAM_BENCH_SMOKE=1 cargo run --release --example mempool
 //! ```
 
 use anyhow::Result;
 use netdam::coordinator::{run_e3, E3Config};
-use netdam::pool::{AllocError, InterleaveMap, SdnController};
+use netdam::mem::{MemClient, MemError};
+use netdam::net::{Cluster, LinkConfig, Topology};
+use netdam::pool::{InterleaveMap, SdnController};
+use netdam::sim::{fmt_ns, Engine};
 use netdam::wire::DeviceIp;
 
 fn main() -> Result<()> {
     println!("== NetDAM global memory pool ==\n");
 
-    // 4 × 2 GB devices → one 8 GB pool, 8 KiB interleave blocks.
+    // 4 × 2 GB devices on one ToR → one 8 GB pool, 8 KiB interleave
+    // blocks, driven from one client host.
+    let t = Topology::star(0x3001, 4, 1, LinkConfig::dc_100g());
+    let mut cl = t.cluster;
+    let mut eng: Engine<Cluster> = Engine::new();
     let devices: Vec<DeviceIp> = (1..=4).map(DeviceIp::lan).collect();
     let map = InterleaveMap::paper_default(devices.clone());
     let mut ctl = SdnController::new(map, 2 << 30);
@@ -23,10 +34,11 @@ fn main() -> Result<()> {
         devices.len()
     );
 
-    // Tenant 1 allocates 1 MiB; see how it spreads.
-    let alloc = ctl.malloc(1, 1 << 20, true)?;
+    // Tenant 1 leases 1 MiB; the controller programs every device IOMMU.
+    ctl.grant_host(&mut cl, 1, DeviceIp::lan(101));
+    let alloc = ctl.malloc_mapped(&mut cl, 1, 1 << 20, true)?;
     println!(
-        "tenant 1 malloc(1 MiB) -> gva {:#x} (len {})",
+        "tenant 1 malloc(1 MiB) -> gva {:#x} (len {}), IOMMUs programmed",
         alloc.gva, alloc.len
     );
     let extents = ctl.access(1, alloc.gva, 64 << 10, true)?;
@@ -39,18 +51,47 @@ fn main() -> Result<()> {
         println!("  {dev}: {bytes} B");
     }
 
-    // ACL enforcement: tenant 2 cannot touch it; read-only rejects writes.
-    match ctl.access(2, alloc.gva, 64, false) {
-        Err(AllocError::Denied { .. }) => println!("tenant 2 access: denied (ACL)"),
-        other => panic!("expected denial, got {other:?}"),
-    }
-    let ro = ctl.malloc(2, 8192, false)?;
-    assert!(ctl.access(2, ro.gva, 8, true).is_err());
-    println!("tenant 2 read-only region: writes denied\n");
+    // The data plane: write/read through MemClient, on GVAs only.
+    let client = MemClient::new(t.hosts[0], DeviceIp::lan(101), 1, ctl.map().clone());
+    let payload: Vec<u8> = (0..64 << 10).map(|i| (i % 251) as u8).collect();
+    let t0 = eng.now();
+    client.write(&mut cl, &mut eng, alloc.gva, &payload)?;
+    let t_write = eng.now() - t0;
+    let t0 = eng.now();
+    let back = client.read(&mut cl, &mut eng, alloc.gva, payload.len())?;
+    let t_read = eng.now() - t0;
+    assert_eq!(back, payload, "reassembled in GVA order");
+    println!(
+        "\n64 KiB pooled write in {}, read-back in {} (verified)",
+        fmt_ns(t_write),
+        fmt_ns(t_read)
+    );
 
-    // The incast experiment (E3) on a live fabric.
-    println!("== E3: incast — direct many-to-one vs interleaved pool ==");
-    let r = run_e3(&E3Config::default())?;
+    // Enforcement happens on the devices: a read-only lease NAKs writes,
+    // a foreign tenant is fenced, and a freed lease faults unmapped.
+    let ro = ctl.malloc_mapped(&mut cl, 1, 8192, false)?;
+    match client.write(&mut cl, &mut eng, ro.gva, &[1u8; 64]) {
+        Err(MemError::Nak { device, reason, .. }) => {
+            println!("read-only lease: write NAK'd by {device} ({reason})")
+        }
+        other => panic!("expected a device NAK, got {other:?}"),
+    }
+    ctl.free_mapped(&mut cl, 1, ro.gva)?;
+    match client.read(&mut cl, &mut eng, ro.gva, 64) {
+        Err(MemError::Nak { reason, .. }) => {
+            println!("freed lease: read NAK'd ({reason})")
+        }
+        other => panic!("expected a device NAK, got {other:?}"),
+    }
+
+    // The incast experiment (E3) on a live fabric — through the pool.
+    println!("\n== E3: incast — direct many-to-one vs interleaved pool ==");
+    let smoke = std::env::var("NETDAM_BENCH_SMOKE").is_ok();
+    let cfg = E3Config {
+        bytes_per_sender: if smoke { 256 << 10 } else { 2 << 20 },
+        ..Default::default()
+    };
+    let r = run_e3(&cfg)?;
     print!("{}", r.table.render());
     println!(
         "\ndirect incast: {} drops, {} retransmits; pool: {} drops, {} retransmits",

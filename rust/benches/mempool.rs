@@ -1,0 +1,107 @@
+//! Bench — the pooled-memory data plane (§2.5/§2.6).
+//!
+//! Grid 1: scatter-gather read/write bandwidth through `MemClient` as the
+//! pool widens (1 → 8 devices; the host link is the roofline, the grid
+//! shows how well per-device windows keep the pipe full).
+//! Grid 2: the E3 incast contrast — N senders into one device (drops,
+//! retransmit storm) vs the same bytes interleaved over the pool and
+//! pulled back with paced READs, all through controller-programmed
+//! IOMMUs.
+//!
+//! Writes the machine-readable artifact `BENCH_mempool.json`. Set
+//! `NETDAM_BENCH_SMOKE=1` for a tiny CI-sized run.
+
+use netdam::coordinator::{run_e3, E3Config};
+use netdam::mem::MemClient;
+use netdam::metrics::Table;
+use netdam::net::{Cluster, LinkConfig, Topology};
+use netdam::pool::{InterleaveMap, SdnController};
+use netdam::sim::{fmt_ns, Engine};
+use netdam::wire::DeviceIp;
+
+fn gbps(bytes: usize, ns: u64) -> f64 {
+    bytes as f64 * 8.0 / ns.max(1) as f64
+}
+
+fn main() {
+    let wall = std::time::Instant::now();
+    let smoke = std::env::var("NETDAM_BENCH_SMOKE").is_ok();
+    println!("# Pooled-memory grid (controller -> IOMMU -> MemClient)\n");
+
+    let device_counts: &[usize] = if smoke { &[2] } else { &[1, 2, 4, 8] };
+    let bytes = if smoke { 256 << 10 } else { 4 << 20 };
+    let mut json_rows: Vec<String> = Vec::new();
+
+    let mut table = Table::new(&["devices", "write", "write Gbit/s", "read", "read Gbit/s"]);
+    for &n in device_counts {
+        let t = Topology::star(0xB3C4, n, 1, LinkConfig::dc_100g());
+        let mut cl = t.cluster;
+        let mut eng: Engine<Cluster> = Engine::new();
+        let map = InterleaveMap::paper_default((1..=n as u8).map(DeviceIp::lan).collect());
+        let mut ctl = SdnController::new(map, 2 << 30);
+        ctl.grant_host(&mut cl, 1, DeviceIp::lan(101));
+        let lease = ctl
+            .malloc_mapped(&mut cl, 1, bytes as u64, true)
+            .expect("pool lease");
+        let client =
+            MemClient::new(t.hosts[0], DeviceIp::lan(101), 1, ctl.map().clone()).with_window(8);
+        let data = vec![0x5Au8; bytes];
+        let t0 = eng.now();
+        client
+            .write(&mut cl, &mut eng, lease.gva, &data)
+            .expect("pooled write");
+        let t_write = eng.now() - t0;
+        let t0 = eng.now();
+        let back = client
+            .read(&mut cl, &mut eng, lease.gva, bytes)
+            .expect("pooled read");
+        let t_read = eng.now() - t0;
+        assert_eq!(back, data, "round trip through the pool");
+        table.row(&[
+            n.to_string(),
+            fmt_ns(t_write),
+            format!("{:.1}", gbps(bytes, t_write)),
+            fmt_ns(t_read),
+            format!("{:.1}", gbps(bytes, t_read)),
+        ]);
+        for (mode, ns) in [("write", t_write), ("read", t_read)] {
+            json_rows.push(format!(
+                "    {{\"grid\": \"bandwidth\", \"mode\": \"{mode}\", \"devices\": {n}, \
+                 \"bytes\": {bytes}, \"elapsed_ns\": {ns}, \"gbps\": {:.3}}}",
+                gbps(bytes, ns)
+            ));
+        }
+    }
+    println!("## {bytes} B scatter-gather vs pool width\n\n{}", table.render());
+
+    // E3: direct single-device incast vs the interleaved pool path.
+    let cfg = E3Config {
+        bytes_per_sender: if smoke { 256 << 10 } else { 2 << 20 },
+        ..Default::default()
+    };
+    let r = run_e3(&cfg).expect("e3");
+    println!(
+        "## E3 incast ({} senders x {} B)\n\n{}",
+        cfg.senders,
+        cfg.bytes_per_sender,
+        r.table.render()
+    );
+    json_rows.push(format!(
+        "    {{\"grid\": \"incast\", \"arm\": \"direct\", \"senders\": {}, \"bytes_per_sender\": {}, \
+         \"elapsed_ns\": {}, \"drops\": {}, \"retransmits\": {}}}",
+        cfg.senders, cfg.bytes_per_sender, r.direct_ns, r.direct_drops, r.direct_retransmits
+    ));
+    json_rows.push(format!(
+        "    {{\"grid\": \"incast\", \"arm\": \"pool\", \"senders\": {}, \"bytes_per_sender\": {}, \
+         \"elapsed_ns\": {}, \"drops\": {}, \"retransmits\": {}}}",
+        cfg.senders, cfg.bytes_per_sender, r.pool_scatter_ns, r.pool_drops, r.pool_retransmits
+    ));
+
+    let json = format!(
+        "{{\n  \"bench\": \"mempool\",\n  \"smoke\": {smoke},\n  \"results\": [\n{}\n  ]\n}}\n",
+        json_rows.join(",\n")
+    );
+    std::fs::write("BENCH_mempool.json", &json).expect("write BENCH_mempool.json");
+    println!("wrote BENCH_mempool.json ({} rows)", json_rows.len());
+    println!("bench wallclock: {:.2?}", wall.elapsed());
+}

@@ -12,13 +12,21 @@
 //! * **pool** — senders scatter over the interleaved pool (balanced, no
 //!   hot link), receiver pulls back with token-bucket-paced READs.
 //! * The numbers contrast completion time, drops and retransmits.
+//!
+//! The pool arm runs on the **real memory plane**: one job tenant
+//! `malloc_mapped`s the aggregate through the [`SdnController`] (which
+//! programs every device IOMMU with the lease and binds the sender/
+//! receiver hosts to the tenant), and the senders'/receiver's block plans
+//! are compiled from the controller's GVA translation — no private
+//! address map, and every write/read is translated and fenced by the
+//! device IOMMUs on the way in.
 
 use anyhow::Result;
 
 use crate::isa::{Flags, Instruction};
 use crate::metrics::Table;
 use crate::net::{App, AppCtx, Cluster, LinkConfig, Topology};
-use crate::pool::InterleaveMap;
+use crate::pool::{SdnController, TenantId};
 use crate::sim::{fmt_ns, Engine, SimTime};
 use crate::transport::{ReliabilityTable, TokenBucket};
 use crate::wire::{DeviceIp, Packet, Payload, SrouHeader};
@@ -179,6 +187,12 @@ fn build_cluster(cfg: &E3Config, timing: bool) -> (Cluster, Vec<DeviceIp>) {
 }
 
 pub fn run_e3(cfg: &E3Config) -> Result<E3Result> {
+    // Validate up front: both arms move whole blocks, and failing after
+    // the direct arm has simulated would waste minutes of wallclock.
+    anyhow::ensure!(
+        cfg.bytes_per_sender % BLOCK == 0,
+        "bytes_per_sender must be a whole number of {BLOCK}-byte blocks"
+    );
     let blocks_each = cfg.bytes_per_sender / BLOCK;
     let gap = ((BLOCK + 96) as f64 * 8.0 / 100.0).ceil() as SimTime; // line rate
 
@@ -220,18 +234,29 @@ pub fn run_e3(cfg: &E3Config) -> Result<E3Result> {
     let direct_retx = cl.metrics.counter("retransmits");
 
     // --- arm 2: interleaved scatter + paced pull ----------------------
+    // This arm rides the real memory plane: the SDN controller leases the
+    // aggregate to one job tenant, programs every device IOMMU, and the
+    // hosts' plans come from the controller's GVA translation.
+    const JOB: TenantId = 1;
     let (mut cl, ips) = build_cluster(cfg, true);
-    let map = InterleaveMap::paper_default(ips.clone());
+    let map = crate::pool::InterleaveMap::paper_default(ips.clone());
+    let mut ctl = SdnController::new(map, 2 << 30);
     let total = cfg.senders * cfg.bytes_per_sender;
+    let agg = ctl
+        .malloc_mapped(&mut cl, JOB, total as u64, true)
+        .map_err(|e| anyhow::anyhow!("pool lease failed: {e}"))?;
     for s in 0..cfg.senders {
-        let gva0 = (s * cfg.bytes_per_sender) as u64;
-        let plan: Vec<(DeviceIp, u64)> = map
-            .scatter(gva0, cfg.bytes_per_sender as u64)
+        let host_ip = DeviceIp::lan(101 + s as u8);
+        ctl.grant_host(&mut cl, JOB, host_ip);
+        let gva0 = agg.gva + (s * cfg.bytes_per_sender) as u64;
+        let plan: Vec<(DeviceIp, u64)> = ctl
+            .access(JOB, gva0, cfg.bytes_per_sender as u64, true)
+            .map_err(|e| anyhow::anyhow!("sender {s} plan denied: {e}"))?
             .into_iter()
             .map(|e| (e.device, e.local_addr))
             .collect();
         let h = cl.add_host(
-            DeviceIp::lan(101 + s as u8),
+            host_ip,
             Some(Box::new(BurstSender {
                 plan,
                 next: 0,
@@ -243,8 +268,10 @@ pub fn run_e3(cfg: &E3Config) -> Result<E3Result> {
         cl.connect(0, h, LinkConfig::dc_100g());
     }
     // Receiver pulls the whole aggregate back, paced.
-    let pull_plan: Vec<(DeviceIp, u64)> = map
-        .scatter(0, total as u64)
+    ctl.grant_host(&mut cl, JOB, DeviceIp::lan(99));
+    let pull_plan: Vec<(DeviceIp, u64)> = ctl
+        .access(JOB, agg.gva, total as u64, false)
+        .map_err(|e| anyhow::anyhow!("pull plan denied: {e}"))?
         .into_iter()
         .map(|e| (e.device, e.local_addr))
         .collect();
@@ -278,6 +305,21 @@ pub fn run_e3(cfg: &E3Config) -> Result<E3Result> {
     );
     let pool_drops = cl.metrics.counter("link_drops");
     let pool_retx = cl.metrics.counter("retransmits");
+    // Every pool access was translated by a programmed (non-identity)
+    // device IOMMU, and the in-lease plan drew no NAKs.
+    for &ip in &ips {
+        let node = cl.node_by_ip(ip).expect("pool device");
+        let dev = cl.device(node);
+        anyhow::ensure!(
+            !dev.iommu_ref().is_identity(),
+            "pool device {ip} must run a controller-programmed IOMMU"
+        );
+        anyhow::ensure!(
+            dev.iommu_naks == 0,
+            "in-lease pool traffic must not fault ({} NAKs at {ip})",
+            dev.iommu_naks
+        );
+    }
 
     let mut table = Table::new(&[
         "arm",

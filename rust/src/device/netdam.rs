@@ -8,12 +8,13 @@
 //! along the SROU segment list — the §3 fused allreduce and chained DPU
 //! offloads without any bespoke opcode.
 
+use std::collections::HashMap;
 use std::sync::Arc;
 
 use anyhow::{bail, ensure, Result};
 
 use crate::alu::{block_hash, AluBackend, NativeAlu};
-use crate::iommu::{Access, Iommu};
+use crate::iommu::{Access, Iommu, IommuFault, TenantId};
 use crate::isa::registry::{ExecCtx, ExecOutcome, InstructionRegistry, MemAccess};
 use crate::isa::{Instruction, Program, Step, NO_COMPLETION, USER_OPCODE_BASE};
 use crate::sim::SimTime;
@@ -54,6 +55,14 @@ pub struct NetDamDevice {
     cfg: DeviceConfig,
     hbm: Hbm,
     iommu: Iommu,
+    /// Requester ACL programmed by the SDN controller (§2.6): which
+    /// tenant a packet source is attributed to for IOMMU lease checks.
+    tenant_acl: HashMap<DeviceIp, TenantId>,
+    /// Tenant attribution of the packet currently executing.
+    req_tenant: Option<TenantId>,
+    /// Typed fault captured by the last failed translation (consumed by
+    /// `handle_packet` to emit the wire NAK).
+    last_fault: Option<IommuFault>,
     alu: Box<dyn AluBackend>,
     registry: Arc<InstructionRegistry>,
     rng: Xoshiro256,
@@ -67,6 +76,8 @@ pub struct NetDamDevice {
     pub pkts_out: u64,
     pub drops_hash_guard: u64,
     pub exec_errors: u64,
+    /// Translations denied by the IOMMU and NAK'd back on the wire.
+    pub iommu_naks: u64,
     /// Program steps executed locally (micro-executor throughput).
     pub prog_steps: u64,
 }
@@ -83,6 +94,9 @@ impl NetDamDevice {
             cfg,
             hbm,
             iommu: Iommu::identity(),
+            tenant_acl: HashMap::new(),
+            req_tenant: None,
+            last_fault: None,
             alu: Box::new(NativeAlu::new()),
             registry,
             rng,
@@ -92,6 +106,7 @@ impl NetDamDevice {
             pkts_out: 0,
             drops_hash_guard: 0,
             exec_errors: 0,
+            iommu_naks: 0,
             prog_steps: 0,
         }
     }
@@ -118,6 +133,29 @@ impl NetDamDevice {
         &mut self.iommu
     }
 
+    pub fn iommu_ref(&self) -> &Iommu {
+        &self.iommu
+    }
+
+    /// Program the requester ACL: packets sourced from `host` are
+    /// attributed to `tenant` when the IOMMU checks leases. Installed by
+    /// the SDN controller (`pool::SdnController::grant_host`).
+    pub fn bind_tenant(&mut self, host: DeviceIp, tenant: TenantId) {
+        self.tenant_acl.insert(host, tenant);
+    }
+
+    /// Translate through the IOMMU with the current packet's tenant
+    /// attribution, capturing the typed fault for the NAK path.
+    fn xlate(&mut self, addr: u64, len: usize, access: Access) -> Result<u64> {
+        match self.iommu.translate_req(addr, len, access, self.req_tenant) {
+            Ok(pa) => Ok(pa),
+            Err(fault) => {
+                self.last_fault = Some(fault);
+                Err(fault.into())
+            }
+        }
+    }
+
     /// Swap in a different ALU backend (e.g. `runtime::XlaAlu`).
     pub fn set_alu(&mut self, alu: Box<dyn AluBackend>) {
         self.alu = alu;
@@ -135,19 +173,40 @@ impl NetDamDevice {
     }
 
     /// Process an arriving packet. `now` is the arrival time; returned
-    /// emits are relative to it. Malformed packets count as exec_errors
-    /// and are dropped (the hardware would raise an error CQE).
+    /// emits are relative to it. A translation denied by the IOMMU is
+    /// NAK'd back on the wire with the fault's typed reason (§2.6 — the
+    /// device enforces the controller's ACL); other malformed packets
+    /// count as exec_errors and are dropped (the hardware would raise an
+    /// error CQE).
     pub fn handle_packet(&mut self, now: SimTime, pkt: Packet) -> Vec<Emit> {
         self.pkts_in += 1;
+        self.last_fault = None;
+        let (src, seq) = (pkt.src, pkt.seq);
         match self.execute(now, pkt) {
             Ok(emits) => {
                 self.pkts_out += emits.len() as u64;
                 emits
             }
-            Err(_) => {
-                self.exec_errors += 1;
-                Vec::new()
-            }
+            Err(_) => match self.last_fault.take() {
+                Some(fault) => {
+                    self.iommu_naks += 1;
+                    let delay = self.fixed_ns();
+                    let nak = self.reply_seq(
+                        src,
+                        seq,
+                        Instruction::Nack {
+                            acked: seq,
+                            reason: fault.reason() as u8,
+                        },
+                    );
+                    self.pkts_out += 1;
+                    vec![Emit { delay, pkt: nak }]
+                }
+                None => {
+                    self.exec_errors += 1;
+                    Vec::new()
+                }
+            },
         }
     }
 
@@ -178,6 +237,9 @@ impl NetDamDevice {
     fn execute(&mut self, now: SimTime, pkt: Packet) -> Result<Vec<Emit>> {
         let flags = pkt.flags;
         let src = pkt.src;
+        // Attribute the request to a tenant for IOMMU lease checks (the
+        // §2.6 ACL the controller programmed; None = unattributed).
+        self.req_tenant = self.tenant_acl.get(&src).copied();
         let mut emits = Vec::new();
         let fixed = self.fixed_ns();
 
@@ -201,7 +263,7 @@ impl NetDamDevice {
             Instruction::Nop => {}
 
             Instruction::Read { addr, len } => {
-                let pa = self.iommu.translate(addr, len as usize, Access::Read)?;
+                let pa = self.xlate(addr, len as usize, Access::Read)?;
                 let t = fixed + self.mem_ns(len as usize);
                 let payload = if self.hbm.is_phantom() {
                     Payload::phantom(len as usize)
@@ -214,7 +276,7 @@ impl NetDamDevice {
 
             Instruction::Write { addr } => {
                 let len = pkt.payload.len();
-                let pa = self.iommu.translate(addr, len, Access::Write)?;
+                let pa = self.xlate(addr, len, Access::Write)?;
                 let t = fixed + self.mem_ns(len);
                 if let Some(bytes) = pkt.payload.bytes() {
                     self.hbm.write(pa, bytes)?;
@@ -230,7 +292,7 @@ impl NetDamDevice {
                 expected,
                 new,
             } => {
-                let pa = self.iommu.translate(addr, 8, Access::Write)?;
+                let pa = self.xlate(addr, 8, Access::Write)?;
                 let t = fixed + self.mem_ns(8);
                 let cur = u64::from_le_bytes(self.hbm.read(pa, 8)?.try_into().unwrap());
                 let swapped = cur == expected;
@@ -250,8 +312,8 @@ impl NetDamDevice {
             }
 
             Instruction::Memcopy { src: s, dst, len } => {
-                let ps = self.iommu.translate(s, len as usize, Access::Read)?;
-                let pd = self.iommu.translate(dst, len as usize, Access::Write)?;
+                let ps = self.xlate(s, len as usize, Access::Read)?;
+                let pd = self.xlate(dst, len as usize, Access::Write)?;
                 // Two bursts: read + write.
                 let t = fixed + self.mem_ns(len as usize) + self.mem_ns(len as usize);
                 let data = self.hbm.read(ps, len as usize)?;
@@ -266,7 +328,7 @@ impl NetDamDevice {
                 let len = pkt.payload.len();
                 let lanes = len / 4;
                 let access = if flags.store() { Access::Write } else { Access::Read };
-                let pa = self.iommu.translate(addr, len, access)?;
+                let pa = self.xlate(addr, len, access)?;
                 let t = fixed + self.mem_ns(len) + self.alu_ns(lanes)
                     + if flags.store() { self.mem_ns(len) } else { 0 };
                 let result = match pkt.payload.bytes() {
@@ -293,7 +355,7 @@ impl NetDamDevice {
             }
 
             Instruction::BlockHash { addr, len } => {
-                let pa = self.iommu.translate(addr, len as usize, Access::Read)?;
+                let pa = self.xlate(addr, len as usize, Access::Read)?;
                 let t = fixed + self.mem_ns(len as usize) + self.alu_ns(len as usize / 4);
                 let hash = block_hash(&self.hbm.read(pa, len as usize)?);
                 let resp = self.reply_seq(src, pkt.seq, Instruction::BlockHashResp { hash });
@@ -302,7 +364,7 @@ impl NetDamDevice {
 
             Instruction::WriteIfHash { addr, expect_hash } => {
                 let len = pkt.payload.len();
-                let pa = self.iommu.translate(addr, len, Access::Write)?;
+                let pa = self.xlate(addr, len, Access::Write)?;
                 let t = fixed + self.mem_ns(len) * 2 + self.alu_ns(len / 4);
                 let ok = if self.hbm.is_phantom() {
                     true // timing mode: guard always passes (documented)
@@ -448,7 +510,7 @@ impl NetDamDevice {
         match &step.instr {
             I::Read { addr, len } => {
                 let len = *len as usize;
-                let pa = self.iommu.translate(*addr, len, Access::Read)?;
+                let pa = self.xlate(*addr, len, Access::Read)?;
                 let t = self.mem_ns(len);
                 let out = if self.hbm.is_phantom() {
                     Payload::phantom(len)
@@ -460,7 +522,7 @@ impl NetDamDevice {
             }
             I::Write { addr } => {
                 let len = payload.len();
-                let pa = self.iommu.translate(*addr, len, Access::Write)?;
+                let pa = self.xlate(*addr, len, Access::Write)?;
                 let t = self.mem_ns(len);
                 if let Some(bytes) = payload.bytes() {
                     self.hbm.write(pa, bytes)?;
@@ -470,8 +532,8 @@ impl NetDamDevice {
             }
             I::Memcopy { src, dst, len } => {
                 let len = *len as usize;
-                let ps = self.iommu.translate(*src, len, Access::Read)?;
-                let pd = self.iommu.translate(*dst, len, Access::Write)?;
+                let ps = self.xlate(*src, len, Access::Read)?;
+                let pd = self.xlate(*dst, len, Access::Write)?;
                 let t = self.mem_ns(len) + self.mem_ns(len);
                 let data = self.hbm.read(ps, len)?;
                 self.hbm.write(pd, &data)?;
@@ -482,7 +544,7 @@ impl NetDamDevice {
                 let len = payload.len();
                 let lanes = len / 4;
                 let access = if flags.store() { Access::Write } else { Access::Read };
-                let pa = self.iommu.translate(*addr, len, access)?;
+                let pa = self.xlate(*addr, len, access)?;
                 let mut t = self.mem_ns(len) + self.alu_ns(lanes);
                 let out = match payload.bytes() {
                     Some(bytes) => {
@@ -504,7 +566,7 @@ impl NetDamDevice {
             }
             I::BlockHash { addr, len } => {
                 let len = *len as usize;
-                let pa = self.iommu.translate(*addr, len, Access::Read)?;
+                let pa = self.xlate(*addr, len, Access::Read)?;
                 let t = self.mem_ns(len) + self.alu_ns(len / 4);
                 let hash = block_hash(&self.hbm.read(pa, len)?);
                 *fwd = None;
@@ -516,7 +578,7 @@ impl NetDamDevice {
                 // guard fails and the read-back substitutes the already-
                 // written block, so downstream hops still see the truth.
                 let len = payload.len();
-                let pa = self.iommu.translate(*addr, len, Access::Write)?;
+                let pa = self.xlate(*addr, len, Access::Write)?;
                 let t = self.mem_ns(len) * 2 + self.alu_ns(len / 4);
                 if payload.is_phantom() {
                     *fwd = None;
@@ -927,6 +989,80 @@ mod tests {
             .with_payload(Payload::from_f32s(&[1.0]));
         assert!(d.handle_packet(0, pkt).is_empty());
         assert_eq!(d.exec_errors, 1);
+    }
+
+    /// §2.6 enforcement point: a denied translation is a *wire NAK* with
+    /// the fault's typed reason, not a silent in-process drop.
+    #[test]
+    fn iommu_denial_naks_on_the_wire() {
+        use crate::iommu::{NakReason, Perms};
+        let mut d = dev(2);
+        // One 8 KiB read-only page leased to tenant 7; host ip(1) → 7.
+        d.iommu_mut().set_page_bits(13).unwrap();
+        d.iommu_mut()
+            .map_leased(0, 0, 8192, Perms::RO, Some(7))
+            .unwrap();
+        d.bind_tenant(ip(1), 7);
+        // In-lease read passes through the lease.
+        let emits = d.handle_packet(0, direct(1, 2, Instruction::Read { addr: 0, len: 64 }));
+        assert!(matches!(emits[0].pkt.instr, Instruction::ReadResp { .. }));
+        // Write to the RO lease → WriteDenied NAK back to the source.
+        let w = direct(1, 2, Instruction::Write { addr: 0 })
+            .with_payload(Payload::from_bytes(vec![1; 8]));
+        let emits = d.handle_packet(0, w);
+        assert_eq!(emits.len(), 1);
+        let Instruction::Nack { acked, reason } = emits[0].pkt.instr else {
+            panic!("expected Nack, got {:?}", emits[0].pkt.instr);
+        };
+        assert_eq!(acked, 1, "NAK echoes the request sequence");
+        assert_eq!(emits[0].pkt.dst().unwrap(), ip(1));
+        assert_eq!(NakReason::from_u8(reason), NakReason::WriteDenied);
+        // Unattributed source → foreign-lease NAK.
+        let r = Packet::new(
+            ip(3),
+            9,
+            SrouHeader::direct(ip(2)),
+            Instruction::Read { addr: 0, len: 8 },
+        );
+        let emits = d.handle_packet(0, r);
+        let Instruction::Nack { reason, .. } = emits[0].pkt.instr else {
+            panic!("expected Nack, got {:?}", emits[0].pkt.instr);
+        };
+        assert_eq!(NakReason::from_u8(reason), NakReason::ForeignLease);
+        // Out-of-lease address → Unmapped NAK.
+        let emits = d.handle_packet(
+            0,
+            direct(1, 2, Instruction::Read { addr: 1 << 20, len: 8 }),
+        );
+        let Instruction::Nack { reason, .. } = emits[0].pkt.instr else {
+            panic!("expected Nack, got {:?}", emits[0].pkt.instr);
+        };
+        assert_eq!(NakReason::from_u8(reason), NakReason::Unmapped);
+        assert_eq!(d.iommu_naks, 3);
+        assert_eq!(d.exec_errors, 0, "IOMMU faults are NAKs, not exec errors");
+    }
+
+    /// Program steps translate through the same lease checks: a fault
+    /// mid-program NAKs instead of silently killing the chain.
+    #[test]
+    fn program_step_fault_naks_too() {
+        use crate::iommu::{NakReason, Perms};
+        let mut d = dev(2);
+        d.iommu_mut().set_page_bits(13).unwrap();
+        d.iommu_mut()
+            .map_leased(0, 0, 8192, Perms::RO, Some(4))
+            .unwrap();
+        d.bind_tenant(ip(1), 4);
+        let prog = ProgramBuilder::new().store(0, 1).build_unchecked();
+        let pkt = direct(1, 2, Instruction::Program(Box::new(prog)))
+            .with_payload(Payload::from_f32s(&[1.0, 2.0]));
+        let emits = d.handle_packet(0, pkt);
+        assert_eq!(emits.len(), 1);
+        let Instruction::Nack { reason, .. } = emits[0].pkt.instr else {
+            panic!("expected Nack, got {:?}", emits[0].pkt.instr);
+        };
+        assert_eq!(NakReason::from_u8(reason), NakReason::WriteDenied);
+        assert_eq!(d.iommu_naks, 1);
     }
 
     #[test]

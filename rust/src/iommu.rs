@@ -1,20 +1,34 @@
-//! Per-device IOMMU (paper §2.5).
+//! Per-device IOMMU (paper §2.5/§2.6).
 //!
 //! "IOMMU may implement on NetDAM for Virtual Address and Physical Address
 //! translation. Remote Memory could also mapping to local Virtual Address
 //! by this IOMMU."
 //!
-//! The model is a flat page table over 2 MiB pages with R/W permission
-//! bits. Identity mapping (the FPGA prototype's default) is the fast path:
-//! an empty table translates 1:1 with full access — so simulations that
-//! don't exercise virtualization pay nothing.
+//! The model is a flat page table with R/W permission bits and an optional
+//! **tenant lease** per entry — the device-side half of the SDN
+//! controller's ACL (§2.6): the controller translates malloc/free into
+//! page mappings *on each device*, so access control is enforced where the
+//! paper enforces it, at the memory, not in host software. A denied
+//! translation is a typed [`IommuFault`]; the device surfaces it on the
+//! wire as a `Nack` carrying the matching [`NakReason`].
+//!
+//! The page size is configurable per instance ([`Iommu::with_page_bits`]):
+//! the default 2 MiB granule suits host-style virtualization, while the
+//! pool controller programs leases at the interleave-block granule (8 KiB).
+//! Identity mapping (the FPGA prototype's default) is the fast path: an
+//! empty table translates 1:1 with full access — so simulations that don't
+//! exercise virtualization pay nothing.
 
 use anyhow::{bail, Result};
 use std::collections::HashMap;
+use std::fmt;
 
-/// 2 MiB translation granule.
+/// Default translation granule: 2 MiB.
 pub const IOMMU_PAGE_BITS: u32 = 21;
 pub const IOMMU_PAGE_SIZE: u64 = 1 << IOMMU_PAGE_BITS;
+
+/// A pool tenant (the controller's lease owner identity).
+pub type TenantId = u32;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct Perms {
@@ -37,6 +51,8 @@ impl Perms {
 struct Entry {
     pa_page: u64,
     perms: Perms,
+    /// `Some(t)` restricts this page to requests attributed to tenant `t`.
+    lease: Option<TenantId>,
 }
 
 /// The translation table. `Access::Read`/`Write` select the permission bit.
@@ -46,9 +62,118 @@ pub enum Access {
     Write,
 }
 
-#[derive(Debug, Default)]
+/// Wire-level NAK reason codes (the `reason` byte of `Instruction::Nack`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+pub enum NakReason {
+    Unspecified = 0,
+    /// Translation fault: the page is not mapped (out of lease).
+    Unmapped = 1,
+    /// The lease does not grant read permission.
+    ReadDenied = 2,
+    /// The lease does not grant write permission.
+    WriteDenied = 3,
+    /// The page belongs to a different tenant's lease.
+    ForeignLease = 4,
+    /// The access spans a translation discontinuity.
+    MappingBreak = 5,
+}
+
+impl NakReason {
+    pub fn from_u8(v: u8) -> NakReason {
+        match v {
+            1 => NakReason::Unmapped,
+            2 => NakReason::ReadDenied,
+            3 => NakReason::WriteDenied,
+            4 => NakReason::ForeignLease,
+            5 => NakReason::MappingBreak,
+            _ => NakReason::Unspecified,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            NakReason::Unspecified => "unspecified",
+            NakReason::Unmapped => "unmapped",
+            NakReason::ReadDenied => "read-denied",
+            NakReason::WriteDenied => "write-denied",
+            NakReason::ForeignLease => "foreign-lease",
+            NakReason::MappingBreak => "mapping-break",
+        }
+    }
+}
+
+impl fmt::Display for NakReason {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Typed translation failure — what the device turns into a wire NAK.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum IommuFault {
+    /// No mapping covers `va`.
+    Unmapped { va: u64 },
+    /// The mapping exists but does not grant the access.
+    Denied { va: u64, write: bool },
+    /// The mapping is leased to another tenant.
+    ForeignLease { va: u64 },
+    /// The access spans pages that are not contiguously mapped.
+    MappingBreak { va: u64, len: usize },
+}
+
+impl IommuFault {
+    /// The NAK reason byte this fault puts on the wire.
+    pub fn reason(&self) -> NakReason {
+        match self {
+            IommuFault::Unmapped { .. } => NakReason::Unmapped,
+            IommuFault::Denied { write: false, .. } => NakReason::ReadDenied,
+            IommuFault::Denied { write: true, .. } => NakReason::WriteDenied,
+            IommuFault::ForeignLease { .. } => NakReason::ForeignLease,
+            IommuFault::MappingBreak { .. } => NakReason::MappingBreak,
+        }
+    }
+}
+
+impl fmt::Display for IommuFault {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            IommuFault::Unmapped { va } => write!(f, "IOMMU fault: VA {va:#x} not mapped"),
+            IommuFault::Denied { va, write } => write!(
+                f,
+                "IOMMU permission fault at VA {va:#x} ({})",
+                if *write { "write" } else { "read" }
+            ),
+            IommuFault::ForeignLease { va } => {
+                write!(f, "IOMMU lease fault: VA {va:#x} belongs to another tenant")
+            }
+            IommuFault::MappingBreak { va, len } => {
+                write!(f, "IOMMU: access at {va:#x}+{len} crosses a mapping break")
+            }
+        }
+    }
+}
+
+impl std::error::Error for IommuFault {}
+
+#[derive(Debug)]
 pub struct Iommu {
     table: HashMap<u64, Entry>,
+    page_bits: u32,
+    /// Latched on the first mapping: once a device has been programmed,
+    /// an empty table means "nothing mapped" (fault), not identity —
+    /// freeing the last lease must not reopen the whole address space.
+    enforcing: bool,
+}
+
+impl Default for Iommu {
+    fn default() -> Self {
+        Self {
+            table: HashMap::new(),
+            page_bits: IOMMU_PAGE_BITS,
+            enforcing: false,
+        }
+    }
 }
 
 impl Iommu {
@@ -57,73 +182,146 @@ impl Iommu {
         Self::default()
     }
 
-    pub fn is_identity(&self) -> bool {
-        self.table.is_empty()
+    /// An empty IOMMU with a custom translation granule of `2^bits` bytes
+    /// (the pool controller uses the interleave-block granule).
+    pub fn with_page_bits(bits: u32) -> Self {
+        assert!((6..=30).contains(&bits), "page bits {bits} out of range");
+        Self {
+            table: HashMap::new(),
+            page_bits: bits,
+            enforcing: false,
+        }
     }
 
-    /// Map `va..va+len` → `pa..pa+len`. All three must be page-aligned.
-    pub fn map(&mut self, va: u64, pa: u64, len: u64, perms: Perms) -> Result<()> {
-        if va % IOMMU_PAGE_SIZE != 0 || pa % IOMMU_PAGE_SIZE != 0 || len % IOMMU_PAGE_SIZE != 0 {
-            bail!("IOMMU mappings must be 2MiB-aligned (va={va:#x} pa={pa:#x} len={len:#x})");
+    /// Change the granule. Only legal while the table is empty.
+    pub fn set_page_bits(&mut self, bits: u32) -> Result<()> {
+        if !self.table.is_empty() {
+            bail!("cannot change IOMMU page size with live mappings");
         }
-        for i in 0..len / IOMMU_PAGE_SIZE {
-            let vp = (va >> IOMMU_PAGE_BITS) + i;
+        if !(6..=30).contains(&bits) {
+            bail!("page bits {bits} out of range");
+        }
+        self.page_bits = bits;
+        Ok(())
+    }
+
+    pub fn page_size(&self) -> u64 {
+        1 << self.page_bits
+    }
+
+    pub fn is_identity(&self) -> bool {
+        self.table.is_empty() && !self.enforcing
+    }
+
+    /// Map `va..va+len` → `pa..pa+len` with no tenant restriction. All
+    /// three must be page-aligned.
+    pub fn map(&mut self, va: u64, pa: u64, len: u64, perms: Perms) -> Result<()> {
+        self.map_leased(va, pa, len, perms, None)
+    }
+
+    /// Map a tenant lease: like [`map`](Self::map), but the pages only
+    /// translate for requests attributed to `lease` (when `Some`).
+    pub fn map_leased(
+        &mut self,
+        va: u64,
+        pa: u64,
+        len: u64,
+        perms: Perms,
+        lease: Option<TenantId>,
+    ) -> Result<()> {
+        let psz = self.page_size();
+        if va % psz != 0 || pa % psz != 0 || len % psz != 0 {
+            bail!(
+                "IOMMU mappings must be {psz}-byte aligned (va={va:#x} pa={pa:#x} len={len:#x})"
+            );
+        }
+        for i in 0..len / psz {
+            let vp = (va >> self.page_bits) + i;
             if self.table.contains_key(&vp) {
-                bail!("VA page {:#x} already mapped", vp << IOMMU_PAGE_BITS);
+                bail!("VA page {:#x} already mapped", vp << self.page_bits);
             }
             self.table.insert(
                 vp,
                 Entry {
-                    pa_page: (pa >> IOMMU_PAGE_BITS) + i,
+                    pa_page: (pa >> self.page_bits) + i,
                     perms,
+                    lease,
                 },
             );
         }
+        self.enforcing = true;
         Ok(())
     }
 
     pub fn unmap(&mut self, va: u64, len: u64) -> Result<()> {
-        if va % IOMMU_PAGE_SIZE != 0 || len % IOMMU_PAGE_SIZE != 0 {
-            bail!("IOMMU unmap must be 2MiB-aligned");
+        let psz = self.page_size();
+        if va % psz != 0 || len % psz != 0 {
+            bail!("IOMMU unmap must be {psz}-byte aligned");
         }
-        for i in 0..len / IOMMU_PAGE_SIZE {
-            let vp = (va >> IOMMU_PAGE_BITS) + i;
+        for i in 0..len / psz {
+            let vp = (va >> self.page_bits) + i;
             if self.table.remove(&vp).is_none() {
-                bail!("VA page {:#x} not mapped", vp << IOMMU_PAGE_BITS);
+                bail!("VA page {:#x} not mapped", vp << self.page_bits);
             }
         }
         Ok(())
     }
 
-    /// Translate one address for an access of `len` bytes. The access must
-    /// not cross a page boundary into a differently-mapped page unless the
-    /// mapping is contiguous (checked).
-    pub fn translate(&self, va: u64, len: usize, access: Access) -> Result<u64> {
+    /// Translate one request-attributed access of `len` bytes. `tenant` is
+    /// the requester identity the device resolved from the packet source
+    /// (None = unattributed). The access must not cross a page boundary
+    /// into a differently-mapped page unless the mapping is contiguous
+    /// with identical perms and lease (checked).
+    pub fn translate_req(
+        &self,
+        va: u64,
+        len: usize,
+        access: Access,
+        tenant: Option<TenantId>,
+    ) -> Result<u64, IommuFault> {
         if self.table.is_empty() {
+            if self.enforcing {
+                return Err(IommuFault::Unmapped { va });
+            }
             return Ok(va); // identity fast path
         }
-        let first = va >> IOMMU_PAGE_BITS;
-        let last = (va + len.max(1) as u64 - 1) >> IOMMU_PAGE_BITS;
+        let first = va >> self.page_bits;
+        let last = (va + len.max(1) as u64 - 1) >> self.page_bits;
         let Some(e0) = self.table.get(&first) else {
-            bail!("IOMMU fault: VA {va:#x} not mapped");
+            return Err(IommuFault::Unmapped { va });
         };
+        if let Some(owner) = e0.lease {
+            if tenant != Some(owner) {
+                return Err(IommuFault::ForeignLease { va });
+            }
+        }
         let ok = match access {
             Access::Read => e0.perms.read,
             Access::Write => e0.perms.write,
         };
         if !ok {
-            bail!("IOMMU permission fault at VA {va:#x} ({access:?})");
+            return Err(IommuFault::Denied {
+                va,
+                write: matches!(access, Access::Write),
+            });
         }
-        // Verify spanned pages are mapped contiguously with same perms.
+        // Verify spanned pages are mapped contiguously with same rights.
         for (k, vp) in (first..=last).enumerate() {
             let Some(e) = self.table.get(&vp) else {
-                bail!("IOMMU fault: VA page {:#x} not mapped", vp << IOMMU_PAGE_BITS);
+                return Err(IommuFault::Unmapped {
+                    va: vp << self.page_bits,
+                });
             };
-            if e.pa_page != e0.pa_page + k as u64 || e.perms != e0.perms {
-                bail!("IOMMU: access at {va:#x}+{len} crosses a mapping break");
+            if e.pa_page != e0.pa_page + k as u64 || e.perms != e0.perms || e.lease != e0.lease {
+                return Err(IommuFault::MappingBreak { va, len });
             }
         }
-        Ok((e0.pa_page << IOMMU_PAGE_BITS) + (va & (IOMMU_PAGE_SIZE - 1)))
+        Ok((e0.pa_page << self.page_bits) + (va & (self.page_size() - 1)))
+    }
+
+    /// Unattributed translation (compat wrapper): leased pages reject it.
+    pub fn translate(&self, va: u64, len: usize, access: Access) -> Result<u64> {
+        Ok(self.translate_req(va, len, access, None)?)
     }
 }
 
@@ -158,7 +356,12 @@ mod tests {
     fn unmapped_va_faults_once_table_nonempty() {
         let mut m = Iommu::identity();
         m.map(0, 0, IOMMU_PAGE_SIZE, Perms::RW).unwrap();
-        assert!(m.translate(IOMMU_PAGE_SIZE * 10, 4, Access::Read).is_err());
+        assert_eq!(
+            m.translate_req(IOMMU_PAGE_SIZE * 10, 4, Access::Read, None),
+            Err(IommuFault::Unmapped {
+                va: IOMMU_PAGE_SIZE * 10
+            })
+        );
     }
 
     #[test]
@@ -166,7 +369,9 @@ mod tests {
         let mut m = Iommu::identity();
         m.map(0, 0, IOMMU_PAGE_SIZE, Perms::RO).unwrap();
         assert!(m.translate(0, 4, Access::Read).is_ok());
-        assert!(m.translate(0, 4, Access::Write).is_err());
+        let f = m.translate_req(0, 4, Access::Write, None).unwrap_err();
+        assert_eq!(f, IommuFault::Denied { va: 0, write: true });
+        assert_eq!(f.reason(), NakReason::WriteDenied);
     }
 
     #[test]
@@ -177,7 +382,10 @@ mod tests {
         m.map(IOMMU_PAGE_SIZE, 8 * IOMMU_PAGE_SIZE, IOMMU_PAGE_SIZE, Perms::RW)
             .unwrap();
         let straddle = IOMMU_PAGE_SIZE - 8;
-        assert!(m.translate(straddle, 16, Access::Read).is_err());
+        assert!(matches!(
+            m.translate_req(straddle, 16, Access::Read, None),
+            Err(IommuFault::MappingBreak { .. })
+        ));
     }
 
     #[test]
@@ -196,5 +404,66 @@ mod tests {
         m.unmap(0, IOMMU_PAGE_SIZE).unwrap();
         assert!(m.translate(0, 4, Access::Read).is_err());
         assert!(m.translate(IOMMU_PAGE_SIZE, 4, Access::Read).is_ok());
+    }
+
+    #[test]
+    fn leased_pages_admit_only_their_tenant() {
+        let mut m = Iommu::with_page_bits(13); // 8 KiB pool granule
+        assert_eq!(m.page_size(), 8192);
+        m.map_leased(0, 0, 8192, Perms::RW, Some(7)).unwrap();
+        assert_eq!(m.translate_req(64, 8, Access::Read, Some(7)), Ok(64));
+        assert_eq!(
+            m.translate_req(64, 8, Access::Read, Some(8)),
+            Err(IommuFault::ForeignLease { va: 64 })
+        );
+        assert_eq!(
+            m.translate_req(64, 8, Access::Read, None),
+            Err(IommuFault::ForeignLease { va: 64 })
+        );
+        // Contiguity check also refuses to cross into another lease.
+        m.map_leased(8192, 8192, 8192, Perms::RW, Some(9)).unwrap();
+        assert!(matches!(
+            m.translate_req(8192 - 4, 8, Access::Read, Some(7)),
+            Err(IommuFault::MappingBreak { .. })
+        ));
+    }
+
+    #[test]
+    fn page_size_only_changes_while_empty() {
+        let mut m = Iommu::identity();
+        m.set_page_bits(13).unwrap();
+        m.map(0, 0, 8192, Perms::RW).unwrap();
+        assert!(m.set_page_bits(21).is_err());
+        assert!(!m.is_identity());
+    }
+
+    #[test]
+    fn unmapping_everything_does_not_reopen_identity() {
+        let mut m = Iommu::with_page_bits(13);
+        m.map(0, 0, 8192, Perms::RW).unwrap();
+        m.unmap(0, 8192).unwrap();
+        // Once programmed, an empty table means "no leases", not identity.
+        assert!(!m.is_identity());
+        assert_eq!(
+            m.translate_req(64, 8, Access::Read, None),
+            Err(IommuFault::Unmapped { va: 64 })
+        );
+    }
+
+    #[test]
+    fn fault_reasons_round_trip_the_wire_byte() {
+        let faults = [
+            IommuFault::Unmapped { va: 0 },
+            IommuFault::Denied { va: 0, write: false },
+            IommuFault::Denied { va: 0, write: true },
+            IommuFault::ForeignLease { va: 0 },
+            IommuFault::MappingBreak { va: 0, len: 8 },
+        ];
+        for f in faults {
+            let r = f.reason();
+            assert_eq!(NakReason::from_u8(r as u8), r, "{f}");
+            assert_ne!(r, NakReason::Unspecified);
+        }
+        assert_eq!(NakReason::from_u8(0xEE), NakReason::Unspecified);
     }
 }

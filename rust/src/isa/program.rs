@@ -289,6 +289,96 @@ impl Program {
         Ok(())
     }
 
+    /// Peephole optimizer (build-time, `pc == 0`): merge adjacent steps
+    /// that provably perform the same work in fewer table entries —
+    /// verified programs only *shrink*, never change meaning:
+    ///
+    /// * two adjacent non-fused `Write`s of the carried payload at the
+    ///   same address collapse into one step with the summed `repeat`
+    ///   (the shape chained `store()` calls produce);
+    /// * a `Memcopy` followed by a fused `Memcopy` over the contiguous
+    ///   next ranges collapses into one longer copy on the same device.
+    ///
+    /// Both rewrites preserve [`hops`](Self::hops), flags, idempotency
+    /// and per-hop semantics, so a program verified before optimization
+    /// verifies identically after. Returns the number of merges.
+    pub fn peephole(&mut self) -> usize {
+        debug_assert_eq!((self.pc, self.reps_done), (0, 0), "optimize before launch");
+        let mut merged = 0;
+        let mut i = 0;
+        while i + 1 < self.steps.len() {
+            enum Rewrite {
+                WriteRepeat(u8),
+                CopyLen(u32),
+            }
+            let rewrite = {
+                let a = &self.steps[i];
+                let b = &self.steps[i + 1];
+                if a.flags != b.flags {
+                    None
+                } else {
+                    match (&a.instr, &b.instr) {
+                        (Instruction::Write { addr: x }, Instruction::Write { addr: y })
+                            if x == y
+                                && !b.fused
+                                && a.repeat as u16 + b.repeat as u16 <= u8::MAX as u16 =>
+                        {
+                            Some(Rewrite::WriteRepeat(a.repeat + b.repeat))
+                        }
+                        (
+                            Instruction::Memcopy {
+                                src: s1,
+                                dst: d1,
+                                len: l1,
+                            },
+                            Instruction::Memcopy {
+                                src: s2,
+                                dst: d2,
+                                len: l2,
+                            },
+                        ) if b.fused
+                            && a.repeat == 1
+                            && b.repeat == 1
+                            && *s2 == s1 + *l1 as u64
+                            && *d2 == d1 + *l1 as u64
+                            && l1.checked_add(*l2).is_some()
+                            && {
+                                // The merged copy must itself stay
+                                // non-overlapping: two shift-style copies
+                                // (dst of the first = src of the second)
+                                // are each idempotent, but their fusion
+                                // would self-overlap — different bytes
+                                // AND a §3.1 idempotency break.
+                                let total = (*l1 + *l2) as u64;
+                                s1.checked_add(total).is_some_and(|e| e <= *d1)
+                                    || d1.checked_add(total).is_some_and(|e| e <= *s1)
+                            } =>
+                        {
+                            Some(Rewrite::CopyLen(l1 + l2))
+                        }
+                        _ => None,
+                    }
+                }
+            };
+            match rewrite {
+                Some(Rewrite::WriteRepeat(r)) => {
+                    self.steps[i].repeat = r;
+                    self.steps.remove(i + 1);
+                    merged += 1; // stay at i: further writes may cascade
+                }
+                Some(Rewrite::CopyLen(len)) => {
+                    if let Instruction::Memcopy { len: l, .. } = &mut self.steps[i].instr {
+                        *l = len;
+                    }
+                    self.steps.remove(i + 1);
+                    merged += 1;
+                }
+                None => i += 1,
+            }
+        }
+        merged
+    }
+
     // ----------------------------------------------------------- codec
 
     /// Encode the program body (everything after `opcode|flags`):
@@ -431,10 +521,14 @@ impl ProgramBuilder {
         self
     }
 
-    /// Verify against `env` and produce the program.
+    /// Verify against `env`, then peephole-optimize (verified programs
+    /// only shrink — the merges preserve hops, flags and semantics, so
+    /// the optimized program still satisfies `verify`).
     pub fn build(self, env: &VerifyEnv<'_>) -> Result<Program, ProgramError> {
-        let p = self.build_unchecked();
+        let mut p = self.build_unchecked();
         p.verify(env)?;
+        p.peephole();
+        debug_assert!(p.verify(env).is_ok(), "peephole broke verification");
         Ok(p)
     }
 
@@ -635,6 +729,103 @@ mod tests {
                 opcode: 0x9999
             }
         );
+    }
+
+    #[test]
+    fn peephole_merges_adjacent_store_chains() {
+        // Two chained store() calls at the same address collapse into one
+        // step with the summed repeat; hops are preserved.
+        let p = ProgramBuilder::new()
+            .store(0x100, 2)
+            .store(0x100, 3)
+            .on_retire(1)
+            .build(&env(5))
+            .unwrap();
+        assert_eq!(p.steps.len(), 1);
+        assert_eq!(p.steps[0].repeat, 5);
+        assert_eq!(p.hops(), 5);
+        // Cascades across three fragments too.
+        let mut p = ProgramBuilder::new()
+            .store(0x100, 1)
+            .store(0x100, 1)
+            .store(0x100, 1)
+            .build_unchecked();
+        assert_eq!(p.peephole(), 2);
+        assert_eq!(p.steps.len(), 1);
+        assert_eq!(p.steps[0].repeat, 3);
+    }
+
+    #[test]
+    fn peephole_merges_contiguous_fused_memcopies() {
+        let p = ProgramBuilder::new()
+            .hop(Instruction::Memcopy {
+                src: 0,
+                dst: 0x4000,
+                len: 64,
+            })
+            .then(Instruction::Memcopy {
+                src: 64,
+                dst: 0x4040,
+                len: 32,
+            })
+            .build(&env(1))
+            .unwrap();
+        assert_eq!(p.steps.len(), 1);
+        assert_eq!(
+            p.steps[0].instr,
+            Instruction::Memcopy {
+                src: 0,
+                dst: 0x4000,
+                len: 96
+            }
+        );
+        assert_eq!(p.hops(), 1);
+    }
+
+    #[test]
+    fn peephole_leaves_unmergeable_steps_alone() {
+        // Different addresses: no merge.
+        let mut p = ProgramBuilder::new()
+            .store(0x100, 1)
+            .store(0x200, 1)
+            .build_unchecked();
+        assert_eq!(p.peephole(), 0);
+        assert_eq!(p.steps.len(), 2);
+        // Non-contiguous copies: no merge.
+        let mut p = ProgramBuilder::new()
+            .hop(Instruction::Memcopy {
+                src: 0,
+                dst: 0x4000,
+                len: 64,
+            })
+            .then(Instruction::Memcopy {
+                src: 128,
+                dst: 0x4080,
+                len: 64,
+            })
+            .build_unchecked();
+        assert_eq!(p.peephole(), 0);
+        // Shift-style copies (dst of the first = src of the second) are
+        // each idempotent, but the fused copy would self-overlap: both
+        // a semantic change and a §3.1 idempotency break — no merge.
+        let mut p = ProgramBuilder::new()
+            .hop(Instruction::Memcopy {
+                src: 0,
+                dst: 64,
+                len: 64,
+            })
+            .then(Instruction::Memcopy {
+                src: 64,
+                dst: 128,
+                len: 64,
+            })
+            .build_unchecked();
+        assert_eq!(p.peephole(), 0);
+        assert!(p.idempotent(), "pair stays idempotent un-merged");
+        // The full fused-ring shape is already minimal.
+        let mut p = ring_program(4, true).build_unchecked();
+        assert_eq!(p.peephole(), 0);
+        assert_eq!(p.steps.len(), 3);
     }
 
     #[test]

@@ -42,6 +42,24 @@
 //! chunk is `reduce ×(N−1) → guarded_write → store ×(N−1)` in one
 //! self-routing packet, and DPU offloads chain the same way
 //! (`crypto_write → crc32` — see `netdam prog`).
+//!
+//! # The memory plane (controller → lease → IOMMU → MemClient)
+//!
+//! The §2.5/§2.6 memory pool is a first-class data plane. The SDN
+//! controller ([`pool::SdnController`]) owns the block-interleaved GVA
+//! space; `malloc_mapped` turns each lease into per-device [`iommu`]
+//! programs (map + R/W perms + tenant fence) and `grant_host` installs
+//! the requester→tenant ACL on every device, so access control is
+//! enforced **on the device**: a denied translation surfaces as a typed
+//! wire-level `Nack` (see [`iommu::NakReason`]), not an in-process
+//! error. Hosts drive the pool through [`mem::MemClient`]: reads/writes/
+//! CAS against global virtual addresses compile into scatter-gather
+//! packet plans over the interleave extents (one reliable in-flight
+//! window per device, read data reassembled in GVA order), and
+//! `gather_sum` lowers a TensorDIMM-style sparse gather onto an
+//! on-device `Simd`-reduce packet program. E3 (incast) and the kvstore/
+//! mempool/embedding examples all run on this path — no raw physical
+//! addresses on the host side.
 //! * **L2 (python/compile/model.py)** — JAX compute graphs (SIMD block ops,
 //!   reduce step, block hash, MLP train step) lowered once to HLO text.
 //! * **L1 (python/compile/kernels/)** — Pallas kernels implementing the
@@ -59,6 +77,7 @@ pub mod examples_support;
 pub mod host;
 pub mod iommu;
 pub mod isa;
+pub mod mem;
 pub mod metrics;
 pub mod net;
 pub mod pool;

@@ -117,6 +117,9 @@ fn main() -> Result<()> {
         "prog" => {
             run_prog_demo(&args)?;
         }
+        "mem" => {
+            run_mem_demo(&args)?;
+        }
         "train" => {
             let steps = args.opt_usize("steps", 50)?;
             let workers = args.opt_usize("workers", 4)?;
@@ -252,6 +255,74 @@ fn run_prog_demo(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Pooled-memory demo: controller → lease → IOMMU program → MemClient
+/// plan → device enforcement, plus the near-memory embedding gather.
+fn run_mem_demo(args: &Args) -> Result<()> {
+    use netdam::mem::{MemClient, MemError};
+    use netdam::net::{Cluster, LinkConfig, Topology};
+    use netdam::pool::{InterleaveMap, SdnController};
+    use netdam::sim::{fmt_ns, Engine};
+    use netdam::util::bytes::{bytes_to_f32s, f32s_to_bytes};
+    use netdam::wire::DeviceIp;
+
+    let n_devices = args.opt_usize("devices", 4)?.clamp(1, 64);
+    let bytes = args.opt_usize("bytes", 256 << 10)?.max(8192);
+    println!("== NetDAM memory plane: GVA data path over {n_devices} devices ==\n");
+
+    let t = Topology::star(0x3E3D, n_devices, 1, LinkConfig::dc_100g());
+    let mut cl = t.cluster;
+    let mut eng: Engine<Cluster> = Engine::new();
+    let map =
+        InterleaveMap::paper_default((1..=n_devices as u8).map(DeviceIp::lan).collect());
+    let mut ctl = SdnController::new(map, 2 << 30);
+    ctl.grant_host(&mut cl, 1, DeviceIp::lan(101));
+    let lease = ctl.malloc_mapped(&mut cl, 1, bytes as u64, true)?;
+    let client = MemClient::new(t.hosts[0], DeviceIp::lan(101), 1, ctl.map().clone());
+
+    // Scatter-gather bandwidth through the pool.
+    let data: Vec<u8> = (0..bytes).map(|i| (i % 249) as u8).collect();
+    let t0 = eng.now();
+    client.write(&mut cl, &mut eng, lease.gva, &data)?;
+    let tw = eng.now() - t0;
+    let t0 = eng.now();
+    let back = client.read(&mut cl, &mut eng, lease.gva, bytes)?;
+    let tr = eng.now() - t0;
+    anyhow::ensure!(back == data, "read-back mismatch");
+    let gbps = |ns: u64| bytes as f64 * 8.0 / ns.max(1) as f64;
+    println!(
+        "write {bytes} B in {} ({:.1} Gbit/s), read back in {} ({:.1} Gbit/s), verified",
+        fmt_ns(tw),
+        gbps(tw),
+        fmt_ns(tr),
+        gbps(tr)
+    );
+
+    // Device-enforced denial: a read-only lease NAKs the write on the wire.
+    let ro = ctl.malloc_mapped(&mut cl, 1, 8192, false)?;
+    match client.write(&mut cl, &mut eng, ro.gva, &[9u8; 64]) {
+        Err(MemError::Nak { device, reason, .. }) => {
+            println!("read-only lease: write NAK'd by device {device} ({reason})")
+        }
+        other => anyhow::bail!("expected a device NAK, got {other:?}"),
+    }
+
+    // Near-memory gather: fold 4 rows with on-device Simd adds.
+    let rows = ctl.malloc_mapped(&mut cl, 1, 32 * 1024, true)?;
+    let dst = ctl.malloc_mapped(&mut cl, 1, 1024, true)?;
+    let mut table = Vec::new();
+    for r in 0..32 {
+        table.extend_from_slice(&f32s_to_bytes(&vec![r as f32; 256]));
+    }
+    client.write(&mut cl, &mut eng, rows.gva, &table)?;
+    let picks = [1u64, 2, 8, 21];
+    let gvas: Vec<u64> = picks.iter().map(|&r| rows.gva + r * 1024).collect();
+    client.gather_sum(&mut cl, &mut eng, &gvas, 1024, dst.gva)?;
+    let sum = bytes_to_f32s(&client.read(&mut cl, &mut eng, dst.gva, 1024)?)?;
+    anyhow::ensure!(sum.iter().all(|&v| v == 32.0), "gather sum wrong: {}", sum[0]);
+    println!("gather_sum of rows {picks:?} -> {} per lane (on-device reduce) ✓", sum[0]);
+    Ok(())
+}
+
 /// E6: ALU backend comparison — native rust vs the compiled Pallas kernel.
 fn run_alu_compare(args: &Args) -> Result<()> {
     use netdam::alu::{AluBackend, NativeAlu};
@@ -296,10 +367,12 @@ fn run_alu_compare(args: &Args) -> Result<()> {
 fn print_usage() {
     println!(
         "netdam — NetDAM reproduction launcher\n\
-         subcommands: latency | allreduce | incast | multipath | alu | prog | train | info\n\
+         subcommands: latency | allreduce | incast | multipath | alu | prog | mem | train | info\n\
          common flags: --config FILE, --set key=value, --seed N\n\
          allreduce: --algo netdam-ring|halving-doubling|hierarchical|reduce-scatter|\n\
                     all-gather|broadcast|ring-roce|mpi-native (comma list, or `all`)\n\
-         prog:      packet-program demo (build -> verify -> execute); --elements N --ranks N"
+         prog:      packet-program demo (build -> verify -> execute); --elements N --ranks N\n\
+         mem:       pooled-memory demo (lease -> IOMMU -> scatter-gather -> NAK -> gather);\n\
+                    --devices N --bytes B"
     );
 }

@@ -1,0 +1,656 @@
+//! The pooled-memory data plane: GVA-addressed scatter-gather I/O.
+//!
+//! [`MemClient`] is the host-side half of the paper's §2.5/§2.6 memory
+//! pool. A client holds a tenant identity and the pool's
+//! [`InterleaveMap`]; reads, writes and CAS are issued against **global
+//! virtual addresses** and compiled into scatter-gather packet plans over
+//! the per-device extents — one self-clocked in-flight window per device
+//! (reusing the transport's timeout-retransmit reliability), completions
+//! matched by sequence number and read data reassembled in GVA order.
+//!
+//! Access control is *not* checked here: the plan is sent as-is and the
+//! device IOMMUs — programmed by the SDN controller
+//! ([`crate::pool::SdnController::malloc_mapped`]) — enforce the lease.
+//! A denied translation comes back as a wire-level `Nack` whose reason
+//! byte surfaces as a typed [`MemError::Nak`].
+//!
+//! [`MemClient::gather_sum`] is the TensorDIMM-style near-memory gather:
+//! a sparse set of GVA rows is folded with on-device `Simd` adds by one
+//! self-routing packet [`crate::isa::Program`], and only the pooled
+//! result row crosses the host link.
+
+use std::cell::RefCell;
+use std::collections::{HashMap, HashSet, VecDeque};
+use std::fmt;
+use std::rc::Rc;
+
+use crate::iommu::NakReason;
+use crate::isa::registry::MemAccess;
+use crate::isa::{Flags, Instruction, ProgramBuilder, SimdOp, VerifyEnv, MAX_PROGRAM_STEPS};
+use crate::net::{Cluster, InjectCmd, NodeId};
+use crate::pool::{InterleaveMap, TenantId};
+use crate::sim::Engine;
+use crate::wire::packet::MAX_PAYLOAD;
+use crate::wire::{DeviceIp, Packet, Payload, Segment, SrouHeader};
+
+/// Typed failure of a pooled-memory operation.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum MemError {
+    /// A device IOMMU rejected the access and NAK'd it on the wire.
+    Nak {
+        device: DeviceIp,
+        gva: u64,
+        reason: NakReason,
+    },
+    /// Not every op completed (loss beyond the retransmit budget).
+    Incomplete { done: usize, total: usize },
+    /// The plan could not be compiled (bad shape, verifier rejection).
+    Plan(String),
+    /// A response arrived without the expected content.
+    BadResponse { gva: u64 },
+}
+
+impl fmt::Display for MemError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            MemError::Nak {
+                device,
+                gva,
+                reason,
+            } => write!(
+                f,
+                "device {device} NAK'd access at gva {gva:#x}: {reason}"
+            ),
+            MemError::Incomplete { done, total } => {
+                write!(f, "pooled op incomplete: {done}/{total} completions")
+            }
+            MemError::Plan(msg) => write!(f, "plan rejected: {msg}"),
+            MemError::BadResponse { gva } => {
+                write!(f, "malformed response for gva {gva:#x}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for MemError {}
+
+/// One planned packet of a scatter-gather operation.
+struct PlanOp {
+    device: DeviceIp,
+    gva: u64,
+    /// For reads: destination offset in the reassembly buffer.
+    read_off: Option<usize>,
+    len: usize,
+    pkt: Packet,
+    reliable: bool,
+}
+
+/// Per-device pending queue entry.
+struct Pending {
+    seq: u64,
+    gva: u64,
+    pkt: Packet,
+    reliable: bool,
+}
+
+/// Windowing state shared with the completion hook.
+struct Shared {
+    queues: Vec<VecDeque<Pending>>,
+    /// seq → (device slot, gva) of the in-flight op.
+    inflight: HashMap<u64, (usize, u64)>,
+    done: usize,
+    cas: Option<(u64, bool)>,
+    nak: Option<(DeviceIp, u64, u8)>,
+}
+
+#[derive(Default)]
+struct RunOut {
+    data: Vec<u8>,
+    cas: Option<(u64, bool)>,
+}
+
+/// A tenant's handle onto the pooled-memory data plane.
+pub struct MemClient {
+    /// Host node injecting the plans (its mailbox collects responses).
+    host: NodeId,
+    host_ip: DeviceIp,
+    /// The tenant this client acts for (device-side enforcement keys on
+    /// the *source IP* binding the controller installed, not this field —
+    /// it documents intent and labels errors).
+    pub tenant: TenantId,
+    map: InterleaveMap,
+    /// In-flight window per device.
+    window: usize,
+}
+
+impl MemClient {
+    pub fn new(host: NodeId, host_ip: DeviceIp, tenant: TenantId, map: InterleaveMap) -> Self {
+        Self {
+            host,
+            host_ip,
+            tenant,
+            map,
+            window: 4,
+        }
+    }
+
+    /// Override the per-device in-flight window (default 4).
+    pub fn with_window(mut self, window: usize) -> Self {
+        self.window = window.max(1);
+        self
+    }
+
+    pub fn map(&self) -> &InterleaveMap {
+        &self.map
+    }
+
+    // ------------------------------------------------------- public ops
+
+    /// Read `len` bytes at `gva`, scatter-gathered across the pool and
+    /// reassembled in GVA order.
+    pub fn read(
+        &self,
+        cl: &mut Cluster,
+        eng: &mut Engine<Cluster>,
+        gva: u64,
+        len: usize,
+    ) -> Result<Vec<u8>, MemError> {
+        let mut ops = Vec::new();
+        for (piece_gva, off, piece_len) in self.pieces(gva, len) {
+            let (device, local) = self.map.translate(piece_gva);
+            let seq = cl.alloc_seq(self.host);
+            let pkt = Packet::new(
+                self.host_ip,
+                seq,
+                SrouHeader::direct(device),
+                Instruction::Read {
+                    addr: local,
+                    len: piece_len as u32,
+                },
+            );
+            ops.push(PlanOp {
+                device,
+                gva: piece_gva,
+                read_off: Some(off),
+                len: piece_len,
+                pkt,
+                reliable: true,
+            });
+        }
+        let out = self.run_plan(cl, eng, ops, len)?;
+        Ok(out.data)
+    }
+
+    /// Write `data` at `gva`, sprayed over the interleaved extents with
+    /// one reliable in-flight window per device.
+    pub fn write(
+        &self,
+        cl: &mut Cluster,
+        eng: &mut Engine<Cluster>,
+        gva: u64,
+        data: &[u8],
+    ) -> Result<(), MemError> {
+        let mut ops = Vec::new();
+        for (piece_gva, off, piece_len) in self.pieces(gva, data.len()) {
+            let (device, local) = self.map.translate(piece_gva);
+            let seq = cl.alloc_seq(self.host);
+            let pkt = Packet::new(
+                self.host_ip,
+                seq,
+                SrouHeader::direct(device),
+                Instruction::Write { addr: local },
+            )
+            .with_flags(Flags(Flags::RELIABLE))
+            .with_payload(Payload::from_bytes(data[off..off + piece_len].to_vec()));
+            ops.push(PlanOp {
+                device,
+                gva: piece_gva,
+                read_off: None,
+                len: piece_len,
+                pkt,
+                reliable: true,
+            });
+        }
+        self.run_plan(cl, eng, ops, 0)?;
+        Ok(())
+    }
+
+    /// Compare-and-swap the u64 at `gva` (must not straddle an interleave
+    /// block). Returns `(old_value, swapped)`.
+    ///
+    /// Caveat (lossy fabrics): if the *response* is lost, the reliable
+    /// retransmit re-executes the CAS on the device; a caller whose first
+    /// attempt actually won then sees `(new, false)` and believes it lost.
+    /// The pool paths in this crate run lossless; a replay-safe CAS needs
+    /// a device-side dedupe keyed on sequence number (ROADMAP).
+    pub fn cas(
+        &self,
+        cl: &mut Cluster,
+        eng: &mut Engine<Cluster>,
+        gva: u64,
+        expected: u64,
+        new: u64,
+    ) -> Result<(u64, bool), MemError> {
+        let block = self.map.block_bytes();
+        if gva % block + 8 > block {
+            return Err(MemError::Plan(format!(
+                "cas at gva {gva:#x} straddles an interleave block"
+            )));
+        }
+        let (device, local) = self.map.translate(gva);
+        let seq = cl.alloc_seq(self.host);
+        let pkt = Packet::new(
+            self.host_ip,
+            seq,
+            SrouHeader::direct(device),
+            Instruction::Cas {
+                addr: local,
+                expected,
+                new,
+            },
+        );
+        // CAS with expected == new is not idempotent (§3.1): send it
+        // unreliably rather than risk a duplicated swap.
+        let reliable = expected != new;
+        let ops = vec![PlanOp {
+            device,
+            gva,
+            read_off: None,
+            len: 8,
+            pkt,
+            reliable,
+        }];
+        let out = self.run_plan(cl, eng, ops, 0)?;
+        out.cas.ok_or(MemError::BadResponse { gva })
+    }
+
+    /// TensorDIMM-style near-memory gather: fold the `rows` (each
+    /// `row_bytes` long, fully inside one interleave block) into a zero
+    /// accumulator with on-device `Simd` adds — one self-routing packet
+    /// program visiting each row's device — and write the pooled sum at
+    /// `dst_gva`. Only the result row ever crosses the host link.
+    pub fn gather_sum(
+        &self,
+        cl: &mut Cluster,
+        eng: &mut Engine<Cluster>,
+        rows: &[u64],
+        row_bytes: usize,
+        dst_gva: u64,
+    ) -> Result<(), MemError> {
+        if rows.is_empty() || rows.len() + 1 > MAX_PROGRAM_STEPS {
+            return Err(MemError::Plan(format!(
+                "gather of {} rows outside 1..={} (program step budget)",
+                rows.len(),
+                MAX_PROGRAM_STEPS - 1
+            )));
+        }
+        let block = self.map.block_bytes();
+        let mut b = ProgramBuilder::new();
+        let mut segs = Vec::with_capacity(rows.len() + 1);
+        for &row in rows.iter().chain(std::iter::once(&dst_gva)) {
+            if row % block + row_bytes as u64 > block {
+                return Err(MemError::Plan(format!(
+                    "row at gva {row:#x} straddles an interleave block"
+                )));
+            }
+        }
+        for &row in rows {
+            let (device, local) = self.map.translate(row);
+            b = b.hop(Instruction::Simd {
+                op: SimdOp::Add,
+                addr: local,
+            });
+            segs.push(Segment::to(device));
+        }
+        let (dst_dev, dst_local) = self.map.translate(dst_gva);
+        b = b.hop(Instruction::Write { addr: dst_local });
+        segs.push(Segment::to(dst_dev));
+        let capacity = cl
+            .node_by_ip(dst_dev)
+            .map(|n| cl.device(n).mem_ref().capacity())
+            .unwrap_or(u64::MAX);
+        let env = VerifyEnv {
+            capacity,
+            payload_len: row_bytes,
+            ordered: false,
+            lossless: false, // conservative: require idempotent steps
+            srou_hops: segs.len(),
+            registry: Some(cl.registry.as_ref()),
+        };
+        let prog = b.build(&env).map_err(|e| MemError::Plan(e.to_string()))?;
+        let seq = cl.alloc_seq(self.host);
+        let pkt = Packet::new(
+            self.host_ip,
+            seq,
+            SrouHeader::through(segs),
+            Instruction::Program(Box::new(prog)),
+        )
+        .with_flags(Flags(Flags::RELIABLE))
+        .with_payload(Payload::from_bytes(vec![0u8; row_bytes]));
+        let ops = vec![PlanOp {
+            device: dst_dev,
+            gva: dst_gva,
+            read_off: None,
+            len: row_bytes,
+            pkt,
+            reliable: true,
+        }];
+        self.run_plan(cl, eng, ops, 0)?;
+        Ok(())
+    }
+
+    // --------------------------------------------------- plan execution
+
+    /// Split `[gva, gva+len)` along interleave blocks and the payload MTU
+    /// into `(piece_gva, range_off, piece_len)` triples, in GVA order.
+    fn pieces(&self, gva: u64, len: usize) -> Vec<(u64, usize, usize)> {
+        let mut out = Vec::new();
+        for e in self.map.scatter(gva, len as u64) {
+            let mut off = 0u64;
+            while off < e.len {
+                let piece = (e.len - off).min(MAX_PAYLOAD as u64) as usize;
+                out.push((
+                    gva + e.range_off + off,
+                    (e.range_off + off) as usize,
+                    piece,
+                ));
+                off += piece as u64;
+            }
+        }
+        out
+    }
+
+    /// Drive a compiled plan to completion: per-device windows, reliable
+    /// injection, completion-hook refill, NAK detection, and (for reads)
+    /// GVA-order reassembly of `read_len` bytes.
+    fn run_plan(
+        &self,
+        cl: &mut Cluster,
+        eng: &mut Engine<Cluster>,
+        ops: Vec<PlanOp>,
+        read_len: usize,
+    ) -> Result<RunOut, MemError> {
+        let total = ops.len();
+        if total == 0 {
+            return Ok(RunOut::default());
+        }
+        // Group ops into per-device slots and remember read placement.
+        let mut slots: Vec<DeviceIp> = Vec::new();
+        let mut queues: Vec<VecDeque<Pending>> = Vec::new();
+        let mut read_of_seq: HashMap<u64, (usize, usize)> = HashMap::new();
+        let mut plan_seqs: HashSet<u64> = HashSet::with_capacity(total);
+        for op in ops {
+            let slot = match slots.iter().position(|&d| d == op.device) {
+                Some(i) => i,
+                None => {
+                    slots.push(op.device);
+                    queues.push(VecDeque::new());
+                    slots.len() - 1
+                }
+            };
+            if let Some(off) = op.read_off {
+                read_of_seq.insert(op.pkt.seq, (off, op.len));
+            }
+            plan_seqs.insert(op.pkt.seq);
+            queues[slot].push_back(Pending {
+                seq: op.pkt.seq,
+                gva: op.gva,
+                pkt: op.pkt,
+                reliable: op.reliable,
+            });
+        }
+        let shared = Rc::new(RefCell::new(Shared {
+            queues,
+            inflight: HashMap::with_capacity(total),
+            done: 0,
+            cas: None,
+            nak: None,
+        }));
+        // Completion hook: one refill per retired op, per-device window.
+        let hook_state = Rc::clone(&shared);
+        let host = self.host;
+        cl.on_completion = Some(Box::new(move |rec| {
+            if rec.node != host {
+                return Vec::new();
+            }
+            let mut s = hook_state.borrow_mut();
+            let Some((slot, gva)) = s.inflight.remove(&rec.seq) else {
+                return Vec::new(); // foreign or duplicate completion
+            };
+            match &rec.instr {
+                Instruction::Nack { reason, .. } => {
+                    if s.nak.is_none() {
+                        s.nak = Some((rec.from, gva, *reason));
+                    }
+                }
+                Instruction::CasResp { old, swapped, .. } => {
+                    s.cas = Some((*old, *swapped));
+                }
+                _ => {}
+            }
+            s.done += 1;
+            if let Some(p) = s.queues[slot].pop_front() {
+                s.inflight.insert(p.seq, (slot, p.gva));
+                return vec![InjectCmd {
+                    origin: host,
+                    pkt: p.pkt,
+                    reliable: p.reliable,
+                }];
+            }
+            Vec::new()
+        }));
+        // Kick the initial per-device windows.
+        let mut kicks = Vec::new();
+        {
+            let mut s = shared.borrow_mut();
+            for slot in 0..s.queues.len() {
+                for _ in 0..self.window {
+                    match s.queues[slot].pop_front() {
+                        Some(p) => {
+                            s.inflight.insert(p.seq, (slot, p.gva));
+                            kicks.push(InjectCmd {
+                                origin: host,
+                                pkt: p.pkt,
+                                reliable: p.reliable,
+                            });
+                        }
+                        None => break,
+                    }
+                }
+            }
+        }
+        for cmd in kicks {
+            cl.inject_cmd(eng, cmd);
+        }
+        eng.run(cl);
+        cl.on_completion = None;
+        let s = Rc::try_unwrap(shared)
+            .ok()
+            .expect("completion hook released")
+            .into_inner();
+        // Drain only *this plan's* responses from the host mailbox —
+        // other traffic the app may be exchanging on the same host node
+        // survives — before any early error return.
+        let mailbox = std::mem::take(&mut cl.host_mut(self.host).mailbox);
+        let (ours, theirs): (Vec<_>, Vec<_>) = mailbox
+            .into_iter()
+            .partition(|(_, pkt)| plan_seqs.contains(&pkt.seq));
+        cl.host_mut(self.host).mailbox = theirs;
+        if let Some((device, gva, reason)) = s.nak {
+            return Err(MemError::Nak {
+                device,
+                gva,
+                reason: NakReason::from_u8(reason),
+            });
+        }
+        if s.done < total {
+            return Err(MemError::Incomplete {
+                done: s.done,
+                total,
+            });
+        }
+        // Reassemble read data in GVA order.
+        let mut data = vec![0u8; read_len];
+        for (_, pkt) in ours {
+            if !matches!(pkt.instr, Instruction::ReadResp { .. }) {
+                continue;
+            }
+            let Some(&(off, len)) = read_of_seq.get(&pkt.seq) else {
+                continue;
+            };
+            if let Some(bytes) = pkt.payload.bytes() {
+                let n = bytes.len().min(len).min(data.len().saturating_sub(off));
+                data[off..off + n].copy_from_slice(&bytes[..n]);
+            }
+            // Phantom payloads (timing-only devices) leave zeros.
+        }
+        Ok(RunOut { data, cas: s.cas })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::{LinkConfig, Topology};
+    use crate::pool::SdnController;
+    use crate::util::bytes::{bytes_to_f32s, f32s_to_bytes};
+
+    /// 4 pool devices + 1 client host, controller programming the fabric.
+    fn world() -> (Cluster, MemClient, SdnController, Vec<crate::net::NodeId>) {
+        let t = Topology::star(0x3E3, 4, 1, LinkConfig::dc_100g());
+        let mut cl = t.cluster;
+        let map = InterleaveMap::paper_default((1..=4).map(DeviceIp::lan).collect());
+        let mut ctl = SdnController::new(map.clone(), 1 << 20);
+        ctl.grant_host(&mut cl, 1, DeviceIp::lan(101));
+        let client = MemClient::new(t.hosts[0], DeviceIp::lan(101), 1, map);
+        (cl, client, ctl, t.devices)
+    }
+
+    #[test]
+    fn pooled_write_read_round_trip() {
+        let (mut cl, client, mut ctl, devices) = world();
+        let a = ctl.malloc_mapped(&mut cl, 1, 64 << 10, true).unwrap();
+        let mut eng: Engine<Cluster> = Engine::new();
+        let data: Vec<u8> = (0..64 << 10).map(|i| (i * 31 % 251) as u8).collect();
+        client.write(&mut cl, &mut eng, a.gva, &data).unwrap();
+        let back = client.read(&mut cl, &mut eng, a.gva, data.len()).unwrap();
+        assert_eq!(back, data, "reassembled in GVA order");
+        // The plan genuinely scattered: every device holds some of it and
+        // runs a programmed (non-identity) IOMMU.
+        for &d in &devices {
+            assert!(cl.device(d).pkts_in > 0);
+            assert_eq!(cl.device(d).iommu_naks, 0);
+        }
+        // Offsets into the middle work too.
+        let mid = client.read(&mut cl, &mut eng, a.gva + 12_000, 20_000).unwrap();
+        assert_eq!(mid[..], data[12_000..32_000]);
+    }
+
+    #[test]
+    fn out_of_lease_read_naks() {
+        let (mut cl, client, mut ctl, devices) = world();
+        let a = ctl.malloc_mapped(&mut cl, 1, 16 << 10, true).unwrap();
+        let mut eng: Engine<Cluster> = Engine::new();
+        // Far past the lease: unmapped on the device.
+        let err = client
+            .read(&mut cl, &mut eng, a.gva + (1 << 19), 64)
+            .unwrap_err();
+        assert!(
+            matches!(err, MemError::Nak { reason: NakReason::Unmapped, .. }),
+            "{err:?}"
+        );
+        let naks: u64 = devices.iter().map(|&d| cl.device(d).iommu_naks).sum();
+        assert!(naks >= 1, "the denial happened on a device, on the wire");
+    }
+
+    #[test]
+    fn readonly_lease_rejects_writes_at_the_device() {
+        let (mut cl, client, mut ctl, devices) = world();
+        let ro = ctl.malloc_mapped(&mut cl, 1, 8192, false).unwrap();
+        let mut eng: Engine<Cluster> = Engine::new();
+        let err = client
+            .write(&mut cl, &mut eng, ro.gva, &[7u8; 64])
+            .unwrap_err();
+        assert!(
+            matches!(err, MemError::Nak { reason: NakReason::WriteDenied, .. }),
+            "{err:?}"
+        );
+        // Reads still fine, and memory was never dirtied.
+        let back = client.read(&mut cl, &mut eng, ro.gva, 64).unwrap();
+        assert_eq!(back, vec![0u8; 64]);
+        let naks: u64 = devices.iter().map(|&d| cl.device(d).iommu_naks).sum();
+        assert!(naks >= 1);
+    }
+
+    #[test]
+    fn cas_through_the_pool() {
+        let (mut cl, client, mut ctl, _) = world();
+        let a = ctl.malloc_mapped(&mut cl, 1, 8192, true).unwrap();
+        let mut eng: Engine<Cluster> = Engine::new();
+        let (old, swapped) = client.cas(&mut cl, &mut eng, a.gva, 0, 42).unwrap();
+        assert_eq!((old, swapped), (0, true));
+        let (old, swapped) = client.cas(&mut cl, &mut eng, a.gva, 0, 43).unwrap();
+        assert_eq!((old, swapped), (42, false), "second CAS sees the swap");
+    }
+
+    #[test]
+    fn gather_sum_reduces_rows_on_device() {
+        let (mut cl, client, mut ctl, _) = world();
+        // 64 rows of 64 f32 each (two interleave blocks → two devices),
+        // plus a result row that lands on a third device.
+        let rows = 64usize;
+        let row_bytes = 64 * 4;
+        let table = ctl
+            .malloc_mapped(&mut cl, 1, (rows * row_bytes) as u64, true)
+            .unwrap();
+        let out = ctl.malloc_mapped(&mut cl, 1, row_bytes as u64, true).unwrap();
+        let mut eng: Engine<Cluster> = Engine::new();
+        let mut bytes = Vec::new();
+        for r in 0..rows {
+            bytes.extend_from_slice(&f32s_to_bytes(&[r as f32; 64]));
+        }
+        client.write(&mut cl, &mut eng, table.gva, &bytes).unwrap();
+        // Rows 3 and 40 live on different devices; the program visits
+        // both and writes the sum on a third.
+        let picks = [3u64, 40, 62];
+        let gvas: Vec<u64> = picks
+            .iter()
+            .map(|&r| table.gva + r * row_bytes as u64)
+            .collect();
+        let (d_a, _) = client.map().translate(gvas[0]);
+        let (d_b, _) = client.map().translate(gvas[1]);
+        let (d_out, _) = client.map().translate(out.gva);
+        assert!(d_a != d_b && d_out != d_a && d_out != d_b, "cross-device gather");
+        client
+            .gather_sum(&mut cl, &mut eng, &gvas, row_bytes, out.gva)
+            .unwrap();
+        let got = client.read(&mut cl, &mut eng, out.gva, row_bytes).unwrap();
+        let lanes = bytes_to_f32s(&got).unwrap();
+        assert_eq!(lanes, vec![105.0f32; 64], "3 + 40 + 62 summed near memory");
+    }
+
+    #[test]
+    fn gather_rejects_overlong_bags() {
+        let (mut cl, client, _ctl, _) = world();
+        let mut eng: Engine<Cluster> = Engine::new();
+        let too_many: Vec<u64> = (0..MAX_PROGRAM_STEPS as u64).map(|i| i * 1024).collect();
+        let err = client
+            .gather_sum(&mut cl, &mut eng, &too_many, 1024, 0)
+            .unwrap_err();
+        assert!(matches!(err, MemError::Plan(_)), "{err:?}");
+    }
+
+    #[test]
+    fn freed_lease_faults_unmapped() {
+        let (mut cl, client, mut ctl, _) = world();
+        let a = ctl.malloc_mapped(&mut cl, 1, 16 << 10, true).unwrap();
+        let mut eng: Engine<Cluster> = Engine::new();
+        client.write(&mut cl, &mut eng, a.gva, &[1u8; 128]).unwrap();
+        ctl.free_mapped(&mut cl, 1, a.gva).unwrap();
+        let err = client.read(&mut cl, &mut eng, a.gva, 128).unwrap_err();
+        assert!(
+            matches!(err, MemError::Nak { reason: NakReason::Unmapped, .. }),
+            "{err:?}"
+        );
+    }
+}

@@ -618,6 +618,28 @@ impl Cluster {
     }
 }
 
+/// The SDN controller's window onto the fabric (paper §2.6): the pool
+/// controller programs device IOMMUs and requester ACLs through this —
+/// the control plane "applying the ACL to each NetDAM".
+impl crate::pool::IommuDirectory for Cluster {
+    fn device_iommu(&mut self, dev: DeviceIp) -> Option<&mut crate::iommu::Iommu> {
+        let id = self.node_by_ip(dev)?;
+        match &mut self.nodes[id] {
+            Node::Device(d) => Some(d.iommu_mut()),
+            _ => None,
+        }
+    }
+
+    fn bind_tenant(&mut self, dev: DeviceIp, host: DeviceIp, tenant: crate::iommu::TenantId) {
+        let Some(id) = self.node_by_ip(dev) else {
+            return;
+        };
+        if let Node::Device(d) = &mut self.nodes[id] {
+            d.bind_tenant(host, tenant);
+        }
+    }
+}
+
 /// Deterministic source-side ECMP hash.
 fn ecmp_hash(src: DeviceIp, dst: DeviceIp, n: usize) -> usize {
     let mut h = src.0 as u64 ^ ((dst.0 as u64) << 32) ^ 0x5bd1_e995;

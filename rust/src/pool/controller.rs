@@ -4,19 +4,38 @@
 //! and translate request to access-control-list and apply to each NetDAM
 //! or in datacenter switch."
 //!
-//! The controller owns the GVA space: tenants `malloc`/`free` ranges, get
-//! back GVAs, and every data-plane access is checked against the ACL
-//! (tenant, range, rw) before translation. A first-fit free-list keeps the
-//! allocator simple and deterministic.
+//! The controller owns the GVA space: tenants `malloc`/`free` ranges and
+//! get back GVAs. A first-fit free-list keeps the allocator simple and
+//! deterministic. Control-plane decisions are *applied to the devices*:
+//! [`SdnController::malloc_mapped`] translates each new lease into
+//! per-device IOMMU programs (map + R/W perms + tenant lease) through an
+//! [`IommuDirectory`], and [`SdnController::grant_host`] installs the
+//! requester-to-tenant ACL binding on every pool device — so the data
+//! plane is enforced by the device IOMMUs (wire-level NAKs), not by
+//! in-process checks. [`SdnController::access`] remains as the host-side
+//! *planning* translation (the same ACL, evaluated early so clients can
+//! compile scatter-gather plans without a round trip).
 
 use std::collections::BTreeMap;
 use std::fmt;
 
+use crate::iommu::{Iommu, Perms};
 use crate::wire::DeviceIp;
 
 use super::interleave::{Extent, InterleaveMap};
 
-pub type TenantId = u32;
+pub use crate::iommu::TenantId;
+
+/// The controller's window onto the fabric's device IOMMUs — implemented
+/// by `net::Cluster` (and by test doubles). Keeps `pool` independent of
+/// the fabric layer.
+pub trait IommuDirectory {
+    /// Mutable access to the IOMMU of the device addressed `dev`.
+    fn device_iommu(&mut self, dev: DeviceIp) -> Option<&mut Iommu>;
+    /// Program the device-side ACL: requests sourced from `host` are
+    /// attributed to `tenant` on device `dev`.
+    fn bind_tenant(&mut self, dev: DeviceIp, host: DeviceIp, tenant: TenantId);
+}
 
 #[derive(Debug, PartialEq)]
 pub enum AllocError {
@@ -24,6 +43,9 @@ pub enum AllocError {
     NotOwned(u64),
     Denied { tenant: TenantId, gva: u64, len: u64 },
     Zero,
+    /// A device IOMMU refused the lease mapping (e.g. it already holds
+    /// foreign-granule mappings). The allocation was rolled back.
+    MapFailed { device: DeviceIp, gva: u64 },
 }
 
 impl fmt::Display for AllocError {
@@ -40,6 +62,10 @@ impl fmt::Display for AllocError {
                 write!(f, "access [{gva:#x}..+{len}) denied for tenant {tenant}")
             }
             AllocError::Zero => write!(f, "zero-byte allocation"),
+            AllocError::MapFailed { device, gva } => write!(
+                f,
+                "device {device} IOMMU refused the lease at gva {gva:#x} (rolled back)"
+            ),
         }
     }
 }
@@ -115,8 +141,10 @@ impl SdnController {
             }
         }
         let Some((start, hole)) = chosen else {
+            // Report what the caller asked for, not the granule-rounded
+            // internal length (the rounded number reads as a corruption).
             return Err(AllocError::Exhausted {
-                requested: len,
+                requested: bytes,
                 largest,
             });
         };
@@ -159,7 +187,86 @@ impl SdnController {
         Ok(())
     }
 
-    /// ACL check + translation for a data-plane access.
+    // --------------------------------------------- device-programmed path
+
+    /// Install the requester ACL for `host` on every pool device: packets
+    /// sourced from `host` are attributed to `tenant` when the device
+    /// IOMMU checks a lease.
+    pub fn grant_host(&self, dir: &mut dyn IommuDirectory, tenant: TenantId, host: DeviceIp) {
+        for &dev in self.map.devices() {
+            dir.bind_tenant(dev, host, tenant);
+        }
+    }
+
+    /// Malloc *and program the fabric*: the lease's per-device local runs
+    /// are mapped (identity PA, lease perms, tenant-fenced) into each
+    /// device's IOMMU, so out-of-lease or permission-violating accesses
+    /// fault **on the device** and surface as wire NAKs. If any device
+    /// refuses the mapping (e.g. its IOMMU already holds foreign-granule
+    /// mappings the controller does not own), the whole operation rolls
+    /// back — already-programmed devices are unmapped and the GVA range
+    /// is released — and a typed [`AllocError::MapFailed`] is returned.
+    pub fn malloc_mapped(
+        &mut self,
+        dir: &mut dyn IommuDirectory,
+        tenant: TenantId,
+        bytes: u64,
+        writable: bool,
+    ) -> Result<Allocation, AllocError> {
+        let a = self.malloc(tenant, bytes, writable)?;
+        let perms = if writable { Perms::RW } else { Perms::RO };
+        let page_bits = self.granule.trailing_zeros();
+        let runs = self.map.device_runs(a.gva, a.len);
+        for (idx, &(dev, local, len)) in runs.iter().enumerate() {
+            let mapped = match dir.device_iommu(dev) {
+                Some(mmu) => {
+                    if mmu.is_identity() {
+                        // First lease on this device: adopt the granule.
+                        let _ = mmu.set_page_bits(page_bits);
+                    }
+                    mmu.page_size() == self.granule
+                        && mmu.map_leased(local, local, len, perms, Some(tenant)).is_ok()
+                }
+                // Device absent from this fabric view: nothing to program.
+                None => true,
+            };
+            if !mapped {
+                for &(dev2, local2, len2) in &runs[..idx] {
+                    if let Some(mmu) = dir.device_iommu(dev2) {
+                        let _ = mmu.unmap(local2, len2);
+                    }
+                }
+                self.free(tenant, a.gva).expect("fresh allocation is owned");
+                return Err(AllocError::MapFailed { device: dev, gva: a.gva });
+            }
+        }
+        Ok(a)
+    }
+
+    /// Free a lease and unmap it from every device IOMMU it touched.
+    /// Unmap failures (a device vanished or was reprogrammed out-of-band)
+    /// are tolerated: the GVA range is released either way.
+    pub fn free_mapped(
+        &mut self,
+        dir: &mut dyn IommuDirectory,
+        tenant: TenantId,
+        gva: u64,
+    ) -> Result<(), AllocError> {
+        let runs = match self.allocs.get(&gva) {
+            Some(a) if a.tenant == tenant => self.map.device_runs(a.gva, a.len),
+            _ => return Err(AllocError::NotOwned(gva)),
+        };
+        self.free(tenant, gva)?;
+        for (dev, local, len) in runs {
+            if let Some(mmu) = dir.device_iommu(dev) {
+                let _ = mmu.unmap(local, len);
+            }
+        }
+        Ok(())
+    }
+
+    /// ACL check + translation for a data-plane access (host-side plan
+    /// compilation; the device IOMMU re-enforces the same decision).
     pub fn access(
         &self,
         tenant: TenantId,
@@ -187,10 +294,27 @@ impl SdnController {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::collections::HashMap;
 
     fn ctl() -> SdnController {
         let map = InterleaveMap::paper_default((1..=4).map(DeviceIp::lan).collect());
         SdnController::new(map, 1 << 20) // 1 MiB per device → 4 MiB pool
+    }
+
+    /// Test double: an IOMMU per device, no fabric.
+    #[derive(Default)]
+    struct FakeFabric {
+        iommus: HashMap<DeviceIp, Iommu>,
+        bindings: Vec<(DeviceIp, DeviceIp, TenantId)>,
+    }
+
+    impl IommuDirectory for FakeFabric {
+        fn device_iommu(&mut self, dev: DeviceIp) -> Option<&mut Iommu> {
+            Some(self.iommus.entry(dev).or_default())
+        }
+        fn bind_tenant(&mut self, dev: DeviceIp, host: DeviceIp, tenant: TenantId) {
+            self.bindings.push((dev, host, tenant));
+        }
     }
 
     #[test]
@@ -243,12 +367,15 @@ mod tests {
     }
 
     #[test]
-    fn exhaustion_reports_largest_hole() {
+    fn exhaustion_reports_callers_request_and_largest_hole() {
         let mut c = ctl();
         let cap = c.capacity();
         c.malloc(1, cap, true).unwrap();
-        match c.malloc(1, 8192, true) {
-            Err(AllocError::Exhausted { largest, .. }) => assert_eq!(largest, 0),
+        match c.malloc(1, 100, true) {
+            Err(AllocError::Exhausted { requested, largest }) => {
+                assert_eq!(requested, 100, "caller bytes, not granule-rounded");
+                assert_eq!(largest, 0);
+            }
             other => panic!("{other:?}"),
         }
     }
@@ -271,5 +398,85 @@ mod tests {
         let ext = c.access(1, a.gva, a.len, true).unwrap();
         let devs: std::collections::HashSet<_> = ext.iter().map(|e| e.device).collect();
         assert_eq!(devs.len(), 4, "interleaving uses the whole pool");
+    }
+
+    #[test]
+    fn malloc_mapped_programs_every_touched_device() {
+        let mut c = ctl();
+        let mut fab = FakeFabric::default();
+        let a = c.malloc_mapped(&mut fab, 5, 8 * 8192, true).unwrap();
+        assert_eq!(fab.iommus.len(), 4);
+        for (dev, local, len) in c.map().device_runs(a.gva, a.len) {
+            let mmu = fab.iommus.get(&dev).unwrap();
+            assert_eq!(mmu.page_size(), 8192, "pool granule adopted");
+            use crate::iommu::Access;
+            // The lease translates for its tenant, identity-mapped...
+            assert_eq!(
+                mmu.translate_req(local, len as usize, Access::Write, Some(5)),
+                Ok(local)
+            );
+            // ...and fences everyone else.
+            assert!(mmu.translate_req(local, 8, Access::Read, Some(6)).is_err());
+        }
+        // Free unmaps: the old lease faults afterwards.
+        c.free_mapped(&mut fab, 5, a.gva).unwrap();
+        for (dev, local, _) in c.map().device_runs(a.gva, a.len) {
+            let mmu = fab.iommus.get(&dev).unwrap();
+            use crate::iommu::Access;
+            assert!(mmu.is_identity() || mmu.translate_req(local, 8, Access::Read, Some(5)).is_err());
+        }
+    }
+
+    #[test]
+    fn readonly_lease_maps_ro_pages() {
+        let mut c = ctl();
+        let mut fab = FakeFabric::default();
+        let a = c.malloc_mapped(&mut fab, 3, 8192, false).unwrap();
+        let (dev, local) = c.locate(a.gva);
+        let mmu = fab.iommus.get(&dev).unwrap();
+        use crate::iommu::Access;
+        assert!(mmu.translate_req(local, 8, Access::Read, Some(3)).is_ok());
+        assert!(mmu.translate_req(local, 8, Access::Write, Some(3)).is_err());
+    }
+
+    #[test]
+    fn foreign_granule_iommu_fails_typed_and_rolls_back() {
+        let mut c = ctl();
+        let mut fab = FakeFabric::default();
+        // Device 2's IOMMU already holds a user mapping at the default
+        // 2 MiB granule — the controller does not own it.
+        use crate::iommu::IOMMU_PAGE_SIZE;
+        fab.iommus
+            .entry(DeviceIp::lan(2))
+            .or_default()
+            .map(0, 0, IOMMU_PAGE_SIZE, crate::iommu::Perms::RW)
+            .unwrap();
+        let err = c.malloc_mapped(&mut fab, 1, 8 * 8192, true).unwrap_err();
+        assert!(
+            matches!(err, AllocError::MapFailed { device, .. } if device == DeviceIp::lan(2)),
+            "{err:?}"
+        );
+        // Rolled back: no bytes held, device 1's trial mapping undone,
+        // and the full pool is allocatable again once dev 2 is excluded.
+        assert_eq!(c.allocated_bytes(), 0);
+        use crate::iommu::Access;
+        assert!(fab
+            .iommus
+            .get(&DeviceIp::lan(1))
+            .unwrap()
+            .translate_req(0, 8, Access::Read, Some(1))
+            .is_err());
+    }
+
+    #[test]
+    fn grant_host_binds_on_every_device() {
+        let c = ctl();
+        let mut fab = FakeFabric::default();
+        c.grant_host(&mut fab, 9, DeviceIp::lan(101));
+        assert_eq!(fab.bindings.len(), 4);
+        assert!(fab
+            .bindings
+            .iter()
+            .all(|&(_, host, t)| host == DeviceIp::lan(101) && t == 9));
     }
 }

@@ -45,6 +45,11 @@ impl InterleaveMap {
         self.devices.len()
     }
 
+    /// The participating devices, in interleave order.
+    pub fn devices(&self) -> &[DeviceIp] {
+        &self.devices
+    }
+
     pub fn block_bytes(&self) -> u64 {
         self.block
     }
@@ -87,6 +92,27 @@ impl InterleaveMap {
             off += chunk;
         }
         out
+    }
+
+    /// Per-device contiguous local runs covering `[gva, gva+len)`.
+    ///
+    /// Consecutive blocks of a linear GVA range land on the same device
+    /// exactly every `n` blocks, and their local addresses then advance by
+    /// exactly one block — so each device's share of a linear range is one
+    /// contiguous local run. This is what the SDN controller programs into
+    /// each device IOMMU per lease (one `map_leased` per device).
+    pub fn device_runs(&self, gva: u64, len: u64) -> Vec<(DeviceIp, u64, u64)> {
+        let mut runs: Vec<(DeviceIp, u64, u64)> = Vec::new();
+        for e in self.scatter(gva, len) {
+            if let Some(r) = runs.iter_mut().rev().find(|r| r.0 == e.device) {
+                if r.1 + r.2 == e.local_addr {
+                    r.2 += e.len;
+                    continue;
+                }
+            }
+            runs.push((e.device, e.local_addr, e.len));
+        }
+        runs
     }
 
     /// Total pool capacity given per-device capacity.
@@ -155,6 +181,29 @@ mod tests {
         }
         assert_eq!(per.len(), 4);
         assert!(per.values().all(|&v| v == 16 * 8192));
+    }
+
+    #[test]
+    fn device_runs_merge_to_one_run_per_device() {
+        let m = map();
+        prop::check(|rng, _| {
+            let gva = rng.next_below(1 << 28) / 8192 * 8192;
+            let len = (1 + rng.next_below(64)) * 8192;
+            let runs = m.device_runs(gva, len);
+            // At most one run per device, and they tile the range.
+            let devs: std::collections::HashSet<_> = runs.iter().map(|r| r.0).collect();
+            assert_eq!(devs.len(), runs.len(), "one contiguous run per device");
+            assert_eq!(runs.iter().map(|r| r.2).sum::<u64>(), len);
+            for (dev, local, rlen) in &runs {
+                assert_eq!(local % 8192, 0);
+                assert_eq!(rlen % 8192, 0);
+                // Every block of the run translates back into the range.
+                for b in 0..rlen / 8192 {
+                    let gva_back = m.inverse(*dev, local + b * 8192).unwrap();
+                    assert!(gva_back >= gva && gva_back < gva + len);
+                }
+            }
+        });
     }
 
     #[test]

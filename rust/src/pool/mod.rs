@@ -9,9 +9,15 @@
 //! * [`interleave::InterleaveMap`] — the GVA ↔ (device, local) bijection.
 //! * [`controller::SdnController`] — the SDN-controller-as-MMU of §2.6:
 //!   malloc/free over the pool, access-control lists, address translation.
+//!   `malloc_mapped`/`free_mapped`/`grant_host` *program the fabric*: each
+//!   lease becomes per-device IOMMU mappings (through [`IommuDirectory`],
+//!   implemented by `net::Cluster`), so enforcement happens on the device
+//!   and denials surface as wire-level NAKs.
+//!
+//! The host-side data plane over this pool is [`crate::mem::MemClient`].
 
 pub mod controller;
 pub mod interleave;
 
-pub use controller::{AllocError, Allocation, SdnController, TenantId};
+pub use controller::{AllocError, Allocation, IommuDirectory, SdnController, TenantId};
 pub use interleave::{Extent, InterleaveMap};

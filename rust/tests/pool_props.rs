@@ -1,0 +1,147 @@
+//! Property tests for the SDN controller's allocator + ACL (§2.6),
+//! driven by the in-tree `util::prop` harness: random malloc/free
+//! interleavings never overlap, freed space always coalesces back to a
+//! canonical free list, and the ACL agrees with the live lease set.
+
+use netdam::pool::{AllocError, Allocation, InterleaveMap, SdnController};
+use netdam::util::prop;
+use netdam::util::Xoshiro256;
+use netdam::wire::DeviceIp;
+
+const BLOCK: u64 = 8192;
+
+fn ctl() -> SdnController {
+    let map = InterleaveMap::paper_default((1..=4).map(DeviceIp::lan).collect());
+    SdnController::new(map, 1 << 20) // 4 MiB pool
+}
+
+fn overlap(a: &Allocation, b: &Allocation) -> bool {
+    a.gva < b.gva + b.len && b.gva < a.gva + a.len
+}
+
+/// Random malloc/free interleaving; returns the live allocation set.
+fn random_walk(rng: &mut Xoshiro256, c: &mut SdnController, steps: usize) -> Vec<Allocation> {
+    let mut live: Vec<Allocation> = Vec::new();
+    for _ in 0..steps {
+        if rng.chance(0.6) || live.is_empty() {
+            let tenant = (1 + rng.next_below(3)) as u32;
+            let bytes = 1 + rng.next_below(64 * BLOCK);
+            let writable = rng.chance(0.7);
+            match c.malloc(tenant, bytes, writable) {
+                Ok(a) => {
+                    assert_eq!(a.len % BLOCK, 0, "granule-rounded");
+                    assert!(a.len >= bytes, "covers the request");
+                    live.push(a);
+                }
+                Err(AllocError::Exhausted { requested, .. }) => {
+                    assert_eq!(requested, bytes, "reports the caller's bytes");
+                }
+                Err(e) => panic!("unexpected malloc error {e:?}"),
+            }
+        } else {
+            let idx = rng.next_below(live.len() as u64) as usize;
+            let a = live.swap_remove(idx);
+            c.free(a.tenant, a.gva).expect("owned free succeeds");
+        }
+    }
+    live
+}
+
+#[test]
+fn interleavings_never_overlap_and_stay_in_bounds() {
+    prop::check(|rng, _case| {
+        let mut c = ctl();
+        let live = random_walk(rng, &mut c, 60);
+        for (i, a) in live.iter().enumerate() {
+            assert!(a.gva + a.len <= c.capacity(), "in bounds");
+            for b in &live[..i] {
+                assert!(!overlap(a, b), "live allocations overlap: {a:?} / {b:?}");
+            }
+        }
+        let total: u64 = live.iter().map(|a| a.len).sum();
+        assert_eq!(total, c.allocated_bytes());
+    });
+}
+
+#[test]
+fn freeing_everything_coalesces_to_one_canonical_hole() {
+    prop::check(|rng, _case| {
+        let mut c = ctl();
+        let mut live = random_walk(rng, &mut c, 40);
+        // Free in random order; holes must coalesce back to one span.
+        while !live.is_empty() {
+            let idx = rng.next_below(live.len() as u64) as usize;
+            let a = live.swap_remove(idx);
+            c.free(a.tenant, a.gva).unwrap();
+        }
+        assert_eq!(c.allocated_bytes(), 0);
+        // The canonical free list = one hole of the whole capacity: a
+        // full-pool malloc succeeds again.
+        let whole = c.capacity();
+        let big = c.malloc(9, whole, true).expect("free list re-coalesced");
+        assert_eq!((big.gva, big.len), (0, whole));
+    });
+}
+
+#[test]
+fn acl_agrees_with_the_live_lease_set() {
+    prop::check(|rng, _case| {
+        let mut c = ctl();
+        let live = random_walk(rng, &mut c, 40);
+        // Random probes: the controller's answer must match the model
+        // derived from the returned allocations.
+        for _ in 0..40 {
+            let tenant = (1 + rng.next_below(4)) as u32;
+            let gva = rng.next_below(c.capacity());
+            let len = 1 + rng.next_below(4 * BLOCK);
+            let write = rng.chance(0.5);
+            let model_ok = live.iter().any(|a| {
+                gva >= a.gva
+                    && gva + len <= a.gva + a.len
+                    && a.tenant == tenant
+                    && (!write || a.writable)
+            });
+            let got = c.access(tenant, gva, len, write);
+            assert_eq!(
+                got.is_ok(),
+                model_ok,
+                "ACL mismatch for tenant {tenant} at [{gva:#x}..+{len}) write={write}"
+            );
+            if let Ok(extents) = got {
+                // Translation covers the probe exactly, in order.
+                let covered: u64 = extents.iter().map(|e| e.len).sum();
+                assert_eq!(covered, len);
+            }
+        }
+        // Probing a foreign tenant's exact lease is always denied.
+        for a in &live {
+            let foreign = a.tenant + 100;
+            assert!(matches!(
+                c.access(foreign, a.gva, a.len, false),
+                Err(AllocError::Denied { .. })
+            ));
+        }
+    });
+}
+
+#[test]
+fn free_rejects_foreign_and_unknown_gvas() {
+    prop::check(|rng, _case| {
+        let mut c = ctl();
+        let live = random_walk(rng, &mut c, 30);
+        for a in &live {
+            // Wrong tenant cannot free.
+            assert_eq!(
+                c.free(a.tenant + 100, a.gva),
+                Err(AllocError::NotOwned(a.gva))
+            );
+            // Interior addresses are not allocation handles.
+            if a.len > BLOCK {
+                assert_eq!(
+                    c.free(a.tenant, a.gva + BLOCK),
+                    Err(AllocError::NotOwned(a.gva + BLOCK))
+                );
+            }
+        }
+    });
+}
