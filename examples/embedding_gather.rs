@@ -4,12 +4,15 @@
 //! A recommendation model's embedding table lives sharded across the
 //! NetDAM pool (block interleaving spreads rows over every device). For
 //! each lookup *bag* (a sparse set of row indices), the host does not
-//! pull every row over the network: `MemClient::gather_sum` compiles the
+//! pull every row over the network: `MemBatch::gather_sum` compiles the
 //! bag into ONE self-routing packet program that visits each row's
 //! device, folds the row into the packet accumulator with an on-device
 //! `Simd` add, and writes the pooled sum into a result slot — only the
 //! result row ever crosses the host link, a `bag_size:1` traffic
 //! reduction exactly like TensorDIMM's near-memory embedding lookups.
+//! All bags are submitted into one pipelined `MemBatch`, so every bag's
+//! program is in flight concurrently under the shared window engine
+//! (the old API ran one bag per blocking call).
 //!
 //! ```sh
 //! cargo run --release --example embedding_gather
@@ -57,10 +60,12 @@ fn main() -> Result<()> {
         ctl.map().n_devices()
     );
 
-    // Random bags; each gathers BAG rows near memory.
+    // Random bags; each gathers BAG rows near memory. All bags ride ONE
+    // pipelined batch: every bag's program is in flight at once under
+    // the per-device windows of the shared transport engine.
     let mut rng = Xoshiro256::seed_from(0xBA6);
     let mut expect = Vec::with_capacity(N_BAGS);
-    let t0 = eng.now();
+    let mut batch = client.batch();
     for b in 0..N_BAGS {
         let rows: Vec<u64> = (0..BAG).map(|_| rng.next_below(N_ROWS as u64)).collect();
         let gvas: Vec<u64> = rows
@@ -68,9 +73,11 @@ fn main() -> Result<()> {
             .map(|&r| table.gva + r * ROW_BYTES as u64)
             .collect();
         let dst = results.gva + (b * ROW_BYTES) as u64;
-        client.gather_sum(&mut cl, &mut eng, &gvas, ROW_BYTES, dst)?;
+        batch.gather_sum(&mut cl, &gvas, ROW_BYTES, dst)?;
         expect.push(rows.iter().sum::<u64>() as f32);
     }
+    let t0 = eng.now();
+    batch.run(&mut cl, &mut eng)?;
     let gather_ns = eng.now() - t0;
 
     // Pull only the pooled results back and verify every lane.
@@ -86,7 +93,7 @@ fn main() -> Result<()> {
     let naive = N_BAGS * BAG * ROW_BYTES;
     let pulled = N_BAGS * ROW_BYTES;
     println!(
-        "{N_BAGS} bags x {BAG} rows gathered in {} — host pulled {pulled} B instead of {naive} B ({}x reduction) ✓",
+        "{N_BAGS} bags x {BAG} rows gathered in {} (one pipelined batch) — host pulled {pulled} B instead of {naive} B ({}x reduction) ✓",
         fmt_ns(gather_ns),
         naive / pulled
     );

@@ -7,6 +7,13 @@
 //! retransmit storm) vs the same bytes interleaved over the pool and
 //! pulled back with paced READs, all through controller-programmed
 //! IOMMUs.
+//! Grid 3: paced vs unpaced pull-back — the same aggregate read through
+//! `MemClient` with the window engine's token bucket at several rates
+//! (paced goodput must track the configured rate, unpaced the roofline).
+//! Grid 4: pipelined-batch-depth sweep — N fixed-size reads issued
+//! through `MemBatch` at varying batch depth (1 = the old one-call-at-a-
+//! time API; deeper batches keep every device window full across
+//! logical ops).
 //!
 //! Writes the machine-readable artifact `BENCH_mempool.json`. Set
 //! `NETDAM_BENCH_SMOKE=1` for a tiny CI-sized run.
@@ -73,6 +80,111 @@ fn main() {
         }
     }
     println!("## {bytes} B scatter-gather vs pool width\n\n{}", table.render());
+
+    // Grid 3: paced vs unpaced pull-back over a 4-device pool.
+    let pull_bytes = if smoke { 256 << 10 } else { 2 << 20 };
+    let mut table = Table::new(&["pull mode", "elapsed", "goodput Gbit/s"]);
+    for (label, pace_gbps) in [
+        ("unpaced", None),
+        ("paced 50 Gbit/s", Some(50.0)),
+        ("paced 92 Gbit/s", Some(92.0)),
+    ] {
+        let t = Topology::star(0xACED_0711, 4, 1, LinkConfig::dc_100g());
+        let mut cl = t.cluster;
+        let mut eng: Engine<Cluster> = Engine::new();
+        let map = InterleaveMap::paper_default((1..=4).map(DeviceIp::lan).collect());
+        let mut ctl = SdnController::new(map, 2 << 30);
+        ctl.grant_host(&mut cl, 1, DeviceIp::lan(101));
+        let lease = ctl
+            .malloc_mapped(&mut cl, 1, pull_bytes as u64, true)
+            .expect("pool lease");
+        let writer =
+            MemClient::new(t.hosts[0], DeviceIp::lan(101), 1, ctl.map().clone()).with_window(8);
+        let data = vec![0x3Cu8; pull_bytes];
+        writer
+            .write(&mut cl, &mut eng, lease.gva, &data)
+            .expect("seed write");
+        let mut puller =
+            MemClient::new(t.hosts[0], DeviceIp::lan(101), 1, ctl.map().clone()).with_window(8);
+        if let Some(g) = pace_gbps {
+            puller = puller.with_pace(g, 16 << 10);
+        }
+        let t0 = eng.now();
+        let back = puller
+            .read(&mut cl, &mut eng, lease.gva, pull_bytes)
+            .expect("pull-back");
+        let ns = (eng.now() - t0).max(1);
+        assert_eq!(back, data);
+        table.row(&[
+            label.to_string(),
+            fmt_ns(ns),
+            format!("{:.1}", gbps(pull_bytes, ns)),
+        ]);
+        json_rows.push(format!(
+            "    {{\"grid\": \"paced_pull\", \"mode\": \"{label}\", \"bytes\": {pull_bytes}, \
+             \"elapsed_ns\": {ns}, \"gbps\": {:.3}}}",
+            gbps(pull_bytes, ns)
+        ));
+    }
+    println!("## {pull_bytes} B pull-back: paced vs unpaced\n\n{}", table.render());
+
+    // Grid 4: pipelined-batch-depth sweep (N reads via MemBatch).
+    let n_reads = if smoke { 8 } else { 32 };
+    let chunk = 64 << 10;
+    let depths: &[usize] = if smoke { &[1, 4] } else { &[1, 2, 4, 8, 16] };
+    {
+        let t = Topology::star(0xBA7C4, 4, 1, LinkConfig::dc_100g());
+        let mut cl = t.cluster;
+        let mut eng: Engine<Cluster> = Engine::new();
+        let map = InterleaveMap::paper_default((1..=4).map(DeviceIp::lan).collect());
+        let mut ctl = SdnController::new(map, 2 << 30);
+        ctl.grant_host(&mut cl, 1, DeviceIp::lan(101));
+        let lease = ctl
+            .malloc_mapped(&mut cl, 1, (n_reads * chunk) as u64, true)
+            .expect("pool lease");
+        let client =
+            MemClient::new(t.hosts[0], DeviceIp::lan(101), 1, ctl.map().clone()).with_window(8);
+        let data: Vec<u8> = (0..n_reads * chunk).map(|i| (i % 253) as u8).collect();
+        client
+            .write(&mut cl, &mut eng, lease.gva, &data)
+            .expect("seed write");
+        let mut table = Table::new(&["batch depth", "elapsed", "goodput Gbit/s"]);
+        for &depth in depths {
+            let t0 = eng.now();
+            let mut i = 0usize;
+            while i < n_reads {
+                let take = depth.min(n_reads - i);
+                let mut batch = client.batch();
+                let handles: Vec<_> = (0..take)
+                    .map(|k| {
+                        batch.read(&mut cl, lease.gva + ((i + k) * chunk) as u64, chunk)
+                    })
+                    .collect();
+                let mut res = batch.run(&mut cl, &mut eng).expect("batch run");
+                for (k, h) in handles.into_iter().enumerate() {
+                    let got = res.take_read(h).expect("read buffer");
+                    let off = (i + k) * chunk;
+                    assert_eq!(got[..], data[off..off + chunk], "read {}", i + k);
+                }
+                i += take;
+            }
+            let ns = (eng.now() - t0).max(1);
+            table.row(&[
+                depth.to_string(),
+                fmt_ns(ns),
+                format!("{:.1}", gbps(n_reads * chunk, ns)),
+            ]);
+            json_rows.push(format!(
+                "    {{\"grid\": \"batch_depth\", \"depth\": {depth}, \"reads\": {n_reads}, \
+                 \"chunk\": {chunk}, \"elapsed_ns\": {ns}, \"gbps\": {:.3}}}",
+                gbps(n_reads * chunk, ns)
+            ));
+        }
+        println!(
+            "## {n_reads} x {chunk} B reads vs pipelined batch depth\n\n{}",
+            table.render()
+        );
+    }
 
     // E3: direct single-device incast vs the interleaved pool path.
     let cfg = E3Config {

@@ -8,10 +8,13 @@
 //!   (ring chains, halving-doubling exchanges, hierarchical two-level
 //!   plans, ...), expressed as [`ScheduledOp`]s, or — for the host
 //!   baselines — as installed [`crate::net::App`]s;
-//! * the [`Driver`]: one engine-facing loop that owns sequence
-//!   allocation, the self-clocked per-rank window, reliability setup,
-//!   completion matching and dedupe, timeout/retransmit accounting, and
-//!   [`CollectiveReport`] production.
+//! * the [`Driver`]: sequence allocation, phase sequencing, reliability
+//!   setup, and [`CollectiveReport`] production, with all windowed I/O —
+//!   the self-clocked per-rank window, reliable injection, completion
+//!   matching and dedupe — delegated to the shared
+//!   [`crate::transport::WindowEngine`] (ops keyed by
+//!   `CompletionKey::DoneId`; the pooled-memory client drives the same
+//!   engine keyed by sequence number).
 //!
 //! Adding a new collective therefore means writing a planner, not another
 //! copy of the windowing/completion state machine — the refactor the
@@ -30,10 +33,6 @@
 //! construction, unlike the single-phase NetDAM ring whose freedom from
 //! barriers is exactly the paper's Figure 7 contrast.
 
-use std::cell::RefCell;
-use std::collections::{HashMap, HashSet, VecDeque};
-use std::rc::Rc;
-
 use anyhow::{ensure, Result};
 
 use crate::alu::block_hash;
@@ -41,9 +40,9 @@ use crate::isa::registry::MemAccess;
 use crate::isa::{
     Flags, Instruction, ProgramBuilder, ProgramError, SimdOp, VerifyEnv,
 };
-use crate::net::{Cluster, InjectCmd, NodeId};
+use crate::net::{Cluster, NodeId};
 use crate::sim::{Engine, SimTime};
-use crate::transport::ReliabilityTable;
+use crate::transport::{CompletionKey, ReliabilityTable, WindowEngine, WindowedOp};
 use crate::wire::{DeviceIp, Packet, Payload};
 
 use super::halving_doubling::HalvingDoubling;
@@ -156,29 +155,7 @@ impl DriverOutcome {
     }
 }
 
-/// Per-phase windowing state shared with the completion hook.
-struct PhaseState {
-    /// Per-rank FIFO of not-yet-injected ops.
-    queues: Vec<VecDeque<(u32, Packet)>>,
-    origin: Vec<NodeId>,
-    rank_of: HashMap<u32, usize>,
-    done: HashSet<u32>,
-    last_done: SimTime,
-    reliable: bool,
-}
-
-impl PhaseState {
-    fn next_cmd(&mut self, rank: usize) -> Option<InjectCmd> {
-        let (_, pkt) = self.queues[rank].pop_front()?;
-        Some(InjectCmd {
-            origin: self.origin[rank],
-            pkt,
-            reliable: self.reliable,
-        })
-    }
-}
-
-/// The shared engine-facing loop. See the module docs.
+/// The collective front of the shared window engine. See the module docs.
 pub struct Driver;
 
 impl Driver {
@@ -224,67 +201,32 @@ impl Driver {
                         .checked_add(n_ops as u32)
                         .expect("completion id space exhausted");
                     let n_ranks = devices.len();
-                    let mut queues: Vec<VecDeque<(u32, Packet)>> =
-                        vec![VecDeque::new(); n_ranks];
-                    let mut rank_of = HashMap::with_capacity(n_ops);
+                    // Lower the schedule onto the shared window engine:
+                    // one slot per rank, completions keyed by done-id
+                    // (the engine rejects duplicate ids), seqs allocated
+                    // up front from each rank's device.
+                    let mut wops = Vec::with_capacity(n_ops);
                     for mut op in ops {
                         ensure!(op.rank < n_ranks, "op rank {} out of range", op.rank);
                         op.pkt.seq = cl.alloc_seq(devices[op.rank]);
-                        let prev = rank_of.insert(op.done_id, op.rank);
-                        ensure!(prev.is_none(), "duplicate completion id {}", op.done_id);
-                        queues[op.rank].push_back((op.done_id, op.pkt));
+                        wops.push(WindowedOp {
+                            slot: op.rank,
+                            origin: devices[op.rank],
+                            key: CompletionKey::DoneId(op.done_id),
+                            tag: op.done_id as u64,
+                            reliable: spec.reliable,
+                            // Collectives self-clock off completions and
+                            // never run paced; skip the per-op header
+                            // encode a wire_bytes() charge would cost.
+                            pace_bytes: 0,
+                            pkt: op.pkt,
+                        });
                     }
-                    let state = Rc::new(RefCell::new(PhaseState {
-                        queues,
-                        origin: devices.to_vec(),
-                        rank_of,
-                        done: HashSet::with_capacity(n_ops),
-                        last_done: eng.now(),
-                        reliable: spec.reliable,
-                    }));
-                    // Completion hook: windowed self-clocking. Every op
-                    // got its seq up front, so the hook only pops queues.
-                    let hook_state = Rc::clone(&state);
-                    cl.on_completion = Some(Box::new(move |rec| {
-                        let Instruction::CollectiveDone { block } = rec.instr else {
-                            return Vec::new();
-                        };
-                        let mut st = hook_state.borrow_mut();
-                        let Some(&rank) = st.rank_of.get(&block) else {
-                            return Vec::new(); // foreign completion id
-                        };
-                        if !st.done.insert(block) {
-                            return Vec::new(); // duplicate Done (retransmit)
-                        }
-                        st.last_done = rec.time;
-                        match st.next_cmd(rank) {
-                            Some(cmd) => vec![cmd],
-                            None => Vec::new(),
-                        }
-                    }));
-                    // Kick the initial window.
-                    let mut kicks = Vec::new();
-                    {
-                        let mut st = state.borrow_mut();
-                        for rank in 0..n_ranks {
-                            for _ in 0..spec.window.max(1) {
-                                match st.next_cmd(rank) {
-                                    Some(cmd) => kicks.push(cmd),
-                                    None => break,
-                                }
-                            }
-                        }
-                    }
-                    for cmd in kicks {
-                        cl.inject_cmd(eng, cmd);
-                    }
-                    eng.run(cl);
-                    cl.on_completion = None;
-                    let st = state.borrow();
+                    let out = WindowEngine::new(spec.window).run(cl, eng, wops)?;
                     ops_total += n_ops;
-                    ops_done += st.done.len();
-                    elapsed = st.last_done;
-                    if st.done.len() < n_ops {
+                    ops_done += out.done;
+                    elapsed = out.last_done;
+                    if out.done < n_ops {
                         break; // later phases would compute on stale data
                     }
                 }

@@ -8,7 +8,7 @@
 //! along the SROU segment list — the §3 fused allreduce and chained DPU
 //! offloads without any bespoke opcode.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 use std::sync::Arc;
 
 use anyhow::{bail, ensure, Result};
@@ -32,6 +32,12 @@ pub struct Emit {
     pub delay: SimTime,
     pub pkt: Packet,
 }
+
+/// Bound on the response-dedupe cache (entries; FIFO eviction). Sized to
+/// comfortably outlive any retransmit window: a retried request arrives
+/// within `timeout × max_retries` of the original, during which a host
+/// issues far fewer than this many non-idempotent ops.
+const RESP_CACHE_CAP: usize = 4096;
 
 /// Side channel out of one program step.
 enum StepNote {
@@ -71,6 +77,13 @@ pub struct NetDamDevice {
     /// Completion queue ("memif" side): packets addressed to this device
     /// that carry responses/completions, for the attached host to drain.
     completions: Vec<(SimTime, Packet)>,
+    /// Response-dedupe cache for non-idempotent ops (CAS), keyed on
+    /// `(src, seq)`: a reliable retransmit of an already-executed request
+    /// replays the original response instead of re-executing — the
+    /// replay-safety half of §3.1 that hash guards cannot provide for
+    /// read-modify-write atomics.
+    resp_cache: HashMap<(DeviceIp, u64), Instruction>,
+    resp_cache_fifo: VecDeque<(DeviceIp, u64)>,
     /// Counters for metrics.
     pub pkts_in: u64,
     pub pkts_out: u64,
@@ -80,6 +93,9 @@ pub struct NetDamDevice {
     pub iommu_naks: u64,
     /// Program steps executed locally (micro-executor throughput).
     pub prog_steps: u64,
+    /// Retransmits answered from the response-dedupe cache (replays that
+    /// would otherwise have re-executed a non-idempotent op).
+    pub resp_cache_hits: u64,
 }
 
 impl NetDamDevice {
@@ -102,12 +118,15 @@ impl NetDamDevice {
             rng,
             seq: 1,
             completions: Vec::new(),
+            resp_cache: HashMap::new(),
+            resp_cache_fifo: VecDeque::new(),
             pkts_in: 0,
             pkts_out: 0,
             drops_hash_guard: 0,
             exec_errors: 0,
             iommu_naks: 0,
             prog_steps: 0,
+            resp_cache_hits: 0,
         }
     }
 
@@ -234,6 +253,18 @@ impl NetDamDevice {
         self.reply_seq(dst, seq, instr).with_payload(payload)
     }
 
+    /// Bounded FIFO insert into the response-dedupe cache.
+    fn cache_response(&mut self, src: DeviceIp, seq: u64, resp: Instruction) {
+        if self.resp_cache.len() >= RESP_CACHE_CAP {
+            if let Some(old) = self.resp_cache_fifo.pop_front() {
+                self.resp_cache.remove(&old);
+            }
+        }
+        if self.resp_cache.insert((src, seq), resp).is_none() {
+            self.resp_cache_fifo.push_back((src, seq));
+        }
+    }
+
     fn execute(&mut self, now: SimTime, pkt: Packet) -> Result<Vec<Emit>> {
         let flags = pkt.flags;
         let src = pkt.src;
@@ -292,23 +323,32 @@ impl NetDamDevice {
                 expected,
                 new,
             } => {
-                let pa = self.xlate(addr, 8, Access::Write)?;
-                let t = fixed + self.mem_ns(8);
-                let cur = u64::from_le_bytes(self.hbm.read(pa, 8)?.try_into().unwrap());
-                let swapped = cur == expected;
-                if swapped {
-                    self.hbm.write(pa, &new.to_le_bytes())?;
-                }
-                let resp = self.reply_seq(
-                    src,
-                    pkt.seq,
-                    Instruction::CasResp {
+                // Replay-safe CAS: if this (src, seq) already executed,
+                // the request is a retransmit whose *response* was lost —
+                // re-executing would swap-fail and lie `swapped=false` to
+                // the winner. Replay the cached original outcome instead.
+                let cached = self.resp_cache.get(&(src, pkt.seq)).cloned();
+                if let Some(replay) = cached {
+                    self.resp_cache_hits += 1;
+                    let resp = self.reply_seq(src, pkt.seq, replay);
+                    emits.push(Emit { delay: fixed, pkt: resp });
+                } else {
+                    let pa = self.xlate(addr, 8, Access::Write)?;
+                    let t = fixed + self.mem_ns(8);
+                    let cur = u64::from_le_bytes(self.hbm.read(pa, 8)?.try_into().unwrap());
+                    let swapped = cur == expected;
+                    if swapped {
+                        self.hbm.write(pa, &new.to_le_bytes())?;
+                    }
+                    let outcome = Instruction::CasResp {
                         addr,
                         old: cur,
                         swapped,
-                    },
-                );
-                emits.push(Emit { delay: t, pkt: resp });
+                    };
+                    self.cache_response(src, pkt.seq, outcome.clone());
+                    let resp = self.reply_seq(src, pkt.seq, outcome);
+                    emits.push(Emit { delay: t, pkt: resp });
+                }
             }
 
             Instruction::Memcopy { src: s, dst, len } => {
@@ -775,17 +815,68 @@ mod tests {
     fn cas_swaps_exactly_once() {
         let mut d = dev(2);
         d.mem().write(8, &42u64.to_le_bytes()).unwrap();
-        let cas = |exp, new| direct(1, 2, Instruction::Cas { addr: 8, expected: exp, new });
-        let e1 = d.handle_packet(0, cas(42, 100));
+        // Distinct ops carry distinct sequence numbers — a repeated
+        // (src, seq) is by definition a retransmit and hits the dedupe
+        // cache instead (see cas_retransmit_replays_original_response).
+        let cas = |seq, exp, new| {
+            Packet::new(
+                ip(1),
+                seq,
+                SrouHeader::direct(ip(2)),
+                Instruction::Cas { addr: 8, expected: exp, new },
+            )
+        };
+        let e1 = d.handle_packet(0, cas(1, 42, 100));
         assert!(matches!(
             e1[0].pkt.instr,
             Instruction::CasResp { swapped: true, old: 42, .. }
         ));
-        let e2 = d.handle_packet(0, cas(42, 200));
+        let e2 = d.handle_packet(0, cas(2, 42, 200));
         assert!(matches!(
             e2[0].pkt.instr,
             Instruction::CasResp { swapped: false, old: 100, .. }
         ));
+    }
+
+    /// The replay-safe CAS contract: a retransmit (same src, same seq)
+    /// after a lost response returns the *original* outcome from the
+    /// dedupe cache — the swap executes exactly once and the winner is
+    /// never told `swapped=false` by its own retry.
+    #[test]
+    fn cas_retransmit_replays_original_response() {
+        let mut d = dev(2);
+        let mk = || direct(1, 2, Instruction::Cas { addr: 8, expected: 0, new: 42 });
+        let e1 = d.handle_packet(0, mk());
+        assert!(matches!(
+            e1[0].pkt.instr,
+            Instruction::CasResp { swapped: true, old: 0, .. }
+        ));
+        // The response was lost; the reliable layer re-presents (src, seq).
+        let e2 = d.handle_packet(0, mk());
+        assert!(
+            matches!(
+                e2[0].pkt.instr,
+                Instruction::CasResp { swapped: true, old: 0, .. }
+            ),
+            "retransmit must replay the original swapped=true, got {:?}",
+            e2[0].pkt.instr
+        );
+        assert_eq!(d.resp_cache_hits, 1);
+        // Memory swapped exactly once.
+        assert_eq!(d.mem().read(8, 8).unwrap(), 42u64.to_le_bytes());
+        // A *new* CAS (fresh seq) executes normally against the new value.
+        let p = Packet::new(
+            ip(1),
+            2,
+            SrouHeader::direct(ip(2)),
+            Instruction::Cas { addr: 8, expected: 0, new: 7 },
+        );
+        let e3 = d.handle_packet(0, p);
+        assert!(matches!(
+            e3[0].pkt.instr,
+            Instruction::CasResp { swapped: false, old: 42, .. }
+        ));
+        assert_eq!(d.resp_cache_hits, 1, "fresh seq is not a replay");
     }
 
     #[test]

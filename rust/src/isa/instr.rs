@@ -328,6 +328,18 @@ impl Instruction {
             User { .. } => false, // unknown semantics: assume not
         }
     }
+
+    /// Is this instruction safe to *retransmit* on the reliable path?
+    /// Every idempotent instruction is; so is a top-level CAS, which is
+    /// not idempotent but **replay-safe**: devices keep a response-dedupe
+    /// cache keyed on `(src, seq)` and answer a retransmit of an
+    /// already-executed CAS with the original `CasResp` instead of
+    /// re-executing the swap. (CAS *inside a program* stays rejected by
+    /// the §3.1 lossy-path verifier — program replays re-present the
+    /// whole chain, and interim hops have no response to dedupe.)
+    pub fn replay_safe(&self, flags: Flags) -> bool {
+        matches!(self, Instruction::Cas { .. }) || self.idempotent(flags)
+    }
 }
 
 #[cfg(test)]
@@ -434,6 +446,10 @@ mod tests {
         assert!(!Simd { op: SimdOp::Add, addr: 0 }.idempotent(Flags(Flags::STORE)));
         assert!(!Cas { addr: 0, expected: 3, new: 3 }.idempotent(f));
         assert!(Cas { addr: 0, expected: 0, new: 1 }.idempotent(f));
+        // ...but top-level CAS is always replay-safe (device response
+        // dedupe answers retransmits without re-executing the swap).
+        assert!(Cas { addr: 0, expected: 3, new: 3 }.replay_safe(f));
+        assert!(!Simd { op: SimdOp::Add, addr: 0 }.replay_safe(Flags(Flags::STORE)));
         // Overlapping memcopy is not idempotent.
         assert!(!Memcopy { src: 0, dst: 8, len: 64 }.idempotent(f));
         assert!(Memcopy { src: 0, dst: 64, len: 64 }.idempotent(f));

@@ -43,6 +43,24 @@
 //! self-routing packet, and DPU offloads chain the same way
 //! (`crypto_write → crc32` — see `netdam prog`).
 //!
+//! # The transport engine (one window under collectives and memory)
+//!
+//! All host-side windowed I/O runs on **one** reliable-injection /
+//! completion-refill state machine: [`transport::WindowEngine`].
+//! The collective [`collectives::driver::Driver`] lowers its schedules
+//! onto engine ops keyed by completion id (`CompletionKey::DoneId` — a
+//! chain retires wherever its program's last hop runs), and the pooled
+//! [`mem::MemClient`] keys by sequence number (`CompletionKey::Seq` —
+//! RDMA-PSN-style request/response correlation); neither module owns a
+//! windowing loop of its own. The engine provides per-slot self-clocked
+//! windows, exactly-once retirement (retransmit echoes are deduped),
+//! NAK surfacing with plan cancellation (queued ops are dropped,
+//! in-flight ops drain, no timers or hooks leak), and a **paced mode**
+//! that wires [`transport::TokenBucket`] into the refill decision — the
+//! §2.5 "sequencing and rate-limited READ" incast cure as an engine
+//! property rather than an app-level loop (E3's pull-back arm is a
+//! `MemClient` paced read).
+//!
 //! # The memory plane (controller → lease → IOMMU → MemClient)
 //!
 //! The §2.5/§2.6 memory pool is a first-class data plane. The SDN
@@ -54,8 +72,13 @@
 //! wire-level `Nack` (see [`iommu::NakReason`]), not an in-process
 //! error. Hosts drive the pool through [`mem::MemClient`]: reads/writes/
 //! CAS against global virtual addresses compile into scatter-gather
-//! packet plans over the interleave extents (one reliable in-flight
-//! window per device, read data reassembled in GVA order), and
+//! packet plans over the interleave extents, driven by the shared
+//! window engine (one reliable in-flight window per device, read data
+//! reassembled in GVA order). [`mem::MemBatch`] pipelines many logical
+//! ops — reads, writes, CAS, multi-bag gathers — through one windowed
+//! run, `MemClient::with_pace` token-bucket-paces a client's plans, and
+//! CAS is **replay-safe**: devices answer retransmits from a `(src,
+//! seq)` response-dedupe cache instead of re-executing the swap.
 //! `gather_sum` lowers a TensorDIMM-style sparse gather onto an
 //! on-device `Simd`-reduce packet program. E3 (incast) and the kvstore/
 //! mempool/embedding examples all run on this path — no raw physical

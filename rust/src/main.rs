@@ -256,7 +256,8 @@ fn run_prog_demo(args: &Args) -> Result<()> {
 }
 
 /// Pooled-memory demo: controller → lease → IOMMU program → MemClient
-/// plan → device enforcement, plus the near-memory embedding gather.
+/// plan → device enforcement, plus the near-memory embedding gather,
+/// pipelined batches, and (with `--paced`) token-bucket READ pacing.
 fn run_mem_demo(args: &Args) -> Result<()> {
     use netdam::mem::{MemClient, MemError};
     use netdam::net::{Cluster, LinkConfig, Topology};
@@ -267,7 +268,11 @@ fn run_mem_demo(args: &Args) -> Result<()> {
 
     let n_devices = args.opt_usize("devices", 4)?.clamp(1, 64);
     let bytes = args.opt_usize("bytes", 256 << 10)?.max(8192);
-    println!("== NetDAM memory plane: GVA data path over {n_devices} devices ==\n");
+    // Per-device in-flight window and optional token-bucket pacing —
+    // both plumb straight into the shared transport window engine.
+    let window = args.opt_usize("window", 4)?.max(1);
+    let paced_gbps = args.opt_f64("paced", 0.0)?;
+    println!("== NetDAM memory plane: GVA data path over {n_devices} devices (window {window}) ==\n");
 
     let t = Topology::star(0x3E3D, n_devices, 1, LinkConfig::dc_100g());
     let mut cl = t.cluster;
@@ -277,7 +282,8 @@ fn run_mem_demo(args: &Args) -> Result<()> {
     let mut ctl = SdnController::new(map, 2 << 30);
     ctl.grant_host(&mut cl, 1, DeviceIp::lan(101));
     let lease = ctl.malloc_mapped(&mut cl, 1, bytes as u64, true)?;
-    let client = MemClient::new(t.hosts[0], DeviceIp::lan(101), 1, ctl.map().clone());
+    let client = MemClient::new(t.hosts[0], DeviceIp::lan(101), 1, ctl.map().clone())
+        .with_window(window);
 
     // Scatter-gather bandwidth through the pool.
     let data: Vec<u8> = (0..bytes).map(|i| (i % 249) as u8).collect();
@@ -306,20 +312,81 @@ fn run_mem_demo(args: &Args) -> Result<()> {
         other => anyhow::bail!("expected a device NAK, got {other:?}"),
     }
 
-    // Near-memory gather: fold 4 rows with on-device Simd adds.
+    // Pipelined batch: several logical ops in one windowed engine run —
+    // two reads of disjoint halves plus a CAS on a scratch word, all in
+    // flight together.
+    let scratch = ctl.malloc_mapped(&mut cl, 1, 8192, true)?;
+    let mut batch = client.batch();
+    let h_lo = batch.read(&mut cl, lease.gva, bytes / 2);
+    let h_hi = batch.read(&mut cl, lease.gva + (bytes / 2) as u64, bytes / 2);
+    let h_cas = batch
+        .cas(&mut cl, scratch.gva, 0, 7)
+        .map_err(|e| anyhow::anyhow!("{e}"))?;
+    let n_pkts = batch.len();
+    let t0 = eng.now();
+    let mut res = batch
+        .run(&mut cl, &mut eng)
+        .map_err(|e| anyhow::anyhow!("{e}"))?;
+    let tb = eng.now() - t0;
+    let lo = res.take_read(h_lo).expect("low half");
+    let hi = res.take_read(h_hi).expect("high half");
+    anyhow::ensure!(lo == data[..bytes / 2] && hi == data[bytes / 2..], "batch read mismatch");
+    let (_, cas_swapped) = res.cas_outcome(h_cas).expect("cas outcome");
+    anyhow::ensure!(cas_swapped, "batched CAS must win on the zeroed scratch word");
+    println!(
+        "pipelined batch: 2 reads + 1 CAS ({n_pkts} packets) in {} ({:.1} Gbit/s) ✓",
+        fmt_ns(tb),
+        gbps(tb)
+    );
+
+    // Optional paced pull-back (the §2.5 incast cure): re-read the lease
+    // through a token-bucket-paced client and show the throttled rate.
+    if paced_gbps > 0.0 {
+        let paced = MemClient::new(t.hosts[0], DeviceIp::lan(101), 1, ctl.map().clone())
+            .with_window(window)
+            .with_pace(paced_gbps, 16 << 10);
+        let t0 = eng.now();
+        let back = paced
+            .read(&mut cl, &mut eng, lease.gva, bytes)
+            .map_err(|e| anyhow::anyhow!("{e}"))?;
+        let tp = eng.now() - t0;
+        anyhow::ensure!(back == data, "paced read mismatch");
+        println!(
+            "paced pull-back at {paced_gbps} Gbit/s budget: {bytes} B in {} ({:.1} Gbit/s achieved)",
+            fmt_ns(tp),
+            gbps(tp)
+        );
+    }
+
+    // Near-memory gather: fold 2 bags of 4 rows each with on-device Simd
+    // adds — both bags pipelined through one batch.
     let rows = ctl.malloc_mapped(&mut cl, 1, 32 * 1024, true)?;
-    let dst = ctl.malloc_mapped(&mut cl, 1, 1024, true)?;
+    let dst = ctl.malloc_mapped(&mut cl, 1, 2048, true)?;
     let mut table = Vec::new();
     for r in 0..32 {
         table.extend_from_slice(&f32s_to_bytes(&vec![r as f32; 256]));
     }
     client.write(&mut cl, &mut eng, rows.gva, &table)?;
-    let picks = [1u64, 2, 8, 21];
-    let gvas: Vec<u64> = picks.iter().map(|&r| rows.gva + r * 1024).collect();
-    client.gather_sum(&mut cl, &mut eng, &gvas, 1024, dst.gva)?;
-    let sum = bytes_to_f32s(&client.read(&mut cl, &mut eng, dst.gva, 1024)?)?;
-    anyhow::ensure!(sum.iter().all(|&v| v == 32.0), "gather sum wrong: {}", sum[0]);
-    println!("gather_sum of rows {picks:?} -> {} per lane (on-device reduce) ✓", sum[0]);
+    let bags = [[1u64, 2, 8, 21], [3, 5, 7, 11]];
+    let mut gb = client.batch();
+    for (b, picks) in bags.iter().enumerate() {
+        let gvas: Vec<u64> = picks.iter().map(|&r| rows.gva + r * 1024).collect();
+        gb.gather_sum(&mut cl, &gvas, 1024, dst.gva + (b * 1024) as u64)
+            .map_err(|e| anyhow::anyhow!("{e}"))?;
+    }
+    gb.run(&mut cl, &mut eng).map_err(|e| anyhow::anyhow!("{e}"))?;
+    for (b, picks) in bags.iter().enumerate() {
+        let want = picks.iter().sum::<u64>() as f32;
+        let sum = bytes_to_f32s(
+            &client.read(&mut cl, &mut eng, dst.gva + (b * 1024) as u64, 1024)?,
+        )?;
+        anyhow::ensure!(
+            sum.iter().all(|&v| v == want),
+            "bag {b} gather sum wrong: {} != {want}",
+            sum[0]
+        );
+        println!("gather_sum bag {b} {picks:?} -> {want} per lane (on-device reduce) ✓");
+    }
     Ok(())
 }
 
@@ -372,7 +439,8 @@ fn print_usage() {
          allreduce: --algo netdam-ring|halving-doubling|hierarchical|reduce-scatter|\n\
                     all-gather|broadcast|ring-roce|mpi-native (comma list, or `all`)\n\
          prog:      packet-program demo (build -> verify -> execute); --elements N --ranks N\n\
-         mem:       pooled-memory demo (lease -> IOMMU -> scatter-gather -> NAK -> gather);\n\
-                    --devices N --bytes B"
+         mem:       pooled-memory demo (lease -> IOMMU -> scatter-gather -> NAK -> pipelined\n\
+                    batch -> multi-bag gather); --devices N --bytes B --window W (per-device\n\
+                    in-flight window) --paced GBPS (token-bucket READ pull-back demo)"
     );
 }

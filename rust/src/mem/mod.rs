@@ -4,32 +4,57 @@
 //! pool. A client holds a tenant identity and the pool's
 //! [`InterleaveMap`]; reads, writes and CAS are issued against **global
 //! virtual addresses** and compiled into scatter-gather packet plans over
-//! the per-device extents — one self-clocked in-flight window per device
-//! (reusing the transport's timeout-retransmit reliability), completions
-//! matched by sequence number and read data reassembled in GVA order.
+//! the per-device extents. All plans are driven by the shared
+//! [`crate::transport::WindowEngine`] — one self-clocked in-flight
+//! window per device (slot), reliable timeout-retransmit injection,
+//! completions matched by sequence number, read data reassembled in GVA
+//! order, and NAKs surfaced as typed [`MemError::Nak`] (a NAK cancels
+//! the rest of the plan: in-flight ops drain, queued ops are dropped,
+//! and no reliability timers or completion hooks are left behind).
+//!
+//! Three client-library layers sit on the engine:
+//!
+//! * **Single ops** — [`MemClient::read`] / [`write`](MemClient::write) /
+//!   [`cas`](MemClient::cas) / [`gather_sum`](MemClient::gather_sum),
+//!   each a one-entry batch.
+//! * **Pipelined batches** — [`MemClient::batch`] returns a [`MemBatch`]
+//!   accumulator: submit any mix of reads/writes/CAS/gathers (each
+//!   returns an [`OpHandle`]), then [`MemBatch::run`] drives *all* of
+//!   them through one windowed run — many logical ops in flight per
+//!   device at once — and [`BatchResult`] redeems the handles. Ops
+//!   within a batch are unordered and concurrent: do not batch an op
+//!   with another op that depends on its effect.
+//! * **Paced mode** — [`MemClient::with_pace`] routes every injection
+//!   through a token bucket in the engine's refill decision (the §2.5
+//!   "sequencing and rate-limited READ" incast cure; reads charge the
+//!   bucket for their *response* bytes). E3's pull-back arm runs on
+//!   exactly this.
 //!
 //! Access control is *not* checked here: the plan is sent as-is and the
 //! device IOMMUs — programmed by the SDN controller
 //! ([`crate::pool::SdnController::malloc_mapped`]) — enforce the lease.
-//! A denied translation comes back as a wire-level `Nack` whose reason
-//! byte surfaces as a typed [`MemError::Nak`].
+//!
+//! CAS is **replay-safe**: devices keep a response-dedupe cache keyed on
+//! `(src, seq)`, so a lost response plus a reliable retransmit replays
+//! the original `CasResp` instead of re-executing the swap — a winner
+//! can no longer be told `swapped=false` by its own retransmit.
 //!
 //! [`MemClient::gather_sum`] is the TensorDIMM-style near-memory gather:
 //! a sparse set of GVA rows is folded with on-device `Simd` adds by one
 //! self-routing packet [`crate::isa::Program`], and only the pooled
-//! result row crosses the host link.
+//! result row crosses the host link. Batched bags pipeline through
+//! [`MemBatch::gather_sum`].
 
-use std::cell::RefCell;
-use std::collections::{HashMap, HashSet, VecDeque};
+use std::collections::{HashMap, HashSet};
 use std::fmt;
-use std::rc::Rc;
 
 use crate::iommu::NakReason;
 use crate::isa::registry::MemAccess;
 use crate::isa::{Flags, Instruction, ProgramBuilder, SimdOp, VerifyEnv, MAX_PROGRAM_STEPS};
-use crate::net::{Cluster, InjectCmd, NodeId};
+use crate::net::{Cluster, NodeId};
 use crate::pool::{InterleaveMap, TenantId};
 use crate::sim::Engine;
+use crate::transport::{CompletionKey, TokenBucket, WindowEngine, WindowedOp};
 use crate::wire::packet::MAX_PAYLOAD;
 use crate::wire::{DeviceIp, Packet, Payload, Segment, SrouHeader};
 
@@ -78,35 +103,28 @@ impl std::error::Error for MemError {}
 struct PlanOp {
     device: DeviceIp,
     gva: u64,
-    /// For reads: destination offset in the reassembly buffer.
+    /// Index of the logical batch entry this packet belongs to.
+    entry: usize,
+    /// For reads: destination offset in the entry's reassembly buffer.
     read_off: Option<usize>,
     len: usize,
     pkt: Packet,
     reliable: bool,
 }
 
-/// Per-device pending queue entry.
-struct Pending {
-    seq: u64,
-    gva: u64,
-    pkt: Packet,
-    reliable: bool,
+/// What one logical batch entry is (drives result redemption).
+enum EntryKind {
+    Read { len: usize },
+    Write,
+    Cas { seq: u64 },
+    Gather,
 }
 
-/// Windowing state shared with the completion hook.
-struct Shared {
-    queues: Vec<VecDeque<Pending>>,
-    /// seq → (device slot, gva) of the in-flight op.
-    inflight: HashMap<u64, (usize, u64)>,
-    done: usize,
-    cas: Option<(u64, bool)>,
-    nak: Option<(DeviceIp, u64, u8)>,
-}
-
-#[derive(Default)]
-struct RunOut {
-    data: Vec<u8>,
-    cas: Option<(u64, bool)>,
+/// Pacing configuration (token-bucket READ/WRITE release).
+#[derive(Debug, Clone, Copy)]
+struct PaceConf {
+    gbps: f64,
+    burst: usize,
 }
 
 /// A tenant's handle onto the pooled-memory data plane.
@@ -121,6 +139,8 @@ pub struct MemClient {
     map: InterleaveMap,
     /// In-flight window per device.
     window: usize,
+    /// Token-bucket pacing applied to every plan (fresh bucket per run).
+    pace: Option<PaceConf>,
 }
 
 impl MemClient {
@@ -131,6 +151,7 @@ impl MemClient {
             tenant,
             map,
             window: 4,
+            pace: None,
         }
     }
 
@@ -140,11 +161,35 @@ impl MemClient {
         self
     }
 
+    /// Pace every plan with a `gbps` token bucket of `burst` bytes depth
+    /// — the paper's rate-limited READ pull (§2.5). The bucket starts
+    /// full on each run; reads charge it for their response payload.
+    /// A non-positive rate is a configuration error (it would defer
+    /// releases to the end of simulated time), so it panics here rather
+    /// than producing absurd timings.
+    pub fn with_pace(mut self, gbps: f64, burst: usize) -> Self {
+        assert!(
+            gbps > 0.0,
+            "with_pace requires a positive rate (got {gbps} Gbit/s)"
+        );
+        self.pace = Some(PaceConf { gbps, burst });
+        self
+    }
+
     pub fn map(&self) -> &InterleaveMap {
         &self.map
     }
 
     // ------------------------------------------------------- public ops
+
+    /// Start an empty pipelined batch. Submit ops, then [`MemBatch::run`].
+    pub fn batch(&self) -> MemBatch<'_> {
+        MemBatch {
+            client: self,
+            plan: Vec::new(),
+            entries: Vec::new(),
+        }
+    }
 
     /// Read `len` bytes at `gva`, scatter-gathered across the pool and
     /// reassembled in GVA order.
@@ -155,30 +200,10 @@ impl MemClient {
         gva: u64,
         len: usize,
     ) -> Result<Vec<u8>, MemError> {
-        let mut ops = Vec::new();
-        for (piece_gva, off, piece_len) in self.pieces(gva, len) {
-            let (device, local) = self.map.translate(piece_gva);
-            let seq = cl.alloc_seq(self.host);
-            let pkt = Packet::new(
-                self.host_ip,
-                seq,
-                SrouHeader::direct(device),
-                Instruction::Read {
-                    addr: local,
-                    len: piece_len as u32,
-                },
-            );
-            ops.push(PlanOp {
-                device,
-                gva: piece_gva,
-                read_off: Some(off),
-                len: piece_len,
-                pkt,
-                reliable: true,
-            });
-        }
-        let out = self.run_plan(cl, eng, ops, len)?;
-        Ok(out.data)
+        let mut b = self.batch();
+        let h = b.read(cl, gva, len);
+        let mut out = b.run(cl, eng)?;
+        out.take_read(h).ok_or(MemError::BadResponse { gva })
     }
 
     /// Write `data` at `gva`, sprayed over the interleaved extents with
@@ -190,39 +215,19 @@ impl MemClient {
         gva: u64,
         data: &[u8],
     ) -> Result<(), MemError> {
-        let mut ops = Vec::new();
-        for (piece_gva, off, piece_len) in self.pieces(gva, data.len()) {
-            let (device, local) = self.map.translate(piece_gva);
-            let seq = cl.alloc_seq(self.host);
-            let pkt = Packet::new(
-                self.host_ip,
-                seq,
-                SrouHeader::direct(device),
-                Instruction::Write { addr: local },
-            )
-            .with_flags(Flags(Flags::RELIABLE))
-            .with_payload(Payload::from_bytes(data[off..off + piece_len].to_vec()));
-            ops.push(PlanOp {
-                device,
-                gva: piece_gva,
-                read_off: None,
-                len: piece_len,
-                pkt,
-                reliable: true,
-            });
-        }
-        self.run_plan(cl, eng, ops, 0)?;
+        let mut b = self.batch();
+        b.write(cl, gva, data);
+        b.run(cl, eng)?;
         Ok(())
     }
 
     /// Compare-and-swap the u64 at `gva` (must not straddle an interleave
     /// block). Returns `(old_value, swapped)`.
     ///
-    /// Caveat (lossy fabrics): if the *response* is lost, the reliable
-    /// retransmit re-executes the CAS on the device; a caller whose first
-    /// attempt actually won then sees `(new, false)` and believes it lost.
-    /// The pool paths in this crate run lossless; a replay-safe CAS needs
-    /// a device-side dedupe keyed on sequence number (ROADMAP).
+    /// Replay-safe on lossy fabrics: the op is sent reliably, and the
+    /// device's `(src, seq)` response-dedupe cache guarantees a
+    /// retransmit after a lost response returns the *original* outcome
+    /// instead of re-executing the swap.
     pub fn cas(
         &self,
         cl: &mut Cluster,
@@ -231,44 +236,18 @@ impl MemClient {
         expected: u64,
         new: u64,
     ) -> Result<(u64, bool), MemError> {
-        let block = self.map.block_bytes();
-        if gva % block + 8 > block {
-            return Err(MemError::Plan(format!(
-                "cas at gva {gva:#x} straddles an interleave block"
-            )));
-        }
-        let (device, local) = self.map.translate(gva);
-        let seq = cl.alloc_seq(self.host);
-        let pkt = Packet::new(
-            self.host_ip,
-            seq,
-            SrouHeader::direct(device),
-            Instruction::Cas {
-                addr: local,
-                expected,
-                new,
-            },
-        );
-        // CAS with expected == new is not idempotent (§3.1): send it
-        // unreliably rather than risk a duplicated swap.
-        let reliable = expected != new;
-        let ops = vec![PlanOp {
-            device,
-            gva,
-            read_off: None,
-            len: 8,
-            pkt,
-            reliable,
-        }];
-        let out = self.run_plan(cl, eng, ops, 0)?;
-        out.cas.ok_or(MemError::BadResponse { gva })
+        let mut b = self.batch();
+        let h = b.cas(cl, gva, expected, new)?;
+        let out = b.run(cl, eng)?;
+        out.cas_outcome(h).ok_or(MemError::BadResponse { gva })
     }
 
     /// TensorDIMM-style near-memory gather: fold the `rows` (each
     /// `row_bytes` long, fully inside one interleave block) into a zero
     /// accumulator with on-device `Simd` adds — one self-routing packet
     /// program visiting each row's device — and write the pooled sum at
-    /// `dst_gva`. Only the result row ever crosses the host link.
+    /// `dst_gva`. Only the result row ever crosses the host link. For
+    /// many bags per call, pipeline them through [`MemBatch::gather_sum`].
     pub fn gather_sum(
         &self,
         cl: &mut Cluster,
@@ -277,6 +256,42 @@ impl MemClient {
         row_bytes: usize,
         dst_gva: u64,
     ) -> Result<(), MemError> {
+        let mut b = self.batch();
+        b.gather_sum(cl, rows, row_bytes, dst_gva)?;
+        b.run(cl, eng)?;
+        Ok(())
+    }
+
+    // ----------------------------------------------------- plan builders
+
+    /// Split `[gva, gva+len)` along interleave blocks and the payload MTU
+    /// into `(piece_gva, range_off, piece_len)` triples, in GVA order.
+    fn pieces(&self, gva: u64, len: usize) -> Vec<(u64, usize, usize)> {
+        let mut out = Vec::new();
+        for e in self.map.scatter(gva, len as u64) {
+            let mut off = 0u64;
+            while off < e.len {
+                let piece = (e.len - off).min(MAX_PAYLOAD as u64) as usize;
+                out.push((
+                    gva + e.range_off + off,
+                    (e.range_off + off) as usize,
+                    piece,
+                ));
+                off += piece as u64;
+            }
+        }
+        out
+    }
+
+    /// Compile one gather bag into its packet-program plan op.
+    fn plan_gather(
+        &self,
+        cl: &mut Cluster,
+        rows: &[u64],
+        row_bytes: usize,
+        dst_gva: u64,
+        entry: usize,
+    ) -> Result<PlanOp, MemError> {
         if rows.is_empty() || rows.len() + 1 > MAX_PROGRAM_STEPS {
             return Err(MemError::Plan(format!(
                 "gather of {} rows outside 1..={} (program step budget)",
@@ -327,147 +342,95 @@ impl MemClient {
         )
         .with_flags(Flags(Flags::RELIABLE))
         .with_payload(Payload::from_bytes(vec![0u8; row_bytes]));
-        let ops = vec![PlanOp {
+        Ok(PlanOp {
             device: dst_dev,
             gva: dst_gva,
+            entry,
             read_off: None,
             len: row_bytes,
             pkt,
             reliable: true,
-        }];
-        self.run_plan(cl, eng, ops, 0)?;
-        Ok(())
+        })
     }
 
     // --------------------------------------------------- plan execution
 
-    /// Split `[gva, gva+len)` along interleave blocks and the payload MTU
-    /// into `(piece_gva, range_off, piece_len)` triples, in GVA order.
-    fn pieces(&self, gva: u64, len: usize) -> Vec<(u64, usize, usize)> {
-        let mut out = Vec::new();
-        for e in self.map.scatter(gva, len as u64) {
-            let mut off = 0u64;
-            while off < e.len {
-                let piece = (e.len - off).min(MAX_PAYLOAD as u64) as usize;
-                out.push((
-                    gva + e.range_off + off,
-                    (e.range_off + off) as usize,
-                    piece,
-                ));
-                off += piece as u64;
-            }
-        }
-        out
-    }
-
-    /// Drive a compiled plan to completion: per-device windows, reliable
-    /// injection, completion-hook refill, NAK detection, and (for reads)
-    /// GVA-order reassembly of `read_len` bytes.
-    fn run_plan(
+    /// Drive a compiled plan through the shared window engine: per-device
+    /// slots, reliable injection, paced refill when configured, NAK
+    /// cancellation, and (for reads) GVA-order reassembly per entry.
+    fn run_ops(
         &self,
         cl: &mut Cluster,
         eng: &mut Engine<Cluster>,
-        ops: Vec<PlanOp>,
-        read_len: usize,
-    ) -> Result<RunOut, MemError> {
-        let total = ops.len();
-        if total == 0 {
-            return Ok(RunOut::default());
+        plan: Vec<PlanOp>,
+        entries: &[EntryKind],
+    ) -> Result<BatchResult, MemError> {
+        let total = plan.len();
+        let mut reads: Vec<Option<Vec<u8>>> = entries
+            .iter()
+            .map(|e| match e {
+                EntryKind::Read { len } => Some(vec![0u8; *len]),
+                _ => None,
+            })
+            .collect();
+        let mut cas_of_seq: HashMap<u64, usize> = HashMap::new();
+        for (i, e) in entries.iter().enumerate() {
+            if let EntryKind::Cas { seq } = e {
+                cas_of_seq.insert(*seq, i);
+            }
         }
-        // Group ops into per-device slots and remember read placement.
+        if total == 0 {
+            return Ok(BatchResult {
+                reads,
+                cas: HashMap::new(),
+            });
+        }
+        // Per-device window slots; remember read placement per sequence.
         let mut slots: Vec<DeviceIp> = Vec::new();
-        let mut queues: Vec<VecDeque<Pending>> = Vec::new();
-        let mut read_of_seq: HashMap<u64, (usize, usize)> = HashMap::new();
+        let mut read_of_seq: HashMap<u64, (usize, usize, usize)> = HashMap::new();
         let mut plan_seqs: HashSet<u64> = HashSet::with_capacity(total);
-        for op in ops {
+        let mut wops = Vec::with_capacity(total);
+        for op in plan {
             let slot = match slots.iter().position(|&d| d == op.device) {
                 Some(i) => i,
                 None => {
                     slots.push(op.device);
-                    queues.push(VecDeque::new());
                     slots.len() - 1
                 }
             };
             if let Some(off) = op.read_off {
-                read_of_seq.insert(op.pkt.seq, (off, op.len));
+                read_of_seq.insert(op.pkt.seq, (op.entry, off, op.len));
             }
             plan_seqs.insert(op.pkt.seq);
-            queues[slot].push_back(Pending {
-                seq: op.pkt.seq,
-                gva: op.gva,
-                pkt: op.pkt,
+            // Pace on the bytes the op moves: a READ's request is tiny
+            // but its response carries `len` — that is what the §2.5
+            // pull-back rate limit must meter. Unpaced plans skip the
+            // per-op header encode wire_bytes() costs.
+            let pace_bytes = if self.pace.is_some() {
+                op.len.max(op.pkt.wire_bytes())
+            } else {
+                0
+            };
+            wops.push(WindowedOp {
+                slot,
+                origin: self.host,
+                key: CompletionKey::Seq(op.pkt.seq),
+                tag: op.gva,
                 reliable: op.reliable,
+                pace_bytes,
+                pkt: op.pkt,
             });
         }
-        let shared = Rc::new(RefCell::new(Shared {
-            queues,
-            inflight: HashMap::with_capacity(total),
-            done: 0,
-            cas: None,
-            nak: None,
-        }));
-        // Completion hook: one refill per retired op, per-device window.
-        let hook_state = Rc::clone(&shared);
-        let host = self.host;
-        cl.on_completion = Some(Box::new(move |rec| {
-            if rec.node != host {
-                return Vec::new();
-            }
-            let mut s = hook_state.borrow_mut();
-            let Some((slot, gva)) = s.inflight.remove(&rec.seq) else {
-                return Vec::new(); // foreign or duplicate completion
-            };
-            match &rec.instr {
-                Instruction::Nack { reason, .. } => {
-                    if s.nak.is_none() {
-                        s.nak = Some((rec.from, gva, *reason));
-                    }
-                }
-                Instruction::CasResp { old, swapped, .. } => {
-                    s.cas = Some((*old, *swapped));
-                }
-                _ => {}
-            }
-            s.done += 1;
-            if let Some(p) = s.queues[slot].pop_front() {
-                s.inflight.insert(p.seq, (slot, p.gva));
-                return vec![InjectCmd {
-                    origin: host,
-                    pkt: p.pkt,
-                    reliable: p.reliable,
-                }];
-            }
-            Vec::new()
-        }));
-        // Kick the initial per-device windows.
-        let mut kicks = Vec::new();
-        {
-            let mut s = shared.borrow_mut();
-            for slot in 0..s.queues.len() {
-                for _ in 0..self.window {
-                    match s.queues[slot].pop_front() {
-                        Some(p) => {
-                            s.inflight.insert(p.seq, (slot, p.gva));
-                            kicks.push(InjectCmd {
-                                origin: host,
-                                pkt: p.pkt,
-                                reliable: p.reliable,
-                            });
-                        }
-                        None => break,
-                    }
-                }
-            }
+        // Record completions only when something consumes them (CAS
+        // outcomes); read data arrives via the mailbox packets below.
+        let mut engine =
+            WindowEngine::new(self.window).record_responses(!cas_of_seq.is_empty());
+        if let Some(p) = &self.pace {
+            engine = engine.paced(TokenBucket::new(p.gbps, p.burst));
         }
-        for cmd in kicks {
-            cl.inject_cmd(eng, cmd);
-        }
-        eng.run(cl);
-        cl.on_completion = None;
-        let s = Rc::try_unwrap(shared)
-            .ok()
-            .expect("completion hook released")
-            .into_inner();
+        let out = engine
+            .run(cl, eng, wops)
+            .map_err(|e| MemError::Plan(e.to_string()))?;
         // Drain only *this plan's* responses from the host mailbox —
         // other traffic the app may be exchanging on the same host node
         // survives — before any early error return.
@@ -476,35 +439,220 @@ impl MemClient {
             .into_iter()
             .partition(|(_, pkt)| plan_seqs.contains(&pkt.seq));
         cl.host_mut(self.host).mailbox = theirs;
-        if let Some((device, gva, reason)) = s.nak {
+        if let Some(nak) = out.nak {
             return Err(MemError::Nak {
-                device,
-                gva,
-                reason: NakReason::from_u8(reason),
+                device: nak.from,
+                gva: nak.tag,
+                reason: NakReason::from_u8(nak.reason),
             });
         }
-        if s.done < total {
+        if out.done < total {
             return Err(MemError::Incomplete {
-                done: s.done,
+                done: out.done,
                 total,
             });
         }
-        // Reassemble read data in GVA order.
-        let mut data = vec![0u8; read_len];
+        // CAS outcomes from the recorded completions.
+        let mut cas = HashMap::new();
+        for r in &out.responses {
+            if let Instruction::CasResp { old, swapped, .. } = r.instr {
+                if let CompletionKey::Seq(s) = r.key {
+                    if let Some(&e) = cas_of_seq.get(&s) {
+                        cas.insert(e, (old, swapped));
+                    }
+                }
+            }
+        }
+        // Reassemble read data in GVA order, per entry.
         for (_, pkt) in ours {
             if !matches!(pkt.instr, Instruction::ReadResp { .. }) {
                 continue;
             }
-            let Some(&(off, len)) = read_of_seq.get(&pkt.seq) else {
+            let Some(&(entry, off, len)) = read_of_seq.get(&pkt.seq) else {
+                continue;
+            };
+            let Some(buf) = reads[entry].as_mut() else {
                 continue;
             };
             if let Some(bytes) = pkt.payload.bytes() {
-                let n = bytes.len().min(len).min(data.len().saturating_sub(off));
-                data[off..off + n].copy_from_slice(&bytes[..n]);
+                let n = bytes.len().min(len).min(buf.len().saturating_sub(off));
+                buf[off..off + n].copy_from_slice(&bytes[..n]);
             }
             // Phantom payloads (timing-only devices) leave zeros.
         }
-        Ok(RunOut { data, cas: s.cas })
+        Ok(BatchResult { reads, cas })
+    }
+}
+
+// -------------------------------------------------------- batched API
+
+/// Handle to one logical op submitted into a [`MemBatch`]; redeem it
+/// against the [`BatchResult`] the batch run returns.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct OpHandle(usize);
+
+/// A pipelined multi-op submission: accumulate reads/writes/CAS/gathers,
+/// then [`run`](Self::run) them through one windowed engine pass — every
+/// op in flight concurrently under the per-device windows (and the
+/// client's pacer, if configured). Ops in a batch are unordered; do not
+/// batch dependent ops together.
+pub struct MemBatch<'a> {
+    client: &'a MemClient,
+    plan: Vec<PlanOp>,
+    entries: Vec<EntryKind>,
+}
+
+impl MemBatch<'_> {
+    /// Queue a scatter-gather read of `len` bytes at `gva`.
+    pub fn read(&mut self, cl: &mut Cluster, gva: u64, len: usize) -> OpHandle {
+        let entry = self.entries.len();
+        for (piece_gva, off, piece_len) in self.client.pieces(gva, len) {
+            let (device, local) = self.client.map.translate(piece_gva);
+            let seq = cl.alloc_seq(self.client.host);
+            let pkt = Packet::new(
+                self.client.host_ip,
+                seq,
+                SrouHeader::direct(device),
+                Instruction::Read {
+                    addr: local,
+                    len: piece_len as u32,
+                },
+            );
+            self.plan.push(PlanOp {
+                device,
+                gva: piece_gva,
+                entry,
+                read_off: Some(off),
+                len: piece_len,
+                pkt,
+                reliable: true,
+            });
+        }
+        self.entries.push(EntryKind::Read { len });
+        OpHandle(entry)
+    }
+
+    /// Queue a scatter write of `data` at `gva`.
+    pub fn write(&mut self, cl: &mut Cluster, gva: u64, data: &[u8]) -> OpHandle {
+        let entry = self.entries.len();
+        for (piece_gva, off, piece_len) in self.client.pieces(gva, data.len()) {
+            let (device, local) = self.client.map.translate(piece_gva);
+            let seq = cl.alloc_seq(self.client.host);
+            let pkt = Packet::new(
+                self.client.host_ip,
+                seq,
+                SrouHeader::direct(device),
+                Instruction::Write { addr: local },
+            )
+            .with_flags(Flags(Flags::RELIABLE))
+            .with_payload(Payload::from_bytes(data[off..off + piece_len].to_vec()));
+            self.plan.push(PlanOp {
+                device,
+                gva: piece_gva,
+                entry,
+                read_off: None,
+                len: piece_len,
+                pkt,
+                reliable: true,
+            });
+        }
+        self.entries.push(EntryKind::Write);
+        OpHandle(entry)
+    }
+
+    /// Queue a compare-and-swap of the u64 at `gva`.
+    pub fn cas(
+        &mut self,
+        cl: &mut Cluster,
+        gva: u64,
+        expected: u64,
+        new: u64,
+    ) -> Result<OpHandle, MemError> {
+        let block = self.client.map.block_bytes();
+        if gva % block + 8 > block {
+            return Err(MemError::Plan(format!(
+                "cas at gva {gva:#x} straddles an interleave block"
+            )));
+        }
+        let (device, local) = self.client.map.translate(gva);
+        let seq = cl.alloc_seq(self.client.host);
+        let pkt = Packet::new(
+            self.client.host_ip,
+            seq,
+            SrouHeader::direct(device),
+            Instruction::Cas {
+                addr: local,
+                expected,
+                new,
+            },
+        )
+        .with_flags(Flags(Flags::RELIABLE));
+        let entry = self.entries.len();
+        self.plan.push(PlanOp {
+            device,
+            gva,
+            entry,
+            read_off: None,
+            len: 8,
+            pkt,
+            reliable: true,
+        });
+        self.entries.push(EntryKind::Cas { seq });
+        Ok(OpHandle(entry))
+    }
+
+    /// Queue one near-memory gather bag (see [`MemClient::gather_sum`]).
+    /// Multiple bags in one batch pipeline across the pool — each bag is
+    /// one self-routing program, windowed on its result device.
+    pub fn gather_sum(
+        &mut self,
+        cl: &mut Cluster,
+        rows: &[u64],
+        row_bytes: usize,
+        dst_gva: u64,
+    ) -> Result<OpHandle, MemError> {
+        let entry = self.entries.len();
+        let op = self.client.plan_gather(cl, rows, row_bytes, dst_gva, entry)?;
+        self.plan.push(op);
+        self.entries.push(EntryKind::Gather);
+        Ok(OpHandle(entry))
+    }
+
+    /// Packets queued so far (diagnostics).
+    pub fn len(&self) -> usize {
+        self.plan.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.plan.is_empty()
+    }
+
+    /// Drive every queued op to completion through the window engine.
+    pub fn run(
+        self,
+        cl: &mut Cluster,
+        eng: &mut Engine<Cluster>,
+    ) -> Result<BatchResult, MemError> {
+        self.client.run_ops(cl, eng, self.plan, &self.entries)
+    }
+}
+
+/// Results of a [`MemBatch`] run, redeemed by [`OpHandle`].
+pub struct BatchResult {
+    reads: Vec<Option<Vec<u8>>>,
+    cas: HashMap<usize, (u64, bool)>,
+}
+
+impl BatchResult {
+    /// Take a read's reassembled bytes (once). `None` for non-read
+    /// handles or a second take.
+    pub fn take_read(&mut self, h: OpHandle) -> Option<Vec<u8>> {
+        self.reads.get_mut(h.0)?.take()
+    }
+
+    /// A CAS op's `(old_value, swapped)` outcome.
+    pub fn cas_outcome(&self, h: OpHandle) -> Option<(u64, bool)> {
+        self.cas.get(&h.0).copied()
     }
 }
 
@@ -513,6 +661,7 @@ mod tests {
     use super::*;
     use crate::net::{LinkConfig, Topology};
     use crate::pool::SdnController;
+    use crate::transport::ReliabilityTable;
     use crate::util::bytes::{bytes_to_f32s, f32s_to_bytes};
 
     /// 4 pool devices + 1 client host, controller programming the fabric.
@@ -593,6 +742,49 @@ mod tests {
         assert_eq!((old, swapped), (42, false), "second CAS sees the swap");
     }
 
+    /// The ROADMAP replay-safety regression, end to end on a lossy
+    /// fabric: even when the CAS *response* is dropped and the reliable
+    /// layer retransmits the request, the winner must still see its
+    /// original `swapped=true` — served from the device's (src, seq)
+    /// response-dedupe cache, never re-executed.
+    #[test]
+    fn cas_is_replay_safe_on_a_lossy_fabric() {
+        let mut cache_hits = 0u64;
+        let mut retransmits = 0u64;
+        for seed in 0..24u64 {
+            let t = Topology::star(
+                0xCA5 ^ seed.wrapping_mul(0x9E37_79B9),
+                4,
+                1,
+                LinkConfig::dc_100g(),
+            );
+            let mut cl = t.cluster;
+            let map = InterleaveMap::paper_default((1..=4).map(DeviceIp::lan).collect());
+            let mut ctl = SdnController::new(map.clone(), 1 << 20);
+            ctl.grant_host(&mut cl, 1, DeviceIp::lan(101));
+            let a = ctl.malloc_mapped(&mut cl, 1, 8192, true).unwrap();
+            let client = MemClient::new(t.hosts[0], DeviceIp::lan(101), 1, map);
+            cl.fault.loss_p = 0.25;
+            cl.xport = ReliabilityTable::new(20_000, 64);
+            let mut eng: Engine<Cluster> = Engine::new();
+            let (old, swapped) = client.cas(&mut cl, &mut eng, a.gva, 0, 42).unwrap();
+            assert_eq!(
+                (old, swapped),
+                (0, true),
+                "seed {seed}: the CAS winner saw a lie after a retransmit"
+            );
+            retransmits += cl.xport.retransmits;
+            let (dev_ip, _) = client.map().translate(a.gva);
+            let node = cl.node_by_ip(dev_ip).unwrap();
+            cache_hits += cl.device(node).resp_cache_hits;
+        }
+        assert!(retransmits > 0, "the sweep never exercised a retransmit");
+        assert!(
+            cache_hits > 0,
+            "the sweep never exercised the response-loss replay path"
+        );
+    }
+
     #[test]
     fn gather_sum_reduces_rows_on_device() {
         let (mut cl, client, mut ctl, _) = world();
@@ -652,5 +844,99 @@ mod tests {
             matches!(err, MemError::Nak { reason: NakReason::Unmapped, .. }),
             "{err:?}"
         );
+    }
+
+    #[test]
+    fn batch_pipelines_reads_writes_and_cas() {
+        let (mut cl, client, mut ctl, _) = world();
+        let a = ctl.malloc_mapped(&mut cl, 1, 64 << 10, true).unwrap();
+        let b = ctl.malloc_mapped(&mut cl, 1, 8192, true).unwrap();
+        let mut eng: Engine<Cluster> = Engine::new();
+        let data: Vec<u8> = (0..64 << 10).map(|i| (i * 13 % 251) as u8).collect();
+        client.write(&mut cl, &mut eng, a.gva, &data).unwrap();
+        // One windowed run carrying two reads, a CAS and a write — all
+        // in flight together under the per-device windows.
+        let mut batch = client.batch();
+        let r1 = batch.read(&mut cl, a.gva, 16 << 10);
+        let r2 = batch.read(&mut cl, a.gva + (32 << 10), 16 << 10);
+        let c1 = batch.cas(&mut cl, b.gva, 0, 99).unwrap();
+        let w1 = batch.write(&mut cl, b.gva + 1024, &[5u8; 64]);
+        assert!(!batch.is_empty());
+        let mut res = batch.run(&mut cl, &mut eng).unwrap();
+        assert_eq!(res.take_read(r1).unwrap(), data[..16 << 10]);
+        assert_eq!(res.take_read(r2).unwrap(), data[32 << 10..48 << 10]);
+        assert_eq!(res.take_read(r1), None, "reads redeem once");
+        assert_eq!(res.cas_outcome(c1), Some((0, true)));
+        assert_eq!(res.cas_outcome(w1), None, "writes have no CAS outcome");
+        // The batched write landed.
+        assert_eq!(
+            client.read(&mut cl, &mut eng, b.gva + 1024, 64).unwrap(),
+            vec![5u8; 64]
+        );
+    }
+
+    #[test]
+    fn batched_multi_bag_gather_pipelines() {
+        let (mut cl, client, mut ctl, _) = world();
+        let rows = 32usize;
+        let row_bytes = 1024usize;
+        let table = ctl
+            .malloc_mapped(&mut cl, 1, (rows * row_bytes) as u64, true)
+            .unwrap();
+        let out = ctl
+            .malloc_mapped(&mut cl, 1, (4 * row_bytes) as u64, true)
+            .unwrap();
+        let mut eng: Engine<Cluster> = Engine::new();
+        let mut bytes = Vec::new();
+        for r in 0..rows {
+            bytes.extend_from_slice(&f32s_to_bytes(&[r as f32; 256]));
+        }
+        client.write(&mut cl, &mut eng, table.gva, &bytes).unwrap();
+        // Four bags in one batch — the old API ran one program per call.
+        let bags: [[u64; 2]; 4] = [[1, 2], [3, 8], [9, 21], [5, 30]];
+        let mut batch = client.batch();
+        for (b, bag) in bags.iter().enumerate() {
+            let gvas: Vec<u64> = bag
+                .iter()
+                .map(|&r| table.gva + r * row_bytes as u64)
+                .collect();
+            batch
+                .gather_sum(&mut cl, &gvas, row_bytes, out.gva + (b * row_bytes) as u64)
+                .unwrap();
+        }
+        assert_eq!(batch.len(), 4, "one program packet per bag");
+        batch.run(&mut cl, &mut eng).unwrap();
+        let got = client
+            .read(&mut cl, &mut eng, out.gva, 4 * row_bytes)
+            .unwrap();
+        for (b, bag) in bags.iter().enumerate() {
+            let want = (bag[0] + bag[1]) as f32;
+            let lanes = bytes_to_f32s(&got[b * row_bytes..(b + 1) * row_bytes]).unwrap();
+            assert_eq!(lanes, vec![want; 256], "bag {b}");
+        }
+    }
+
+    #[test]
+    fn paced_reads_throttle_to_the_token_rate() {
+        let (mut cl, client, mut ctl, _) = world();
+        let a = ctl.malloc_mapped(&mut cl, 1, 64 << 10, true).unwrap();
+        let mut eng: Engine<Cluster> = Engine::new();
+        let data = vec![0xA5u8; 64 << 10];
+        client.write(&mut cl, &mut eng, a.gva, &data).unwrap();
+        let t0 = eng.now();
+        assert_eq!(client.read(&mut cl, &mut eng, a.gva, data.len()).unwrap(), data);
+        let unpaced_ns = eng.now() - t0;
+        // 8 Gbps = 1 B/ns with an 8 KiB burst: 64 KiB must take at least
+        // (64 - 8) KiB worth of refill time.
+        let paced = MemClient::new(client.host, DeviceIp::lan(101), 1, client.map().clone())
+            .with_pace(8.0, 8 << 10);
+        let t0 = eng.now();
+        assert_eq!(paced.read(&mut cl, &mut eng, a.gva, data.len()).unwrap(), data);
+        let paced_ns = eng.now() - t0;
+        assert!(
+            paced_ns >= (56 << 10) as u64,
+            "paced read finished in {paced_ns} ns — faster than the bucket allows"
+        );
+        assert!(paced_ns > unpaced_ns, "pacing must actually throttle");
     }
 }

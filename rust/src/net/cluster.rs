@@ -114,6 +114,10 @@ pub struct InjectCmd {
     pub origin: NodeId,
     pub pkt: Packet,
     pub reliable: bool,
+    /// Defer the injection by this many ns (0 = immediate). The window
+    /// engine's paced mode releases ops on the token bucket's schedule;
+    /// reliability tracking is armed at release time, not decision time.
+    pub delay: SimTime,
 }
 
 /// Callback invoked for every completion record; returns follow-up
@@ -338,10 +342,31 @@ impl Cluster {
         });
     }
 
-    /// Inject a deferred command (the collective driver's currency): one
-    /// entry point for plain and reliability-tracked injection, usable
-    /// both from completion hooks and from driver kick-off code.
+    /// Inject a deferred command (the window engine's currency): one
+    /// entry point for plain, reliability-tracked, and pace-delayed
+    /// injection, usable both from completion hooks and from engine
+    /// kick-off code.
     pub fn inject_cmd(&mut self, eng: &mut Engine<Cluster>, cmd: InjectCmd) {
+        if cmd.delay > 0 {
+            let InjectCmd {
+                origin,
+                pkt,
+                reliable,
+                delay,
+            } = cmd;
+            eng.schedule_in(delay, move |cl: &mut Cluster, eng| {
+                cl.inject_cmd(
+                    eng,
+                    InjectCmd {
+                        origin,
+                        pkt,
+                        reliable,
+                        delay: 0,
+                    },
+                );
+            });
+            return;
+        }
         if cmd.reliable {
             self.inject_reliable(eng, cmd.origin, cmd.pkt);
         } else {
@@ -350,11 +375,13 @@ impl Cluster {
     }
 
     /// Inject with timeout-retransmit tracking. The instruction should be
-    /// idempotent (debug-asserted) — that is NetDAM's reliability model.
+    /// replay-safe (debug-asserted): idempotent, or CAS, whose
+    /// retransmits the device answers from its response-dedupe cache —
+    /// that is NetDAM's reliability model.
     pub fn inject_reliable(&mut self, eng: &mut Engine<Cluster>, origin: NodeId, pkt: Packet) {
         debug_assert!(
-            pkt.instr.idempotent(pkt.flags),
-            "reliable injection of non-idempotent {:?}",
+            pkt.instr.replay_safe(pkt.flags),
+            "reliable injection of non-replay-safe {:?}",
             pkt.instr
         );
         let seq = pkt.seq;
@@ -553,7 +580,11 @@ impl Cluster {
         };
         if let Some(mut hook) = self.on_completion.take() {
             let cmds = hook(&rec);
-            self.on_completion = Some(hook);
+            // Put the engine's hook back (take/call/put-back avoids
+            // aliasing &mut self into the callback). Only the transport
+            // window engine installs hooks; this is dispatch, not a
+            // windowing loop.
+            self.on_completion.replace(hook);
             for c in cmds {
                 self.inject_cmd(eng, c);
             }

@@ -1,0 +1,398 @@
+//! The windowed transport engine — one reliable-injection/completion-
+//! refill state machine for *every* host-side data path.
+//!
+//! Before this module existed, `collectives::Driver::run` and
+//! `mem::MemClient::run_plan` each owned a copy of the same loop:
+//! per-peer FIFO queues, a self-clocked in-flight window, reliable
+//! injection, an `on_completion` hook that retires one op and refills
+//! the window, and (on the mem side) NAK surfacing. The paper's core
+//! claim is that one programmable memory-attached datapath serves both
+//! collectives (§3) and pooled-memory access (§2.5/§2.6) — so the host
+//! side gets one transport engine too.
+//!
+//! [`WindowEngine::run`] drives a batch of [`WindowedOp`]s to
+//! completion:
+//!
+//! * **Windowing** — ops are queued per *slot* (a collective rank, a
+//!   pool device — whatever the caller windows over) and at most
+//!   `window` ops per slot are in flight; each retirement refills from
+//!   that slot's queue (self-clocking).
+//! * **Completion keying** — generic over the two flavors in the tree:
+//!   [`CompletionKey::DoneId`] matches a `CollectiveDone { block }`
+//!   (collective chains retire at the far end of a multi-hop program),
+//!   [`CompletionKey::Seq`] matches any response echoing the request's
+//!   sequence number at the op's origin (RDMA-PSN-style request/response
+//!   correlation). Duplicate completions (retransmitted chains re-emit
+//!   their Done) are counted and ignored: every op retires exactly once.
+//! * **Reliability** — reliable ops are injected through the cluster's
+//!   timeout-retransmit table; the retirement path clears the pending
+//!   entry (via `note_completion`), so a drained run leaves no dangling
+//!   timers.
+//! * **NAK surfacing + cancel** — a wire `Nack` matching an in-flight op
+//!   records the typed denial and *cancels the remaining queues*: no
+//!   further ops are injected, in-flight ops drain normally, and the
+//!   caller gets the first NAK plus the count of cancelled ops.
+//! * **Paced refill** — with [`WindowEngine::paced`], every injection
+//!   first reserves the op's `pace_bytes` from a [`TokenBucket`] and is
+//!   released only when the bucket allows (the §2.5 "sequencing and
+//!   rate-limited READ" incast cure). Pacing composes with windowing:
+//!   injection time is the later of the completion that freed the slot
+//!   and the bucket release.
+//!
+//! The engine installs the cluster's completion hook for the duration of
+//! one `run` and always removes it before returning — callers never
+//! touch `Cluster::on_completion` themselves.
+
+use std::cell::RefCell;
+use std::collections::{HashMap, HashSet, VecDeque};
+use std::rc::Rc;
+
+use anyhow::{ensure, Result};
+
+use crate::isa::Instruction;
+use crate::net::{Cluster, CompletionRecord, InjectCmd, NodeId};
+use crate::sim::{Engine, SimTime};
+use crate::wire::{DeviceIp, Packet};
+
+use super::rate::TokenBucket;
+
+/// Upper bound on window slots (sanity guard against caller bugs).
+const MAX_SLOTS: usize = 65_536;
+
+/// How one op recognises its completion.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum CompletionKey {
+    /// A `CollectiveDone { block }` carrying this id (collective chains
+    /// retire wherever the packet program's last hop runs).
+    DoneId(u32),
+    /// Any response echoing this sequence number at the op's origin
+    /// (reads, write acks, CAS responses, NAKs).
+    Seq(u64),
+}
+
+/// One windowed op: a packet plus how to window and retire it.
+pub struct WindowedOp {
+    /// Window slot (a rank, a device index — the caller's peer notion).
+    pub slot: usize,
+    /// Node that injects the packet and receives its completion.
+    pub origin: NodeId,
+    pub key: CompletionKey,
+    /// Caller cookie carried through to [`Retired`] / [`NakRecord`]
+    /// (e.g. the GVA a mem op targets).
+    pub tag: u64,
+    pub reliable: bool,
+    /// Bytes this op charges the pacer — the data it *moves* (a READ's
+    /// response payload, a WRITE's wire bytes), not necessarily its
+    /// request size. Ignored when the engine is unpaced.
+    pub pace_bytes: usize,
+    pub pkt: Packet,
+}
+
+/// A retired op's completion, recorded when response recording is on.
+#[derive(Debug, Clone)]
+pub struct Retired {
+    pub key: CompletionKey,
+    pub tag: u64,
+    pub instr: Instruction,
+    pub time: SimTime,
+}
+
+/// The first wire NAK matched to an in-flight op.
+#[derive(Debug, Clone, Copy)]
+pub struct NakRecord {
+    /// Device that denied the access.
+    pub from: DeviceIp,
+    /// The NAK'd op's caller cookie.
+    pub tag: u64,
+    /// Typed reason byte (see [`crate::iommu::NakReason`]).
+    pub reason: u8,
+    pub key: CompletionKey,
+}
+
+/// What one engine run produced.
+#[derive(Debug)]
+pub struct WindowOutcome {
+    /// Ops submitted.
+    pub ops: usize,
+    /// Ops retired (each exactly once). `< ops` means unrecovered loss
+    /// or a NAK cancellation — callers decide whether that is an error.
+    pub done: usize,
+    /// Time of the last retirement (run start time if nothing retired).
+    pub last_done: SimTime,
+    pub nak: Option<NakRecord>,
+    /// Queued ops dropped by NAK cancellation (never injected).
+    pub cancelled: usize,
+    /// Max ops simultaneously in flight on any one slot (≤ window).
+    pub max_inflight: usize,
+    /// Completions that matched an already-retired key (retransmit
+    /// echoes) — ignored, counted for diagnostics.
+    pub duplicate_completions: usize,
+    /// Paced release log `(release_time, pace_bytes)`, empty when
+    /// unpaced. By construction cumulative bytes released by time `t`
+    /// never exceed `burst + rate·t`.
+    pub releases: Vec<(SimTime, usize)>,
+    /// Retired completions (only when [`WindowEngine::record_responses()`]
+    /// is on; `CollectiveDone` floods would be noise for collectives).
+    pub responses: Vec<Retired>,
+}
+
+/// Internal completion key: seq matches are scoped to the origin node so
+/// independent origins may reuse sequence numbers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+enum Key {
+    Done(u32),
+    Seq(NodeId, u64),
+}
+
+struct QueuedOp {
+    key: Key,
+    pub_key: CompletionKey,
+    tag: u64,
+    origin: NodeId,
+    reliable: bool,
+    pace_bytes: usize,
+    pkt: Packet,
+}
+
+struct InflightOp {
+    slot: usize,
+    tag: u64,
+    pub_key: CompletionKey,
+}
+
+struct State {
+    queues: Vec<VecDeque<QueuedOp>>,
+    inflight: HashMap<Key, InflightOp>,
+    retired: HashSet<Key>,
+    inflight_per_slot: Vec<usize>,
+    max_inflight: usize,
+    done: usize,
+    duplicates: usize,
+    last_done: SimTime,
+    nak: Option<NakRecord>,
+    cancelled: usize,
+    record_responses: bool,
+    responses: Vec<Retired>,
+    pacer: Option<TokenBucket>,
+    releases: Vec<(SimTime, usize)>,
+}
+
+impl State {
+    /// Pop the next op off `slot`'s queue and turn it into an injection
+    /// command (possibly pace-delayed). `None` when the queue is dry.
+    fn next_cmd(&mut self, slot: usize, now: SimTime) -> Option<InjectCmd> {
+        let op = self.queues[slot].pop_front()?;
+        self.inflight.insert(
+            op.key,
+            InflightOp {
+                slot,
+                tag: op.tag,
+                pub_key: op.pub_key,
+            },
+        );
+        self.inflight_per_slot[slot] += 1;
+        self.max_inflight = self.max_inflight.max(self.inflight_per_slot[slot]);
+        let delay = match &mut self.pacer {
+            Some(tb) => {
+                let release = tb.reserve(now, op.pace_bytes);
+                self.releases.push((release, op.pace_bytes));
+                release.saturating_sub(now)
+            }
+            None => 0,
+        };
+        Some(InjectCmd {
+            origin: op.origin,
+            pkt: op.pkt,
+            reliable: op.reliable,
+            delay,
+        })
+    }
+}
+
+/// The shared windowed transport engine. Construct with [`Self::new`],
+/// optionally add pacing/recording, then [`Self::run`] a batch of ops.
+pub struct WindowEngine {
+    window: usize,
+    pacer: Option<TokenBucket>,
+    record_responses: bool,
+}
+
+impl WindowEngine {
+    /// Engine with `window` ops in flight per slot (minimum 1).
+    pub fn new(window: usize) -> Self {
+        Self {
+            window: window.max(1),
+            pacer: None,
+            record_responses: false,
+        }
+    }
+
+    /// Pace every injection through `bucket` (see module docs).
+    pub fn paced(mut self, bucket: TokenBucket) -> Self {
+        self.pacer = Some(bucket);
+        self
+    }
+
+    /// Record each retired op's completion instruction into the outcome.
+    pub fn record_responses(mut self, on: bool) -> Self {
+        self.record_responses = on;
+        self
+    }
+
+    /// Drive `ops` to completion (or to NAK cancellation / retry
+    /// exhaustion): install the completion hook, kick the initial
+    /// windows, run the DES until quiet, tear the hook down, and report.
+    pub fn run(
+        &self,
+        cl: &mut Cluster,
+        eng: &mut Engine<Cluster>,
+        ops: Vec<WindowedOp>,
+    ) -> Result<WindowOutcome> {
+        let n_ops = ops.len();
+        if n_ops == 0 {
+            return Ok(WindowOutcome {
+                ops: 0,
+                done: 0,
+                last_done: eng.now(),
+                nak: None,
+                cancelled: 0,
+                max_inflight: 0,
+                duplicate_completions: 0,
+                releases: Vec::new(),
+                responses: Vec::new(),
+            });
+        }
+        let n_slots = ops.iter().map(|o| o.slot + 1).max().unwrap_or(1);
+        ensure!(
+            n_slots <= MAX_SLOTS,
+            "window engine slot index {} out of range",
+            n_slots - 1
+        );
+        let mut queues: Vec<VecDeque<QueuedOp>> =
+            (0..n_slots).map(|_| VecDeque::new()).collect();
+        let mut seen: HashSet<Key> = HashSet::with_capacity(n_ops);
+        for op in ops {
+            let key = match op.key {
+                CompletionKey::DoneId(b) => Key::Done(b),
+                CompletionKey::Seq(s) => Key::Seq(op.origin, s),
+            };
+            ensure!(seen.insert(key), "duplicate completion key {:?}", op.key);
+            queues[op.slot].push_back(QueuedOp {
+                key,
+                pub_key: op.key,
+                tag: op.tag,
+                origin: op.origin,
+                reliable: op.reliable,
+                pace_bytes: op.pace_bytes,
+                pkt: op.pkt,
+            });
+        }
+        let state = Rc::new(RefCell::new(State {
+            queues,
+            inflight: HashMap::with_capacity(n_ops.min(n_slots * self.window)),
+            retired: HashSet::with_capacity(n_ops),
+            inflight_per_slot: vec![0; n_slots],
+            max_inflight: 0,
+            done: 0,
+            duplicates: 0,
+            last_done: eng.now(),
+            nak: None,
+            cancelled: 0,
+            record_responses: self.record_responses,
+            responses: Vec::new(),
+            pacer: self.pacer.clone(),
+            releases: Vec::new(),
+        }));
+
+        let hook_state = Rc::clone(&state);
+        cl.on_completion = Some(Box::new(move |rec: &CompletionRecord| {
+            let mut st = hook_state.borrow_mut();
+            let candidate = match &rec.instr {
+                Instruction::CollectiveDone { block } => {
+                    let k = Key::Done(*block);
+                    if st.inflight.contains_key(&k) || st.retired.contains(&k) {
+                        k
+                    } else {
+                        Key::Seq(rec.node, rec.seq)
+                    }
+                }
+                _ => Key::Seq(rec.node, rec.seq),
+            };
+            let Some(info) = st.inflight.remove(&candidate) else {
+                if st.retired.contains(&candidate) {
+                    st.duplicates += 1; // retransmit echo — already retired
+                }
+                return Vec::new(); // foreign completion
+            };
+            st.retired.insert(candidate);
+            st.inflight_per_slot[info.slot] -= 1;
+            st.done += 1;
+            st.last_done = rec.time;
+            if let Instruction::Nack { reason, .. } = &rec.instr {
+                if st.nak.is_none() {
+                    st.nak = Some(NakRecord {
+                        from: rec.from,
+                        tag: info.tag,
+                        reason: *reason,
+                        key: info.pub_key,
+                    });
+                }
+                // Cancel the remaining plan: drain in-flight ops, inject
+                // nothing more (the lease is bad — hammering it with the
+                // rest of the window would just be more NAKs).
+                let queued: usize = st.queues.iter().map(|q| q.len()).sum();
+                st.cancelled += queued;
+                for q in &mut st.queues {
+                    q.clear();
+                }
+            }
+            if st.record_responses {
+                st.responses.push(Retired {
+                    key: info.pub_key,
+                    tag: info.tag,
+                    instr: rec.instr.clone(),
+                    time: rec.time,
+                });
+            }
+            match st.next_cmd(info.slot, rec.time) {
+                Some(cmd) => vec![cmd],
+                None => Vec::new(),
+            }
+        }));
+
+        // Kick the initial per-slot windows.
+        let mut kicks = Vec::new();
+        {
+            let mut st = state.borrow_mut();
+            let now = eng.now();
+            for slot in 0..n_slots {
+                for _ in 0..self.window {
+                    match st.next_cmd(slot, now) {
+                        Some(cmd) => kicks.push(cmd),
+                        None => break,
+                    }
+                }
+            }
+        }
+        for cmd in kicks {
+            cl.inject_cmd(eng, cmd);
+        }
+        eng.run(cl);
+        cl.on_completion = None;
+        let st = Rc::try_unwrap(state)
+            .ok()
+            .expect("completion hook released")
+            .into_inner();
+        Ok(WindowOutcome {
+            ops: n_ops,
+            done: st.done,
+            last_done: st.last_done,
+            nak: st.nak,
+            cancelled: st.cancelled,
+            max_inflight: st.max_inflight,
+            duplicate_completions: st.duplicates,
+            releases: st.releases,
+            responses: st.responses,
+        })
+    }
+}

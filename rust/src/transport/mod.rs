@@ -12,11 +12,19 @@
 //!   paces its own reads from the block-interleaved pool, which is how
 //!   the paper dissolves incast without a congestion-control protocol
 //!   (§2.5, experiment E3).
+//! * **One windowed engine** ([`engine::WindowEngine`]) — the shared
+//!   reliable-injection/completion-refill state machine under both the
+//!   collective driver and the pooled-memory client: per-slot
+//!   self-clocked windows, completion keying generic over done-id vs
+//!   sequence, NAK surfacing with plan cancellation, and token-bucket
+//!   paced refill.
 
+pub mod engine;
 pub mod rate;
 pub mod reliability;
 pub mod reorder;
 
+pub use engine::{CompletionKey, NakRecord, Retired, WindowEngine, WindowOutcome, WindowedOp};
 pub use rate::TokenBucket;
 pub use reliability::{PendingKey, ReliabilityTable, RetryVerdict};
 pub use reorder::ReorderBuffer;

@@ -50,6 +50,23 @@ impl TokenBucket {
         }
     }
 
+    /// Unconditionally debit `bytes` at `now` — the balance may go
+    /// negative — and return the earliest time the paced send may be
+    /// released. Back-to-back reservations serialize at exactly the fill
+    /// rate, which is what the window engine's paced refill needs: it
+    /// commits to the injection when a completion frees the slot and
+    /// defers the wire release to the bucket's schedule.
+    pub fn reserve(&mut self, now: SimTime, bytes: usize) -> SimTime {
+        debug_assert!(self.rate > 0.0, "reserve on a zero-rate bucket");
+        self.refill(now);
+        self.tokens -= bytes as f64;
+        if self.tokens >= 0.0 {
+            now
+        } else {
+            now + ((-self.tokens) / self.rate).ceil() as SimTime
+        }
+    }
+
     pub fn tokens(&self) -> f64 {
         self.tokens
     }
@@ -70,6 +87,18 @@ mod tests {
             Ok(()) => panic!("should have paced"),
         }
         assert!(tb.try_take(900, 9000).is_ok());
+    }
+
+    #[test]
+    fn reserve_serializes_at_the_fill_rate() {
+        // 80 Gbps = 10 B/ns, burst 9000.
+        let mut tb = TokenBucket::new(80.0, 9000);
+        assert_eq!(tb.reserve(0, 9000), 0, "burst releases immediately");
+        // Debt: each further 9000 B releases 900 ns after the previous.
+        assert_eq!(tb.reserve(0, 9000), 900);
+        assert_eq!(tb.reserve(0, 9000), 1800);
+        // Refill repays debt before new reservations.
+        assert_eq!(tb.reserve(2700, 9000), 2700);
     }
 
     #[test]

@@ -158,3 +158,43 @@ fn gather_program_translates_through_leases() {
         .unwrap_err();
     assert!(matches!(err, MemError::Nak { .. }), "{err:?}");
 }
+
+/// A NAK mid-plan cancels the remaining window cleanly: queued ops are
+/// dropped (not hammered into more NAKs), in-flight ops drain, no
+/// reliability timers dangle, no completion hook leaks — and the client
+/// is immediately usable again on the same fabric.
+#[test]
+fn nak_mid_plan_cancels_and_drains_cleanly() {
+    let mut w = world();
+    // 16 KiB lease but a 64 KiB read: the tail pieces fall outside the
+    // lease and fault Unmapped on their devices. window=1 keeps most of
+    // the plan queued when the first NAK lands, exercising cancellation.
+    let a = w.ctl.malloc_mapped(&mut w.cl, 1, 16 << 10, true).unwrap();
+    let c = client(&w, 0, 1).with_window(1);
+    let err = c.read(&mut w.cl, &mut w.eng, a.gva, 64 << 10).unwrap_err();
+    assert!(
+        matches!(err, MemError::Nak { reason: NakReason::Unmapped, .. }),
+        "{err:?}"
+    );
+    // Clean teardown: the engine removed its hook and every injected
+    // reliable op was completed (acked or NAK'd) — nothing still pending.
+    assert!(w.cl.on_completion.is_none(), "completion hook leaked");
+    assert_eq!(
+        w.cl.xport.outstanding(),
+        0,
+        "dangling reliability timers after NAK cancellation"
+    );
+    // The same client works right away: the cancelled plan left no state.
+    c.write(&mut w.cl, &mut w.eng, a.gva, &[7u8; 4096]).unwrap();
+    assert_eq!(
+        c.read(&mut w.cl, &mut w.eng, a.gva, 4096).unwrap(),
+        vec![7u8; 4096]
+    );
+    // And the host mailbox holds no orphaned responses from the
+    // cancelled plan (they were drained with it).
+    let mailbox_len = {
+        let h = w.cl.host_mut(w.hosts[0]);
+        h.mailbox.len()
+    };
+    assert_eq!(mailbox_len, 0, "orphaned responses left in the mailbox");
+}
