@@ -1,10 +1,12 @@
-//! The paper's headline experiment (§3.3), end to end.
+//! The paper's headline experiment (§3.3), end to end — on the session
+//! API.
 //!
-//! Runs the 4-node allreduce through the unified collective engine —
-//! the NetDAM in-memory ring, the Horovod-style ring over RoCE hosts,
-//! and native-MPI recursive doubling — prints the §3.3 comparison table,
-//! then sweeps the full algorithm menu (halving-doubling, hierarchical
-//! two-level, and the standalone primitives) on the same grid. Two modes:
+//! Builds ONE [`netdam::comm::Fabric`] (topology + registry + shared
+//! window engine), derives a tenant [`netdam::comm::Communicator`], and
+//! runs the 4-node allreduce through it: the NetDAM in-memory ring
+//! verified bit-exactly against the host oracle, then the §3.3
+//! comparison table (ring over RoCE hosts, native-MPI recursive
+//! doubling) and the full algorithm menu on the same grid. Two modes:
 //!
 //! ```sh
 //! cargo run --release --example allreduce_e2e                 # data-bearing, verified
@@ -16,14 +18,11 @@
 //! the numbers that land.
 
 use anyhow::Result;
-use netdam::collectives::{
-    oracle_sum, read_vector, run_collective, run_ring_allreduce, seed_gradients, AlgoKind,
-    RingSpec, RunOpts,
-};
+use netdam::collectives::{oracle_sum, run_collective, AlgoKind, RunOpts};
+use netdam::comm::Fabric;
 use netdam::coordinator::{run_e2, E2Config};
 use netdam::metrics::Table;
-use netdam::net::{Cluster, LinkConfig, Topology};
-use netdam::sim::{fmt_ns, Engine};
+use netdam::sim::fmt_ns;
 
 fn main() -> Result<()> {
     let paper_scale = std::env::var("NETDAM_PAPER_SCALE").is_ok();
@@ -42,41 +41,33 @@ fn main() -> Result<()> {
     );
 
     // --- correctness first: data-bearing verification run --------------
+    // One Fabric, one Communicator, one blocking allreduce — the session
+    // API's smallest program.
     if !timing_only {
-        let t = Topology::star(7, 4, 0, LinkConfig::dc_100g());
-        let mut cl = t.cluster;
-        let devices = t.devices;
-        let grads = seed_gradients(&mut cl, &devices, elements, 0, 99);
-        let mut eng: Engine<Cluster> = Engine::new();
-        let out = run_ring_allreduce(
-            &mut cl,
-            &mut eng,
-            &devices,
-            &RingSpec {
-                elements,
-                ..Default::default()
-            },
-        )?;
+        let mut fabric = Fabric::builder().star(4).seed(7).build()?;
+        let comm = fabric.communicator(elements as u64 * 4)?;
+        let grads = comm.seed_gradients(&mut fabric, elements, 99);
+        let out = comm.allreduce(&mut fabric, elements)?;
+        anyhow::ensure!(out.complete(), "allreduce stopped short");
         let oracle = oracle_sum(&grads);
         let mut exact = true;
-        for &d in &devices {
-            let got = read_vector(&mut cl, d, 0, elements)?;
-            exact &= got == oracle;
+        for r in 0..4 {
+            exact &= comm.read_vector(&mut fabric, r, elements)? == oracle;
         }
         println!(
-            "verification: {} blocks, all devices bit-exact vs oracle: {exact}",
-            out.blocks
+            "verification: {} chunk programs, all devices bit-exact vs oracle: {exact}",
+            out.ops
         );
         assert!(exact, "allreduce numerics diverged from the oracle");
         println!(
             "NetDAM allreduce of {} f32: {} (window {})\n",
             elements,
-            fmt_ns(out.elapsed_ns),
+            fmt_ns(out.elapsed_ns()),
             16
         );
     }
 
-    // --- the §3.3 table -------------------------------------------------
+    // --- the §3.3 table (device arms ride shared fabrics inside) -------
     let cfg = E2Config {
         elements,
         ranks: 4,
@@ -126,7 +117,8 @@ fn main() -> Result<()> {
             ]);
         }
         print!("{}", table.render());
-        println!("\n(select on the CLI with `netdam allreduce --algo <list|all>`)");
+        println!("\n(select on the CLI with `netdam allreduce --algo <list|all>`;");
+        println!(" overlapping multi-tenant jobs: `netdam comm`)");
     }
     Ok(())
 }

@@ -1,5 +1,5 @@
 //! Embedding-bag gather on the pooled memory plane (TensorDIMM-style
-//! near-memory reduction).
+//! near-memory reduction) — driven through the session API.
 //!
 //! A recommendation model's embedding table lives sharded across the
 //! NetDAM pool (block interleaving spreads rows over every device). For
@@ -10,22 +10,22 @@
 //! `Simd` add, and writes the pooled sum into a result slot — only the
 //! result row ever crosses the host link, a `bag_size:1` traffic
 //! reduction exactly like TensorDIMM's near-memory embedding lookups.
-//! All bags are submitted into one pipelined `MemBatch`, so every bag's
-//! program is in flight concurrently under the shared window engine
-//! (the old API ran one bag per blocking call).
+//!
+//! Since PR 5 the example holds a [`netdam::comm::Fabric`]: the
+//! controller, topology and windowed engine come from one builder, the
+//! tenant client from [`Fabric::mem_client`], and the bag batch is
+//! submitted onto the fabric's **shared** session — the same engine a
+//! concurrent training job's collectives would multiplex onto.
 //!
 //! ```sh
 //! cargo run --release --example embedding_gather
 //! ```
 
 use anyhow::Result;
-use netdam::mem::MemClient;
-use netdam::net::{Cluster, LinkConfig, Topology};
-use netdam::pool::{InterleaveMap, SdnController};
-use netdam::sim::{fmt_ns, Engine};
+use netdam::comm::Fabric;
+use netdam::sim::fmt_ns;
 use netdam::util::bytes::{bytes_to_f32s, f32s_to_bytes};
 use netdam::util::Xoshiro256;
-use netdam::wire::DeviceIp;
 
 const ROW_F32: usize = 256; // 1 KiB rows: 8 per interleave block
 const ROW_BYTES: usize = ROW_F32 * 4;
@@ -35,34 +35,35 @@ const BAG: usize = 4;
 
 fn main() -> Result<()> {
     println!("== Embedding-bag gather: near-memory reduce over the pool ==\n");
-    let t = Topology::star(0xE1B, 4, 1, LinkConfig::dc_100g());
-    let mut cl = t.cluster;
-    let mut eng: Engine<Cluster> = Engine::new();
-    let map = InterleaveMap::paper_default((1..=4).map(DeviceIp::lan).collect());
-    let mut ctl = SdnController::new(map, 2 << 30);
+    let mut fabric = Fabric::builder()
+        .star(4)
+        .hosts(1)
+        .seed(0xE1B)
+        .with_pool(1 << 20)
+        .build()?;
+    let client = fabric.mem_client()?;
+    let tenant = client.tenant;
 
     // Lease the table + result slots; the controller programs the IOMMUs.
-    ctl.grant_host(&mut cl, 1, DeviceIp::lan(101));
-    let table = ctl.malloc_mapped(&mut cl, 1, (N_ROWS * ROW_BYTES) as u64, true)?;
-    let results = ctl.malloc_mapped(&mut cl, 1, (N_BAGS * ROW_BYTES) as u64, true)?;
-    let client = MemClient::new(t.hosts[0], DeviceIp::lan(101), 1, ctl.map().clone());
+    let table = fabric.malloc(tenant, (N_ROWS * ROW_BYTES) as u64, true)?;
+    let results = fabric.malloc(tenant, (N_BAGS * ROW_BYTES) as u64, true)?;
 
     // Populate the table: row r = [r, r, ...] (easy to verify sums).
     let mut bytes = Vec::with_capacity(N_ROWS * ROW_BYTES);
     for r in 0..N_ROWS {
         bytes.extend_from_slice(&f32s_to_bytes(&vec![r as f32; ROW_F32]));
     }
-    client.write(&mut cl, &mut eng, table.gva, &bytes)?;
+    fabric.mem_write(&client, table.gva, &bytes)?;
     println!(
         "table: {} rows x {} f32 sharded over {} devices",
         N_ROWS,
         ROW_F32,
-        ctl.map().n_devices()
+        client.map().n_devices()
     );
 
     // Random bags; each gathers BAG rows near memory. All bags ride ONE
-    // pipelined batch: every bag's program is in flight at once under
-    // the per-device windows of the shared transport engine.
+    // pipelined batch on the fabric session: every bag's program is in
+    // flight at once under the per-device windows.
     let mut rng = Xoshiro256::seed_from(0xBA6);
     let mut expect = Vec::with_capacity(N_BAGS);
     let mut batch = client.batch();
@@ -73,15 +74,17 @@ fn main() -> Result<()> {
             .map(|&r| table.gva + r * ROW_BYTES as u64)
             .collect();
         let dst = results.gva + (b * ROW_BYTES) as u64;
-        batch.gather_sum(&mut cl, &gvas, ROW_BYTES, dst)?;
+        batch
+            .gather_sum(fabric.cluster_mut(), &gvas, ROW_BYTES, dst)?;
         expect.push(rows.iter().sum::<u64>() as f32);
     }
-    let t0 = eng.now();
-    batch.run(&mut cl, &mut eng)?;
-    let gather_ns = eng.now() - t0;
+    let t0 = fabric.now();
+    let h = fabric.submit_mem(batch)?;
+    fabric.wait_mem(h)?;
+    let gather_ns = fabric.now() - t0;
 
     // Pull only the pooled results back and verify every lane.
-    let out = client.read(&mut cl, &mut eng, results.gva, N_BAGS * ROW_BYTES)?;
+    let out = fabric.mem_read(&client, results.gva, N_BAGS * ROW_BYTES)?;
     for (b, want) in expect.iter().enumerate() {
         let lanes = bytes_to_f32s(&out[b * ROW_BYTES..(b + 1) * ROW_BYTES])?;
         assert!(

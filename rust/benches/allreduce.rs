@@ -12,6 +12,7 @@
 //! (timing-only payloads; several minutes of wallclock).
 
 use netdam::collectives::{run_collective, AlgoKind, RunOpts};
+use netdam::comm::{buckets_total_elems, plan_buckets, Fabric};
 use netdam::coordinator::{run_e2, E2Config};
 use netdam::metrics::Table;
 use netdam::sim::fmt_ns;
@@ -100,6 +101,72 @@ fn main() {
             netdam_ns as f64 / floor as f64,
         );
     }
+    // --- grid 2: gradient bucketing — small-tensor streams, fused vs
+    // unfused, on one session-API fabric per arm. Throughput counts only
+    // the real tensor bytes (padding excluded), so fusion has to win on
+    // overhead, not on accounting.
+    println!("## gradient bucketing: small-tensor streams (session API)\n");
+    let tensor_counts: &[usize] = if smoke { &[16] } else { &[32, 128] };
+    let mut table = Table::new(&[
+        "tensors",
+        "mode",
+        "collectives",
+        "time",
+        "bus bw (Gbit/s)",
+    ]);
+    for &n_tensors in tensor_counts {
+        let sizes: Vec<usize> = (0..n_tensors).map(|i| 256 + (i * 97) % 1792).collect();
+        let payload_elems: usize = sizes.iter().sum();
+        let mut bw_of_mode = [0.0f64; 2];
+        for (arm, (mode, cap)) in [("unfused", 0usize), ("fused", ranks * 2048)]
+            .into_iter()
+            .enumerate()
+        {
+            let buckets = plan_buckets(&sizes, cap, ranks);
+            let footprint = buckets_total_elems(&buckets);
+            let mut fabric = Fabric::builder()
+                .star(ranks)
+                .seed(0xB0CE)
+                .window(32)
+                .timing_only(true)
+                .build()
+                .expect("fabric");
+            let comm = fabric
+                .communicator(footprint as u64 * 4)
+                .expect("communicator");
+            let t0 = fabric.now();
+            let handles = comm
+                .iallreduce_buckets(&mut fabric, &buckets)
+                .expect("bucket submit");
+            for h in handles {
+                let o = fabric.wait(h).expect("bucket wait");
+                assert!(o.complete(), "bucket stopped short");
+            }
+            let elapsed = fabric.now() - t0;
+            let frac = 2.0 * (ranks as f64 - 1.0) / ranks as f64;
+            let bus_bw = frac * payload_elems as f64 * 4.0 * 8.0 / elapsed.max(1) as f64;
+            bw_of_mode[arm] = bus_bw;
+            table.row(&[
+                n_tensors.to_string(),
+                mode.to_string(),
+                buckets.len().to_string(),
+                fmt_ns(elapsed),
+                format!("{bus_bw:.1}"),
+            ]);
+            json_rows.push(format!(
+                "    {{\"algorithm\": \"bucketed-allreduce\", \"mode\": \"{mode}\", \
+                 \"tensors\": {n_tensors}, \"elements\": {payload_elems}, \"ranks\": {ranks}, \
+                 \"elapsed_ns\": {elapsed}, \"bw_fraction\": {frac:.4}, \
+                 \"bus_bw_gbps\": {bus_bw:.3}, \"retransmits\": 0}}"
+            ));
+        }
+        println!(
+            "{n_tensors} tensors: fused/unfused throughput = {:.2}x",
+            bw_of_mode[1] / bw_of_mode[0].max(1e-9)
+        );
+    }
+    println!("{}", table.render());
+
     let json = format!(
         "{{\n  \"bench\": \"allreduce\",\n  \"ranks\": {ranks},\n  \"smoke\": {smoke},\n  \"results\": [\n{}\n  ]\n}}\n",
         json_rows.join(",\n")

@@ -50,8 +50,9 @@ use super::hierarchical::HierarchicalAllreduce;
 use super::mpi_native::MpiRecursiveDoubling;
 use super::netdam_ring::RingAllreduce;
 use super::primitives::{RingAllGather, RingBroadcast};
+use super::reduce::RingReduce;
 use super::ring_roce::RingRoceAllreduce;
-use super::{seed_gradients, CollectiveReport};
+use super::CollectiveReport;
 
 /// Knobs shared by every driver-run collective.
 #[derive(Debug, Clone)]
@@ -200,28 +201,7 @@ impl Driver {
                     done_id_base = done_id_base
                         .checked_add(n_ops as u32)
                         .expect("completion id space exhausted");
-                    let n_ranks = devices.len();
-                    // Lower the schedule onto the shared window engine:
-                    // one slot per rank, completions keyed by done-id
-                    // (the engine rejects duplicate ids), seqs allocated
-                    // up front from each rank's device.
-                    let mut wops = Vec::with_capacity(n_ops);
-                    for mut op in ops {
-                        ensure!(op.rank < n_ranks, "op rank {} out of range", op.rank);
-                        op.pkt.seq = cl.alloc_seq(devices[op.rank]);
-                        wops.push(WindowedOp {
-                            slot: op.rank,
-                            origin: devices[op.rank],
-                            key: CompletionKey::DoneId(op.done_id),
-                            tag: op.done_id as u64,
-                            reliable: spec.reliable,
-                            // Collectives self-clock off completions and
-                            // never run paced; skip the per-op header
-                            // encode a wire_bytes() charge would cost.
-                            pace_bytes: 0,
-                            pkt: op.pkt,
-                        });
-                    }
+                    let wops = lower_schedule(cl, devices, spec.reliable, ops)?;
                     let out = WindowEngine::new(spec.window).run(cl, eng, wops)?;
                     ops_total += n_ops;
                     ops_done += out.done;
@@ -264,6 +244,37 @@ impl Driver {
             link_drops: cl.metrics.counter("link_drops"),
         })
     }
+}
+
+/// Lower a planned schedule onto engine ops — one slot per rank,
+/// completions keyed by done-id (the engine rejects duplicate ids),
+/// seqs allocated up front from each rank's device. Shared by the
+/// driver's blocking loop and the session fabric (`crate::comm`).
+pub(crate) fn lower_schedule(
+    cl: &mut Cluster,
+    devices: &[NodeId],
+    reliable: bool,
+    ops: Vec<ScheduledOp>,
+) -> Result<Vec<WindowedOp>> {
+    let n_ranks = devices.len();
+    let mut wops = Vec::with_capacity(ops.len());
+    for mut op in ops {
+        ensure!(op.rank < n_ranks, "op rank {} out of range", op.rank);
+        op.pkt.seq = cl.alloc_seq(devices[op.rank]);
+        wops.push(WindowedOp {
+            slot: op.rank,
+            origin: devices[op.rank],
+            key: CompletionKey::DoneId(op.done_id),
+            tag: op.done_id as u64,
+            reliable,
+            // Collectives self-clock off completions and never run
+            // paced; skip the per-op header encode a wire_bytes()
+            // charge would cost.
+            pace_bytes: 0,
+            pkt: op.pkt,
+        });
+    }
+    Ok(wops)
 }
 
 // ------------------------------------------------- schedule → Program
@@ -388,6 +399,8 @@ pub enum AlgoKind {
     AllGather,
     /// Ring broadcast of rank 0's vector.
     Broadcast,
+    /// Rooted reduce: the whole vector summed at the root rank.
+    Reduce,
     /// Host baseline: Horovod-style ring allreduce over RoCE hosts.
     RingRoce,
     /// Host baseline: native-MPI recursive doubling.
@@ -395,13 +408,14 @@ pub enum AlgoKind {
 }
 
 impl AlgoKind {
-    pub const ALL: [AlgoKind; 8] = [
+    pub const ALL: [AlgoKind; 9] = [
         AlgoKind::NetdamRing,
         AlgoKind::HalvingDoubling,
         AlgoKind::Hierarchical,
         AlgoKind::ReduceScatter,
         AlgoKind::AllGather,
         AlgoKind::Broadcast,
+        AlgoKind::Reduce,
         AlgoKind::RingRoce,
         AlgoKind::MpiNative,
     ];
@@ -414,6 +428,7 @@ impl AlgoKind {
             AlgoKind::ReduceScatter => "reduce-scatter",
             AlgoKind::AllGather => "all-gather",
             AlgoKind::Broadcast => "broadcast",
+            AlgoKind::Reduce => "reduce",
             AlgoKind::RingRoce => "ring-roce",
             AlgoKind::MpiNative => "mpi-native",
         }
@@ -428,6 +443,7 @@ impl AlgoKind {
             "reduce-scatter" | "rs" => AlgoKind::ReduceScatter,
             "all-gather" | "ag" | "allgather" => AlgoKind::AllGather,
             "broadcast" | "bcast" => AlgoKind::Broadcast,
+            "reduce" | "rooted-reduce" => AlgoKind::Reduce,
             "ring-roce" | "roce" => AlgoKind::RingRoce,
             "mpi-native" | "native" => AlgoKind::MpiNative,
             other => anyhow::bail!(
@@ -449,7 +465,8 @@ impl AlgoKind {
 
     /// Bytes moved per rank as a fraction of the vector size V — the
     /// nccl-tests "bus bandwidth" convention. Allreduces move
-    /// 2·(N−1)/N·V, reduce-scatter/all-gather (N−1)/N·V, broadcast V.
+    /// 2·(N−1)/N·V, reduce-scatter/all-gather (N−1)/N·V,
+    /// broadcast/reduce V (the root port is the bottleneck).
     pub fn bw_fraction(self, n_ranks: usize) -> f64 {
         let n = n_ranks as f64;
         match self {
@@ -459,8 +476,36 @@ impl AlgoKind {
             | AlgoKind::RingRoce
             | AlgoKind::MpiNative => 2.0 * (n - 1.0) / n,
             AlgoKind::ReduceScatter | AlgoKind::AllGather => (n - 1.0) / n,
-            AlgoKind::Broadcast => 1.0,
+            AlgoKind::Broadcast | AlgoKind::Reduce => 1.0,
         }
+    }
+
+    /// Construct the schedule generator for a device-run collective.
+    /// `leaf_groups` feeds the hierarchical planner; `root` the rooted
+    /// collectives (broadcast, reduce). Host baselines have no device
+    /// planner and error here.
+    pub fn planner(
+        self,
+        ranks: usize,
+        leaf_groups: &[Vec<usize>],
+        root: usize,
+    ) -> Result<Box<dyn CollectiveAlgorithm>> {
+        let algo: Box<dyn CollectiveAlgorithm> = match self {
+            AlgoKind::NetdamRing => Box::new(RingAllreduce { fused: true }),
+            AlgoKind::ReduceScatter => Box::new(RingAllreduce { fused: false }),
+            AlgoKind::HalvingDoubling => Box::new(HalvingDoubling::new(ranks)?),
+            AlgoKind::Hierarchical => {
+                Box::new(HierarchicalAllreduce::new(leaf_groups.to_vec())?)
+            }
+            AlgoKind::AllGather => Box::new(RingAllGather),
+            AlgoKind::Broadcast => Box::new(RingBroadcast { root }),
+            AlgoKind::Reduce => Box::new(RingReduce { root }),
+            AlgoKind::RingRoce | AlgoKind::MpiNative => anyhow::bail!(
+                "{} is a host baseline (no device planner)",
+                self.name()
+            ),
+        };
+        Ok(algo)
     }
 }
 
@@ -492,20 +537,14 @@ impl Default for RunOpts {
     }
 }
 
-/// Build the right fabric for `kind`, run it through the shared
-/// [`Driver`], and return the report. This is the data-driven entry the
-/// CLI (`--algo`), bench grid, and E2 coordinator share.
+/// One-call compatibility shim over the session API: build a
+/// **single-use** [`crate::comm::Fabric`], derive one communicator, run
+/// `kind` to completion, and return the report. Long-lived applications
+/// (and anything wanting concurrency, bucketing, or nonblocking ops)
+/// should hold a `Fabric` and call the communicator API directly — this
+/// entry keeps the CLI (`--algo`), bench grid, and E2 coordinator
+/// working unchanged.
 pub fn run_collective(kind: AlgoKind, opts: &RunOpts) -> Result<CollectiveReport> {
-    use crate::net::{DeviceProfile, EcmpMode, LinkConfig, Topology};
-
-    let spec = CollectiveSpec {
-        elements: opts.elements,
-        window: opts.window,
-        reliable: opts.reliable,
-        ..Default::default()
-    };
-    let mut eng: Engine<Cluster> = Engine::new();
-
     if kind.is_host_baseline() {
         // The host baselines model a PFC-lossless RoCE fabric and have no
         // retransmit machinery; reject fault injection instead of
@@ -515,6 +554,13 @@ pub fn run_collective(kind: AlgoKind, opts: &RunOpts) -> Result<CollectiveReport
             "{} assumes a lossless fabric (loss_p must be 0)",
             kind.name()
         );
+        let spec = CollectiveSpec {
+            elements: opts.elements,
+            window: opts.window,
+            reliable: opts.reliable,
+            ..Default::default()
+        };
+        let mut eng: Engine<Cluster> = Engine::new();
         let mut cl = Cluster::new(opts.seed);
         let out = match kind {
             AlgoKind::RingRoce => {
@@ -544,56 +590,28 @@ pub fn run_collective(kind: AlgoKind, opts: &RunOpts) -> Result<CollectiveReport
         return Ok(out.report(kind.name(), opts.elements));
     }
 
-    let profile = if opts.timing_only {
-        DeviceProfile::TimingOnly
-    } else {
-        DeviceProfile::Data
-    };
-    let topo = if kind == AlgoKind::Hierarchical {
-        ensure!(
-            opts.ranks >= 4 && opts.ranks % 2 == 0,
-            "hierarchical needs an even rank count >= 4"
-        );
-        Topology::fat_tree_with(
-            opts.seed,
-            2,
-            opts.ranks / 2,
-            2,
-            LinkConfig::dc_100g(),
-            EcmpMode::FlowHash,
-            profile,
-        )
-    } else {
-        Topology::star_with(opts.seed, opts.ranks, 0, LinkConfig::dc_100g(), profile)
-    };
-    let groups = topo.leaf_groups.clone();
-    let mut cl = topo.cluster;
-    let devices = topo.devices;
+    let mut fabric = crate::comm::Fabric::builder()
+        .seed(opts.seed)
+        .window(opts.window)
+        .reliable(opts.reliable)
+        .loss(opts.loss_p)
+        .timing_only(opts.timing_only)
+        .for_algo(kind, opts.ranks)?
+        .build()?;
+    let comm = fabric.communicator(opts.elements as u64 * 4)?;
     if !opts.timing_only {
-        seed_gradients(&mut cl, &devices, opts.elements, spec.base_addr, opts.seed);
+        comm.seed_gradients(&mut fabric, opts.elements, opts.seed);
     }
-    if opts.loss_p > 0.0 {
-        cl.fault.loss_p = opts.loss_p;
-    }
-
-    let mut algo: Box<dyn CollectiveAlgorithm> = match kind {
-        AlgoKind::NetdamRing => Box::new(RingAllreduce { fused: true }),
-        AlgoKind::ReduceScatter => Box::new(RingAllreduce { fused: false }),
-        AlgoKind::HalvingDoubling => Box::new(HalvingDoubling::new(opts.ranks)?),
-        AlgoKind::Hierarchical => Box::new(HierarchicalAllreduce::new(groups)?),
-        AlgoKind::AllGather => Box::new(RingAllGather),
-        AlgoKind::Broadcast => Box::new(RingBroadcast { root: 0 }),
-        AlgoKind::RingRoce | AlgoKind::MpiNative => unreachable!("handled above"),
-    };
-    let out = Driver::run(&mut cl, &mut eng, &devices, algo.as_mut(), &spec)?;
+    let h = comm.icollective(&mut fabric, kind, opts.elements, 0)?;
+    let out = fabric.wait(h)?;
     if opts.loss_p == 0.0 || opts.reliable {
         ensure!(
-            out.ops_done == out.ops,
+            out.complete(),
             "{} incomplete: {}/{} ops done",
             kind.name(),
             out.ops_done,
             out.ops
         );
     }
-    Ok(out.report(kind.name(), opts.elements))
+    Ok(fabric.report(&out))
 }

@@ -15,6 +15,7 @@
 //! | [`halving_doubling::HalvingDoubling`] | in-memory ALU | 2·log₂N rounds, latency-optimal |
 //! | [`hierarchical::HierarchicalAllreduce`] | in-memory ALU | leaf reduce → leader ring → leaf broadcast |
 //! | [`primitives::RingAllGather`] / [`primitives::RingBroadcast`] | — (pure writes) | standalone primitives |
+//! | [`reduce::RingReduce`] | in-memory ALU | rooted ring reduce: every chain ends at the root |
 //! | [`ring_roce::RingRoceAllreduce`] | host CPU after PCIe DMA | Horovod-style baseline |
 //! | [`mpi_native::MpiRecursiveDoubling`] | host CPU, full vector/round | native-MPI baseline |
 
@@ -25,6 +26,7 @@ pub mod mpi_native;
 pub mod netdam_ring;
 pub mod oracle;
 pub mod primitives;
+pub mod reduce;
 pub mod ring_roce;
 
 pub use driver::{
@@ -38,6 +40,7 @@ pub use oracle::{
     naive_sum, oracle_sum, read_vector, seed_gradients, seed_gradients_exact,
 };
 pub use primitives::{RingAllGather, RingBroadcast};
+pub use reduce::RingReduce;
 
 use crate::sim::SimTime;
 

@@ -1,0 +1,152 @@
+//! Rooted ring reduce: the whole vector summed at one root rank.
+//!
+//! MPI_Reduce on the NetDAM ISA is the §3 reduce-scatter chain with the
+//! rotation pinned: for **every** block of the vector, one packet
+//! program starts at rank `(root+1) % N`, folds each rank's local block
+//! into the packet buffer with an on-device `Simd` add
+//! (`reduce ×(N−1)`), and terminates at `root` with the hash-guarded
+//! exactly-once write — [`lower_ring_chunk`] without the fused
+//! all-gather tail. Non-root ranks keep their pristine data (interim
+//! reduce hops have no local side effects).
+//!
+//! Every chain crosses the root's ingress port, so the natural floor is
+//! `V / line_rate` — `bw_fraction == 1.0`, like broadcast in the
+//! opposite direction.
+
+use anyhow::{ensure, Result};
+
+use crate::isa::SimdOp;
+use crate::net::Cluster;
+use crate::wire::Packet;
+
+use super::driver::{
+    guard_hash, lower_ring_chunk, op_flags, prog_env, read_block, CollectiveAlgorithm, PlanCtx,
+    Phase, ScheduledOp,
+};
+
+/// The rooted-reduce schedule generator (`AlgoKind::Reduce`).
+pub struct RingReduce {
+    pub root: usize,
+}
+
+impl CollectiveAlgorithm for RingReduce {
+    fn name(&self) -> &'static str {
+        "reduce"
+    }
+
+    fn plan_phase(&mut self, cl: &mut Cluster, ctx: &PlanCtx<'_>, _phase: usize) -> Result<Phase> {
+        let n = ctx.devices.len();
+        ensure!(n >= 2, "reduce needs at least 2 ranks");
+        ensure!(self.root < n, "reduce root {} out of range", self.root);
+        let hops = n - 1;
+        ensure!(
+            hops <= crate::wire::srou_hdr::MAX_SEGMENTS,
+            "ring of {n} exceeds the SROU stack"
+        );
+        let spec = ctx.spec;
+        // Chains start one past the root so the ring walk
+        // start+1, ..., start+N−1 ends exactly at the root.
+        let start = (self.root + 1) % n;
+        let mut ops = Vec::new();
+        let mut next_id = ctx.done_id_base;
+        let mut off = 0usize;
+        while off < spec.elements {
+            let lanes = spec.lanes.min(spec.elements - off);
+            let len = lanes * 4;
+            let addr = spec.base_addr + off as u64 * 4;
+            // Payload: the initiator's pristine block. Guard: hash of
+            // the root's pristine block (§3.1 exactly-once write).
+            let payload = read_block(cl, ctx.devices[start], addr, len)?;
+            let expect_hash = guard_hash(cl, ctx.devices[self.root], addr, len)?;
+            let done_id = next_id;
+            next_id += 1;
+            let env = prog_env(cl, ctx.devices[self.root], len, hops, spec.reliable);
+            let instr = lower_ring_chunk(
+                SimdOp::Add,
+                addr,
+                n,
+                false,
+                expect_hash,
+                done_id,
+                &env,
+            )?;
+            let pkt = Packet::new(
+                ctx.ips[start],
+                0, // seq assigned by the driver/fabric
+                crate::srou::ring_chain(ctx.ips, start, hops),
+                instr,
+            )
+            .with_flags(op_flags(spec.reliable))
+            .with_payload(payload);
+            ops.push(ScheduledOp {
+                rank: start,
+                done_id,
+                pkt,
+            });
+            off += lanes;
+        }
+        Ok(Phase::Ops(ops))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::driver::{CollectiveSpec, Driver};
+    use crate::collectives::oracle::{naive_sum, read_vector, seed_gradients_exact};
+    use crate::net::{LinkConfig, Topology};
+    use crate::sim::Engine;
+
+    fn run_reduce(n: usize, elements: usize, root: usize) {
+        let t = Topology::star(11, n, 0, LinkConfig::dc_100g());
+        let mut cl = t.cluster;
+        let devices = t.devices;
+        // Integer-valued data: any association sums exactly, so the
+        // rooted chain order equals naive_sum bit-for-bit.
+        let grads = seed_gradients_exact(&mut cl, &devices, elements, 0, 0x5EED);
+        let spec = CollectiveSpec {
+            elements,
+            window: 8,
+            ..Default::default()
+        };
+        let mut algo = RingReduce { root };
+        let mut eng: Engine<crate::net::Cluster> = Engine::new();
+        let out = Driver::run(&mut cl, &mut eng, &devices, &mut algo, &spec).unwrap();
+        assert_eq!(out.ops_done, out.ops, "all chains retired");
+        let oracle = naive_sum(&grads);
+        for (r, &d) in devices.iter().enumerate() {
+            let got = read_vector(&mut cl, d, 0, elements).unwrap();
+            if r == root {
+                assert_eq!(got, oracle, "root holds the full sum");
+            } else {
+                assert_eq!(got, grads[r], "rank {r} keeps pristine data");
+            }
+        }
+    }
+
+    #[test]
+    fn reduce_lands_the_sum_at_root_zero() {
+        run_reduce(4, 2 * 2048 + 512, 0);
+    }
+
+    #[test]
+    fn reduce_supports_any_root() {
+        for root in 0..4 {
+            run_reduce(4, 2048, root);
+        }
+    }
+
+    #[test]
+    fn reduce_rejects_bad_root() {
+        let t = Topology::star(3, 2, 0, LinkConfig::dc_100g());
+        let mut cl = t.cluster;
+        let devices = t.devices;
+        let spec = CollectiveSpec {
+            elements: 2048,
+            ..Default::default()
+        };
+        let mut algo = RingReduce { root: 5 };
+        let mut eng: Engine<crate::net::Cluster> = Engine::new();
+        assert!(Driver::run(&mut cl, &mut eng, &devices, &mut algo, &spec).is_err());
+    }
+}

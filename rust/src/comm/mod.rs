@@ -1,0 +1,1234 @@
+//! The session API: one [`Fabric`], many tenants, nonblocking
+//! collectives.
+//!
+//! Before this module, the application surface was one-shot:
+//! `run_collective` silently built and tore down a whole fabric per
+//! call, every example hand-assembled `Cluster`/`SdnController`/
+//! `MemClient`, and two jobs could never share devices. A DNN training
+//! framework does not work that way: it holds a communicator per job,
+//! streams many small bucketed gradient tensors, and overlaps
+//! communication with compute (NetReduce, and the FPGA AI-SmartNIC
+//! line of work). This module is that front door:
+//!
+//! * [`Fabric`] — built **once** by [`FabricBuilder`]: topology +
+//!   instruction registry + DES engine, optionally the §2.6 pool
+//!   controller. It owns the shared
+//!   [`EngineSession`](crate::transport::EngineSession), so every
+//!   in-flight operation — collectives from any communicator and
+//!   pooled-memory batches alike — multiplexes onto one completion
+//!   hook with per-slot windows instead of serialized fabric rebuilds.
+//! * [`Communicator`] — a per-tenant handle carrying rank identity and
+//!   a private device-memory region. Ops are **nonblocking**:
+//!   [`iallreduce`](Communicator::iallreduce) /
+//!   [`ireduce_scatter`](Communicator::ireduce_scatter) /
+//!   [`iallgather`](Communicator::iallgather) /
+//!   [`ibcast`](Communicator::ibcast) /
+//!   [`ireduce`](Communicator::ireduce) return a redeemable
+//!   [`CollectiveHandle`]; [`Fabric::wait`] drives the shared DES until
+//!   that op (and any concurrent neighbors) completes.
+//! * **Gradient bucketing** — [`plan_buckets`] packs a stream of small
+//!   tensors into interleave-block-sized buckets and
+//!   [`Communicator::iallreduce_buckets`] lowers each bucket as one
+//!   collective, so tiny tensors stop paying a full per-op schedule
+//!   (the NetReduce / Horovod fusion-buffer trick).
+//! * **Memory plane on the same session** — [`Fabric::submit_mem`]
+//!   submits a [`MemBatch`] plan into the shared session;
+//!   [`Fabric::wait_mem`] redeems it. A NAK in one tenant's plan
+//!   cancels *only that plan* — the engine's per-plan cancellation —
+//!   while neighbors keep flowing.
+//!
+//! Concurrency contract: ops submitted on one fabric run concurrently
+//! in simulated time. Two ops that write the **same** region (e.g. two
+//! `iallreduce` over one communicator range) must not be in flight
+//! together — use disjoint ranges (buckets) or wait between them.
+//! Distinct communicators always use disjoint regions.
+//!
+//! `run_collective(AlgoKind, &RunOpts)` is now a compatibility shim
+//! over a single-use `Fabric` (see `collectives::driver`).
+
+use anyhow::{bail, ensure, Result};
+
+use crate::collectives::driver::{
+    lower_schedule, CollectiveAlgorithm, CollectiveSpec, Phase, PlanCtx,
+};
+use crate::collectives::{AlgoKind, CollectiveReport};
+use crate::iommu::Perms;
+use crate::isa::registry::MemAccess;
+use crate::mem::{BatchResult, MemBatch, MemClient, MemError, PreparedMemPlan};
+use crate::net::{Cluster, DeviceProfile, EcmpMode, LinkConfig, NodeId, Topology};
+use crate::pool::{Allocation, IommuDirectory, InterleaveMap, SdnController, TenantId};
+use crate::sim::{Engine, SimTime};
+use crate::transport::{EngineSession, PlanId, ReliabilityTable};
+use crate::wire::DeviceIp;
+
+/// The pool/IOMMU granule this fabric programs (the paper's 8 KiB
+/// interleave block).
+const GRANULE: u64 = 8192;
+
+fn round_up(v: u64, to: u64) -> u64 {
+    v.div_ceil(to) * to
+}
+
+// ------------------------------------------------------------- builder
+
+/// Which physical fabric to build.
+#[derive(Debug, Clone, Copy)]
+pub enum FabricTopology {
+    /// `ranks` devices (+ hosts) on one ToR switch — the paper testbed.
+    Star,
+    /// Two-level Clos (`pods × devs_per_leaf` devices, `spines` spines).
+    FatTree {
+        pods: usize,
+        devs_per_leaf: usize,
+        spines: usize,
+    },
+    /// Two leaves × two spines, everything dual-homed (E4's fabric).
+    DualSpine { devs_per_leaf: usize },
+}
+
+/// Builds a [`Fabric`] once; see the module docs.
+pub struct FabricBuilder {
+    topology: FabricTopology,
+    ranks: usize,
+    hosts: usize,
+    seed: u64,
+    link: LinkConfig,
+    profile: DeviceProfile,
+    ecmp: EcmpMode,
+    window: usize,
+    reliable: bool,
+    loss_p: f64,
+    pool_bytes: u64,
+}
+
+impl Default for FabricBuilder {
+    fn default() -> Self {
+        Self {
+            topology: FabricTopology::Star,
+            ranks: 4,
+            hosts: 0,
+            seed: 0xFAB0,
+            link: LinkConfig::dc_100g(),
+            profile: DeviceProfile::Data,
+            ecmp: EcmpMode::FlowHash,
+            window: 16,
+            reliable: false,
+            loss_p: 0.0,
+            pool_bytes: 0,
+        }
+    }
+}
+
+impl FabricBuilder {
+    /// Star fabric with `ranks` devices.
+    pub fn star(mut self, ranks: usize) -> Self {
+        self.topology = FabricTopology::Star;
+        self.ranks = ranks;
+        self
+    }
+
+    /// Two-level Clos fabric (ranks = `pods × devs_per_leaf`).
+    pub fn fat_tree(mut self, pods: usize, devs_per_leaf: usize, spines: usize) -> Self {
+        self.topology = FabricTopology::FatTree {
+            pods,
+            devs_per_leaf,
+            spines,
+        };
+        self
+    }
+
+    /// E4's dual-spine fabric (ranks = `2 × devs_per_leaf`).
+    pub fn dual_spine(mut self, devs_per_leaf: usize) -> Self {
+        self.topology = FabricTopology::DualSpine { devs_per_leaf };
+        self
+    }
+
+    /// The canonical topology for a device collective: hierarchical
+    /// runs on the 2-pod fat-tree, everything else on a star — the one
+    /// place the `run_collective` shim and the E2 coordinator share.
+    pub fn for_algo(self, kind: AlgoKind, ranks: usize) -> Result<Self> {
+        Ok(if kind == AlgoKind::Hierarchical {
+            ensure!(
+                ranks >= 4 && ranks % 2 == 0,
+                "hierarchical needs an even rank count >= 4"
+            );
+            self.fat_tree(2, ranks / 2, 2)
+        } else {
+            self.star(ranks)
+        })
+    }
+
+    /// Plain hosts attached to the switch (star only; pooled-memory
+    /// tenants each need one).
+    pub fn hosts(mut self, n: usize) -> Self {
+        self.hosts = n;
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    pub fn link(mut self, link: LinkConfig) -> Self {
+        self.link = link;
+        self
+    }
+
+    /// Phantom payloads (timing-only devices) for paper-scale vectors.
+    pub fn timing_only(mut self, on: bool) -> Self {
+        self.profile = if on {
+            DeviceProfile::TimingOnly
+        } else {
+            DeviceProfile::Data
+        };
+        self
+    }
+
+    pub fn ecmp(mut self, mode: EcmpMode) -> Self {
+        self.ecmp = mode;
+        self
+    }
+
+    /// Default per-slot in-flight window for the shared session.
+    pub fn window(mut self, window: usize) -> Self {
+        self.window = window.max(1);
+        self
+    }
+
+    /// Timeout-retransmit tracking for every communicator op.
+    pub fn reliable(mut self, on: bool) -> Self {
+        self.reliable = on;
+        self
+    }
+
+    /// Per-wire loss probability (fault injection).
+    pub fn loss(mut self, p: f64) -> Self {
+        self.loss_p = p;
+        self
+    }
+
+    /// Enable the §2.5/§2.6 memory pool with `per_device_bytes` of
+    /// poolable memory per device. Communicator regions are carved
+    /// *above* the pool share, and on a pooled fabric every communicator
+    /// region is IOMMU-mapped (un-leased, RW) so collective programs
+    /// keep translating once the devices latch into enforcing mode.
+    pub fn with_pool(mut self, per_device_bytes: u64) -> Self {
+        self.pool_bytes = per_device_bytes;
+        self
+    }
+
+    /// Build the fabric: topology, routes, reliability table, fault
+    /// injection, the shared engine session, and (optionally) the pool
+    /// controller.
+    pub fn build(self) -> Result<Fabric> {
+        let topo = match self.topology {
+            FabricTopology::Star => Topology::star_with(
+                self.seed,
+                self.ranks,
+                self.hosts,
+                self.link.clone(),
+                self.profile,
+            ),
+            FabricTopology::FatTree {
+                pods,
+                devs_per_leaf,
+                spines,
+            } => Topology::fat_tree_with(
+                self.seed,
+                pods,
+                devs_per_leaf,
+                spines,
+                self.link.clone(),
+                self.ecmp,
+                self.profile,
+            ),
+            FabricTopology::DualSpine { devs_per_leaf } => {
+                Topology::dual_spine(self.seed, devs_per_leaf, self.link.clone(), self.ecmp)
+            }
+        };
+        let mut cl = topo.cluster;
+        let devices = topo.devices;
+        let hosts = topo.hosts;
+        let leaf_groups = topo.leaf_groups;
+        ensure!(!devices.is_empty(), "a fabric needs at least one device");
+        let ips: Vec<DeviceIp> = devices.iter().map(|&d| cl.device(d).ip()).collect();
+        let device_capacity = cl.device(devices[0]).mem_ref().capacity();
+        if self.reliable {
+            // Chains take ~10 us idle but queue under load; a generous
+            // timeout avoids spurious (harmless but wasteful) duplicates.
+            cl.xport = ReliabilityTable::new(2_000_000, 12);
+        }
+        if self.loss_p > 0.0 {
+            cl.fault.loss_p = self.loss_p;
+        }
+        let controller = if self.pool_bytes > 0 {
+            ensure!(
+                !hosts.is_empty(),
+                "a pooled fabric needs at least one host (FabricBuilder::hosts)"
+            );
+            ensure!(
+                self.pool_bytes % GRANULE == 0,
+                "pool share must be a multiple of the {GRANULE} B interleave block"
+            );
+            let map = InterleaveMap::paper_default(ips.clone());
+            Some(SdnController::new(map, self.pool_bytes))
+        } else {
+            None
+        };
+        // Communicator regions live above the pool's per-device share.
+        let region_cursor = if controller.is_some() {
+            self.pool_bytes
+        } else {
+            0
+        };
+        ensure!(
+            region_cursor < device_capacity,
+            "pool share exhausts the device capacity"
+        );
+        Ok(Fabric {
+            cl,
+            eng: Engine::new(),
+            devices,
+            ips,
+            hosts,
+            leaf_groups,
+            session: EngineSession::new(self.window),
+            window: self.window,
+            reliable: self.reliable,
+            next_done_id: 0,
+            next_tenant: 1,
+            next_host: 0,
+            region_cursor,
+            device_capacity,
+            controller,
+            ops: Vec::new(),
+            active_ops: Vec::new(),
+            mem_plans: Vec::new(),
+        })
+    }
+}
+
+// -------------------------------------------------------------- fabric
+
+/// A nonblocking collective in flight (or finished) on the fabric.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CollectiveHandle(usize);
+
+/// A pooled-memory batch in flight on the fabric's session.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MemHandle(usize);
+
+/// What a redeemed collective produced.
+#[derive(Debug, Clone)]
+pub struct CollectiveOutcome {
+    pub algorithm: &'static str,
+    pub elements: usize,
+    /// Packet ops planned across all phases so far.
+    pub ops: usize,
+    /// Ops retired. `< ops` means the op did not converge (unrecovered
+    /// loss on an unreliable fabric) — callers decide whether that is an
+    /// error, exactly like the driver's contract.
+    pub ops_done: usize,
+    /// Simulated time the op was submitted.
+    pub started_ns: SimTime,
+    /// Time of the last retirement (== `started_ns` when nothing ran).
+    pub finished_ns: SimTime,
+}
+
+impl CollectiveOutcome {
+    pub fn complete(&self) -> bool {
+        self.ops_done == self.ops
+    }
+
+    /// Wall time the op spent on the fabric.
+    pub fn elapsed_ns(&self) -> SimTime {
+        self.finished_ns.saturating_sub(self.started_ns)
+    }
+}
+
+/// One nonblocking collective's state machine: phases are planned
+/// lazily — phase `k+1` is planned (against live device memory) only
+/// once phase `k`'s plan retired, mirroring the driver's inter-phase
+/// barrier without stopping anyone else's traffic.
+struct OpState {
+    algorithm: &'static str,
+    algo: Box<dyn CollectiveAlgorithm>,
+    spec: CollectiveSpec,
+    phases: usize,
+    next_phase: usize,
+    plans: Vec<PlanId>,
+    ops_total: usize,
+    started_at: SimTime,
+    finished_at: Option<SimTime>,
+    /// A phase stopped short (loss beyond retries / cancellation);
+    /// later phases would compute on stale data, so the op is parked.
+    stalled: bool,
+}
+
+struct MemPlanState {
+    plan: Option<PlanId>,
+    prepared: Option<PreparedMemPlan>,
+}
+
+/// The long-lived fabric a training framework would link against; see
+/// the module docs. Built once, shared by every tenant.
+pub struct Fabric {
+    cl: Cluster,
+    eng: Engine<Cluster>,
+    devices: Vec<NodeId>,
+    ips: Vec<DeviceIp>,
+    hosts: Vec<NodeId>,
+    leaf_groups: Vec<Vec<usize>>,
+    session: EngineSession,
+    window: usize,
+    reliable: bool,
+    next_done_id: u32,
+    next_tenant: TenantId,
+    next_host: usize,
+    region_cursor: u64,
+    device_capacity: u64,
+    controller: Option<SdnController>,
+    ops: Vec<OpState>,
+    /// Indices of ops that still have phases to advance (finished and
+    /// stalled ops drop off).
+    active_ops: Vec<usize>,
+    mem_plans: Vec<MemPlanState>,
+}
+
+impl Fabric {
+    pub fn builder() -> FabricBuilder {
+        FabricBuilder::default()
+    }
+
+    // ------------------------------------------------------- accessors
+
+    pub fn ranks(&self) -> usize {
+        self.devices.len()
+    }
+
+    pub fn devices(&self) -> &[NodeId] {
+        &self.devices
+    }
+
+    pub fn ips(&self) -> &[DeviceIp] {
+        &self.ips
+    }
+
+    pub fn hosts(&self) -> &[NodeId] {
+        &self.hosts
+    }
+
+    pub fn leaf_groups(&self) -> &[Vec<usize>] {
+        &self.leaf_groups
+    }
+
+    pub fn now(&self) -> SimTime {
+        self.eng.now()
+    }
+
+    pub fn cluster(&self) -> &Cluster {
+        &self.cl
+    }
+
+    /// Mutable cluster access (e.g. building a [`MemBatch`] allocates
+    /// sequence numbers).
+    pub fn cluster_mut(&mut self) -> &mut Cluster {
+        &mut self.cl
+    }
+
+    /// Raw access for experiments that inject their own traffic (E4's
+    /// spray arms) or drive a standalone engine run between fabric
+    /// waits (the session releases its completion hook whenever it goes
+    /// idle).
+    pub fn raw_parts(&mut self) -> (&mut Cluster, &mut Engine<Cluster>) {
+        (&mut self.cl, &mut self.eng)
+    }
+
+    /// High-water mark of plans simultaneously in flight on the shared
+    /// session — ≥ 2 proves two tenants' ops coexisted.
+    pub fn max_concurrent_plans(&self) -> usize {
+        self.session.max_concurrent_plans()
+    }
+
+    // --------------------------------------------------- communicators
+
+    /// Derive a new tenant communicator owning `region_bytes` of every
+    /// device's memory (rounded up to the interleave block). On a pooled
+    /// fabric the region is IOMMU-mapped un-leased so collective
+    /// programs keep translating alongside enforced pool leases.
+    pub fn communicator(&mut self, region_bytes: u64) -> Result<Communicator> {
+        ensure!(region_bytes > 0, "a communicator needs a non-empty region");
+        ensure!(self.devices.len() >= 2, "collectives need at least 2 ranks");
+        let len = round_up(region_bytes, GRANULE);
+        let base = self.region_cursor;
+        ensure!(
+            base + len <= self.device_capacity,
+            "communicator region [{base:#x}..+{len:#x}) exceeds device capacity {:#x}",
+            self.device_capacity
+        );
+        if self.controller.is_some() {
+            // Devices are (or will latch) enforcing: install the region
+            // on every device so collective traffic stays translatable.
+            let page_bits = GRANULE.trailing_zeros();
+            for ip in self.ips.clone() {
+                let Some(mmu) = self.cl.device_iommu(ip) else {
+                    continue;
+                };
+                if mmu.is_identity() {
+                    mmu.set_page_bits(page_bits)?;
+                }
+                ensure!(
+                    mmu.page_size() == GRANULE,
+                    "device {ip} IOMMU granule {} != pool granule {GRANULE}",
+                    mmu.page_size()
+                );
+                mmu.map(base, base, len, Perms::RW)?;
+            }
+        }
+        self.region_cursor = base + len;
+        let tenant = self.next_tenant;
+        self.next_tenant += 1;
+        Ok(Communicator {
+            tenant,
+            base_addr: base,
+            region_bytes: len,
+            window: self.window,
+            reliable: self.reliable,
+        })
+    }
+
+    // ------------------------------------------------ collective plumbing
+
+    /// Submit a planner as a nonblocking op: plan + inject phase 0 now,
+    /// later phases as their predecessors retire (see [`OpState`]).
+    pub(crate) fn submit_algo(
+        &mut self,
+        algo: Box<dyn CollectiveAlgorithm>,
+        spec: CollectiveSpec,
+    ) -> Result<CollectiveHandle> {
+        let idx = self.ops.len();
+        let algorithm = algo.name();
+        let phases = algo.phases();
+        self.ops.push(OpState {
+            algorithm,
+            algo,
+            spec,
+            phases,
+            next_phase: 0,
+            plans: Vec::new(),
+            ops_total: 0,
+            started_at: self.eng.now(),
+            finished_at: None,
+            stalled: false,
+        });
+        if let Err(e) = self.submit_phase(idx) {
+            // A rejected planner (bad shape, root out of range) must not
+            // leave a zombie op that every later drive() retries.
+            self.ops.pop();
+            return Err(e);
+        }
+        self.active_ops.push(idx);
+        Ok(CollectiveHandle(idx))
+    }
+
+    /// Plan and submit op `i`'s next phase onto the shared session.
+    fn submit_phase(&mut self, i: usize) -> Result<()> {
+        let phase = self.ops[i].next_phase;
+        let spec = self.ops[i].spec.clone();
+        let done_id_base = self.next_done_id;
+        let planned = {
+            let op = &mut self.ops[i];
+            let ctx = PlanCtx {
+                devices: &self.devices,
+                ips: &self.ips,
+                spec: &spec,
+                done_id_base,
+            };
+            op.algo.plan_phase(&mut self.cl, &ctx, phase)?
+        };
+        self.ops[i].next_phase = phase + 1;
+        match planned {
+            Phase::Ops(ops) => {
+                if ops.is_empty() {
+                    return Ok(());
+                }
+                self.next_done_id = self
+                    .next_done_id
+                    .checked_add(ops.len() as u32)
+                    .expect("completion id space exhausted");
+                let wops =
+                    lower_schedule(&mut self.cl, &self.devices, spec.reliable, ops)?;
+                self.ops[i].ops_total += wops.len();
+                let plan = self.session.submit(
+                    &mut self.cl,
+                    &mut self.eng,
+                    wops,
+                    false,
+                    spec.window,
+                )?;
+                self.ops[i].plans.push(plan);
+            }
+            Phase::Apps { .. } => {
+                bail!("host-baseline planners cannot run on a fabric session")
+            }
+        }
+        Ok(())
+    }
+
+    /// Advance every *active* multi-phase op whose current phase
+    /// retired; returns whether anything new was submitted. Finished and
+    /// stalled ops drop off the active list so a long-lived fabric's
+    /// drive cost tracks its concurrency, not its history.
+    fn advance(&mut self) -> Result<bool> {
+        let mut submitted = false;
+        let mut result = Ok(());
+        let active = std::mem::take(&mut self.active_ops);
+        let mut still: Vec<usize> = Vec::with_capacity(active.len());
+        for i in active {
+            while result.is_ok() {
+                if self.ops[i].finished_at.is_some() || self.ops[i].stalled {
+                    break;
+                }
+                let ready = match self.ops[i].plans.last() {
+                    None => true,
+                    Some(&p) => {
+                        if self.session.is_complete(p) {
+                            true
+                        } else {
+                            if self.session.is_settled(p) {
+                                // Short phase: later phases would compute
+                                // on stale data (the driver breaks here
+                                // too).
+                                self.ops[i].stalled = true;
+                            }
+                            false
+                        }
+                    }
+                };
+                if !ready {
+                    break;
+                }
+                if self.ops[i].next_phase >= self.ops[i].phases {
+                    let t = match self.ops[i].plans.last() {
+                        Some(&p) => self.session.progress(p).2,
+                        None => self.ops[i].started_at,
+                    };
+                    self.ops[i].finished_at = Some(t);
+                    break;
+                }
+                match self.submit_phase(i) {
+                    Ok(()) => submitted = true,
+                    Err(e) => {
+                        // Park the op so later drives don't re-fail on
+                        // it and poison unrelated tenants' waits.
+                        self.ops[i].stalled = true;
+                        result = Err(e);
+                    }
+                }
+            }
+            if self.ops[i].finished_at.is_none() && !self.ops[i].stalled {
+                still.push(i);
+            }
+        }
+        self.active_ops = still;
+        result.map(|()| submitted)
+    }
+
+    /// Run the shared DES until every submitted op has gone as far as it
+    /// can: drive, advance multi-phase ops, repeat until quiescent.
+    pub fn drive(&mut self) -> Result<()> {
+        let result = loop {
+            self.session.drive(&mut self.cl, &mut self.eng);
+            match self.advance() {
+                Ok(true) => continue,
+                Ok(false) => break Ok(()),
+                Err(e) => {
+                    // Drain whatever the failed advance left in flight
+                    // before surfacing the error.
+                    self.session.drive(&mut self.cl, &mut self.eng);
+                    break Err(e);
+                }
+            }
+        };
+        // The DES is drained: no event can deliver another completion,
+        // so release the hook unconditionally (even if an unreliable op
+        // was lost and stranded in flight) — standalone engine users (a
+        // raw MemClient op between waits) can run, and the next submit
+        // re-installs it.
+        self.session.close(&mut self.cl);
+        result
+    }
+
+    /// Drive until `h` finishes and redeem its outcome. Concurrent ops
+    /// from other tenants progress on the same DES run. An op that
+    /// stopped short (loss beyond retries) returns `ops_done < ops`
+    /// rather than an error — the driver's reporting contract.
+    pub fn wait(&mut self, h: CollectiveHandle) -> Result<CollectiveOutcome> {
+        self.drive()?;
+        self.outcome(h)
+    }
+
+    /// The op's current outcome without driving (nonblocking poll).
+    pub fn outcome(&self, h: CollectiveHandle) -> Result<CollectiveOutcome> {
+        let op = &self.ops[h.0];
+        let mut done = 0usize;
+        let mut last = op.started_at;
+        for &p in &op.plans {
+            let (d, _, t) = self.session.progress(p);
+            done += d;
+            last = last.max(t);
+        }
+        Ok(CollectiveOutcome {
+            algorithm: op.algorithm,
+            elements: op.spec.elements,
+            ops: op.ops_total,
+            ops_done: done,
+            started_ns: op.started_at,
+            finished_ns: op.finished_at.unwrap_or(last),
+        })
+    }
+
+    /// Has `h` finished all phases?
+    pub fn is_finished(&self, h: CollectiveHandle) -> bool {
+        self.ops[h.0].finished_at.is_some()
+    }
+
+    /// Shape a redeemed outcome into the bench-facing report (drop and
+    /// retransmit counters are fabric-cumulative).
+    pub fn report(&self, out: &CollectiveOutcome) -> CollectiveReport {
+        CollectiveReport {
+            algorithm: out.algorithm,
+            elements: out.elements,
+            elapsed_ns: out.elapsed_ns(),
+            link_drops: self.cl.metrics.counter("link_drops"),
+            retransmits: self.cl.xport.retransmits,
+        }
+    }
+
+    // ----------------------------------------------------- memory plane
+
+    /// Derive a pooled-memory tenant: allocates a tenant id, binds the
+    /// next free host's IP to it on every device (the §2.6 requester
+    /// ACL), and returns the data-plane client. Each tenant needs its
+    /// own host — build the fabric with [`FabricBuilder::hosts`].
+    pub fn mem_client(&mut self) -> Result<MemClient> {
+        let ctl = self
+            .controller
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("fabric built without a pool (with_pool)"))?;
+        ensure!(
+            self.next_host < self.hosts.len(),
+            "no free host for a new tenant: build the fabric with hosts({})",
+            self.next_host + 1
+        );
+        let host = self.hosts[self.next_host];
+        self.next_host += 1;
+        let tenant = self.next_tenant;
+        self.next_tenant += 1;
+        let host_ip = self.cl.host_mut(host).ip;
+        ctl.grant_host(&mut self.cl, tenant, host_ip);
+        Ok(MemClient::new(host, host_ip, tenant, ctl.map().clone()).with_window(self.window))
+    }
+
+    /// Lease `bytes` of pool memory for `tenant` (programs every device
+    /// IOMMU — see [`SdnController::malloc_mapped`]).
+    pub fn malloc(&mut self, tenant: TenantId, bytes: u64, writable: bool) -> Result<Allocation> {
+        let ctl = self
+            .controller
+            .as_mut()
+            .ok_or_else(|| anyhow::anyhow!("fabric built without a pool (with_pool)"))?;
+        Ok(ctl.malloc_mapped(&mut self.cl, tenant, bytes, writable)?)
+    }
+
+    /// Free a pool lease and unmap it everywhere.
+    pub fn free(&mut self, tenant: TenantId, gva: u64) -> Result<()> {
+        let ctl = self
+            .controller
+            .as_mut()
+            .ok_or_else(|| anyhow::anyhow!("fabric built without a pool (with_pool)"))?;
+        Ok(ctl.free_mapped(&mut self.cl, tenant, gva)?)
+    }
+
+    /// Submit a pooled-memory batch onto the **shared** session — its
+    /// packets fly concurrently with every in-flight collective. Redeem
+    /// with [`wait_mem`](Self::wait_mem).
+    pub fn submit_mem(&mut self, batch: MemBatch<'_>) -> Result<MemHandle, MemError> {
+        let mut prepared = batch.prepare();
+        if prepared.is_paced() {
+            // The shared session has no per-plan pacing yet: silently
+            // dropping the client's configured rate limit would defeat
+            // the §2.5 incast cure it asked for.
+            return Err(MemError::Plan(
+                "paced clients must run standalone (MemBatch::run); \
+                 the shared session has no per-plan pacing"
+                    .into(),
+            ));
+        }
+        let idx = self.mem_plans.len();
+        if prepared.is_empty() {
+            self.mem_plans.push(MemPlanState {
+                plan: None,
+                prepared: Some(prepared),
+            });
+            return Ok(MemHandle(idx));
+        }
+        let record = prepared.wants_responses();
+        let window = prepared.window();
+        let wops = prepared.take_ops();
+        let plan = self
+            .session
+            .submit(&mut self.cl, &mut self.eng, wops, record, window)
+            .map_err(|e| MemError::Plan(e.to_string()))?;
+        self.mem_plans.push(MemPlanState {
+            plan: Some(plan),
+            prepared: Some(prepared),
+        });
+        Ok(MemHandle(idx))
+    }
+
+    /// Blocking convenience: read `len` bytes at `gva` as one session
+    /// plan (batch → submit → wait → redeem).
+    pub fn mem_read(
+        &mut self,
+        client: &MemClient,
+        gva: u64,
+        len: usize,
+    ) -> Result<Vec<u8>, MemError> {
+        let mut b = client.batch();
+        let h = b.read(&mut self.cl, gva, len);
+        let hm = self.submit_mem(b)?;
+        let mut res = self.wait_mem(hm)?;
+        res.take_read(h).ok_or(MemError::BadResponse { gva })
+    }
+
+    /// Blocking convenience: write `data` at `gva` as one session plan.
+    pub fn mem_write(
+        &mut self,
+        client: &MemClient,
+        gva: u64,
+        data: &[u8],
+    ) -> Result<(), MemError> {
+        let mut b = client.batch();
+        b.write(&mut self.cl, gva, data);
+        let hm = self.submit_mem(b)?;
+        self.wait_mem(hm)?;
+        Ok(())
+    }
+
+    /// Drive the shared DES until `h`'s plan settles, then redeem it
+    /// (reads reassembled, CAS outcomes, typed NAK errors).
+    pub fn wait_mem(&mut self, h: MemHandle) -> Result<BatchResult, MemError> {
+        self.drive().map_err(|e| MemError::Plan(e.to_string()))?;
+        let st = &mut self.mem_plans[h.0];
+        let plan = st.plan;
+        let prepared = st
+            .prepared
+            .take()
+            .ok_or_else(|| MemError::Plan("mem handle already redeemed".into()))?;
+        match plan {
+            None => prepared.redeem(&mut self.cl, 0, None, &[]),
+            Some(p) => {
+                let out = self.session.outcome(p);
+                prepared.redeem(&mut self.cl, out.done, out.nak.as_ref(), &out.responses)
+            }
+        }
+    }
+}
+
+// -------------------------------------------------------- communicator
+
+/// A per-tenant handle onto a shared [`Fabric`]: rank identity (ranks
+/// 0..N over the fabric's devices), a private memory region, and the
+/// nonblocking collective ops. Cheap to hold; all state lives in the
+/// fabric.
+#[derive(Debug, Clone)]
+pub struct Communicator {
+    /// Tenant identity (labels; device enforcement keys on source IP).
+    pub tenant: TenantId,
+    base_addr: u64,
+    region_bytes: u64,
+    window: usize,
+    reliable: bool,
+}
+
+impl Communicator {
+    /// Device-local base address of this tenant's region.
+    pub fn base_addr(&self) -> u64 {
+        self.base_addr
+    }
+
+    /// Region size in bytes (rounded to the interleave block).
+    pub fn region_bytes(&self) -> u64 {
+        self.region_bytes
+    }
+
+    /// Region capacity in f32 elements.
+    pub fn capacity_elems(&self) -> usize {
+        (self.region_bytes / 4) as usize
+    }
+
+    /// Override the per-slot window for this communicator's ops.
+    pub fn with_window(mut self, window: usize) -> Self {
+        self.window = window.max(1);
+        self
+    }
+
+    /// Seed per-rank gradient vectors into this communicator's region.
+    /// Panics if `elements` overflows the region — silently scribbling
+    /// on a neighbor tenant is the one thing this API must never do.
+    pub fn seed_gradients(
+        &self,
+        f: &mut Fabric,
+        elements: usize,
+        seed: u64,
+    ) -> Vec<Vec<f32>> {
+        assert!(
+            elements as u64 * 4 <= self.region_bytes,
+            "seeding {elements} elements overflows the communicator region"
+        );
+        crate::collectives::seed_gradients(&mut f.cl, &f.devices, elements, self.base_addr, seed)
+    }
+
+    /// Integer-valued seeding — exact under any reduction order (the
+    /// oracle for fused-vs-unfused comparisons). Region-bounds checked
+    /// like [`seed_gradients`](Self::seed_gradients).
+    pub fn seed_gradients_exact(
+        &self,
+        f: &mut Fabric,
+        elements: usize,
+        seed: u64,
+    ) -> Vec<Vec<f32>> {
+        assert!(
+            elements as u64 * 4 <= self.region_bytes,
+            "seeding {elements} elements overflows the communicator region"
+        );
+        crate::collectives::seed_gradients_exact(
+            &mut f.cl,
+            &f.devices,
+            elements,
+            self.base_addr,
+            seed,
+        )
+    }
+
+    /// Read `elements` f32s of rank `rank`'s region copy back (oracle
+    /// checks).
+    pub fn read_vector(&self, f: &mut Fabric, rank: usize, elements: usize) -> Result<Vec<f32>> {
+        self.read_vector_at(f, rank, 0, elements)
+    }
+
+    /// Read an element subrange of rank `rank`'s region copy (e.g. one
+    /// tensor span of a bucketed stream).
+    pub fn read_vector_at(
+        &self,
+        f: &mut Fabric,
+        rank: usize,
+        offset_elems: usize,
+        elems: usize,
+    ) -> Result<Vec<f32>> {
+        ensure!(
+            ((offset_elems + elems) as u64) * 4 <= self.region_bytes,
+            "read range exceeds the communicator region"
+        );
+        crate::collectives::read_vector(
+            &mut f.cl,
+            f.devices[rank],
+            self.base_addr + offset_elems as u64 * 4,
+            elems,
+        )
+    }
+
+    /// Stage `data` into rank `rank`'s region copy at `offset_elems` —
+    /// host-side gradient staging (a tensor placed at its bucketed
+    /// span). No-op on timing-only (phantom) devices.
+    pub fn write_vector(
+        &self,
+        f: &mut Fabric,
+        rank: usize,
+        offset_elems: usize,
+        data: &[f32],
+    ) -> Result<()> {
+        ensure!(
+            ((offset_elems + data.len()) as u64) * 4 <= self.region_bytes,
+            "write range exceeds the communicator region"
+        );
+        let dev = f.devices[rank];
+        let d = f.cl.device_mut(dev);
+        if d.mem_ref().is_phantom() {
+            return Ok(());
+        }
+        d.mem().write(
+            self.base_addr + offset_elems as u64 * 4,
+            &crate::util::bytes::f32s_to_bytes(data),
+        )?;
+        Ok(())
+    }
+
+    // -------------------------------------------------- nonblocking ops
+
+    /// Nonblocking allreduce of the leading `elements` of the region
+    /// (the §3 fused in-memory ring).
+    pub fn iallreduce(&self, f: &mut Fabric, elements: usize) -> Result<CollectiveHandle> {
+        self.icollective(f, AlgoKind::NetdamRing, elements, 0)
+    }
+
+    /// Nonblocking ring reduce-scatter.
+    pub fn ireduce_scatter(&self, f: &mut Fabric, elements: usize) -> Result<CollectiveHandle> {
+        self.icollective(f, AlgoKind::ReduceScatter, elements, 0)
+    }
+
+    /// Nonblocking ring all-gather.
+    pub fn iallgather(&self, f: &mut Fabric, elements: usize) -> Result<CollectiveHandle> {
+        self.icollective(f, AlgoKind::AllGather, elements, 0)
+    }
+
+    /// Nonblocking broadcast of `root`'s vector.
+    pub fn ibcast(&self, f: &mut Fabric, elements: usize, root: usize) -> Result<CollectiveHandle> {
+        self.icollective(f, AlgoKind::Broadcast, elements, root)
+    }
+
+    /// Nonblocking **rooted reduce**: the whole vector summed at `root`
+    /// (every chain ends there; other ranks keep their data).
+    pub fn ireduce(&self, f: &mut Fabric, elements: usize, root: usize) -> Result<CollectiveHandle> {
+        self.icollective(f, AlgoKind::Reduce, elements, root)
+    }
+
+    /// Nonblocking collective by [`AlgoKind`] over the leading
+    /// `elements` of the region.
+    pub fn icollective(
+        &self,
+        f: &mut Fabric,
+        kind: AlgoKind,
+        elements: usize,
+        root: usize,
+    ) -> Result<CollectiveHandle> {
+        self.submit_range(f, kind, 0, elements, root)
+    }
+
+    /// Nonblocking allreduce over an element subrange — the primitive
+    /// the bucketing layer composes. Ranges of concurrent ops must be
+    /// disjoint.
+    pub fn iallreduce_range(
+        &self,
+        f: &mut Fabric,
+        offset_elems: usize,
+        elems: usize,
+    ) -> Result<CollectiveHandle> {
+        self.submit_range(f, AlgoKind::NetdamRing, offset_elems, elems, 0)
+    }
+
+    /// Lower a pre-planned bucket stream ([`plan_buckets`]): one
+    /// nonblocking allreduce per bucket, all in flight together under
+    /// the shared session.
+    pub fn iallreduce_buckets(
+        &self,
+        f: &mut Fabric,
+        buckets: &[GradBucket],
+    ) -> Result<Vec<CollectiveHandle>> {
+        let mut handles = Vec::with_capacity(buckets.len());
+        for b in buckets {
+            handles.push(self.iallreduce_range(f, b.offset_elems, b.elems)?);
+        }
+        Ok(handles)
+    }
+
+    /// Blocking convenience: `iallreduce` + `wait`.
+    pub fn allreduce(&self, f: &mut Fabric, elements: usize) -> Result<CollectiveOutcome> {
+        let h = self.iallreduce(f, elements)?;
+        f.wait(h)
+    }
+
+    fn submit_range(
+        &self,
+        f: &mut Fabric,
+        kind: AlgoKind,
+        offset_elems: usize,
+        elems: usize,
+        root: usize,
+    ) -> Result<CollectiveHandle> {
+        ensure!(
+            !kind.is_host_baseline(),
+            "{} is a host baseline — it builds its own host fabric",
+            kind.name()
+        );
+        ensure!(elems > 0, "collective of zero elements");
+        ensure!(
+            ((offset_elems + elems) as u64) * 4 <= self.region_bytes,
+            "collective range [{offset_elems}..+{elems}) exceeds the communicator region"
+        );
+        let algo = kind.planner(f.devices.len(), &f.leaf_groups, root)?;
+        let spec = CollectiveSpec {
+            elements: elems,
+            window: self.window,
+            reliable: self.reliable,
+            base_addr: self.base_addr + offset_elems as u64 * 4,
+            ..CollectiveSpec::default()
+        };
+        f.submit_algo(algo, spec)
+    }
+}
+
+// ----------------------------------------------------------- bucketing
+
+/// One tensor's placement inside the packed gradient stream.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TensorSpan {
+    /// Index into the caller's tensor list.
+    pub tensor: usize,
+    /// Element offset within the communicator region.
+    pub offset_elems: usize,
+    pub elems: usize,
+}
+
+/// A fused bucket: a contiguous region slice carrying several packed
+/// tensors, allreduced as one collective.
+#[derive(Debug, Clone)]
+pub struct GradBucket {
+    pub offset_elems: usize,
+    /// Slice length, padded to a rank multiple (the ring chunking
+    /// requirement); padding tail elements are reduced too, harmlessly.
+    pub elems: usize,
+    pub tensors: Vec<TensorSpan>,
+}
+
+/// Pack a stream of small tensors into buckets of at most `bucket_elems`
+/// elements (the fusion-buffer trick: tiny gradients stop paying one
+/// full collective schedule each). `bucket_elems == 0` means *no
+/// fusion* — every tensor gets its own bucket (the unfused baseline the
+/// bench compares against). Buckets are padded to a multiple of
+/// `ranks`; an oversized tensor gets a bucket of its own.
+pub fn plan_buckets(sizes: &[usize], bucket_elems: usize, ranks: usize) -> Vec<GradBucket> {
+    let ranks = ranks.max(1);
+    let cap = bucket_elems.max(1);
+    let mut buckets = Vec::new();
+    let mut cursor = 0usize;
+    let mut i = 0usize;
+    while i < sizes.len() {
+        let start = cursor;
+        let mut tensors = Vec::new();
+        let mut fill = 0usize;
+        while i < sizes.len() {
+            let s = sizes[i].max(1);
+            if !tensors.is_empty() && fill + s > cap {
+                break;
+            }
+            tensors.push(TensorSpan {
+                tensor: i,
+                offset_elems: start + fill,
+                elems: s,
+            });
+            fill += s;
+            i += 1;
+            if fill >= cap {
+                break;
+            }
+        }
+        let padded = fill.div_ceil(ranks) * ranks;
+        buckets.push(GradBucket {
+            offset_elems: start,
+            elems: padded,
+            tensors,
+        });
+        cursor = start + padded;
+    }
+    buckets
+}
+
+/// Total packed elements (region footprint) of a bucket plan.
+pub fn buckets_total_elems(buckets: &[GradBucket]) -> usize {
+    buckets
+        .last()
+        .map(|b| b.offset_elems + b.elems)
+        .unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_plan_packs_and_pads() {
+        // 6 tensors, cap 100, 4 ranks.
+        let sizes = [40usize, 50, 30, 120, 10, 10];
+        let b = plan_buckets(&sizes, 100, 4);
+        // [40+50]=90→92, [30]… 30+120>100 → [30]→32, [120]→120, [10+10]→20.
+        assert_eq!(b.len(), 4);
+        assert_eq!(b[0].tensors.len(), 2);
+        assert_eq!(b[0].elems, 92);
+        assert_eq!(b[1].tensors.len(), 1);
+        assert_eq!(b[1].elems, 32);
+        assert_eq!(b[2].tensors[0].tensor, 3);
+        assert_eq!(b[2].elems, 120);
+        assert_eq!(b[3].tensors.len(), 2);
+        // Spans are disjoint and in order.
+        for w in b.windows(2) {
+            assert!(w[1].offset_elems >= w[0].offset_elems + w[0].elems);
+        }
+        for bk in &b {
+            for t in &bk.tensors {
+                assert!(t.offset_elems >= bk.offset_elems);
+                assert!(t.offset_elems + t.elems <= bk.offset_elems + bk.elems);
+            }
+            assert_eq!(bk.elems % 4, 0, "padded to a rank multiple");
+        }
+        assert_eq!(buckets_total_elems(&b), b[3].offset_elems + b[3].elems);
+    }
+
+    #[test]
+    fn zero_bucket_elems_means_unfused() {
+        let sizes = [7usize, 9, 3];
+        let b = plan_buckets(&sizes, 0, 4);
+        assert_eq!(b.len(), 3, "every tensor gets its own bucket");
+        for (i, bk) in b.iter().enumerate() {
+            assert_eq!(bk.tensors.len(), 1);
+            assert_eq!(bk.tensors[0].tensor, i);
+            assert_eq!(bk.elems % 4, 0);
+        }
+    }
+
+    #[test]
+    fn fabric_builds_once_and_runs_a_blocking_allreduce() {
+        let mut f = Fabric::builder().star(4).seed(0xC0).build().unwrap();
+        let comm = f.communicator(64 << 10).unwrap();
+        let elements = 4 * 2048;
+        let grads = comm.seed_gradients(&mut f, elements, 7);
+        let out = comm.allreduce(&mut f, elements).unwrap();
+        assert!(out.complete(), "{}/{} ops", out.ops_done, out.ops);
+        assert!(out.elapsed_ns() > 0);
+        let oracle = crate::collectives::oracle_sum(&grads);
+        for r in 0..4 {
+            assert_eq!(comm.read_vector(&mut f, r, elements).unwrap(), oracle);
+        }
+    }
+
+    #[test]
+    fn two_communicators_use_disjoint_regions() {
+        let mut f = Fabric::builder().star(4).build().unwrap();
+        let a = f.communicator(16 << 10).unwrap();
+        let b = f.communicator(16 << 10).unwrap();
+        assert!(a.base_addr() + a.region_bytes() <= b.base_addr());
+        assert_ne!(a.tenant, b.tenant);
+    }
+
+    #[test]
+    fn multi_phase_hierarchical_runs_on_the_session() {
+        let mut f = Fabric::builder()
+            .fat_tree(2, 2, 2)
+            .seed(0x2E)
+            .build()
+            .unwrap();
+        let comm = f.communicator(64 << 10).unwrap();
+        let elements = 4 * 2048;
+        let grads = comm.seed_gradients_exact(&mut f, elements, 9);
+        let h = comm
+            .icollective(&mut f, AlgoKind::Hierarchical, elements, 0)
+            .unwrap();
+        let out = f.wait(h).unwrap();
+        assert!(out.complete());
+        let oracle = crate::collectives::naive_sum(&grads);
+        for r in 0..4 {
+            assert_eq!(comm.read_vector(&mut f, r, elements).unwrap(), oracle);
+        }
+    }
+}

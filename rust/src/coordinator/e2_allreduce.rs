@@ -9,10 +9,18 @@
 //! driver (`collectives::driver`), the comparison set is just a list of
 //! [`AlgoKind`]s — `--algo` on the CLI swaps algorithms in and out
 //! without touching this coordinator.
+//!
+//! Since PR 5 the device arms run on the **session API**: one long-lived
+//! [`Fabric`] per topology (a star, plus a fat-tree when hierarchical is
+//! in the menu), one communicator, every algorithm timed as a
+//! collective on the shared engine — no fabric rebuild between runs.
+//! The host baselines still model their own RoCE fabric through the
+//! `run_collective` shim.
 
-use anyhow::Result;
+use anyhow::{ensure, Result};
 
 use crate::collectives::{run_collective, AlgoKind, CollectiveReport, RunOpts};
+use crate::comm::{Communicator, Fabric};
 use crate::metrics::Table;
 use crate::sim::{fmt_ns, SimTime};
 
@@ -78,24 +86,60 @@ fn paper_ref(kind: AlgoKind) -> &'static str {
 
 pub fn run_e2(cfg: &E2Config) -> Result<E2Result> {
     let n = cfg.ranks;
-    let opts = RunOpts {
-        elements: cfg.elements,
-        ranks: n,
-        seed: cfg.seed,
-        window: cfg.window,
-        timing_only: cfg.timing_only,
-        ..Default::default()
-    };
+    // Lazily-built long-lived fabrics shared by every device arm of the
+    // comparison (topology decides which one an algorithm runs on).
+    let mut star: Option<(Fabric, Communicator)> = None;
+    let mut tree: Option<(Fabric, Communicator)> = None;
     // Keep each report paired with its kind so the table can never
     // mislabel a row if the skip logic changes.
     let mut runs: Vec<(AlgoKind, CollectiveReport)> = Vec::new();
     for &kind in &cfg.algos {
-        if kind.is_host_baseline() && !cfg.with_baselines {
+        if kind.is_host_baseline() {
+            if !cfg.with_baselines {
+                continue;
+            }
+            // Host baselines model phantom traffic regardless; the
+            // NetDAM arms honor `timing_only`.
+            let opts = RunOpts {
+                elements: cfg.elements,
+                ranks: n,
+                seed: cfg.seed,
+                window: cfg.window,
+                timing_only: cfg.timing_only,
+                ..Default::default()
+            };
+            runs.push((kind, run_collective(kind, &opts)?));
             continue;
         }
-        // Host baselines model phantom traffic regardless; the NetDAM
-        // arms honor `timing_only`.
-        runs.push((kind, run_collective(kind, &opts)?));
+        let slot = if kind == AlgoKind::Hierarchical {
+            &mut tree
+        } else {
+            &mut star
+        };
+        if slot.is_none() {
+            let mut fabric = Fabric::builder()
+                .seed(cfg.seed)
+                .window(cfg.window)
+                .timing_only(cfg.timing_only)
+                .for_algo(kind, n)?
+                .build()?;
+            let comm = fabric.communicator(cfg.elements as u64 * 4)?;
+            if !cfg.timing_only {
+                comm.seed_gradients(&mut fabric, cfg.elements, cfg.seed);
+            }
+            *slot = Some((fabric, comm));
+        }
+        let (fabric, comm) = slot.as_mut().expect("fabric just built");
+        let h = comm.icollective(fabric, kind, cfg.elements, 0)?;
+        let out = fabric.wait(h)?;
+        ensure!(
+            out.complete(),
+            "{} incomplete: {}/{} ops",
+            kind.name(),
+            out.ops_done,
+            out.ops
+        );
+        runs.push((kind, fabric.report(&out)));
     }
 
     let elapsed_of = |kind: AlgoKind| {

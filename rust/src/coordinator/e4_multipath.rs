@@ -15,11 +15,12 @@
 
 use anyhow::Result;
 
+use crate::comm::Fabric;
 use crate::isa::Instruction;
 use crate::metrics::Table;
 use crate::net::switch::flow_hash;
-use crate::net::{Cluster, EcmpMode, LinkConfig, Node, Topology};
-use crate::sim::{fmt_ns, Engine, SimTime};
+use crate::net::{Cluster, EcmpMode, Node};
+use crate::sim::{fmt_ns, SimTime};
 use crate::srou::SprayPlan;
 use crate::wire::{DeviceIp, Packet, Payload, SrouHeader};
 
@@ -90,21 +91,24 @@ fn colliding_pairs(cfg: &E4Config) -> (Vec<(DeviceIp, DeviceIp)>, usize) {
 }
 
 fn run_mode(cfg: &E4Config, mode: E4Mode) -> Result<E4Result> {
-    let t = Topology::dual_spine(
-        cfg.seed,
-        cfg.devs_per_leaf,
-        LinkConfig::dc_100g(),
-        EcmpMode::FlowHash,
-    );
-    let mut cl = t.cluster;
+    // The dual-spine fabric comes from the session builder now; E4's
+    // open-loop elephant flows predate the windowed engine, so they use
+    // the same Fabric's raw injection surface instead of hand-assembling
+    // a Cluster.
+    let mut fabric = Fabric::builder()
+        .dual_spine(cfg.devs_per_leaf)
+        .seed(cfg.seed)
+        .ecmp(EcmpMode::FlowHash)
+        .build()?;
+    let devices = fabric.devices().to_vec();
     let spine_ips = [DeviceIp::lan(201), DeviceIp::lan(202)];
-    let mut eng: Engine<Cluster> = Engine::new();
+    let (cl, eng) = fabric.raw_parts();
 
     let (pairs, predicted) = colliding_pairs(cfg);
     let blocks = cfg.bytes_per_flow / BLOCK;
     let gap = ((BLOCK + 96) as f64 * 8.0 / 100.0).ceil() as SimTime; // line rate
     for (f, &(src_ip, dst_ip)) in pairs.iter().enumerate() {
-        let src_node = t.devices[f];
+        let src_node = devices[f];
         let mut spray = SprayPlan::new(spine_ips.to_vec());
         for b in 0..blocks {
             let srou = match mode {
@@ -127,7 +131,7 @@ fn run_mode(cfg: &E4Config, mode: E4Mode) -> Result<E4Result> {
             });
         }
     }
-    eng.run(&mut cl);
+    eng.run(cl);
 
     // All devices idle once the engine drains: end time = last delivery.
     let completion = eng.now();
@@ -135,7 +139,7 @@ fn run_mode(cfg: &E4Config, mode: E4Mode) -> Result<E4Result> {
     // Goodput: blocks that actually landed at the leaf-2 devices.
     let offered_blocks = (cfg.devs_per_leaf * blocks) as u64;
     let delivered: u64 = (cfg.devs_per_leaf..2 * cfg.devs_per_leaf)
-        .map(|i| cl.device(t.devices[i]).pkts_in)
+        .map(|i| cl.device(devices[i]).pkts_in)
         .sum();
     let delivered_pct = 100.0 * delivered as f64 / offered_blocks as f64;
     let goodput_gbps = (delivered * BLOCK as u64 * 8) as f64 / completion.max(1) as f64;

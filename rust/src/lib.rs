@@ -22,7 +22,14 @@
 //!   [`collectives::driver`] running a menu of schedule-generating
 //!   algorithms: NetDAM ring, halving-doubling, hierarchical two-level,
 //!   reduce-scatter/all-gather/broadcast primitives, and the host
-//!   baselines) and the experiment coordinator ([`coordinator`]).
+//!   baselines), the session API ([`comm`]) and the experiment
+//!   coordinator ([`coordinator`]).
+//! * **L2 (python/compile/model.py)** — JAX compute graphs (SIMD block ops,
+//!   reduce step, block hash, MLP train step) lowered once to HLO text.
+//! * **L1 (python/compile/kernels/)** — Pallas kernels implementing the
+//!   paper's 2048-lane SIMD ALU semantics, verified against a pure-jnp
+//!   oracle. The [`runtime`] module executes their ABI; in this offline
+//!   build it computes through the bit-identical native ALU (PJRT stub).
 //!
 //! # The program layer (builder → verifier → executor)
 //!
@@ -83,16 +90,31 @@
 //! on-device `Simd`-reduce packet program. E3 (incast) and the kvstore/
 //! mempool/embedding examples all run on this path — no raw physical
 //! addresses on the host side.
-//! * **L2 (python/compile/model.py)** — JAX compute graphs (SIMD block ops,
-//!   reduce step, block hash, MLP train step) lowered once to HLO text.
-//! * **L1 (python/compile/kernels/)** — Pallas kernels implementing the
-//!   paper's 2048-lane SIMD ALU semantics, verified against a pure-jnp
-//!   oracle. The [`runtime`] module executes their ABI; in this offline
-//!   build it computes through the bit-identical native ALU (PJRT stub).
+//!
+//! # The session API (one fabric, many tenants)
+//!
+//! The application surface is [`comm`]: a [`comm::Fabric`] is built
+//! **once** ([`comm::FabricBuilder`]: topology + registry + DES engine
+//! + optional pool controller) and tenants derive
+//! [`comm::Communicator`]s from it. Communicator ops are
+//! **nonblocking** — `iallreduce` / `ireduce_scatter` / `iallgather` /
+//! `ibcast` / the rooted `ireduce` return redeemable handles, and
+//! [`comm::Fabric::wait`] drives the shared DES — so concurrent
+//! collectives from multiple communicators and pooled-memory batches
+//! ([`comm::Fabric::submit_mem`]) multiplex onto **one**
+//! [`transport::EngineSession`] with per-plan windows, per-plan NAK
+//! cancellation (one tenant's bad lease never cancels a neighbor), and
+//! optionally per-slot token buckets (per-destination pacing). The
+//! gradient-bucketing fusion layer ([`comm::plan_buckets`]) packs
+//! streams of small tensors into interleave-block-sized buckets before
+//! lowering onto the planners — the NetReduce/Horovod fusion-buffer
+//! trick. `collectives::run_collective` remains as a compatibility shim
+//! over a single-use fabric; `netdam comm` demos two overlapping jobs.
 
 pub mod alu;
 pub mod cli;
 pub mod collectives;
+pub mod comm;
 pub mod config;
 pub mod coordinator;
 pub mod device;

@@ -120,6 +120,9 @@ fn main() -> Result<()> {
         "mem" => {
             run_mem_demo(&args)?;
         }
+        "comm" => {
+            run_comm_demo(&args)?;
+        }
         "train" => {
             let steps = args.opt_usize("steps", 50)?;
             let workers = args.opt_usize("workers", 4)?;
@@ -255,16 +258,15 @@ fn run_prog_demo(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// Pooled-memory demo: controller → lease → IOMMU program → MemClient
+/// Pooled-memory demo on the session API: one `Fabric` owns topology +
+/// SDN controller + the shared engine; lease → IOMMU program → batch
 /// plan → device enforcement, plus the near-memory embedding gather,
 /// pipelined batches, and (with `--paced`) token-bucket READ pacing.
 fn run_mem_demo(args: &Args) -> Result<()> {
-    use netdam::mem::{MemClient, MemError};
-    use netdam::net::{Cluster, LinkConfig, Topology};
-    use netdam::pool::{InterleaveMap, SdnController};
-    use netdam::sim::{fmt_ns, Engine};
+    use netdam::comm::Fabric;
+    use netdam::mem::MemError;
+    use netdam::sim::fmt_ns;
     use netdam::util::bytes::{bytes_to_f32s, f32s_to_bytes};
-    use netdam::wire::DeviceIp;
 
     let n_devices = args.opt_usize("devices", 4)?.clamp(1, 64);
     let bytes = args.opt_usize("bytes", 256 << 10)?.max(8192);
@@ -274,25 +276,26 @@ fn run_mem_demo(args: &Args) -> Result<()> {
     let paced_gbps = args.opt_f64("paced", 0.0)?;
     println!("== NetDAM memory plane: GVA data path over {n_devices} devices (window {window}) ==\n");
 
-    let t = Topology::star(0x3E3D, n_devices, 1, LinkConfig::dc_100g());
-    let mut cl = t.cluster;
-    let mut eng: Engine<Cluster> = Engine::new();
-    let map =
-        InterleaveMap::paper_default((1..=n_devices as u8).map(DeviceIp::lan).collect());
-    let mut ctl = SdnController::new(map, 2 << 30);
-    ctl.grant_host(&mut cl, 1, DeviceIp::lan(101));
-    let lease = ctl.malloc_mapped(&mut cl, 1, bytes as u64, true)?;
-    let client = MemClient::new(t.hosts[0], DeviceIp::lan(101), 1, ctl.map().clone())
-        .with_window(window);
+    // One Fabric replaces the hand-assembled Cluster + SdnController.
+    let mut fabric = Fabric::builder()
+        .star(n_devices)
+        .hosts(1)
+        .seed(0x3E3D)
+        .window(window)
+        .with_pool(1 << 30)
+        .build()?;
+    let client = fabric.mem_client()?;
+    let tenant = client.tenant;
+    let lease = fabric.malloc(tenant, bytes as u64, true)?;
 
-    // Scatter-gather bandwidth through the pool.
+    // Scatter-gather bandwidth through the pool, driven as session plans.
     let data: Vec<u8> = (0..bytes).map(|i| (i % 249) as u8).collect();
-    let t0 = eng.now();
-    client.write(&mut cl, &mut eng, lease.gva, &data)?;
-    let tw = eng.now() - t0;
-    let t0 = eng.now();
-    let back = client.read(&mut cl, &mut eng, lease.gva, bytes)?;
-    let tr = eng.now() - t0;
+    let t0 = fabric.now();
+    fabric.mem_write(&client, lease.gva, &data)?;
+    let tw = fabric.now() - t0;
+    let t0 = fabric.now();
+    let back = fabric.mem_read(&client, lease.gva, bytes)?;
+    let tr = fabric.now() - t0;
     anyhow::ensure!(back == data, "read-back mismatch");
     let gbps = |ns: u64| bytes as f64 * 8.0 / ns.max(1) as f64;
     println!(
@@ -303,31 +306,31 @@ fn run_mem_demo(args: &Args) -> Result<()> {
         gbps(tr)
     );
 
-    // Device-enforced denial: a read-only lease NAKs the write on the wire.
-    let ro = ctl.malloc_mapped(&mut cl, 1, 8192, false)?;
-    match client.write(&mut cl, &mut eng, ro.gva, &[9u8; 64]) {
+    // Device-enforced denial: a read-only lease NAKs the write on the
+    // wire — and cancels only this plan on the shared session.
+    let ro = fabric.malloc(tenant, 8192, false)?;
+    match fabric.mem_write(&client, ro.gva, &[9u8; 64]) {
         Err(MemError::Nak { device, reason, .. }) => {
             println!("read-only lease: write NAK'd by device {device} ({reason})")
         }
-        other => anyhow::bail!("expected a device NAK, got {other:?}"),
+        Err(e) => anyhow::bail!("expected a device NAK, got {e}"),
+        Ok(()) => anyhow::bail!("expected a device NAK, got a completed write"),
     }
 
     // Pipelined batch: several logical ops in one windowed engine run —
     // two reads of disjoint halves plus a CAS on a scratch word, all in
     // flight together.
-    let scratch = ctl.malloc_mapped(&mut cl, 1, 8192, true)?;
+    let scratch = fabric.malloc(tenant, 8192, true)?;
     let mut batch = client.batch();
-    let h_lo = batch.read(&mut cl, lease.gva, bytes / 2);
-    let h_hi = batch.read(&mut cl, lease.gva + (bytes / 2) as u64, bytes / 2);
+    let h_lo = batch.read(fabric.cluster_mut(), lease.gva, bytes / 2);
+    let h_hi = batch.read(fabric.cluster_mut(), lease.gva + (bytes / 2) as u64, bytes / 2);
     let h_cas = batch
-        .cas(&mut cl, scratch.gva, 0, 7)
-        .map_err(|e| anyhow::anyhow!("{e}"))?;
+        .cas(fabric.cluster_mut(), scratch.gva, 0, 7)?;
     let n_pkts = batch.len();
-    let t0 = eng.now();
-    let mut res = batch
-        .run(&mut cl, &mut eng)
-        .map_err(|e| anyhow::anyhow!("{e}"))?;
-    let tb = eng.now() - t0;
+    let t0 = fabric.now();
+    let h = fabric.submit_mem(batch)?;
+    let mut res = fabric.wait_mem(h)?;
+    let tb = fabric.now() - t0;
     let lo = res.take_read(h_lo).expect("low half");
     let hi = res.take_read(h_hi).expect("high half");
     anyhow::ensure!(lo == data[..bytes / 2] && hi == data[bytes / 2..], "batch read mismatch");
@@ -341,14 +344,14 @@ fn run_mem_demo(args: &Args) -> Result<()> {
 
     // Optional paced pull-back (the §2.5 incast cure): re-read the lease
     // through a token-bucket-paced client and show the throttled rate.
+    // The paced client runs standalone; the idle session has released
+    // its completion hook.
     if paced_gbps > 0.0 {
-        let paced = MemClient::new(t.hosts[0], DeviceIp::lan(101), 1, ctl.map().clone())
-            .with_window(window)
-            .with_pace(paced_gbps, 16 << 10);
+        let paced = client.clone_with_pace(paced_gbps, 16 << 10);
+        let (cl, eng) = fabric.raw_parts();
         let t0 = eng.now();
         let back = paced
-            .read(&mut cl, &mut eng, lease.gva, bytes)
-            .map_err(|e| anyhow::anyhow!("{e}"))?;
+            .read(cl, eng, lease.gva, bytes)?;
         let tp = eng.now() - t0;
         anyhow::ensure!(back == data, "paced read mismatch");
         println!(
@@ -359,27 +362,26 @@ fn run_mem_demo(args: &Args) -> Result<()> {
     }
 
     // Near-memory gather: fold 2 bags of 4 rows each with on-device Simd
-    // adds — both bags pipelined through one batch.
-    let rows = ctl.malloc_mapped(&mut cl, 1, 32 * 1024, true)?;
-    let dst = ctl.malloc_mapped(&mut cl, 1, 2048, true)?;
+    // adds — both bags pipelined through one batch on the session.
+    let rows = fabric.malloc(tenant, 32 * 1024, true)?;
+    let dst = fabric.malloc(tenant, 2048, true)?;
     let mut table = Vec::new();
     for r in 0..32 {
         table.extend_from_slice(&f32s_to_bytes(&vec![r as f32; 256]));
     }
-    client.write(&mut cl, &mut eng, rows.gva, &table)?;
+    fabric.mem_write(&client, rows.gva, &table)?;
     let bags = [[1u64, 2, 8, 21], [3, 5, 7, 11]];
     let mut gb = client.batch();
     for (b, picks) in bags.iter().enumerate() {
         let gvas: Vec<u64> = picks.iter().map(|&r| rows.gva + r * 1024).collect();
-        gb.gather_sum(&mut cl, &gvas, 1024, dst.gva + (b * 1024) as u64)
-            .map_err(|e| anyhow::anyhow!("{e}"))?;
+        gb.gather_sum(fabric.cluster_mut(), &gvas, 1024, dst.gva + (b * 1024) as u64)?;
     }
-    gb.run(&mut cl, &mut eng).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let h = fabric.submit_mem(gb)?;
+    fabric.wait_mem(h)?;
     for (b, picks) in bags.iter().enumerate() {
         let want = picks.iter().sum::<u64>() as f32;
-        let sum = bytes_to_f32s(
-            &client.read(&mut cl, &mut eng, dst.gva + (b * 1024) as u64, 1024)?,
-        )?;
+        let row = fabric.mem_read(&client, dst.gva + (b * 1024) as u64, 1024)?;
+        let sum = bytes_to_f32s(&row)?;
         anyhow::ensure!(
             sum.iter().all(|&v| v == want),
             "bag {b} gather sum wrong: {} != {want}",
@@ -387,6 +389,98 @@ fn run_mem_demo(args: &Args) -> Result<()> {
         );
         println!("gather_sum bag {b} {picks:?} -> {want} per lane (on-device reduce) ✓");
     }
+    Ok(())
+}
+
+/// Session-API demo: one fabric, two tenant jobs with overlapping
+/// nonblocking allreduces, a pooled-memory plan sharing the same
+/// engine, and the gradient-bucketing fusion layer (fused vs unfused).
+fn run_comm_demo(args: &Args) -> Result<()> {
+    use netdam::collectives::naive_sum;
+    use netdam::comm::{buckets_total_elems, plan_buckets, Fabric};
+    use netdam::sim::fmt_ns;
+
+    let ranks = args.opt_usize("ranks", 4)?.max(2);
+    let elements = args.opt_usize("elements", 4 * 2048)?.max(ranks);
+    println!("== NetDAM session API: two jobs, one fabric ==\n");
+
+    let mut fabric = Fabric::builder()
+        .star(ranks)
+        .hosts(1)
+        .seed(0xC033)
+        .with_pool(1 << 20)
+        .build()?;
+    let job_a = fabric.communicator(elements as u64 * 4)?;
+    let job_b = fabric.communicator(elements as u64 * 4)?;
+    let ga = job_a.seed_gradients_exact(&mut fabric, elements, 0xA);
+    let gb = job_b.seed_gradients_exact(&mut fabric, elements, 0xB);
+
+    // A third tenant streams pooled-memory I/O over the same session.
+    let mem = fabric.mem_client()?;
+    let lease = fabric.malloc(mem.tenant, 64 << 10, true)?;
+    let payload: Vec<u8> = (0..64 << 10).map(|i| (i % 251) as u8).collect();
+    let mut batch = mem.batch();
+    batch.write(fabric.cluster_mut(), lease.gva, &payload);
+
+    // Everything in flight before anything completes: two tenant
+    // allreduces + the memory plan, multiplexed on one window engine.
+    let ha = job_a.iallreduce(&mut fabric, elements)?;
+    let hb = job_b.iallreduce(&mut fabric, elements)?;
+    let hm = fabric.submit_mem(batch)?;
+    let oa = fabric.wait(ha)?;
+    let ob = fabric.wait(hb)?;
+    fabric.wait_mem(hm)?;
+    anyhow::ensure!(oa.complete() && ob.complete(), "a job stopped short");
+    let overlap = fabric.max_concurrent_plans();
+    println!(
+        "job A allreduce {} | job B allreduce {} | mem write 64 KiB | {overlap} plans in flight at peak",
+        fmt_ns(oa.elapsed_ns()),
+        fmt_ns(ob.elapsed_ns()),
+    );
+    anyhow::ensure!(overlap >= 3, "expected overlapping tenants, got {overlap}");
+    // Both tenants' results match the host oracle bit-for-bit.
+    for (job, grads) in [(&job_a, &ga), (&job_b, &gb)] {
+        let oracle = naive_sum(grads);
+        for r in 0..ranks {
+            anyhow::ensure!(
+                job.read_vector(&mut fabric, r, elements)? == oracle,
+                "tenant result diverged from the oracle at rank {r}"
+            );
+        }
+    }
+    println!("both tenants bit-exact vs the host oracle ✓\n");
+
+    // Gradient bucketing: a stream of small tensors, fused into
+    // interleave-block buckets vs one collective per tensor.
+    let sizes: Vec<usize> = (0..24).map(|i| 192 + (i * 37) % 512).collect();
+    let fused = plan_buckets(&sizes, ranks * 2048, ranks);
+    let unfused = plan_buckets(&sizes, 0, ranks);
+    let footprint = buckets_total_elems(&fused).max(buckets_total_elems(&unfused));
+    let stream = fabric.communicator(footprint as u64 * 4)?;
+    stream.seed_gradients_exact(&mut fabric, footprint, 0xF);
+    let t0 = fabric.now();
+    for h in stream.iallreduce_buckets(&mut fabric, &fused)? {
+        let o = fabric.wait(h)?;
+        anyhow::ensure!(o.complete(), "fused bucket stopped short");
+    }
+    let t_fused = fabric.now() - t0;
+    stream.seed_gradients_exact(&mut fabric, footprint, 0xF);
+    let t0 = fabric.now();
+    for h in stream.iallreduce_buckets(&mut fabric, &unfused)? {
+        let o = fabric.wait(h)?;
+        anyhow::ensure!(o.complete(), "unfused tensor stopped short");
+    }
+    let t_unfused = fabric.now() - t0;
+    println!(
+        "{} tensors ({} elems): fused into {} buckets in {} vs {} unfused ops in {} ({:.2}x)",
+        sizes.len(),
+        sizes.iter().sum::<usize>(),
+        fused.len(),
+        fmt_ns(t_fused),
+        unfused.len(),
+        fmt_ns(t_unfused),
+        t_unfused as f64 / t_fused.max(1) as f64,
+    );
     Ok(())
 }
 
@@ -434,13 +528,16 @@ fn run_alu_compare(args: &Args) -> Result<()> {
 fn print_usage() {
     println!(
         "netdam — NetDAM reproduction launcher\n\
-         subcommands: latency | allreduce | incast | multipath | alu | prog | mem | train | info\n\
+         subcommands: latency | allreduce | incast | multipath | alu | prog | mem | comm | train | info\n\
          common flags: --config FILE, --set key=value, --seed N\n\
          allreduce: --algo netdam-ring|halving-doubling|hierarchical|reduce-scatter|\n\
-                    all-gather|broadcast|ring-roce|mpi-native (comma list, or `all`)\n\
+                    all-gather|broadcast|reduce|ring-roce|mpi-native (comma list, or `all`)\n\
          prog:      packet-program demo (build -> verify -> execute); --elements N --ranks N\n\
-         mem:       pooled-memory demo (lease -> IOMMU -> scatter-gather -> NAK -> pipelined\n\
-                    batch -> multi-bag gather); --devices N --bytes B --window W (per-device\n\
-                    in-flight window) --paced GBPS (token-bucket READ pull-back demo)"
+         mem:       pooled-memory demo on the session API (lease -> IOMMU -> scatter-gather ->\n\
+                    NAK -> pipelined batch -> multi-bag gather); --devices N --bytes B\n\
+                    --window W (per-device in-flight window) --paced GBPS (READ pull-back)\n\
+         comm:      session-API demo — two tenant jobs' allreduces + a pooled-memory plan\n\
+                    overlapping on ONE fabric, then gradient bucketing fused vs unfused;\n\
+                    --ranks N --elements N"
     );
 }

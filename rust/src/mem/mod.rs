@@ -54,7 +54,7 @@ use crate::isa::{Flags, Instruction, ProgramBuilder, SimdOp, VerifyEnv, MAX_PROG
 use crate::net::{Cluster, NodeId};
 use crate::pool::{InterleaveMap, TenantId};
 use crate::sim::Engine;
-use crate::transport::{CompletionKey, TokenBucket, WindowEngine, WindowedOp};
+use crate::transport::{CompletionKey, NakRecord, Retired, TokenBucket, WindowEngine, WindowedOp};
 use crate::wire::packet::MAX_PAYLOAD;
 use crate::wire::{DeviceIp, Packet, Payload, Segment, SrouHeader};
 
@@ -178,6 +178,14 @@ impl MemClient {
 
     pub fn map(&self) -> &InterleaveMap {
         &self.map
+    }
+
+    /// A paced twin of this client (same tenant/host/map) — the §2.5
+    /// rate-limited READ pull without re-deriving the tenant.
+    pub fn clone_with_pace(&self, gbps: f64, burst: usize) -> MemClient {
+        MemClient::new(self.host, self.host_ip, self.tenant, self.map.clone())
+            .with_window(self.window)
+            .with_pace(gbps, burst)
     }
 
     // ------------------------------------------------------- public ops
@@ -353,111 +361,107 @@ impl MemClient {
         })
     }
 
-    // --------------------------------------------------- plan execution
+}
 
-    /// Drive a compiled plan through the shared window engine: per-device
-    /// slots, reliable injection, paced refill when configured, NAK
-    /// cancellation, and (for reads) GVA-order reassembly per entry.
-    fn run_ops(
-        &self,
+/// A compiled, engine-ready memory plan: the windowed ops plus the
+/// redemption bookkeeping. Produced by [`MemBatch::prepare`]. The
+/// standalone [`MemBatch::run`] drives it through a private
+/// [`WindowEngine`]; [`crate::comm::Fabric::submit_mem`] submits the
+/// same ops onto the fabric's **shared** session instead, so pooled
+/// I/O flies concurrently with in-flight collectives.
+pub struct PreparedMemPlan {
+    host: NodeId,
+    total: usize,
+    /// The client's per-device in-flight window.
+    window: usize,
+    /// Whether the owning client was token-bucket paced.
+    paced: bool,
+    entries: Vec<EntryKind>,
+    wops: Vec<WindowedOp>,
+    /// Read placement per sequence: `(entry, buffer_off, len)`.
+    read_of_seq: HashMap<u64, (usize, usize, usize)>,
+    cas_of_seq: HashMap<u64, usize>,
+    plan_seqs: HashSet<u64>,
+}
+
+impl PreparedMemPlan {
+    pub fn is_empty(&self) -> bool {
+        self.total == 0
+    }
+
+    /// The per-device in-flight window the owning client configured.
+    pub fn window(&self) -> usize {
+        self.window
+    }
+
+    /// Whether the owning client configured token-bucket pacing.
+    pub fn is_paced(&self) -> bool {
+        self.paced
+    }
+
+    /// Whether the engine must record responses (CAS outcomes need them).
+    pub fn wants_responses(&self) -> bool {
+        !self.cas_of_seq.is_empty()
+    }
+
+    /// Take the engine ops (once). Slots are per-device indices local to
+    /// this plan; whoever runs them windows per device.
+    pub fn take_ops(&mut self) -> Vec<WindowedOp> {
+        std::mem::take(&mut self.wops)
+    }
+
+    /// Redeem the plan against its engine outcome: surface the NAK as a
+    /// typed error, check completeness, collect CAS outcomes from the
+    /// recorded responses, drain *this plan's* packets from the host
+    /// mailbox (other traffic on the host survives), and reassemble
+    /// read data in GVA order.
+    pub fn redeem(
+        self,
         cl: &mut Cluster,
-        eng: &mut Engine<Cluster>,
-        plan: Vec<PlanOp>,
-        entries: &[EntryKind],
+        done: usize,
+        nak: Option<&NakRecord>,
+        responses: &[Retired],
     ) -> Result<BatchResult, MemError> {
-        let total = plan.len();
-        let mut reads: Vec<Option<Vec<u8>>> = entries
+        let mut reads: Vec<Option<Vec<u8>>> = self
+            .entries
             .iter()
             .map(|e| match e {
                 EntryKind::Read { len } => Some(vec![0u8; *len]),
                 _ => None,
             })
             .collect();
-        let mut cas_of_seq: HashMap<u64, usize> = HashMap::new();
-        for (i, e) in entries.iter().enumerate() {
-            if let EntryKind::Cas { seq } = e {
-                cas_of_seq.insert(*seq, i);
-            }
-        }
-        if total == 0 {
+        if self.total == 0 {
             return Ok(BatchResult {
                 reads,
                 cas: HashMap::new(),
             });
         }
-        // Per-device window slots; remember read placement per sequence.
-        let mut slots: Vec<DeviceIp> = Vec::new();
-        let mut read_of_seq: HashMap<u64, (usize, usize, usize)> = HashMap::new();
-        let mut plan_seqs: HashSet<u64> = HashSet::with_capacity(total);
-        let mut wops = Vec::with_capacity(total);
-        for op in plan {
-            let slot = match slots.iter().position(|&d| d == op.device) {
-                Some(i) => i,
-                None => {
-                    slots.push(op.device);
-                    slots.len() - 1
-                }
-            };
-            if let Some(off) = op.read_off {
-                read_of_seq.insert(op.pkt.seq, (op.entry, off, op.len));
-            }
-            plan_seqs.insert(op.pkt.seq);
-            // Pace on the bytes the op moves: a READ's request is tiny
-            // but its response carries `len` — that is what the §2.5
-            // pull-back rate limit must meter. Unpaced plans skip the
-            // per-op header encode wire_bytes() costs.
-            let pace_bytes = if self.pace.is_some() {
-                op.len.max(op.pkt.wire_bytes())
-            } else {
-                0
-            };
-            wops.push(WindowedOp {
-                slot,
-                origin: self.host,
-                key: CompletionKey::Seq(op.pkt.seq),
-                tag: op.gva,
-                reliable: op.reliable,
-                pace_bytes,
-                pkt: op.pkt,
-            });
-        }
-        // Record completions only when something consumes them (CAS
-        // outcomes); read data arrives via the mailbox packets below.
-        let mut engine =
-            WindowEngine::new(self.window).record_responses(!cas_of_seq.is_empty());
-        if let Some(p) = &self.pace {
-            engine = engine.paced(TokenBucket::new(p.gbps, p.burst));
-        }
-        let out = engine
-            .run(cl, eng, wops)
-            .map_err(|e| MemError::Plan(e.to_string()))?;
-        // Drain only *this plan's* responses from the host mailbox —
-        // other traffic the app may be exchanging on the same host node
-        // survives — before any early error return.
+        // Drain before any early error return so a failed plan leaves no
+        // stale responses behind.
         let mailbox = std::mem::take(&mut cl.host_mut(self.host).mailbox);
         let (ours, theirs): (Vec<_>, Vec<_>) = mailbox
             .into_iter()
-            .partition(|(_, pkt)| plan_seqs.contains(&pkt.seq));
+            .partition(|(_, pkt)| self.plan_seqs.contains(&pkt.seq));
         cl.host_mut(self.host).mailbox = theirs;
-        if let Some(nak) = out.nak {
+        if let Some(nak) = nak {
             return Err(MemError::Nak {
                 device: nak.from,
                 gva: nak.tag,
                 reason: NakReason::from_u8(nak.reason),
             });
         }
-        if out.done < total {
+        if done < self.total {
             return Err(MemError::Incomplete {
-                done: out.done,
-                total,
+                done,
+                total: self.total,
             });
         }
         // CAS outcomes from the recorded completions.
         let mut cas = HashMap::new();
-        for r in &out.responses {
+        for r in responses {
             if let Instruction::CasResp { old, swapped, .. } = r.instr {
                 if let CompletionKey::Seq(s) = r.key {
-                    if let Some(&e) = cas_of_seq.get(&s) {
+                    if let Some(&e) = self.cas_of_seq.get(&s) {
                         cas.insert(e, (old, swapped));
                     }
                 }
@@ -468,7 +472,7 @@ impl MemClient {
             if !matches!(pkt.instr, Instruction::ReadResp { .. }) {
                 continue;
             }
-            let Some(&(entry, off, len)) = read_of_seq.get(&pkt.seq) else {
+            let Some(&(entry, off, len)) = self.read_of_seq.get(&pkt.seq) else {
                 continue;
             };
             let Some(buf) = reads[entry].as_mut() else {
@@ -627,17 +631,98 @@ impl MemBatch<'_> {
         self.plan.is_empty()
     }
 
+    /// Compile the queued ops into an engine-ready plan: per-device
+    /// window slots, pace charges, and the redemption bookkeeping. The
+    /// plan is self-contained — submit it standalone ([`Self::run`] does)
+    /// or onto a fabric's shared session
+    /// ([`crate::comm::Fabric::submit_mem`]).
+    pub fn prepare(self) -> PreparedMemPlan {
+        let client = self.client;
+        let total = self.plan.len();
+        let mut cas_of_seq: HashMap<u64, usize> = HashMap::new();
+        for (i, e) in self.entries.iter().enumerate() {
+            if let EntryKind::Cas { seq } = e {
+                cas_of_seq.insert(*seq, i);
+            }
+        }
+        // Per-device window slots; remember read placement per sequence.
+        let mut slots: Vec<DeviceIp> = Vec::new();
+        let mut read_of_seq: HashMap<u64, (usize, usize, usize)> = HashMap::new();
+        let mut plan_seqs: HashSet<u64> = HashSet::with_capacity(total);
+        let mut wops = Vec::with_capacity(total);
+        for op in self.plan {
+            let slot = match slots.iter().position(|&d| d == op.device) {
+                Some(i) => i,
+                None => {
+                    slots.push(op.device);
+                    slots.len() - 1
+                }
+            };
+            if let Some(off) = op.read_off {
+                read_of_seq.insert(op.pkt.seq, (op.entry, off, op.len));
+            }
+            plan_seqs.insert(op.pkt.seq);
+            // Pace on the bytes the op moves: a READ's request is tiny
+            // but its response carries `len` — that is what the §2.5
+            // pull-back rate limit must meter. Unpaced plans skip the
+            // per-op header encode wire_bytes() costs.
+            let pace_bytes = if client.pace.is_some() {
+                op.len.max(op.pkt.wire_bytes())
+            } else {
+                0
+            };
+            wops.push(WindowedOp {
+                slot,
+                origin: client.host,
+                key: CompletionKey::Seq(op.pkt.seq),
+                tag: op.gva,
+                reliable: op.reliable,
+                pace_bytes,
+                pkt: op.pkt,
+            });
+        }
+        PreparedMemPlan {
+            host: client.host,
+            total,
+            window: client.window,
+            paced: client.pace.is_some(),
+            entries: self.entries,
+            wops,
+            read_of_seq,
+            cas_of_seq,
+            plan_seqs,
+        }
+    }
+
     /// Drive every queued op to completion through the window engine.
     pub fn run(
         self,
         cl: &mut Cluster,
         eng: &mut Engine<Cluster>,
     ) -> Result<BatchResult, MemError> {
-        self.client.run_ops(cl, eng, self.plan, &self.entries)
+        let window = self.client.window;
+        let pace = self.client.pace;
+        let mut prepared = self.prepare();
+        if prepared.is_empty() {
+            return prepared.redeem(cl, 0, None, &[]);
+        }
+        // Record completions only when something consumes them (CAS
+        // outcomes); read data arrives via the mailbox packets instead.
+        let mut engine =
+            WindowEngine::new(window).record_responses(prepared.wants_responses());
+        if let Some(p) = pace {
+            engine = engine.paced(TokenBucket::new(p.gbps, p.burst));
+        }
+        let ops = prepared.take_ops();
+        let out = engine
+            .run(cl, eng, ops)
+            .map_err(|e| MemError::Plan(e.to_string()))?;
+        prepared.redeem(cl, out.done, out.nak.as_ref(), &out.responses)
     }
 }
 
 /// Results of a [`MemBatch`] run, redeemed by [`OpHandle`].
+#[derive(Debug)]
 pub struct BatchResult {
     reads: Vec<Option<Vec<u8>>>,
     cas: HashMap<usize, (u64, bool)>,

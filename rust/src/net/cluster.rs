@@ -519,6 +519,11 @@ impl Cluster {
                 }
             }
         };
+        // Count CE marks where they terminate: the endpoint is what a
+        // DCQCN-style rate controller would hang its CNP echo off.
+        if !matches!(kind, Kind::Switch { .. }) && pkt.flags.ecn() {
+            self.metrics.inc("ecn_ce_received");
+        }
         match kind {
             Kind::Switch { latency } => {
                 eng.schedule_in(latency, move |cl: &mut Cluster, eng| {
@@ -888,6 +893,34 @@ mod tests {
         cl.start_apps(&mut eng);
         eng.run(&mut cl);
         assert_eq!(cl.metrics.hist("rtt_done").unwrap().count(), 3);
+    }
+
+    #[test]
+    fn congestion_marks_are_counted_at_the_receiver() {
+        // Blast enough back-to-back writes through one uplink to push its
+        // queue past the ECN threshold; the marks must survive to the
+        // receiving device and be counted there.
+        let (mut cl, h, d1, _d2) = star();
+        let mut eng: Engine<Cluster> = Engine::new();
+        let _ = d1;
+        for i in 0..40u64 {
+            let seq = cl.alloc_seq(h);
+            let w = Packet::new(
+                ip(100),
+                seq,
+                SrouHeader::direct(ip(1)),
+                Instruction::Write { addr: i * 8192 },
+            )
+            .with_payload(Payload::from_bytes(vec![0u8; 8192]));
+            cl.inject(&mut eng, h, w);
+        }
+        eng.run(&mut cl);
+        // 40 × ~8.3 KB queued at once ≈ 330 KB ≫ the 100 KB threshold.
+        assert!(
+            cl.metrics.counter("ecn_ce_received") > 0,
+            "CE marks must be carried to and counted at the endpoint"
+        );
+        assert_eq!(cl.total_drops(), 0, "marking, not dropping");
     }
 
     #[test]

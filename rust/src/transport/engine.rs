@@ -10,13 +10,27 @@
 //! collectives (§3) and pooled-memory access (§2.5/§2.6) — so the host
 //! side gets one transport engine too.
 //!
-//! [`WindowEngine::run`] drives a batch of [`WindowedOp`]s to
-//! completion:
+//! Since the session API landed (`netdam::comm`), the engine has two
+//! fronts:
+//!
+//! * [`EngineSession`] — the long-lived, multi-tenant front. Plans
+//!   (batches of [`WindowedOp`]s) are **submitted incrementally** and
+//!   multiplex onto one completion hook: concurrent collectives from
+//!   several communicators and pooled-memory plans from the same fabric
+//!   are all in flight together, each windowed on its own slots.
+//!   Per-plan outcomes ([`PlanOutcome`]) are redeemed by [`PlanId`].
+//! * [`WindowEngine`] — the classic single-plan front: `run` opens a
+//!   session, submits one plan, drives the DES until quiet, and tears
+//!   the session down. All pre-session callers (the collective driver,
+//!   standalone `MemBatch::run`) still use this.
+//!
+//! Shared semantics, regardless of front:
 //!
 //! * **Windowing** — ops are queued per *slot* (a collective rank, a
 //!   pool device — whatever the caller windows over) and at most
 //!   `window` ops per slot are in flight; each retirement refills from
-//!   that slot's queue (self-clocking).
+//!   that slot's queue (self-clocking). Sessions give every plan its
+//!   own slots, so one tenant's window never starves another's.
 //! * **Completion keying** — generic over the two flavors in the tree:
 //!   [`CompletionKey::DoneId`] matches a `CollectiveDone { block }`
 //!   (collective chains retire at the far end of a multi-hop program),
@@ -29,19 +43,25 @@
 //!   entry (via `note_completion`), so a drained run leaves no dangling
 //!   timers.
 //! * **NAK surfacing + cancel** — a wire `Nack` matching an in-flight op
-//!   records the typed denial and *cancels the remaining queues*: no
-//!   further ops are injected, in-flight ops drain normally, and the
-//!   caller gets the first NAK plus the count of cancelled ops.
-//! * **Paced refill** — with [`WindowEngine::paced`], every injection
-//!   first reserves the op's `pace_bytes` from a [`TokenBucket`] and is
-//!   released only when the bucket allows (the §2.5 "sequencing and
-//!   rate-limited READ" incast cure). Pacing composes with windowing:
-//!   injection time is the later of the completion that freed the slot
-//!   and the bucket release.
+//!   records the typed denial and cancels *that plan's* remaining queue:
+//!   no further ops of the NAK'd plan are injected, its in-flight ops
+//!   drain normally, and every other plan keeps running untouched (a bad
+//!   lease in one job must not take the fabric down for its neighbors).
+//! * **Paced refill** — with [`WindowEngine::paced`] /
+//!   [`EngineSession::paced`], every injection first reserves the op's
+//!   `pace_bytes` from a [`TokenBucket`] and is released only when the
+//!   bucket allows (the §2.5 "sequencing and rate-limited READ" incast
+//!   cure). `paced_per_slot` gives each slot its **own** bucket cloned
+//!   from the template — per-destination pacing for communicator
+//!   fan-out, where one global bucket would serialize independent
+//!   destinations. Pacing composes with windowing: injection time is
+//!   the later of the completion that freed the slot and the bucket
+//!   release.
 //!
-//! The engine installs the cluster's completion hook for the duration of
-//! one `run` and always removes it before returning — callers never
-//! touch `Cluster::on_completion` themselves.
+//! The session installs the cluster's completion hook for its lifetime
+//! and removes it on [`EngineSession::close`]; `WindowEngine::run` does
+//! both internally — callers never touch `Cluster::on_completion`
+//! themselves.
 
 use std::cell::RefCell;
 use std::collections::{HashMap, HashSet, VecDeque};
@@ -73,6 +93,8 @@ pub enum CompletionKey {
 /// One windowed op: a packet plus how to window and retire it.
 pub struct WindowedOp {
     /// Window slot (a rank, a device index — the caller's peer notion).
+    /// Slots are plan-local: two plans submitted into one session may
+    /// both use slot 0 and still get independent windows.
     pub slot: usize,
     /// Node that injects the packet and receives its completion.
     pub origin: NodeId,
@@ -97,7 +119,7 @@ pub struct Retired {
     pub time: SimTime,
 }
 
-/// The first wire NAK matched to an in-flight op.
+/// The first wire NAK matched to an in-flight op of one plan.
 #[derive(Debug, Clone, Copy)]
 pub struct NakRecord {
     /// Device that denied the access.
@@ -109,7 +131,7 @@ pub struct NakRecord {
     pub key: CompletionKey,
 }
 
-/// What one engine run produced.
+/// What one engine run produced (the single-plan [`WindowEngine`] view).
 #[derive(Debug)]
 pub struct WindowOutcome {
     /// Ops submitted.
@@ -128,12 +150,44 @@ pub struct WindowOutcome {
     /// echoes) — ignored, counted for diagnostics.
     pub duplicate_completions: usize,
     /// Paced release log `(release_time, pace_bytes)`, empty when
-    /// unpaced. By construction cumulative bytes released by time `t`
-    /// never exceed `burst + rate·t`.
+    /// unpaced. With a global bucket, cumulative bytes released by time
+    /// `t` never exceed `burst + rate·t`; with per-slot buckets the
+    /// bound holds per slot (see [`WindowOutcome::releases_per_slot`]).
     pub releases: Vec<(SimTime, usize)>,
+    /// Like `releases`, but tagged with the releasing slot.
+    pub releases_per_slot: Vec<(usize, SimTime, usize)>,
     /// Retired completions (only when [`WindowEngine::record_responses()`]
     /// is on; `CollectiveDone` floods would be noise for collectives).
     pub responses: Vec<Retired>,
+}
+
+/// Handle to one plan submitted into an [`EngineSession`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PlanId(usize);
+
+/// Per-plan outcome, redeemed from a session by [`PlanId`].
+#[derive(Debug)]
+pub struct PlanOutcome {
+    /// Ops this plan submitted.
+    pub ops: usize,
+    /// Ops retired exactly once.
+    pub done: usize,
+    /// Simulated time the plan was submitted.
+    pub submitted_at: SimTime,
+    /// Time of the plan's last retirement (submit time if none).
+    pub last_done: SimTime,
+    pub nak: Option<NakRecord>,
+    /// Queued ops of *this plan* dropped by its NAK cancellation.
+    pub cancelled: usize,
+    /// Retired completions, when the plan was submitted recording.
+    pub responses: Vec<Retired>,
+}
+
+impl PlanOutcome {
+    /// Every op retired (no loss, no cancellation).
+    pub fn complete(&self) -> bool {
+        self.done == self.ops
+    }
 }
 
 /// Internal completion key: seq matches are scoped to the origin node so
@@ -147,6 +201,7 @@ enum Key {
 struct QueuedOp {
     key: Key,
     pub_key: CompletionKey,
+    plan: usize,
     tag: u64,
     origin: NodeId,
     reliable: bool,
@@ -156,50 +211,109 @@ struct QueuedOp {
 
 struct InflightOp {
     slot: usize,
+    plan: usize,
     tag: u64,
     pub_key: CompletionKey,
+}
+
+/// Per-plan bookkeeping inside the session state.
+struct PlanState {
+    ops: usize,
+    done: usize,
+    inflight: usize,
+    /// Session slots this plan owns (returned to the free list once the
+    /// plan settles).
+    slots: Vec<usize>,
+    /// This plan's completion keys (pruned from the session sets at
+    /// reclaim time so a long-lived session doesn't grow forever).
+    keys: Vec<Key>,
+    reclaimed: bool,
+    submitted_at: SimTime,
+    last_done: SimTime,
+    nak: Option<NakRecord>,
+    cancelled: usize,
+    record_responses: bool,
+    responses: Vec<Retired>,
+}
+
+/// How injections are paced.
+#[derive(Clone)]
+enum PaceMode {
+    None,
+    /// One bucket paces every slot together (E3's single-receiver cure).
+    Global(TokenBucket),
+    /// Each slot gets its own bucket cloned from this template —
+    /// per-destination pacing for communicator fan-out.
+    PerSlot(TokenBucket),
 }
 
 struct State {
     queues: Vec<VecDeque<QueuedOp>>,
     inflight: HashMap<Key, InflightOp>,
     retired: HashSet<Key>,
+    /// Every live key (duplicate-submission guard; pruned per plan at
+    /// reclaim time).
+    keys: HashSet<Key>,
     inflight_per_slot: Vec<usize>,
+    /// Slots whose owning plan settled — reused by later submits so a
+    /// long-lived session's slot space stays bounded by its concurrency,
+    /// not its history.
+    free_slots: Vec<usize>,
     max_inflight: usize,
-    done: usize,
     duplicates: usize,
-    last_done: SimTime,
-    nak: Option<NakRecord>,
-    cancelled: usize,
-    record_responses: bool,
-    responses: Vec<Retired>,
-    pacer: Option<TokenBucket>,
-    releases: Vec<(SimTime, usize)>,
+    plans: Vec<PlanState>,
+    /// Plans with ≥ 1 op in flight right now / the high-water mark —
+    /// the multi-tenant overlap statistic the comm tests assert on.
+    active_plans: usize,
+    max_concurrent_plans: usize,
+    pace: PaceMode,
+    slot_pacers: Vec<Option<TokenBucket>>,
+    releases: Vec<(usize, SimTime, usize)>,
 }
 
 impl State {
+    /// Pace an injection on `slot` at `now`: reserve from the bucket the
+    /// mode selects and return the release delay (0 when unpaced).
+    fn pace_delay(&mut self, slot: usize, now: SimTime, bytes: usize) -> SimTime {
+        let release = match &mut self.pace {
+            PaceMode::None => return 0,
+            PaceMode::Global(tb) => tb.reserve(now, bytes),
+            PaceMode::PerSlot(template) => {
+                if self.slot_pacers.len() <= slot {
+                    self.slot_pacers.resize_with(slot + 1, || None);
+                }
+                self.slot_pacers[slot]
+                    .get_or_insert_with(|| template.clone())
+                    .reserve(now, bytes)
+            }
+        };
+        self.releases.push((slot, release, bytes));
+        release.saturating_sub(now)
+    }
+
     /// Pop the next op off `slot`'s queue and turn it into an injection
     /// command (possibly pace-delayed). `None` when the queue is dry.
+    /// Callers guarantee the slot has window room.
     fn next_cmd(&mut self, slot: usize, now: SimTime) -> Option<InjectCmd> {
         let op = self.queues[slot].pop_front()?;
+        let plan = op.plan;
         self.inflight.insert(
             op.key,
             InflightOp {
                 slot,
+                plan,
                 tag: op.tag,
                 pub_key: op.pub_key,
             },
         );
         self.inflight_per_slot[slot] += 1;
         self.max_inflight = self.max_inflight.max(self.inflight_per_slot[slot]);
-        let delay = match &mut self.pacer {
-            Some(tb) => {
-                let release = tb.reserve(now, op.pace_bytes);
-                self.releases.push((release, op.pace_bytes));
-                release.saturating_sub(now)
-            }
-            None => 0,
-        };
+        if self.plans[plan].inflight == 0 {
+            self.active_plans += 1;
+            self.max_concurrent_plans = self.max_concurrent_plans.max(self.active_plans);
+        }
+        self.plans[plan].inflight += 1;
+        let delay = self.pace_delay(slot, now, op.pace_bytes);
         Some(InjectCmd {
             origin: op.origin,
             pkt: op.pkt,
@@ -207,13 +321,379 @@ impl State {
             delay,
         })
     }
+
+    /// Handle one completion record; returns follow-up injections.
+    fn on_completion(&mut self, rec: &CompletionRecord) -> Vec<InjectCmd> {
+        let candidate = match &rec.instr {
+            Instruction::CollectiveDone { block } => {
+                let k = Key::Done(*block);
+                if self.inflight.contains_key(&k) || self.retired.contains(&k) {
+                    k
+                } else {
+                    Key::Seq(rec.node, rec.seq)
+                }
+            }
+            _ => Key::Seq(rec.node, rec.seq),
+        };
+        let Some(info) = self.inflight.remove(&candidate) else {
+            if self.retired.contains(&candidate) {
+                self.duplicates += 1; // retransmit echo — already retired
+            }
+            return Vec::new(); // foreign completion
+        };
+        self.retired.insert(candidate);
+        self.inflight_per_slot[info.slot] -= 1;
+        let plan = &mut self.plans[info.plan];
+        plan.inflight -= 1;
+        if plan.inflight == 0 {
+            self.active_plans -= 1;
+        }
+        plan.done += 1;
+        plan.last_done = rec.time;
+        if let Instruction::Nack { reason, .. } = &rec.instr {
+            let first_nak = plan.nak.is_none();
+            if first_nak {
+                plan.nak = Some(NakRecord {
+                    from: rec.from,
+                    tag: info.tag,
+                    reason: *reason,
+                    key: info.pub_key,
+                });
+                // Cancel the rest of *this plan only*: its lease is bad,
+                // so hammering the device with its remaining window
+                // would just be more NAKs — but other tenants' plans on
+                // the session are healthy and keep running. One sweep,
+                // over the plan's own slots, on the first NAK (the
+                // remaining in-flight ops drain to their own NAKs).
+                let p = info.plan;
+                let slots = self.plans[p].slots.clone();
+                let mut dropped = 0usize;
+                for slot in slots {
+                    let q = &mut self.queues[slot];
+                    let before = q.len();
+                    q.retain(|op| op.plan != p);
+                    dropped += before - q.len();
+                }
+                self.plans[p].cancelled += dropped;
+            }
+        }
+        let plan = &mut self.plans[info.plan];
+        if plan.record_responses {
+            plan.responses.push(Retired {
+                key: info.pub_key,
+                tag: info.tag,
+                instr: rec.instr.clone(),
+                time: rec.time,
+            });
+        }
+        let cmds = match self.next_cmd(info.slot, rec.time) {
+            Some(cmd) => vec![cmd],
+            None => Vec::new(),
+        };
+        self.reclaim_if_settled(info.plan);
+        cmds
+    }
+
+    /// Once a plan has fully settled (every op retired or cancelled,
+    /// nothing in flight), return its slots to the free list and prune
+    /// its keys — a long-lived session stays bounded by concurrency.
+    /// Late retransmit echoes for a reclaimed plan simply read as
+    /// foreign completions and are ignored.
+    fn reclaim_if_settled(&mut self, plan: usize) {
+        let p = &self.plans[plan];
+        if p.reclaimed || p.inflight > 0 || p.done + p.cancelled < p.ops {
+            return;
+        }
+        let p = &mut self.plans[plan];
+        p.reclaimed = true;
+        let slots = std::mem::take(&mut p.slots);
+        let keys = std::mem::take(&mut p.keys);
+        for k in keys {
+            self.keys.remove(&k);
+            self.retired.remove(&k);
+        }
+        for slot in slots {
+            debug_assert!(self.queues[slot].is_empty());
+            debug_assert_eq!(self.inflight_per_slot[slot], 0);
+            if self.slot_pacers.len() > slot {
+                // A reused slot starts with a fresh bucket.
+                self.slot_pacers[slot] = None;
+            }
+            self.free_slots.push(slot);
+        }
+    }
 }
 
-/// The shared windowed transport engine. Construct with [`Self::new`],
+/// The long-lived multi-plan front of the transport engine (see the
+/// module docs). A session owns the cluster's completion hook from the
+/// first [`submit`](Self::submit) until [`close`](Self::close); plans
+/// from any number of tenants multiplex onto it.
+pub struct EngineSession {
+    window: usize,
+    state: Rc<RefCell<State>>,
+    hooked: bool,
+}
+
+impl EngineSession {
+    /// Session whose plans default to `window` ops in flight per slot
+    /// (minimum 1); [`submit`](Self::submit) takes each plan's actual
+    /// window.
+    pub fn new(window: usize) -> Self {
+        Self {
+            window: window.max(1),
+            state: Rc::new(RefCell::new(State {
+                queues: Vec::new(),
+                inflight: HashMap::new(),
+                retired: HashSet::new(),
+                keys: HashSet::new(),
+                inflight_per_slot: Vec::new(),
+                free_slots: Vec::new(),
+                max_inflight: 0,
+                duplicates: 0,
+                plans: Vec::new(),
+                active_plans: 0,
+                max_concurrent_plans: 0,
+                pace: PaceMode::None,
+                slot_pacers: Vec::new(),
+                releases: Vec::new(),
+            })),
+            hooked: false,
+        }
+    }
+
+    /// Pace every injection through one shared `bucket`.
+    pub fn paced(self, bucket: TokenBucket) -> Self {
+        self.state.borrow_mut().pace = PaceMode::Global(bucket);
+        self
+    }
+
+    /// Pace each slot through its own clone of `bucket` — per-
+    /// destination pacing (the ROADMAP's communicator fan-out item).
+    pub fn paced_per_slot(self, bucket: TokenBucket) -> Self {
+        self.state.borrow_mut().pace = PaceMode::PerSlot(bucket);
+        self
+    }
+
+    /// Submit one plan with its own per-slot `window`: map the plan's
+    /// local slot space onto session slots (reusing slots of settled
+    /// plans), enqueue its ops, install the completion hook if this is
+    /// the first plan, and kick every touched slot's window. The ops
+    /// start flowing on the next [`drive`](Self::drive).
+    pub fn submit(
+        &mut self,
+        cl: &mut Cluster,
+        eng: &mut Engine<Cluster>,
+        ops: Vec<WindowedOp>,
+        record_responses: bool,
+        window: usize,
+    ) -> Result<PlanId> {
+        let window = window.max(1);
+        if !self.hooked {
+            ensure!(
+                cl.on_completion.is_none(),
+                "cluster already has a completion hook installed"
+            );
+            let hook_state = Rc::clone(&self.state);
+            cl.on_completion = Some(Box::new(move |rec: &CompletionRecord| {
+                hook_state.borrow_mut().on_completion(rec)
+            }));
+            self.hooked = true;
+        }
+        let plan_id;
+        let mut kicks = Vec::new();
+        {
+            let mut st = self.state.borrow_mut();
+            plan_id = st.plans.len();
+            // Map the plan's local slots onto session slots: every plan
+            // windows independently even when two tenants name the same
+            // peer.
+            let mut slot_map: HashMap<usize, usize> = HashMap::new();
+            let mut touched: Vec<usize> = Vec::new();
+            let n_ops = ops.len();
+            // Validate keys AND slot capacity up front so a rejected
+            // submit leaves no partial queue state behind.
+            let mut fresh: Vec<Key> = Vec::with_capacity(n_ops);
+            let mut fresh_set: HashSet<Key> = HashSet::with_capacity(n_ops);
+            let mut distinct_slots: HashSet<usize> = HashSet::new();
+            for op in &ops {
+                let key = match op.key {
+                    CompletionKey::DoneId(b) => Key::Done(b),
+                    CompletionKey::Seq(s) => Key::Seq(op.origin, s),
+                };
+                ensure!(
+                    !st.keys.contains(&key) && fresh_set.insert(key),
+                    "duplicate completion key {:?}",
+                    op.key
+                );
+                fresh.push(key);
+                distinct_slots.insert(op.slot);
+            }
+            let new_slots = distinct_slots
+                .len()
+                .saturating_sub(st.free_slots.len());
+            ensure!(
+                st.queues.len() + new_slots <= MAX_SLOTS,
+                "window engine slot space exhausted"
+            );
+            st.keys.extend(fresh_set);
+            for (op, key) in ops.into_iter().zip(fresh.iter().copied()) {
+                let slot = match slot_map.get(&op.slot) {
+                    Some(&s) => s,
+                    None => {
+                        let s = match st.free_slots.pop() {
+                            Some(s) => s,
+                            None => {
+                                let s = st.queues.len();
+                                st.queues.push(VecDeque::new());
+                                st.inflight_per_slot.push(0);
+                                s
+                            }
+                        };
+                        slot_map.insert(op.slot, s);
+                        touched.push(s);
+                        s
+                    }
+                };
+                st.queues[slot].push_back(QueuedOp {
+                    key,
+                    pub_key: op.key,
+                    plan: plan_id,
+                    tag: op.tag,
+                    origin: op.origin,
+                    reliable: op.reliable,
+                    pace_bytes: op.pace_bytes,
+                    pkt: op.pkt,
+                });
+            }
+            st.plans.push(PlanState {
+                ops: n_ops,
+                done: 0,
+                inflight: 0,
+                slots: touched.clone(),
+                keys: fresh,
+                reclaimed: false,
+                submitted_at: eng.now(),
+                last_done: eng.now(),
+                nak: None,
+                cancelled: 0,
+                record_responses,
+                responses: Vec::new(),
+            });
+            // Kick the plan's initial windows.
+            let now = eng.now();
+            for slot in touched {
+                while st.inflight_per_slot[slot] < window {
+                    match st.next_cmd(slot, now) {
+                        Some(cmd) => kicks.push(cmd),
+                        None => break,
+                    }
+                }
+            }
+        }
+        for cmd in kicks {
+            cl.inject_cmd(eng, cmd);
+        }
+        Ok(PlanId(plan_id))
+    }
+
+    /// Run the DES until it drains. Every submitted plan makes progress
+    /// concurrently; plans that can complete do.
+    pub fn drive(&mut self, cl: &mut Cluster, eng: &mut Engine<Cluster>) {
+        eng.run(cl);
+    }
+
+    /// Has every op of `plan` retired?
+    pub fn is_complete(&self, plan: PlanId) -> bool {
+        let st = self.state.borrow();
+        let p = &st.plans[plan.0];
+        p.done == p.ops
+    }
+
+    /// Has `plan` stopped (all retired, or NAK-cancelled and drained)?
+    pub fn is_settled(&self, plan: PlanId) -> bool {
+        let st = self.state.borrow();
+        let p = &st.plans[plan.0];
+        p.done + p.cancelled == p.ops && p.inflight == 0
+    }
+
+    /// Lightweight progress probe: `(done, ops, last_done)` for `plan`
+    /// without consuming its recorded responses.
+    pub fn progress(&self, plan: PlanId) -> (usize, usize, SimTime) {
+        let st = self.state.borrow();
+        let p = &st.plans[plan.0];
+        (p.done, p.ops, p.last_done)
+    }
+
+    /// Redeem a plan's outcome (recorded responses move out — redeem a
+    /// given plan once).
+    pub fn outcome(&mut self, plan: PlanId) -> PlanOutcome {
+        let mut st = self.state.borrow_mut();
+        let p = &mut st.plans[plan.0];
+        PlanOutcome {
+            ops: p.ops,
+            done: p.done,
+            submitted_at: p.submitted_at,
+            last_done: p.last_done,
+            nak: p.nak,
+            cancelled: p.cancelled,
+            responses: std::mem::take(&mut p.responses),
+        }
+    }
+
+    /// High-water mark of plans simultaneously in flight — ≥ 2 proves
+    /// two tenants' ops coexisted on the shared engine.
+    pub fn max_concurrent_plans(&self) -> usize {
+        self.state.borrow().max_concurrent_plans
+    }
+
+    /// Max ops simultaneously in flight on any one slot (≤ window).
+    pub fn max_inflight(&self) -> usize {
+        self.state.borrow().max_inflight
+    }
+
+    /// Completions that matched an already-retired key (retransmit
+    /// echoes).
+    pub fn duplicate_completions(&self) -> usize {
+        self.state.borrow().duplicates
+    }
+
+    /// Ops currently queued but not yet injected (all plans).
+    pub fn queued(&self) -> usize {
+        self.state.borrow().queues.iter().map(|q| q.len()).sum()
+    }
+
+    /// Nothing queued or in flight anywhere on the session.
+    pub fn idle(&self) -> bool {
+        let st = self.state.borrow();
+        st.inflight.is_empty() && st.queues.iter().all(|q| q.is_empty())
+    }
+
+    /// Paced release log `(slot, release_time, bytes)`.
+    pub fn releases(&self) -> Vec<(usize, SimTime, usize)> {
+        self.state.borrow().releases.clone()
+    }
+
+    /// Uninstall the completion hook. The session keeps its bookkeeping
+    /// (outcomes stay redeemable) but accepts no more traffic.
+    pub fn close(&mut self, cl: &mut Cluster) {
+        if self.hooked {
+            cl.on_completion = None;
+            self.hooked = false;
+        }
+    }
+
+    /// The default per-slot in-flight window for this session's plans.
+    pub fn window(&self) -> usize {
+        self.window
+    }
+}
+
+/// The classic single-plan front: construct with [`Self::new`],
 /// optionally add pacing/recording, then [`Self::run`] a batch of ops.
 pub struct WindowEngine {
     window: usize,
     pacer: Option<TokenBucket>,
+    per_slot: bool,
     record_responses: bool,
 }
 
@@ -223,13 +703,23 @@ impl WindowEngine {
         Self {
             window: window.max(1),
             pacer: None,
+            per_slot: false,
             record_responses: false,
         }
     }
 
-    /// Pace every injection through `bucket` (see module docs).
+    /// Pace every injection through one shared `bucket` (see module docs).
     pub fn paced(mut self, bucket: TokenBucket) -> Self {
         self.pacer = Some(bucket);
+        self.per_slot = false;
+        self
+    }
+
+    /// Pace each slot through its own clone of `bucket` (per-destination
+    /// pacing — see module docs).
+    pub fn paced_per_slot(mut self, bucket: TokenBucket) -> Self {
+        self.pacer = Some(bucket);
+        self.per_slot = true;
         self
     }
 
@@ -240,8 +730,8 @@ impl WindowEngine {
     }
 
     /// Drive `ops` to completion (or to NAK cancellation / retry
-    /// exhaustion): install the completion hook, kick the initial
-    /// windows, run the DES until quiet, tear the hook down, and report.
+    /// exhaustion): open a one-plan session, kick the initial windows,
+    /// run the DES until quiet, tear the hook down, and report.
     pub fn run(
         &self,
         cl: &mut Cluster,
@@ -259,140 +749,42 @@ impl WindowEngine {
                 max_inflight: 0,
                 duplicate_completions: 0,
                 releases: Vec::new(),
+                releases_per_slot: Vec::new(),
                 responses: Vec::new(),
             });
         }
-        let n_slots = ops.iter().map(|o| o.slot + 1).max().unwrap_or(1);
-        ensure!(
-            n_slots <= MAX_SLOTS,
-            "window engine slot index {} out of range",
-            n_slots - 1
-        );
-        let mut queues: Vec<VecDeque<QueuedOp>> =
-            (0..n_slots).map(|_| VecDeque::new()).collect();
-        let mut seen: HashSet<Key> = HashSet::with_capacity(n_ops);
-        for op in ops {
-            let key = match op.key {
-                CompletionKey::DoneId(b) => Key::Done(b),
-                CompletionKey::Seq(s) => Key::Seq(op.origin, s),
+        let mut session = EngineSession::new(self.window);
+        if let Some(tb) = &self.pacer {
+            session = if self.per_slot {
+                session.paced_per_slot(tb.clone())
+            } else {
+                session.paced(tb.clone())
             };
-            ensure!(seen.insert(key), "duplicate completion key {:?}", op.key);
-            queues[op.slot].push_back(QueuedOp {
-                key,
-                pub_key: op.key,
-                tag: op.tag,
-                origin: op.origin,
-                reliable: op.reliable,
-                pace_bytes: op.pace_bytes,
-                pkt: op.pkt,
-            });
         }
-        let state = Rc::new(RefCell::new(State {
-            queues,
-            inflight: HashMap::with_capacity(n_ops.min(n_slots * self.window)),
-            retired: HashSet::with_capacity(n_ops),
-            inflight_per_slot: vec![0; n_slots],
-            max_inflight: 0,
-            done: 0,
-            duplicates: 0,
-            last_done: eng.now(),
-            nak: None,
-            cancelled: 0,
-            record_responses: self.record_responses,
-            responses: Vec::new(),
-            pacer: self.pacer.clone(),
-            releases: Vec::new(),
-        }));
-
-        let hook_state = Rc::clone(&state);
-        cl.on_completion = Some(Box::new(move |rec: &CompletionRecord| {
-            let mut st = hook_state.borrow_mut();
-            let candidate = match &rec.instr {
-                Instruction::CollectiveDone { block } => {
-                    let k = Key::Done(*block);
-                    if st.inflight.contains_key(&k) || st.retired.contains(&k) {
-                        k
-                    } else {
-                        Key::Seq(rec.node, rec.seq)
-                    }
-                }
-                _ => Key::Seq(rec.node, rec.seq),
-            };
-            let Some(info) = st.inflight.remove(&candidate) else {
-                if st.retired.contains(&candidate) {
-                    st.duplicates += 1; // retransmit echo — already retired
-                }
-                return Vec::new(); // foreign completion
-            };
-            st.retired.insert(candidate);
-            st.inflight_per_slot[info.slot] -= 1;
-            st.done += 1;
-            st.last_done = rec.time;
-            if let Instruction::Nack { reason, .. } = &rec.instr {
-                if st.nak.is_none() {
-                    st.nak = Some(NakRecord {
-                        from: rec.from,
-                        tag: info.tag,
-                        reason: *reason,
-                        key: info.pub_key,
-                    });
-                }
-                // Cancel the remaining plan: drain in-flight ops, inject
-                // nothing more (the lease is bad — hammering it with the
-                // rest of the window would just be more NAKs).
-                let queued: usize = st.queues.iter().map(|q| q.len()).sum();
-                st.cancelled += queued;
-                for q in &mut st.queues {
-                    q.clear();
-                }
+        let plan = match session.submit(cl, eng, ops, self.record_responses, self.window) {
+            Ok(p) => p,
+            Err(e) => {
+                // A rejected submit (duplicate key) must not leave the
+                // hook installed.
+                session.close(cl);
+                return Err(e);
             }
-            if st.record_responses {
-                st.responses.push(Retired {
-                    key: info.pub_key,
-                    tag: info.tag,
-                    instr: rec.instr.clone(),
-                    time: rec.time,
-                });
-            }
-            match st.next_cmd(info.slot, rec.time) {
-                Some(cmd) => vec![cmd],
-                None => Vec::new(),
-            }
-        }));
-
-        // Kick the initial per-slot windows.
-        let mut kicks = Vec::new();
-        {
-            let mut st = state.borrow_mut();
-            let now = eng.now();
-            for slot in 0..n_slots {
-                for _ in 0..self.window {
-                    match st.next_cmd(slot, now) {
-                        Some(cmd) => kicks.push(cmd),
-                        None => break,
-                    }
-                }
-            }
-        }
-        for cmd in kicks {
-            cl.inject_cmd(eng, cmd);
-        }
-        eng.run(cl);
-        cl.on_completion = None;
-        let st = Rc::try_unwrap(state)
-            .ok()
-            .expect("completion hook released")
-            .into_inner();
+        };
+        session.drive(cl, eng);
+        session.close(cl);
+        let out = session.outcome(plan);
+        let releases_per_slot = session.releases();
         Ok(WindowOutcome {
-            ops: n_ops,
-            done: st.done,
-            last_done: st.last_done,
-            nak: st.nak,
-            cancelled: st.cancelled,
-            max_inflight: st.max_inflight,
-            duplicate_completions: st.duplicates,
-            releases: st.releases,
-            responses: st.responses,
+            ops: out.ops,
+            done: out.done,
+            last_done: out.last_done,
+            nak: out.nak,
+            cancelled: out.cancelled,
+            max_inflight: session.max_inflight(),
+            duplicate_completions: session.duplicate_completions(),
+            releases: releases_per_slot.iter().map(|&(_, at, b)| (at, b)).collect(),
+            releases_per_slot,
+            responses: out.responses,
         })
     }
 }

@@ -16,15 +16,21 @@
 //!   reliable-injection/completion-refill state machine under both the
 //!   collective driver and the pooled-memory client: per-slot
 //!   self-clocked windows, completion keying generic over done-id vs
-//!   sequence, NAK surfacing with plan cancellation, and token-bucket
-//!   paced refill.
+//!   sequence, NAK surfacing with per-plan cancellation, and token-bucket
+//!   paced refill (global or per-slot). Its multi-plan front
+//!   ([`engine::EngineSession`]) lets concurrent tenants — communicator
+//!   collectives and pooled-memory batches from one fabric — multiplex
+//!   onto a single completion hook (see [`crate::comm`]).
 
 pub mod engine;
 pub mod rate;
 pub mod reliability;
 pub mod reorder;
 
-pub use engine::{CompletionKey, NakRecord, Retired, WindowEngine, WindowOutcome, WindowedOp};
+pub use engine::{
+    CompletionKey, EngineSession, NakRecord, PlanId, PlanOutcome, Retired, WindowEngine,
+    WindowOutcome, WindowedOp,
+};
 pub use rate::TokenBucket;
 pub use reliability::{PendingKey, ReliabilityTable, RetryVerdict};
 pub use reorder::ReorderBuffer;

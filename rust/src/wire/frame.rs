@@ -42,12 +42,19 @@ impl std::fmt::Display for DeviceIp {
     }
 }
 
+/// The IPv4 ECN field's Congestion-Experienced codepoint (RFC 3168).
+pub const ECN_CE: u8 = 0b11;
+
 /// Minimal IPv4+UDP header pair for the byte codec.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct CarrierHeader {
     pub src: DeviceIp,
     pub dst: DeviceIp,
     pub udp_len: u16, // UDP header + NetDAM bytes
+    /// Congestion Experienced: a switch queue over its ECN threshold
+    /// marked this packet. Carried in the IPv4 TOS byte's ECN bits —
+    /// the mark a DCQCN-style receiver echoes back to the sender.
+    pub ecn: bool,
 }
 
 /// RFC 1071 internet checksum over `data`.
@@ -71,7 +78,7 @@ impl CarrierHeader {
         // IPv4 header (no options).
         let mut ip = Writer::with_capacity(IPV4_HEADER);
         ip.u8(0x45); // v4, IHL=5
-        ip.u8(0); // DSCP/ECN
+        ip.u8(if self.ecn { ECN_CE } else { 0 }); // DSCP=0, ECN bits live
         ip.u16(IPV4_HEADER as u16 + self.udp_len);
         ip.u16(0); // identification
         ip.u16(0x4000); // DF
@@ -97,7 +104,8 @@ impl CarrierHeader {
         if vihl != 0x45 {
             bail!("unsupported IP version/IHL {vihl:#04x}");
         }
-        let _tos = r.u8()?;
+        let tos = r.u8()?;
+        let ecn = tos & 0b11 == ECN_CE;
         let total_len = r.u16()?;
         let _id = r.u16()?;
         let _frag = r.u16()?;
@@ -120,7 +128,12 @@ impl CarrierHeader {
         if total_len as usize != IPV4_HEADER + udp_len as usize {
             bail!("IP/UDP length mismatch");
         }
-        Ok(CarrierHeader { src, dst, udp_len })
+        Ok(CarrierHeader {
+            src,
+            dst,
+            udp_len,
+            ecn,
+        })
     }
 }
 
@@ -134,6 +147,7 @@ mod tests {
             src: DeviceIp::lan(1),
             dst: DeviceIp::lan(2),
             udp_len: UDP_HEADER as u16 + 100,
+            ecn: false,
         };
         let mut w = Writer::default();
         h.encode(&mut w);
@@ -144,11 +158,33 @@ mod tests {
     }
 
     #[test]
+    fn ecn_mark_rides_the_tos_byte() {
+        // The regression this guards: the emitted IPv4 header used to
+        // hard-code DSCP/ECN to 0, losing the switch's CE mark.
+        let h = CarrierHeader {
+            src: DeviceIp::lan(1),
+            dst: DeviceIp::lan(2),
+            udp_len: 40,
+            ecn: true,
+        };
+        let mut w = Writer::default();
+        h.encode(&mut w);
+        let v = w.into_vec();
+        assert_eq!(v[1] & 0b11, ECN_CE, "CE codepoint on the wire");
+        let back = CarrierHeader::decode(&mut Reader::new(&v)).unwrap();
+        assert!(back.ecn, "mark survives decode");
+        assert_eq!(back, h);
+        // And the checksum still validates with the live TOS byte.
+        assert_eq!(inet_checksum(&v[..IPV4_HEADER]), 0);
+    }
+
+    #[test]
     fn ipv4_checksum_validates() {
         let h = CarrierHeader {
             src: DeviceIp::lan(3),
             dst: DeviceIp::lan(4),
             udp_len: 50,
+            ecn: false,
         };
         let mut w = Writer::default();
         h.encode(&mut w);
@@ -168,6 +204,7 @@ mod tests {
             src: DeviceIp::lan(1),
             dst: DeviceIp::lan(2),
             udp_len: 30,
+            ecn: false,
         };
         let mut w = Writer::default();
         h.encode(&mut w);

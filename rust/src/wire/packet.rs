@@ -99,6 +99,9 @@ impl Packet {
             src: self.src,
             dst,
             udp_len: (UDP_HEADER + body.len()) as u16,
+            // A switch-applied CE mark rides the IPv4 TOS byte so
+            // ECN-blind middleboxes and DCQCN receivers both see it.
+            ecn: self.flags.ecn(),
         }
         .encode(&mut w);
         w.bytes(&body);
@@ -111,7 +114,12 @@ impl Packet {
         let carrier = CarrierHeader::decode(&mut r)?;
         let seq = r.u64()?;
         let srou = SrouHeader::decode(&mut r)?;
-        let (instr, flags) = Instruction::decode(&mut r)?;
+        let (instr, mut flags) = Instruction::decode(&mut r)?;
+        if carrier.ecn {
+            // An L3-only marker (a real switch) sets the TOS bits without
+            // touching the NetDAM flags — fold the mark back in.
+            flags = flags.with(Flags::ECN);
+        }
         let plen = r.u32()? as usize;
         if plen > MAX_PAYLOAD {
             bail!("payload length {plen} exceeds MTU budget");
@@ -237,6 +245,24 @@ mod tests {
         .with_payload(Payload::from_f32s(&[1.5; 16]));
         let bytes = pkt.encode().unwrap();
         assert_eq!(Packet::decode(&bytes).unwrap(), pkt);
+    }
+
+    #[test]
+    fn ecn_flag_survives_the_carrier_header() {
+        let pkt = Packet::new(
+            ip(1),
+            5,
+            SrouHeader::direct(ip(2)),
+            Instruction::Write { addr: 0 },
+        )
+        .with_flags(Flags::default().with(Flags::ECN))
+        .with_payload(Payload::from_bytes(vec![7u8; 16]));
+        let bytes = pkt.encode().unwrap();
+        // The IPv4 TOS byte (offset 1) carries the CE codepoint.
+        assert_eq!(bytes[1] & 0b11, 0b11, "CE mark in the IP header");
+        let back = Packet::decode(&bytes).unwrap();
+        assert!(back.flags.ecn());
+        assert_eq!(back, pkt);
     }
 
     #[test]

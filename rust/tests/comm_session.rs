@@ -1,0 +1,270 @@
+//! Integration tests for the session API (`netdam::comm`): multi-tenant
+//! fabrics, nonblocking collectives, gradient bucketing, and per-plan
+//! NAK isolation on the shared window engine.
+
+use netdam::collectives::naive_sum;
+use netdam::comm::{buckets_total_elems, plan_buckets, Fabric, GradBucket};
+use netdam::mem::MemError;
+
+/// Two tenants' allreduces interleave on ONE fabric: in-flight ops from
+/// both coexist on the shared engine, and both match the host oracle.
+#[test]
+fn two_tenants_interleave_allreduces_on_one_fabric() {
+    let elements = 4 * 2048;
+    let mut f = Fabric::builder().star(4).seed(0x2B).build().unwrap();
+    let job_a = f.communicator(elements as u64 * 4).unwrap();
+    let job_b = f.communicator(elements as u64 * 4).unwrap();
+    let ga = job_a.seed_gradients_exact(&mut f, elements, 0xA11);
+    let gb = job_b.seed_gradients_exact(&mut f, elements, 0xB22);
+
+    // Both submitted before either completes — genuinely nonblocking.
+    let ha = job_a.iallreduce(&mut f, elements).unwrap();
+    let hb = job_b.iallreduce(&mut f, elements).unwrap();
+    assert!(!f.is_finished(ha) && !f.is_finished(hb));
+    let oa = f.wait(ha).unwrap();
+    let ob = f.wait(hb).unwrap();
+    assert!(oa.complete(), "job A: {}/{}", oa.ops_done, oa.ops);
+    assert!(ob.complete(), "job B: {}/{}", ob.ops_done, ob.ops);
+
+    // The tenants shared the engine: both plans were in flight at once,
+    // and their transfer windows overlap in simulated time.
+    assert!(
+        f.max_concurrent_plans() >= 2,
+        "peak concurrent plans {} — the jobs serialized",
+        f.max_concurrent_plans()
+    );
+    assert!(
+        oa.started_ns < ob.finished_ns && ob.started_ns < oa.finished_ns,
+        "transfer windows did not overlap: A [{}, {}], B [{}, {}]",
+        oa.started_ns,
+        oa.finished_ns,
+        ob.started_ns,
+        ob.finished_ns
+    );
+
+    // Both tenants' results are bit-exact vs the host oracle (integer
+    // seeding makes any reduction order exact), and neither corrupted
+    // the other's region.
+    let oracle_a = naive_sum(&ga);
+    let oracle_b = naive_sum(&gb);
+    for r in 0..4 {
+        assert_eq!(job_a.read_vector(&mut f, r, elements).unwrap(), oracle_a);
+        assert_eq!(job_b.read_vector(&mut f, r, elements).unwrap(), oracle_b);
+    }
+}
+
+/// Stage one deterministic per-tensor dataset into a layout's spans.
+fn stage_tensors(
+    f: &mut Fabric,
+    comm: &netdam::comm::Communicator,
+    buckets: &[GradBucket],
+    ranks: usize,
+) {
+    for b in buckets {
+        for t in &b.tensors {
+            for r in 0..ranks {
+                // Integer-valued, tensor- and rank-keyed: exact sums.
+                let data: Vec<f32> = (0..t.elems)
+                    .map(|i| ((t.tensor * 13 + r * 7 + i) % 33) as f32 - 16.0)
+                    .collect();
+                comm.write_vector(f, r, t.offset_elems, &data).unwrap();
+            }
+        }
+    }
+}
+
+/// The fusion layer is semantically invisible: a fused bucket stream
+/// produces bit-identical per-tensor results to one collective per
+/// tensor.
+#[test]
+fn fused_buckets_bit_identical_to_unfused() {
+    let ranks = 4usize;
+    let sizes: Vec<usize> = (0..18).map(|i| 96 + (i * 61) % 900).collect();
+    let fused = plan_buckets(&sizes, ranks * 2048, ranks);
+    let unfused = plan_buckets(&sizes, 0, ranks);
+    assert!(fused.len() < unfused.len(), "fusion must actually fuse");
+
+    let run = |buckets: &[GradBucket]| -> Vec<Vec<f32>> {
+        let mut f = Fabric::builder().star(ranks).seed(0xF5).build().unwrap();
+        let footprint = buckets_total_elems(buckets);
+        let comm = f.communicator(footprint as u64 * 4).unwrap();
+        stage_tensors(&mut f, &comm, buckets, ranks);
+        for h in comm.iallreduce_buckets(&mut f, buckets).unwrap() {
+            let o = f.wait(h).unwrap();
+            assert!(o.complete());
+        }
+        // Read every tensor span back from rank 0 (all ranks hold the
+        // allreduced value).
+        let mut out = vec![Vec::new(); sizes.len()];
+        for b in buckets {
+            for t in &b.tensors {
+                out[t.tensor] = comm
+                    .read_vector_at(&mut f, 0, t.offset_elems, t.elems)
+                    .unwrap();
+            }
+        }
+        out
+    };
+    let fused_out = run(&fused);
+    let unfused_out = run(&unfused);
+    for (k, size) in sizes.iter().enumerate() {
+        // Host oracle for tensor k: elementwise sum over ranks.
+        let want: Vec<f32> = (0..*size)
+            .map(|i| {
+                (0..ranks)
+                    .map(|r| ((k * 13 + r * 7 + i) % 33) as f32 - 16.0)
+                    .sum()
+            })
+            .collect();
+        assert_eq!(fused_out[k], want, "tensor {k} (fused) vs oracle");
+        assert_eq!(
+            fused_out[k], unfused_out[k],
+            "tensor {k}: fused and unfused results must be bit-identical"
+        );
+    }
+}
+
+/// A NAK in one tenant's plan cancels only that plan: the neighbor's
+/// memory plan and a concurrent collective complete untouched, and the
+/// cancellation stops the device from being hammered with the rest of
+/// the bad plan's window.
+#[test]
+fn nak_in_one_job_cancels_only_that_plan() {
+    let elements = 4 * 2048;
+    let mut f = Fabric::builder()
+        .star(4)
+        .hosts(2)
+        .window(2) // small window → most of the bad plan is still queued
+        .with_pool(1 << 20)
+        .seed(0x7A)
+        .build()
+        .unwrap();
+
+    // Tenant C: a collective job sharing the same fabric.
+    let comm = f.communicator(elements as u64 * 4).unwrap();
+    let grads = comm.seed_gradients_exact(&mut f, elements, 3);
+
+    // Tenant A (good) and tenant B (about to be denied).
+    let client_a = f.mem_client().unwrap();
+    let client_b = f.mem_client().unwrap();
+    let lease_a = f.malloc(client_a.tenant, 256 << 10, true).unwrap();
+
+    let data: Vec<u8> = (0..256 << 10).map(|i| (i * 31 % 251) as u8).collect();
+    let mut batch_a = client_a.batch();
+    batch_a.write(f.cluster_mut(), lease_a.gva, &data);
+    let h_read = {
+        let mut b = client_a.batch();
+        let h = b.read(f.cluster_mut(), lease_a.gva, 64 << 10);
+        (b, h)
+    };
+
+    // Tenant B writes into tenant A's lease: every packet will be
+    // denied on the device (foreign lease) — 32 packets, but with the
+    // per-plan cancel only the in-flight window's worth should ever
+    // reach the devices.
+    let bad_bytes = vec![0xEEu8; 256 << 10];
+    let mut batch_b = client_b.batch();
+    batch_b.write(f.cluster_mut(), lease_a.gva, &bad_bytes);
+    let bad_pkts = batch_b.len();
+    assert!(bad_pkts >= 32, "want a long bad plan, got {bad_pkts}");
+
+    // Everything in flight together on the shared session.
+    let hc = comm.iallreduce(&mut f, elements).unwrap();
+    let ha = f.submit_mem(batch_a).unwrap();
+    let hb = f.submit_mem(batch_b).unwrap();
+    let (br, hr) = h_read;
+    let err = f.wait_mem(hb).unwrap_err();
+    assert!(
+        matches!(
+            err,
+            MemError::Nak {
+                reason: netdam::iommu::NakReason::ForeignLease,
+                ..
+            }
+        ),
+        "{err:?}"
+    );
+
+    // Neighbors unaffected: A's write landed, the collective finished.
+    f.wait_mem(ha).unwrap();
+    let oc = f.wait(hc).unwrap();
+    assert!(oc.complete(), "collective: {}/{}", oc.ops_done, oc.ops);
+    let oracle = naive_sum(&grads);
+    for r in 0..4 {
+        assert_eq!(comm.read_vector(&mut f, r, elements).unwrap(), oracle);
+    }
+    let h2 = f.submit_mem(br).unwrap();
+    let mut res = f.wait_mem(h2).unwrap();
+    assert_eq!(
+        res.take_read(hr).unwrap(),
+        data[..64 << 10],
+        "tenant A's data survived tenant B's denial"
+    );
+
+    // The cancel actually stopped the bad plan: far fewer NAKs on the
+    // devices than the plan had packets.
+    let naks: u64 = (0..4)
+        .map(|i| {
+            let d = f.devices()[i];
+            f.cluster().device(d).iommu_naks
+        })
+        .sum();
+    assert!(naks >= 1, "the denial must have happened on a device");
+    assert!(
+        (naks as usize) < bad_pkts,
+        "{naks} NAKs for a {bad_pkts}-packet plan — cancellation never kicked in"
+    );
+}
+
+/// The rooted reduce rides the session API end to end.
+#[test]
+fn ireduce_lands_the_sum_at_root_via_the_session() {
+    let elements = 3 * 2048;
+    let mut f = Fabric::builder().star(4).seed(0x5EED).build().unwrap();
+    let comm = f.communicator(elements as u64 * 4).unwrap();
+    let grads = comm.seed_gradients_exact(&mut f, elements, 77);
+    let root = 2usize;
+    let h = comm.ireduce(&mut f, elements, root).unwrap();
+    let out = f.wait(h).unwrap();
+    assert!(out.complete());
+    assert_eq!(out.algorithm, "reduce");
+    let oracle = naive_sum(&grads);
+    for r in 0..4 {
+        let got = comm.read_vector(&mut f, r, elements).unwrap();
+        if r == root {
+            assert_eq!(got, oracle, "root holds the full sum");
+        } else {
+            assert_eq!(got, grads[r], "rank {r} keeps pristine data");
+        }
+    }
+}
+
+/// Reliability still holds on the shared session: two tenants, lossy
+/// fabric, reliable communicators — both converge exactly.
+#[test]
+fn concurrent_reliable_allreduces_survive_loss() {
+    let elements = 2 * 2048;
+    let mut f = Fabric::builder()
+        .star(4)
+        .seed(0x10)
+        .reliable(true)
+        .loss(0.02)
+        .window(2)
+        .build()
+        .unwrap();
+    let job_a = f.communicator(elements as u64 * 4).unwrap();
+    let job_b = f.communicator(elements as u64 * 4).unwrap();
+    let ga = job_a.seed_gradients_exact(&mut f, elements, 1);
+    let gb = job_b.seed_gradients_exact(&mut f, elements, 2);
+    let ha = job_a.iallreduce(&mut f, elements).unwrap();
+    let hb = job_b.iallreduce(&mut f, elements).unwrap();
+    let oa = f.wait(ha).unwrap();
+    let ob = f.wait(hb).unwrap();
+    assert!(oa.complete() && ob.complete(), "loss recovered for both");
+    let oracle_a = naive_sum(&ga);
+    let oracle_b = naive_sum(&gb);
+    for r in 0..4 {
+        assert_eq!(job_a.read_vector(&mut f, r, elements).unwrap(), oracle_a);
+        assert_eq!(job_b.read_vector(&mut f, r, elements).unwrap(), oracle_b);
+    }
+}
