@@ -28,8 +28,13 @@ use crate::isa::SimdOp;
 use crate::sim::SimTime;
 
 /// Lane-wise SIMD execution over f32.
-/// (Not `Send`: the XLA-backed implementation holds a PJRT client.)
-pub trait AluBackend {
+///
+/// `Send` because the sharded DES runtime (`net::shard`) migrates device
+/// nodes across worker threads at window barriers. Both backends in this
+/// offline build (`NativeAlu`, the chunked `XlaAlu` stub) are plain data;
+/// a future PJRT-client-backed implementation would either hold a
+/// thread-safe client handle or pin its devices to one shard.
+pub trait AluBackend: Send {
     /// `acc[i] = op(acc[i], operand[i])` for all lanes.
     /// Lengths must match; implementations may process in blocks.
     fn apply(&mut self, op: SimdOp, acc: &mut [f32], operand: &[f32]);

@@ -44,8 +44,10 @@ pub use reduce::RingReduce;
 
 use crate::sim::SimTime;
 
-/// A completed collective run, as the benches report it.
-#[derive(Debug, Clone)]
+/// A completed collective run, as the benches report it. `Eq` so the
+/// sharded-core determinism tests can assert two runs produced the
+/// bit-identical report.
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct CollectiveReport {
     pub algorithm: &'static str,
     pub elements: usize,

@@ -55,10 +55,12 @@ use crate::collectives::{AlgoKind, CollectiveReport};
 use crate::iommu::Perms;
 use crate::isa::registry::MemAccess;
 use crate::mem::{BatchResult, MemBatch, MemClient, MemError, PreparedMemPlan};
-use crate::net::{Cluster, DeviceProfile, EcmpMode, LinkConfig, NodeId, Topology};
+use crate::net::{
+    Cluster, DeviceProfile, EcmpMode, LinkConfig, NodeId, ShardedRuntime, Topology,
+};
 use crate::pool::{Allocation, IommuDirectory, InterleaveMap, SdnController, TenantId};
 use crate::sim::{Engine, SimTime};
-use crate::transport::{EngineSession, PlanId, ReliabilityTable};
+use crate::transport::{EngineSession, PlanId, ReliabilityTable, TokenBucket};
 use crate::wire::DeviceIp;
 
 /// The pool/IOMMU granule this fabric programs (the paper's 8 KiB
@@ -99,6 +101,8 @@ pub struct FabricBuilder {
     reliable: bool,
     loss_p: f64,
     pool_bytes: u64,
+    shards: usize,
+    shard_threads: usize,
 }
 
 impl Default for FabricBuilder {
@@ -115,6 +119,8 @@ impl Default for FabricBuilder {
             reliable: false,
             loss_p: 0.0,
             pool_bytes: 0,
+            shards: 0,
+            shard_threads: 0,
         }
     }
 }
@@ -208,6 +214,29 @@ impl FabricBuilder {
         self
     }
 
+    /// Run the DES on the sharded parallel core with `n` shards (see
+    /// `sim::sharded` / `net::shard`): the world is partitioned by node,
+    /// each shard owns its own event heap and local clock, and shards
+    /// advance in bounded windows under the fabric's conservative
+    /// lookahead. Same seed ⇒ bit-identical reports at *any* shard
+    /// count — `with_shards(1)` runs the same partitioned core on one
+    /// shard, so lossy runs stay comparable across shard counts (the
+    /// sharded core draws loss/jitter from per-link RNG streams, not the
+    /// classic engine's single sequential stream). `n = 0` (the
+    /// default) keeps the classic single-heap engine.
+    pub fn with_shards(mut self, n: usize) -> Self {
+        self.shards = n;
+        self
+    }
+
+    /// Worker threads for the sharded core (`0` = pick from available
+    /// parallelism; `1` forces serial execution — results are identical
+    /// either way).
+    pub fn shard_threads(mut self, n: usize) -> Self {
+        self.shard_threads = n;
+        self
+    }
+
     /// Enable the §2.5/§2.6 memory pool with `per_device_bytes` of
     /// poolable memory per device. Communicator regions are carved
     /// *above* the pool share, and on a pooled fabric every communicator
@@ -286,6 +315,20 @@ impl FabricBuilder {
             region_cursor < device_capacity,
             "pool share exhausts the device capacity"
         );
+        // The sharded core snapshots routes now (topology is final) and
+        // flips the cluster into capture mode: session injections are
+        // recorded and replayed into the shards on each drive round.
+        let sharded = if self.shards > 0 {
+            cl.capture = Some(Vec::new());
+            Some(ShardedRuntime::new(
+                &cl,
+                self.seed,
+                self.shards,
+                self.shard_threads,
+            ))
+        } else {
+            None
+        };
         Ok(Fabric {
             cl,
             eng: Engine::new(),
@@ -305,6 +348,7 @@ impl FabricBuilder {
             ops: Vec::new(),
             active_ops: Vec::new(),
             mem_plans: Vec::new(),
+            sharded,
         })
     }
 }
@@ -357,7 +401,15 @@ struct OpState {
     spec: CollectiveSpec,
     phases: usize,
     next_phase: usize,
-    plans: Vec<PlanId>,
+    /// The *current* phase's session plan. Completed phases are folded
+    /// into `done_prior`/`last_prior` and released back to the session's
+    /// plan slab, so a long-lived op holds at most one live plan — the
+    /// session's footprint tracks concurrency, not history.
+    plan: Option<PlanId>,
+    /// Ops retired by already-released (completed) phase plans.
+    done_prior: usize,
+    /// Latest retirement time among released phase plans.
+    last_prior: SimTime,
     ops_total: usize,
     started_at: SimTime,
     finished_at: Option<SimTime>,
@@ -394,6 +446,9 @@ pub struct Fabric {
     /// stalled ops drop off).
     active_ops: Vec<usize>,
     mem_plans: Vec<MemPlanState>,
+    /// The sharded parallel DES core, when the builder asked for it.
+    /// `None` runs the classic single-heap engine.
+    sharded: Option<ShardedRuntime>,
 }
 
 impl Fabric {
@@ -516,7 +571,9 @@ impl Fabric {
             spec,
             phases,
             next_phase: 0,
-            plans: Vec::new(),
+            plan: None,
+            done_prior: 0,
+            last_prior: self.eng.now(),
             ops_total: 0,
             started_at: self.eng.now(),
             finished_at: None,
@@ -567,7 +624,11 @@ impl Fabric {
                     false,
                     spec.window,
                 )?;
-                self.ops[i].plans.push(plan);
+                debug_assert!(
+                    self.ops[i].plan.is_none(),
+                    "previous phase plan not folded before the next submit"
+                );
+                self.ops[i].plan = Some(plan);
             }
             Phase::Apps { .. } => {
                 bail!("host-baseline planners cannot run on a fabric session")
@@ -590,10 +651,20 @@ impl Fabric {
                 if self.ops[i].finished_at.is_some() || self.ops[i].stalled {
                     break;
                 }
-                let ready = match self.ops[i].plans.last() {
+                let ready = match self.ops[i].plan {
                     None => true,
-                    Some(&p) => {
+                    Some(p) => {
                         if self.session.is_complete(p) {
+                            // Fold the completed phase into the op's
+                            // counters and release its slab slot — the
+                            // session's footprint stays O(live plans).
+                            let (d, _, t) = self.session.progress(p);
+                            self.ops[i].done_prior += d;
+                            self.ops[i].last_prior = self.ops[i].last_prior.max(t);
+                            self.session
+                                .release(p)
+                                .expect("a complete plan is releasable");
+                            self.ops[i].plan = None;
                             true
                         } else {
                             if self.session.is_settled(p) {
@@ -610,11 +681,9 @@ impl Fabric {
                     break;
                 }
                 if self.ops[i].next_phase >= self.ops[i].phases {
-                    let t = match self.ops[i].plans.last() {
-                        Some(&p) => self.session.progress(p).2,
-                        None => self.ops[i].started_at,
-                    };
-                    self.ops[i].finished_at = Some(t);
+                    // Completed phases were folded on release, so the
+                    // finish time is the latest folded retirement.
+                    self.ops[i].finished_at = Some(self.ops[i].last_prior);
                     break;
                 }
                 match self.submit_phase(i) {
@@ -635,18 +704,46 @@ impl Fabric {
         result.map(|()| submitted)
     }
 
+    /// One DES pass: classic runs the single-heap engine dry; sharded
+    /// drains the captured injections into the partitioned core, which
+    /// runs to quiescence (firing the session's completion hook at
+    /// window barriers) and advances the engine clock to match.
+    fn drive_engine(&mut self) {
+        match self.sharded.as_mut() {
+            None => self.session.drive(&mut self.cl, &mut self.eng),
+            Some(rt) => loop {
+                let injected = match self.cl.capture.as_mut() {
+                    Some(buf) if !buf.is_empty() => std::mem::take(buf),
+                    _ => break,
+                };
+                rt.drive(&mut self.cl, &mut self.eng, injected);
+            },
+        }
+    }
+
+    /// Cumulative events executed on the sharded core (`0` on the
+    /// classic path, which counts inside [`Engine`] instead).
+    pub fn sharded_events(&self) -> u64 {
+        self.sharded.as_ref().map_or(0, |rt| rt.events)
+    }
+
+    /// Shards the DES runs on (`1` for the classic single-heap engine).
+    pub fn shard_count(&self) -> usize {
+        self.sharded.as_ref().map_or(1, ShardedRuntime::shard_count)
+    }
+
     /// Run the shared DES until every submitted op has gone as far as it
     /// can: drive, advance multi-phase ops, repeat until quiescent.
     pub fn drive(&mut self) -> Result<()> {
         let result = loop {
-            self.session.drive(&mut self.cl, &mut self.eng);
+            self.drive_engine();
             match self.advance() {
                 Ok(true) => continue,
                 Ok(false) => break Ok(()),
                 Err(e) => {
                     // Drain whatever the failed advance left in flight
                     // before surfacing the error.
-                    self.session.drive(&mut self.cl, &mut self.eng);
+                    self.drive_engine();
                     break Err(e);
                 }
             }
@@ -672,9 +769,9 @@ impl Fabric {
     /// The op's current outcome without driving (nonblocking poll).
     pub fn outcome(&self, h: CollectiveHandle) -> Result<CollectiveOutcome> {
         let op = &self.ops[h.0];
-        let mut done = 0usize;
-        let mut last = op.started_at;
-        for &p in &op.plans {
+        let mut done = op.done_prior;
+        let mut last = op.started_at.max(op.last_prior);
+        if let Some(p) = op.plan {
             let (d, _, t) = self.session.progress(p);
             done += d;
             last = last.max(t);
@@ -751,20 +848,13 @@ impl Fabric {
     }
 
     /// Submit a pooled-memory batch onto the **shared** session — its
-    /// packets fly concurrently with every in-flight collective. Redeem
-    /// with [`wait_mem`](Self::wait_mem).
+    /// packets fly concurrently with every in-flight collective. A
+    /// paced client's token bucket rides along as a *plan-private*
+    /// pacer (the §2.5 rate-limited READ pull), throttling only this
+    /// plan's injections — neighbors flow at full rate. Redeem with
+    /// [`wait_mem`](Self::wait_mem).
     pub fn submit_mem(&mut self, batch: MemBatch<'_>) -> Result<MemHandle, MemError> {
         let mut prepared = batch.prepare();
-        if prepared.is_paced() {
-            // The shared session has no per-plan pacing yet: silently
-            // dropping the client's configured rate limit would defeat
-            // the §2.5 incast cure it asked for.
-            return Err(MemError::Plan(
-                "paced clients must run standalone (MemBatch::run); \
-                 the shared session has no per-plan pacing"
-                    .into(),
-            ));
-        }
         let idx = self.mem_plans.len();
         if prepared.is_empty() {
             self.mem_plans.push(MemPlanState {
@@ -775,11 +865,22 @@ impl Fabric {
         }
         let record = prepared.wants_responses();
         let window = prepared.window();
+        let pace = prepared.pace();
         let wops = prepared.take_ops();
-        let plan = self
-            .session
-            .submit(&mut self.cl, &mut self.eng, wops, record, window)
-            .map_err(|e| MemError::Plan(e.to_string()))?;
+        let plan = match pace {
+            Some((gbps, burst)) => self.session.submit_paced(
+                &mut self.cl,
+                &mut self.eng,
+                wops,
+                record,
+                window,
+                TokenBucket::new(gbps, burst),
+            ),
+            None => self
+                .session
+                .submit(&mut self.cl, &mut self.eng, wops, record, window),
+        }
+        .map_err(|e| MemError::Plan(e.to_string()))?;
         self.mem_plans.push(MemPlanState {
             plan: Some(plan),
             prepared: Some(prepared),
@@ -830,6 +931,11 @@ impl Fabric {
             None => prepared.redeem(&mut self.cl, 0, None, &[]),
             Some(p) => {
                 let out = self.session.outcome(p);
+                // Recycle the slab slot; best-effort — an unsettled plan
+                // (unrecovered loss, unreliable fabric) stays live.
+                if self.session.release(p).is_ok() {
+                    self.mem_plans[h.0].plan = None;
+                }
                 prepared.redeem(&mut self.cl, out.done, out.nak.as_ref(), &out.responses)
             }
         }

@@ -67,8 +67,10 @@ pub struct ExecCtx<'a> {
     pub fwd: Option<(u64, u64, u64)>,
 }
 
-/// A user-defined instruction implementation.
-pub trait UserInstruction: Send {
+/// A user-defined instruction implementation. `Send + Sync` so the
+/// registry `Arc` shared by every device can cross shard-thread
+/// boundaries (`execute` already takes `&self`; handlers are pure).
+pub trait UserInstruction: Send + Sync {
     /// Human-readable name (for metrics and errors).
     fn name(&self) -> &'static str;
     /// Execute against device memory; pure function of (mem, packet).

@@ -110,6 +110,25 @@
 //! lowering onto the planners — the NetReduce/Horovod fusion-buffer
 //! trick. `collectives::run_collective` remains as a compatibility shim
 //! over a single-use fabric; `netdam comm` demos two overlapping jobs.
+//!
+//! # The sharded DES core (scaling to 1024+ ranks)
+//!
+//! The simulator itself parallelizes: [`comm::FabricBuilder::with_shards`]
+//! partitions the world onto `n` event shards — each with its own heap
+//! and local clock ([`sim::ShardWorld`]) — advanced in bounded windows
+//! under conservative lookahead (the minimum cross-shard link latency)
+//! by [`sim::ShardedEngine`], with boundary-crossing events exchanged at
+//! window edges over scoped threads. [`net::ShardedRuntime`] binds the
+//! NetDAM cluster onto that machinery and replays session-layer
+//! injections deterministically, so everything above — [`comm`],
+//! [`collectives`], [`mem`] — runs unmodified on either core; the
+//! classic single-heap [`sim::Engine`] remains the `shards = 0` default.
+//! Determinism is the contract, not an aspiration: RNG streams are
+//! partitioned per link and per host, so the same seed yields
+//! **bit-identical** reports at any shard count, thread count, or rerun,
+//! including under packet loss (`rust/tests/sharded_determinism.rs`).
+//! `cargo bench --bench sim` measures events/sec across the shard grid
+//! and writes `BENCH_sim.json`; `netdam comm --shards N` demos the path.
 
 pub mod alu;
 pub mod cli;

@@ -402,14 +402,22 @@ fn run_comm_demo(args: &Args) -> Result<()> {
 
     let ranks = args.opt_usize("ranks", 4)?.max(2);
     let elements = args.opt_usize("elements", 4 * 2048)?.max(ranks);
+    // Scaling the simulator: `--shards N` runs the DES on the sharded
+    // parallel core (N event heaps under conservative lookahead) —
+    // same seed, bit-identical results, built for 1024-rank fabrics.
+    let shards = args.opt_usize("shards", 0)?;
+    let shard_threads = args.opt_usize("shard-threads", 0)?;
     println!("== NetDAM session API: two jobs, one fabric ==\n");
 
-    let mut fabric = Fabric::builder()
+    let mut builder = Fabric::builder()
         .star(ranks)
         .hosts(1)
         .seed(0xC033)
-        .with_pool(1 << 20)
-        .build()?;
+        .with_pool(1 << 20);
+    if shards > 0 {
+        builder = builder.with_shards(shards).shard_threads(shard_threads);
+    }
+    let mut fabric = builder.build()?;
     let job_a = fabric.communicator(elements as u64 * 4)?;
     let job_b = fabric.communicator(elements as u64 * 4)?;
     let ga = job_a.seed_gradients_exact(&mut fabric, elements, 0xA);
@@ -481,6 +489,13 @@ fn run_comm_demo(args: &Args) -> Result<()> {
         fmt_ns(t_unfused),
         t_unfused as f64 / t_fused.max(1) as f64,
     );
+    if shards > 0 {
+        println!(
+            "sharded DES core: {} shards, {} events executed",
+            fabric.shard_count(),
+            fabric.sharded_events()
+        );
+    }
     Ok(())
 }
 
@@ -538,6 +553,9 @@ fn print_usage() {
                     --window W (per-device in-flight window) --paced GBPS (READ pull-back)\n\
          comm:      session-API demo — two tenant jobs' allreduces + a pooled-memory plan\n\
                     overlapping on ONE fabric, then gradient bucketing fused vs unfused;\n\
-                    --ranks N --elements N"
+                    --ranks N --elements N\n\
+         scaling the simulator: comm also takes --shards N (run the DES on N parallel\n\
+                    event shards under conservative lookahead; same seed => bit-identical\n\
+                    results at any shard count) and --shard-threads T (0 = auto)"
     );
 }

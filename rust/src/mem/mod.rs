@@ -374,8 +374,8 @@ pub struct PreparedMemPlan {
     total: usize,
     /// The client's per-device in-flight window.
     window: usize,
-    /// Whether the owning client was token-bucket paced.
-    paced: bool,
+    /// The owning client's token-bucket pacing, if configured.
+    pace: Option<PaceConf>,
     entries: Vec<EntryKind>,
     wops: Vec<WindowedOp>,
     /// Read placement per sequence: `(entry, buffer_off, len)`.
@@ -396,7 +396,13 @@ impl PreparedMemPlan {
 
     /// Whether the owning client configured token-bucket pacing.
     pub fn is_paced(&self) -> bool {
-        self.paced
+        self.pace.is_some()
+    }
+
+    /// The pacing `(gbps, burst_bytes)` the owning client configured, if
+    /// any — whoever runs the plan builds the fresh-per-run bucket.
+    pub fn pace(&self) -> Option<(f64, usize)> {
+        self.pace.map(|p| (p.gbps, p.burst))
     }
 
     /// Whether the engine must record responses (CAS outcomes need them).
@@ -685,7 +691,7 @@ impl MemBatch<'_> {
             host: client.host,
             total,
             window: client.window,
-            paced: client.pace.is_some(),
+            pace: client.pace,
             entries: self.entries,
             wops,
             read_of_seq,
@@ -721,8 +727,9 @@ impl MemBatch<'_> {
     }
 }
 
-/// Results of a [`MemBatch`] run, redeemed by [`OpHandle`].
-#[derive(Debug)]
+/// Results of a [`MemBatch`] run, redeemed by [`OpHandle`]. `Eq` so the
+/// sharded-core determinism tests can compare whole batch outcomes.
+#[derive(Debug, PartialEq, Eq)]
 pub struct BatchResult {
     reads: Vec<Option<Vec<u8>>>,
     cas: HashMap<usize, (u64, bool)>,

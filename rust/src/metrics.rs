@@ -62,6 +62,16 @@ impl Histogram {
         self.run.push(v as f64);
     }
 
+    /// Fold another histogram into this one (bucket-wise add plus a
+    /// parallel merge of the exact side stats). Used to combine per-shard
+    /// metrics after a sharded run.
+    pub fn merge(&mut self, other: &Histogram) {
+        for (b, o) in self.buckets.iter_mut().zip(other.buckets.iter()) {
+            *b += o;
+        }
+        self.run.merge(&other.run);
+    }
+
     pub fn count(&self) -> u64 {
         self.run.count()
     }
@@ -135,6 +145,20 @@ impl Metrics {
 
     pub fn counters(&self) -> impl Iterator<Item = (&str, u64)> {
         self.counters.iter().map(|(k, &v)| (k.as_str(), v))
+    }
+
+    /// Fold another `Metrics` into this one: counters add exactly,
+    /// histograms merge bucket-wise. Counter totals are order-independent;
+    /// histogram mean/jitter are floating-point and merge in caller order
+    /// (the sharded runtime always merges in shard order, so a given shard
+    /// count is still bit-reproducible).
+    pub fn merge(&mut self, other: &Metrics) {
+        for (k, &v) in &other.counters {
+            *self.counters.entry(k.clone()).or_insert(0) += v;
+        }
+        for (k, h) in &other.hists {
+            self.hists.entry(k.clone()).or_default().merge(h);
+        }
     }
 
     /// Render a markdown summary (used by the CLI and EXPERIMENTS.md).
@@ -263,6 +287,27 @@ mod tests {
             assert!(v >= last, "p{p}: {v} < {last}");
             last = v;
         }
+    }
+
+    #[test]
+    fn metrics_merge_combines_counters_and_hists() {
+        let mut a = Metrics::new();
+        let mut b = Metrics::new();
+        a.add("pkts", 3);
+        b.add("pkts", 4);
+        b.add("drops", 1);
+        a.record("lat_ns", 100);
+        b.record("lat_ns", 300);
+        b.record("svc_ns", 50);
+        a.merge(&b);
+        assert_eq!(a.counter("pkts"), 7);
+        assert_eq!(a.counter("drops"), 1);
+        let h = a.hist("lat_ns").unwrap();
+        assert_eq!(h.count(), 2);
+        assert!((h.mean() - 200.0).abs() < 1e-9);
+        assert_eq!(h.min(), 100);
+        assert_eq!(h.max(), 300);
+        assert_eq!(a.hist("svc_ns").unwrap().count(), 1);
     }
 
     #[test]

@@ -23,21 +23,23 @@ pub type NodeId = usize;
 /// Time to move a packet from the host request queue (memif) into the
 /// device TX path — the "software writes the NetDAM packet to Request
 /// Queue memory address" step of §2.4.
-const INJECT_NS: SimTime = 150;
+pub(crate) const INJECT_NS: SimTime = 150;
 /// Local loopback delivery (device to its own completion queue).
-const LOOPBACK_NS: SimTime = 100;
+pub(crate) const LOOPBACK_NS: SimTime = 100;
 
 /// An application driving a [`Host`] node (latency clients, RoCE engines,
 /// incast senders...). Implementations are event-driven and interact with
-/// the world only through [`AppCtx`].
-pub trait App {
+/// the world only through [`AppCtx`]. `Send` because the sharded runtime
+/// (`net::shard`) moves host nodes across worker threads at window
+/// barriers; apps are plain state machines, so this costs nothing.
+pub trait App: Send {
     fn on_start(&mut self, _ctx: &mut AppCtx) {}
     fn on_packet(&mut self, _pkt: Packet, _ctx: &mut AppCtx) {}
     fn on_timer(&mut self, _token: u64, _ctx: &mut AppCtx) {}
 }
 
 /// Deferred actions an [`App`] can take during a callback.
-enum Action {
+pub(crate) enum Action {
     Send(Packet),
     SendReliable(Packet),
     Timer(SimTime, u64),
@@ -50,8 +52,8 @@ pub struct AppCtx<'a> {
     pub now: SimTime,
     pub self_ip: DeviceIp,
     pub rng: &'a mut Xoshiro256,
-    next_seq: &'a mut u64,
-    actions: Vec<Action>,
+    pub(crate) next_seq: &'a mut u64,
+    pub(crate) actions: Vec<Action>,
 }
 
 impl AppCtx<'_> {
@@ -93,7 +95,7 @@ pub struct Host {
     pub ip: DeviceIp,
     pub app: Option<Box<dyn App>>,
     pub mailbox: Vec<(SimTime, Packet)>,
-    next_seq: u64,
+    pub(crate) next_seq: u64,
 }
 
 pub enum Node {
@@ -138,10 +140,10 @@ pub struct Cluster {
     pub nodes: Vec<Node>,
     pub links: Vec<Link>,
     /// Outgoing link ids per node.
-    adj: Vec<Vec<LinkId>>,
+    pub(crate) adj: Vec<Vec<LinkId>>,
     /// Per-node FIB: destination ip → equal-cost outgoing links.
-    fib: Vec<HashMap<DeviceIp, Vec<LinkId>>>,
-    ip_to_node: HashMap<DeviceIp, NodeId>,
+    pub(crate) fib: Vec<HashMap<DeviceIp, Vec<LinkId>>>,
+    pub(crate) ip_to_node: HashMap<DeviceIp, NodeId>,
     pub registry: Arc<InstructionRegistry>,
     pub metrics: Metrics,
     pub rng: Xoshiro256,
@@ -154,6 +156,12 @@ pub struct Cluster {
     /// Record device service time per response into metrics
     /// (`device_service_ns`) — experiment E1's measurement point.
     pub trace_device_service: bool,
+    /// When `Some`, [`Cluster::inject_cmd`] records `(now, cmd)` here
+    /// instead of scheduling — the sharded runtime (`net::shard`) drains
+    /// the buffer and replays the commands as coordinator injections, so
+    /// session kick-off code works unmodified at any shard count. `None`
+    /// (the default) leaves the classic single-engine path untouched.
+    pub(crate) capture: Option<Vec<(SimTime, InjectCmd)>>,
 }
 
 impl Cluster {
@@ -177,6 +185,7 @@ impl Cluster {
             completions: Vec::new(),
             on_completion: None,
             trace_device_service: false,
+            capture: None,
         }
     }
 
@@ -300,7 +309,7 @@ impl Cluster {
         }
     }
 
-    fn node_ip(&self, node: NodeId) -> Option<DeviceIp> {
+    pub(crate) fn node_ip(&self, node: NodeId) -> Option<DeviceIp> {
         match &self.nodes[node] {
             Node::Device(d) => Some(d.ip()),
             Node::Switch(s) => s.ip,
@@ -347,6 +356,10 @@ impl Cluster {
     /// injection, usable both from completion hooks and from engine
     /// kick-off code.
     pub fn inject_cmd(&mut self, eng: &mut Engine<Cluster>, cmd: InjectCmd) {
+        if let Some(buf) = self.capture.as_mut() {
+            buf.push((eng.now(), cmd));
+            return;
+        }
         if cmd.delay > 0 {
             let InjectCmd {
                 origin,
@@ -677,7 +690,7 @@ impl crate::pool::IommuDirectory for Cluster {
 }
 
 /// Deterministic source-side ECMP hash.
-fn ecmp_hash(src: DeviceIp, dst: DeviceIp, n: usize) -> usize {
+pub(crate) fn ecmp_hash(src: DeviceIp, dst: DeviceIp, n: usize) -> usize {
     let mut h = src.0 as u64 ^ ((dst.0 as u64) << 32) ^ 0x5bd1_e995;
     h ^= h >> 29;
     h = h.wrapping_mul(0x94d0_49bb_1331_11eb);

@@ -9,6 +9,7 @@
 
 mod cluster;
 mod link;
+pub(crate) mod shard;
 pub mod switch;
 mod topology;
 
@@ -17,5 +18,6 @@ pub use cluster::{
     NodeId,
 };
 pub use link::{Link, LinkConfig, LinkId, TxResult};
+pub use shard::ShardedRuntime;
 pub use switch::{flow_hash, EcmpMode, Switch};
 pub use topology::{DeviceProfile, Topology};

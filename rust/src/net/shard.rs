@@ -1,0 +1,910 @@
+//! The network world on the sharded DES core (`sim::sharded`).
+//!
+//! [`ShardedRuntime`] partitions a built [`Cluster`] — devices, switches,
+//! hosts, links — into `n` shards (node id modulo `n`; a link lives with
+//! its transmitting node), runs them under conservative lookahead, and
+//! reassembles the cluster afterwards so everything that pokes at nodes
+//! between runs (gradient seeding, mailbox redemption, phase planning)
+//! keeps working unchanged.
+//!
+//! [`ClusterShard`] deliberately mirrors `cluster.rs`'s forwarding and
+//! delivery logic (`send_from` → `transmit_on` → `deliver` →
+//! `exec_on_device` / app callbacks / completion notes) — keep the two in
+//! sync when touching either. The differences are exactly the ones that
+//! make parallel determinism possible:
+//!
+//! * **Events are plain data** ([`NetEvent`]), not boxed closures, so they
+//!   can cross threads, and every event carries a canonical
+//!   [`EventKey`] `(time, scheduling node, per-node counter)` — shards pop
+//!   in key order, so execution order is a pure function of keys and
+//!   never of the partition.
+//! * **Randomness is partitioned**: loss/duplication draws come from a
+//!   per-*link* stream and app randomness from a per-*host* stream (both
+//!   seeded from `(seed, index)`), instead of the classic single
+//!   `Cluster::rng`. Same seed ⇒ identical draws at any shard count.
+//! * **Reliability and reordering are partitioned** by origin node and
+//!   destination node respectively; counters merge back after the run.
+//! * **Completion hooks run at window barriers**: shards log
+//!   `(EventKey, CompletionRecord)`; between epochs the coordinator sorts
+//!   the union by key, runs `Cluster::on_completion` in that global
+//!   order, and applies the returned [`InjectCmd`]s with
+//!   coordinator-stamped keys. Injection times are computed from the
+//!   *record's* time (exactly like the classic inline hook), so the
+//!   deferred dispatch is timing-transparent.
+//!
+//! Lookahead is `min(INJECT_NS, min link propagation delay)`: every
+//! cross-shard event (a link delivery, or a coordinator injection) lands
+//! at least that far past the window's base, i.e. always in a future
+//! window.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+use std::sync::Arc;
+
+use crate::isa::Flags;
+use crate::metrics::Metrics;
+use crate::sim::{
+    Engine, EventKey, ShardRunStats, ShardWorld, ShardedEngine, SimTime, COORDINATOR_SRC,
+};
+use crate::transport::{ReliabilityTable, ReorderBuffer, RetryVerdict};
+use crate::util::Xoshiro256;
+use crate::wire::{DeviceIp, Packet};
+
+use super::cluster::{
+    ecmp_hash, is_completion, Action, AppCtx, Cluster, CompletionRecord, InjectCmd, Node, NodeId,
+    INJECT_NS, LOOPBACK_NS,
+};
+use super::link::{Link, LinkId, TxResult};
+
+/// A network event as plain (thread-mobile) data. Every variant executes
+/// on exactly one node, and same-time follow-ups are always scheduled by
+/// the node that executes them — the two facts the determinism argument
+/// leans on.
+#[derive(Debug)]
+pub(crate) enum NetEvent {
+    /// Emit `pkt` from `node` toward its current SROU segment.
+    SendFrom { node: NodeId, pkt: Packet },
+    /// `pkt` arrives at `node` (the only event kind born cross-shard).
+    Deliver { node: NodeId, pkt: Packet },
+    /// Retransmit timer for `(origin, seq)` at `epoch`.
+    Retry { origin: NodeId, seq: u64, epoch: u32 },
+    /// Host app `on_start`.
+    AppStart { node: NodeId },
+    /// Host app `on_timer(token)`.
+    AppTimer { node: NodeId, token: u64 },
+}
+
+impl NetEvent {
+    /// The node that executes this event (decides shard ownership).
+    fn node(&self) -> NodeId {
+        match self {
+            NetEvent::SendFrom { node, .. }
+            | NetEvent::Deliver { node, .. }
+            | NetEvent::AppStart { node }
+            | NetEvent::AppTimer { node, .. } => *node,
+            NetEvent::Retry { origin, .. } => *origin,
+        }
+    }
+}
+
+/// Heap entry; ordering by key only (min-heap via inverted cmp).
+pub(crate) struct ShardEntry {
+    key: EventKey,
+    ev: NetEvent,
+}
+
+impl PartialEq for ShardEntry {
+    fn eq(&self, other: &Self) -> bool {
+        self.key == other.key
+    }
+}
+impl Eq for ShardEntry {}
+impl PartialOrd for ShardEntry {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for ShardEntry {
+    fn cmp(&self, other: &Self) -> Ordering {
+        other.key.cmp(&self.key) // earliest-first
+    }
+}
+
+/// Immutable routing facts shared by all shards (the topology is fixed
+/// once a cluster is built).
+struct Routes {
+    fib: Vec<std::collections::HashMap<DeviceIp, Vec<LinkId>>>,
+    node_ip: Vec<Option<DeviceIp>>,
+    link_owner: Vec<NodeId>,
+}
+
+/// One shard: the nodes/links it owns (full-length `Option` vectors so
+/// global ids index directly), its event heap, and its partitioned slices
+/// of the cluster's mutable state.
+pub(crate) struct ClusterShard {
+    index: usize,
+    nshards: usize,
+    routes: Arc<Routes>,
+    nodes: Vec<Option<Node>>,
+    links: Vec<Option<Link>>,
+    link_rng: Vec<Option<Xoshiro256>>,
+    host_rng: Vec<Option<Xoshiro256>>,
+    reorder: Vec<Option<ReorderBuffer>>,
+    xport: ReliabilityTable,
+    fault: super::cluster::FaultModel,
+    metrics: Metrics,
+    trace_device_service: bool,
+    heap: BinaryHeap<ShardEntry>,
+    /// Per-node scheduling counters (only owned indices are used).
+    sched_seq: Vec<u64>,
+    /// Cross-shard events born this window: `(destination shard, entry)`.
+    outbox: Vec<(usize, ShardEntry)>,
+    /// `(key of the executing event, record)` — drained by the
+    /// coordinator at each barrier and replayed in global key order.
+    completion_log: Vec<(EventKey, CompletionRecord)>,
+    now: SimTime,
+    current_key: EventKey,
+    processed: u64,
+    last_event: SimTime,
+}
+
+impl ClusterShard {
+    fn owns(&self, node: NodeId) -> bool {
+        node % self.nshards == self.index
+    }
+
+    /// Push an event created outside the shard's own execution (a
+    /// coordinator injection or an initial kick).
+    pub(crate) fn push_external(&mut self, key: EventKey, ev: NetEvent) {
+        debug_assert!(self.owns(ev.node()), "event routed to wrong shard");
+        self.heap.push(ShardEntry { key, ev });
+    }
+
+    pub(crate) fn take_completions(&mut self) -> Vec<(EventKey, CompletionRecord)> {
+        std::mem::take(&mut self.completion_log)
+    }
+
+    /// Schedule a follow-up created by node `by`'s execution. Routed to
+    /// the owner shard (heap if local, outbox if not).
+    fn sched(&mut self, time: SimTime, by: NodeId, ev: NetEvent) {
+        let seq = self.sched_seq[by];
+        self.sched_seq[by] += 1;
+        let key = EventKey { time, src: by, seq };
+        let dst_shard = ev.node() % self.nshards;
+        if dst_shard == self.index {
+            self.heap.push(ShardEntry { key, ev });
+        } else {
+            self.outbox.push((dst_shard, ShardEntry { key, ev }));
+        }
+    }
+
+    fn exec(&mut self, ev: NetEvent) {
+        match ev {
+            NetEvent::SendFrom { node, pkt } => self.send_from(node, pkt),
+            NetEvent::Deliver { node, pkt } => self.deliver(node, pkt),
+            NetEvent::Retry { origin, seq, epoch } => {
+                match self.xport.on_timeout(origin, seq, epoch) {
+                    RetryVerdict::Done | RetryVerdict::Failed => {}
+                    RetryVerdict::Resend(pkt) => {
+                        self.metrics.inc("retransmits");
+                        let next_epoch =
+                            self.xport.epoch(origin, seq).expect("pending after resend");
+                        self.arm_retry(origin, seq, next_epoch);
+                        self.send_from(origin, pkt);
+                    }
+                }
+            }
+            NetEvent::AppStart { node } => self.with_app(node, |app, ctx| app.on_start(ctx)),
+            NetEvent::AppTimer { node, token } => {
+                self.with_app(node, |app, ctx| app.on_timer(token, ctx))
+            }
+        }
+    }
+
+    fn arm_retry(&mut self, origin: NodeId, seq: u64, epoch: u32) {
+        let timeout = self.xport.timeout_ns;
+        self.sched(
+            self.now + timeout,
+            origin,
+            NetEvent::Retry { origin, seq, epoch },
+        );
+    }
+
+    fn inject(&mut self, origin: NodeId, pkt: Packet) {
+        self.sched(
+            self.now + INJECT_NS,
+            origin,
+            NetEvent::SendFrom { node: origin, pkt },
+        );
+    }
+
+    fn inject_reliable(&mut self, origin: NodeId, pkt: Packet) {
+        debug_assert!(
+            pkt.instr.replay_safe(pkt.flags),
+            "reliable injection of non-replay-safe {:?}",
+            pkt.instr
+        );
+        let seq = pkt.seq;
+        let epoch = self.xport.track(origin, pkt.clone());
+        self.arm_retry(origin, seq, epoch);
+        self.inject(origin, pkt);
+    }
+
+    // Mirrors `Cluster::send_from`.
+    fn send_from(&mut self, node: NodeId, pkt: Packet) {
+        let Some(dst) = pkt.dst() else {
+            self.metrics.inc("drop_no_segment");
+            return;
+        };
+        if self.routes.node_ip[node] == Some(dst) {
+            self.sched(
+                self.now + LOOPBACK_NS,
+                node,
+                NetEvent::Deliver { node, pkt },
+            );
+            return;
+        }
+        let Some(cands) = self.routes.fib[node].get(&dst) else {
+            self.metrics.inc("drop_no_route");
+            return;
+        };
+        debug_assert!(!cands.is_empty());
+        let lid = if cands.len() == 1 {
+            cands[0]
+        } else {
+            let pick = match self.nodes[node].as_mut().expect("own node") {
+                Node::Switch(sw) => sw.pick(&pkt, dst, cands.len()),
+                _ => ecmp_hash(pkt.src, dst, cands.len()),
+            };
+            cands[pick]
+        };
+        self.transmit_on(lid, pkt);
+    }
+
+    // Mirrors `Cluster::transmit_on`, with the loss/dup draws moved to the
+    // link's own RNG stream (same draw order: loss, dup, then jitter).
+    fn transmit_on(&mut self, lid: LinkId, mut pkt: Packet) {
+        let bytes = pkt.wire_bytes();
+        let now = self.now;
+        let from = self.routes.link_owner[lid];
+        let link = self.links[lid].as_mut().expect("link owned by shard");
+        let to = link.to;
+        let tx = link.transmit(now, bytes);
+        match tx {
+            TxResult::Dropped => {
+                self.metrics.inc("link_drops");
+            }
+            TxResult::Sent {
+                arrival,
+                departure: _,
+                ecn,
+            } => {
+                if ecn {
+                    pkt.flags = pkt.flags.with(Flags::ECN);
+                }
+                let (lost, dup_jitter) = {
+                    let rng = self.link_rng[lid].as_mut().expect("link rng");
+                    let lost = self.fault.loss_p > 0.0 && rng.chance(self.fault.loss_p);
+                    let dup = self.fault.dup_p > 0.0 && rng.chance(self.fault.dup_p);
+                    let jitter = if dup {
+                        Some(200 + rng.next_below(800))
+                    } else {
+                        None
+                    };
+                    (lost, jitter)
+                };
+                if lost {
+                    self.metrics.inc("fault_lost");
+                } else {
+                    self.sched(
+                        arrival,
+                        from,
+                        NetEvent::Deliver {
+                            node: to,
+                            pkt: pkt.clone(),
+                        },
+                    );
+                }
+                if let Some(jitter) = dup_jitter {
+                    self.metrics.inc("fault_duplicated");
+                    self.sched(
+                        arrival + jitter,
+                        from,
+                        NetEvent::Deliver { node: to, pkt },
+                    );
+                }
+            }
+        }
+    }
+
+    // Mirrors `Cluster::deliver`, with per-destination reorder buffers.
+    fn deliver(&mut self, node: NodeId, mut pkt: Packet) {
+        enum Kind {
+            Switch { latency: SimTime },
+            Device,
+            Host { has_app: bool },
+        }
+        let kind = match self.nodes[node].as_mut().expect("own node") {
+            Node::Switch(sw) => {
+                if let (Some(ip), Some(cur)) = (sw.ip, pkt.srou.current()) {
+                    if cur.node == ip {
+                        pkt.srou.advance();
+                    }
+                }
+                if pkt.dst().is_none() {
+                    sw.no_route_drops += 1;
+                    self.metrics.inc("drop_no_segment");
+                    return;
+                }
+                sw.forwarded += 1;
+                Kind::Switch {
+                    latency: sw.latency_ns,
+                }
+            }
+            Node::Device(dev) => {
+                if pkt.dst() != Some(dev.ip()) {
+                    self.metrics.inc("drop_misrouted");
+                    return;
+                }
+                Kind::Device
+            }
+            Node::Host(h) => {
+                if pkt.dst() != Some(h.ip) {
+                    self.metrics.inc("drop_misrouted");
+                    return;
+                }
+                Kind::Host {
+                    has_app: h.app.is_some(),
+                }
+            }
+        };
+        if !matches!(kind, Kind::Switch { .. }) && pkt.flags.ecn() {
+            self.metrics.inc("ecn_ce_received");
+        }
+        match kind {
+            Kind::Switch { latency } => {
+                self.sched(self.now + latency, node, NetEvent::SendFrom { node, pkt });
+            }
+            Kind::Device => {
+                if is_completion(&pkt.instr) {
+                    self.note_completion(node, &pkt);
+                }
+                if pkt.flags.ordered() {
+                    let src = pkt.src;
+                    let release = self.reorder[node]
+                        .as_mut()
+                        .expect("reorder buf")
+                        .offer(src, pkt);
+                    for p in release {
+                        self.exec_on_device(node, p);
+                    }
+                } else {
+                    self.exec_on_device(node, pkt);
+                }
+            }
+            Kind::Host { has_app } => {
+                if is_completion(&pkt.instr) {
+                    self.note_completion(node, &pkt);
+                }
+                if has_app {
+                    self.with_app(node, |app, ctx| app.on_packet(pkt, ctx));
+                } else {
+                    let now = self.now;
+                    match self.nodes[node].as_mut().expect("own node") {
+                        Node::Host(h) => h.mailbox.push((now, pkt)),
+                        _ => unreachable!(),
+                    }
+                }
+            }
+        }
+    }
+
+    // Mirrors `Cluster::exec_on_device`.
+    fn exec_on_device(&mut self, node: NodeId, pkt: Packet) {
+        let now = self.now;
+        let emits = match self.nodes[node].as_mut().expect("own node") {
+            Node::Device(d) => d.handle_packet(now, pkt),
+            _ => unreachable!(),
+        };
+        for e in emits {
+            if self.trace_device_service {
+                self.metrics.record("device_service_ns", e.delay);
+            }
+            self.sched(
+                now + e.delay,
+                node,
+                NetEvent::SendFrom { node, pkt: e.pkt },
+            );
+        }
+    }
+
+    // Mirrors `Cluster::note_completion`, except the hook dispatch is
+    // deferred to the barrier coordinator (which replays records in
+    // global key order).
+    fn note_completion(&mut self, node: NodeId, pkt: &Packet) {
+        self.xport.complete(node, pkt.seq);
+        let rec = CompletionRecord {
+            time: self.now,
+            node,
+            from: pkt.src,
+            seq: pkt.seq,
+            instr: pkt.instr.clone(),
+        };
+        self.completion_log.push((self.current_key, rec));
+    }
+
+    // Mirrors `Cluster::with_app`, drawing from the host's own RNG stream.
+    fn with_app<F>(&mut self, node: NodeId, f: F)
+    where
+        F: FnOnce(&mut dyn super::cluster::App, &mut AppCtx),
+    {
+        let (ip, mut app, mut next_seq) = match self.nodes[node].as_mut().expect("own node") {
+            Node::Host(h) => (h.ip, h.app.take().expect("app present"), h.next_seq),
+            _ => panic!("with_app on non-host"),
+        };
+        let actions = {
+            let rng = self.host_rng[node].as_mut().expect("host rng");
+            let mut ctx = AppCtx {
+                now: self.now,
+                self_ip: ip,
+                rng,
+                next_seq: &mut next_seq,
+                actions: Vec::new(),
+            };
+            f(app.as_mut(), &mut ctx);
+            std::mem::take(&mut ctx.actions)
+        };
+        if let Some(Node::Host(h)) = self.nodes[node].as_mut() {
+            h.app = Some(app);
+            h.next_seq = next_seq;
+        }
+        for a in actions {
+            match a {
+                Action::Send(pkt) => self.inject(node, pkt),
+                Action::SendReliable(pkt) => self.inject_reliable(node, pkt),
+                Action::Timer(delay, token) => {
+                    self.sched(self.now + delay, node, NetEvent::AppTimer { node, token });
+                }
+                Action::Record(name, v) => self.metrics.record(&name, v),
+                Action::Count(name, v) => self.metrics.add(&name, v),
+            }
+        }
+    }
+}
+
+impl ShardWorld for ClusterShard {
+    type Msg = ShardEntry;
+
+    fn next_time(&self) -> Option<SimTime> {
+        self.heap.peek().map(|e| e.key.time)
+    }
+
+    fn run_window(&mut self, end: SimTime) -> Vec<(usize, ShardEntry)> {
+        while let Some(e) = self.heap.peek() {
+            if e.key.time >= end {
+                break;
+            }
+            let e = self.heap.pop().expect("peeked");
+            self.now = e.key.time;
+            self.current_key = e.key;
+            self.processed += 1;
+            self.last_event = e.key.time;
+            self.exec(e.ev);
+        }
+        std::mem::take(&mut self.outbox)
+    }
+
+    fn accept(&mut self, msg: ShardEntry) {
+        debug_assert!(self.owns(msg.ev.node()), "message routed to wrong shard");
+        self.heap.push(msg);
+    }
+
+    fn events_processed(&self) -> u64 {
+        self.processed
+    }
+
+    fn last_event_time(&self) -> SimTime {
+        self.last_event
+    }
+}
+
+/// Persistent sharded-execution state for one cluster: the shared route
+/// snapshot, the per-link / per-host RNG streams and per-node reorder
+/// buffers (all of which must survive across successive `drive` rounds,
+/// exactly like `Cluster::rng`/`Cluster::reorder` survive across
+/// `Engine::run` calls), and cumulative run statistics.
+pub struct ShardedRuntime {
+    nshards: usize,
+    threads: usize,
+    lookahead: SimTime,
+    routes: Arc<Routes>,
+    link_rng: Vec<Xoshiro256>,
+    host_rng: Vec<Xoshiro256>,
+    reorder: Vec<ReorderBuffer>,
+    coord_seq: u64,
+    /// Cumulative events executed across all `drive` rounds.
+    pub events: u64,
+    /// Cumulative window barriers crossed.
+    pub epochs: u64,
+}
+
+fn stream_seed(seed: u64, tag: u64, index: usize) -> u64 {
+    seed ^ (tag << 56) ^ (index as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+}
+
+impl ShardedRuntime {
+    /// Build for a fully-constructed cluster (topology must be final:
+    /// routes are snapshotted here). `threads = 0` means "pick from
+    /// available parallelism".
+    pub fn new(cl: &Cluster, seed: u64, nshards: usize, threads: usize) -> Self {
+        let nshards = nshards.max(1);
+        let n = cl.nodes.len();
+        let min_prop = cl.links.iter().map(|l| l.cfg.prop_ns).min().unwrap_or(INJECT_NS);
+        if nshards > 1 {
+            assert!(
+                min_prop >= 1,
+                "sharded execution needs >= 1 ns of link propagation for lookahead"
+            );
+        }
+        let routes = Arc::new(Routes {
+            fib: cl.fib.clone(),
+            node_ip: (0..n).map(|i| cl.node_ip(i)).collect(),
+            link_owner: cl.links.iter().map(|l| l.from).collect(),
+        });
+        Self {
+            nshards,
+            threads,
+            lookahead: INJECT_NS.min(min_prop).max(1),
+            routes,
+            link_rng: (0..cl.links.len())
+                .map(|i| Xoshiro256::seed_from(stream_seed(seed, 0x51, i)))
+                .collect(),
+            host_rng: (0..n)
+                .map(|i| Xoshiro256::seed_from(stream_seed(seed, 0x52, i)))
+                .collect(),
+            reorder: (0..n).map(|_| ReorderBuffer::new()).collect(),
+            coord_seq: 0,
+            events: 0,
+            epochs: 0,
+        }
+    }
+
+    pub fn shard_count(&self) -> usize {
+        self.nshards
+    }
+
+    /// Partition the cluster's mutable state into shards.
+    fn decompose(&mut self, cl: &mut Cluster) -> Vec<ClusterShard> {
+        let n = cl.nodes.len();
+        let nlinks = cl.links.len();
+        let mut shards: Vec<ClusterShard> = (0..self.nshards)
+            .map(|index| ClusterShard {
+                index,
+                nshards: self.nshards,
+                routes: Arc::clone(&self.routes),
+                nodes: (0..n).map(|_| None).collect(),
+                links: (0..nlinks).map(|_| None).collect(),
+                link_rng: (0..nlinks).map(|_| None).collect(),
+                host_rng: (0..n).map(|_| None).collect(),
+                reorder: (0..n).map(|_| None).collect(),
+                xport: ReliabilityTable::new(cl.xport.timeout_ns, cl.xport.max_retries),
+                fault: cl.fault.clone(),
+                metrics: Metrics::new(),
+                trace_device_service: cl.trace_device_service,
+                heap: BinaryHeap::new(),
+                sched_seq: vec![0; n],
+                outbox: Vec::new(),
+                completion_log: Vec::new(),
+                now: 0,
+                current_key: EventKey {
+                    time: 0,
+                    src: COORDINATOR_SRC,
+                    seq: 0,
+                },
+                processed: 0,
+                last_event: 0,
+            })
+            .collect();
+        for (i, node) in std::mem::take(&mut cl.nodes).into_iter().enumerate() {
+            shards[i % self.nshards].nodes[i] = Some(node);
+        }
+        for (lid, link) in std::mem::take(&mut cl.links).into_iter().enumerate() {
+            let owner = link.from % self.nshards;
+            shards[owner].links[lid] = Some(link);
+        }
+        for (lid, rng) in std::mem::take(&mut self.link_rng).into_iter().enumerate() {
+            let owner = self.routes.link_owner[lid] % self.nshards;
+            shards[owner].link_rng[lid] = Some(rng);
+        }
+        for (i, rng) in std::mem::take(&mut self.host_rng).into_iter().enumerate() {
+            shards[i % self.nshards].host_rng[i] = Some(rng);
+        }
+        for (i, buf) in std::mem::take(&mut self.reorder).into_iter().enumerate() {
+            shards[i % self.nshards].reorder[i] = Some(buf);
+        }
+        shards
+    }
+
+    /// Put everything back and fold partitioned state into the cluster.
+    fn reassemble(&mut self, cl: &mut Cluster, shards: Vec<ClusterShard>) {
+        let n = self.routes.node_ip.len();
+        let nlinks = self.routes.link_owner.len();
+        let mut nodes: Vec<Option<Node>> = (0..n).map(|_| None).collect();
+        let mut links: Vec<Option<Link>> = (0..nlinks).map(|_| None).collect();
+        let mut link_rng: Vec<Option<Xoshiro256>> = (0..nlinks).map(|_| None).collect();
+        let mut host_rng: Vec<Option<Xoshiro256>> = (0..n).map(|_| None).collect();
+        let mut reorder: Vec<Option<ReorderBuffer>> = (0..n).map(|_| None).collect();
+        for shard in shards {
+            debug_assert_eq!(shard.xport.outstanding(), 0, "run ended with pending retries");
+            cl.xport.retransmits += shard.xport.retransmits;
+            cl.xport.failures += shard.xport.failures;
+            cl.xport.completed += shard.xport.completed;
+            cl.metrics.merge(&shard.metrics);
+            for (i, slot) in shard.nodes.into_iter().enumerate() {
+                if let Some(node) = slot {
+                    nodes[i] = Some(node);
+                }
+            }
+            for (i, slot) in shard.links.into_iter().enumerate() {
+                if let Some(link) = slot {
+                    links[i] = Some(link);
+                }
+            }
+            for (i, slot) in shard.link_rng.into_iter().enumerate() {
+                if let Some(rng) = slot {
+                    link_rng[i] = Some(rng);
+                }
+            }
+            for (i, slot) in shard.host_rng.into_iter().enumerate() {
+                if let Some(rng) = slot {
+                    host_rng[i] = Some(rng);
+                }
+            }
+            for (i, slot) in shard.reorder.into_iter().enumerate() {
+                if let Some(buf) = slot {
+                    reorder[i] = Some(buf);
+                }
+            }
+        }
+        cl.nodes = nodes.into_iter().map(|s| s.expect("node returned")).collect();
+        cl.links = links.into_iter().map(|s| s.expect("link returned")).collect();
+        self.link_rng = link_rng
+            .into_iter()
+            .map(|s| s.expect("link rng returned"))
+            .collect();
+        self.host_rng = host_rng
+            .into_iter()
+            .map(|s| s.expect("host rng returned"))
+            .collect();
+        self.reorder = reorder
+            .into_iter()
+            .map(|s| s.expect("reorder returned"))
+            .collect();
+    }
+
+    /// Run the cluster to quiescence on the sharded core.
+    ///
+    /// `injected` is the drained capture buffer: `(capture time, cmd)`
+    /// pairs recorded by [`Cluster::inject_cmd`] while in capture mode.
+    /// Completion hooks fire at window barriers in global key order; the
+    /// engine's clock is advanced to the last executed event time so
+    /// subsequent submissions stamp the same times the classic path
+    /// would.
+    pub fn drive(
+        &mut self,
+        cl: &mut Cluster,
+        eng: &mut Engine<Cluster>,
+        injected: Vec<(SimTime, InjectCmd)>,
+    ) -> ShardRunStats {
+        let mut shards = self.decompose(cl);
+        let nshards = self.nshards;
+        let mut coord_seq = self.coord_seq;
+        for (base, cmd) in injected {
+            apply_cmd(&mut shards, nshards, cmd, base, &mut coord_seq);
+        }
+        let mut engine = ShardedEngine::new(shards, self.lookahead);
+        if self.threads > 0 {
+            engine = engine.with_threads(self.threads);
+        }
+        let stats = engine.run(|shards, _end| {
+            let mut recs: Vec<(EventKey, CompletionRecord)> = Vec::new();
+            for s in shards.iter_mut() {
+                recs.append(&mut s.take_completions());
+            }
+            recs.sort_by(|a, b| a.0.cmp(&b.0));
+            for (_, rec) in recs {
+                if let Some(mut hook) = cl.on_completion.take() {
+                    let cmds = hook(&rec);
+                    cl.on_completion.replace(hook);
+                    for c in cmds {
+                        apply_cmd(shards, nshards, c, rec.time, &mut coord_seq);
+                    }
+                }
+                cl.completions.push(rec);
+            }
+        });
+        self.coord_seq = coord_seq;
+        let shards = engine.into_shards();
+        self.reassemble(cl, shards);
+        self.events += stats.events;
+        self.epochs += stats.epochs;
+        eng.advance_to(stats.end_time);
+        stats
+    }
+}
+
+/// Apply an [`InjectCmd`] as a coordinator injection: reliability
+/// tracking on the origin's shard plus a `SendFrom` after the classic
+/// request-queue latency, both stamped with coordinator keys. Mirrors
+/// `Cluster::inject_cmd` / `inject_reliable` timing exactly
+/// (`base + delay` is when the classic deferred closure would run).
+fn apply_cmd(
+    shards: &mut [ClusterShard],
+    nshards: usize,
+    cmd: InjectCmd,
+    base: SimTime,
+    coord_seq: &mut u64,
+) {
+    let InjectCmd {
+        origin,
+        pkt,
+        reliable,
+        delay,
+    } = cmd;
+    let t0 = base + delay;
+    let shard = &mut shards[origin % nshards];
+    if reliable {
+        debug_assert!(
+            pkt.instr.replay_safe(pkt.flags),
+            "reliable injection of non-replay-safe {:?}",
+            pkt.instr
+        );
+        let seq = pkt.seq;
+        let epoch = shard.xport.track(origin, pkt.clone());
+        let timeout = shard.xport.timeout_ns;
+        *coord_seq += 1;
+        shard.push_external(
+            EventKey {
+                time: t0 + timeout,
+                src: COORDINATOR_SRC,
+                seq: *coord_seq,
+            },
+            NetEvent::Retry { origin, seq, epoch },
+        );
+    }
+    *coord_seq += 1;
+    shard.push_external(
+        EventKey {
+            time: t0 + INJECT_NS,
+            src: COORDINATOR_SRC,
+            seq: *coord_seq,
+        },
+        NetEvent::SendFrom { node: origin, pkt },
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::DeviceConfig;
+    use crate::isa::Instruction;
+    use crate::net::switch::Switch;
+    use crate::net::LinkConfig;
+    use crate::wire::{Payload, SrouHeader};
+
+    fn ip(x: u8) -> DeviceIp {
+        DeviceIp::lan(x)
+    }
+
+    fn star(seed: u64) -> (Cluster, NodeId) {
+        let mut cl = Cluster::new(seed);
+        let sw = cl.add_switch(Switch::tor(None));
+        let h = cl.add_host(ip(100), None);
+        let d1 = cl.add_device(DeviceConfig::paper_default(ip(1)));
+        let d2 = cl.add_device(DeviceConfig::paper_default(ip(2)));
+        for n in [h, d1, d2] {
+            cl.connect(sw, n, LinkConfig::dc_100g());
+        }
+        cl.compute_routes();
+        (cl, h)
+    }
+
+    fn write_then_read(nshards: usize) -> (SimTime, Vec<f32>) {
+        let (mut cl, h) = star(7);
+        let mut eng: Engine<Cluster> = Engine::new();
+        let mut rt = ShardedRuntime::new(&cl, 7, nshards, 1);
+        let seq = cl.alloc_seq(h);
+        let w = Packet::new(
+            ip(100),
+            seq,
+            SrouHeader::direct(ip(1)),
+            Instruction::Write { addr: 0x40 },
+        )
+        .with_payload(Payload::from_f32s(&[1.0, 2.0]));
+        let seq2 = cl.alloc_seq(h);
+        let r = Packet::new(
+            ip(100),
+            seq2,
+            SrouHeader::direct(ip(1)),
+            Instruction::Read { addr: 0x40, len: 8 },
+        );
+        // Write at t=0, read well after it settles.
+        let injected = vec![
+            (
+                0,
+                InjectCmd {
+                    origin: h,
+                    pkt: w,
+                    reliable: false,
+                    delay: 0,
+                },
+            ),
+            (
+                0,
+                InjectCmd {
+                    origin: h,
+                    pkt: r,
+                    reliable: false,
+                    delay: 100_000,
+                },
+            ),
+        ];
+        let stats = rt.drive(&mut cl, &mut eng, injected);
+        assert!(stats.events > 0);
+        assert_eq!(eng.now(), stats.end_time);
+        let mailbox = &cl.host_mut(h).mailbox;
+        assert_eq!(mailbox.len(), 1);
+        let (t, resp) = &mailbox[0];
+        assert!(matches!(resp.instr, Instruction::ReadResp { addr: 0x40 }));
+        (*t, resp.payload.f32s().unwrap().unwrap())
+    }
+
+    #[test]
+    fn sharded_round_trip_matches_across_shard_counts() {
+        let (t1, d1) = write_then_read(1);
+        let (t2, d2) = write_then_read(2);
+        let (t3, d3) = write_then_read(3);
+        assert_eq!((t1, &d1), (t2, &d2));
+        assert_eq!((t1, &d1), (t3, &d3));
+        assert_eq!(d1, vec![1.0, 2.0], "read returns the written payload");
+        assert!(t1 > 100_000);
+    }
+
+    #[test]
+    fn reliable_injection_retransmits_through_loss_sharded() {
+        for nshards in [1usize, 2, 4] {
+            let (mut cl, h) = star(9);
+            cl.fault.loss_p = 0.2;
+            cl.xport = ReliabilityTable::new(20_000, 30);
+            let mut eng: Engine<Cluster> = Engine::new();
+            let mut rt = ShardedRuntime::new(&cl, 9, nshards, 1);
+            let seq = cl.alloc_seq(h);
+            let w = Packet::new(
+                ip(100),
+                seq,
+                SrouHeader::direct(ip(1)),
+                Instruction::Write { addr: 0 },
+            )
+            .with_flags(Flags(Flags::RELIABLE))
+            .with_payload(Payload::from_f32s(&[42.0]));
+            rt.drive(
+                &mut cl,
+                &mut eng,
+                vec![(
+                    0,
+                    InjectCmd {
+                        origin: h,
+                        pkt: w,
+                        reliable: true,
+                        delay: 0,
+                    },
+                )],
+            );
+            assert_eq!(cl.xport.outstanding(), 0);
+            assert_eq!(cl.xport.failures, 0, "loss but generous retries");
+            let d1 = cl.node_by_ip(ip(1)).unwrap();
+            let v = cl.device_mut(d1).mem().read(0, 4).unwrap();
+            assert_eq!(v, 42.0f32.to_le_bytes());
+        }
+    }
+}

@@ -154,6 +154,21 @@ impl Topology {
         )
     }
 
+    /// Device ip of the `idx`-th fat-tree device. Up to 96 devices keep
+    /// the historic `10.0.0.(1+idx)` addresses (tests and docs rely on
+    /// them); beyond that, devices spill into `10.1.x.y` — disjoint from
+    /// both the small-LAN range and the spine range (`10.0.0.200+`), so
+    /// 1024-rank grids address cleanly.
+    fn fat_tree_device_ip(idx: usize) -> DeviceIp {
+        if idx < 96 {
+            DeviceIp::lan(1 + idx as u8)
+        } else {
+            let wide = idx - 96;
+            assert!(wide < 65_536, "fat-tree device index out of ip space");
+            DeviceIp(0x0A01_0000 | wide as u32)
+        }
+    }
+
     /// [`Topology::fat_tree`] with an explicit device profile.
     pub fn fat_tree_with(
         seed: u64,
@@ -164,7 +179,7 @@ impl Topology {
         ecmp: EcmpMode,
         profile: DeviceProfile,
     ) -> Topology {
-        assert!(pods * devs_per_leaf <= 96, "device ip space is 8-bit here");
+        assert!(spines <= 55, "spine ip space is 10.0.0.200..=255");
         let mut cl = Cluster::new(seed);
         let spine_ids: Vec<NodeId> = (0..spines)
             .map(|s| cl.add_switch(Switch::new(Some(DeviceIp::lan(200 + s as u8)), 600, ecmp)))
@@ -180,7 +195,7 @@ impl Topology {
             }
             let mut group = Vec::new();
             for d in 0..devs_per_leaf {
-                let ip = DeviceIp::lan(1 + (p * devs_per_leaf + d) as u8);
+                let ip = Self::fat_tree_device_ip(p * devs_per_leaf + d);
                 let dev = cl.add_device(profile.config(ip));
                 cl.connect(leaf, dev, link.clone());
                 group.push(devices.len());
@@ -256,6 +271,34 @@ mod tests {
         let comps = cl.device_mut(from).drain_completions();
         assert_eq!(comps.len(), 1);
         assert_eq!(cl.total_drops(), 0);
+    }
+
+    #[test]
+    fn fat_tree_scales_past_96_devices() {
+        // 8 pods × 16 devices = 128 > the 8-bit 10.0.0.x space; the wide
+        // 10.1.x.y range takes over at index 96 without colliding with
+        // spines (10.0.0.200+).
+        let t = Topology::fat_tree_with(
+            11,
+            8,
+            16,
+            2,
+            LinkConfig::dc_100g(),
+            EcmpMode::FlowHash,
+            DeviceProfile::TimingOnly,
+        );
+        assert_eq!(t.devices.len(), 128);
+        assert_eq!(t.device_ip(0), DeviceIp::lan(1));
+        assert_eq!(t.device_ip(95), DeviceIp::lan(96));
+        assert_eq!(t.device_ip(96), DeviceIp(0x0A01_0000));
+        assert_eq!(t.device_ip(127), DeviceIp(0x0A01_001F));
+        // All addresses are distinct and routable.
+        let mut ips: Vec<_> = (0..128).map(|i| t.device_ip(i)).collect();
+        ips.sort();
+        ips.dedup();
+        assert_eq!(ips.len(), 128);
+        let d0 = t.devices[0];
+        assert!(t.cluster.fib_of(d0).contains_key(&t.device_ip(127)));
     }
 
     #[test]

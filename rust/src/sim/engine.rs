@@ -18,6 +18,28 @@ use super::time::SimTime;
 /// Identifier returned by `schedule_*`; usable for cancellation.
 pub type EventId = u64;
 
+/// Error returned by [`Engine::schedule_at_strict`] when the requested
+/// absolute time is already in the past.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SchedulePastError {
+    /// The time the caller asked for.
+    pub requested: SimTime,
+    /// The engine clock at the time of the call.
+    pub now: SimTime,
+}
+
+impl std::fmt::Display for SchedulePastError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "schedule into the past: requested t={} but now={}",
+            self.requested, self.now
+        )
+    }
+}
+
+impl std::error::Error for SchedulePastError {}
+
 /// The boxed event handler type.
 pub type EventFn<W> = Box<dyn FnOnce(&mut W, &mut Engine<W>)>;
 
@@ -98,16 +120,18 @@ impl<W> Engine<W> {
         self.heap.len()
     }
 
-    /// Schedule `f` at absolute time `t` (must be `>= now`).
+    /// Schedule `f` at absolute time `t`.
+    ///
+    /// A `t` in the past saturates to `now` — the event runs at the current
+    /// time, never travels backwards. This clamping is identical in debug
+    /// and release builds (it used to be a `debug_assert!` followed by a
+    /// silent clamp, so debug and release disagreed on past-time inputs).
+    /// Callers that consider a past `t` a logic error should use
+    /// [`Engine::schedule_at_strict`].
     pub fn schedule_at<F>(&mut self, t: SimTime, f: F) -> EventId
     where
         F: FnOnce(&mut W, &mut Engine<W>) + 'static,
     {
-        debug_assert!(
-            t >= self.now,
-            "scheduling into the past: t={t} now={}",
-            self.now
-        );
         let seq = self.seq;
         self.seq += 1;
         self.pending_ids.insert(seq);
@@ -117,6 +141,28 @@ impl<W> Engine<W> {
             f: Some(Box::new(f)),
         });
         seq
+    }
+
+    /// Schedule `f` at absolute time `t`, rejecting past times with a typed
+    /// error instead of clamping.
+    pub fn schedule_at_strict<F>(&mut self, t: SimTime, f: F) -> Result<EventId, SchedulePastError>
+    where
+        F: FnOnce(&mut W, &mut Engine<W>) + 'static,
+    {
+        if t < self.now {
+            return Err(SchedulePastError {
+                requested: t,
+                now: self.now,
+            });
+        }
+        Ok(self.schedule_at(t, f))
+    }
+
+    /// Advance the clock to `t` without running anything (no-op if `t` is
+    /// in the past). The sharded runtime uses this to re-sync an engine
+    /// whose world just ran on a different clock.
+    pub fn advance_to(&mut self, t: SimTime) {
+        self.now = self.now.max(t);
     }
 
     /// Schedule `f` after a relative delay `dt`.
@@ -317,6 +363,50 @@ mod tests {
         assert_eq!(eng.pending(), 1);
         eng.run(&mut w);
         assert_eq!(w.log, vec![(10, 1), (100, 2)]);
+    }
+
+    #[test]
+    fn past_time_schedule_clamps_to_now_in_all_builds() {
+        let mut eng: Engine<World> = Engine::new();
+        let mut w = World::default();
+        eng.schedule_at(50, |w, e| {
+            w.log.push((e.now(), 1));
+            // From inside an event at t=50, ask for t=10: runs at 50.
+            e.schedule_at(10, |w: &mut World, e: &mut Engine<World>| {
+                w.log.push((e.now(), 2));
+            });
+        });
+        eng.run(&mut w);
+        assert_eq!(w.log, vec![(50, 1), (50, 2)], "past schedule saturates to now");
+    }
+
+    #[test]
+    fn strict_schedule_rejects_past_times() {
+        let mut eng: Engine<World> = Engine::new();
+        let mut w = World::default();
+        eng.schedule_at(50, |_, e| {
+            let err = e
+                .schedule_at_strict(10, |_: &mut World, _: &mut Engine<World>| {})
+                .unwrap_err();
+            assert_eq!(err, SchedulePastError { requested: 10, now: 50 });
+            // Present/future times are fine.
+            assert!(e
+                .schedule_at_strict(50, |w: &mut World, e: &mut Engine<World>| {
+                    w.log.push((e.now(), 7));
+                })
+                .is_ok());
+        });
+        eng.run(&mut w);
+        assert_eq!(w.log, vec![(50, 7)]);
+    }
+
+    #[test]
+    fn advance_to_moves_clock_forward_only() {
+        let mut eng: Engine<World> = Engine::new();
+        eng.advance_to(100);
+        assert_eq!(eng.now(), 100);
+        eng.advance_to(40);
+        assert_eq!(eng.now(), 100, "advance_to never rewinds");
     }
 
     #[test]

@@ -11,8 +11,21 @@
 //! `schedule` calls, a run is bit-reproducible. Ties in time break by
 //! insertion order (a monotone sequence number), never by heap internals.
 
+//! ## Scaling: the sharded core
+//!
+//! `Engine` remains the default single-threaded path (and the degenerate
+//! single-shard case). For 1024-rank-scale worlds, [`sharded`] partitions
+//! the world into independently-clocked shards joined by latency-carrying
+//! channels: each shard owns an event heap ordered by a shard-invariant
+//! [`EventKey`], windows advance under conservative lookahead (the
+//! minimum cross-shard latency), and shards only exchange events at
+//! window barriers. Same seed ⇒ bit-identical results at any shard or
+//! thread count; see `net::shard` for the network-world instantiation.
+
 mod engine;
+pub mod sharded;
 mod time;
 
-pub use engine::{Engine, EventFn, EventId};
+pub use engine::{Engine, EventFn, EventId, SchedulePastError};
+pub use sharded::{EventKey, ShardRunStats, ShardWorld, ShardedEngine, COORDINATOR_SRC};
 pub use time::{fmt_ns, SimTime, GBPS, MICROS, MILLIS, SECS};

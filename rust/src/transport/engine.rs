@@ -162,8 +162,15 @@ pub struct WindowOutcome {
 }
 
 /// Handle to one plan submitted into an [`EngineSession`].
+///
+/// Generational: [`EngineSession::release`] recycles the plan's slab slot
+/// and bumps its generation, so a stale id held after release is detected
+/// instead of silently reading a successor plan's state.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub struct PlanId(usize);
+pub struct PlanId {
+    idx: usize,
+    gen: u32,
+}
 
 /// Per-plan outcome, redeemed from a session by [`PlanId`].
 #[derive(Debug)]
@@ -234,6 +241,17 @@ struct PlanState {
     cancelled: usize,
     record_responses: bool,
     responses: Vec<Retired>,
+    /// Plan-private token bucket (paced submits, e.g. a paced pooled-
+    /// memory batch). Overrides the session's [`PaceMode`] for this
+    /// plan's injections only.
+    pacer: Option<TokenBucket>,
+}
+
+/// One slot of the plan slab: the live state (if any) plus a generation
+/// counter that invalidates released [`PlanId`]s.
+struct PlanSlot {
+    gen: u32,
+    state: Option<PlanState>,
 }
 
 /// How injections are paced.
@@ -261,7 +279,11 @@ struct State {
     free_slots: Vec<usize>,
     max_inflight: usize,
     duplicates: usize,
-    plans: Vec<PlanState>,
+    /// Plan slab: released plans leave `None` holes that `free_plans`
+    /// recycles, keeping a long-lived session's plan bookkeeping
+    /// O(concurrently live plans) instead of O(plans ever submitted).
+    plans: Vec<PlanSlot>,
+    free_plans: Vec<usize>,
     /// Plans with ≥ 1 op in flight right now / the high-water mark —
     /// the multi-tenant overlap statistic the comm tests assert on.
     active_plans: usize,
@@ -272,9 +294,42 @@ struct State {
 }
 
 impl State {
+    /// Live plan state at slab index `idx` (internal references from
+    /// queued/in-flight ops are only created while the plan is live).
+    fn plan(&self, idx: usize) -> &PlanState {
+        self.plans[idx].state.as_ref().expect("live plan")
+    }
+
+    fn plan_mut(&mut self, idx: usize) -> &mut PlanState {
+        self.plans[idx].state.as_mut().expect("live plan")
+    }
+
+    /// Resolve a public [`PlanId`], panicking on a stale (released) id.
+    fn checked(&self, id: PlanId) -> &PlanState {
+        let slot = &self.plans[id.idx];
+        assert_eq!(slot.gen, id.gen, "stale plan id (already released)");
+        slot.state.as_ref().expect("released plan")
+    }
+
+    fn checked_mut(&mut self, id: PlanId) -> &mut PlanState {
+        let slot = &mut self.plans[id.idx];
+        assert_eq!(slot.gen, id.gen, "stale plan id (already released)");
+        slot.state.as_mut().expect("released plan")
+    }
+
     /// Pace an injection on `slot` at `now`: reserve from the bucket the
-    /// mode selects and return the release delay (0 when unpaced).
-    fn pace_delay(&mut self, slot: usize, now: SimTime, bytes: usize) -> SimTime {
+    /// op's plan (first) or the session mode selects and return the
+    /// release delay (0 when unpaced).
+    fn pace_delay(&mut self, plan: usize, slot: usize, now: SimTime, bytes: usize) -> SimTime {
+        if let Some(tb) = self.plans[plan]
+            .state
+            .as_mut()
+            .and_then(|p| p.pacer.as_mut())
+        {
+            let release = tb.reserve(now, bytes);
+            self.releases.push((slot, release, bytes));
+            return release.saturating_sub(now);
+        }
         let release = match &mut self.pace {
             PaceMode::None => return 0,
             PaceMode::Global(tb) => tb.reserve(now, bytes),
@@ -308,12 +363,17 @@ impl State {
         );
         self.inflight_per_slot[slot] += 1;
         self.max_inflight = self.max_inflight.max(self.inflight_per_slot[slot]);
-        if self.plans[plan].inflight == 0 {
+        let newly_active = {
+            let p = self.plan_mut(plan);
+            let newly = p.inflight == 0;
+            p.inflight += 1;
+            newly
+        };
+        if newly_active {
             self.active_plans += 1;
             self.max_concurrent_plans = self.max_concurrent_plans.max(self.active_plans);
         }
-        self.plans[plan].inflight += 1;
-        let delay = self.pace_delay(slot, now, op.pace_bytes);
+        let delay = self.pace_delay(plan, slot, now, op.pace_bytes);
         Some(InjectCmd {
             origin: op.origin,
             pkt: op.pkt,
@@ -343,48 +403,53 @@ impl State {
         };
         self.retired.insert(candidate);
         self.inflight_per_slot[info.slot] -= 1;
-        let plan = &mut self.plans[info.plan];
-        plan.inflight -= 1;
-        if plan.inflight == 0 {
+        let now_idle = {
+            let p = self.plan_mut(info.plan);
+            p.inflight -= 1;
+            p.done += 1;
+            p.last_done = rec.time;
+            p.inflight == 0
+        };
+        if now_idle {
             self.active_plans -= 1;
         }
-        plan.done += 1;
-        plan.last_done = rec.time;
         if let Instruction::Nack { reason, .. } = &rec.instr {
-            let first_nak = plan.nak.is_none();
-            if first_nak {
-                plan.nak = Some(NakRecord {
-                    from: rec.from,
-                    tag: info.tag,
-                    reason: *reason,
-                    key: info.pub_key,
-                });
+            if self.plan(info.plan).nak.is_none() {
                 // Cancel the rest of *this plan only*: its lease is bad,
                 // so hammering the device with its remaining window
                 // would just be more NAKs — but other tenants' plans on
                 // the session are healthy and keep running. One sweep,
                 // over the plan's own slots, on the first NAK (the
                 // remaining in-flight ops drain to their own NAKs).
-                let p = info.plan;
-                let slots = self.plans[p].slots.clone();
+                let nak = NakRecord {
+                    from: rec.from,
+                    tag: info.tag,
+                    reason: *reason,
+                    key: info.pub_key,
+                };
+                let slots = {
+                    let p = self.plan_mut(info.plan);
+                    p.nak = Some(nak);
+                    p.slots.clone()
+                };
                 let mut dropped = 0usize;
                 for slot in slots {
                     let q = &mut self.queues[slot];
                     let before = q.len();
-                    q.retain(|op| op.plan != p);
+                    q.retain(|op| op.plan != info.plan);
                     dropped += before - q.len();
                 }
-                self.plans[p].cancelled += dropped;
+                self.plan_mut(info.plan).cancelled += dropped;
             }
         }
-        let plan = &mut self.plans[info.plan];
-        if plan.record_responses {
-            plan.responses.push(Retired {
+        if self.plan(info.plan).record_responses {
+            let retired = Retired {
                 key: info.pub_key,
                 tag: info.tag,
                 instr: rec.instr.clone(),
                 time: rec.time,
-            });
+            };
+            self.plan_mut(info.plan).responses.push(retired);
         }
         let cmds = match self.next_cmd(info.slot, rec.time) {
             Some(cmd) => vec![cmd],
@@ -400,14 +465,18 @@ impl State {
     /// Late retransmit echoes for a reclaimed plan simply read as
     /// foreign completions and are ignored.
     fn reclaim_if_settled(&mut self, plan: usize) {
-        let p = &self.plans[plan];
-        if p.reclaimed || p.inflight > 0 || p.done + p.cancelled < p.ops {
-            return;
+        {
+            let p = self.plan(plan);
+            if p.reclaimed || p.inflight > 0 || p.done + p.cancelled < p.ops {
+                return;
+            }
         }
-        let p = &mut self.plans[plan];
-        p.reclaimed = true;
-        let slots = std::mem::take(&mut p.slots);
-        let keys = std::mem::take(&mut p.keys);
+        let (slots, keys) = {
+            let p = self.plan_mut(plan);
+            p.reclaimed = true;
+            p.pacer = None;
+            (std::mem::take(&mut p.slots), std::mem::take(&mut p.keys))
+        };
         for k in keys {
             self.keys.remove(&k);
             self.retired.remove(&k);
@@ -451,6 +520,7 @@ impl EngineSession {
                 max_inflight: 0,
                 duplicates: 0,
                 plans: Vec::new(),
+                free_plans: Vec::new(),
                 active_plans: 0,
                 max_concurrent_plans: 0,
                 pace: PaceMode::None,
@@ -487,6 +557,35 @@ impl EngineSession {
         record_responses: bool,
         window: usize,
     ) -> Result<PlanId> {
+        self.submit_with_pacer(cl, eng, ops, record_responses, window, None)
+    }
+
+    /// [`submit`](Self::submit) with a plan-private token bucket: every
+    /// injection of *this plan* reserves its `pace_bytes` from `bucket`
+    /// before release, independent of the session's pacing mode and of
+    /// every other plan. This is how a paced pooled-memory batch rides a
+    /// shared fabric session without rate-limiting its neighbors.
+    pub fn submit_paced(
+        &mut self,
+        cl: &mut Cluster,
+        eng: &mut Engine<Cluster>,
+        ops: Vec<WindowedOp>,
+        record_responses: bool,
+        window: usize,
+        bucket: TokenBucket,
+    ) -> Result<PlanId> {
+        self.submit_with_pacer(cl, eng, ops, record_responses, window, Some(bucket))
+    }
+
+    fn submit_with_pacer(
+        &mut self,
+        cl: &mut Cluster,
+        eng: &mut Engine<Cluster>,
+        ops: Vec<WindowedOp>,
+        record_responses: bool,
+        window: usize,
+        pacer: Option<TokenBucket>,
+    ) -> Result<PlanId> {
         let window = window.max(1);
         if !self.hooked {
             ensure!(
@@ -500,10 +599,10 @@ impl EngineSession {
             self.hooked = true;
         }
         let plan_id;
+        let plan_gen;
         let mut kicks = Vec::new();
         {
             let mut st = self.state.borrow_mut();
-            plan_id = st.plans.len();
             // Map the plan's local slots onto session slots: every plan
             // windows independently even when two tenants name the same
             // peer.
@@ -535,6 +634,19 @@ impl EngineSession {
                 st.queues.len() + new_slots <= MAX_SLOTS,
                 "window engine slot space exhausted"
             );
+            // Validation passed — allocate the plan's slab slot (recycling
+            // a released one when available).
+            plan_id = match st.free_plans.pop() {
+                Some(idx) => idx,
+                None => {
+                    st.plans.push(PlanSlot {
+                        gen: 0,
+                        state: None,
+                    });
+                    st.plans.len() - 1
+                }
+            };
+            plan_gen = st.plans[plan_id].gen;
             st.keys.extend(fresh_set);
             for (op, key) in ops.into_iter().zip(fresh.iter().copied()) {
                 let slot = match slot_map.get(&op.slot) {
@@ -565,7 +677,7 @@ impl EngineSession {
                     pkt: op.pkt,
                 });
             }
-            st.plans.push(PlanState {
+            st.plans[plan_id].state = Some(PlanState {
                 ops: n_ops,
                 done: 0,
                 inflight: 0,
@@ -578,6 +690,7 @@ impl EngineSession {
                 cancelled: 0,
                 record_responses,
                 responses: Vec::new(),
+                pacer,
             });
             // Kick the plan's initial windows.
             let now = eng.now();
@@ -593,7 +706,10 @@ impl EngineSession {
         for cmd in kicks {
             cl.inject_cmd(eng, cmd);
         }
-        Ok(PlanId(plan_id))
+        Ok(PlanId {
+            idx: plan_id,
+            gen: plan_gen,
+        })
     }
 
     /// Run the DES until it drains. Every submitted plan makes progress
@@ -605,14 +721,14 @@ impl EngineSession {
     /// Has every op of `plan` retired?
     pub fn is_complete(&self, plan: PlanId) -> bool {
         let st = self.state.borrow();
-        let p = &st.plans[plan.0];
+        let p = st.checked(plan);
         p.done == p.ops
     }
 
     /// Has `plan` stopped (all retired, or NAK-cancelled and drained)?
     pub fn is_settled(&self, plan: PlanId) -> bool {
         let st = self.state.borrow();
-        let p = &st.plans[plan.0];
+        let p = st.checked(plan);
         p.done + p.cancelled == p.ops && p.inflight == 0
     }
 
@@ -620,7 +736,7 @@ impl EngineSession {
     /// without consuming its recorded responses.
     pub fn progress(&self, plan: PlanId) -> (usize, usize, SimTime) {
         let st = self.state.borrow();
-        let p = &st.plans[plan.0];
+        let p = st.checked(plan);
         (p.done, p.ops, p.last_done)
     }
 
@@ -628,7 +744,7 @@ impl EngineSession {
     /// given plan once).
     pub fn outcome(&mut self, plan: PlanId) -> PlanOutcome {
         let mut st = self.state.borrow_mut();
-        let p = &mut st.plans[plan.0];
+        let p = st.checked_mut(plan);
         PlanOutcome {
             ops: p.ops,
             done: p.done,
@@ -638,6 +754,53 @@ impl EngineSession {
             cancelled: p.cancelled,
             responses: std::mem::take(&mut p.responses),
         }
+    }
+
+    /// Drop a settled plan's bookkeeping and recycle its slab slot. After
+    /// this the id is stale: further accessor calls with it panic, and a
+    /// fresh submit may reuse the slot under a bumped generation. Errors
+    /// if the plan still has ops queued or in flight (release after
+    /// [`is_settled`](Self::is_settled), typically after redeeming
+    /// [`outcome`](Self::outcome)), or if the id is already stale.
+    pub fn release(&mut self, plan: PlanId) -> Result<()> {
+        let mut st = self.state.borrow_mut();
+        ensure!(
+            st.plans
+                .get(plan.idx)
+                .is_some_and(|s| s.gen == plan.gen && s.state.is_some()),
+            "stale plan id (already released)"
+        );
+        {
+            let p = st.plan(plan.idx);
+            ensure!(
+                p.inflight == 0 && p.done + p.cancelled == p.ops,
+                "plan not settled; cannot release"
+            );
+        }
+        // Frees slots/keys if the plan never went through the completion
+        // path (e.g. an empty plan).
+        st.reclaim_if_settled(plan.idx);
+        let slot = &mut st.plans[plan.idx];
+        slot.state = None;
+        slot.gen = slot.gen.wrapping_add(1);
+        st.free_plans.push(plan.idx);
+        Ok(())
+    }
+
+    /// Slab length (live + recyclable holes) — the memory-compaction
+    /// regression tests assert this stays bounded on long sessions.
+    pub fn plan_slab_len(&self) -> usize {
+        self.state.borrow().plans.len()
+    }
+
+    /// Plans currently holding live bookkeeping (not yet released).
+    pub fn live_plans(&self) -> usize {
+        self.state
+            .borrow()
+            .plans
+            .iter()
+            .filter(|s| s.state.is_some())
+            .count()
     }
 
     /// High-water mark of plans simultaneously in flight — ≥ 2 proves

@@ -31,6 +31,28 @@ impl Running {
         self.max = self.max.max(x);
     }
 
+    /// Fold another accumulator into this one (Chan et al.'s parallel
+    /// variance update) — used when per-shard metrics merge at the end of
+    /// a sharded run.
+    pub fn merge(&mut self, other: &Running) {
+        if other.n == 0 {
+            return;
+        }
+        if self.n == 0 {
+            *self = other.clone();
+            return;
+        }
+        let na = self.n as f64;
+        let nb = other.n as f64;
+        let d = other.mean - self.mean;
+        let n = na + nb;
+        self.mean += d * (nb / n);
+        self.m2 += other.m2 + d * d * (na * nb / n);
+        self.n += other.n;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+
     pub fn count(&self) -> u64 {
         self.n
     }
@@ -109,6 +131,36 @@ mod tests {
         assert_eq!(r.min(), 2.0);
         assert_eq!(r.max(), 9.0);
         assert_eq!(r.count(), 8);
+    }
+
+    #[test]
+    fn merge_matches_single_stream() {
+        let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        let mut whole = Running::new();
+        let mut a = Running::new();
+        let mut b = Running::new();
+        for (i, &x) in xs.iter().enumerate() {
+            whole.push(x);
+            if i < 3 {
+                a.push(x);
+            } else {
+                b.push(x);
+            }
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), whole.count());
+        assert!((a.mean() - whole.mean()).abs() < 1e-12);
+        assert!((a.variance() - whole.variance()).abs() < 1e-12);
+        assert_eq!(a.min(), whole.min());
+        assert_eq!(a.max(), whole.max());
+        // Merging an empty accumulator is a no-op in both directions.
+        let empty = Running::new();
+        let before = a.mean();
+        a.merge(&empty);
+        assert_eq!(a.mean(), before);
+        let mut e2 = Running::new();
+        e2.merge(&whole);
+        assert_eq!(e2.count(), whole.count());
     }
 
     #[test]

@@ -239,6 +239,58 @@ fn ireduce_lands_the_sum_at_root_via_the_session() {
     }
 }
 
+/// A token-bucket-paced memory client rides the SHARED session (it used
+/// to be rejected with `MemError::Plan`): its plan throttles to the
+/// configured rate as a plan-private pacer, while an unpaced neighbor
+/// on the same session flows at full rate.
+#[test]
+fn paced_mem_batch_rides_the_shared_session() {
+    let bytes = 64 << 10;
+    let mut f = Fabric::builder()
+        .star(4)
+        .hosts(2)
+        .seed(0x9ACE)
+        .with_pool(1 << 20)
+        .build()
+        .unwrap();
+    let client = f.mem_client().unwrap();
+    let lease = f.malloc(client.tenant, bytes as u64, true).unwrap();
+    let data: Vec<u8> = (0..bytes).map(|i| (i * 11 % 253) as u8).collect();
+    f.mem_write(&client, lease.gva, &data).unwrap();
+    let t0 = f.now();
+    assert_eq!(f.mem_read(&client, lease.gva, bytes).unwrap(), data);
+    let unpaced_ns = f.now() - t0;
+
+    // 8 Gbps = 1 B/ns with an 8 KiB burst: 64 KiB must take at least
+    // (64 - 8) KiB of refill time — same bound as the standalone paced
+    // runner, now enforced on the shared session.
+    let paced = client.clone_with_pace(8.0, 8 << 10);
+    let t0 = f.now();
+    assert_eq!(f.mem_read(&paced, lease.gva, bytes).unwrap(), data);
+    let paced_ns = f.now() - t0;
+    assert!(
+        paced_ns >= (56 << 10) as u64,
+        "paced session read finished in {paced_ns} ns — faster than the bucket allows"
+    );
+    assert!(paced_ns > unpaced_ns, "pacing must actually throttle");
+
+    // The pacer is plan-private: an unpaced neighbor submitted alongside
+    // a paced plan completes at full speed (well before the paced plan).
+    let neighbor = f.mem_client().unwrap();
+    let n_lease = f.malloc(neighbor.tenant, bytes as u64, true).unwrap();
+    let mut nb = neighbor.batch();
+    nb.write(f.cluster_mut(), n_lease.gva, &data);
+    let mut pb = paced.batch();
+    let pr = pb.read(f.cluster_mut(), lease.gva, bytes);
+    let hp = f.submit_mem(pb).unwrap();
+    let hn = f.submit_mem(nb).unwrap();
+    assert!(f.max_concurrent_plans() >= 2);
+    f.wait_mem(hn).unwrap();
+    let mut res = f.wait_mem(hp).unwrap();
+    assert_eq!(res.take_read(pr).unwrap(), data);
+    assert_eq!(f.mem_read(&neighbor, n_lease.gva, bytes).unwrap(), data);
+}
+
 /// Reliability still holds on the shared session: two tenants, lossy
 /// fabric, reliable communicators — both converge exactly.
 #[test]

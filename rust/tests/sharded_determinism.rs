@@ -1,0 +1,177 @@
+//! Determinism proofs for the sharded parallel DES core: the same seed
+//! must produce **bit-identical** results at any shard count and thread
+//! count — including under loss, where the per-link RNG partitioning is
+//! doing the heavy lifting — and the classic single-heap engine must
+//! stay report-compatible with the single-shard partitioned run on a
+//! loss-free fabric.
+
+use netdam::collectives::{naive_sum, AlgoKind, CollectiveReport};
+use netdam::comm::Fabric;
+
+/// A lossy, reliable ring allreduce on the 2-pod fat-tree, driven
+/// through the sharded core. Returns the bench-facing report plus every
+/// rank's final vector.
+fn lossy_fat_tree_run(shards: usize, threads: usize) -> (CollectiveReport, Vec<Vec<f32>>) {
+    let elements = 8 * 512;
+    let mut f = Fabric::builder()
+        .fat_tree(2, 4, 2)
+        .seed(0xD15C)
+        .reliable(true)
+        .loss(0.05)
+        .window(4)
+        .with_shards(shards)
+        .shard_threads(threads)
+        .build()
+        .unwrap();
+    let comm = f.communicator(elements as u64 * 4).unwrap();
+    let grads = comm.seed_gradients_exact(&mut f, elements, 0x5EED);
+    let h = comm.iallreduce(&mut f, elements).unwrap();
+    let out = f.wait(h).unwrap();
+    assert!(
+        out.complete(),
+        "shards={shards}: {}/{} ops",
+        out.ops_done,
+        out.ops
+    );
+    let report = f.report(&out);
+    let oracle = naive_sum(&grads);
+    let mut vecs = Vec::with_capacity(f.ranks());
+    for r in 0..f.ranks() {
+        let v = comm.read_vector(&mut f, r, elements).unwrap();
+        assert_eq!(v, oracle, "shards={shards}: rank {r} diverged from oracle");
+        vecs.push(v);
+    }
+    assert!(f.sharded_events() > 0, "the sharded core actually ran");
+    (report, vecs)
+}
+
+/// Same seed ⇒ bit-identical `CollectiveReport` (and per-rank data) at
+/// shard counts 1, 2 and 4 — with loss and retransmits in play.
+#[test]
+fn lossy_allreduce_reports_identical_across_shard_counts() {
+    let (r1, v1) = lossy_fat_tree_run(1, 1);
+    let (r2, v2) = lossy_fat_tree_run(2, 1);
+    let (r4, v4) = lossy_fat_tree_run(4, 1);
+    assert!(r1.link_drops > 0, "the loss model never fired: {r1:?}");
+    assert!(r1.retransmits > 0, "loss recovered without retransmits?");
+    assert_eq!(r1, r2, "1 vs 2 shards");
+    assert_eq!(r1, r4, "1 vs 4 shards");
+    assert_eq!(v1, v2);
+    assert_eq!(v1, v4);
+}
+
+/// Thread count is an execution detail, not a semantic knob: serial and
+/// threaded runs of the same partition are bit-identical, and a repeated
+/// run reproduces itself exactly.
+#[test]
+fn lossy_allreduce_invariant_to_threads_and_repetition() {
+    let (serial, vs) = lossy_fat_tree_run(4, 1);
+    let (threaded, vt) = lossy_fat_tree_run(4, 2);
+    let (again, va) = lossy_fat_tree_run(4, 1);
+    assert_eq!(serial, threaded, "1 vs 2 worker threads");
+    assert_eq!(serial, again, "repeat run");
+    assert_eq!(vs, vt);
+    assert_eq!(vs, va);
+}
+
+/// Loss-free, the classic single-heap engine and the single-shard
+/// partitioned core agree at the report level: same elapsed time, same
+/// (zero) drop and retransmit counters, same data. (Under loss the two
+/// draw from different RNG stream layouts by design — cross-shard-count
+/// comparisons above are the lossy determinism proof.)
+#[test]
+fn classic_engine_and_single_shard_core_agree_loss_free() {
+    let run = |shards: usize| -> (CollectiveReport, Vec<f32>) {
+        let elements = 4 * 1024;
+        let mut f = Fabric::builder()
+            .star(4)
+            .seed(0xACE)
+            .with_shards(shards) // 0 = classic single-heap engine
+            .build()
+            .unwrap();
+        let comm = f.communicator(elements as u64 * 4).unwrap();
+        let grads = comm.seed_gradients_exact(&mut f, elements, 0xE);
+        let h = comm.iallreduce(&mut f, elements).unwrap();
+        let out = f.wait(h).unwrap();
+        assert!(out.complete());
+        let v = comm.read_vector(&mut f, 0, elements).unwrap();
+        assert_eq!(v, naive_sum(&grads));
+        (f.report(&out), v)
+    };
+    let (classic, vc) = run(0);
+    let (sharded, vs) = run(1);
+    assert_eq!(classic, sharded, "classic vs with_shards(1)");
+    assert_eq!(vc, vs);
+}
+
+/// A pooled-memory batch (write, scatter-gather read, CAS) through the
+/// shared session on a lossy fabric: bit-identical `BatchResult`, final
+/// clock, and retransmit count at shard counts 1, 2 and 4.
+#[test]
+fn pooled_mem_batch_identical_across_shard_counts() {
+    let data: Vec<u8> = (0..64 << 10).map(|i| (i * 37 % 251) as u8).collect();
+    let run = |shards: usize| {
+        let mut f = Fabric::builder()
+            .star(4)
+            .hosts(1)
+            .seed(0x3E3)
+            .reliable(true)
+            .loss(0.02)
+            .window(4)
+            .with_pool(1 << 20)
+            .with_shards(shards)
+            .shard_threads(1)
+            .build()
+            .unwrap();
+        let client = f.mem_client().unwrap();
+        let lease = f.malloc(client.tenant, 64 << 10, true).unwrap();
+        let scratch = f.malloc(client.tenant, 8192, true).unwrap();
+        f.mem_write(&client, lease.gva, &data).unwrap();
+        let mut b = client.batch();
+        let hr = b.read(f.cluster_mut(), lease.gva, 32 << 10);
+        let hc = b.cas(f.cluster_mut(), scratch.gva, 0, 99).unwrap();
+        let h = f.submit_mem(b).unwrap();
+        let mut res = f.wait_mem(h).unwrap();
+        assert_eq!(
+            res.cas_outcome(hc),
+            Some((0, true)),
+            "shards={shards}: CAS must win on the zeroed scratch word"
+        );
+        let end = f.now();
+        let retransmits = f.cluster().xport.retransmits;
+        let got = res.take_read(hr).unwrap();
+        assert_eq!(got, data[..32 << 10], "shards={shards}: read-back");
+        (got, end, retransmits)
+    };
+    let r1 = run(1);
+    let r2 = run(2);
+    let r4 = run(4);
+    assert!(r1.2 > 0, "the lossy sweep never exercised a retransmit");
+    assert_eq!(r1, r2, "1 vs 2 shards");
+    assert_eq!(r1, r4, "1 vs 4 shards");
+}
+
+/// The scale target: a 1024-rank fat-tree allreduce completes through
+/// the sharded core (halving-doubling: log₂ N phases keeps the debug
+/// build fast; the `sim` bench runs the full ring at this scale).
+#[test]
+fn allreduce_1024_ranks_completes_through_the_sharded_core() {
+    let ranks = 1024usize;
+    let elements = 2 * ranks;
+    let mut f = Fabric::builder()
+        .fat_tree(32, 32, 8)
+        .timing_only(true)
+        .seed(0x400)
+        .with_shards(8)
+        .build()
+        .unwrap();
+    assert_eq!(f.ranks(), ranks);
+    let comm = f.communicator(elements as u64 * 4).unwrap();
+    let h = comm
+        .icollective(&mut f, AlgoKind::HalvingDoubling, elements, 0)
+        .unwrap();
+    let out = f.wait(h).unwrap();
+    assert!(out.complete(), "{}/{} ops", out.ops_done, out.ops);
+    assert!(out.elapsed_ns() > 0);
+    assert!(f.sharded_events() > 0);
+}

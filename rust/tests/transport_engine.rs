@@ -334,3 +334,108 @@ fn mixed_key_flavors_coexist() {
     assert_eq!(dones, 6);
     assert_eq!(acks, 12);
 }
+
+/// Memory-compaction regression: a long-lived session that submits,
+/// drains, and releases plans sequentially must not accumulate per-plan
+/// bookkeeping — the slab stays at one slot (recycled every round) and
+/// the slot space stays bounded by concurrency, not history.
+#[test]
+fn released_plans_recycle_slab_slots() {
+    let t = Topology::star(0xC0DE, 4, 1, LinkConfig::dc_100g());
+    let mut cl = t.cluster;
+    let mut eng: Engine<Cluster> = Engine::new();
+    let ips: Vec<DeviceIp> = (1..=4).map(DeviceIp::lan).collect();
+    let mut session = EngineSession::new(4);
+    for round in 0..60 {
+        let ops = seq_ops(&mut cl, t.hosts[0], DeviceIp::lan(101), &ips, 8, 128);
+        let plan = session.submit(&mut cl, &mut eng, ops, false, 4).unwrap();
+        session.drive(&mut cl, &mut eng);
+        assert!(session.is_complete(plan), "round {round} drained");
+        let out = session.outcome(plan);
+        assert_eq!(out.done, 8);
+        session.release(plan).unwrap();
+        assert_eq!(session.live_plans(), 0, "round {round}: nothing live");
+    }
+    assert_eq!(
+        session.plan_slab_len(),
+        1,
+        "60 sequential plans must reuse one slab slot"
+    );
+    session.close(&mut cl);
+}
+
+/// `release` refuses unsettled plans and stale (already released) ids.
+#[test]
+fn release_refuses_unsettled_and_stale_ids() {
+    let t = Topology::star(0xF00D, 2, 1, LinkConfig::dc_100g());
+    let mut cl = t.cluster;
+    let mut eng: Engine<Cluster> = Engine::new();
+    let mut session = EngineSession::new(2);
+    let ops = seq_ops(
+        &mut cl,
+        t.hosts[0],
+        DeviceIp::lan(101),
+        &[DeviceIp::lan(1)],
+        4,
+        64,
+    );
+    let plan = session.submit(&mut cl, &mut eng, ops, false, 2).unwrap();
+    // Not driven yet: ops are queued/in flight, so release must refuse.
+    assert!(session.release(plan).is_err(), "unsettled plan released");
+    session.drive(&mut cl, &mut eng);
+    assert!(session.is_settled(plan));
+    session.release(plan).unwrap();
+    // Second release sees a stale id.
+    assert!(session.release(plan).is_err(), "stale id released twice");
+    session.close(&mut cl);
+}
+
+/// A plan-private pacer throttles its own plan and nobody else: the paced
+/// plan's release log obeys its bucket while an unpaced plan on the same
+/// session flows freely.
+#[test]
+fn plan_private_pacer_rides_an_unpaced_session() {
+    let t = Topology::star(0xBEEF, 4, 1, LinkConfig::dc_100g());
+    let mut cl = t.cluster;
+    let mut eng: Engine<Cluster> = Engine::new();
+    let ips: Vec<DeviceIp> = (1..=4).map(DeviceIp::lan).collect();
+    let paced_ops = seq_ops(&mut cl, t.hosts[0], DeviceIp::lan(101), &ips, 32, 1024);
+    let free_ops = done_ops(&mut cl, t.devices[0], ips[0], ips[1], 6);
+    let mut session = EngineSession::new(8);
+    // 8 Gbps = 1 B/ns, 4 KiB burst — 32 KiB of paced ops must spill
+    // past the burst and get deferred releases.
+    let (rate_bpns, burst) = (1.0f64, 4096usize);
+    let paced = session
+        .submit_paced(
+            &mut cl,
+            &mut eng,
+            paced_ops,
+            false,
+            8,
+            TokenBucket::new(8.0, burst),
+        )
+        .unwrap();
+    let free = session.submit(&mut cl, &mut eng, free_ops, false, 8).unwrap();
+    session.drive(&mut cl, &mut eng);
+    assert!(session.is_complete(paced) && session.is_complete(free));
+    let releases = session.releases();
+    assert!(
+        !releases.is_empty(),
+        "paced plan must log its bucket releases"
+    );
+    let mut rel: Vec<(u64, usize)> = releases.iter().map(|&(_, at, b)| (at, b)).collect();
+    rel.sort_unstable();
+    let mut cum = 0usize;
+    for &(at, bytes) in &rel {
+        cum += bytes;
+        assert!(
+            cum as f64 <= burst as f64 + rate_bpns * at as f64 + 2.0,
+            "paced plan exceeded its private bucket: {cum} B by t={at}"
+        );
+    }
+    assert!(
+        rel.iter().any(|&(at, _)| at > 0),
+        "32 KiB must overrun a 4 KiB burst"
+    );
+    session.close(&mut cl);
+}
