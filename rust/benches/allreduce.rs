@@ -167,6 +167,84 @@ fn main() {
     }
     println!("{}", table.render());
 
+    // --- grid 3: in-network aggregation head-to-head — switch-reduce
+    // vs the 2-level hierarchical allreduce on the same 2-pod fat-tree
+    // (`for_algo` builds fat_tree(2, ranks/2, 2) for both), across
+    // vector sizes, leaf fanins, and loss rates. Both are allreduces,
+    // so bus bw == algo bw and the comparison is apples-to-apples.
+    println!("\n## in-network aggregation: switch-reduce vs hierarchical-2level\n");
+    let sr_sizes: &[usize] = if smoke {
+        &[1 << 14]
+    } else {
+        &[1 << 18, 1 << 20, 1 << 22]
+    };
+    let fanins: &[usize] = if smoke { &[2] } else { &[2, 4] };
+    let mut table = Table::new(&[
+        "algorithm",
+        "ranks",
+        "fanin",
+        "loss",
+        "elements",
+        "time",
+        "algo bw (Gbit/s)",
+        "retransmits",
+    ]);
+    for &per_leaf in fanins {
+        let ranks = 2 * per_leaf;
+        for &elements in sr_sizes {
+            for &(loss_p, reliable) in &[(0.0f64, false), (0.01, true)] {
+                let mut bw = [0.0f64; 2];
+                for (arm, kind) in [AlgoKind::Hierarchical, AlgoKind::SwitchReduce]
+                    .into_iter()
+                    .enumerate()
+                {
+                    let opts = RunOpts {
+                        elements,
+                        ranks,
+                        seed: 0xA66,
+                        window: 32,
+                        timing_only: true,
+                        reliable,
+                        loss_p,
+                    };
+                    let r = run_collective(kind, &opts).expect("collective run");
+                    let algo_bw = r.algo_bw_gbps(ranks);
+                    bw[arm] = algo_bw;
+                    table.row(&[
+                        r.algorithm.to_string(),
+                        ranks.to_string(),
+                        per_leaf.to_string(),
+                        format!("{loss_p:.2}"),
+                        elements.to_string(),
+                        fmt_ns(r.elapsed_ns),
+                        format!("{algo_bw:.1}"),
+                        r.retransmits.to_string(),
+                    ]);
+                    json_rows.push(format!(
+                        "    {{\"algorithm\": \"{}\", \"elements\": {}, \"ranks\": {}, \
+                         \"fanin\": {}, \"loss_p\": {:.3}, \"elapsed_ns\": {}, \
+                         \"bw_fraction\": {:.4}, \"bus_bw_gbps\": {:.3}, \"retransmits\": {}}}",
+                        r.algorithm,
+                        elements,
+                        ranks,
+                        per_leaf,
+                        loss_p,
+                        r.elapsed_ns,
+                        kind.bw_fraction(ranks),
+                        algo_bw,
+                        r.retransmits
+                    ));
+                }
+                println!(
+                    "fanin {per_leaf}, {elements} elems, loss {loss_p:.2}: \
+                     switch-reduce/hierarchical bw = {:.2}x",
+                    bw[1] / bw[0].max(1e-9)
+                );
+            }
+        }
+    }
+    println!("\n{}", table.render());
+
     let json = format!(
         "{{\n  \"bench\": \"allreduce\",\n  \"ranks\": {ranks},\n  \"smoke\": {smoke},\n  \"results\": [\n{}\n  ]\n}}\n",
         json_rows.join(",\n")

@@ -52,6 +52,8 @@ use super::netdam_ring::RingAllreduce;
 use super::primitives::{RingAllGather, RingBroadcast};
 use super::reduce::RingReduce;
 use super::ring_roce::RingRoceAllreduce;
+use super::switch_reduce::SwitchReduceAllreduce;
+use super::tree::TreeBroadcast;
 use super::CollectiveReport;
 
 /// Knobs shared by every driver-run collective.
@@ -67,6 +69,9 @@ pub struct CollectiveSpec {
     pub reliable: bool,
     /// Device-local base address of the vector.
     pub base_addr: u64,
+    /// Tenant the collective runs under. Carried in aggregation
+    /// metadata so switch ACLs (§2.5) can police contributions.
+    pub tenant: u32,
 }
 
 impl Default for CollectiveSpec {
@@ -77,8 +82,25 @@ impl Default for CollectiveSpec {
             window: 16,
             reliable: false,
             base_addr: 0,
+            tenant: 0,
         }
     }
+}
+
+/// Topology facts a planner may consult: the leaf membership of each
+/// rank plus — when the topology addresses its switches — the SROU IPs
+/// of the leaf and spine tiers, in tier order. The switch-reduce
+/// planner needs the IPs to pin aggregation waypoints; topologies
+/// without addressed switches (star) leave them empty and such
+/// planners refuse to run there.
+#[derive(Debug, Clone, Default)]
+pub struct TopoFacts {
+    /// Device rank indices grouped by leaf switch (empty off fat-tree).
+    pub leaf_groups: Vec<Vec<usize>>,
+    /// SROU address of each leaf switch, same order as `leaf_groups`.
+    pub leaf_ips: Vec<DeviceIp>,
+    /// SROU address of each spine switch.
+    pub spine_ips: Vec<DeviceIp>,
 }
 
 /// What a planner sees when generating one phase.
@@ -261,6 +283,14 @@ pub(crate) fn lower_schedule(
     for mut op in ops {
         ensure!(op.rank < n_ranks, "op rank {} out of range", op.rank);
         op.pkt.seq = cl.alloc_seq(devices[op.rank]);
+        // Aggregation manifests carry the contributor's (src, seq) so the
+        // root collector can ack each origin; planners cannot know the seq
+        // at plan time, so they leave a 0 placeholder we patch here.
+        if let Some(agg) = op.pkt.agg.as_mut() {
+            for e in agg.entries.iter_mut().filter(|e| e.seq == 0) {
+                e.seq = op.pkt.seq;
+            }
+        }
         wops.push(WindowedOp {
             slot: op.rank,
             origin: devices[op.rank],
@@ -401,6 +431,12 @@ pub enum AlgoKind {
     Broadcast,
     /// Rooted reduce: the whole vector summed at the root rank.
     Reduce,
+    /// In-network allreduce: leaf/spine switches fold marked
+    /// contributions in flight (§2.5), the root broadcasts back down a
+    /// binomial tree — for the `fat_tree` topology.
+    SwitchReduce,
+    /// Binomial-tree broadcast of the root rank's vector.
+    TreeBcast,
     /// Host baseline: Horovod-style ring allreduce over RoCE hosts.
     RingRoce,
     /// Host baseline: native-MPI recursive doubling.
@@ -408,13 +444,15 @@ pub enum AlgoKind {
 }
 
 impl AlgoKind {
-    pub const ALL: [AlgoKind; 9] = [
+    pub const ALL: [AlgoKind; 11] = [
         AlgoKind::NetdamRing,
         AlgoKind::HalvingDoubling,
         AlgoKind::Hierarchical,
+        AlgoKind::SwitchReduce,
         AlgoKind::ReduceScatter,
         AlgoKind::AllGather,
         AlgoKind::Broadcast,
+        AlgoKind::TreeBcast,
         AlgoKind::Reduce,
         AlgoKind::RingRoce,
         AlgoKind::MpiNative,
@@ -425,6 +463,8 @@ impl AlgoKind {
             AlgoKind::NetdamRing => "netdam-ring",
             AlgoKind::HalvingDoubling => "halving-doubling",
             AlgoKind::Hierarchical => "hierarchical-2level",
+            AlgoKind::SwitchReduce => "switch-reduce",
+            AlgoKind::TreeBcast => "tree-bcast",
             AlgoKind::ReduceScatter => "reduce-scatter",
             AlgoKind::AllGather => "all-gather",
             AlgoKind::Broadcast => "broadcast",
@@ -440,6 +480,8 @@ impl AlgoKind {
             "netdam-ring" | "ring" | "netdam" => AlgoKind::NetdamRing,
             "halving-doubling" | "hd" => AlgoKind::HalvingDoubling,
             "hierarchical-2level" | "hierarchical" | "2level" => AlgoKind::Hierarchical,
+            "switch-reduce" | "sr" | "innet" => AlgoKind::SwitchReduce,
+            "tree-bcast" | "tbcast" | "binomial-bcast" => AlgoKind::TreeBcast,
             "reduce-scatter" | "rs" => AlgoKind::ReduceScatter,
             "all-gather" | "ag" | "allgather" => AlgoKind::AllGather,
             "broadcast" | "bcast" => AlgoKind::Broadcast,
@@ -473,21 +515,22 @@ impl AlgoKind {
             AlgoKind::NetdamRing
             | AlgoKind::HalvingDoubling
             | AlgoKind::Hierarchical
+            | AlgoKind::SwitchReduce
             | AlgoKind::RingRoce
             | AlgoKind::MpiNative => 2.0 * (n - 1.0) / n,
             AlgoKind::ReduceScatter | AlgoKind::AllGather => (n - 1.0) / n,
-            AlgoKind::Broadcast | AlgoKind::Reduce => 1.0,
+            AlgoKind::Broadcast | AlgoKind::TreeBcast | AlgoKind::Reduce => 1.0,
         }
     }
 
     /// Construct the schedule generator for a device-run collective.
-    /// `leaf_groups` feeds the hierarchical planner; `root` the rooted
-    /// collectives (broadcast, reduce). Host baselines have no device
-    /// planner and error here.
+    /// `topo` feeds the topology-aware planners (hierarchical,
+    /// switch-reduce); `root` the rooted collectives (broadcast,
+    /// reduce). Host baselines have no device planner and error here.
     pub fn planner(
         self,
         ranks: usize,
-        leaf_groups: &[Vec<usize>],
+        topo: &TopoFacts,
         root: usize,
     ) -> Result<Box<dyn CollectiveAlgorithm>> {
         let algo: Box<dyn CollectiveAlgorithm> = match self {
@@ -495,10 +538,12 @@ impl AlgoKind {
             AlgoKind::ReduceScatter => Box::new(RingAllreduce { fused: false }),
             AlgoKind::HalvingDoubling => Box::new(HalvingDoubling::new(ranks)?),
             AlgoKind::Hierarchical => {
-                Box::new(HierarchicalAllreduce::new(leaf_groups.to_vec())?)
+                Box::new(HierarchicalAllreduce::new(topo.leaf_groups.to_vec())?)
             }
+            AlgoKind::SwitchReduce => Box::new(SwitchReduceAllreduce::new(topo.clone())?),
             AlgoKind::AllGather => Box::new(RingAllGather),
             AlgoKind::Broadcast => Box::new(RingBroadcast { root }),
+            AlgoKind::TreeBcast => Box::new(TreeBroadcast { root, ranks }),
             AlgoKind::Reduce => Box::new(RingReduce { root }),
             AlgoKind::RingRoce | AlgoKind::MpiNative => anyhow::bail!(
                 "{} is a host baseline (no device planner)",

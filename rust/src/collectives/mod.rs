@@ -14,7 +14,9 @@
 //! | [`netdam_ring::RingAllreduce`] | in-memory ALU, SROU-chained | single-phase ring, fused all-gather |
 //! | [`halving_doubling::HalvingDoubling`] | in-memory ALU | 2·log₂N rounds, latency-optimal |
 //! | [`hierarchical::HierarchicalAllreduce`] | in-memory ALU | leaf reduce → leader ring → leaf broadcast |
+//! | [`switch_reduce::SwitchReduceAllreduce`] | **in the switches** (§2.5) | leaf/spine aggregation tree → binomial down-broadcast |
 //! | [`primitives::RingAllGather`] / [`primitives::RingBroadcast`] | — (pure writes) | standalone primitives |
+//! | [`tree::TreeBroadcast`] | — (pure writes) | binomial tree, ⌈log₂N⌉ rounds |
 //! | [`reduce::RingReduce`] | in-memory ALU | rooted ring reduce: every chain ends at the root |
 //! | [`ring_roce::RingRoceAllreduce`] | host CPU after PCIe DMA | Horovod-style baseline |
 //! | [`mpi_native::MpiRecursiveDoubling`] | host CPU, full vector/round | native-MPI baseline |
@@ -28,10 +30,12 @@ pub mod oracle;
 pub mod primitives;
 pub mod reduce;
 pub mod ring_roce;
+pub mod switch_reduce;
+pub mod tree;
 
 pub use driver::{
     lower_ring_chunk, lower_store_chain, prog_env, run_collective, AlgoKind, CollectiveAlgorithm,
-    CollectiveSpec, Driver, DriverOutcome, Phase, PlanCtx, RunOpts, ScheduledOp,
+    CollectiveSpec, Driver, DriverOutcome, Phase, PlanCtx, RunOpts, ScheduledOp, TopoFacts,
 };
 pub use halving_doubling::HalvingDoubling;
 pub use hierarchical::HierarchicalAllreduce;
@@ -41,6 +45,8 @@ pub use oracle::{
 };
 pub use primitives::{RingAllGather, RingBroadcast};
 pub use reduce::RingReduce;
+pub use switch_reduce::SwitchReduceAllreduce;
+pub use tree::TreeBroadcast;
 
 use crate::sim::SimTime;
 

@@ -181,6 +181,7 @@ pub fn run_ring_allreduce(
         window: spec.window,
         reliable: spec.reliable,
         base_addr: spec.base_addr,
+        ..Default::default()
     };
     let mut algo = RingAllreduce { fused: spec.fused };
     let out = Driver::run(cl, eng, devices, &mut algo, &cspec)?;

@@ -1,0 +1,310 @@
+//! In-network allreduce over the switch aggregation engine (§2.5).
+//!
+//! On a `fat_tree` the reduction tree is the physical tree: every
+//! non-root rank sends its block **once**, marked [`crate::isa::Flags::AGG`],
+//! along the SROU path `leaf → spine → root`. The leaf switch folds its
+//! pod's contributions into one packet (expected fan-in rides the SROU
+//! segment's `func` field), the block's spine folds the per-leaf
+//! partials, and the root device folds whatever reaches it — one merged
+//! packet in the fast path, several partials when a switch slot timed
+//! out or overflowed (the straggler fallback; see
+//! [`crate::net::aggregate`]). The root then returns the finished block
+//! down a binomial tree (the same rounds as
+//! [`super::tree::TreeBroadcast`]).
+//!
+//! **Load spreading.** Roots rotate per block (`root_j = j % N`) and each
+//! block pins its spine (`j % S`), so no single port funnels the
+//! collective — the same trick the hierarchical planner uses for its
+//! leaders.
+//!
+//! **Correctness without trust in the switch.** Aggregation only changes
+//! *where* additions happen, never *whether*: every contribution carries
+//! a manifest entry, switches union manifests when they merge, and the
+//! root completes each entry individually. An evicted or unaggregated
+//! contribution arrives as its own packet and is folded at the endpoint
+//! — degraded bandwidth, identical sum. The §2.3 relaxed-ordering rule
+//! still gates the plan: a probe program (`reduce` on an unordered
+//! path) is verified per run, so a non-commutative op is refused with
+//! the same typed error every other planner gets.
+
+use anyhow::{ensure, Result};
+
+use crate::isa::{Instruction, ProgramBuilder, SimdOp};
+use crate::net::Cluster;
+use crate::wire::{AggEntry, AggMeta, Packet, Segment, SrouHeader};
+
+use super::driver::{
+    lower_store_chain, op_flags, prog_env, read_block, CollectiveAlgorithm, PlanCtx, Phase,
+    ScheduledOp, TopoFacts,
+};
+use super::tree::{binomial_pairs, ceil_log2};
+
+pub struct SwitchReduceAllreduce {
+    topo: TopoFacts,
+    ranks: usize,
+}
+
+impl SwitchReduceAllreduce {
+    pub fn new(topo: TopoFacts) -> Result<Self> {
+        let ranks: usize = topo.leaf_groups.iter().map(|g| g.len()).sum();
+        ensure!(ranks >= 2, "switch-reduce needs at least 2 ranks");
+        ensure!(
+            topo.leaf_groups.len() >= 2,
+            "switch-reduce needs >= 2 leaf groups (run on fat_tree)"
+        );
+        ensure!(
+            topo.leaf_ips.len() == topo.leaf_groups.len(),
+            "switch-reduce needs addressed leaf switches (run on fat_tree)"
+        );
+        ensure!(
+            !topo.spine_ips.is_empty(),
+            "switch-reduce needs addressed spine switches (run on fat_tree)"
+        );
+        Ok(Self { topo, ranks })
+    }
+}
+
+impl CollectiveAlgorithm for SwitchReduceAllreduce {
+    fn name(&self) -> &'static str {
+        "switch-reduce"
+    }
+
+    fn phases(&self) -> usize {
+        // Phase 0: every rank contributes up the aggregation tree.
+        // Phases 1..: binomial down-broadcast of the finished blocks.
+        1 + ceil_log2(self.ranks)
+    }
+
+    fn plan_phase(&mut self, cl: &mut Cluster, ctx: &PlanCtx<'_>, phase: usize) -> Result<Phase> {
+        let n = ctx.devices.len();
+        ensure!(n == self.ranks, "planned for {} ranks, ran with {n}", self.ranks);
+        let spec = ctx.spec;
+        let n_blocks = spec.elements.div_ceil(spec.lanes);
+        let block_geom = |j: usize| {
+            let elem_off = j * spec.lanes;
+            let lanes = spec.lanes.min(spec.elements - elem_off);
+            (spec.base_addr + elem_off as u64 * 4, lanes * 4)
+        };
+        let mut ops = Vec::new();
+        let mut next_id = ctx.done_id_base;
+        if phase == 0 {
+            // ---- contributions up the leaf → spine aggregation tree ----
+            let op = SimdOp::Add;
+            for j in 0..n_blocks {
+                let root_j = j % n;
+                let (addr, len) = block_geom(j);
+                let spine = self.topo.spine_ips[j % self.topo.spine_ips.len()];
+                // §2.3 gate: verify a representative reduce chain for this
+                // block against the live fabric before injecting raw
+                // AGG-marked Simd packets that the switches will fold.
+                let env = prog_env(cl, ctx.devices[root_j], len, 1, spec.reliable);
+                ProgramBuilder::new().reduce(op, addr, 1).build(&env)?;
+                // The group id keys switch slots and the root's replay
+                // set; the block's first contribution done-id is unique
+                // across phases and (within one fabric) across runs.
+                let group = next_id;
+                for (g, members) in self.topo.leaf_groups.iter().enumerate() {
+                    let expected = members.iter().filter(|&&m| m != root_j).count();
+                    if expected == 0 {
+                        continue; // this leaf holds only the root
+                    }
+                    for &m in members {
+                        if m == root_j {
+                            continue;
+                        }
+                        let payload = read_block(cl, ctx.devices[m], addr, len)?;
+                        let done_id = next_id;
+                        next_id += 1;
+                        let segs = vec![
+                            Segment::call(self.topo.leaf_ips[g], expected as u16),
+                            Segment::call(spine, (n - 1) as u16),
+                            Segment::to(ctx.ips[root_j]),
+                        ];
+                        let meta = AggMeta {
+                            tenant: spec.tenant,
+                            group,
+                            op,
+                            // seq 0 is a placeholder; `lower_schedule`
+                            // patches it once the injection seq exists.
+                            entries: vec![AggEntry {
+                                src: ctx.ips[m],
+                                seq: 0,
+                                done_id,
+                            }],
+                        };
+                        let pkt = Packet::new(
+                            ctx.ips[m],
+                            0,
+                            SrouHeader::through(segs),
+                            Instruction::Simd { op, addr },
+                        )
+                        .with_flags(op_flags(spec.reliable))
+                        .with_agg(meta)
+                        .with_payload(payload);
+                        ops.push(ScheduledOp {
+                            rank: m,
+                            done_id,
+                            pkt,
+                        });
+                    }
+                }
+            }
+        } else {
+            // ---- binomial down-broadcast, rooted per block ------------
+            let round = phase - 1;
+            for j in 0..n_blocks {
+                let root_j = j % n;
+                let (addr, len) = block_geom(j);
+                for (sx, dx) in binomial_pairs(n, round) {
+                    let src = (root_j + sx) % n;
+                    let dst = (root_j + dx) % n;
+                    let payload = read_block(cl, ctx.devices[src], addr, len)?;
+                    let done_id = next_id;
+                    next_id += 1;
+                    let env = prog_env(cl, ctx.devices[dst], len, 1, spec.reliable);
+                    let instr = lower_store_chain(addr, 1, done_id, &env)?;
+                    let pkt = Packet::new(
+                        ctx.ips[src],
+                        0,
+                        SrouHeader::through(vec![Segment::to(ctx.ips[dst])]),
+                        instr,
+                    )
+                    .with_flags(op_flags(spec.reliable))
+                    .with_payload(payload);
+                    ops.push(ScheduledOp {
+                        rank: src,
+                        done_id,
+                        pkt,
+                    });
+                }
+            }
+        }
+        Ok(Phase::Ops(ops))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::driver::{CollectiveSpec, Driver};
+    use crate::collectives::oracle::{naive_sum, read_vector, seed_gradients_exact};
+    use crate::net::{EcmpMode, LinkConfig, Topology};
+    use crate::pool::IommuDirectory;
+    use crate::sim::Engine;
+
+    fn facts(t: &Topology) -> TopoFacts {
+        TopoFacts {
+            leaf_groups: t.leaf_groups.clone(),
+            leaf_ips: t.leaf_ips.clone(),
+            spine_ips: t.spine_ips.clone(),
+        }
+    }
+
+    fn run_fat_tree(pods: usize, per_leaf: usize, elements: usize, loss_p: f64) {
+        let t = Topology::fat_tree(7, pods, per_leaf, 2, LinkConfig::dc_100g(), EcmpMode::FlowHash);
+        let topo = facts(&t);
+        let switches = t.switches.clone();
+        let mut cl = t.cluster;
+        cl.fault.loss_p = loss_p;
+        let devices = t.devices;
+        let grads = seed_gradients_exact(&mut cl, &devices, elements, 0, 0x2F);
+        let spec = CollectiveSpec {
+            elements,
+            window: if loss_p > 0.0 { 4 } else { 8 },
+            reliable: loss_p > 0.0,
+            ..Default::default()
+        };
+        let mut algo = SwitchReduceAllreduce::new(topo).unwrap();
+        let mut eng: Engine<crate::net::Cluster> = Engine::new();
+        let out = Driver::run(&mut cl, &mut eng, &devices, &mut algo, &spec).unwrap();
+        assert_eq!(out.ops_done, out.ops, "all phases completed");
+        let oracle = naive_sum(&grads);
+        for &d in &devices {
+            assert_eq!(
+                read_vector(&mut cl, d, 0, elements).unwrap(),
+                oracle,
+                "pods={pods} per_leaf={per_leaf} loss={loss_p}"
+            );
+        }
+        // The point of the subsystem: switches folded packets in flight.
+        let merged: u64 = switches.iter().map(|&s| cl.switch(s).agg.counters.merged).sum();
+        assert!(merged > 0, "no in-network merges happened");
+    }
+
+    #[test]
+    fn two_leaves_of_two() {
+        run_fat_tree(2, 2, 2 * 2048, 0.0);
+    }
+
+    #[test]
+    fn three_leaves_of_three_multi_block() {
+        run_fat_tree(3, 3, 3 * 2048 * 2, 0.0);
+    }
+
+    #[test]
+    fn ragged_blocks_and_rotating_roots() {
+        run_fat_tree(3, 2, 5 * 2048 + 100, 0.0);
+    }
+
+    #[test]
+    fn lossy_reliable_falls_back_not_wrong() {
+        // Loss evicts switch slots mid-fill; retransmits bypass closed
+        // slots and fold at the root. The sum must stay oracle-exact.
+        run_fat_tree(2, 3, 4 * 2048, 0.05);
+    }
+
+    #[test]
+    fn rejects_topologies_without_addressed_switches() {
+        assert!(SwitchReduceAllreduce::new(TopoFacts::default()).is_err());
+        let t = Topology::star(3, 4, 0, LinkConfig::dc_100g());
+        assert!(SwitchReduceAllreduce::new(facts(&t)).is_err());
+    }
+
+    #[test]
+    fn acl_admits_bound_tenants_and_drops_foreign_ones() {
+        let t = Topology::fat_tree(7, 2, 2, 2, LinkConfig::dc_100g(), EcmpMode::FlowHash);
+        let topo = facts(&t);
+        let switches = t.switches.clone();
+        let mut cl = t.cluster;
+        let devices = t.devices;
+        let ips: Vec<_> = devices.iter().map(|&d| cl.device(d).ip()).collect();
+        // One control-plane write programs device IOMMUs and switches.
+        for &ip in &ips {
+            cl.bind_tenant(ips[0], ip, 7);
+        }
+        let elements = 2 * 2048;
+        let grads = seed_gradients_exact(&mut cl, &devices, elements, 0, 0x2F);
+        let spec = CollectiveSpec {
+            elements,
+            window: 8,
+            tenant: 7,
+            ..Default::default()
+        };
+        let mut algo = SwitchReduceAllreduce::new(topo.clone()).unwrap();
+        let mut eng: Engine<crate::net::Cluster> = Engine::new();
+        let out = Driver::run(&mut cl, &mut eng, &devices, &mut algo, &spec).unwrap();
+        assert_eq!(out.ops_done, out.ops);
+        let oracle = naive_sum(&grads);
+        for &d in &devices {
+            assert_eq!(read_vector(&mut cl, d, 0, elements).unwrap(), oracle);
+        }
+        let foreign: u64 = switches.iter().map(|&s| cl.switch(s).acl_drops_foreign).sum();
+        assert_eq!(foreign, 0, "bound tenant must pass the ACL");
+
+        // Same fabric, a tenant the switches never heard of: every
+        // contribution dies at its leaf with a typed drop count, and the
+        // collective cannot complete.
+        let spec = CollectiveSpec {
+            elements,
+            window: 8,
+            tenant: 9,
+            ..spec
+        };
+        let mut algo = SwitchReduceAllreduce::new(topo).unwrap();
+        let mut eng: Engine<crate::net::Cluster> = Engine::new();
+        let out = Driver::run(&mut cl, &mut eng, &devices, &mut algo, &spec).unwrap();
+        assert!(out.ops_done < out.ops, "foreign tenant must not complete");
+        let foreign: u64 = switches.iter().map(|&s| cl.switch(s).acl_drops_foreign).sum();
+        assert!(foreign > 0, "drops must be counted as foreign-tenant");
+    }
+}

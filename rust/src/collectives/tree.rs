@@ -1,0 +1,209 @@
+//! Binomial-tree broadcast, plus the tree-shape helpers shared with the
+//! switch-reduce planner.
+//!
+//! A binomial broadcast doubles the set of informed ranks every round:
+//! after round `k`, the `2^(k+1)` ranks closest to the root (in relabeled
+//! order) hold the vector, so `⌈log₂N⌉` rounds finish the job — against
+//! the ring broadcast's `N−1` serial hops. Each round is one driver
+//! phase; every send is a 1-hop idempotent store chain, so the planner
+//! needs no guard hashes and survives duplication like the ring version.
+//!
+//! The round structure ([`binomial_pairs`]) and depth ([`ceil_log2`]) are
+//! also what the switch-reduce allreduce uses for its root-to-leaves
+//! down-broadcast — one tree shape, two planners.
+
+use anyhow::{ensure, Result};
+
+use crate::net::Cluster;
+use crate::wire::{Packet, Segment, SrouHeader};
+
+use super::driver::{
+    lower_store_chain, op_flags, prog_env, read_block, CollectiveAlgorithm, PlanCtx, Phase,
+    ScheduledOp,
+};
+
+/// `⌈log₂ n⌉` for `n ≥ 1` — the binomial tree's round count.
+pub(crate) fn ceil_log2(n: usize) -> usize {
+    let mut rounds = 0;
+    let mut span = 1usize;
+    while span < n {
+        span <<= 1;
+        rounds += 1;
+    }
+    rounds
+}
+
+/// The (sender, receiver) pairs of binomial round `round`, in
+/// *relabeled* rank space where the root is 0: every rank `x < 2^round`
+/// already holds the data and sends to `x + 2^round` (when that rank
+/// exists). Callers rotate by their actual root: `actual = (root + x) % n`.
+pub(crate) fn binomial_pairs(n: usize, round: usize) -> Vec<(usize, usize)> {
+    let span = 1usize << round;
+    (0..span.min(n))
+        .filter_map(|x| {
+            let dst = x + span;
+            (dst < n).then_some((x, dst))
+        })
+        .collect()
+}
+
+/// Binomial-tree broadcast of `root`'s whole vector to every other rank.
+pub struct TreeBroadcast {
+    pub root: usize,
+    /// Rank count, fixed at planning-time (`phases()` needs it before
+    /// the first [`PlanCtx`] exists).
+    pub ranks: usize,
+}
+
+impl CollectiveAlgorithm for TreeBroadcast {
+    fn name(&self) -> &'static str {
+        "tree-bcast"
+    }
+
+    fn phases(&self) -> usize {
+        // One driver phase per binomial round: a round's sends re-plan
+        // only after the previous round's stores landed — the tree's
+        // data dependency made explicit.
+        ceil_log2(self.ranks).max(1)
+    }
+
+    fn plan_phase(&mut self, cl: &mut Cluster, ctx: &PlanCtx<'_>, phase: usize) -> Result<Phase> {
+        let n = ctx.devices.len();
+        ensure!(n >= 2, "broadcast needs at least 2 ranks");
+        ensure!(n == self.ranks, "planned for {} ranks, ran with {n}", self.ranks);
+        ensure!(self.root < n, "broadcast root {} out of range", self.root);
+        let spec = ctx.spec;
+        let mut ops = Vec::new();
+        let mut next_id = ctx.done_id_base;
+        for (sx, dx) in binomial_pairs(n, phase) {
+            let src = (self.root + sx) % n;
+            let dst = (self.root + dx) % n;
+            let mut off = 0;
+            while off < spec.elements {
+                let lanes = spec.lanes.min(spec.elements - off);
+                let len = lanes * 4;
+                let addr = spec.base_addr + off as u64 * 4;
+                let payload = read_block(cl, ctx.devices[src], addr, len)?;
+                let done_id = next_id;
+                next_id += 1;
+                let env = prog_env(cl, ctx.devices[dst], len, 1, spec.reliable);
+                let instr = lower_store_chain(addr, 1, done_id, &env)?;
+                let pkt = Packet::new(
+                    ctx.ips[src],
+                    0,
+                    SrouHeader::through(vec![Segment::to(ctx.ips[dst])]),
+                    instr,
+                )
+                .with_flags(op_flags(spec.reliable))
+                .with_payload(payload);
+                ops.push(ScheduledOp {
+                    rank: src,
+                    done_id,
+                    pkt,
+                });
+                off += lanes;
+            }
+        }
+        Ok(Phase::Ops(ops))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::driver::{CollectiveSpec, Driver};
+    use crate::collectives::oracle::read_vector;
+    use crate::isa::registry::MemAccess;
+    use crate::net::{LinkConfig, Topology};
+    use crate::sim::Engine;
+    use crate::util::bytes::f32s_to_bytes;
+    use crate::util::Xoshiro256;
+
+    #[test]
+    fn tree_shape() {
+        assert_eq!(ceil_log2(1), 0);
+        assert_eq!(ceil_log2(2), 1);
+        assert_eq!(ceil_log2(5), 3);
+        assert_eq!(ceil_log2(8), 3);
+        assert_eq!(binomial_pairs(6, 0), vec![(0, 1)]);
+        assert_eq!(binomial_pairs(6, 1), vec![(0, 2), (1, 3)]);
+        assert_eq!(binomial_pairs(6, 2), vec![(0, 4), (1, 5)]);
+        // Every non-root rank receives exactly once across all rounds.
+        for n in 2..=17 {
+            let mut recv = vec![0usize; n];
+            for k in 0..ceil_log2(n) {
+                for (s, d) in binomial_pairs(n, k) {
+                    assert!(s < d && d < n);
+                    recv[d] += 1;
+                }
+            }
+            assert!(recv[1..].iter().all(|&c| c == 1), "n={n}: {recv:?}");
+        }
+    }
+
+    fn seed_distinct(
+        cl: &mut crate::net::Cluster,
+        devices: &[crate::net::NodeId],
+        elements: usize,
+    ) -> Vec<Vec<f32>> {
+        let mut out = Vec::new();
+        for (r, &d) in devices.iter().enumerate() {
+            let mut rng = Xoshiro256::seed_from(0xB0 ^ (r as u64) << 4);
+            let data = rng.f32_vec(elements, -4.0, 4.0);
+            cl.device_mut(d).mem().write(0, &f32s_to_bytes(&data)).unwrap();
+            out.push(data);
+        }
+        out
+    }
+
+    #[test]
+    fn tree_broadcast_replicates_root() {
+        let n = 6; // non-power-of-two exercises the ragged last round
+        let elements = 2 * 2048 + 100;
+        let t = Topology::star(5, n, 0, LinkConfig::dc_100g());
+        let mut cl = t.cluster;
+        let devices = t.devices;
+        let data = seed_distinct(&mut cl, &devices, elements);
+        let spec = CollectiveSpec {
+            elements,
+            window: 8,
+            ..Default::default()
+        };
+        let root = 3;
+        let mut algo = TreeBroadcast { root, ranks: n };
+        let mut eng: Engine<crate::net::Cluster> = Engine::new();
+        let out = Driver::run(&mut cl, &mut eng, &devices, &mut algo, &spec).unwrap();
+        assert_eq!(out.ops_done, out.ops);
+        for &d in &devices {
+            assert_eq!(
+                read_vector(&mut cl, d, 0, elements).unwrap(),
+                data[root],
+                "every rank holds the root vector"
+            );
+        }
+    }
+
+    #[test]
+    fn tree_broadcast_survives_duplication() {
+        // 1-hop store chains are idempotent; duplicated frames are noise.
+        let n = 5;
+        let elements = 2048;
+        let t = Topology::star(9, n, 0, LinkConfig::dc_100g());
+        let mut cl = t.cluster;
+        cl.fault.dup_p = 0.05;
+        let devices = t.devices;
+        let data = seed_distinct(&mut cl, &devices, elements);
+        let spec = CollectiveSpec {
+            elements,
+            window: 4,
+            ..Default::default()
+        };
+        let mut algo = TreeBroadcast { root: 0, ranks: n };
+        let mut eng: Engine<crate::net::Cluster> = Engine::new();
+        let out = Driver::run(&mut cl, &mut eng, &devices, &mut algo, &spec).unwrap();
+        assert_eq!(out.ops_done, out.ops);
+        for &d in &devices {
+            assert_eq!(read_vector(&mut cl, d, 0, elements).unwrap(), data[0]);
+        }
+    }
+}

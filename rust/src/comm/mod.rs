@@ -49,14 +49,14 @@
 use anyhow::{bail, ensure, Result};
 
 use crate::collectives::driver::{
-    lower_schedule, CollectiveAlgorithm, CollectiveSpec, Phase, PlanCtx,
+    lower_schedule, CollectiveAlgorithm, CollectiveSpec, Phase, PlanCtx, TopoFacts,
 };
 use crate::collectives::{AlgoKind, CollectiveReport};
 use crate::iommu::Perms;
 use crate::isa::registry::MemAccess;
 use crate::mem::{BatchResult, MemBatch, MemClient, MemError, PreparedMemPlan};
 use crate::net::{
-    Cluster, DeviceProfile, EcmpMode, LinkConfig, NodeId, ShardedRuntime, Topology,
+    Cluster, DeviceProfile, EcmpMode, LinkConfig, NodeId, ShardPartition, ShardedRuntime, Topology,
 };
 use crate::pool::{Allocation, IommuDirectory, InterleaveMap, SdnController, TenantId};
 use crate::sim::{Engine, SimTime};
@@ -103,6 +103,7 @@ pub struct FabricBuilder {
     pool_bytes: u64,
     shards: usize,
     shard_threads: usize,
+    partition: ShardPartition,
 }
 
 impl Default for FabricBuilder {
@@ -121,6 +122,7 @@ impl Default for FabricBuilder {
             pool_bytes: 0,
             shards: 0,
             shard_threads: 0,
+            partition: ShardPartition::Modulo,
         }
     }
 }
@@ -149,19 +151,23 @@ impl FabricBuilder {
         self
     }
 
-    /// The canonical topology for a device collective: hierarchical
-    /// runs on the 2-pod fat-tree, everything else on a star — the one
-    /// place the `run_collective` shim and the E2 coordinator share.
+    /// The canonical topology for a device collective: the two-level
+    /// planners (hierarchical, switch-reduce) run on the 2-pod
+    /// fat-tree, everything else on a star — the one place the
+    /// `run_collective` shim and the E2 coordinator share.
     pub fn for_algo(self, kind: AlgoKind, ranks: usize) -> Result<Self> {
-        Ok(if kind == AlgoKind::Hierarchical {
-            ensure!(
-                ranks >= 4 && ranks % 2 == 0,
-                "hierarchical needs an even rank count >= 4"
-            );
-            self.fat_tree(2, ranks / 2, 2)
-        } else {
-            self.star(ranks)
-        })
+        Ok(
+            if matches!(kind, AlgoKind::Hierarchical | AlgoKind::SwitchReduce) {
+                ensure!(
+                    ranks >= 4 && ranks % 2 == 0,
+                    "{} needs an even rank count >= 4",
+                    kind.name()
+                );
+                self.fat_tree(2, ranks / 2, 2)
+            } else {
+                self.star(ranks)
+            },
+        )
     }
 
     /// Plain hosts attached to the switch (star only; pooled-memory
@@ -237,6 +243,19 @@ impl FabricBuilder {
         self
     }
 
+    /// How the sharded core maps nodes onto shards (see
+    /// [`ShardPartition`]). [`ShardPartition::Pods`] keeps each
+    /// fat-tree pod — its devices and leaf switch — on one shard, so
+    /// intra-pod traffic stays shard-local and only spine hops cross
+    /// the channel mesh; on topologies without pods it falls back to
+    /// the default modulo striping. Results are bit-identical under
+    /// either mapping (the determinism contract partitions *work*, not
+    /// *behavior*).
+    pub fn shard_partition(mut self, mode: ShardPartition) -> Self {
+        self.partition = mode;
+        self
+    }
+
     /// Enable the §2.5/§2.6 memory pool with `per_device_bytes` of
     /// poolable memory per device. Communicator regions are carved
     /// *above* the pool share, and on a pooled fabric every communicator
@@ -279,7 +298,12 @@ impl FabricBuilder {
         let mut cl = topo.cluster;
         let devices = topo.devices;
         let hosts = topo.hosts;
-        let leaf_groups = topo.leaf_groups;
+        let switches = topo.switches;
+        let facts = TopoFacts {
+            leaf_groups: topo.leaf_groups,
+            leaf_ips: topo.leaf_ips,
+            spine_ips: topo.spine_ips,
+        };
         ensure!(!devices.is_empty(), "a fabric needs at least one device");
         let ips: Vec<DeviceIp> = devices.iter().map(|&d| cl.device(d).ip()).collect();
         let device_capacity = cl.device(devices[0]).mem_ref().capacity();
@@ -320,12 +344,28 @@ impl FabricBuilder {
         // recorded and replayed into the shards on each drive round.
         let sharded = if self.shards > 0 {
             cl.capture = Some(Vec::new());
-            Some(ShardedRuntime::new(
-                &cl,
-                self.seed,
-                self.shards,
-                self.shard_threads,
-            ))
+            let mut rt = ShardedRuntime::new(&cl, self.seed, self.shards, self.shard_threads);
+            let is_fat_tree = matches!(self.topology, FabricTopology::FatTree { .. });
+            if self.partition == ShardPartition::Pods && is_fat_tree {
+                // Pod p (devices + leaf switch) → shard p mod n; spines
+                // stripe separately; anything else keeps the modulo map.
+                let n_nodes = cl.nodes.len();
+                let mut assign: Vec<usize> =
+                    (0..n_nodes).map(|i| i % self.shards).collect();
+                let spines = facts.spine_ips.len();
+                for (s, &sw) in switches[..spines].iter().enumerate() {
+                    assign[sw] = s % self.shards;
+                }
+                for (p, group) in facts.leaf_groups.iter().enumerate() {
+                    let shard = p % self.shards;
+                    assign[switches[spines + p]] = shard;
+                    for &r in group {
+                        assign[devices[r]] = shard;
+                    }
+                }
+                rt = rt.with_assignment(assign);
+            }
+            Some(rt)
         } else {
             None
         };
@@ -335,7 +375,7 @@ impl FabricBuilder {
             devices,
             ips,
             hosts,
-            leaf_groups,
+            topo: facts,
             session: EngineSession::new(self.window),
             window: self.window,
             reliable: self.reliable,
@@ -431,7 +471,9 @@ pub struct Fabric {
     devices: Vec<NodeId>,
     ips: Vec<DeviceIp>,
     hosts: Vec<NodeId>,
-    leaf_groups: Vec<Vec<usize>>,
+    /// Topology facts handed to topology-aware planners (leaf
+    /// membership, addressed leaf/spine switch IPs).
+    topo: TopoFacts,
     session: EngineSession,
     window: usize,
     reliable: bool,
@@ -475,7 +517,12 @@ impl Fabric {
     }
 
     pub fn leaf_groups(&self) -> &[Vec<usize>] {
-        &self.leaf_groups
+        &self.topo.leaf_groups
+    }
+
+    /// The topology facts planners see ([`TopoFacts`]).
+    pub fn topo_facts(&self) -> &TopoFacts {
+        &self.topo
     }
 
     pub fn now(&self) -> SimTime {
@@ -1163,12 +1210,13 @@ impl Communicator {
             ((offset_elems + elems) as u64) * 4 <= self.region_bytes,
             "collective range [{offset_elems}..+{elems}) exceeds the communicator region"
         );
-        let algo = kind.planner(f.devices.len(), &f.leaf_groups, root)?;
+        let algo = kind.planner(f.devices.len(), &f.topo, root)?;
         let spec = CollectiveSpec {
             elements: elems,
             window: self.window,
             reliable: self.reliable,
             base_addr: self.base_addr + offset_elems as u64 * 4,
+            tenant: self.tenant,
             ..CollectiveSpec::default()
         };
         f.submit_algo(algo, spec)

@@ -111,7 +111,9 @@ pub fn run_e2(cfg: &E2Config) -> Result<E2Result> {
             runs.push((kind, run_collective(kind, &opts)?));
             continue;
         }
-        let slot = if kind == AlgoKind::Hierarchical {
+        // Topology-hungry algorithms (leaf groups / addressed switches)
+        // share the fat-tree fabric; everything else runs on the star.
+        let slot = if matches!(kind, AlgoKind::Hierarchical | AlgoKind::SwitchReduce) {
             &mut tree
         } else {
             &mut star

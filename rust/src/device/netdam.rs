@@ -8,7 +8,7 @@
 //! along the SROU segment list — the §3 fused allreduce and chained DPU
 //! offloads without any bespoke opcode.
 
-use std::collections::{HashMap, VecDeque};
+use std::collections::{HashMap, HashSet, VecDeque};
 use std::sync::Arc;
 
 use anyhow::{bail, ensure, Result};
@@ -38,6 +38,12 @@ pub struct Emit {
 /// within `timeout × max_retries` of the original, during which a host
 /// issues far fewer than this many non-idempotent ops.
 const RESP_CACHE_CAP: usize = 4096;
+
+/// Bound on the aggregation-group seen-set (groups; FIFO eviction) — the
+/// root-collector analog of [`RESP_CACHE_CAP`]: a retransmitted
+/// contribution lands within its retry window, during which far fewer
+/// than this many aggregation groups terminate at one device.
+const AGG_GROUPS_CAP: usize = 4096;
 
 /// Side channel out of one program step.
 enum StepNote {
@@ -84,6 +90,12 @@ pub struct NetDamDevice {
     /// read-modify-write atomics.
     resp_cache: HashMap<(DeviceIp, u64), Instruction>,
     resp_cache_fifo: VecDeque<(DeviceIp, u64)>,
+    /// Root-collector state for in-network aggregation (PR 7): which
+    /// contribution identities have already been folded, per
+    /// `(tenant, group)`. Makes replayed manifests re-emit completions
+    /// instead of double-folding.
+    agg_seen: HashMap<(u32, u32), HashSet<(DeviceIp, u64)>>,
+    agg_seen_fifo: VecDeque<(u32, u32)>,
     /// Counters for metrics.
     pub pkts_in: u64,
     pub pkts_out: u64,
@@ -96,6 +108,13 @@ pub struct NetDamDevice {
     /// Retransmits answered from the response-dedupe cache (replays that
     /// would otherwise have re-executed a non-idempotent op).
     pub resp_cache_hits: u64,
+    /// Aggregated contributions folded into memory (root collector).
+    pub agg_folds: u64,
+    /// Fully-seen manifests whose completions were re-emitted.
+    pub agg_replays: u64,
+    /// Manifests dropped because they mixed folded and unfolded
+    /// contributions (the unfolded ones arrive again unmerged).
+    pub agg_mixed_drops: u64,
 }
 
 impl NetDamDevice {
@@ -120,6 +139,8 @@ impl NetDamDevice {
             completions: Vec::new(),
             resp_cache: HashMap::new(),
             resp_cache_fifo: VecDeque::new(),
+            agg_seen: HashMap::new(),
+            agg_seen_fifo: VecDeque::new(),
             pkts_in: 0,
             pkts_out: 0,
             drops_hash_guard: 0,
@@ -127,6 +148,9 @@ impl NetDamDevice {
             iommu_naks: 0,
             prog_steps: 0,
             resp_cache_hits: 0,
+            agg_folds: 0,
+            agg_replays: 0,
+            agg_mixed_drops: 0,
         }
     }
 
@@ -288,6 +312,11 @@ impl NetDamDevice {
                 unreachable!()
             };
             return self.execute_program(pkt, prog);
+        }
+        // Terminal hop of an in-network aggregation tree? The root folds
+        // the switch-combined contribution and answers the manifest.
+        if flags.agg() {
+            return self.execute_agg(pkt);
         }
 
         match pkt.instr.clone() {
@@ -457,6 +486,85 @@ impl NetDamDevice {
     /// The micro-executor loop: run the current step (and any fused
     /// successors) locally, then either forward the packet along the
     /// SROU path with the updated cursor, or retire the program.
+    /// Terminal point of an in-network aggregation tree (paper §2.5, PR
+    /// 7): fold the (possibly switch-combined) SIMD contribution into
+    /// memory, then fan one `CollectiveDone` back to *every* contributor
+    /// named in the manifest — each echoing that contributor's own
+    /// sequence number so its reliability-table slot clears.
+    ///
+    /// Exactly-once under loss/duplication/eviction: a per-
+    /// `(tenant, group)` seen-set records folded contribution identities.
+    /// A manifest whose entries are all seen is a replay — the dones are
+    /// re-emitted without touching memory. A manifest mixing seen and
+    /// unseen entries is dropped: folding it would double-count the seen
+    /// part, and the unseen contributions will retransmit and arrive
+    /// unmerged (the switch remembers completed groups and passes late
+    /// traffic through).
+    fn execute_agg(&mut self, pkt: Packet) -> Result<Vec<Emit>> {
+        let Some(meta) = pkt.agg.clone() else {
+            bail!("aggregation-marked packet without a manifest");
+        };
+        let Instruction::Simd { op, addr } = pkt.instr else {
+            bail!("aggregation mark on non-SIMD instruction {:?}", pkt.instr);
+        };
+        let fixed = self.fixed_ns();
+        let key = (meta.tenant, meta.group);
+        let seen_n = self.agg_seen.get(&key).map_or(0, |s| {
+            meta.entries
+                .iter()
+                .filter(|e| s.contains(&(e.src, e.seq)))
+                .count()
+        });
+        if seen_n == meta.entries.len() {
+            // Pure replay: the fold already happened; the contributor(s)
+            // just never saw their completion. Re-emit it.
+            self.agg_replays += 1;
+            let mut emits = Vec::new();
+            for e in &meta.entries {
+                let done =
+                    self.reply_seq(e.src, e.seq, Instruction::CollectiveDone { block: e.done_id });
+                emits.push(Emit { delay: fixed, pkt: done });
+            }
+            return Ok(emits);
+        }
+        if seen_n > 0 {
+            self.agg_mixed_drops += 1;
+            return Ok(Vec::new());
+        }
+        // Same cost shape as a stored `Simd`: read the resident block,
+        // one ALU pass, write the folded block back.
+        let len = pkt.payload.len();
+        let lanes = len / 4;
+        let pa = self.xlate(addr, len, Access::Write)?;
+        let t = fixed + self.mem_ns(len) + self.alu_ns(lanes) + self.mem_ns(len);
+        if let Some(bytes) = pkt.payload.bytes() {
+            let mut acc = bytes_to_f32s(bytes)?;
+            let operand = bytes_to_f32s(&self.hbm.read(pa, len)?)?;
+            self.alu.apply(op, &mut acc, &operand);
+            self.hbm.write(pa, &f32s_to_bytes(&acc))?;
+        }
+        if !self.agg_seen.contains_key(&key) {
+            if self.agg_seen.len() >= AGG_GROUPS_CAP {
+                if let Some(old) = self.agg_seen_fifo.pop_front() {
+                    self.agg_seen.remove(&old);
+                }
+            }
+            self.agg_seen_fifo.push_back(key);
+        }
+        let seen = self.agg_seen.entry(key).or_default();
+        for e in &meta.entries {
+            seen.insert((e.src, e.seq));
+        }
+        self.agg_folds += 1;
+        let mut emits = Vec::new();
+        for e in &meta.entries {
+            let done =
+                self.reply_seq(e.src, e.seq, Instruction::CollectiveDone { block: e.done_id });
+            emits.push(Emit { delay: t, pkt: done });
+        }
+        Ok(emits)
+    }
+
     fn execute_program(&mut self, mut pkt: Packet, mut prog: Box<Program>) -> Result<Vec<Emit>> {
         let mut t = self.fixed_ns();
         let mut fwd: Option<(u64, u64, u64)> = None;

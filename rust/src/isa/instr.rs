@@ -33,6 +33,10 @@ impl Flags {
     /// Congestion-experienced mark set by a switch queue above its
     /// threshold (consumed by the RoCE baseline's DCQCN-lite).
     pub const ECN: u16 = 1 << 4;
+    /// In-network aggregation mark (§2.5 "or in datacenter switch"):
+    /// switches on the SROU path may fold this packet into an
+    /// aggregation slot instead of forwarding it (see `net::aggregate`).
+    pub const AGG: u16 = 1 << 5;
 
     pub fn reliable(self) -> bool {
         self.0 & Self::RELIABLE != 0
@@ -48,6 +52,9 @@ impl Flags {
     }
     pub fn ecn(self) -> bool {
         self.0 & Self::ECN != 0
+    }
+    pub fn agg(self) -> bool {
+        self.0 & Self::AGG != 0
     }
     pub fn with(self, bit: u16) -> Flags {
         Flags(self.0 | bit)

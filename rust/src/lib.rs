@@ -129,6 +129,30 @@
 //! including under packet loss (`rust/tests/sharded_determinism.rs`).
 //! `cargo bench --bench sim` measures events/sec across the shard grid
 //! and writes `BENCH_sim.json`; `netdam comm --shards N` demos the path.
+//!
+//! # In-network aggregation (switches that compute, §2.5)
+//!
+//! The switches are a compute point, not just a forwarding fabric. A
+//! bounded aggregation engine ([`net::AggEngine`]) lives in every
+//! addressed switch: reduce contributions flagged
+//! [`isa::Flags::AGG`] carry an aggregation manifest
+//! ([`wire::AggMeta`] — tenant, group, op, and per-source entries) and
+//! are folded **in the switch** through the same commutative-only SIMD
+//! rules the program verifier enforces, with expected-fanin counting,
+//! slot caps, and timeout eviction. An evicted or overflowed slot
+//! degrades to plain forwarding — stragglers reduce at the endpoint,
+//! never a wrong answer, and the engine's counters
+//! ([`net::AggCounters`]) make the fast/slow split observable. The
+//! [`collectives::AlgoKind::SwitchReduce`] planner lowers allreduce
+//! onto the fat-tree's physical hierarchy (device → leaf → spine →
+//! rotating per-block root, then a binomial down-broadcast shared with
+//! [`collectives::TreeBroadcast`]), and the switch mirrors the memory
+//! plane's §2.5 ACL: [`pool::IommuDirectory::bind_tenant`] programs
+//! requester→tenant checks on the switches too, so a foreign tenant's
+//! contributions are dropped (and counted) at the first hop.
+//! Topology-aware shard placement ([`net::ShardPartition::Pods`]) keeps
+//! each pod's devices and leaf on one DES shard; results stay
+//! bit-identical to the default striping.
 
 pub mod alu;
 pub mod cli;

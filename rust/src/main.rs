@@ -545,8 +545,10 @@ fn print_usage() {
         "netdam — NetDAM reproduction launcher\n\
          subcommands: latency | allreduce | incast | multipath | alu | prog | mem | comm | train | info\n\
          common flags: --config FILE, --set key=value, --seed N\n\
-         allreduce: --algo netdam-ring|halving-doubling|hierarchical|reduce-scatter|\n\
-                    all-gather|broadcast|reduce|ring-roce|mpi-native (comma list, or `all`)\n\
+         allreduce: --algo netdam-ring|halving-doubling|hierarchical|switch-reduce|\n\
+                    reduce-scatter|all-gather|broadcast|tree-bcast|reduce|ring-roce|\n\
+                    mpi-native (comma list, or `all`); switch-reduce folds contributions\n\
+                    IN the fat-tree switches (§2.5 in-network aggregation)\n\
          prog:      packet-program demo (build -> verify -> execute); --elements N --ranks N\n\
          mem:       pooled-memory demo on the session API (lease -> IOMMU -> scatter-gather ->\n\
                     NAK -> pipelined batch -> multi-bag gather); --devices N --bytes B\n\

@@ -1,0 +1,494 @@
+//! The switch aggregation engine (paper §2.5's "or in datacenter
+//! switch" compute point, NetReduce-style).
+//!
+//! A [`crate::net::Switch`] owns one [`AggEngine`]: a **bounded** table
+//! of aggregation slots keyed `(tenant, group)`. Aggregation-marked
+//! packets ([`crate::isa::Flags::AGG`] + [`AggMeta`]) whose current SROU
+//! segment names this switch are *offered* to the engine instead of
+//! being forwarded. The engine buffers the original packets; when the
+//! buffered manifests reach the expected fan-in (the SROU segment's
+//! `func` argument — counted in manifest *entries*, not packets, so an
+//! upstream eviction that forwarded singles still completes the slot),
+//! it folds the payloads with the slot's commutative [`SimdOp`] and
+//! emits **one** reduced packet carrying the union manifest, inheriting
+//! the first contribution's `(src, seq)` transport identity and its
+//! (already advanced) SROU path.
+//!
+//! The INSIGHT survey's reliability taxonomy shapes the failure paths —
+//! every one degrades to plain forwarding, never to a wrong answer:
+//!
+//! * **timeout** — a slot past its deadline is evicted and its buffered
+//!   originals forwarded individually (straggler fallback: the root
+//!   collector reduces them endpoint-side);
+//! * **overflow** — a full table refuses new slots and forwards;
+//! * **late stragglers** — contributions for a recently evicted slot
+//!   pass straight through instead of re-opening a doomed slot;
+//! * **duplicates** — a retransmit whose manifest intersects a buffered
+//!   slot is dropped (the buffered original already carries it);
+//! * **non-commutative ops** — refused (forwarded), mirroring the
+//!   program verifier's §2.3 relaxed-ordering rule: only reduces that
+//!   are legal on unordered paths are legal in a switch.
+//!
+//! Determinism: slots live in a `BTreeMap` and eviction scans it in key
+//! order, so the engine's behaviour is a pure function of the arrival
+//! sequence — which the sharded DES core already makes shard-count
+//! invariant.
+
+use std::collections::{BTreeMap, HashSet, VecDeque};
+
+use crate::alu::{AluBackend, NativeAlu};
+use crate::isa::SimdOp;
+use crate::sim::SimTime;
+use crate::wire::{Packet, Payload};
+
+/// Remembered evicted/merged slot keys (bounded FIFO): late stragglers
+/// for these pass through instead of opening a slot that can never fill.
+const RECENT_KEYS_CAP: usize = 4096;
+
+/// Aggregation-table knobs.
+#[derive(Debug, Clone)]
+pub struct AggConfig {
+    /// Concurrent aggregation slots per switch (the bounded SRAM table).
+    pub max_slots: usize,
+    /// Slot lifetime: older slots are evicted (straggler fallback).
+    /// Kept below the transport's 2 ms retransmit timeout so a
+    /// retransmit arriving at the switch always finds the slot expired
+    /// rather than half-filled.
+    pub timeout_ns: SimTime,
+}
+
+impl Default for AggConfig {
+    fn default() -> Self {
+        Self {
+            max_slots: 256,
+            timeout_ns: 1_000_000,
+        }
+    }
+}
+
+/// Observability counters (all monotonic).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct AggCounters {
+    /// Slots that reached fan-in and emitted one reduced packet.
+    pub merged: u64,
+    /// Contribution packets absorbed into a slot buffer.
+    pub absorbed: u64,
+    /// Slots evicted on timeout.
+    pub evicted_slots: u64,
+    /// Buffered packets forwarded by those evictions.
+    pub evicted_pkts: u64,
+    /// New slots refused because the table was full.
+    pub overflow: u64,
+    /// Post-eviction stragglers passed through unaggregated.
+    pub late: u64,
+    /// Duplicate contributions dropped (manifest already buffered).
+    pub dup_drops: u64,
+    /// Non-commutative reduce ops refused (forwarded unaggregated).
+    pub refused: u64,
+}
+
+#[derive(Debug)]
+struct Slot {
+    op: SimdOp,
+    /// Expected descendant contribution *entries* (SROU segment `func`).
+    fanin: usize,
+    deadline: SimTime,
+    /// Buffered originals, arrival order (the fold order).
+    pkts: Vec<Packet>,
+    /// Total manifest entries across `pkts`.
+    entries: usize,
+    /// Contribution identities buffered so far (duplicate filter).
+    seen: HashSet<(u32, u64)>,
+}
+
+/// The per-switch bounded aggregation table. See the module docs.
+#[derive(Debug)]
+pub struct AggEngine {
+    cfg: AggConfig,
+    slots: BTreeMap<(u32, u32), Slot>,
+    recent: VecDeque<(u32, u32)>,
+    recent_set: HashSet<(u32, u32)>,
+    alu: NativeAlu,
+    pub counters: AggCounters,
+}
+
+impl Default for AggEngine {
+    fn default() -> Self {
+        Self::new(AggConfig::default())
+    }
+}
+
+impl AggEngine {
+    pub fn new(cfg: AggConfig) -> Self {
+        Self {
+            cfg,
+            slots: BTreeMap::new(),
+            recent: VecDeque::new(),
+            recent_set: HashSet::new(),
+            alu: NativeAlu::new(),
+            counters: AggCounters::default(),
+        }
+    }
+
+    /// Slots currently buffering.
+    pub fn live_slots(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Offer `pkt` to the table. Returns the packets the switch must
+    /// forward *now* (possibly none if the packet was absorbed, possibly
+    /// several if slots expired): evicted originals first (slot-key
+    /// order), then the verdict on `pkt` itself — passed through, or the
+    /// merged emission if it completed a slot. Every contribution entry
+    /// ever offered leaves the switch exactly once (inside a merged
+    /// manifest or as its original packet), except duplicates, which are
+    /// dropped.
+    ///
+    /// `was_waypoint` says the packet's pre-advance SROU segment named
+    /// this switch; `fanin` is that segment's `func` argument.
+    pub fn offer(
+        &mut self,
+        now: SimTime,
+        was_waypoint: bool,
+        fanin: u16,
+        pkt: Packet,
+    ) -> Vec<Packet> {
+        let mut out = self.expire(now);
+        // Not aggregation traffic for this hop: plain forwarding.
+        let eligible = was_waypoint && fanin > 0 && pkt.flags.agg() && pkt.agg.is_some();
+        if !eligible {
+            out.push(pkt);
+            return out;
+        }
+        let meta = pkt.agg.as_ref().expect("eligible implies metadata");
+        if !meta.op.commutative() {
+            // The verifier's rule, enforced in the data plane too: a
+            // switch reduces in arrival order, so only commutative ops.
+            self.counters.refused += 1;
+            out.push(pkt);
+            return out;
+        }
+        let key = (meta.tenant, meta.group);
+        if !self.slots.contains_key(&key) {
+            if self.recent_set.contains(&key) {
+                // The slot already merged or evicted; a late straggler
+                // can never complete it — send it on to the root.
+                self.counters.late += 1;
+                out.push(pkt);
+                return out;
+            }
+            if self.slots.len() >= self.cfg.max_slots {
+                self.counters.overflow += 1;
+                out.push(pkt);
+                return out;
+            }
+            self.slots.insert(
+                key,
+                Slot {
+                    op: meta.op,
+                    fanin: fanin as usize,
+                    deadline: now + self.cfg.timeout_ns,
+                    pkts: Vec::new(),
+                    entries: 0,
+                    seen: HashSet::new(),
+                },
+            );
+        }
+        let slot = self.slots.get_mut(&key).expect("just ensured");
+        if slot.op != meta.op {
+            // A group must agree on its reduce op; don't corrupt the slot.
+            self.counters.refused += 1;
+            out.push(pkt);
+            return out;
+        }
+        if meta
+            .entries
+            .iter()
+            .any(|e| slot.seen.contains(&(e.src.0, e.seq)))
+        {
+            // Retransmit echo of a buffered contribution: the original
+            // is already in the slot, so this copy is redundant.
+            self.counters.dup_drops += 1;
+            return out;
+        }
+        for e in &meta.entries {
+            slot.seen.insert((e.src.0, e.seq));
+        }
+        slot.entries += meta.entries.len();
+        slot.pkts.push(pkt);
+        self.counters.absorbed += 1;
+        if slot.entries >= slot.fanin {
+            let slot = self.slots.remove(&key).expect("complete slot");
+            self.remember(key);
+            match self.merge(slot) {
+                Ok(merged) => {
+                    self.counters.merged += 1;
+                    out.push(merged);
+                }
+                Err(pkts) => {
+                    // Defensive: un-mergeable payloads fall back to
+                    // forwarding the originals (endpoint reduction).
+                    self.counters.evicted_pkts += pkts.len() as u64;
+                    out.extend(pkts);
+                }
+            }
+        }
+        out
+    }
+
+    /// Evict every slot past its deadline; returns their buffered
+    /// originals (slot-key order, then arrival order within a slot).
+    pub fn expire(&mut self, now: SimTime) -> Vec<Packet> {
+        let expired: Vec<(u32, u32)> = self
+            .slots
+            .iter()
+            .filter(|(_, s)| s.deadline <= now)
+            .map(|(&k, _)| k)
+            .collect();
+        let mut out = Vec::new();
+        for key in expired {
+            let slot = self.slots.remove(&key).expect("listed as expired");
+            self.remember(key);
+            self.counters.evicted_slots += 1;
+            self.counters.evicted_pkts += slot.pkts.len() as u64;
+            out.extend(slot.pkts);
+        }
+        out
+    }
+
+    fn remember(&mut self, key: (u32, u32)) {
+        if self.recent_set.insert(key) {
+            self.recent.push_back(key);
+            if self.recent.len() > RECENT_KEYS_CAP {
+                if let Some(old) = self.recent.pop_front() {
+                    self.recent_set.remove(&old);
+                }
+            }
+        }
+    }
+
+    /// Fold a complete slot into one packet. On un-mergeable contents
+    /// (length mismatch, undecodable lanes) the originals come back as
+    /// the error value and are forwarded instead.
+    fn merge(&mut self, slot: Slot) -> Result<Packet, Vec<Packet>> {
+        let mut it = slot.pkts.iter();
+        let first = it.next().expect("a complete slot is non-empty");
+        let len = first.payload.len();
+        if slot.pkts.iter().any(|p| p.payload.len() != len) {
+            return Err(slot.pkts);
+        }
+        let payload = if slot.pkts.iter().any(|p| p.payload.is_phantom()) {
+            Payload::phantom(len)
+        } else {
+            let Some(Ok(mut acc)) = first.payload.f32s() else {
+                return Err(slot.pkts);
+            };
+            for p in it {
+                let Some(Ok(lanes)) = p.payload.f32s() else {
+                    return Err(slot.pkts);
+                };
+                self.alu.apply(slot.op, &mut acc, &lanes);
+            }
+            Payload::from_f32s(&acc)
+        };
+        let mut merged = first.clone().with_payload(payload);
+        let meta = merged.agg.as_mut().expect("buffered packets carry AGG");
+        for p in &slot.pkts[1..] {
+            meta.entries
+                .extend(p.agg.as_ref().expect("buffered AGG").entries.iter().copied());
+        }
+        Ok(merged)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::{Flags, Instruction};
+    use crate::wire::{AggEntry, AggMeta, DeviceIp, Segment, SrouHeader};
+
+    fn ip(x: u8) -> DeviceIp {
+        DeviceIp::lan(x)
+    }
+
+    /// A contribution packet as it looks *after* the leaf advanced its
+    /// SROU (current segment = spine), carrying `vals` and one entry.
+    fn contrib(src: u8, seq: u64, group: u32, vals: &[f32]) -> Packet {
+        contrib_op(src, seq, group, vals, SimdOp::Add)
+    }
+
+    fn contrib_op(src: u8, seq: u64, group: u32, vals: &[f32], op: SimdOp) -> Packet {
+        let mut srou = SrouHeader::through(vec![
+            Segment::call(ip(150), 2),
+            Segment::call(ip(200), 3),
+            Segment::to(ip(1)),
+        ]);
+        srou.advance(); // the leaf hop already happened
+        Packet::new(ip(src), seq, srou, Instruction::Simd { op, addr: 0 })
+            .with_flags(Flags(Flags::RELIABLE))
+            .with_agg(AggMeta {
+                tenant: 1,
+                group,
+                op,
+                entries: vec![AggEntry {
+                    src: ip(src),
+                    seq,
+                    done_id: group + src as u32,
+                }],
+            })
+            .with_payload(Payload::from_f32s(vals))
+    }
+
+    #[test]
+    fn fanin_met_emits_one_reduced_packet() {
+        let mut eng = AggEngine::default();
+        assert!(eng.offer(0, true, 3, contrib(2, 10, 7, &[1.0, 2.0])).is_empty());
+        assert!(eng.offer(5, true, 3, contrib(3, 11, 7, &[10.0, 20.0])).is_empty());
+        let out = eng.offer(9, true, 3, contrib(4, 12, 7, &[100.0, 200.0]));
+        assert_eq!(out.len(), 1);
+        let m = &out[0];
+        assert_eq!(m.src, ip(2), "inherits the first contribution's identity");
+        assert_eq!(m.seq, 10);
+        assert_eq!(m.payload.f32s().unwrap().unwrap(), vec![111.0, 222.0]);
+        let meta = m.agg.as_ref().unwrap();
+        assert_eq!(meta.entries.len(), 3, "manifest is the union");
+        assert_eq!(eng.counters.merged, 1);
+        assert_eq!(eng.counters.absorbed, 3);
+        assert_eq!(eng.live_slots(), 0);
+    }
+
+    #[test]
+    fn entry_counted_fanin_tolerates_upstream_eviction() {
+        // A two-entry merged packet plus a single completes fanin 3.
+        let mut eng = AggEngine::default();
+        let mut pre = contrib(2, 10, 7, &[1.0]);
+        pre.agg.as_mut().unwrap().entries.push(AggEntry {
+            src: ip(3),
+            seq: 11,
+            done_id: 99,
+        });
+        assert!(eng.offer(0, true, 3, pre).is_empty());
+        let out = eng.offer(1, true, 3, contrib(4, 12, 7, &[5.0]));
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].agg.as_ref().unwrap().entries.len(), 3);
+        assert_eq!(out[0].payload.f32s().unwrap().unwrap(), vec![6.0]);
+    }
+
+    #[test]
+    fn timeout_evicts_originals_and_late_stragglers_pass_through() {
+        let mut eng = AggEngine::new(AggConfig {
+            max_slots: 8,
+            timeout_ns: 100,
+        });
+        let a = contrib(2, 10, 7, &[1.0]);
+        let b = contrib(3, 11, 7, &[2.0]);
+        assert!(eng.offer(0, true, 3, a.clone()).is_empty());
+        assert!(eng.offer(50, true, 3, b.clone()).is_empty());
+        // A packet for another group arrives after the deadline: the
+        // expired slot's originals ride out ahead of it, untouched.
+        let other = contrib(5, 20, 8, &[9.0]);
+        let out = eng.offer(200, true, 3, other.clone());
+        assert_eq!(out, vec![a, b]);
+        assert_eq!(eng.counters.evicted_slots, 1);
+        assert_eq!(eng.counters.evicted_pkts, 2);
+        // The evicted group's third contribution arrives late: pass-through.
+        let c = contrib(4, 12, 7, &[3.0]);
+        let out = eng.offer(210, true, 3, c.clone());
+        assert_eq!(out, vec![c]);
+        assert_eq!(eng.counters.late, 1);
+    }
+
+    #[test]
+    fn table_overflow_degrades_to_forwarding() {
+        let mut eng = AggEngine::new(AggConfig {
+            max_slots: 2,
+            timeout_ns: 1_000_000,
+        });
+        assert!(eng.offer(0, true, 2, contrib(2, 1, 1, &[1.0])).is_empty());
+        assert!(eng.offer(0, true, 2, contrib(3, 2, 2, &[1.0])).is_empty());
+        let c = contrib(4, 3, 3, &[1.0]);
+        let out = eng.offer(0, true, 2, c.clone());
+        assert_eq!(out, vec![c], "third group bounces off the full table");
+        assert_eq!(eng.counters.overflow, 1);
+        assert_eq!(eng.live_slots(), 2);
+    }
+
+    #[test]
+    fn duplicate_contribution_is_dropped_while_buffered() {
+        let mut eng = AggEngine::default();
+        let a = contrib(2, 10, 7, &[1.0]);
+        assert!(eng.offer(0, true, 2, a.clone()).is_empty());
+        assert!(eng.offer(1, true, 2, a).is_empty(), "retransmit echo absorbed");
+        assert_eq!(eng.counters.dup_drops, 1);
+        // The real second contribution still completes the slot.
+        let out = eng.offer(2, true, 2, contrib(3, 11, 7, &[2.0]));
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].payload.f32s().unwrap().unwrap(), vec![3.0]);
+    }
+
+    #[test]
+    fn non_commutative_and_non_waypoint_traffic_forwarded() {
+        let mut eng = AggEngine::default();
+        let sub = contrib_op(2, 10, 7, &[1.0], SimdOp::Sub);
+        let out = eng.offer(0, true, 2, sub.clone());
+        assert_eq!(out, vec![sub], "Sub is not switch-eligible");
+        assert_eq!(eng.counters.refused, 1);
+        let thru = contrib(3, 11, 8, &[1.0]);
+        let out = eng.offer(0, false, 2, thru.clone());
+        assert_eq!(out, vec![thru], "transit traffic never aggregates");
+        assert_eq!(eng.live_slots(), 0);
+    }
+
+    /// The exactly-once invariant under a randomized arrival schedule:
+    /// every distinct contribution entry leaves the switch exactly once
+    /// (merged or forwarded), duplicates never do.
+    #[test]
+    fn property_every_entry_leaves_exactly_once() {
+        let mut rng = crate::util::Xoshiro256::seed_from(0xA66);
+        for round in 0..50u64 {
+            let mut eng = AggEngine::new(AggConfig {
+                max_slots: 3,
+                timeout_ns: 64,
+            });
+            let groups = 1 + (round % 5) as u32;
+            let fanin = 2 + (round % 3) as u16;
+            let mut offered: Vec<(u32, u64)> = Vec::new();
+            let mut escaped: Vec<(u32, u64)> = Vec::new();
+            let mut now = 0;
+            for i in 0..40u64 {
+                now += rng.next_below(40);
+                let g = rng.next_below(groups as u64) as u32;
+                let src = 2 + rng.next_below(6) as u8;
+                let dup = !offered.is_empty() && rng.next_below(4) == 0;
+                let (src, seq) = if dup {
+                    let (s, q) = offered[rng.next_below(offered.len() as u64) as usize];
+                    (s as u8, q)
+                } else {
+                    (src, 1000 * round + i)
+                };
+                let pkt = contrib(src, seq, g, &[1.0]);
+                if !dup {
+                    offered.push((src as u32, seq));
+                }
+                for out in eng.offer(now, true, fanin, pkt) {
+                    for e in &out.agg.as_ref().unwrap().entries {
+                        escaped.push((e.src.0 & 0xFF, e.seq));
+                    }
+                }
+            }
+            // Flush everything still buffered.
+            for out in eng.expire(u64::MAX) {
+                for e in &out.agg.as_ref().unwrap().entries {
+                    escaped.push((e.src.0 & 0xFF, e.seq));
+                }
+            }
+            let mut want: Vec<(u32, u64)> = offered.clone();
+            want.sort_unstable();
+            escaped.sort_unstable();
+            assert_eq!(
+                escaped, want,
+                "round {round}: each unique entry must escape exactly once"
+            );
+        }
+    }
+}

@@ -309,6 +309,20 @@ impl Cluster {
         }
     }
 
+    pub fn switch(&self, node: NodeId) -> &Switch {
+        match &self.nodes[node] {
+            Node::Switch(s) => s,
+            _ => panic!("node {node} is not a switch"),
+        }
+    }
+
+    pub fn switch_mut(&mut self, node: NodeId) -> &mut Switch {
+        match &mut self.nodes[node] {
+            Node::Switch(s) => s,
+            _ => panic!("node {node} is not a switch"),
+        }
+    }
+
     pub(crate) fn node_ip(&self, node: NodeId) -> Option<DeviceIp> {
         match &self.nodes[node] {
             Node::Device(d) => Some(d.ip()),
@@ -499,15 +513,35 @@ impl Cluster {
         }
         let kind = match &mut self.nodes[node] {
             Node::Switch(sw) => {
-                // SROU waypoint: this switch is the current segment.
+                // SROU waypoint: this switch is the current segment. An
+                // aggregation-marked packet whose segment names us also
+                // carries the expected fan-in in the segment's `func`
+                // argument — that is the in-network reduce entry point.
+                let mut was_waypoint = false;
+                let mut fanin = 0u16;
                 if let (Some(ip), Some(cur)) = (sw.ip, pkt.srou.current()) {
                     if cur.node == ip {
+                        was_waypoint = true;
+                        fanin = cur.func;
                         pkt.srou.advance();
                     }
                 }
                 if pkt.dst().is_none() {
                     sw.no_route_drops += 1;
                     self.metrics.inc("drop_no_segment");
+                    return;
+                }
+                if pkt.flags.agg() {
+                    let outs = sw.offer_agg(eng.now(), was_waypoint, fanin, pkt);
+                    sw.forwarded += outs.len() as u64;
+                    let latency = sw.latency_ns;
+                    self.metrics
+                        .add("switch_agg_absorbed", outs.is_empty() as u64);
+                    for p in outs {
+                        eng.schedule_in(latency, move |cl: &mut Cluster, eng| {
+                            cl.send_from(eng, node, p);
+                        });
+                    }
                     return;
                 }
                 sw.forwarded += 1;
@@ -685,6 +719,14 @@ impl crate::pool::IommuDirectory for Cluster {
         };
         if let Node::Device(d) = &mut self.nodes[id] {
             d.bind_tenant(host, tenant);
+        }
+        // §2.5: the same control-plane write programs the switch ACL
+        // tables, so in-network aggregation polices the identical
+        // requester → tenant map the device IOMMUs enforce.
+        for n in &mut self.nodes {
+            if let Node::Switch(s) = n {
+                s.bind_tenant(host, tenant);
+            }
         }
     }
 }

@@ -7,17 +7,19 @@
 //! ECMP (flow-hash or per-packet spray), and SROU waypoint routing so a
 //! source can pin a packet's path through a named spine (§2.3 multipath).
 
+pub mod aggregate;
 mod cluster;
 mod link;
 pub(crate) mod shard;
 pub mod switch;
 mod topology;
 
+pub use aggregate::{AggConfig, AggCounters, AggEngine};
 pub use cluster::{
     App, AppCtx, Cluster, CompletionHook, CompletionRecord, FaultModel, Host, InjectCmd, Node,
     NodeId,
 };
 pub use link::{Link, LinkConfig, LinkId, TxResult};
-pub use shard::ShardedRuntime;
+pub use shard::{ShardPartition, ShardedRuntime};
 pub use switch::{flow_hash, EcmpMode, Switch};
 pub use topology::{DeviceProfile, Topology};

@@ -110,12 +110,33 @@ impl Ord for ShardEntry {
     }
 }
 
+/// How nodes are mapped onto shards.
+///
+/// `Modulo` is the historical default (`node % nshards`). `Pods` keeps a
+/// fat-tree pod — its devices and its leaf switch — on one shard, so the
+/// dense leaf-local traffic (including in-network aggregation at the
+/// leaf) never crosses a shard boundary; only spine hops do. The actual
+/// pod→shard table is computed where the topology is known
+/// ([`crate::comm::FabricBuilder`]) and installed with
+/// [`ShardedRuntime::with_assignment`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ShardPartition {
+    /// `node % nshards` — the historical mapping.
+    #[default]
+    Modulo,
+    /// Fat-tree pods map whole onto shards; falls back to `Modulo` on
+    /// topologies without pods.
+    Pods,
+}
+
 /// Immutable routing facts shared by all shards (the topology is fixed
 /// once a cluster is built).
 struct Routes {
     fib: Vec<std::collections::HashMap<DeviceIp, Vec<LinkId>>>,
     node_ip: Vec<Option<DeviceIp>>,
     link_owner: Vec<NodeId>,
+    /// Node → shard table (resolved [`ShardPartition`]).
+    assign: Vec<usize>,
 }
 
 /// One shard: the nodes/links it owns (full-length `Option` vectors so
@@ -123,7 +144,6 @@ struct Routes {
 /// of the cluster's mutable state.
 pub(crate) struct ClusterShard {
     index: usize,
-    nshards: usize,
     routes: Arc<Routes>,
     nodes: Vec<Option<Node>>,
     links: Vec<Option<Link>>,
@@ -150,7 +170,7 @@ pub(crate) struct ClusterShard {
 
 impl ClusterShard {
     fn owns(&self, node: NodeId) -> bool {
-        node % self.nshards == self.index
+        self.routes.assign[node] == self.index
     }
 
     /// Push an event created outside the shard's own execution (a
@@ -170,7 +190,7 @@ impl ClusterShard {
         let seq = self.sched_seq[by];
         self.sched_seq[by] += 1;
         let key = EventKey { time, src: by, seq };
-        let dst_shard = ev.node() % self.nshards;
+        let dst_shard = self.routes.assign[ev.node()];
         if dst_shard == self.index {
             self.heap.push(ShardEntry { key, ev });
         } else {
@@ -319,6 +339,11 @@ impl ClusterShard {
 
     // Mirrors `Cluster::deliver`, with per-destination reorder buffers.
     fn deliver(&mut self, node: NodeId, mut pkt: Packet) {
+        // Keep in sync with `Cluster::deliver`: aggregation-marked
+        // packets reaching a switch take the ACL + slot-table path.
+        if pkt.flags.agg() && matches!(self.nodes[node], Some(Node::Switch(_))) {
+            return self.deliver_agg(node, pkt);
+        }
         enum Kind {
             Switch { latency: SimTime },
             Device,
@@ -395,6 +420,42 @@ impl ClusterShard {
                         _ => unreachable!(),
                     }
                 }
+            }
+        }
+    }
+
+    // Mirrors the aggregation branch of `Cluster::deliver`: the switch's
+    // ACL + bounded slot table decide what (if anything) to forward.
+    fn deliver_agg(&mut self, node: NodeId, mut pkt: Packet) {
+        let now = self.now;
+        let verdict = match self.nodes[node].as_mut().expect("own node") {
+            Node::Switch(sw) => {
+                let mut was_waypoint = false;
+                let mut fanin = 0u16;
+                if let (Some(ip), Some(cur)) = (sw.ip, pkt.srou.current()) {
+                    if cur.node == ip {
+                        was_waypoint = true;
+                        fanin = cur.func;
+                        pkt.srou.advance();
+                    }
+                }
+                if pkt.dst().is_none() {
+                    sw.no_route_drops += 1;
+                    self.metrics.inc("drop_no_segment");
+                    None
+                } else {
+                    let outs = sw.offer_agg(now, was_waypoint, fanin, pkt);
+                    sw.forwarded += outs.len() as u64;
+                    self.metrics
+                        .add("switch_agg_absorbed", outs.is_empty() as u64);
+                    Some((outs, sw.latency_ns))
+                }
+            }
+            _ => unreachable!("deliver_agg only runs on switches"),
+        };
+        if let Some((outs, latency)) = verdict {
+            for p in outs {
+                self.sched(now + latency, node, NetEvent::SendFrom { node, pkt: p });
             }
         }
     }
@@ -550,6 +611,7 @@ impl ShardedRuntime {
             fib: cl.fib.clone(),
             node_ip: (0..n).map(|i| cl.node_ip(i)).collect(),
             link_owner: cl.links.iter().map(|l| l.from).collect(),
+            assign: (0..n).map(|i| i % nshards).collect(),
         });
         Self {
             nshards,
@@ -573,6 +635,27 @@ impl ShardedRuntime {
         self.nshards
     }
 
+    /// Install a custom node→shard table (a resolved [`ShardPartition`]
+    /// mapping, e.g. fat-tree pods→shards). Must be called before the
+    /// first `drive`; determinism is unaffected — event order is a pure
+    /// function of [`EventKey`]s, never of the partition.
+    pub fn with_assignment(mut self, assign: Vec<usize>) -> Self {
+        let routes = Arc::get_mut(&mut self.routes)
+            .expect("set the shard assignment before the first drive");
+        assert_eq!(
+            assign.len(),
+            routes.node_ip.len(),
+            "assignment must cover every node"
+        );
+        assert!(
+            assign.iter().all(|&s| s < self.nshards),
+            "assignment names a shard >= {}",
+            self.nshards
+        );
+        routes.assign = assign;
+        self
+    }
+
     /// Partition the cluster's mutable state into shards.
     fn decompose(&mut self, cl: &mut Cluster) -> Vec<ClusterShard> {
         let n = cl.nodes.len();
@@ -580,7 +663,6 @@ impl ShardedRuntime {
         let mut shards: Vec<ClusterShard> = (0..self.nshards)
             .map(|index| ClusterShard {
                 index,
-                nshards: self.nshards,
                 routes: Arc::clone(&self.routes),
                 nodes: (0..n).map(|_| None).collect(),
                 links: (0..nlinks).map(|_| None).collect(),
@@ -606,21 +688,21 @@ impl ShardedRuntime {
             })
             .collect();
         for (i, node) in std::mem::take(&mut cl.nodes).into_iter().enumerate() {
-            shards[i % self.nshards].nodes[i] = Some(node);
+            shards[self.routes.assign[i]].nodes[i] = Some(node);
         }
         for (lid, link) in std::mem::take(&mut cl.links).into_iter().enumerate() {
-            let owner = link.from % self.nshards;
+            let owner = self.routes.assign[link.from];
             shards[owner].links[lid] = Some(link);
         }
         for (lid, rng) in std::mem::take(&mut self.link_rng).into_iter().enumerate() {
-            let owner = self.routes.link_owner[lid] % self.nshards;
+            let owner = self.routes.assign[self.routes.link_owner[lid]];
             shards[owner].link_rng[lid] = Some(rng);
         }
         for (i, rng) in std::mem::take(&mut self.host_rng).into_iter().enumerate() {
-            shards[i % self.nshards].host_rng[i] = Some(rng);
+            shards[self.routes.assign[i]].host_rng[i] = Some(rng);
         }
         for (i, buf) in std::mem::take(&mut self.reorder).into_iter().enumerate() {
-            shards[i % self.nshards].reorder[i] = Some(buf);
+            shards[self.routes.assign[i]].reorder[i] = Some(buf);
         }
         shards
     }
@@ -697,10 +779,10 @@ impl ShardedRuntime {
         injected: Vec<(SimTime, InjectCmd)>,
     ) -> ShardRunStats {
         let mut shards = self.decompose(cl);
-        let nshards = self.nshards;
+        let routes = Arc::clone(&self.routes);
         let mut coord_seq = self.coord_seq;
         for (base, cmd) in injected {
-            apply_cmd(&mut shards, nshards, cmd, base, &mut coord_seq);
+            apply_cmd(&mut shards, &routes.assign, cmd, base, &mut coord_seq);
         }
         let mut engine = ShardedEngine::new(shards, self.lookahead);
         if self.threads > 0 {
@@ -717,7 +799,7 @@ impl ShardedRuntime {
                     let cmds = hook(&rec);
                     cl.on_completion.replace(hook);
                     for c in cmds {
-                        apply_cmd(shards, nshards, c, rec.time, &mut coord_seq);
+                        apply_cmd(shards, &routes.assign, c, rec.time, &mut coord_seq);
                     }
                 }
                 cl.completions.push(rec);
@@ -740,7 +822,7 @@ impl ShardedRuntime {
 /// (`base + delay` is when the classic deferred closure would run).
 fn apply_cmd(
     shards: &mut [ClusterShard],
-    nshards: usize,
+    assign: &[usize],
     cmd: InjectCmd,
     base: SimTime,
     coord_seq: &mut u64,
@@ -752,7 +834,7 @@ fn apply_cmd(
         delay,
     } = cmd;
     let t0 = base + delay;
-    let shard = &mut shards[origin % nshards];
+    let shard = &mut shards[assign[origin]];
     if reliable {
         debug_assert!(
             pkt.instr.replay_safe(pkt.flags),

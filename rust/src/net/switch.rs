@@ -7,6 +7,10 @@
 //! ECMP) or per-packet spray — the paper's SROU multipath argument (E4)
 //! compares exactly these two against source-pinned waypoints.
 
+use std::collections::HashMap;
+
+use crate::net::aggregate::AggEngine;
+use crate::pool::TenantId;
 use crate::sim::SimTime;
 use crate::wire::{DeviceIp, Packet};
 
@@ -31,6 +35,18 @@ pub struct Switch {
     rr: usize,
     pub forwarded: u64,
     pub no_route_drops: u64,
+    /// In-network reduction table (PR 7, paper §2.5 "or in datacenter
+    /// switch"): aggregation-marked packets naming this switch as an
+    /// SROU waypoint are folded here instead of forwarded.
+    pub agg: AggEngine,
+    /// §2.5 tenant ACL: requester → tenant, mirroring the device-side
+    /// `IommuDirectory` programming. Empty table = not enforcing.
+    pub acl: HashMap<DeviceIp, TenantId>,
+    /// Aggregation packets dropped because the requester is unbound.
+    pub acl_drops_unbound: u64,
+    /// Aggregation packets dropped because the requester is bound to a
+    /// different tenant than the packet claims.
+    pub acl_drops_foreign: u64,
 }
 
 impl Switch {
@@ -42,7 +58,48 @@ impl Switch {
             rr: 0,
             forwarded: 0,
             no_route_drops: 0,
+            agg: AggEngine::default(),
+            acl: HashMap::new(),
+            acl_drops_unbound: 0,
+            acl_drops_foreign: 0,
         }
+    }
+
+    /// Program the §2.5 ACL: `requester` belongs to `tenant`. A switch
+    /// with at least one binding enforces the table on aggregation
+    /// traffic (matching how the device-side IOMMU starts enforcing
+    /// once programmed).
+    pub fn bind_tenant(&mut self, requester: DeviceIp, tenant: TenantId) {
+        self.acl.insert(requester, tenant);
+    }
+
+    /// Run `pkt` through the ACL and the aggregation table; returns the
+    /// packets the switch must actually forward (empty if absorbed or
+    /// dropped). `was_waypoint`/`fanin` come from the SROU segment the
+    /// packet consumed at this switch.
+    pub fn offer_agg(
+        &mut self,
+        now: SimTime,
+        was_waypoint: bool,
+        fanin: u16,
+        pkt: Packet,
+    ) -> Vec<Packet> {
+        if pkt.flags.agg() && !self.acl.is_empty() {
+            if let Some(meta) = pkt.agg.as_ref() {
+                match self.acl.get(&pkt.src) {
+                    None => {
+                        self.acl_drops_unbound += 1;
+                        return self.agg.expire(now);
+                    }
+                    Some(&t) if t != meta.tenant => {
+                        self.acl_drops_foreign += 1;
+                        return self.agg.expire(now);
+                    }
+                    Some(_) => {}
+                }
+            }
+        }
+        self.agg.offer(now, was_waypoint, fanin, pkt)
     }
 
     /// Nexus-class ToR: ~600 ns forwarding, flow-hash ECMP.

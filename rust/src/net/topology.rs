@@ -48,6 +48,11 @@ pub struct Topology {
     /// Indices into `devices`, grouped by the leaf switch they hang off
     /// (one group for the star). Group order follows device order.
     pub leaf_groups: Vec<Vec<usize>>,
+    /// SROU-addressable leaf-switch ips, one per `leaf_groups` entry
+    /// (empty when the topology's leaves are unaddressed, e.g. star).
+    pub leaf_ips: Vec<DeviceIp>,
+    /// SROU-addressable spine ips (empty when there is no spine tier).
+    pub spine_ips: Vec<DeviceIp>,
 }
 
 impl Topology {
@@ -86,6 +91,8 @@ impl Topology {
             devices,
             hosts,
             switches: vec![sw],
+            leaf_ips: vec![],
+            spine_ips: vec![],
         }
     }
 
@@ -130,6 +137,8 @@ impl Topology {
             devices,
             hosts: vec![],
             switches: vec![leaf1, leaf2, spine1, spine2],
+            leaf_ips: vec![],
+            spine_ips: vec![DeviceIp::lan(201), DeviceIp::lan(202)],
         }
     }
 
@@ -180,15 +189,22 @@ impl Topology {
         profile: DeviceProfile,
     ) -> Topology {
         assert!(spines <= 55, "spine ip space is 10.0.0.200..=255");
+        assert!(pods <= 50, "leaf ip space is 10.0.0.150..=199");
         let mut cl = Cluster::new(seed);
         let spine_ids: Vec<NodeId> = (0..spines)
             .map(|s| cl.add_switch(Switch::new(Some(DeviceIp::lan(200 + s as u8)), 600, ecmp)))
             .collect();
         let mut devices = Vec::new();
         let mut leaf_groups = Vec::new();
+        let mut leaf_ips = Vec::new();
         let mut switches = spine_ids.clone();
         for p in 0..pods {
-            let leaf = cl.add_switch(Switch::new(None, 600, ecmp));
+            // Leaves are SROU-addressable so aggregation trees can name
+            // them as reduce waypoints (disjoint from devices <= .96,
+            // hosts .101.., spines .200..).
+            let leaf_ip = DeviceIp::lan(150 + p as u8);
+            let leaf = cl.add_switch(Switch::new(Some(leaf_ip), 600, ecmp));
+            leaf_ips.push(leaf_ip);
             switches.push(leaf);
             for &s in &spine_ids {
                 cl.connect(leaf, s, link.clone());
@@ -210,6 +226,8 @@ impl Topology {
             hosts: vec![],
             switches,
             leaf_groups,
+            leaf_ips,
+            spine_ips: (0..spines).map(|s| DeviceIp::lan(200 + s as u8)).collect(),
         }
     }
 

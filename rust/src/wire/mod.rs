@@ -25,6 +25,6 @@ pub mod payload;
 pub mod srou_hdr;
 
 pub use frame::{DeviceIp, ETH_OVERHEAD, IPV4_HEADER, UDP_HEADER, WIRE_OVERHEAD};
-pub use packet::Packet;
+pub use packet::{AggEntry, AggMeta, Packet, MAX_AGG_ENTRIES};
 pub use payload::Payload;
 pub use srou_hdr::{Segment, SrouHeader, FUNC_NONE};

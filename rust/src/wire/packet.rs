@@ -5,7 +5,7 @@ use anyhow::{bail, Result};
 use super::frame::{CarrierHeader, DeviceIp, UDP_HEADER, WIRE_OVERHEAD};
 use super::payload::Payload;
 use super::srou_hdr::SrouHeader;
-use crate::isa::{Flags, Instruction};
+use crate::isa::{Flags, Instruction, SimdOp};
 use crate::util::bytes::{Reader, Writer};
 
 /// Maximum NetDAM data payload: 9000 B jumbo frame budget minus carrier
@@ -14,6 +14,78 @@ pub const MAX_PAYLOAD: usize = 8832;
 /// The paper's SIMD block: 2048 × f32.
 pub const SIMD_LANES: usize = 2048;
 pub const SIMD_BLOCK_BYTES: usize = SIMD_LANES * 4;
+
+/// Hard cap on manifest entries an aggregated packet may carry (a full
+/// fat-tree pod plus a spine-merged set stays far below this).
+pub const MAX_AGG_ENTRIES: usize = 1024;
+
+/// One contribution folded into an aggregated payload: which device
+/// injected it, under which transport identity, and which completion id
+/// the collective driver is waiting on for it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct AggEntry {
+    pub src: DeviceIp,
+    /// The contributor's own injected sequence number — the root echoes
+    /// it back per entry so each sender's reliability slot clears.
+    pub seq: u64,
+    /// Driver completion id (`CollectiveDone { block }`) for this entry.
+    pub done_id: u32,
+}
+
+/// Aggregation metadata riding a [`Flags::AGG`]-marked packet (§2.5
+/// switch compute): the slot key, the commutative reduce op, and the
+/// manifest of contributions already folded into the payload. Switches
+/// union manifests when they merge; the root collector dedupes and
+/// completes per entry.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct AggMeta {
+    /// Tenant owning the collective (switch ACL check key).
+    pub tenant: u32,
+    /// Aggregation group: all contributions to one (collective, block)
+    /// share it (planners use the block's first done-id, globally unique).
+    pub group: u32,
+    /// The commutative SIMD reduce the switch applies when merging.
+    pub op: SimdOp,
+    pub entries: Vec<AggEntry>,
+}
+
+impl AggMeta {
+    pub fn encode(&self, w: &mut Writer) {
+        w.u32(self.tenant);
+        w.u32(self.group);
+        w.u8(self.op as u8);
+        w.u16(self.entries.len() as u16);
+        for e in &self.entries {
+            w.u32(e.src.0);
+            w.u64(e.seq);
+            w.u32(e.done_id);
+        }
+    }
+
+    pub fn decode(r: &mut Reader) -> Result<AggMeta> {
+        let tenant = r.u32()?;
+        let group = r.u32()?;
+        let op = SimdOp::from_u8(r.u8()?)?;
+        let n = r.u16()? as usize;
+        if n == 0 || n > MAX_AGG_ENTRIES {
+            bail!("bad aggregation entry count {n}");
+        }
+        let mut entries = Vec::with_capacity(n);
+        for _ in 0..n {
+            entries.push(AggEntry {
+                src: DeviceIp(r.u32()?),
+                seq: r.u64()?,
+                done_id: r.u32()?,
+            });
+        }
+        Ok(AggMeta {
+            tenant,
+            group,
+            op,
+            entries,
+        })
+    }
+}
 
 /// A NetDAM packet as the simulator passes it around.
 #[derive(Debug, Clone, PartialEq)]
@@ -27,6 +99,8 @@ pub struct Packet {
     /// The instruction (includes the Address operand).
     pub instr: Instruction,
     pub flags: Flags,
+    /// Aggregation metadata; present iff [`Flags::AGG`] is set.
+    pub agg: Option<AggMeta>,
     /// SIMD data payload.
     pub payload: Payload,
 }
@@ -39,6 +113,7 @@ impl Packet {
             srou,
             instr,
             flags: Flags::default(),
+            agg: None,
             payload: Payload::empty(),
         }
     }
@@ -54,6 +129,14 @@ impl Packet {
         self
     }
 
+    /// Mark for in-network aggregation: sets [`Flags::AGG`] and attaches
+    /// the metadata the switches and the root collector key on.
+    pub fn with_agg(mut self, agg: AggMeta) -> Self {
+        self.flags = self.flags.with(Flags::AGG);
+        self.agg = Some(agg);
+        self
+    }
+
     /// The device this packet is currently routed toward.
     pub fn dst(&self) -> Option<DeviceIp> {
         self.srou.current().map(|s| s.node)
@@ -66,6 +149,9 @@ impl Packet {
         w.u64(self.seq);
         self.srou.encode(&mut w);
         self.instr.encode(self.flags, &mut w);
+        if let Some(agg) = &self.agg {
+            agg.encode(&mut w);
+        }
         w.u32(0); // payload length field
         w.len()
     }
@@ -83,10 +169,16 @@ impl Packet {
         let Some(data) = self.payload.bytes() else {
             bail!("cannot encode a phantom payload to bytes");
         };
+        if self.flags.agg() != self.agg.is_some() {
+            bail!("AGG flag and aggregation metadata must agree");
+        }
         let mut body = Writer::with_capacity(64 + data.len());
         body.u64(self.seq);
         self.srou.encode(&mut body);
         self.instr.encode(self.flags, &mut body);
+        if let Some(agg) = &self.agg {
+            agg.encode(&mut body);
+        }
         body.u32(data.len() as u32);
         body.bytes(data);
         let body = body.into_vec();
@@ -120,6 +212,11 @@ impl Packet {
             // touching the NetDAM flags — fold the mark back in.
             flags = flags.with(Flags::ECN);
         }
+        let agg = if flags.agg() {
+            Some(AggMeta::decode(&mut r)?)
+        } else {
+            None
+        };
         let plen = r.u32()? as usize;
         if plen > MAX_PAYLOAD {
             bail!("payload length {plen} exceeds MTU budget");
@@ -134,6 +231,7 @@ impl Packet {
             srou,
             instr,
             flags,
+            agg,
             payload: Payload::from_bytes(data),
         };
         // Cross-check carrier routing against the SROU stack.
@@ -263,6 +361,57 @@ mod tests {
         let back = Packet::decode(&bytes).unwrap();
         assert!(back.flags.ecn());
         assert_eq!(back, pkt);
+    }
+
+    #[test]
+    fn agg_marked_packet_round_trips_with_manifest() {
+        let meta = AggMeta {
+            tenant: 3,
+            group: 41,
+            op: SimdOp::Add,
+            entries: vec![
+                AggEntry {
+                    src: ip(4),
+                    seq: 900,
+                    done_id: 41,
+                },
+                AggEntry {
+                    src: ip(5),
+                    seq: 77,
+                    done_id: 42,
+                },
+            ],
+        };
+        let pkt = Packet::new(
+            ip(4),
+            900,
+            SrouHeader::through(vec![Segment::call(ip(150), 2), Segment::to(ip(1))]),
+            Instruction::Simd {
+                op: SimdOp::Add,
+                addr: 0x2000,
+            },
+        )
+        .with_flags(Flags(Flags::RELIABLE))
+        .with_agg(meta)
+        .with_payload(Payload::from_f32s(&[2.0, 4.0]));
+        assert!(pkt.flags.agg(), "with_agg sets the flag");
+        let bytes = pkt.encode().unwrap();
+        let back = Packet::decode(&bytes).unwrap();
+        assert_eq!(back, pkt);
+        // The manifest is charged to the wire like any header byte.
+        assert!(pkt.wire_bytes() > pkt.payload.len() + WIRE_OVERHEAD + 16);
+    }
+
+    #[test]
+    fn agg_flag_without_metadata_cannot_encode() {
+        let pkt = Packet::new(
+            ip(1),
+            1,
+            SrouHeader::direct(ip(2)),
+            Instruction::Write { addr: 0 },
+        )
+        .with_flags(Flags(Flags::AGG));
+        assert!(pkt.encode().is_err());
     }
 
     #[test]

@@ -7,6 +7,7 @@
 
 use netdam::collectives::{naive_sum, AlgoKind, CollectiveReport};
 use netdam::comm::Fabric;
+use netdam::net::{Node, ShardPartition};
 
 /// A lossy, reliable ring allreduce on the 2-pod fat-tree, driven
 /// through the sharded core. Returns the bench-facing report plus every
@@ -149,6 +150,90 @@ fn pooled_mem_batch_identical_across_shard_counts() {
     assert!(r1.2 > 0, "the lossy sweep never exercised a retransmit");
     assert_eq!(r1, r2, "1 vs 2 shards");
     assert_eq!(r1, r4, "1 vs 4 shards");
+}
+
+/// A lossy switch-reduce allreduce (in-network aggregation) on the
+/// 2-pod fat-tree through the sharded core, with the shard partition a
+/// parameter. Returns the report, every rank's final vector, and the
+/// fabric-wide count of in-switch merges.
+fn lossy_switch_reduce_run(
+    shards: usize,
+    partition: ShardPartition,
+) -> (CollectiveReport, Vec<Vec<f32>>, u64) {
+    let elements = 8 * 512;
+    let mut f = Fabric::builder()
+        .fat_tree(2, 4, 2)
+        .seed(0xA66)
+        .reliable(true)
+        .loss(0.05)
+        .window(4)
+        .with_shards(shards)
+        .shard_threads(1)
+        .shard_partition(partition)
+        .build()
+        .unwrap();
+    let comm = f.communicator(elements as u64 * 4).unwrap();
+    let grads = comm.seed_gradients_exact(&mut f, elements, 0x566D);
+    let h = comm
+        .icollective(&mut f, AlgoKind::SwitchReduce, elements, 0)
+        .unwrap();
+    let out = f.wait(h).unwrap();
+    assert!(
+        out.complete(),
+        "shards={shards}: {}/{} ops",
+        out.ops_done,
+        out.ops
+    );
+    let report = f.report(&out);
+    let oracle = naive_sum(&grads);
+    let mut vecs = Vec::with_capacity(f.ranks());
+    for r in 0..f.ranks() {
+        let v = comm.read_vector(&mut f, r, elements).unwrap();
+        assert_eq!(v, oracle, "shards={shards}: rank {r} diverged from oracle");
+        vecs.push(v);
+    }
+    assert!(f.sharded_events() > 0, "the sharded core actually ran");
+    let merged: u64 = f
+        .cluster()
+        .nodes
+        .iter()
+        .map(|n| match n {
+            Node::Switch(s) => s.agg.counters.merged,
+            _ => 0,
+        })
+        .sum();
+    (report, vecs, merged)
+}
+
+/// In-network aggregation keeps the bit-identical-across-shard-counts
+/// guarantee: aggregation slots, timeouts, and straggler fallbacks are
+/// all keyed off deterministic DES state, so the report, the data, and
+/// even the in-switch merge counters match at shard counts 1, 2 and 4.
+#[test]
+fn lossy_switch_reduce_identical_across_shard_counts() {
+    let (r1, v1, m1) = lossy_switch_reduce_run(1, ShardPartition::Modulo);
+    let (r2, v2, m2) = lossy_switch_reduce_run(2, ShardPartition::Modulo);
+    let (r4, v4, m4) = lossy_switch_reduce_run(4, ShardPartition::Modulo);
+    assert!(r1.link_drops > 0, "the loss model never fired: {r1:?}");
+    assert!(m1 > 0, "the switches never aggregated anything");
+    assert_eq!(r1, r2, "1 vs 2 shards");
+    assert_eq!(r1, r4, "1 vs 4 shards");
+    assert_eq!(v1, v2);
+    assert_eq!(v1, v4);
+    assert_eq!(m1, m2, "merge counters are deterministic state too");
+    assert_eq!(m1, m4);
+}
+
+/// Shard *placement* is an execution detail like thread count:
+/// pod-aligned partitioning (devices + leaf co-sharded per pod) must be
+/// bit-identical to the default modulo striping.
+#[test]
+fn pod_partitioning_is_bit_identical_to_modulo() {
+    let (rm, vm, mm) = lossy_switch_reduce_run(2, ShardPartition::Modulo);
+    let (rp, vp, mp) = lossy_switch_reduce_run(2, ShardPartition::Pods);
+    assert_eq!(rm, rp, "Pods vs Modulo partitioning");
+    assert_eq!(vm, vp);
+    assert_eq!(mm, mp);
 }
 
 /// The scale target: a 1024-rank fat-tree allreduce completes through
