@@ -206,6 +206,7 @@ fn main() {
                         timing_only: true,
                         reliable,
                         loss_p,
+                        ..Default::default()
                     };
                     let r = run_collective(kind, &opts).expect("collective run");
                     let algo_bw = r.algo_bw_gbps(ranks);

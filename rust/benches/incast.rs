@@ -1,20 +1,53 @@
-//! Bench E3 — regenerates the §2.5 incast-avoidance comparison: direct
+//! Bench E3 + closed-loop congestion control (PR 8).
+//!
+//! Part 1 regenerates the §2.5 incast-avoidance comparison: direct
 //! many-to-one writes vs block-interleaved pool + paced READ pull.
+//!
+//! Part 2 is the DCQCN A/B grid: at fan-in {8, 32, 128} the same write
+//! storm runs unpaced, with the best static per-sender budget from a
+//! grid (the operator's oracle), and with the session's closed-loop
+//! DCQCN — goodput, p50/p99 completion latency, and Jain fairness per
+//! arm land in `BENCH_incast.json` so the perf trajectory is tracked
+//! across PRs. Set `NETDAM_BENCH_SMOKE=1` for the CI smoke (single
+//! small fan-in, two-point grid).
 
-use netdam::coordinator::{run_e3, E3Config};
+use netdam::coordinator::{run_e3, run_incast_cc, ArmStats, E3Config, IncastCcConfig};
+
+fn json_row(fanin: usize, s: &ArmStats) -> String {
+    format!(
+        "    {{\"arm\": \"{}\", \"fanin\": {}, \"goodput_gbps\": {:.3}, \
+         \"lat_p50_ns\": {}, \"lat_p99_ns\": {}, \"jain\": {:.4}, \
+         \"link_drops\": {}, \"retransmits\": {}, \"cnps\": {}, \
+         \"delivered_fraction\": {:.4}, \"elapsed_ns\": {}}}",
+        s.label,
+        fanin,
+        s.goodput_gbps,
+        s.lat_p50_ns,
+        s.lat_p99_ns,
+        s.jain,
+        s.link_drops,
+        s.retransmits,
+        s.cnps,
+        s.delivered_fraction,
+        s.elapsed_ns
+    )
+}
 
 fn main() {
-    println!("# E3 — incast avoidance via the interleaved pool (paper §2.5)\n");
     let wall = std::time::Instant::now();
-    for senders in [2usize, 4, 8] {
+    let smoke = std::env::var("NETDAM_BENCH_SMOKE").is_ok();
+
+    println!("# E3 — incast avoidance via the interleaved pool (paper §2.5)\n");
+    let pool_senders: &[usize] = if smoke { &[4] } else { &[2, 4, 8] };
+    for &senders in pool_senders {
         let cfg = E3Config {
             senders,
             devices: 4,
-            bytes_per_sender: 2 << 20,
+            bytes_per_sender: if smoke { 512 << 10 } else { 2 << 20 },
             pull_fraction: 0.92,
             seed: 0xE3,
         };
-        println!("## {senders} senders x 2 MiB\n");
+        println!("## {senders} senders x {} KiB\n", cfg.bytes_per_sender >> 10);
         let r = run_e3(&cfg).expect("e3");
         println!("{}", r.table.render());
         println!(
@@ -24,5 +57,46 @@ fn main() {
             r.pool_drops
         );
     }
+
+    println!("# closed-loop CC — unpaced vs best-static vs DCQCN\n");
+    let fanins: &[usize] = if smoke { &[8] } else { &[8, 32, 128] };
+    let grid: Vec<f64> = if smoke {
+        vec![5.0, 12.0]
+    } else {
+        vec![2.0, 5.0, 10.0, 25.0]
+    };
+    let mut json_rows: Vec<String> = Vec::new();
+    for &fanin in fanins {
+        let cfg = IncastCcConfig {
+            fanin,
+            blocks_per_sender: if smoke { 24 } else { 64 },
+            window: 16,
+            seed: 0x1CA5,
+            static_grid_gbps: grid.clone(),
+        };
+        let r = run_incast_cc(&cfg).expect("incast cc");
+        println!("## fan-in {fanin}\n\n{}", r.table.render());
+        println!(
+            "dcqcn vs best static ({}): goodput {:.2}x, p99 {:.2}x of unpaced\n",
+            r.best_static.label,
+            r.dcqcn.goodput_gbps / r.best_static.goodput_gbps.max(1e-9),
+            r.dcqcn.lat_p99_ns as f64 / r.unpaced.lat_p99_ns.max(1) as f64,
+        );
+        json_rows.push(json_row(fanin, &r.unpaced));
+        for s in &r.statics {
+            json_rows.push(json_row(fanin, s));
+        }
+        let mut best = r.best_static.clone();
+        best.label = format!("best-static ({})", best.label);
+        json_rows.push(json_row(fanin, &best));
+        json_rows.push(json_row(fanin, &r.dcqcn));
+    }
+
+    let json = format!(
+        "{{\n  \"bench\": \"incast\",\n  \"smoke\": {smoke},\n  \"results\": [\n{}\n  ]\n}}\n",
+        json_rows.join(",\n")
+    );
+    std::fs::write("BENCH_incast.json", &json).expect("write BENCH_incast.json");
+    println!("wrote BENCH_incast.json ({} rows)", json_rows.len());
     println!("bench wallclock: {:.2?}", wall.elapsed());
 }

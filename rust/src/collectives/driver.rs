@@ -42,7 +42,8 @@ use crate::isa::{
 };
 use crate::net::{Cluster, NodeId};
 use crate::sim::{Engine, SimTime};
-use crate::transport::{CompletionKey, ReliabilityTable, WindowEngine, WindowedOp};
+use crate::transport::{CcMode, CompletionKey, ReliabilityTable, WindowEngine, WindowedOp};
+use crate::util::stats::percentile_ns;
 use crate::wire::{DeviceIp, Packet, Payload};
 
 use super::halving_doubling::HalvingDoubling;
@@ -163,6 +164,10 @@ pub struct DriverOutcome {
     pub retransmits: u64,
     pub hash_guard_drops: u64,
     pub link_drops: u64,
+    /// Median per-op completion latency (wire release → completion), ns.
+    pub lat_p50_ns: SimTime,
+    /// Tail (p99) per-op completion latency, ns.
+    pub lat_p99_ns: SimTime,
 }
 
 impl DriverOutcome {
@@ -174,6 +179,8 @@ impl DriverOutcome {
             elapsed_ns: self.elapsed_ns,
             link_drops: self.link_drops,
             retransmits: self.retransmits,
+            lat_p50_ns: self.lat_p50_ns,
+            lat_p99_ns: self.lat_p99_ns,
         }
     }
 }
@@ -202,6 +209,7 @@ impl Driver {
         let mut ops_total = 0usize;
         let mut ops_done = 0usize;
         let mut elapsed: SimTime = eng.now();
+        let mut latencies: Vec<SimTime> = Vec::new();
         let mut done_id_base = 0u32;
         let n_phases = algo.phases();
         for phase in 0..n_phases {
@@ -223,11 +231,12 @@ impl Driver {
                     done_id_base = done_id_base
                         .checked_add(n_ops as u32)
                         .expect("completion id space exhausted");
-                    let wops = lower_schedule(cl, devices, spec.reliable, ops)?;
+                    let wops = lower_schedule(cl, devices, spec.reliable, false, ops)?;
                     let out = WindowEngine::new(spec.window).run(cl, eng, wops)?;
                     ops_total += n_ops;
                     ops_done += out.done;
                     elapsed = out.last_done;
+                    latencies.extend(out.latencies);
                     if out.done < n_ops {
                         break; // later phases would compute on stale data
                     }
@@ -264,6 +273,8 @@ impl Driver {
             retransmits: cl.xport.retransmits,
             hash_guard_drops,
             link_drops: cl.metrics.counter("link_drops"),
+            lat_p50_ns: percentile_ns(&latencies, 50.0),
+            lat_p99_ns: percentile_ns(&latencies, 99.0),
         })
     }
 }
@@ -276,6 +287,7 @@ pub(crate) fn lower_schedule(
     cl: &mut Cluster,
     devices: &[NodeId],
     reliable: bool,
+    paced: bool,
     ops: Vec<ScheduledOp>,
 ) -> Result<Vec<WindowedOp>> {
     let n_ranks = devices.len();
@@ -291,16 +303,17 @@ pub(crate) fn lower_schedule(
                 e.seq = op.pkt.seq;
             }
         }
+        // Self-clocked collectives skip the per-op header encode a
+        // wire_bytes() charge costs; under closed-loop congestion
+        // control the pacer needs real sizes, so charge them then.
+        let pace_bytes = if paced { op.pkt.wire_bytes() } else { 0 };
         wops.push(WindowedOp {
             slot: op.rank,
             origin: devices[op.rank],
             key: CompletionKey::DoneId(op.done_id),
             tag: op.done_id as u64,
             reliable,
-            // Collectives self-clock off completions and never run
-            // paced; skip the per-op header encode a wire_bytes()
-            // charge would cost.
-            pace_bytes: 0,
+            pace_bytes,
             pkt: op.pkt,
         });
     }
@@ -566,6 +579,10 @@ pub struct RunOpts {
     pub reliable: bool,
     /// Per-wire loss probability (fault injection).
     pub loss_p: f64,
+    /// Congestion control for device-run collectives: static budgets
+    /// (the default, self-clocked window only) or closed-loop DCQCN.
+    /// Host baselines ignore it (they model their own DCQCN-lite).
+    pub cc: CcMode,
 }
 
 impl Default for RunOpts {
@@ -578,6 +595,7 @@ impl Default for RunOpts {
             timing_only: false,
             reliable: false,
             loss_p: 0.0,
+            cc: CcMode::Static,
         }
     }
 }
@@ -641,6 +659,7 @@ pub fn run_collective(kind: AlgoKind, opts: &RunOpts) -> Result<CollectiveReport
         .reliable(opts.reliable)
         .loss(opts.loss_p)
         .timing_only(opts.timing_only)
+        .with_congestion_control(opts.cc.clone())
         .for_algo(kind, opts.ranks)?
         .build()?;
     let comm = fabric.communicator(opts.elements as u64 * 4)?;

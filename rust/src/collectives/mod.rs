@@ -60,6 +60,13 @@ pub struct CollectiveReport {
     pub elapsed_ns: SimTime,
     pub link_drops: u64,
     pub retransmits: u64,
+    /// Median per-op completion latency (wire release → completion), ns.
+    /// Nearest-rank over whole nanoseconds so the report stays `Eq`.
+    pub lat_p50_ns: SimTime,
+    /// Tail (p99) per-op completion latency, ns — the incast lens:
+    /// pacing that only preserves goodput but queues everything shows up
+    /// here, not in `elapsed_ns`.
+    pub lat_p99_ns: SimTime,
 }
 
 impl CollectiveReport {
@@ -99,6 +106,8 @@ mod tests {
             elapsed_ns: 0,
             link_drops: 0,
             retransmits: 0,
+            lat_p50_ns: 0,
+            lat_p99_ns: 0,
         };
         assert_eq!(r.algo_bw_gbps(4), 0.0, "zero elapsed must not be inf");
         let r = CollectiveReport {

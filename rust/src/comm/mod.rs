@@ -60,7 +60,8 @@ use crate::net::{
 };
 use crate::pool::{Allocation, IommuDirectory, InterleaveMap, SdnController, TenantId};
 use crate::sim::{Engine, SimTime};
-use crate::transport::{EngineSession, PlanId, ReliabilityTable, TokenBucket};
+use crate::transport::{CcMode, EngineSession, PlanId, ReliabilityTable, TokenBucket};
+use crate::util::stats::percentile_ns;
 use crate::wire::DeviceIp;
 
 /// The pool/IOMMU granule this fabric programs (the paper's 8 KiB
@@ -104,6 +105,7 @@ pub struct FabricBuilder {
     shards: usize,
     shard_threads: usize,
     partition: ShardPartition,
+    cc: CcMode,
 }
 
 impl Default for FabricBuilder {
@@ -123,6 +125,7 @@ impl Default for FabricBuilder {
             shards: 0,
             shard_threads: 0,
             partition: ShardPartition::Modulo,
+            cc: CcMode::Static,
         }
     }
 }
@@ -256,6 +259,18 @@ impl FabricBuilder {
         self
     }
 
+    /// Congestion control for the shared session. [`CcMode::Dcqcn`]
+    /// gives every window slot a closed-loop rate controller fed by
+    /// CE-marked completions (switch RED marks echoed by the device):
+    /// collectives and [`MemBatch`] plans get adaptive pacing with zero
+    /// call-site changes. Under DCQCN, collective ops charge their wire
+    /// bytes to the pacer (normally they self-clock unpaced). The
+    /// default, [`CcMode::Static`], keeps static budgets only.
+    pub fn with_congestion_control(mut self, cc: CcMode) -> Self {
+        self.cc = cc;
+        self
+    }
+
     /// Enable the §2.5/§2.6 memory pool with `per_device_bytes` of
     /// poolable memory per device. Communicator regions are carved
     /// *above* the pool share, and on a pooled fabric every communicator
@@ -369,6 +384,7 @@ impl FabricBuilder {
         } else {
             None
         };
+        let cc_paced = matches!(self.cc, CcMode::Dcqcn(_));
         Ok(Fabric {
             cl,
             eng: Engine::new(),
@@ -376,9 +392,10 @@ impl FabricBuilder {
             ips,
             hosts,
             topo: facts,
-            session: EngineSession::new(self.window),
+            session: EngineSession::new(self.window).with_congestion_control(self.cc),
             window: self.window,
             reliable: self.reliable,
+            cc_paced,
             next_done_id: 0,
             next_tenant: 1,
             next_host: 0,
@@ -418,6 +435,10 @@ pub struct CollectiveOutcome {
     pub started_ns: SimTime,
     /// Time of the last retirement (== `started_ns` when nothing ran).
     pub finished_ns: SimTime,
+    /// Per-op completion latencies (wire release → retirement, ns) from
+    /// every *folded* (completed) phase — the p50/p99 lens
+    /// [`Fabric::report`] summarizes.
+    pub latencies: Vec<SimTime>,
 }
 
 impl CollectiveOutcome {
@@ -451,6 +472,8 @@ struct OpState {
     /// Latest retirement time among released phase plans.
     last_prior: SimTime,
     ops_total: usize,
+    /// Per-op completion latencies folded from released phase plans.
+    latencies: Vec<SimTime>,
     started_at: SimTime,
     finished_at: Option<SimTime>,
     /// A phase stopped short (loss beyond retries / cancellation);
@@ -477,6 +500,9 @@ pub struct Fabric {
     session: EngineSession,
     window: usize,
     reliable: bool,
+    /// DCQCN is active: collective ops charge wire bytes to the pacer
+    /// (see `lower_schedule`'s `paced` flag).
+    cc_paced: bool,
     next_done_id: u32,
     next_tenant: TenantId,
     next_host: usize,
@@ -553,6 +579,20 @@ impl Fabric {
         self.session.max_concurrent_plans()
     }
 
+    /// The session's DCQCN rate trajectory: one `(slot, time,
+    /// rate_gbps.to_bits())` entry per CNP, in delivery order. Bit-exact
+    /// across shard counts (the determinism tests compare it verbatim);
+    /// empty under [`CcMode::Static`].
+    pub fn rate_log(&self) -> Vec<(usize, SimTime, u64)> {
+        self.session.rate_log()
+    }
+
+    /// CNPs (CE-marked completions) the session's rate controllers have
+    /// absorbed.
+    pub fn cnps(&self) -> usize {
+        self.session.cnps()
+    }
+
     // --------------------------------------------------- communicators
 
     /// Derive a new tenant communicator owning `region_bytes` of every
@@ -622,6 +662,7 @@ impl Fabric {
             done_prior: 0,
             last_prior: self.eng.now(),
             ops_total: 0,
+            latencies: Vec::new(),
             started_at: self.eng.now(),
             finished_at: None,
             stalled: false,
@@ -661,8 +702,13 @@ impl Fabric {
                     .next_done_id
                     .checked_add(ops.len() as u32)
                     .expect("completion id space exhausted");
-                let wops =
-                    lower_schedule(&mut self.cl, &self.devices, spec.reliable, ops)?;
+                let wops = lower_schedule(
+                    &mut self.cl,
+                    &self.devices,
+                    spec.reliable,
+                    self.cc_paced,
+                    ops,
+                )?;
                 self.ops[i].ops_total += wops.len();
                 let plan = self.session.submit(
                     &mut self.cl,
@@ -708,6 +754,8 @@ impl Fabric {
                             let (d, _, t) = self.session.progress(p);
                             self.ops[i].done_prior += d;
                             self.ops[i].last_prior = self.ops[i].last_prior.max(t);
+                            let lats = self.session.take_latencies(p);
+                            self.ops[i].latencies.extend(lats);
                             self.session
                                 .release(p)
                                 .expect("a complete plan is releasable");
@@ -830,6 +878,7 @@ impl Fabric {
             ops_done: done,
             started_ns: op.started_at,
             finished_ns: op.finished_at.unwrap_or(last),
+            latencies: op.latencies.clone(),
         })
     }
 
@@ -847,6 +896,8 @@ impl Fabric {
             elapsed_ns: out.elapsed_ns(),
             link_drops: self.cl.metrics.counter("link_drops"),
             retransmits: self.cl.xport.retransmits,
+            lat_p50_ns: percentile_ns(&out.latencies, 50.0),
+            lat_p99_ns: percentile_ns(&out.latencies, 99.0),
         }
     }
 

@@ -23,6 +23,7 @@ use crate::collectives::{run_collective, AlgoKind, CollectiveReport, RunOpts};
 use crate::comm::{Communicator, Fabric};
 use crate::metrics::Table;
 use crate::sim::{fmt_ns, SimTime};
+use crate::transport::CcMode;
 
 #[derive(Debug, Clone)]
 pub struct E2Config {
@@ -36,6 +37,9 @@ pub struct E2Config {
     pub with_baselines: bool,
     /// Which collectives to run; the classic paper triple by default.
     pub algos: Vec<AlgoKind>,
+    /// Congestion control for the device arms ([`CcMode::Dcqcn`] turns
+    /// on closed-loop per-slot pacing; host baselines ignore it).
+    pub cc: CcMode,
 }
 
 impl Default for E2Config {
@@ -52,6 +56,7 @@ impl Default for E2Config {
                 AlgoKind::RingRoce,
                 AlgoKind::MpiNative,
             ],
+            cc: CcMode::Static,
         }
     }
 }
@@ -106,6 +111,7 @@ pub fn run_e2(cfg: &E2Config) -> Result<E2Result> {
                 seed: cfg.seed,
                 window: cfg.window,
                 timing_only: cfg.timing_only,
+                cc: cfg.cc.clone(),
                 ..Default::default()
             };
             runs.push((kind, run_collective(kind, &opts)?));
@@ -123,6 +129,7 @@ pub fn run_e2(cfg: &E2Config) -> Result<E2Result> {
                 .seed(cfg.seed)
                 .window(cfg.window)
                 .timing_only(cfg.timing_only)
+                .with_congestion_control(cfg.cc.clone())
                 .for_algo(kind, n)?
                 .build()?;
             let comm = fabric.communicator(cfg.elements as u64 * 4)?;

@@ -1,0 +1,330 @@
+//! Incast A/B harness for closed-loop congestion control (PR 8).
+//!
+//! E3 showed the paper's §2.5 cure: scatter over the pool and pull back
+//! with a *static* token-bucket budget. A static budget needs the
+//! operator to know the fan-in; under mixed tenants or shifting fan-in
+//! it is either too timid (wasted goodput) or too brave (incast
+//! collapse). This harness pits three arms against the same many-to-one
+//! write storm on one switch port:
+//!
+//! * **unpaced** — every sender blasts at line rate; the 500 KB egress
+//!   buffer overruns, tail drops trigger 300 µs timeout stalls, and p99
+//!   latency explodes (classic incast collapse).
+//! * **static** — each sender's plan carries a plan-private
+//!   [`TokenBucket`] from a fixed per-sender budget grid; the best grid
+//!   point is reported (the operator's oracle).
+//! * **dcqcn** — the session runs [`CcMode::Dcqcn`]: switch RED marks
+//!   CE past the ramp, the device echoes CE on completions, and each
+//!   sender's slot controller cuts multiplicatively then recovers —
+//!   no budget knob, the loop *finds* the fair share.
+//!
+//! Reported per arm: aggregate goodput, p50/p99 completion latency,
+//! Jain fairness across senders, drops/retransmits/CNPs. All senders
+//! ride the shared [`EngineSession`] — the same engine every collective
+//! and pooled-memory plan uses, so what this harness measures is the
+//! production data path, not a model of it.
+
+use anyhow::{ensure, Result};
+
+use crate::isa::{Flags, Instruction};
+use crate::metrics::Table;
+use crate::net::{Cluster, DeviceProfile, LinkConfig, Topology};
+use crate::roce::DcqcnConfig;
+use crate::sim::{fmt_ns, Engine, SimTime};
+use crate::transport::{
+    CcMode, CompletionKey, EngineSession, PlanId, ReliabilityTable, TokenBucket, WindowedOp,
+};
+use crate::util::stats::{jain_fairness, percentile_ns};
+use crate::wire::{DeviceIp, Packet, Payload, SrouHeader};
+
+/// The pool interleave block — every sender moves whole blocks.
+const BLOCK: usize = 8192;
+
+#[derive(Debug, Clone)]
+pub struct IncastCcConfig {
+    /// Senders converging on the one receiver device.
+    pub fanin: usize,
+    /// 8 KiB blocks each sender writes.
+    pub blocks_per_sender: usize,
+    /// Per-sender in-flight window.
+    pub window: usize,
+    pub seed: u64,
+    /// Per-sender budgets (Gbps) the static arm sweeps; the best grid
+    /// point by goodput is reported as `best_static`.
+    pub static_grid_gbps: Vec<f64>,
+}
+
+impl Default for IncastCcConfig {
+    fn default() -> Self {
+        Self {
+            fanin: 16,
+            blocks_per_sender: 32,
+            window: 8,
+            seed: 0x1CA5,
+            static_grid_gbps: vec![2.0, 5.0, 10.0, 25.0],
+        }
+    }
+}
+
+/// One arm's scoreboard.
+#[derive(Debug, Clone)]
+pub struct ArmStats {
+    pub label: String,
+    /// Delivered blocks / completion time, all senders pooled (Gbit/s).
+    pub goodput_gbps: f64,
+    pub lat_p50_ns: SimTime,
+    pub lat_p99_ns: SimTime,
+    /// Jain fairness over per-sender goodputs (1.0 = equal shares).
+    pub jain: f64,
+    pub link_drops: u64,
+    pub retransmits: u64,
+    /// CE-marked completions absorbed by slot controllers (DCQCN only).
+    pub cnps: usize,
+    pub elapsed_ns: SimTime,
+    /// Blocks retired / blocks offered — < 1.0 when retry exhaustion
+    /// stranded ops (the collapse the closed loop is meant to prevent).
+    pub delivered_fraction: f64,
+}
+
+#[derive(Debug)]
+pub struct IncastCcResult {
+    pub unpaced: ArmStats,
+    /// Every static grid point, in grid order.
+    pub statics: Vec<ArmStats>,
+    /// The grid point with the best goodput (the operator's oracle).
+    pub best_static: ArmStats,
+    pub dcqcn: ArmStats,
+    pub table: Table,
+}
+
+enum Arm {
+    Unpaced,
+    /// Per-sender budget in Gbps.
+    Static(f64),
+    Dcqcn,
+}
+
+impl Arm {
+    fn label(&self) -> String {
+        match self {
+            Arm::Unpaced => "unpaced".into(),
+            Arm::Static(g) => format!("static {g} Gbps/sender"),
+            Arm::Dcqcn => "dcqcn".into(),
+        }
+    }
+}
+
+/// Run one arm: fresh star fabric (1 device, `fanin` sender hosts), one
+/// shared session, one plan per sender (plan-local slot 0 maps to a
+/// distinct session slot, so per-slot DCQCN state is per-sender).
+fn run_arm(cfg: &IncastCcConfig, arm: &Arm) -> Result<ArmStats> {
+    ensure!(cfg.fanin >= 1 && cfg.fanin <= 128, "fanin must be 1..=128");
+    let t = Topology::star_with(
+        cfg.seed,
+        1,
+        cfg.fanin,
+        LinkConfig::dc_100g(),
+        DeviceProfile::TimingOnly,
+    );
+    let mut cl = t.cluster;
+    // Shallow-timeout table: tail drops become 300 us stalls, the incast
+    // failure mode the closed loop is supposed to prevent (E3's table).
+    cl.xport = ReliabilityTable::new(300_000, 40);
+    let mut eng: Engine<Cluster> = Engine::new();
+    let dev_ip = DeviceIp::lan(1);
+    let mut session = EngineSession::new(cfg.window);
+    if let Arm::Dcqcn = arm {
+        session = session.with_congestion_control(CcMode::Dcqcn(DcqcnConfig::default()));
+    }
+    let mut plans: Vec<PlanId> = Vec::with_capacity(cfg.fanin);
+    for s in 0..cfg.fanin {
+        let host = t.hosts[s];
+        let host_ip = DeviceIp::lan(101 + s as u8);
+        let base = (s * cfg.blocks_per_sender * BLOCK) as u64;
+        let ops: Vec<WindowedOp> = (0..cfg.blocks_per_sender)
+            .map(|b| {
+                let seq = cl.alloc_seq(host);
+                let pkt = Packet::new(
+                    host_ip,
+                    seq,
+                    SrouHeader::direct(dev_ip),
+                    Instruction::Write {
+                        addr: base + (b * BLOCK) as u64,
+                    },
+                )
+                .with_flags(Flags(Flags::RELIABLE))
+                .with_payload(Payload::phantom(BLOCK));
+                let pace_bytes = pkt.wire_bytes();
+                WindowedOp {
+                    slot: 0,
+                    origin: host,
+                    key: CompletionKey::Seq(seq),
+                    tag: b as u64,
+                    reliable: true,
+                    pace_bytes,
+                    pkt,
+                }
+            })
+            .collect();
+        let plan = match arm {
+            Arm::Static(gbps) => session.submit_paced(
+                &mut cl,
+                &mut eng,
+                ops,
+                false,
+                cfg.window,
+                TokenBucket::new(*gbps, 2 * BLOCK),
+            )?,
+            _ => session.submit(&mut cl, &mut eng, ops, false, cfg.window)?,
+        };
+        plans.push(plan);
+    }
+    session.drive(&mut cl, &mut eng);
+    let cnps = session.cnps();
+    let mut latencies: Vec<SimTime> = Vec::new();
+    let mut per_sender_goodput: Vec<f64> = Vec::with_capacity(cfg.fanin);
+    let mut done_total = 0usize;
+    let mut last = 0u64;
+    for &p in &plans {
+        let out = session.outcome(p);
+        done_total += out.done;
+        last = last.max(out.last_done);
+        let span = out.last_done.saturating_sub(out.submitted_at);
+        per_sender_goodput.push(if span == 0 {
+            0.0
+        } else {
+            out.done as f64 * BLOCK as f64 * 8.0 / span as f64
+        });
+        latencies.extend(out.latencies);
+    }
+    session.close(&mut cl);
+    let offered = cfg.fanin * cfg.blocks_per_sender;
+    let elapsed = last.max(1);
+    Ok(ArmStats {
+        label: arm.label(),
+        goodput_gbps: done_total as f64 * BLOCK as f64 * 8.0 / elapsed as f64,
+        lat_p50_ns: percentile_ns(&latencies, 50.0),
+        lat_p99_ns: percentile_ns(&latencies, 99.0),
+        jain: jain_fairness(&per_sender_goodput),
+        link_drops: cl.metrics.counter("link_drops"),
+        retransmits: cl.xport.retransmits,
+        cnps,
+        elapsed_ns: last,
+        delivered_fraction: done_total as f64 / offered.max(1) as f64,
+    })
+}
+
+pub fn run_incast_cc(cfg: &IncastCcConfig) -> Result<IncastCcResult> {
+    ensure!(
+        !cfg.static_grid_gbps.is_empty(),
+        "the static arm needs at least one budget grid point"
+    );
+    let unpaced = run_arm(cfg, &Arm::Unpaced)?;
+    let mut statics = Vec::with_capacity(cfg.static_grid_gbps.len());
+    for &g in &cfg.static_grid_gbps {
+        statics.push(run_arm(cfg, &Arm::Static(g))?);
+    }
+    let best_static = statics
+        .iter()
+        .max_by(|a, b| a.goodput_gbps.total_cmp(&b.goodput_gbps))
+        .expect("non-empty grid")
+        .clone();
+    let dcqcn = run_arm(cfg, &Arm::Dcqcn)?;
+
+    let mut table = Table::new(&[
+        "arm",
+        "goodput",
+        "p50 lat",
+        "p99 lat",
+        "jain",
+        "drops",
+        "retx",
+        "cnps",
+    ]);
+    let mut row = |s: &ArmStats| {
+        table.row(&[
+            s.label.clone(),
+            format!("{:.1} Gbps", s.goodput_gbps),
+            fmt_ns(s.lat_p50_ns),
+            fmt_ns(s.lat_p99_ns),
+            format!("{:.3}", s.jain),
+            s.link_drops.to_string(),
+            s.retransmits.to_string(),
+            s.cnps.to_string(),
+        ]);
+    };
+    row(&unpaced);
+    for s in &statics {
+        row(s);
+    }
+    row(&dcqcn);
+
+    Ok(IncastCcResult {
+        unpaced,
+        statics,
+        best_static,
+        dcqcn,
+        table,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dcqcn_closes_the_loop_under_incast() {
+        let cfg = IncastCcConfig {
+            fanin: 8,
+            blocks_per_sender: 24,
+            window: 16,
+            static_grid_gbps: vec![5.0, 12.0],
+            ..Default::default()
+        };
+        let r = run_incast_cc(&cfg).unwrap();
+        // The closed loop actually closed: RED marks were echoed back and
+        // absorbed as CNPs.
+        assert!(r.dcqcn.cnps > 0, "no CNPs — the feedback loop never fired");
+        assert_eq!(r.unpaced.cnps, 0, "unpaced arm has no controllers");
+        // DCQCN delivers everything (the fair share keeps queues under
+        // the drop point once the loop converges).
+        assert!(
+            r.dcqcn.delivered_fraction == 1.0,
+            "dcqcn stranded {:.2}% of blocks",
+            (1.0 - r.dcqcn.delivered_fraction) * 100.0
+        );
+        // Adaptive pacing never drops more than the uncontrolled blast.
+        assert!(
+            r.dcqcn.link_drops <= r.unpaced.link_drops,
+            "dcqcn dropped {} > unpaced {}",
+            r.dcqcn.link_drops,
+            r.unpaced.link_drops
+        );
+        // Converged senders share fairly.
+        assert!(r.dcqcn.jain >= 0.9, "jain {:.3} < 0.9", r.dcqcn.jain);
+        // Sanity on the lens itself.
+        assert!(r.dcqcn.lat_p99_ns >= r.dcqcn.lat_p50_ns);
+    }
+
+    #[test]
+    fn static_grid_reports_every_point_and_picks_the_best() {
+        let cfg = IncastCcConfig {
+            fanin: 4,
+            blocks_per_sender: 8,
+            window: 4,
+            static_grid_gbps: vec![2.0, 20.0],
+            ..Default::default()
+        };
+        let r = run_incast_cc(&cfg).unwrap();
+        assert_eq!(r.statics.len(), 2);
+        let best = r
+            .statics
+            .iter()
+            .map(|s| s.goodput_gbps)
+            .fold(f64::MIN, f64::max);
+        assert_eq!(r.best_static.goodput_gbps, best);
+        // A 4-way fan-in at 2 Gbps/sender can't beat 20 Gbps/sender on
+        // an uncongested 100G port.
+        assert!(r.statics[1].goodput_gbps > r.statics[0].goodput_gbps);
+    }
+}

@@ -7,8 +7,10 @@ pub mod e1_latency;
 pub mod e2_allreduce;
 pub mod e3_incast;
 pub mod e4_multipath;
+pub mod incast_cc;
 
 pub use e1_latency::{run_e1, E1Config, E1Result};
 pub use e2_allreduce::{run_e2, E2Config, E2Result};
 pub use e3_incast::{run_e3, E3Config, E3Result};
 pub use e4_multipath::{run_e4, E4Config, E4Mode, E4Result};
+pub use incast_cc::{run_incast_cc, ArmStats, IncastCcConfig, IncastCcResult};

@@ -16,7 +16,7 @@ use anyhow::{bail, ensure, Result};
 use crate::alu::{block_hash, AluBackend, NativeAlu};
 use crate::iommu::{Access, Iommu, IommuFault, TenantId};
 use crate::isa::registry::{ExecCtx, ExecOutcome, InstructionRegistry, MemAccess};
-use crate::isa::{Instruction, Program, Step, NO_COMPLETION, USER_OPCODE_BASE};
+use crate::isa::{Flags, Instruction, Program, Step, NO_COMPLETION, USER_OPCODE_BASE};
 use crate::sim::SimTime;
 use crate::util::bytes::{bytes_to_f32s, f32s_to_bytes};
 use crate::util::Xoshiro256;
@@ -225,7 +225,13 @@ impl NetDamDevice {
         self.pkts_in += 1;
         self.last_fault = None;
         let (src, seq) = (pkt.src, pkt.seq);
-        match self.execute(now, pkt) {
+        // A CE mark on the request must be echoed into everything this
+        // device emits for it (replies travel the uncongested reverse
+        // path, so without the echo the origin never sees congestion —
+        // this is the CNP half of the DCQCN loop; forwarded program hops
+        // keep the mark like the same IP packet would).
+        let ce = pkt.flags.ecn();
+        let mut emits = match self.execute(now, pkt) {
             Ok(emits) => {
                 self.pkts_out += emits.len() as u64;
                 emits
@@ -250,7 +256,13 @@ impl NetDamDevice {
                     Vec::new()
                 }
             },
+        };
+        if ce {
+            for e in &mut emits {
+                e.pkt.flags = e.pkt.flags.with(Flags::ECN);
+            }
         }
+        emits
     }
 
     /// Fixed pipeline cost excluding memory/ALU.

@@ -153,6 +153,29 @@
 //! Topology-aware shard placement ([`net::ShardPartition::Pods`]) keeps
 //! each pod's devices and leaf on one DES shard; results stay
 //! bit-identical to the default striping.
+//!
+//! # Closed-loop congestion control (DCQCN in the transport engine)
+//!
+//! Static token-bucket budgets (the §2.5 "rate-limited READ") need the
+//! operator to know the fan-in; [`comm::FabricBuilder::with_congestion_control`]
+//! with [`transport::CcMode::Dcqcn`] closes the loop instead. Switch
+//! egress links RED-mark frames past a deterministic credit-based ramp
+//! ([`net::LinkConfig::with_ecn`]), devices echo the CE bit onto every
+//! emit of a marked request so it returns on the (uncongested)
+//! completion path, and the session treats each CE-marked completion as
+//! a CNP to the owning slot's [`roce::RateController`] — DCQCN's
+//! α-tracked multiplicative cut, then timed fast-recovery and additive
+//! probing ([`roce::DcqcnConfig`]). The controller's output drives the
+//! slot's [`transport::TokenBucket`] via `set_rate`, whose release
+//! envelope stays `burst + ∫rate(t)dt` across retargets, so adaptive
+//! pacing inherits every paced-mode property. CE marking, echo, and CNP
+//! absorption run identically on the classic and sharded DES cores
+//! (CNPs fire from barrier-replayed completion records in global key
+//! order), keeping rate *trajectories* bit-identical at any shard
+//! count. `cargo bench --bench incast` runs the A/B: unpaced vs best
+//! static budget vs DCQCN under fan-in {8, 32, 128} incast, reporting
+//! goodput, p50/p99 completion latency, and Jain fairness
+//! (`BENCH_incast.json`); `--cc dcqcn` turns it on from the CLI.
 
 pub mod alu;
 pub mod cli;

@@ -19,6 +19,14 @@ use netdam::cli::Args;
 use netdam::config::Config;
 use netdam::coordinator::{run_e1, run_e2, run_e3, run_e4, E1Config, E2Config, E3Config, E4Config};
 
+/// `--cc dcqcn|static` — closed-loop DCQCN vs the static pacing default.
+fn parse_cc(args: &Args) -> Result<netdam::transport::CcMode> {
+    match args.opt("cc") {
+        Some(mode) => netdam::transport::CcMode::parse(mode),
+        None => Ok(netdam::transport::CcMode::Static),
+    }
+}
+
 fn load_config(args: &Args) -> Result<Config> {
     let mut cfg = match args.opt("config") {
         Some(path) => Config::load(std::path::Path::new(path))?,
@@ -75,12 +83,18 @@ fn main() -> Result<()> {
                 seed: args.opt_u64("seed", cfg.u64("seed", 0xE2))?,
                 with_baselines: !args.flag("no-baselines"),
                 algos,
+                cc: parse_cc(&args)?,
             };
             println!(
-                "E2 — {} x f32 allreduce over {} ranks ({})",
+                "E2 — {} x f32 allreduce over {} ranks ({}, cc {})",
                 c.elements,
                 c.ranks,
-                if c.timing_only { "timing-only" } else { "data-bearing" }
+                if c.timing_only { "timing-only" } else { "data-bearing" },
+                if matches!(c.cc, netdam::transport::CcMode::Dcqcn(_)) {
+                    "dcqcn"
+                } else {
+                    "static"
+                }
             );
             let r = run_e2(&c)?;
             print!("{}", r.table.render());
@@ -283,6 +297,7 @@ fn run_mem_demo(args: &Args) -> Result<()> {
         .seed(0x3E3D)
         .window(window)
         .with_pool(1 << 30)
+        .with_congestion_control(parse_cc(args)?)
         .build()?;
     let client = fabric.mem_client()?;
     let tenant = client.tenant;
@@ -413,7 +428,8 @@ fn run_comm_demo(args: &Args) -> Result<()> {
         .star(ranks)
         .hosts(1)
         .seed(0xC033)
-        .with_pool(1 << 20);
+        .with_pool(1 << 20)
+        .with_congestion_control(parse_cc(args)?);
     if shards > 0 {
         builder = builder.with_shards(shards).shard_threads(shard_threads);
     }
@@ -549,6 +565,10 @@ fn print_usage() {
                     reduce-scatter|all-gather|broadcast|tree-bcast|reduce|ring-roce|\n\
                     mpi-native (comma list, or `all`); switch-reduce folds contributions\n\
                     IN the fat-tree switches (§2.5 in-network aggregation)\n\
+         congestion control: allreduce/mem/comm take --cc dcqcn|static — dcqcn turns on\n\
+                    closed-loop per-slot rate control (ECN CE -> CNP -> multiplicative\n\
+                    cut + fast recovery) in the shared transport engine; static (default)\n\
+                    keeps the fixed token-bucket budgets\n\
          prog:      packet-program demo (build -> verify -> execute); --elements N --ranks N\n\
          mem:       pooled-memory demo on the session API (lease -> IOMMU -> scatter-gather ->\n\
                     NAK -> pipelined batch -> multi-bag gather); --devices N --bytes B\n\

@@ -134,6 +134,11 @@ pub struct CompletionRecord {
     pub from: DeviceIp,
     pub seq: u64,
     pub instr: Instruction,
+    /// The response carried a congestion-experienced mark (set by a switch
+    /// queue en route, or echoed by the device from the request). The
+    /// window engine treats this as a CNP for the owning slot's DCQCN
+    /// controller.
+    pub ecn: bool,
 }
 
 pub struct Cluster {
@@ -629,6 +634,7 @@ impl Cluster {
             from: pkt.src,
             seq: pkt.seq,
             instr: pkt.instr.clone(),
+            ecn: pkt.flags.ecn(),
         };
         if let Some(mut hook) = self.on_completion.take() {
             let cmds = hook(&rec);

@@ -20,19 +20,26 @@ pub struct LinkConfig {
     pub prop_ns: SimTime,
     /// Egress buffer (bytes) shared by everything queued on this link.
     pub buffer_bytes: usize,
-    /// ECN mark threshold (bytes queued). `usize::MAX` disables marking.
+    /// RED min threshold (bytes queued): below it no frame is marked.
+    /// `usize::MAX` disables marking.
     pub ecn_threshold: usize,
+    /// RED max threshold: at or above it every frame is marked. Between
+    /// min and max the marking probability ramps linearly — realized
+    /// *deterministically* via a credit accumulator so the sharded core
+    /// stays bit-identical across shard counts (no RNG draw per frame).
+    pub ecn_max: usize,
 }
 
 impl LinkConfig {
     /// 100G datacenter port: ~500 KB egress buffer per port (shallow
-    /// Nexus-class shared buffer share), ECN at 20%.
+    /// Nexus-class shared buffer share), RED ramp over 20%–60% occupancy.
     pub fn dc_100g() -> Self {
         Self {
             rate: GBPS(100.0),
             prop_ns: 500, // ~100 m fiber equivalent incl. PHY
             buffer_bytes: 500_000,
             ecn_threshold: 100_000,
+            ecn_max: 300_000,
         }
     }
 
@@ -43,6 +50,14 @@ impl LinkConfig {
 
     pub fn with_buffer(mut self, bytes: usize) -> Self {
         self.buffer_bytes = bytes;
+        self
+    }
+
+    /// Set the RED marking ramp: no marks below `min` bytes queued, every
+    /// frame marked at `max` and above, linear in between.
+    pub fn with_ecn(mut self, min: usize, max: usize) -> Self {
+        self.ecn_threshold = min;
+        self.ecn_max = max.max(min);
         self
     }
 }
@@ -61,6 +76,10 @@ pub struct Link {
     /// buffer accounting exact *without a DES event per frame* (§ Perf:
     /// removed one third of all events).
     in_flight: VecDeque<(u64, usize)>,
+    /// RED marking credit: each frame in the [min, max) ramp deposits its
+    /// marking fraction; a mark fires (and spends 1.0) when the balance
+    /// reaches 1. Deterministic stand-in for RED's random draw.
+    ecn_credit: f64,
     // --- counters ---
     pub tx_pkts: u64,
     pub tx_bytes: u64,
@@ -87,6 +106,7 @@ impl Link {
             busy_until_ps: 0,
             queued_bytes: 0,
             in_flight: VecDeque::new(),
+            ecn_credit: 0.0,
             tx_pkts: 0,
             tx_bytes: 0,
             drops: 0,
@@ -114,7 +134,7 @@ impl Link {
             self.drops += 1;
             return TxResult::Dropped;
         }
-        let ecn = self.queued_bytes > self.cfg.ecn_threshold;
+        let ecn = self.red_mark(self.queued_bytes);
         if ecn {
             self.ecn_marks += 1;
         }
@@ -131,6 +151,31 @@ impl Link {
             arrival: departure + self.cfg.prop_ns,
             departure,
             ecn,
+        }
+    }
+
+    /// RED marking decision for a frame seeing `queued` bytes ahead of it.
+    /// Below min: no mark, credit resets (the queue drained). At/above
+    /// max: always mark. In between: deposit the linear fraction and mark
+    /// when the accumulated credit crosses 1 — same average mark rate as
+    /// probabilistic RED, but a pure function of the arrival sequence, so
+    /// identical across shard counts.
+    fn red_mark(&mut self, queued: usize) -> bool {
+        let min = self.cfg.ecn_threshold;
+        let max = self.cfg.ecn_max.max(min);
+        if queued < min {
+            self.ecn_credit = 0.0;
+            false
+        } else if queued >= max || min == max {
+            true
+        } else {
+            self.ecn_credit += (queued - min) as f64 / (max - min) as f64;
+            if self.ecn_credit >= 1.0 {
+                self.ecn_credit -= 1.0;
+                true
+            } else {
+                false
+            }
         }
     }
 
@@ -220,23 +265,45 @@ mod tests {
         assert_eq!(l.drops, 1);
     }
 
+    fn sent_ecn(l: &mut Link, now: SimTime, bytes: usize) -> bool {
+        match l.transmit(now, bytes) {
+            TxResult::Sent { ecn, .. } => ecn,
+            TxResult::Dropped => panic!("dropped"),
+        }
+    }
+
     #[test]
-    fn ecn_marks_above_threshold() {
-        let mut cfg = LinkConfig::dc_100g();
-        cfg.ecn_threshold = 10_000;
-        let mut l = Link::new(0, 1, cfg);
-        let TxResult::Sent { ecn, .. } = l.transmit(0, 9000) else {
-            panic!()
-        };
-        assert!(!ecn);
-        let TxResult::Sent { ecn, .. } = l.transmit(0, 9000) else {
-            panic!()
-        };
-        assert!(!ecn, "9000 < 10000 threshold");
-        let TxResult::Sent { ecn, .. } = l.transmit(0, 9000) else {
-            panic!()
-        };
-        assert!(ecn, "18000 > threshold");
+    fn red_ramp_marks_by_accumulated_credit() {
+        // Ramp [5000, 21000): fractions accumulate until a mark fires.
+        let mut l = Link::new(0, 1, LinkConfig::dc_100g().with_ecn(5_000, 21_000));
+        assert!(!sent_ecn(&mut l, 0, 9000), "queue 0 < min");
+        assert!(!sent_ecn(&mut l, 0, 9000), "credit 0.25 (4000/16000)");
+        assert!(
+            sent_ecn(&mut l, 0, 9000),
+            "credit 0.25 + 0.8125 crosses 1.0"
+        );
+        assert!(sent_ecn(&mut l, 0, 9000), "queue 27000 >= max always marks");
+        assert_eq!(l.ecn_marks, 2);
+    }
+
+    #[test]
+    fn red_credit_resets_when_queue_drains() {
+        let mut l = Link::new(0, 1, LinkConfig::dc_100g().with_ecn(5_000, 21_000));
+        l.transmit(0, 9000);
+        assert!(!sent_ecn(&mut l, 0, 9000), "banks 0.25 credit");
+        // Much later the queue has drained below min: the banked credit
+        // must not leak into the next congestion epoch.
+        assert!(!sent_ecn(&mut l, 1_000_000, 9000), "queue 0 resets credit");
+        assert!(!sent_ecn(&mut l, 1_000_000, 9000), "0.25 again, no carryover");
+    }
+
+    #[test]
+    fn degenerate_ramp_marks_like_a_step() {
+        // min == max: classic step-threshold behavior at 10 KB.
+        let mut l = Link::new(0, 1, LinkConfig::dc_100g().with_ecn(10_000, 10_000));
+        assert!(!sent_ecn(&mut l, 0, 9000), "queue 0");
+        assert!(!sent_ecn(&mut l, 0, 9000), "queue 9000 < 10000");
+        assert!(sent_ecn(&mut l, 0, 9000), "queue 18000 >= threshold");
         assert_eq!(l.ecn_marks, 1);
     }
 

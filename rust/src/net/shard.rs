@@ -490,6 +490,7 @@ impl ClusterShard {
             from: pkt.src,
             seq: pkt.seq,
             instr: pkt.instr.clone(),
+            ecn: pkt.flags.ecn(),
         };
         self.completion_log.push((self.current_key, rec));
     }

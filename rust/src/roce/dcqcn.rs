@@ -20,6 +20,9 @@ pub struct DcqcnConfig {
     pub period_ns: SimTime,
     /// Minimum rate floor (Gbps).
     pub min_gbps: f64,
+    /// Token-bucket depth when the controller drives a pacer (bytes) —
+    /// how much a slot may burst ahead of its sustained rate.
+    pub burst_bytes: usize,
 }
 
 impl Default for DcqcnConfig {
@@ -30,6 +33,7 @@ impl Default for DcqcnConfig {
             ai_gbps: 5.0,
             period_ns: 55_000, // ≈ DCQCN's 55 us rate timer
             min_gbps: 1.0,
+            burst_bytes: 18_000, // two jumbo frames of headroom
         }
     }
 }

@@ -17,6 +17,6 @@ pub mod dcqcn;
 pub mod qp;
 pub mod responder;
 
-pub use dcqcn::RateController;
+pub use dcqcn::{DcqcnConfig, RateController};
 pub use qp::{GoBackN, TxEvent};
 pub use responder::RoceResponder;

@@ -71,6 +71,7 @@ use anyhow::{ensure, Result};
 
 use crate::isa::Instruction;
 use crate::net::{Cluster, CompletionRecord, InjectCmd, NodeId};
+use crate::roce::dcqcn::{DcqcnConfig, RateController};
 use crate::sim::{Engine, SimTime};
 use crate::wire::{DeviceIp, Packet};
 
@@ -78,6 +79,33 @@ use super::rate::TokenBucket;
 
 /// Upper bound on window slots (sanity guard against caller bugs).
 const MAX_SLOTS: usize = 65_536;
+
+/// Congestion-control mode for a session or fabric — the public switch
+/// behind [`EngineSession::with_congestion_control`] and
+/// `FabricBuilder::with_congestion_control`.
+#[derive(Debug, Clone, Default)]
+pub enum CcMode {
+    /// Keep whatever static pacing (or none) the caller configured.
+    #[default]
+    Static,
+    /// Closed-loop DCQCN: each window slot gets its own
+    /// [`RateController`] actuating a [`TokenBucket`]; CE-marked
+    /// completions arriving at the origin act as CNPs for the owning
+    /// slot (multiplicative cut + α-EWMA), and the paced-refill decision
+    /// reads the controller's *current* rate.
+    Dcqcn(DcqcnConfig),
+}
+
+impl CcMode {
+    /// Parse a CLI-style mode name (`dcqcn` | `static`).
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "dcqcn" => Ok(CcMode::Dcqcn(DcqcnConfig::default())),
+            "static" => Ok(CcMode::Static),
+            other => anyhow::bail!("unknown cc mode {other:?} (want dcqcn|static)"),
+        }
+    }
+}
 
 /// How one op recognises its completion.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -159,6 +187,8 @@ pub struct WindowOutcome {
     /// Retired completions (only when [`WindowEngine::record_responses()`]
     /// is on; `CollectiveDone` floods would be noise for collectives).
     pub responses: Vec<Retired>,
+    /// Per-op completion latency (wire release → retirement, ns).
+    pub latencies: Vec<SimTime>,
 }
 
 /// Handle to one plan submitted into an [`EngineSession`].
@@ -188,6 +218,9 @@ pub struct PlanOutcome {
     pub cancelled: usize,
     /// Retired completions, when the plan was submitted recording.
     pub responses: Vec<Retired>,
+    /// Per-op completion latency (wire release → retirement, ns) — the
+    /// p50/p99 latency-under-load lens. Moves out with the outcome.
+    pub latencies: Vec<SimTime>,
 }
 
 impl PlanOutcome {
@@ -221,6 +254,25 @@ struct InflightOp {
     plan: usize,
     tag: u64,
     pub_key: CompletionKey,
+    /// Wire-release time (injection commit plus any pacing delay) — the
+    /// zero point for this op's completion latency.
+    issued_at: SimTime,
+}
+
+/// Per-slot DCQCN state: the controller decides the rate, the bucket
+/// enforces it on the paced-refill path.
+struct SlotCc {
+    ctl: RateController,
+    bucket: TokenBucket,
+}
+
+impl SlotCc {
+    fn new(cfg: &DcqcnConfig) -> Self {
+        Self {
+            ctl: RateController::new(cfg.clone()),
+            bucket: TokenBucket::new(cfg.line_gbps, cfg.burst_bytes),
+        }
+    }
 }
 
 /// Per-plan bookkeeping inside the session state.
@@ -241,6 +293,9 @@ struct PlanState {
     cancelled: usize,
     record_responses: bool,
     responses: Vec<Retired>,
+    /// Per-op completion latency (wire release → retirement), the
+    /// latency-under-load lens the p50/p99 report columns read.
+    latencies: Vec<SimTime>,
     /// Plan-private token bucket (paced submits, e.g. a paced pooled-
     /// memory batch). Overrides the session's [`PaceMode`] for this
     /// plan's injections only.
@@ -263,6 +318,10 @@ enum PaceMode {
     /// Each slot gets its own bucket cloned from this template —
     /// per-destination pacing for communicator fan-out.
     PerSlot(TokenBucket),
+    /// Closed-loop DCQCN: each slot gets its own [`SlotCc`] built from
+    /// this config, fed CNPs by CE-marked completions (see
+    /// [`CcMode::Dcqcn`]).
+    Dcqcn(DcqcnConfig),
 }
 
 struct State {
@@ -290,7 +349,16 @@ struct State {
     max_concurrent_plans: usize,
     pace: PaceMode,
     slot_pacers: Vec<Option<TokenBucket>>,
+    /// Per-slot DCQCN controller + actuator bucket (Dcqcn mode only;
+    /// reset with the slot at reclaim time, like `slot_pacers`).
+    slot_cc: Vec<Option<SlotCc>>,
     releases: Vec<(usize, SimTime, usize)>,
+    /// Rate trajectory under DCQCN: `(slot, time, rate_bits)` appended at
+    /// every CNP delivery (`f64::to_bits` of the post-cut rate). Between
+    /// entries the rate evolves by the deterministic recovery formula, so
+    /// this log *is* the trajectory — the sharded-determinism tests
+    /// compare it bit-for-bit across shard counts.
+    rate_log: Vec<(usize, SimTime, u64)>,
 }
 
 impl State {
@@ -341,6 +409,18 @@ impl State {
                     .get_or_insert_with(|| template.clone())
                     .reserve(now, bytes)
             }
+            PaceMode::Dcqcn(cfg) => {
+                if self.slot_cc.len() <= slot {
+                    self.slot_cc.resize_with(slot + 1, || None);
+                }
+                let cc = self.slot_cc[slot].get_or_insert_with(|| SlotCc::new(cfg));
+                // Read the controller's *current* rate (time-based fast
+                // recovery + additive probing run inside `rate_gbps`),
+                // retarget the bucket, then reserve on the new schedule.
+                let gbps = cc.ctl.rate_gbps(now);
+                cc.bucket.set_rate(now, gbps);
+                cc.bucket.reserve(now, bytes)
+            }
         };
         self.releases.push((slot, release, bytes));
         release.saturating_sub(now)
@@ -352,6 +432,7 @@ impl State {
     fn next_cmd(&mut self, slot: usize, now: SimTime) -> Option<InjectCmd> {
         let op = self.queues[slot].pop_front()?;
         let plan = op.plan;
+        let delay = self.pace_delay(plan, slot, now, op.pace_bytes);
         self.inflight.insert(
             op.key,
             InflightOp {
@@ -359,6 +440,7 @@ impl State {
                 plan,
                 tag: op.tag,
                 pub_key: op.pub_key,
+                issued_at: now + delay,
             },
         );
         self.inflight_per_slot[slot] += 1;
@@ -373,7 +455,6 @@ impl State {
             self.active_plans += 1;
             self.max_concurrent_plans = self.max_concurrent_plans.max(self.active_plans);
         }
-        let delay = self.pace_delay(plan, slot, now, op.pace_bytes);
         Some(InjectCmd {
             origin: op.origin,
             pkt: op.pkt,
@@ -403,15 +484,35 @@ impl State {
         };
         self.retired.insert(candidate);
         self.inflight_per_slot[info.slot] -= 1;
+        let latency = rec.time.saturating_sub(info.issued_at);
         let now_idle = {
             let p = self.plan_mut(info.plan);
             p.inflight -= 1;
             p.done += 1;
             p.last_done = rec.time;
+            p.latencies.push(latency);
             p.inflight == 0
         };
         if now_idle {
             self.active_plans -= 1;
+        }
+        // CE-marked completion → CNP for the owning slot's controller:
+        // multiplicative cut now, so the refill below already paces at
+        // the reduced rate. Fired here (not in `deliver`) because the
+        // sharded core replays completions at barriers in global key
+        // order — which is exactly what keeps the rate trajectory
+        // bit-identical across shard counts.
+        if rec.ecn {
+            if let PaceMode::Dcqcn(cfg) = &self.pace {
+                if self.slot_cc.len() <= info.slot {
+                    self.slot_cc.resize_with(info.slot + 1, || None);
+                }
+                let cc = self.slot_cc[info.slot].get_or_insert_with(|| SlotCc::new(cfg));
+                cc.ctl.on_cnp(rec.time);
+                let gbps = cc.ctl.rate_gbps(rec.time);
+                cc.bucket.set_rate(rec.time, gbps);
+                self.rate_log.push((info.slot, rec.time, gbps.to_bits()));
+            }
         }
         if let Instruction::Nack { reason, .. } = &rec.instr {
             if self.plan(info.plan).nak.is_none() {
@@ -488,6 +589,11 @@ impl State {
                 // A reused slot starts with a fresh bucket.
                 self.slot_pacers[slot] = None;
             }
+            if self.slot_cc.len() > slot {
+                // ... and a fresh DCQCN controller: rate state is
+                // per-origin-slot, and the slot's owner is gone.
+                self.slot_cc[slot] = None;
+            }
             self.free_slots.push(slot);
         }
     }
@@ -525,7 +631,9 @@ impl EngineSession {
                 max_concurrent_plans: 0,
                 pace: PaceMode::None,
                 slot_pacers: Vec::new(),
+                slot_cc: Vec::new(),
                 releases: Vec::new(),
+                rate_log: Vec::new(),
             })),
             hooked: false,
         }
@@ -541,6 +649,17 @@ impl EngineSession {
     /// destination pacing (the ROADMAP's communicator fan-out item).
     pub fn paced_per_slot(self, bucket: TokenBucket) -> Self {
         self.state.borrow_mut().pace = PaceMode::PerSlot(bucket);
+        self
+    }
+
+    /// Apply a congestion-control mode: [`CcMode::Dcqcn`] replaces the
+    /// session's pacing with per-slot closed-loop rate control (plan-
+    /// private pacers still win for their own plans);
+    /// [`CcMode::Static`] leaves the configured pacing untouched.
+    pub fn with_congestion_control(self, mode: CcMode) -> Self {
+        if let CcMode::Dcqcn(cfg) = mode {
+            self.state.borrow_mut().pace = PaceMode::Dcqcn(cfg);
+        }
         self
     }
 
@@ -690,6 +809,7 @@ impl EngineSession {
                 cancelled: 0,
                 record_responses,
                 responses: Vec::new(),
+                latencies: Vec::new(),
                 pacer,
             });
             // Kick the plan's initial windows.
@@ -753,7 +873,16 @@ impl EngineSession {
             nak: p.nak,
             cancelled: p.cancelled,
             responses: std::mem::take(&mut p.responses),
+            latencies: std::mem::take(&mut p.latencies),
         }
+    }
+
+    /// Move out a plan's per-op completion latencies without redeeming
+    /// the full outcome (the fabric folds these incrementally before
+    /// releasing each phase's plan).
+    pub fn take_latencies(&mut self, plan: PlanId) -> Vec<SimTime> {
+        let mut st = self.state.borrow_mut();
+        std::mem::take(&mut st.checked_mut(plan).latencies)
     }
 
     /// Drop a settled plan's bookkeeping and recycle its slab slot. After
@@ -836,6 +965,19 @@ impl EngineSession {
         self.state.borrow().releases.clone()
     }
 
+    /// DCQCN rate trajectory `(slot, time, rate_bits)` — one entry per
+    /// CNP delivered, `rate_bits = f64::to_bits(post-cut Gbps)`. Empty
+    /// unless the session runs [`CcMode::Dcqcn`]. The sharded-
+    /// determinism suite compares this bit-for-bit across shard counts.
+    pub fn rate_log(&self) -> Vec<(usize, SimTime, u64)> {
+        self.state.borrow().rate_log.clone()
+    }
+
+    /// Total CNPs delivered to slot controllers (Dcqcn mode only).
+    pub fn cnps(&self) -> usize {
+        self.state.borrow().rate_log.len()
+    }
+
     /// Uninstall the completion hook. The session keeps its bookkeeping
     /// (outcomes stay redeemable) but accepts no more traffic.
     pub fn close(&mut self, cl: &mut Cluster) {
@@ -857,6 +999,7 @@ pub struct WindowEngine {
     window: usize,
     pacer: Option<TokenBucket>,
     per_slot: bool,
+    cc: CcMode,
     record_responses: bool,
 }
 
@@ -867,6 +1010,7 @@ impl WindowEngine {
             window: window.max(1),
             pacer: None,
             per_slot: false,
+            cc: CcMode::Static,
             record_responses: false,
         }
     }
@@ -883,6 +1027,13 @@ impl WindowEngine {
     pub fn paced_per_slot(mut self, bucket: TokenBucket) -> Self {
         self.pacer = Some(bucket);
         self.per_slot = true;
+        self
+    }
+
+    /// Closed-loop DCQCN pacing (see [`CcMode::Dcqcn`]): per-slot rate
+    /// controllers replace any static bucket for this run.
+    pub fn with_congestion_control(mut self, mode: CcMode) -> Self {
+        self.cc = mode;
         self
     }
 
@@ -914,6 +1065,7 @@ impl WindowEngine {
                 releases: Vec::new(),
                 releases_per_slot: Vec::new(),
                 responses: Vec::new(),
+                latencies: Vec::new(),
             });
         }
         let mut session = EngineSession::new(self.window);
@@ -924,6 +1076,7 @@ impl WindowEngine {
                 session.paced(tb.clone())
             };
         }
+        session = session.with_congestion_control(self.cc.clone());
         let plan = match session.submit(cl, eng, ops, self.record_responses, self.window) {
             Ok(p) => p,
             Err(e) => {
@@ -948,6 +1101,7 @@ impl WindowEngine {
             releases: releases_per_slot.iter().map(|&(_, at, b)| (at, b)).collect(),
             releases_per_slot,
             responses: out.responses,
+            latencies: out.latencies,
         })
     }
 }

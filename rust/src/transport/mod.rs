@@ -21,6 +21,12 @@
 //!   ([`engine::EngineSession`]) lets concurrent tenants — communicator
 //!   collectives and pooled-memory batches from one fabric — multiplex
 //!   onto a single completion hook (see [`crate::comm`]).
+//! * **Closed-loop DCQCN** ([`engine::CcMode::Dcqcn`]) — when static
+//!   budgets aren't enough (mixed tenants, unknown fan-in), each window
+//!   slot gets a [`crate::roce::RateController`] actuating its bucket via
+//!   [`rate::TokenBucket::set_rate`]: CE-marked completions act as CNPs
+//!   (multiplicative cut + α-EWMA), fast recovery and additive probing
+//!   restore the rate between marks.
 
 pub mod engine;
 pub mod rate;
@@ -28,7 +34,7 @@ pub mod reliability;
 pub mod reorder;
 
 pub use engine::{
-    CompletionKey, EngineSession, NakRecord, PlanId, PlanOutcome, Retired, WindowEngine,
+    CcMode, CompletionKey, EngineSession, NakRecord, PlanId, PlanOutcome, Retired, WindowEngine,
     WindowOutcome, WindowedOp,
 };
 pub use rate::TokenBucket;

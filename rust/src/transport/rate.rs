@@ -67,6 +67,22 @@ impl TokenBucket {
         }
     }
 
+    /// Retarget the fill rate at `now`, settling the accrual under the old
+    /// rate first so the release envelope stays `burst + ∫rate(t)dt` —
+    /// tokens earned before the change are earned at the old rate, tokens
+    /// after at the new one. This is the actuator half of DCQCN: the
+    /// [`crate::roce::RateController`] decides the rate, `set_rate` makes
+    /// the bucket enforce it.
+    pub fn set_rate(&mut self, now: SimTime, gbps: f64) {
+        self.refill(now);
+        self.rate = (gbps / 8.0).max(f64::MIN_POSITIVE);
+    }
+
+    /// Current fill rate in Gbit/s.
+    pub fn rate_gbps(&self) -> f64 {
+        self.rate * 8.0
+    }
+
     pub fn tokens(&self) -> f64 {
         self.tokens
     }
@@ -106,6 +122,23 @@ mod tests {
         let mut tb = TokenBucket::new(80.0, 1000);
         assert!(tb.try_take(1_000_000, 1000).is_ok());
         assert!(tb.try_take(1_000_001, 1000).is_err(), "no over-accumulation");
+    }
+
+    #[test]
+    fn set_rate_settles_old_accrual_first() {
+        // 8 Gbps = 1 B/ns, burst 1000, drained at t=0.
+        let mut tb = TokenBucket::new(8.0, 1000);
+        assert!(tb.try_take(0, 1000).is_ok());
+        // 500 ns at 1 B/ns banks 500 tokens, then drop to 0.8 Gbps.
+        tb.set_rate(500, 0.8);
+        assert!((tb.tokens() - 500.0).abs() < 1e-9, "old-rate accrual kept");
+        assert!(tb.try_take(500, 500).is_ok());
+        // From here refill runs at 0.1 B/ns: 400 B needs 4000 ns.
+        match tb.try_take(500, 400) {
+            Err(at) => assert_eq!(at, 4500),
+            Ok(()) => panic!("should pace at the new rate"),
+        }
+        assert_eq!(tb.rate_gbps(), 0.8);
     }
 
     #[test]

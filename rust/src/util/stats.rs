@@ -114,6 +114,36 @@ pub fn percentile(samples: &[f64], p: f64) -> f64 {
     }
 }
 
+/// Nearest-rank percentile over integer nanosecond samples. Unlike
+/// [`percentile`] this never interpolates, so the result is always one of
+/// the observed samples — which keeps reports carrying it `Eq`-comparable
+/// (no float fields) and makes p99 read as "a latency that happened".
+pub fn percentile_ns(samples: &[u64], p: f64) -> u64 {
+    assert!((0.0..=100.0).contains(&p));
+    if samples.is_empty() {
+        return 0;
+    }
+    let mut v = samples.to_vec();
+    v.sort_unstable();
+    let rank = ((p / 100.0) * v.len() as f64).ceil() as usize;
+    v[rank.saturating_sub(1).min(v.len() - 1)]
+}
+
+/// Jain's fairness index `(Σx)² / (n·Σx²)` — 1.0 when every flow gets the
+/// same share, → 1/n when one flow takes everything. The incast bench
+/// uses it to show DCQCN converging senders to equal goodput.
+pub fn jain_fairness(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 1.0;
+    }
+    let sum: f64 = xs.iter().sum();
+    let sq: f64 = xs.iter().map(|x| x * x).sum();
+    if sq == 0.0 {
+        return 1.0;
+    }
+    (sum * sum) / (xs.len() as f64 * sq)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -182,5 +212,24 @@ mod tests {
     fn percentile_interpolates() {
         let xs = [0.0, 10.0];
         assert!((percentile(&xs, 25.0) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_ns_nearest_rank() {
+        let xs = [50u64, 10, 40, 20, 30];
+        assert_eq!(percentile_ns(&xs, 50.0), 30);
+        assert_eq!(percentile_ns(&xs, 99.0), 50);
+        assert_eq!(percentile_ns(&xs, 0.0), 10);
+        assert_eq!(percentile_ns(&[], 99.0), 0);
+        assert_eq!(percentile_ns(&[7], 50.0), 7);
+    }
+
+    #[test]
+    fn jain_bounds() {
+        assert_eq!(jain_fairness(&[5.0, 5.0, 5.0]), 1.0);
+        let skew = jain_fairness(&[10.0, 0.0, 0.0, 0.0]);
+        assert!((skew - 0.25).abs() < 1e-12);
+        assert_eq!(jain_fairness(&[]), 1.0);
+        assert_eq!(jain_fairness(&[0.0, 0.0]), 1.0);
     }
 }

@@ -260,3 +260,71 @@ fn allreduce_1024_ranks_completes_through_the_sharded_core() {
     assert!(out.elapsed_ns() > 0);
     assert!(f.sharded_events() > 0);
 }
+
+/// A lossy, reliable ring allreduce with **closed-loop DCQCN active**:
+/// tight RED thresholds force CE marks, devices echo them on the
+/// completion path, and every CNP mutates a slot controller. Returns the
+/// report, the global CE-echo counter, and the full per-slot rate
+/// trajectory (`(slot, time, f64 bits)`) so equality means the control
+/// loop itself — not just its end state — replayed identically.
+fn dcqcn_lossy_run(shards: usize) -> (CollectiveReport, u64, Vec<(usize, u64, u64)>) {
+    use netdam::net::LinkConfig;
+    use netdam::roce::DcqcnConfig;
+    use netdam::transport::CcMode;
+
+    let elements = 8 * 512;
+    let mut f = Fabric::builder()
+        .fat_tree(2, 4, 2)
+        .link(LinkConfig::dc_100g().with_ecn(2_000, 20_000))
+        .seed(0xD15C)
+        .reliable(true)
+        .loss(0.05)
+        .window(4)
+        .with_congestion_control(CcMode::Dcqcn(DcqcnConfig::default()))
+        .with_shards(shards)
+        .shard_threads(1)
+        .build()
+        .unwrap();
+    let comm = f.communicator(elements as u64 * 4).unwrap();
+    let grads = comm.seed_gradients_exact(&mut f, elements, 0x5EED);
+    let h = comm.iallreduce(&mut f, elements).unwrap();
+    let out = f.wait(h).unwrap();
+    assert!(
+        out.complete(),
+        "shards={shards}: {}/{} ops",
+        out.ops_done,
+        out.ops
+    );
+    let report = f.report(&out);
+    let oracle = naive_sum(&grads);
+    for r in 0..f.ranks() {
+        let v = comm.read_vector(&mut f, r, elements).unwrap();
+        assert_eq!(v, oracle, "shards={shards}: rank {r} diverged from oracle");
+    }
+    let ce = f.cluster().metrics.counter("ecn_ce_received");
+    let rate_log = f.rate_log();
+    (report, ce, rate_log)
+}
+
+/// PR 6's contract survives PR 8: with DCQCN in the loop — RED marks,
+/// CE echo, CNPs, multiplicative cuts, timed recovery — the report, the
+/// CE counter, and the bit-level rate trajectory of every slot are
+/// identical at shard counts 1, 2 and 4 under 5% loss.
+#[test]
+fn dcqcn_rate_trajectories_identical_across_shard_counts() {
+    let (r1, ce1, t1) = dcqcn_lossy_run(1);
+    let (r2, ce2, t2) = dcqcn_lossy_run(2);
+    let (r4, ce4, t4) = dcqcn_lossy_run(4);
+    assert!(ce1 > 0, "no CE marks echoed — the RED ramp never engaged");
+    assert!(
+        !t1.is_empty(),
+        "no rate-controller mutations — DCQCN never absorbed a CNP"
+    );
+    assert!(r1.link_drops > 0, "the loss model never fired: {r1:?}");
+    assert_eq!(r1, r2, "report, 1 vs 2 shards");
+    assert_eq!(r1, r4, "report, 1 vs 4 shards");
+    assert_eq!(ce1, ce2, "CE echo count, 1 vs 2 shards");
+    assert_eq!(ce1, ce4, "CE echo count, 1 vs 4 shards");
+    assert_eq!(t1, t2, "rate trajectory, 1 vs 2 shards");
+    assert_eq!(t1, t4, "rate trajectory, 1 vs 4 shards");
+}
