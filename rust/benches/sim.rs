@@ -5,17 +5,56 @@
 //! the simulated result (the determinism contract, measured rather than
 //! assumed). Writes the machine-readable artifact `BENCH_sim.json`.
 //!
-//! Set `NETDAM_BENCH_SMOKE=1` for a small workload (CI smoke; the full
-//! shard grid still runs). The full run adds the scale target: a
-//! 1024-rank fat-tree ring allreduce through the 8-shard core.
+//! Perf observability (PR 9): the bench bin installs a counting global
+//! allocator and reports **allocations per event** for every arm — the
+//! number the allocation-free hot path is supposed to drive toward zero
+//! — plus run metadata (host cores, total wallclock) and the classic
+//! engine's peak live-event count. The strict zero-alloc *assertion*
+//! lives in `rust/tests/alloc_free_hot_path.rs`; the bench reports the
+//! whole-run average, which also pays one-time warmup growth.
+//!
+//! Set `NETDAM_BENCH_SMOKE=1` for a small workload (CI smoke). The
+//! shard grid AND the scale target — a 1024-rank fat-tree ring
+//! allreduce through the 8-shard core — run in **both** modes, so CI
+//! can assert the 1024-rank arm completed instead of trusting that it
+//! would have; smoke just shrinks the per-rank vector.
 //!
 //! Caveat printed with the numbers: on a single-CPU host the sharded
 //! arms pay partitioning overhead without parallel speedup — the grid
 //! is an honest overhead/scaling measurement, not a guaranteed win.
 
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
 use netdam::comm::Fabric;
 use netdam::metrics::Table;
 use netdam::sim::fmt_ns;
+
+/// Counts every heap allocation (and reallocation) in the process.
+/// Frees are deliberately not counted: the hot-path contract is about
+/// not *acquiring* memory per event.
+struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
 
 struct ArmResult {
     label: String,
@@ -23,6 +62,10 @@ struct ArmResult {
     events: u64,
     sim_ns: u64,
     wall: std::time::Duration,
+    /// Heap allocations during the measured rounds (fabric build excluded).
+    allocs: u64,
+    /// Classic engine only: high-water mark of live scheduled events.
+    peak_live: usize,
 }
 
 /// Drive `rounds` back-to-back allreduces on a fat-tree fabric and
@@ -47,17 +90,20 @@ fn run_arm(
     let comm = f.communicator(elements as u64 * 4).expect("communicator");
     let wall = std::time::Instant::now();
     let t0 = f.now();
+    let allocs0 = ALLOCS.load(Ordering::Relaxed);
     for _ in 0..rounds {
         let h = comm.iallreduce(&mut f, elements).expect("submit");
         let out = f.wait(h).expect("wait");
         assert!(out.complete(), "allreduce stopped short");
     }
+    let allocs = ALLOCS.load(Ordering::Relaxed) - allocs0;
     let sim_ns = f.now() - t0;
     let wall = wall.elapsed();
-    let events = if shards > 0 {
-        f.sharded_events()
+    let (events, peak_live) = if shards > 0 {
+        (f.sharded_events(), 0)
     } else {
-        f.raw_parts().1.events_processed()
+        let eng = f.raw_parts().1;
+        (eng.events_processed(), eng.peak_live())
     };
     ArmResult {
         label: if shards > 0 {
@@ -69,6 +115,8 @@ fn run_arm(
         events,
         sim_ns,
         wall,
+        allocs,
+        peak_live,
     }
 }
 
@@ -81,40 +129,58 @@ fn main() {
         (4, 8, 1 << 16, 3)
     };
     let ranks = pods * devs_per_leaf;
+    let host_cores = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
     println!(
         "# sim — DES core throughput: classic vs sharded, {ranks}-rank fat-tree allreduce \
          ({elements} x f32, {rounds} round(s))\n"
     );
     println!(
-        "host parallelism: {} (single-CPU hosts measure sharding overhead, not speedup)\n",
-        std::thread::available_parallelism()
-            .map(|n| n.get())
-            .unwrap_or(1)
+        "host parallelism: {host_cores} (single-CPU hosts measure sharding overhead, not speedup)\n"
     );
 
-    let mut table = Table::new(&["core", "events", "sim time", "wallclock", "events/sec"]);
+    // Every arm this bench is contracted to run. The in-bench count
+    // check below plus the CI assertion on BENCH_sim.json make a
+    // silently skipped arm a hard failure, not a quieter report.
+    let grid: [usize; 5] = [0, 1, 2, 4, 8];
+    let expected_rows = grid.len() + 1; // shard grid + the 1024-rank arm
+
+    let mut table = Table::new(&[
+        "core",
+        "events",
+        "sim time",
+        "wallclock",
+        "events/sec",
+        "allocs/event",
+    ]);
     let mut json_rows: Vec<String> = Vec::new();
     let mut arms: Vec<ArmResult> = Vec::new();
-    for shards in [0usize, 1, 2, 4, 8] {
+    for shards in grid {
         let r = run_arm(shards, pods, devs_per_leaf, elements, rounds);
         let eps = r.events as f64 / r.wall.as_secs_f64().max(1e-9);
+        let ape = r.allocs as f64 / (r.events as f64).max(1.0);
         table.row(&[
             r.label.clone(),
             r.events.to_string(),
             fmt_ns(r.sim_ns),
             format!("{:.2?}", r.wall),
             format!("{eps:.0}"),
+            format!("{ape:.4}"),
         ]);
         json_rows.push(format!(
             "    {{\"workload\": \"fat_tree_allreduce\", \"core\": \"{}\", \"shards\": {}, \
              \"ranks\": {ranks}, \"elements\": {elements}, \"rounds\": {rounds}, \
              \"events\": {}, \"sim_elapsed_ns\": {}, \"wall_ms\": {:.3}, \
-             \"events_per_sec\": {eps:.0}}}",
+             \"events_per_sec\": {eps:.0}, \"allocs\": {}, \"allocs_per_event\": {ape:.4}, \
+             \"peak_live_events\": {}}}",
             r.label,
             r.shards,
             r.events,
             r.sim_ns,
             r.wall.as_secs_f64() * 1e3,
+            r.allocs,
+            r.peak_live,
         ));
         arms.push(r);
     }
@@ -123,7 +189,7 @@ fn main() {
     // Determinism, measured: every sharded arm must land on the same
     // simulated time AND the same event count (the integration tests
     // prove this at report granularity; here it holds for the whole
-    // grid). The classic engine counts scheduler closures rather than
+    // grid). The classic engine counts scheduler events rather than
     // network events, so report its sim-time delta instead of asserting.
     for w in arms[1..].windows(2) {
         assert_eq!(
@@ -136,18 +202,25 @@ fn main() {
     }
     println!(
         "grid agreement: sharded arms all landed on sim time {} / {} events ✓ \
-         (classic: {})\n",
+         (classic: {}, peak {} live events)\n",
         fmt_ns(arms[1].sim_ns),
         arms[1].events,
-        fmt_ns(arms[0].sim_ns)
+        fmt_ns(arms[0].sim_ns),
+        arms[0].peak_live
     );
 
-    // The scale target (full mode): 1024 ranks through the 8-shard core.
-    if !smoke {
-        println!("## 1024-rank fat-tree ring allreduce (8-shard core, timing-only)\n");
+    // The scale target: 1024 ranks through the 8-shard core. Runs in
+    // smoke mode too (with a shorter per-rank vector) so CI exercises
+    // the full fabric size on every push.
+    {
         let scale_ranks = 1024usize;
-        let scale_elements = 2 * scale_ranks;
+        let scale_elements = if smoke { scale_ranks } else { 2 * scale_ranks };
+        println!(
+            "## 1024-rank fat-tree ring allreduce ({scale_elements} x f32, 8-shard core, \
+             timing-only)\n"
+        );
         let wall = std::time::Instant::now();
+        let allocs0 = ALLOCS.load(Ordering::Relaxed);
         let mut f = Fabric::builder()
             .fat_tree(32, 32, 8)
             .timing_only(true)
@@ -162,27 +235,42 @@ fn main() {
         let h = comm.iallreduce(&mut f, scale_elements).expect("submit");
         let out = f.wait(h).expect("wait");
         assert!(out.complete(), "1024-rank allreduce stopped short");
-        let eps = f.sharded_events() as f64 / wall.elapsed().as_secs_f64().max(1e-9);
+        let allocs = ALLOCS.load(Ordering::Relaxed) - allocs0;
+        let events = f.sharded_events();
+        let eps = events as f64 / wall.elapsed().as_secs_f64().max(1e-9);
+        let ape = allocs as f64 / (events as f64).max(1.0);
         println!(
-            "completed: {} ops, sim {}, wallclock {:.2?}, {:.0} events/sec\n",
+            "completed: {} ops, sim {}, wallclock {:.2?}, {:.0} events/sec, \
+             {:.4} allocs/event (incl. fabric build)\n",
             out.ops,
             fmt_ns(out.elapsed_ns()),
             wall.elapsed(),
-            eps
+            eps,
+            ape
         );
         json_rows.push(format!(
             "    {{\"workload\": \"fat_tree_allreduce_1024\", \"core\": \"sharded(8)\", \
              \"shards\": 8, \"ranks\": 1024, \"elements\": {scale_elements}, \"rounds\": 1, \
-             \"events\": {}, \"sim_elapsed_ns\": {}, \"wall_ms\": {:.3}, \
-             \"events_per_sec\": {eps:.0}}}",
-            f.sharded_events(),
+             \"events\": {events}, \"sim_elapsed_ns\": {}, \"wall_ms\": {:.3}, \
+             \"events_per_sec\": {eps:.0}, \"allocs\": {allocs}, \
+             \"allocs_per_event\": {ape:.4}, \"peak_live_events\": 0}}",
             out.elapsed_ns(),
             wall.elapsed().as_secs_f64() * 1e3,
         ));
     }
 
+    assert_eq!(
+        json_rows.len(),
+        expected_rows,
+        "a grid arm was silently skipped: {}/{expected_rows} rows",
+        json_rows.len()
+    );
+
     let json = format!(
-        "{{\n  \"bench\": \"sim\",\n  \"smoke\": {smoke},\n  \"results\": [\n{}\n  ]\n}}\n",
+        "{{\n  \"bench\": \"sim\",\n  \"smoke\": {smoke},\n  \"meta\": {{\"host_cores\": \
+         {host_cores}, \"total_wall_ms\": {:.3}, \"expected_rows\": {expected_rows}}},\n  \
+         \"results\": [\n{}\n  ]\n}}\n",
+        wall_total.elapsed().as_secs_f64() * 1e3,
         json_rows.join(",\n")
     );
     std::fs::write("BENCH_sim.json", &json).expect("write BENCH_sim.json");

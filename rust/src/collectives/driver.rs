@@ -33,6 +33,8 @@
 //! construction, unlike the single-phase NetDAM ring whose freedom from
 //! barriers is exactly the paper's Figure 7 contrast.
 
+use std::sync::Arc;
+
 use anyhow::{ensure, Result};
 
 use crate::alu::block_hash;
@@ -299,6 +301,9 @@ pub(crate) fn lower_schedule(
         // root collector can ack each origin; planners cannot know the seq
         // at plan time, so they leave a 0 placeholder we patch here.
         if let Some(agg) = op.pkt.agg.as_mut() {
+            // Copy-on-write: the manifest is Arc-shared once in flight,
+            // but at patch time this op holds the only reference.
+            let agg = Arc::make_mut(agg);
             for e in agg.entries.iter_mut().filter(|e| e.seq == 0) {
                 e.seq = op.pkt.seq;
             }
@@ -371,7 +376,7 @@ pub fn lower_ring_chunk(
     if fused {
         b = b.store(addr, (ranks - 1) as u8);
     }
-    Ok(Instruction::Program(Box::new(
+    Ok(Instruction::Program(Arc::new(
         b.on_retire(done_id).build(env)?,
     )))
 }
@@ -384,7 +389,7 @@ pub fn lower_store_chain(
     done_id: u32,
     env: &VerifyEnv<'_>,
 ) -> Result<Instruction, ProgramError> {
-    Ok(Instruction::Program(Box::new(
+    Ok(Instruction::Program(Arc::new(
         ProgramBuilder::new()
             .store(addr, hops as u8)
             .on_retire(done_id)

@@ -216,12 +216,22 @@ impl NetDamDevice {
     }
 
     /// Process an arriving packet. `now` is the arrival time; returned
-    /// emits are relative to it. A translation denied by the IOMMU is
-    /// NAK'd back on the wire with the fault's typed reason (§2.6 — the
-    /// device enforces the controller's ACL); other malformed packets
-    /// count as exec_errors and are dropped (the hardware would raise an
-    /// error CQE).
+    /// emits are relative to it. Convenience wrapper over
+    /// [`Self::handle_packet_into`] (tests, simple drivers).
     pub fn handle_packet(&mut self, now: SimTime, pkt: Packet) -> Vec<Emit> {
+        let mut out = Vec::new();
+        self.handle_packet_into(now, pkt, &mut out);
+        out
+    }
+
+    /// Process an arriving packet, appending emissions to `out` (the DES
+    /// hot path reuses one buffer across calls, so steady-state execution
+    /// performs no per-packet allocation). A translation denied by the
+    /// IOMMU is NAK'd back on the wire with the fault's typed reason
+    /// (§2.6 — the device enforces the controller's ACL); other malformed
+    /// packets count as exec_errors and are dropped (the hardware would
+    /// raise an error CQE).
+    pub fn handle_packet_into(&mut self, now: SimTime, pkt: Packet, out: &mut Vec<Emit>) {
         self.pkts_in += 1;
         self.last_fault = None;
         let (src, seq) = (pkt.src, pkt.seq);
@@ -231,38 +241,39 @@ impl NetDamDevice {
         // this is the CNP half of the DCQCN loop; forwarded program hops
         // keep the mark like the same IP packet would).
         let ce = pkt.flags.ecn();
-        let mut emits = match self.execute(now, pkt) {
-            Ok(emits) => {
-                self.pkts_out += emits.len() as u64;
-                emits
+        let start = out.len();
+        match self.execute(now, pkt, out) {
+            Ok(()) => {
+                self.pkts_out += (out.len() - start) as u64;
             }
-            Err(_) => match self.last_fault.take() {
-                Some(fault) => {
-                    self.iommu_naks += 1;
-                    let delay = self.fixed_ns();
-                    let nak = self.reply_seq(
-                        src,
-                        seq,
-                        Instruction::Nack {
-                            acked: seq,
-                            reason: fault.reason() as u8,
-                        },
-                    );
-                    self.pkts_out += 1;
-                    vec![Emit { delay, pkt: nak }]
+            Err(_) => {
+                out.truncate(start); // discard partial emissions
+                match self.last_fault.take() {
+                    Some(fault) => {
+                        self.iommu_naks += 1;
+                        let delay = self.fixed_ns();
+                        let nak = self.reply_seq(
+                            src,
+                            seq,
+                            Instruction::Nack {
+                                acked: seq,
+                                reason: fault.reason() as u8,
+                            },
+                        );
+                        self.pkts_out += 1;
+                        out.push(Emit { delay, pkt: nak });
+                    }
+                    None => {
+                        self.exec_errors += 1;
+                    }
                 }
-                None => {
-                    self.exec_errors += 1;
-                    Vec::new()
-                }
-            },
-        };
+            }
+        }
         if ce {
-            for e in &mut emits {
+            for e in &mut out[start..] {
                 e.pkt.flags = e.pkt.flags.with(Flags::ECN);
             }
         }
-        emits
     }
 
     /// Fixed pipeline cost excluding memory/ALU.
@@ -301,34 +312,34 @@ impl NetDamDevice {
         }
     }
 
-    fn execute(&mut self, now: SimTime, pkt: Packet) -> Result<Vec<Emit>> {
+    fn execute(&mut self, now: SimTime, pkt: Packet, out: &mut Vec<Emit>) -> Result<()> {
         let flags = pkt.flags;
         let src = pkt.src;
         // Attribute the request to a tenant for IOMMU lease checks (the
         // §2.6 ACL the controller programmed; None = unattributed).
         self.req_tenant = self.tenant_acl.get(&src).copied();
-        let mut emits = Vec::new();
+        let emits = out;
         let fixed = self.fixed_ns();
 
         // Raw user-defined opcode? Dispatch through the registry.
         if let Instruction::User { opcode, a, b, c } = pkt.instr {
-            return self.execute_user(now, pkt, opcode, a, b, c);
+            return self.execute_user(now, pkt, opcode, a, b, c, emits);
         }
         // Packet program? Run the micro-executor loop. The program is
-        // moved out (and its box reused on forward) — no per-hop clone
-        // on the collective hot path.
+        // moved out (the `Arc` travels with the packet, copy-on-write at
+        // cursor updates) — no per-hop deep clone on the collective path.
         if matches!(pkt.instr, Instruction::Program(_)) {
             let mut pkt = pkt;
             let Instruction::Program(prog) = std::mem::replace(&mut pkt.instr, Instruction::Nop)
             else {
                 unreachable!()
             };
-            return self.execute_program(pkt, prog);
+            return self.execute_program(pkt, prog, emits);
         }
         // Terminal hop of an in-network aggregation tree? The root folds
         // the switch-combined contribution and answers the manifest.
         if flags.agg() {
-            return self.execute_agg(pkt);
+            return self.execute_agg(pkt, emits);
         }
 
         match pkt.instr.clone() {
@@ -490,7 +501,7 @@ impl NetDamDevice {
 
             Instruction::Program(_) | Instruction::User { .. } => unreachable!("handled above"),
         }
-        Ok(emits)
+        Ok(())
     }
 
     // ------------------------------------------------- program executor
@@ -512,7 +523,8 @@ impl NetDamDevice {
     /// part, and the unseen contributions will retransmit and arrive
     /// unmerged (the switch remembers completed groups and passes late
     /// traffic through).
-    fn execute_agg(&mut self, pkt: Packet) -> Result<Vec<Emit>> {
+    fn execute_agg(&mut self, pkt: Packet, out: &mut Vec<Emit>) -> Result<()> {
+        // `Arc` bump, not a manifest deep-copy.
         let Some(meta) = pkt.agg.clone() else {
             bail!("aggregation-marked packet without a manifest");
         };
@@ -531,17 +543,16 @@ impl NetDamDevice {
             // Pure replay: the fold already happened; the contributor(s)
             // just never saw their completion. Re-emit it.
             self.agg_replays += 1;
-            let mut emits = Vec::new();
             for e in &meta.entries {
                 let done =
                     self.reply_seq(e.src, e.seq, Instruction::CollectiveDone { block: e.done_id });
-                emits.push(Emit { delay: fixed, pkt: done });
+                out.push(Emit { delay: fixed, pkt: done });
             }
-            return Ok(emits);
+            return Ok(());
         }
         if seen_n > 0 {
             self.agg_mixed_drops += 1;
-            return Ok(Vec::new());
+            return Ok(());
         }
         // Same cost shape as a stored `Simd`: read the resident block,
         // one ALU pass, write the folded block back.
@@ -568,16 +579,20 @@ impl NetDamDevice {
             seen.insert((e.src, e.seq));
         }
         self.agg_folds += 1;
-        let mut emits = Vec::new();
         for e in &meta.entries {
             let done =
                 self.reply_seq(e.src, e.seq, Instruction::CollectiveDone { block: e.done_id });
-            emits.push(Emit { delay: t, pkt: done });
+            out.push(Emit { delay: t, pkt: done });
         }
-        Ok(emits)
+        Ok(())
     }
 
-    fn execute_program(&mut self, mut pkt: Packet, mut prog: Box<Program>) -> Result<Vec<Emit>> {
+    fn execute_program(
+        &mut self,
+        mut pkt: Packet,
+        mut prog: Arc<Program>,
+        out: &mut Vec<Emit>,
+    ) -> Result<()> {
         let mut t = self.fixed_ns();
         let mut fwd: Option<(u64, u64, u64)> = None;
         loop {
@@ -593,9 +608,15 @@ impl NetDamDevice {
             t += cost;
             pkt.payload = new_payload;
             if matches!(note, StepNote::Halt) {
-                return Ok(Vec::new());
+                return Ok(());
             }
-            prog.reps_done = prog.reps_done.saturating_add(1);
+            // Cursor updates go through `make_mut`: unique in steady state
+            // (free), copy-on-write when a retransmit buffer still shares
+            // the program.
+            {
+                let p = Arc::make_mut(&mut prog);
+                p.reps_done = p.reps_done.saturating_add(1);
+            }
             if prog.reps_done < prog.steps[pc].repeat {
                 // Same step again at the next hop.
                 ensure!(
@@ -603,10 +624,14 @@ impl NetDamDevice {
                     "program ran out of SROU segments mid-step"
                 );
                 pkt.instr = Instruction::Program(prog);
-                return Ok(vec![Emit { delay: t, pkt }]);
+                out.push(Emit { delay: t, pkt });
+                return Ok(());
             }
-            prog.pc += 1;
-            prog.reps_done = 0;
+            {
+                let p = Arc::make_mut(&mut prog);
+                p.pc += 1;
+                p.reps_done = 0;
+            }
             if prog.pc as usize >= prog.steps.len() {
                 // Program retires at this device: completion id wins,
                 // otherwise a final user reply, otherwise an Ack when the
@@ -619,7 +644,8 @@ impl NetDamDevice {
                             block: prog.completion,
                         },
                     );
-                    return Ok(vec![Emit { delay: t, pkt: done }]);
+                    out.push(Emit { delay: t, pkt: done });
+                    return Ok(());
                 }
                 if let StepNote::Reply {
                     opcode,
@@ -635,13 +661,15 @@ impl NetDamDevice {
                         Instruction::User { opcode, a, b, c },
                         Payload::from_bytes(payload),
                     );
-                    return Ok(vec![Emit { delay: t, pkt: resp }]);
+                    out.push(Emit { delay: t, pkt: resp });
+                    return Ok(());
                 }
                 if pkt.flags.reliable() {
                     let ack = self.reply_seq(pkt.src, pkt.seq, Instruction::Ack { acked: pkt.seq });
-                    return Ok(vec![Emit { delay: t, pkt: ack }]);
+                    out.push(Emit { delay: t, pkt: ack });
+                    return Ok(());
                 }
-                return Ok(Vec::new());
+                return Ok(());
             }
             if !prog.steps[prog.pc as usize].fused {
                 ensure!(
@@ -649,7 +677,8 @@ impl NetDamDevice {
                     "program ran out of SROU segments between steps"
                 );
                 pkt.instr = Instruction::Program(prog);
-                return Ok(vec![Emit { delay: t, pkt }]);
+                out.push(Emit { delay: t, pkt });
+                return Ok(());
             }
             // Fused successor: keep executing on this device, with the
             // step's result payload as input (operand forwarding).
@@ -822,6 +851,7 @@ impl NetDamDevice {
         }
     }
 
+    #[allow(clippy::too_many_arguments)]
     fn execute_user(
         &mut self,
         _now: SimTime,
@@ -830,7 +860,8 @@ impl NetDamDevice {
         a: u64,
         b: u64,
         c: u64,
-    ) -> Result<Vec<Emit>> {
+        out: &mut Vec<Emit>,
+    ) -> Result<()> {
         debug_assert!(opcode >= USER_OPCODE_BASE);
         let registry = Arc::clone(&self.registry);
         let Some(handler) = registry.get(opcode) else {
@@ -850,7 +881,6 @@ impl NetDamDevice {
             fwd: None,
         };
         let outcome = handler.execute(&mut ctx)?;
-        let mut emits = Vec::new();
         match outcome {
             ExecOutcome::Consume | ExecOutcome::Drop => {}
             ExecOutcome::Reply {
@@ -866,17 +896,17 @@ impl NetDamDevice {
                     Instruction::User { opcode, a, b, c },
                     Payload::from_bytes(payload),
                 );
-                emits.push(Emit { delay: t, pkt: resp });
+                out.push(Emit { delay: t, pkt: resp });
             }
             ExecOutcome::Forward { payload } => {
                 pkt.srou.advance();
                 if pkt.srou.current().is_some() {
                     pkt.payload = Payload::from_bytes(payload);
-                    emits.push(Emit { delay: t, pkt });
+                    out.push(Emit { delay: t, pkt });
                 }
             }
         }
-        Ok(emits)
+        Ok(())
     }
 }
 
@@ -1066,7 +1096,7 @@ mod tests {
             .reduce(SimdOp::Add, 0, 2)
             .guarded_write(0, 0)
             .build_unchecked();
-        let pkt = Packet::new(ip(1), 1, srou, Instruction::Program(Box::new(prog)))
+        let pkt = Packet::new(ip(1), 1, srou, Instruction::Program(Arc::new(prog)))
             .with_payload(Payload::from_f32s(&[1.0, 2.0]));
         let emits = d.handle_packet(0, pkt);
         assert_eq!(emits.len(), 1);
@@ -1108,7 +1138,7 @@ mod tests {
                 ip(3),
                 9,
                 SrouHeader::direct(ip(4)),
-                Instruction::Program(Box::new(prog)),
+                Instruction::Program(Arc::new(prog)),
             )
             .with_payload(Payload::from_f32s(&[1.0, 2.0]))
         };
@@ -1140,7 +1170,7 @@ mod tests {
         let mut d = dev(2);
         let srou = SrouHeader::through(vec![Segment::to(ip(2)), Segment::to(ip(3))]);
         let prog = ProgramBuilder::new().store(0, 2).on_retire(1).build_unchecked();
-        let pkt = Packet::new(ip(1), 1, srou, Instruction::Program(Box::new(prog)))
+        let pkt = Packet::new(ip(1), 1, srou, Instruction::Program(Arc::new(prog)))
             .with_payload(Payload::from_f32s(&[5.0]));
         let emits = d.handle_packet(0, pkt);
         assert_eq!(emits[0].pkt.dst().unwrap(), ip(3));
@@ -1175,7 +1205,7 @@ mod tests {
                 c: 0,
             })
             .build_unchecked();
-        let pkt = direct(1, 2, Instruction::Program(Box::new(prog)))
+        let pkt = direct(1, 2, Instruction::Program(Arc::new(prog)))
             .with_payload(Payload::from_bytes(plaintext.clone()));
         let emits = d.handle_packet(0, pkt);
         assert_eq!(emits.len(), 1);
@@ -1196,7 +1226,7 @@ mod tests {
         let mut d = dev(2);
         // Two travelling steps but a single-segment SROU header.
         let prog = ProgramBuilder::new().store(0, 2).build_unchecked();
-        let pkt = direct(1, 2, Instruction::Program(Box::new(prog)))
+        let pkt = direct(1, 2, Instruction::Program(Arc::new(prog)))
             .with_payload(Payload::from_f32s(&[1.0]));
         assert!(d.handle_packet(0, pkt).is_empty());
         assert_eq!(d.exec_errors, 1);
@@ -1265,7 +1295,7 @@ mod tests {
             .unwrap();
         d.bind_tenant(ip(1), 4);
         let prog = ProgramBuilder::new().store(0, 1).build_unchecked();
-        let pkt = direct(1, 2, Instruction::Program(Box::new(prog)))
+        let pkt = direct(1, 2, Instruction::Program(Arc::new(prog)))
             .with_payload(Payload::from_f32s(&[1.0, 2.0]));
         let emits = d.handle_packet(0, pkt);
         assert_eq!(emits.len(), 1);

@@ -10,6 +10,8 @@
 //! [`Program`]s — bounded step sequences built from the ordinary
 //! instructions below (see [`super::program`]).
 
+use std::sync::Arc;
+
 use anyhow::{bail, Result};
 
 use super::opcode::{Opcode, SimdOp, USER_OPCODE_BASE};
@@ -105,8 +107,11 @@ pub enum Instruction {
 
     /// A bounded multi-instruction packet program executed hop-locally
     /// by the devices on the SROU path (see [`super::program`]). The §3
-    /// fused allreduce chunk is one of these.
-    Program(Box<Program>),
+    /// fused allreduce chunk is one of these. `Arc`-shared so cloning a
+    /// program-carrying packet (retransmit buffer, fan-out) is a
+    /// refcount bump; the micro-executor copies-on-write when it
+    /// advances the cursor (`Arc::make_mut`).
+    Program(Arc<Program>),
 
     /// A user-defined instruction (opcode >= USER_OPCODE_BASE) with three
     /// raw operands; semantics come from the instruction registry.
@@ -303,7 +308,7 @@ impl Instruction {
                 if !allow_program {
                     bail!("nested program rejected");
                 }
-                I::Program(Box::new(Program::decode_body(r)?))
+                I::Program(Arc::new(Program::decode_body(r)?))
             }
         };
         Ok((instr, flags))
@@ -366,7 +371,7 @@ mod tests {
     }
 
     fn demo_program() -> Instruction {
-        Instruction::Program(Box::new(
+        Instruction::Program(Arc::new(
             ProgramBuilder::new()
                 .reduce(SimdOp::Add, 0x5000, 3)
                 .guarded_write(0x5000, 9)
@@ -415,15 +420,18 @@ mod tests {
         let Instruction::Program(mut p) = demo_program() else {
             unreachable!()
         };
-        p.pc = 1;
-        p.reps_done = 0;
+        {
+            let p = Arc::make_mut(&mut p);
+            p.pc = 1;
+            p.reps_done = 0;
+        }
         round_trip(&Instruction::Program(p), Flags::default());
     }
 
     #[test]
     fn nested_program_rejected_by_decoder() {
         let inner = demo_program();
-        let nested = Instruction::Program(Box::new(
+        let nested = Instruction::Program(Arc::new(
             ProgramBuilder::new().hop(inner).build_unchecked(),
         ));
         let mut w = Writer::default();
@@ -462,7 +470,7 @@ mod tests {
         assert!(Memcopy { src: 0, dst: 64, len: 64 }.idempotent(f));
         // A program is as idempotent as its steps.
         assert!(demo_program().idempotent(f));
-        let dirty = Instruction::Program(Box::new(
+        let dirty = Instruction::Program(Arc::new(
             ProgramBuilder::new()
                 .hop(Instruction::Cas { addr: 0, expected: 1, new: 1 })
                 .build_unchecked(),

@@ -176,6 +176,38 @@
 //! static budget vs DCQCN under fan-in {8, 32, 128} incast, reporting
 //! goodput, p50/p99 completion latency, and Jain fairness
 //! (`BENCH_incast.json`); `--cc dcqcn` turns it on from the CLI.
+//!
+//! # The allocation-free event model (typed events, shared bodies, wheel)
+//!
+//! Steady-state packet flow performs **no per-event heap allocation**.
+//! Three mechanisms compose:
+//!
+//! * **Typed events.** The classic engine is generic over a
+//!   [`sim::World`] whose associated `Event` type it stores *by value*
+//!   and dispatches by `match` — the cluster's event vocabulary is
+//!   [`net::NetEvent`] (send, arrive, deliver, retransmit, app tick),
+//!   with a boxed-closure `Hook` variant kept only for setup/test code
+//!   via `World::lift`. The sharded core has used typed per-shard events
+//!   since PR 5; PR 9 brings the single-heap engine to parity.
+//! * **Shared packet bodies.** [`wire::Payload`] stores ≤ 8-byte scalars
+//!   inline and refcounts larger bodies (`Arc<Vec<u8>>`); SROU segment
+//!   lists are a fixed inline array ([`wire::SegVec`]); aggregation
+//!   manifests and packet programs ride behind `Arc` with copy-on-write
+//!   (`Arc::make_mut`) at the single hop that mutates them. A `Packet`
+//!   clone — into the retransmit buffer, a fan-out copy, a duplicate
+//!   fault — is a few refcount bumps and a header memcpy.
+//! * **The timer wheel.** Retransmit timers live on a hashed
+//!   hierarchical [`sim::TimerWheel`] (4 levels × 64 slots,
+//!   generation-stamped slab slots): O(1) arm, O(1) *exact* cancel when
+//!   the ack lands — no tombstones accumulating behind a heap. The
+//!   engine merges wheel and heap by `(time, seq)` with one shared
+//!   sequence counter, so event order is bit-identical to a single heap
+//!   and every `sharded_determinism.rs` guarantee survives.
+//!
+//! `rust/tests/alloc_free_hot_path.rs` enforces the contract with a
+//! counting global allocator (zero allocations across warmed
+//! Write→WriteAck round trips); `cargo bench --bench sim` reports
+//! whole-run allocations-per-event alongside events/sec.
 
 pub mod alu;
 pub mod cli;

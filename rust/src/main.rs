@@ -209,7 +209,7 @@ fn run_prog_demo(args: &Args) -> Result<()> {
         DeviceIp::lan(101),
         seq,
         SrouHeader::direct(DeviceIp::lan(1)),
-        Instruction::Program(Box::new(prog)),
+        Instruction::Program(std::sync::Arc::new(prog)),
     )
     .with_payload(Payload::from_bytes(message.clone()));
     cl.inject(&mut eng, host, pkt);

@@ -346,7 +346,7 @@ impl MemClient {
             self.host_ip,
             seq,
             SrouHeader::through(segs),
-            Instruction::Program(Box::new(prog)),
+            Instruction::Program(std::sync::Arc::new(prog)),
         )
         .with_flags(Flags(Flags::RELIABLE))
         .with_payload(Payload::from_bytes(vec![0u8; row_bytes]));

@@ -128,7 +128,14 @@ impl Metrics {
     }
 
     pub fn add(&mut self, name: &str, v: u64) {
-        *self.counters.entry(name.to_string()).or_insert(0) += v;
+        // Fast path: bumping an existing counter must not allocate (hot
+        // DES events count through here); the `to_string` is paid once
+        // per counter name, not once per event.
+        if let Some(c) = self.counters.get_mut(name) {
+            *c += v;
+        } else {
+            self.counters.insert(name.to_string(), v);
+        }
     }
 
     pub fn counter(&self, name: &str) -> u64 {
@@ -136,7 +143,12 @@ impl Metrics {
     }
 
     pub fn record(&mut self, name: &str, v: u64) {
-        self.hists.entry(name.to_string()).or_default().record(v);
+        // Same allocation-free fast path as `add`.
+        if let Some(h) = self.hists.get_mut(name) {
+            h.record(v);
+        } else {
+            self.hists.entry(name.to_string()).or_default().record(v);
+        }
     }
 
     pub fn hist(&self, name: &str) -> Option<&Histogram> {

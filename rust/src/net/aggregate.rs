@@ -35,6 +35,7 @@
 //! invariant.
 
 use std::collections::{BTreeMap, HashSet, VecDeque};
+use std::sync::Arc;
 
 use crate::alu::{AluBackend, NativeAlu};
 use crate::isa::SimdOp;
@@ -292,7 +293,9 @@ impl AggEngine {
             Payload::from_f32s(&acc)
         };
         let mut merged = first.clone().with_payload(payload);
-        let meta = merged.agg.as_mut().expect("buffered packets carry AGG");
+        // COW fold: the merged packet's manifest is cloned out of the
+        // shared Arc exactly once, then extended in place.
+        let meta = Arc::make_mut(merged.agg.as_mut().expect("buffered packets carry AGG"));
         for p in &slot.pkts[1..] {
             meta.entries
                 .extend(p.agg.as_ref().expect("buffered AGG").entries.iter().copied());
@@ -362,7 +365,7 @@ mod tests {
         // A two-entry merged packet plus a single completes fanin 3.
         let mut eng = AggEngine::default();
         let mut pre = contrib(2, 10, 7, &[1.0]);
-        pre.agg.as_mut().unwrap().entries.push(AggEntry {
+        Arc::make_mut(pre.agg.as_mut().unwrap()).entries.push(AggEntry {
             src: ip(3),
             seq: 11,
             done_id: 99,

@@ -6,11 +6,11 @@
 use std::collections::HashMap;
 use std::sync::Arc;
 
-use crate::device::{DeviceConfig, NetDamDevice};
+use crate::device::{DeviceConfig, Emit, NetDamDevice};
 use crate::isa::registry::InstructionRegistry;
 use crate::isa::{Flags, Instruction};
 use crate::metrics::Metrics;
-use crate::sim::{Engine, SimTime};
+use crate::sim::{Engine, EventFn, SimTime, World};
 use crate::transport::{ReliabilityTable, ReorderBuffer, RetryVerdict};
 use crate::util::Xoshiro256;
 use crate::wire::{DeviceIp, Packet};
@@ -19,6 +19,73 @@ use super::link::{Link, LinkConfig, LinkId, TxResult};
 use super::switch::Switch;
 
 pub type NodeId = usize;
+
+/// Typed DES events for the cluster world.
+///
+/// Steady-state packet flow uses only these variants: scheduling one moves
+/// a [`Packet`] (whose heavy parts — payload, program, agg metadata — are
+/// `Arc`-shared) straight into the event heap, so a hop costs zero heap
+/// allocations. [`NetEvent::Hook`] is the boxed-closure escape hatch for
+/// one-off setup code and tests; it never appears on the packet hot path.
+pub enum NetEvent {
+    /// Host app `on_start` callback.
+    AppStart { node: NodeId },
+    /// Host app `on_timer(token)` callback.
+    AppTick { node: NodeId, token: u64 },
+    /// A pace-delayed injection being released.
+    Inject {
+        origin: NodeId,
+        pkt: Packet,
+        reliable: bool,
+    },
+    /// Emit a packet from `node` toward its current SROU segment.
+    SendFrom { node: NodeId, pkt: Packet },
+    /// Wire arrival at the far end of a link.
+    LinkArrive { node: NodeId, pkt: Packet },
+    /// Local delivery (loopback, switch forward hand-off).
+    Deliver { node: NodeId, pkt: Packet },
+    /// Retransmit timer for a reliability-tracked op. Lives on the engine's
+    /// timer wheel, so a completion cancels it in O(1); the epoch guard is
+    /// kept as defense in depth (and for parity with the sharded core,
+    /// where timers are uncancellable heap events).
+    RetxTimer { origin: NodeId, seq: u64, epoch: u32 },
+    /// Boxed-closure escape hatch (setup code, tests).
+    Hook(EventFn<Cluster>),
+}
+
+impl World for Cluster {
+    type Event = NetEvent;
+
+    fn lift(f: EventFn<Cluster>) -> NetEvent {
+        NetEvent::Hook(f)
+    }
+
+    fn fire(ev: NetEvent, cl: &mut Cluster, eng: &mut Engine<Cluster>) {
+        match ev {
+            NetEvent::AppStart { node } => cl.with_app(node, eng, |app, ctx| app.on_start(ctx)),
+            NetEvent::AppTick { node, token } => cl.app_timer(eng, node, token),
+            NetEvent::Inject {
+                origin,
+                pkt,
+                reliable,
+            } => cl.inject_cmd(
+                eng,
+                InjectCmd {
+                    origin,
+                    pkt,
+                    reliable,
+                    delay: 0,
+                },
+            ),
+            NetEvent::SendFrom { node, pkt } => cl.send_from(eng, node, pkt),
+            NetEvent::LinkArrive { node, pkt } | NetEvent::Deliver { node, pkt } => {
+                cl.deliver(eng, node, pkt)
+            }
+            NetEvent::RetxTimer { origin, seq, epoch } => cl.retx_fire(eng, origin, seq, epoch),
+            NetEvent::Hook(f) => f(cl, eng),
+        }
+    }
+}
 
 /// Time to move a packet from the host request queue (memif) into the
 /// device TX path — the "software writes the NetDAM packet to Request
@@ -167,6 +234,10 @@ pub struct Cluster {
     /// session kick-off code works unmodified at any shard count. `None`
     /// (the default) leaves the classic single-engine path untouched.
     pub(crate) capture: Option<Vec<(SimTime, InjectCmd)>>,
+    /// Reused buffer for device emissions (allocation-free hot path).
+    emit_scratch: Vec<Emit>,
+    /// Reused buffer for app actions (allocation-free hot path).
+    action_scratch: Vec<Action>,
 }
 
 impl Cluster {
@@ -191,6 +262,8 @@ impl Cluster {
             on_completion: None,
             trace_device_service: false,
             capture: None,
+            emit_scratch: Vec::new(),
+            action_scratch: Vec::new(),
         }
     }
 
@@ -355,9 +428,7 @@ impl Cluster {
     pub fn start_apps(&mut self, eng: &mut Engine<Cluster>) {
         for node in 0..self.nodes.len() {
             if matches!(&self.nodes[node], Node::Host(h) if h.app.is_some()) {
-                eng.schedule_at(0, move |cl: &mut Cluster, eng| {
-                    cl.with_app(node, eng, |app, ctx| app.on_start(ctx));
-                });
+                eng.schedule_event_at(0, NetEvent::AppStart { node });
             }
         }
     }
@@ -365,9 +436,7 @@ impl Cluster {
     /// Host software writes a packet into the request queue; the device
     /// (or host NIC) sends it after the memif hop.
     pub fn inject(&mut self, eng: &mut Engine<Cluster>, origin: NodeId, pkt: Packet) {
-        eng.schedule_in(INJECT_NS, move |cl: &mut Cluster, eng| {
-            cl.send_from(eng, origin, pkt);
-        });
+        eng.schedule_event_in(INJECT_NS, NetEvent::SendFrom { node: origin, pkt });
     }
 
     /// Inject a deferred command (the window engine's currency): one
@@ -386,17 +455,14 @@ impl Cluster {
                 reliable,
                 delay,
             } = cmd;
-            eng.schedule_in(delay, move |cl: &mut Cluster, eng| {
-                cl.inject_cmd(
-                    eng,
-                    InjectCmd {
-                        origin,
-                        pkt,
-                        reliable,
-                        delay: 0,
-                    },
-                );
-            });
+            eng.schedule_event_in(
+                delay,
+                NetEvent::Inject {
+                    origin,
+                    pkt,
+                    reliable,
+                },
+            );
             return;
         }
         if cmd.reliable {
@@ -422,19 +488,25 @@ impl Cluster {
         self.inject(eng, origin, pkt);
     }
 
+    /// Arm the retransmit timer on the engine's timer wheel and register
+    /// its id with the reliability table so an ack cancels it in O(1).
     fn arm_retry(&mut self, eng: &mut Engine<Cluster>, origin: NodeId, seq: u64, epoch: u32) {
         let timeout = self.xport.timeout_ns;
-        eng.schedule_in(timeout, move |cl: &mut Cluster, eng| {
-            match cl.xport.on_timeout(origin, seq, epoch) {
-                RetryVerdict::Done | RetryVerdict::Failed => {}
-                RetryVerdict::Resend(pkt) => {
-                    cl.metrics.inc("retransmits");
-                    let next_epoch = cl.xport.epoch(origin, seq).expect("pending after resend");
-                    cl.arm_retry(eng, origin, seq, next_epoch);
-                    cl.send_from(eng, origin, pkt);
-                }
+        let id = eng.schedule_timer_in(timeout, NetEvent::RetxTimer { origin, seq, epoch });
+        self.xport.set_timer(origin, seq, id);
+    }
+
+    /// A retransmit timer fired (reached here only if never cancelled).
+    fn retx_fire(&mut self, eng: &mut Engine<Cluster>, origin: NodeId, seq: u64, epoch: u32) {
+        match self.xport.on_timeout(origin, seq, epoch) {
+            RetryVerdict::Done | RetryVerdict::Failed => {}
+            RetryVerdict::Resend(pkt) => {
+                self.metrics.inc("retransmits");
+                let next_epoch = self.xport.epoch(origin, seq).expect("pending after resend");
+                self.arm_retry(eng, origin, seq, next_epoch);
+                self.send_from(eng, origin, pkt);
             }
-        });
+        }
     }
 
     // ------------------------------------------------------- forwarding
@@ -447,9 +519,7 @@ impl Cluster {
         };
         if self.node_ip(node) == Some(dst) {
             // Loopback (e.g. a reduce chunk terminating at its origin).
-            eng.schedule_in(LOOPBACK_NS, move |cl: &mut Cluster, eng| {
-                cl.deliver(eng, node, pkt);
-            });
+            eng.schedule_event_in(LOOPBACK_NS, NetEvent::Deliver { node, pkt });
             return;
         }
         let Some(cands) = self.fib[node].get(&dst) else {
@@ -487,22 +557,37 @@ impl Cluster {
                     pkt.flags = pkt.flags.with(Flags::ECN);
                 }
                 // Buffer release is lazy inside the Link (no event).
-                // Fault injection (loss/duplication) on the wire.
+                // Fault injection (loss/duplication) on the wire. Draw
+                // order (lost, dup, jitter-if-dup) and event schedule
+                // order (arrival before dup) are part of the determinism
+                // contract — do not reorder.
                 let lost = self.fault.loss_p > 0.0 && self.rng.chance(self.fault.loss_p);
+                let dup = self.fault.dup_p > 0.0 && self.rng.chance(self.fault.dup_p);
+                let jitter = if dup {
+                    200 + self.rng.next_below(800)
+                } else {
+                    0
+                };
+                let mut pkt = Some(pkt);
                 if lost {
                     self.metrics.inc("fault_lost");
                 } else {
-                    let p = pkt.clone();
-                    eng.schedule_at(arrival, move |cl: &mut Cluster, eng| {
-                        cl.deliver(eng, to, p);
-                    });
+                    // Clone only when the duplicate also needs the packet;
+                    // the clone is shallow (Arc bumps + header memcpy).
+                    let p = if dup {
+                        pkt.clone().expect("packet present")
+                    } else {
+                        pkt.take().expect("packet present")
+                    };
+                    eng.schedule_event_at(arrival, NetEvent::LinkArrive { node: to, pkt: p });
                 }
-                if self.fault.dup_p > 0.0 && self.rng.chance(self.fault.dup_p) {
+                if dup {
                     self.metrics.inc("fault_duplicated");
-                    let jitter = 200 + self.rng.next_below(800);
-                    eng.schedule_at(arrival + jitter, move |cl: &mut Cluster, eng| {
-                        cl.deliver(eng, to, pkt);
-                    });
+                    let p = pkt.take().expect("packet present");
+                    eng.schedule_event_at(
+                        arrival + jitter,
+                        NetEvent::LinkArrive { node: to, pkt: p },
+                    );
                 }
             }
         }
@@ -543,9 +628,7 @@ impl Cluster {
                     self.metrics
                         .add("switch_agg_absorbed", outs.is_empty() as u64);
                     for p in outs {
-                        eng.schedule_in(latency, move |cl: &mut Cluster, eng| {
-                            cl.send_from(eng, node, p);
-                        });
+                        eng.schedule_event_in(latency, NetEvent::SendFrom { node, pkt: p });
                     }
                     return;
                 }
@@ -578,9 +661,7 @@ impl Cluster {
         }
         match kind {
             Kind::Switch { latency } => {
-                eng.schedule_in(latency, move |cl: &mut Cluster, eng| {
-                    cl.send_from(eng, node, pkt);
-                });
+                eng.schedule_event_in(latency, NetEvent::SendFrom { node, pkt });
             }
             Kind::Device => {
                 if is_completion(&pkt.instr) {
@@ -612,22 +693,25 @@ impl Cluster {
 
     fn exec_on_device(&mut self, eng: &mut Engine<Cluster>, node: NodeId, pkt: Packet) {
         let now = eng.now();
-        let emits = match &mut self.nodes[node] {
-            Node::Device(d) => d.handle_packet(now, pkt),
+        let mut emits = std::mem::take(&mut self.emit_scratch);
+        emits.clear();
+        match &mut self.nodes[node] {
+            Node::Device(d) => d.handle_packet_into(now, pkt, &mut emits),
             _ => unreachable!(),
-        };
-        for e in emits {
+        }
+        for e in emits.drain(..) {
             if self.trace_device_service {
                 self.metrics.record("device_service_ns", e.delay);
             }
-            eng.schedule_in(e.delay, move |cl: &mut Cluster, eng| {
-                cl.send_from(eng, node, e.pkt);
-            });
+            eng.schedule_event_in(e.delay, NetEvent::SendFrom { node, pkt: e.pkt });
         }
+        self.emit_scratch = emits;
     }
 
     fn note_completion(&mut self, eng: &mut Engine<Cluster>, node: NodeId, pkt: &Packet) {
-        self.xport.complete(node, pkt.seq);
+        if let Some(tid) = self.xport.complete(node, pkt.seq) {
+            eng.cancel_timer(tid);
+        }
         let rec = CompletionRecord {
             time: eng.now(),
             node,
@@ -675,28 +759,27 @@ impl Cluster {
             self_ip: ip,
             rng: &mut self.rng,
             next_seq: &mut next_seq,
-            actions: Vec::new(),
+            actions: std::mem::take(&mut self.action_scratch),
         };
         f(app.as_mut(), &mut ctx);
-        let actions = std::mem::take(&mut ctx.actions);
+        let mut actions = std::mem::take(&mut ctx.actions);
         // Put the app back before processing actions (they may re-enter).
         if let Node::Host(h) = &mut self.nodes[node] {
             h.app = Some(app);
             h.next_seq = next_seq;
         }
-        for a in actions {
+        for a in actions.drain(..) {
             match a {
                 Action::Send(pkt) => self.inject(eng, node, pkt),
                 Action::SendReliable(pkt) => self.inject_reliable(eng, node, pkt),
                 Action::Timer(delay, token) => {
-                    eng.schedule_in(delay, move |cl: &mut Cluster, eng| {
-                        cl.app_timer(eng, node, token);
-                    });
+                    eng.schedule_event_in(delay, NetEvent::AppTick { node, token });
                 }
                 Action::Record(name, v) => self.metrics.record(&name, v),
                 Action::Count(name, v) => self.metrics.add(&name, v),
             }
         }
+        self.action_scratch = actions;
     }
 
     /// Total link drops + fault losses (for assertions in tests).
@@ -1001,7 +1084,7 @@ mod tests {
             ip(1),
             seq,
             SrouHeader::direct(ip(2)),
-            Instruction::Program(Box::new(prog)),
+            Instruction::Program(Arc::new(prog)),
         )
         .with_payload(Payload::from_f32s(&[1.0, 2.0]));
         cl.inject(&mut eng, d1, pkt);

@@ -16,8 +16,8 @@ mod topology;
 
 pub use aggregate::{AggConfig, AggCounters, AggEngine};
 pub use cluster::{
-    App, AppCtx, Cluster, CompletionHook, CompletionRecord, FaultModel, Host, InjectCmd, Node,
-    NodeId,
+    App, AppCtx, Cluster, CompletionHook, CompletionRecord, FaultModel, Host, InjectCmd, NetEvent,
+    Node, NodeId,
 };
 pub use link::{Link, LinkConfig, LinkId, TxResult};
 pub use shard::{ShardPartition, ShardedRuntime};

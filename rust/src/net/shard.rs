@@ -60,6 +60,15 @@ use super::link::{Link, LinkId, TxResult};
 /// on exactly one node, and same-time follow-ups are always scheduled by
 /// the node that executes them — the two facts the determinism argument
 /// leans on.
+///
+/// Retransmit timers stay on the shard heap as epoch-guarded [`Retry`]
+/// events rather than on a cancellable timer wheel (the classic engine's
+/// approach): a completion may land on a different shard than the shard
+/// holding the timer, so cancellation would require cross-shard
+/// communication mid-window. Stale timers instead no-op through the
+/// epoch check — a bounded, deterministic cost.
+///
+/// [`Retry`]: NetEvent::Retry
 #[derive(Debug)]
 pub(crate) enum NetEvent {
     /// Emit `pkt` from `node` toward its current SROU segment.
@@ -166,6 +175,8 @@ pub(crate) struct ClusterShard {
     current_key: EventKey,
     processed: u64,
     last_event: SimTime,
+    /// Reused buffer for device emissions (allocation-free hot path).
+    emit_scratch: Vec<crate::device::Emit>,
 }
 
 impl ClusterShard {
@@ -313,24 +324,26 @@ impl ClusterShard {
                     };
                     (lost, jitter)
                 };
+                let mut pkt = Some(pkt);
                 if lost {
                     self.metrics.inc("fault_lost");
                 } else {
-                    self.sched(
-                        arrival,
-                        from,
-                        NetEvent::Deliver {
-                            node: to,
-                            pkt: pkt.clone(),
-                        },
-                    );
+                    // Clone only if the duplicate also needs the packet
+                    // (shallow: Arc bumps + header memcpy).
+                    let p = if dup_jitter.is_some() {
+                        pkt.clone().expect("packet present")
+                    } else {
+                        pkt.take().expect("packet present")
+                    };
+                    self.sched(arrival, from, NetEvent::Deliver { node: to, pkt: p });
                 }
                 if let Some(jitter) = dup_jitter {
                     self.metrics.inc("fault_duplicated");
+                    let p = pkt.take().expect("packet present");
                     self.sched(
                         arrival + jitter,
                         from,
-                        NetEvent::Deliver { node: to, pkt },
+                        NetEvent::Deliver { node: to, pkt: p },
                     );
                 }
             }
@@ -463,11 +476,13 @@ impl ClusterShard {
     // Mirrors `Cluster::exec_on_device`.
     fn exec_on_device(&mut self, node: NodeId, pkt: Packet) {
         let now = self.now;
-        let emits = match self.nodes[node].as_mut().expect("own node") {
-            Node::Device(d) => d.handle_packet(now, pkt),
+        let mut emits = std::mem::take(&mut self.emit_scratch);
+        emits.clear();
+        match self.nodes[node].as_mut().expect("own node") {
+            Node::Device(d) => d.handle_packet_into(now, pkt, &mut emits),
             _ => unreachable!(),
-        };
-        for e in emits {
+        }
+        for e in emits.drain(..) {
             if self.trace_device_service {
                 self.metrics.record("device_service_ns", e.delay);
             }
@@ -477,13 +492,16 @@ impl ClusterShard {
                 NetEvent::SendFrom { node, pkt: e.pkt },
             );
         }
+        self.emit_scratch = emits;
     }
 
     // Mirrors `Cluster::note_completion`, except the hook dispatch is
     // deferred to the barrier coordinator (which replays records in
     // global key order).
     fn note_completion(&mut self, node: NodeId, pkt: &Packet) {
-        self.xport.complete(node, pkt.seq);
+        // No wheel timer to cancel here: sharded retries are epoch-guarded
+        // heap events, so the returned TimerId is always None.
+        let _ = self.xport.complete(node, pkt.seq);
         let rec = CompletionRecord {
             time: self.now,
             node,
@@ -686,6 +704,7 @@ impl ShardedRuntime {
                 },
                 processed: 0,
                 last_event: 0,
+                emit_scratch: Vec::new(),
             })
             .collect();
         for (i, node) in std::mem::take(&mut cl.nodes).into_iter().enumerate() {

@@ -1,22 +1,29 @@
 //! The event engine.
 //!
 //! `Engine<W>` is generic over a *world* type `W` (the component graph:
-//! devices, switches, hosts). Events are boxed `FnOnce(&mut W, &mut
-//! Engine<W>)` closures: a handler mutates the world and schedules follow-up
-//! events. The engine never borrows the world except while running one
-//! event, so handlers can freely schedule.
+//! devices, switches, hosts). Events are **typed**: the world declares an
+//! event representation via the [`World`] trait ([`World::Event`]) and a
+//! `fire` dispatcher, so the steady-state packet path pays a `match`
+//! instead of a heap-allocated boxed closure per event. Boxed
+//! `FnOnce(&mut W, &mut Engine<W>)` closures remain available as the
+//! escape hatch for one-off coordinator/app logic: `schedule_at` lifts
+//! them into the world's event type via [`World::lift`] (the network
+//! world wraps them in its `Hook` variant).
 //!
-//! Ordering: min-heap on `(time, seq)` where `seq` is a monotone insertion
-//! counter — simultaneous events run in the order they were scheduled,
-//! which makes runs bit-reproducible regardless of heap internals.
+//! Ordering: a min-heap on `(time, seq)` where `seq` is a monotone
+//! insertion counter — simultaneous events run in the order they were
+//! scheduled, which makes runs bit-reproducible regardless of heap
+//! internals. Timers ([`Engine::schedule_timer_in`]) live on a
+//! [`TimerWheel`] instead of the heap — O(1) to arm and *exactly* O(1)
+//! to cancel by [`TimerId`] (generation-stamped slots, no tombstone
+//! sets) — and draw `seq` from the same counter, so the merged
+//! heap/wheel order is identical to a single `(time, seq)` heap.
 
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
 
 use super::time::SimTime;
-
-/// Identifier returned by `schedule_*`; usable for cancellation.
-pub type EventId = u64;
+use super::wheel::{TimerId, TimerWheel};
 
 /// Error returned by [`Engine::schedule_at_strict`] when the requested
 /// absolute time is already in the past.
@@ -40,27 +47,42 @@ impl std::fmt::Display for SchedulePastError {
 
 impl std::error::Error for SchedulePastError {}
 
-/// The boxed event handler type.
+/// The boxed event handler type (the escape-hatch representation).
 pub type EventFn<W> = Box<dyn FnOnce(&mut W, &mut Engine<W>)>;
 
-struct Entry<W> {
-    time: SimTime,
-    seq: u64,
-    f: Option<EventFn<W>>,
+/// A world that runs on the engine: a typed event representation plus
+/// the dispatcher that executes one event.
+///
+/// Packet-path events should be plain enum variants (no allocation to
+/// schedule, `match` to dispatch); `lift` adapts the boxed-closure API
+/// onto the same representation for the rare control-plane event.
+pub trait World: Sized {
+    /// The typed event representation.
+    type Event;
+    /// Wrap a boxed closure as an event (the escape hatch).
+    fn lift(f: EventFn<Self>) -> Self::Event;
+    /// Execute one event.
+    fn fire(ev: Self::Event, world: &mut Self, eng: &mut Engine<Self>);
 }
 
-impl<W> PartialEq for Entry<W> {
+struct Entry<E> {
+    time: SimTime,
+    seq: u64,
+    ev: E,
+}
+
+impl<E> PartialEq for Entry<E> {
     fn eq(&self, other: &Self) -> bool {
         self.time == other.time && self.seq == other.seq
     }
 }
-impl<W> Eq for Entry<W> {}
-impl<W> PartialOrd for Entry<W> {
+impl<E> Eq for Entry<E> {}
+impl<E> PartialOrd for Entry<E> {
     fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
         Some(self.cmp(other))
     }
 }
-impl<W> Ord for Entry<W> {
+impl<E> Ord for Entry<E> {
     fn cmp(&self, other: &Self) -> Ordering {
         // BinaryHeap is a max-heap; invert to get earliest-first.
         other
@@ -71,35 +93,32 @@ impl<W> Ord for Entry<W> {
 }
 
 /// Deterministic discrete-event engine.
-pub struct Engine<W> {
+pub struct Engine<W: World> {
     now: SimTime,
     seq: u64,
-    heap: BinaryHeap<Entry<W>>,
-    /// Ids of events still sitting in the heap. Guards `cancel` against
-    /// ids that already executed: without the check, every such id would
-    /// sit in `cancelled` forever (unbounded growth on long runs).
-    pending_ids: std::collections::HashSet<EventId>,
-    /// Pending ids whose events were cancelled (lazily skipped on pop).
-    cancelled: std::collections::HashSet<EventId>,
+    heap: BinaryHeap<Entry<W::Event>>,
+    /// Cancellable timers (retransmit timeouts) live here, off the heap.
+    wheel: TimerWheel<W::Event>,
     processed: u64,
+    peak_live: usize,
     stopped: bool,
 }
 
-impl<W> Default for Engine<W> {
+impl<W: World> Default for Engine<W> {
     fn default() -> Self {
         Self::new()
     }
 }
 
-impl<W> Engine<W> {
+impl<W: World> Engine<W> {
     pub fn new() -> Self {
         Self {
             now: 0,
             seq: 0,
             heap: BinaryHeap::new(),
-            pending_ids: std::collections::HashSet::new(),
-            cancelled: std::collections::HashSet::new(),
+            wheel: TimerWheel::new(),
             processed: 0,
+            peak_live: 0,
             stopped: false,
         }
     }
@@ -115,37 +134,61 @@ impl<W> Engine<W> {
         self.processed
     }
 
-    /// Events still pending.
+    /// Events still pending (heap + timer wheel).
     pub fn pending(&self) -> usize {
-        self.heap.len()
+        self.heap.len() + self.wheel.len()
     }
 
-    /// Schedule `f` at absolute time `t`.
+    /// High-water mark of simultaneously live events (bench metadata).
+    pub fn peak_live(&self) -> usize {
+        self.peak_live
+    }
+
+    #[inline]
+    fn note_live(&mut self) {
+        let live = self.heap.len() + self.wheel.len();
+        if live > self.peak_live {
+            self.peak_live = live;
+        }
+    }
+
+    /// Schedule a typed event at absolute time `t`.
     ///
-    /// A `t` in the past saturates to `now` — the event runs at the current
-    /// time, never travels backwards. This clamping is identical in debug
-    /// and release builds (it used to be a `debug_assert!` followed by a
-    /// silent clamp, so debug and release disagreed on past-time inputs).
-    /// Callers that consider a past `t` a logic error should use
-    /// [`Engine::schedule_at_strict`].
-    pub fn schedule_at<F>(&mut self, t: SimTime, f: F) -> EventId
-    where
-        F: FnOnce(&mut W, &mut Engine<W>) + 'static,
-    {
+    /// A `t` in the past saturates to `now` — the event runs at the
+    /// current time, never travels backwards, identically in debug and
+    /// release builds.
+    #[inline]
+    pub fn schedule_event_at(&mut self, t: SimTime, ev: W::Event) {
         let seq = self.seq;
         self.seq += 1;
-        self.pending_ids.insert(seq);
         self.heap.push(Entry {
             time: t.max(self.now),
             seq,
-            f: Some(Box::new(f)),
+            ev,
         });
-        seq
+        self.note_live();
+    }
+
+    /// Schedule a typed event after a relative delay `dt`.
+    #[inline]
+    pub fn schedule_event_in(&mut self, dt: SimTime, ev: W::Event) {
+        self.schedule_event_at(self.now.saturating_add(dt), ev);
+    }
+
+    /// Schedule a boxed-closure event at absolute time `t` (past times
+    /// clamp to `now`, as in [`Engine::schedule_event_at`]). Callers that
+    /// consider a past `t` a logic error should use
+    /// [`Engine::schedule_at_strict`].
+    pub fn schedule_at<F>(&mut self, t: SimTime, f: F)
+    where
+        F: FnOnce(&mut W, &mut Engine<W>) + 'static,
+    {
+        self.schedule_event_at(t, W::lift(Box::new(f)));
     }
 
     /// Schedule `f` at absolute time `t`, rejecting past times with a typed
     /// error instead of clamping.
-    pub fn schedule_at_strict<F>(&mut self, t: SimTime, f: F) -> Result<EventId, SchedulePastError>
+    pub fn schedule_at_strict<F>(&mut self, t: SimTime, f: F) -> Result<(), SchedulePastError>
     where
         F: FnOnce(&mut W, &mut Engine<W>) + 'static,
     {
@@ -155,39 +198,47 @@ impl<W> Engine<W> {
                 now: self.now,
             });
         }
-        Ok(self.schedule_at(t, f))
+        self.schedule_at(t, f);
+        Ok(())
+    }
+
+    /// Schedule `f` after a relative delay `dt`.
+    pub fn schedule_in<F>(&mut self, dt: SimTime, f: F)
+    where
+        F: FnOnce(&mut W, &mut Engine<W>) + 'static,
+    {
+        self.schedule_event_in(dt, W::lift(Box::new(f)));
+    }
+
+    /// Arm a cancellable timer firing `ev` at absolute time `t` (clamped
+    /// to `now`). O(1); the returned [`TimerId`] cancels in O(1).
+    pub fn schedule_timer_at(&mut self, t: SimTime, ev: W::Event) -> TimerId {
+        let seq = self.seq;
+        self.seq += 1;
+        let id = self.wheel.arm(t.max(self.now), seq, ev);
+        self.note_live();
+        id
+    }
+
+    /// Arm a cancellable timer firing `ev` after `dt`.
+    pub fn schedule_timer_in(&mut self, dt: SimTime, ev: W::Event) -> TimerId {
+        self.schedule_timer_at(self.now.saturating_add(dt), ev)
+    }
+
+    /// Exact-cancel a timer. A stale id (the timer already fired or was
+    /// already cancelled) returns `false` and leaves nothing behind.
+    pub fn cancel_timer(&mut self, id: TimerId) -> bool {
+        self.wheel.cancel(id)
     }
 
     /// Advance the clock to `t` without running anything (no-op if `t` is
     /// in the past). The sharded runtime uses this to re-sync an engine
     /// whose world just ran on a different clock.
     pub fn advance_to(&mut self, t: SimTime) {
-        self.now = self.now.max(t);
-    }
-
-    /// Schedule `f` after a relative delay `dt`.
-    pub fn schedule_in<F>(&mut self, dt: SimTime, f: F) -> EventId
-    where
-        F: FnOnce(&mut W, &mut Engine<W>) + 'static,
-    {
-        let t = self.now.saturating_add(dt);
-        self.schedule_at(t, f)
-    }
-
-    /// Cancel a pending event (e.g. a retransmit timer whose ACK arrived).
-    /// Lazy cancellation: the entry stays in the heap and is skipped on
-    /// pop. Cancelling an id that already executed (or was never issued)
-    /// is a no-op — stale ids are not retained.
-    pub fn cancel(&mut self, id: EventId) {
-        if self.pending_ids.contains(&id) {
-            self.cancelled.insert(id);
+        if t > self.now {
+            self.now = t;
+            self.wheel.advance_to(t);
         }
-    }
-
-    /// Cancelled-but-not-yet-popped entries (diagnostic; bounded by
-    /// `pending()`).
-    pub fn cancelled_backlog(&self) -> usize {
-        self.cancelled.len()
     }
 
     /// Ask the engine to stop after the current event returns.
@@ -195,26 +246,45 @@ impl<W> Engine<W> {
         self.stopped = true;
     }
 
-    fn pop_live(&mut self) -> Option<Entry<W>> {
-        while let Some(e) = self.heap.pop() {
-            self.pending_ids.remove(&e.seq);
-            if self.cancelled.remove(&e.seq) {
-                continue;
-            }
-            return Some(e);
+    /// Key of the globally next event (heap and wheel merged).
+    fn next_key(&mut self) -> Option<(SimTime, u64)> {
+        let hk = self.heap.peek().map(|e| (e.time, e.seq));
+        let wk = self.wheel.peek();
+        match (hk, wk) {
+            (Some(h), Some(w)) => Some(h.min(w)),
+            (h, w) => h.or(w),
         }
-        None
+    }
+
+    /// Pop the globally next event. `seq` is unique across heap and
+    /// wheel (one shared counter), so the merge order is total.
+    fn pop_next(&mut self) -> Option<(SimTime, W::Event)> {
+        let hk = self.heap.peek().map(|e| (e.time, e.seq));
+        let wk = self.wheel.peek();
+        let from_heap = match (hk, wk) {
+            (None, None) => return None,
+            (Some(_), None) => true,
+            (None, Some(_)) => false,
+            (Some(h), Some(w)) => h < w,
+        };
+        if from_heap {
+            let e = self.heap.pop().expect("peeked");
+            Some((e.time, e.ev))
+        } else {
+            let (t, _seq, ev) = self.wheel.pop_min().expect("peeked");
+            Some((t, ev))
+        }
     }
 
     /// Run until the queue is empty or `stop()` was called.
     /// Returns the final simulation time.
     pub fn run(&mut self, world: &mut W) -> SimTime {
         while !self.stopped {
-            let Some(mut e) = self.pop_live() else { break };
-            self.now = e.time;
+            let Some((t, ev)) = self.pop_next() else { break };
+            self.now = t;
+            self.wheel.advance_to(t);
             self.processed += 1;
-            let f = e.f.take().expect("event fn present");
-            f(world, self);
+            W::fire(ev, world, self);
         }
         self.stopped = false;
         self.now
@@ -224,26 +294,23 @@ impl<W> Engine<W> {
     /// `deadline` still run). Pending later events remain queued.
     pub fn run_until(&mut self, world: &mut W, deadline: SimTime) -> SimTime {
         while !self.stopped {
-            match self.heap.peek() {
-                Some(e) if e.time <= deadline => {}
+            match self.next_key() {
+                Some((t, _)) if t <= deadline => {}
                 _ => break,
             }
-            let Some(mut e) = self.pop_live() else { break };
-            if e.time > deadline {
-                // pop_live may skip past the peeked entry; re-queue.
-                self.pending_ids.insert(e.seq);
-                self.heap.push(e);
-                break;
-            }
-            self.now = e.time;
+            let (t, ev) = self.pop_next().expect("peeked a key");
+            self.now = t;
+            self.wheel.advance_to(t);
             self.processed += 1;
-            let f = e.f.take().expect("event fn present");
-            f(world, self);
+            W::fire(ev, world, self);
         }
         self.stopped = false;
         // Clock advances to the deadline even if the queue drained earlier,
         // so callers can schedule relative to it.
-        self.now = self.now.max(deadline);
+        if deadline > self.now {
+            self.now = deadline;
+            self.wheel.advance_to(deadline);
+        }
         self.now
     }
 }
@@ -253,14 +320,26 @@ mod tests {
     use super::*;
 
     #[derive(Default)]
-    struct World {
+    struct TestWorld {
         log: Vec<(SimTime, u32)>,
+    }
+
+    /// Closure-only world: events *are* boxed handlers (the escape hatch
+    /// is the whole event model here).
+    impl World for TestWorld {
+        type Event = EventFn<TestWorld>;
+        fn lift(f: EventFn<TestWorld>) -> Self::Event {
+            f
+        }
+        fn fire(ev: Self::Event, world: &mut Self, eng: &mut Engine<Self>) {
+            ev(world, eng);
+        }
     }
 
     #[test]
     fn events_run_in_time_order() {
-        let mut eng: Engine<World> = Engine::new();
-        let mut w = World::default();
+        let mut eng: Engine<TestWorld> = Engine::new();
+        let mut w = TestWorld::default();
         eng.schedule_at(30, |w, e| w.log.push((e.now(), 3)));
         eng.schedule_at(10, |w, e| w.log.push((e.now(), 1)));
         eng.schedule_at(20, |w, e| w.log.push((e.now(), 2)));
@@ -270,8 +349,8 @@ mod tests {
 
     #[test]
     fn ties_break_by_insertion_order() {
-        let mut eng: Engine<World> = Engine::new();
-        let mut w = World::default();
+        let mut eng: Engine<TestWorld> = Engine::new();
+        let mut w = TestWorld::default();
         for i in 0..10 {
             eng.schedule_at(5, move |w, e| w.log.push((e.now(), i)));
         }
@@ -282,10 +361,10 @@ mod tests {
 
     #[test]
     fn handlers_can_schedule_follow_ups() {
-        let mut eng: Engine<World> = Engine::new();
-        let mut w = World::default();
+        let mut eng: Engine<TestWorld> = Engine::new();
+        let mut w = TestWorld::default();
         eng.schedule_at(1, |_, e| {
-            e.schedule_in(4, |w: &mut World, e: &mut Engine<World>| {
+            e.schedule_in(4, |w: &mut TestWorld, e: &mut Engine<TestWorld>| {
                 w.log.push((e.now(), 99))
             });
         });
@@ -296,66 +375,62 @@ mod tests {
     }
 
     #[test]
-    fn cancel_skips_event() {
-        let mut eng: Engine<World> = Engine::new();
-        let mut w = World::default();
-        let id = eng.schedule_at(10, |w, e| w.log.push((e.now(), 1)));
+    fn timers_interleave_with_heap_events_in_key_order() {
+        let mut eng: Engine<TestWorld> = Engine::new();
+        let mut w = TestWorld::default();
+        eng.schedule_at(10, |w, e| w.log.push((e.now(), 1)));
+        let boxed: EventFn<TestWorld> = Box::new(|w, e| w.log.push((e.now(), 2)));
+        eng.schedule_timer_at(20, boxed);
+        eng.schedule_at(30, |w, e| w.log.push((e.now(), 3)));
+        let boxed: EventFn<TestWorld> = Box::new(|w, e| w.log.push((e.now(), 4)));
+        eng.schedule_timer_at(40_000, boxed);
+        eng.run(&mut w);
+        assert_eq!(w.log, vec![(10, 1), (20, 2), (30, 3), (40_000, 4)]);
+    }
+
+    #[test]
+    fn same_time_timer_and_event_order_by_schedule_sequence() {
+        let mut eng: Engine<TestWorld> = Engine::new();
+        let mut w = TestWorld::default();
+        let boxed: EventFn<TestWorld> = Box::new(|w, e| w.log.push((e.now(), 1)));
+        eng.schedule_timer_at(50, boxed); // seq 0
+        eng.schedule_at(50, |w, e| w.log.push((e.now(), 2))); // seq 1
+        let boxed: EventFn<TestWorld> = Box::new(|w, e| w.log.push((e.now(), 3)));
+        eng.schedule_timer_at(50, boxed); // seq 2
+        eng.run(&mut w);
+        assert_eq!(w.log, vec![(50, 1), (50, 2), (50, 3)]);
+    }
+
+    #[test]
+    fn cancelled_timer_never_fires_and_stale_cancel_is_noop() {
+        let mut eng: Engine<TestWorld> = Engine::new();
+        let mut w = TestWorld::default();
+        let boxed: EventFn<TestWorld> = Box::new(|w, e| w.log.push((e.now(), 1)));
+        let id = eng.schedule_timer_at(10, boxed);
         eng.schedule_at(20, |w, e| w.log.push((e.now(), 2)));
-        eng.cancel(id);
+        assert!(eng.cancel_timer(id));
+        assert_eq!(eng.pending(), 1, "exact cancel removes the entry");
         eng.run(&mut w);
         assert_eq!(w.log, vec![(20, 2)]);
+        assert!(!eng.cancel_timer(id), "stale id is a detectable no-op");
     }
 
     #[test]
-    fn cancel_after_execution_does_not_accumulate() {
-        let mut eng: Engine<World> = Engine::new();
-        let mut w = World::default();
-        let ids: Vec<EventId> = (0..100)
-            .map(|i| eng.schedule_at(i, |_, _| {}))
-            .collect();
+    fn timer_fired_then_cancelled_is_noop() {
+        let mut eng: Engine<TestWorld> = Engine::new();
+        let mut w = TestWorld::default();
+        let boxed: EventFn<TestWorld> = Box::new(|w, e| w.log.push((e.now(), 1)));
+        let id = eng.schedule_timer_at(5, boxed);
         eng.run(&mut w);
-        // All ids are stale now; cancelling them must not grow the set.
-        for id in ids {
-            eng.cancel(id);
-        }
-        assert_eq!(eng.cancelled_backlog(), 0, "stale ids must not be kept");
-    }
-
-    #[test]
-    fn cancelled_pending_event_is_purged_on_pop() {
-        let mut eng: Engine<World> = Engine::new();
-        let mut w = World::default();
-        let id = eng.schedule_at(10, |w, e| w.log.push((e.now(), 1)));
-        eng.cancel(id);
-        assert_eq!(eng.cancelled_backlog(), 1);
-        eng.run(&mut w);
-        assert!(w.log.is_empty());
-        assert_eq!(eng.cancelled_backlog(), 0, "set drains as entries pop");
-    }
-
-    #[test]
-    fn run_until_requeue_keeps_event_cancellable() {
-        let mut eng: Engine<World> = Engine::new();
-        let mut w = World::default();
-        // A cancelled early event forces pop_live to skip past the peeked
-        // entry inside run_until, exercising the re-queue path.
-        let early = eng.schedule_at(40, |w, e| w.log.push((e.now(), 1)));
-        let late = eng.schedule_at(60, |w, e| w.log.push((e.now(), 2)));
-        eng.cancel(early);
-        eng.run_until(&mut w, 50);
-        assert!(w.log.is_empty());
-        assert_eq!(eng.pending(), 1);
-        // The re-queued event must still be cancellable.
-        eng.cancel(late);
-        eng.run(&mut w);
-        assert!(w.log.is_empty());
-        assert_eq!(eng.cancelled_backlog(), 0);
+        assert_eq!(w.log, vec![(5, 1)]);
+        assert!(!eng.cancel_timer(id), "fired timers leave no residue");
+        assert_eq!(eng.pending(), 0);
     }
 
     #[test]
     fn run_until_leaves_later_events() {
-        let mut eng: Engine<World> = Engine::new();
-        let mut w = World::default();
+        let mut eng: Engine<TestWorld> = Engine::new();
+        let mut w = TestWorld::default();
         eng.schedule_at(10, |w, e| w.log.push((e.now(), 1)));
         eng.schedule_at(100, |w, e| w.log.push((e.now(), 2)));
         eng.run_until(&mut w, 50);
@@ -366,13 +441,29 @@ mod tests {
     }
 
     #[test]
+    fn run_until_leaves_later_timers() {
+        let mut eng: Engine<TestWorld> = Engine::new();
+        let mut w = TestWorld::default();
+        let boxed: EventFn<TestWorld> = Box::new(|w, e| w.log.push((e.now(), 1)));
+        eng.schedule_timer_at(10, boxed);
+        let boxed: EventFn<TestWorld> = Box::new(|w, e| w.log.push((e.now(), 2)));
+        let late = eng.schedule_timer_at(100_000, boxed);
+        eng.run_until(&mut w, 50);
+        assert_eq!(w.log, vec![(10, 1)]);
+        assert_eq!(eng.pending(), 1);
+        assert!(eng.cancel_timer(late), "still cancellable after the window");
+        eng.run(&mut w);
+        assert_eq!(w.log, vec![(10, 1)]);
+    }
+
+    #[test]
     fn past_time_schedule_clamps_to_now_in_all_builds() {
-        let mut eng: Engine<World> = Engine::new();
-        let mut w = World::default();
+        let mut eng: Engine<TestWorld> = Engine::new();
+        let mut w = TestWorld::default();
         eng.schedule_at(50, |w, e| {
             w.log.push((e.now(), 1));
             // From inside an event at t=50, ask for t=10: runs at 50.
-            e.schedule_at(10, |w: &mut World, e: &mut Engine<World>| {
+            e.schedule_at(10, |w: &mut TestWorld, e: &mut Engine<TestWorld>| {
                 w.log.push((e.now(), 2));
             });
         });
@@ -382,16 +473,16 @@ mod tests {
 
     #[test]
     fn strict_schedule_rejects_past_times() {
-        let mut eng: Engine<World> = Engine::new();
-        let mut w = World::default();
+        let mut eng: Engine<TestWorld> = Engine::new();
+        let mut w = TestWorld::default();
         eng.schedule_at(50, |_, e| {
             let err = e
-                .schedule_at_strict(10, |_: &mut World, _: &mut Engine<World>| {})
+                .schedule_at_strict(10, |_: &mut TestWorld, _: &mut Engine<TestWorld>| {})
                 .unwrap_err();
             assert_eq!(err, SchedulePastError { requested: 10, now: 50 });
             // Present/future times are fine.
             assert!(e
-                .schedule_at_strict(50, |w: &mut World, e: &mut Engine<World>| {
+                .schedule_at_strict(50, |w: &mut TestWorld, e: &mut Engine<TestWorld>| {
                     w.log.push((e.now(), 7));
                 })
                 .is_ok());
@@ -402,7 +493,7 @@ mod tests {
 
     #[test]
     fn advance_to_moves_clock_forward_only() {
-        let mut eng: Engine<World> = Engine::new();
+        let mut eng: Engine<TestWorld> = Engine::new();
         eng.advance_to(100);
         assert_eq!(eng.now(), 100);
         eng.advance_to(40);
@@ -411,8 +502,8 @@ mod tests {
 
     #[test]
     fn stop_halts_mid_run() {
-        let mut eng: Engine<World> = Engine::new();
-        let mut w = World::default();
+        let mut eng: Engine<TestWorld> = Engine::new();
+        let mut w = TestWorld::default();
         eng.schedule_at(1, |w, e| {
             w.log.push((e.now(), 1));
             e.stop();
@@ -421,5 +512,20 @@ mod tests {
         eng.run(&mut w);
         assert_eq!(w.log, vec![(1, 1)]);
         assert_eq!(eng.pending(), 1);
+    }
+
+    #[test]
+    fn peak_live_tracks_high_water_mark() {
+        let mut eng: Engine<TestWorld> = Engine::new();
+        let mut w = TestWorld::default();
+        for t in 1..=5 {
+            eng.schedule_at(t, |_, _| {});
+        }
+        let boxed: EventFn<TestWorld> = Box::new(|_, _| {});
+        eng.schedule_timer_at(6, boxed);
+        assert_eq!(eng.peak_live(), 6);
+        eng.run(&mut w);
+        assert_eq!(eng.peak_live(), 6, "peak survives the drain");
+        assert_eq!(eng.pending(), 0);
     }
 }

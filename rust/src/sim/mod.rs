@@ -25,7 +25,9 @@
 mod engine;
 pub mod sharded;
 mod time;
+mod wheel;
 
-pub use engine::{Engine, EventFn, EventId, SchedulePastError};
+pub use engine::{Engine, EventFn, SchedulePastError, World};
 pub use sharded::{EventKey, ShardRunStats, ShardWorld, ShardedEngine, COORDINATOR_SRC};
 pub use time::{fmt_ns, SimTime, GBPS, MICROS, MILLIS, SECS};
+pub use wheel::{TimerId, TimerWheel};

@@ -1,0 +1,522 @@
+//! A hashed hierarchical timer wheel with generation-stamped slots.
+//!
+//! Retransmit timers dominate the DES's schedule/cancel churn: almost
+//! every reliable packet arms a timeout that is cancelled moments later
+//! when the completion arrives. A binary heap makes that pattern O(log n)
+//! to arm and — worse — forces cancellation to be *lazy* (tombstone sets
+//! that grow with traffic). The wheel makes both O(1):
+//!
+//! * **Arm** picks a level by distance (64 slots per level, 6 bits each,
+//!   [`TICK_SHIFT`]-ns base ticks) and pushes the timer onto an intrusive
+//!   doubly-linked bucket list inside a slab — no allocation once the
+//!   slab has warmed up (freed slots are recycled through a freelist).
+//! * **Cancel** is an exact unlink by [`TimerId`]: the slab slot's
+//!   generation counter is bumped on every free, so a stale id (the
+//!   timer already fired, or was cancelled before) simply misses. No
+//!   tombstones, no drift between heap size and live-event count.
+//! * **No cascading.** Classic wheels migrate entries downward as the
+//!   clock turns. Here the owning [`super::Engine`] never advances time
+//!   *past* a live timer (it always executes the globally earliest
+//!   event), so an entry's distance to `cur_tick` only shrinks and its
+//!   original (level, slot) placement stays valid for its whole life.
+//!   `peek` exploits the same invariant: at each level the earliest
+//!   occupied slot in rotation order from the current cursor holds that
+//!   level's minimum, found with one `rotate_right` + `trailing_zeros`
+//!   on the occupancy bitmap.
+//!
+//! Determinism: the wheel stores the caller-provided `(time, seq)` key
+//! and `peek`/`pop_min` select the exact minimum of that pair, so merged
+//! heap-vs-wheel event ordering is identical to a single heap ordered by
+//! `(time, seq)`.
+
+use super::time::SimTime;
+
+/// log2 of the base tick in nanoseconds (1024 ns). Retransmit timeouts
+/// are tens of microseconds to milliseconds, which lands them on levels
+/// 0–2; level 3 covers ~17 s and a spillover list handles the rest.
+pub const TICK_SHIFT: u32 = 10;
+
+const SLOT_BITS: u32 = 6;
+const SLOTS: usize = 1 << SLOT_BITS;
+const LEVELS: usize = 4;
+const NIL: u32 = u32::MAX;
+/// Bucket code for the overflow list (anything ≥ 64^4 ticks out).
+const OVERFLOW: u16 = (LEVELS * SLOTS) as u16;
+
+/// Handle to an armed timer. Cancellation by a stale id (already fired
+/// or already cancelled) is a detectable no-op thanks to the generation
+/// stamp.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct TimerId {
+    idx: u32,
+    gen: u32,
+}
+
+/// One slab slot: an intrusive doubly-linked list node. Freed slots are
+/// chained through `next` into a freelist and their `gen` is bumped.
+struct Slot<T> {
+    gen: u32,
+    prev: u32,
+    next: u32,
+    /// `level * 64 + slot`, or [`OVERFLOW`].
+    bucket: u16,
+    time: SimTime,
+    seq: u64,
+    ev: Option<T>,
+}
+
+/// The wheel itself. Generic over the event payload so the engine can
+/// store typed world events directly.
+pub struct TimerWheel<T> {
+    slab: Vec<Slot<T>>,
+    /// Freelist head (chained through `Slot::next`).
+    free: u32,
+    heads: [[u32; SLOTS]; LEVELS],
+    /// Per-level occupancy bitmaps (bit = slot has entries).
+    occ: [u64; LEVELS],
+    overflow_head: u32,
+    cur_tick: u64,
+    /// Memoized minimum `(time, seq, slab idx)`; invalidated when that
+    /// entry is removed.
+    cached_min: Option<(SimTime, u64, u32)>,
+    len: usize,
+}
+
+impl<T> Default for TimerWheel<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<T> TimerWheel<T> {
+    pub fn new() -> Self {
+        Self {
+            slab: Vec::new(),
+            free: NIL,
+            heads: [[NIL; SLOTS]; LEVELS],
+            occ: [0; LEVELS],
+            overflow_head: NIL,
+            cur_tick: 0,
+            cached_min: None,
+            len: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Advance the wheel clock. The caller guarantees `t` is not past
+    /// any live timer's `time` (the engine pops in global key order).
+    pub fn advance_to(&mut self, t: SimTime) {
+        let tick = t >> TICK_SHIFT;
+        if tick > self.cur_tick {
+            self.cur_tick = tick;
+        }
+    }
+
+    /// Arm a timer at `(time, seq)`. O(1): level by distance, intrusive
+    /// push onto the bucket. Times in the past fire immediately (tick
+    /// clamps to the current cursor), mirroring `schedule_at`'s clamp.
+    pub fn arm(&mut self, time: SimTime, seq: u64, ev: T) -> TimerId {
+        let tick = (time >> TICK_SHIFT).max(self.cur_tick);
+        // Smallest level whose super-tick distance fits in one turn.
+        let mut bucket = OVERFLOW;
+        for l in 0..LEVELS {
+            let shift = SLOT_BITS * l as u32;
+            if (tick >> shift) - (self.cur_tick >> shift) < SLOTS as u64 {
+                let slot = ((tick >> shift) & (SLOTS as u64 - 1)) as usize;
+                bucket = (l * SLOTS + slot) as u16;
+                break;
+            }
+        }
+        let idx = self.alloc(time, seq, ev, bucket);
+        if bucket == OVERFLOW {
+            self.link(idx, NIL, true);
+        } else {
+            let (l, s) = (bucket as usize / SLOTS, bucket as usize % SLOTS);
+            self.link(idx, (l * SLOTS + s) as u32, false);
+            self.occ[l] |= 1u64 << s;
+        }
+        self.len += 1;
+        if let Some((bt, bs, _)) = self.cached_min {
+            if (time, seq) < (bt, bs) {
+                self.cached_min = Some((time, seq, idx));
+            }
+        } else if self.len == 1 {
+            self.cached_min = Some((time, seq, idx));
+        }
+        TimerId {
+            idx,
+            gen: self.slab[idx as usize].gen,
+        }
+    }
+
+    /// Exact O(1) cancel. Returns false for a stale id (already fired or
+    /// already cancelled) — nothing is left behind either way.
+    pub fn cancel(&mut self, id: TimerId) -> bool {
+        match self.slab.get(id.idx as usize) {
+            Some(s) if s.gen == id.gen && s.ev.is_some() => {
+                self.remove(id.idx);
+                true
+            }
+            _ => false,
+        }
+    }
+
+    /// Key of the earliest live timer.
+    pub fn peek(&mut self) -> Option<(SimTime, u64)> {
+        if self.len == 0 {
+            return None;
+        }
+        if let Some((t, s, _)) = self.cached_min {
+            return Some((t, s));
+        }
+        let mut best: Option<(SimTime, u64, u32)> = None;
+        for l in 0..LEVELS {
+            if self.occ[l] == 0 {
+                continue;
+            }
+            let cursor = ((self.cur_tick >> (SLOT_BITS * l as u32)) & (SLOTS as u64 - 1)) as u32;
+            // Earliest occupied slot in rotation order from the cursor;
+            // it holds this level's minimum (see module docs).
+            let dist = self.occ[l].rotate_right(cursor).trailing_zeros();
+            let slot = ((cursor + dist) as usize) % SLOTS;
+            self.scan_bucket(self.heads[l][slot], &mut best);
+        }
+        self.scan_bucket(self.overflow_head, &mut best);
+        self.cached_min = best;
+        best.map(|(t, s, _)| (t, s))
+    }
+
+    /// Pop the earliest live timer.
+    pub fn pop_min(&mut self) -> Option<(SimTime, u64, T)> {
+        self.peek()?;
+        let (time, seq, idx) = self.cached_min.expect("peek filled the cache");
+        let ev = self.remove(idx);
+        Some((time, seq, ev))
+    }
+
+    fn scan_bucket(&self, mut cur: u32, best: &mut Option<(SimTime, u64, u32)>) {
+        while cur != NIL {
+            let s = &self.slab[cur as usize];
+            let better = match *best {
+                None => true,
+                Some((bt, bs, _)) => (s.time, s.seq) < (bt, bs),
+            };
+            if better {
+                *best = Some((s.time, s.seq, cur));
+            }
+            cur = s.next;
+        }
+    }
+
+    fn alloc(&mut self, time: SimTime, seq: u64, ev: T, bucket: u16) -> u32 {
+        if self.free != NIL {
+            let idx = self.free;
+            let s = &mut self.slab[idx as usize];
+            self.free = s.next;
+            s.prev = NIL;
+            s.next = NIL;
+            s.bucket = bucket;
+            s.time = time;
+            s.seq = seq;
+            s.ev = Some(ev);
+            idx
+        } else {
+            let idx = self.slab.len() as u32;
+            self.slab.push(Slot {
+                gen: 0,
+                prev: NIL,
+                next: NIL,
+                bucket,
+                time,
+                seq,
+                ev: Some(ev),
+            });
+            idx
+        }
+    }
+
+    /// Link `idx` at the head of its bucket list.
+    fn link(&mut self, idx: u32, bucket_code: u32, overflow: bool) {
+        let head = if overflow {
+            self.overflow_head
+        } else {
+            let (l, s) = (bucket_code as usize / SLOTS, bucket_code as usize % SLOTS);
+            self.heads[l][s]
+        };
+        self.slab[idx as usize].next = head;
+        if head != NIL {
+            self.slab[head as usize].prev = idx;
+        }
+        if overflow {
+            self.overflow_head = idx;
+        } else {
+            let (l, s) = (bucket_code as usize / SLOTS, bucket_code as usize % SLOTS);
+            self.heads[l][s] = idx;
+        }
+    }
+
+    /// Unlink a live entry, bump its generation, recycle the slot.
+    fn remove(&mut self, idx: u32) -> T {
+        let (prev, next, bucket) = {
+            let s = &self.slab[idx as usize];
+            (s.prev, s.next, s.bucket)
+        };
+        if prev != NIL {
+            self.slab[prev as usize].next = next;
+        }
+        if next != NIL {
+            self.slab[next as usize].prev = prev;
+        }
+        if bucket == OVERFLOW {
+            if self.overflow_head == idx {
+                self.overflow_head = next;
+            }
+        } else {
+            let (l, s) = (bucket as usize / SLOTS, bucket as usize % SLOTS);
+            if self.heads[l][s] == idx {
+                self.heads[l][s] = next;
+            }
+            if self.heads[l][s] == NIL {
+                self.occ[l] &= !(1u64 << s);
+            }
+        }
+        let s = &mut self.slab[idx as usize];
+        s.gen = s.gen.wrapping_add(1);
+        s.prev = NIL;
+        s.next = self.free;
+        self.free = idx;
+        let ev = s.ev.take().expect("removing a live timer");
+        self.len -= 1;
+        if let Some((_, _, i)) = self.cached_min {
+            if i == idx {
+                self.cached_min = None;
+            }
+        }
+        ev
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Tiny deterministic LCG so the property tests need no RNG dep.
+    struct Lcg(u64);
+    impl Lcg {
+        fn next(&mut self) -> u64 {
+            self.0 = self.0.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            self.0 >> 11
+        }
+        fn below(&mut self, n: u64) -> u64 {
+            self.next() % n
+        }
+    }
+
+    #[test]
+    fn fires_in_key_order_across_levels() {
+        let mut w: TimerWheel<u32> = TimerWheel::new();
+        // Deliberately spans level 0 (near), level 1–2 (mid), overflow (far).
+        let times: Vec<SimTime> = vec![
+            50,
+            1_000,
+            70_000,
+            2_000_000,
+            400_000_000,
+            30_000_000_000,
+            u64::MAX / 2,
+        ];
+        for (i, &t) in times.iter().enumerate() {
+            w.arm(t, i as u64, i as u32);
+        }
+        let mut fired = Vec::new();
+        while let Some((t, _seq, v)) = w.pop_min() {
+            w.advance_to(t);
+            fired.push((t, v));
+        }
+        let expect: Vec<(SimTime, u32)> =
+            times.iter().enumerate().map(|(i, &t)| (t, i as u32)).collect();
+        assert_eq!(fired, expect);
+        assert!(w.is_empty());
+    }
+
+    #[test]
+    fn same_time_breaks_ties_by_seq() {
+        let mut w: TimerWheel<u32> = TimerWheel::new();
+        w.arm(5_000, 9, 9);
+        w.arm(5_000, 3, 3);
+        w.arm(5_000, 7, 7);
+        assert_eq!(w.peek(), Some((5_000, 3)));
+        assert_eq!(w.pop_min().unwrap().2, 3);
+        assert_eq!(w.pop_min().unwrap().2, 7);
+        assert_eq!(w.pop_min().unwrap().2, 9);
+    }
+
+    #[test]
+    fn cancel_is_exact_and_stale_ids_miss() {
+        let mut w: TimerWheel<u32> = TimerWheel::new();
+        let a = w.arm(10_000, 0, 0);
+        let b = w.arm(20_000, 1, 1);
+        assert!(w.cancel(a));
+        assert!(!w.cancel(a), "double cancel is a detectable no-op");
+        assert_eq!(w.len(), 1);
+        let (_, _, v) = w.pop_min().unwrap();
+        assert_eq!(v, 1);
+        assert!(!w.cancel(b), "cancel after fire misses");
+        // The freed slot is recycled with a fresh generation: the old id
+        // must not cancel the new occupant.
+        let c = w.arm(30_000, 2, 2);
+        assert!(!w.cancel(a));
+        assert!(!w.cancel(b));
+        assert!(w.cancel(c));
+        assert!(w.is_empty());
+    }
+
+    #[test]
+    fn level_boundary_distances_never_fire_early() {
+        // Distances that straddle level boundaries (the classic wheel
+        // wraparound bug): each must fire at its own time, never before
+        // a nearer timer.
+        let mut w: TimerWheel<usize> = TimerWheel::new();
+        let base: SimTime = 123_456_789;
+        w.advance_to(base);
+        let tick = 1u64 << TICK_SHIFT;
+        let dists = [
+            1,
+            63,
+            64,
+            65,
+            4_095,
+            4_096,
+            4_097,
+            262_143,
+            262_144,
+            262_145,
+            16_777_215,
+            16_777_216,
+            16_777_217,
+        ];
+        let mut expect: Vec<(SimTime, usize)> = Vec::new();
+        for (i, d) in dists.iter().enumerate() {
+            let t = base + d * tick;
+            w.arm(t, i as u64, i);
+            expect.push((t, i));
+        }
+        expect.sort();
+        let mut fired = Vec::new();
+        let mut last = 0;
+        while let Some((t, _s, v)) = w.pop_min() {
+            assert!(t >= last, "fired early: {t} after {last}");
+            last = t;
+            w.advance_to(t);
+            fired.push((t, v));
+        }
+        assert_eq!(fired, expect);
+    }
+
+    #[test]
+    fn randomized_arm_cancel_fire_matches_reference_model() {
+        // Property: against a naive sorted-vec reference, the wheel
+        // never fires early, never loses a timer, and cancel removes
+        // exactly the requested entry. Clock advances monotonically
+        // through fires (the engine's usage pattern).
+        let mut rng = Lcg(0x9E3779B97F4A7C15);
+        for round in 0..20u64 {
+            let mut w: TimerWheel<u64> = TimerWheel::new();
+            let mut model: Vec<(SimTime, u64)> = Vec::new(); // (time, seq)
+            let mut ids: Vec<(TimerId, SimTime, u64)> = Vec::new();
+            let mut now: SimTime = round * 977;
+            w.advance_to(now);
+            let mut seq = 0u64;
+            for _ in 0..400 {
+                match rng.below(10) {
+                    // 60%: arm a timer at a random future distance.
+                    0..=5 => {
+                        let dist = match rng.below(4) {
+                            0 => rng.below(1 << 12),
+                            1 => rng.below(1 << 20),
+                            2 => rng.below(1 << 28),
+                            _ => rng.below(1 << 40),
+                        };
+                        let t = now + dist;
+                        let id = w.arm(t, seq, seq);
+                        model.push((t, seq));
+                        ids.push((id, t, seq));
+                        seq += 1;
+                    }
+                    // 20%: cancel a random live timer.
+                    6..=7 => {
+                        if !ids.is_empty() {
+                            let k = rng.below(ids.len() as u64) as usize;
+                            let (id, t, s) = ids.swap_remove(k);
+                            assert!(w.cancel(id), "live timer must cancel");
+                            let pos = model
+                                .iter()
+                                .position(|&e| e == (t, s))
+                                .expect("model has it");
+                            model.swap_remove(pos);
+                        }
+                    }
+                    // 20%: fire the earliest timer.
+                    _ => {
+                        model.sort();
+                        match (w.pop_min(), model.first().copied()) {
+                            (None, None) => {}
+                            (Some((t, s, v)), Some(m)) => {
+                                assert_eq!((t, s), m, "wheel min != model min");
+                                assert_eq!(v, s);
+                                assert!(t >= now, "fired early");
+                                now = t;
+                                w.advance_to(now);
+                                model.remove(0);
+                                let pos =
+                                    ids.iter().position(|&(_, mt, ms)| (mt, ms) == (t, s));
+                                ids.swap_remove(pos.expect("fired timer was live"));
+                            }
+                            (a, b) => panic!("wheel/model diverged: {a:?} vs {b:?}"),
+                        }
+                    }
+                }
+                assert_eq!(w.len(), model.len(), "live counts diverged");
+            }
+            // Drain: every remaining timer fires exactly once, in order.
+            model.sort();
+            for &m in &model {
+                let (t, s, _) = w.pop_min().expect("timer lost");
+                assert_eq!((t, s), m);
+                assert!(t >= now);
+                now = t;
+                w.advance_to(now);
+            }
+            assert!(w.pop_min().is_none());
+            assert!(w.is_empty());
+        }
+    }
+
+    #[test]
+    fn slab_recycles_without_growth() {
+        let mut w: TimerWheel<u8> = TimerWheel::new();
+        for i in 0..1_000u64 {
+            let id = w.arm(i * 2_048, i, 0);
+            if i % 2 == 0 {
+                assert!(w.cancel(id));
+            } else {
+                let (t, s, _) = w.pop_min().unwrap();
+                assert_eq!((t, s), (i * 2_048, i));
+                w.advance_to(t);
+            }
+        }
+        assert!(w.is_empty());
+        assert!(
+            w.slab.len() <= 2,
+            "freelist must recycle slots, slab grew to {}",
+            w.slab.len()
+        );
+    }
+}

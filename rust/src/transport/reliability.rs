@@ -10,7 +10,7 @@
 use std::collections::HashMap;
 
 use crate::net::NodeId;
-use crate::sim::SimTime;
+use crate::sim::{SimTime, TimerId};
 use crate::wire::Packet;
 
 /// (origin node, sequence number).
@@ -21,7 +21,13 @@ struct Pending {
     pkt: Packet,
     retries: u32,
     /// Epoch guard: timers from before the latest (re)send are stale.
+    /// Still used by the sharded core, where retransmit timers live on the
+    /// shard heap and cannot be cancelled.
     epoch: u32,
+    /// Timer-wheel slot of the live retransmit timer (classic engine path).
+    /// A completion hands it back so the caller can cancel in O(1) instead
+    /// of leaving a tombstone to skip.
+    timer: Option<TimerId>,
 }
 
 /// What to do when a retransmit timer fires.
@@ -59,23 +65,42 @@ impl ReliabilityTable {
     }
 
     /// Track an injected packet. Returns the epoch to stamp on the timer.
+    /// The packet's heavy parts (payload, program, agg meta) are Arc-shared,
+    /// so keeping a copy here costs a header memcpy, not a deep clone.
     pub fn track(&mut self, origin: NodeId, pkt: Packet) -> u32 {
         let key = (origin, pkt.seq);
         let e = self.pending.entry(key).or_insert(Pending {
             pkt,
             retries: 0,
             epoch: 0,
+            timer: None,
         });
         e.epoch
     }
 
-    /// A completion with `seq` arrived at `origin`.
-    pub fn complete(&mut self, origin: NodeId, seq: u64) -> bool {
-        let hit = self.pending.remove(&(origin, seq)).is_some();
-        if hit {
-            self.completed += 1;
+    /// Record the live retransmit timer for a pending entry (classic path).
+    pub fn set_timer(&mut self, origin: NodeId, seq: u64, id: TimerId) {
+        if let Some(p) = self.pending.get_mut(&(origin, seq)) {
+            p.timer = Some(id);
         }
-        hit
+    }
+
+    /// A completion with `seq` arrived at `origin`. On a hit, returns the
+    /// pending retransmit timer (if one was registered) so the caller can
+    /// cancel it; a miss (duplicate completion) returns `None`.
+    pub fn complete(&mut self, origin: NodeId, seq: u64) -> Option<TimerId> {
+        match self.pending.remove(&(origin, seq)) {
+            Some(p) => {
+                self.completed += 1;
+                p.timer
+            }
+            None => None,
+        }
+    }
+
+    /// Did a completion for (origin, seq) already land?
+    pub fn is_pending(&self, origin: NodeId, seq: u64) -> bool {
+        self.pending.contains_key(&(origin, seq))
     }
 
     /// Retransmit timer for (origin, seq) at `epoch` fired.
@@ -94,6 +119,7 @@ impl ReliabilityTable {
         }
         p.retries += 1;
         p.epoch += 1;
+        p.timer = None; // the timer that just fired is spent
         self.retransmits += 1;
         RetryVerdict::Resend(p.pkt.clone())
     }
@@ -127,7 +153,8 @@ mod tests {
     fn ack_before_timeout_completes() {
         let mut t = ReliabilityTable::new(1000, 3);
         let epoch = t.track(0, pkt(7));
-        assert!(t.complete(0, 7));
+        assert!(t.is_pending(0, 7));
+        t.complete(0, 7);
         assert_eq!(t.on_timeout(0, 7, epoch), RetryVerdict::Done);
         assert_eq!(t.completed, 1);
         assert_eq!(t.outstanding(), 0);
@@ -165,8 +192,31 @@ mod tests {
         let mut t = ReliabilityTable::new(1000, 3);
         t.track(0, pkt(5));
         t.track(1, pkt(5));
-        assert!(t.complete(0, 5));
+        t.complete(0, 5);
+        assert_eq!(t.completed, 1);
         assert_eq!(t.outstanding(), 1);
-        assert!(!t.complete(0, 5), "double complete is a no-op");
+        t.complete(0, 5);
+        assert_eq!(t.completed, 1, "double complete is a no-op");
+    }
+
+    #[test]
+    fn completion_hands_back_the_registered_timer() {
+        use crate::sim::TimerWheel;
+        // Mint a real TimerId from a wheel so the handshake is end-to-end.
+        let mut wheel: TimerWheel<u32> = TimerWheel::new();
+        let id = wheel.arm(5_000, 0, 42);
+
+        let mut t = ReliabilityTable::new(1000, 3);
+        t.track(0, pkt(11));
+        t.set_timer(0, 11, id);
+        let got = t.complete(0, 11);
+        assert_eq!(got, Some(id));
+        assert!(wheel.cancel(got.unwrap()), "timer cancels exactly once");
+
+        // A resend consumes the stored timer: nothing left to cancel.
+        let e = t.track(0, pkt(12));
+        t.set_timer(0, 12, wheel.arm(6_000, 1, 43));
+        assert!(matches!(t.on_timeout(0, 12, e), RetryVerdict::Resend(_)));
+        assert_eq!(t.complete(0, 12), None);
     }
 }

@@ -27,4 +27,4 @@ pub mod srou_hdr;
 pub use frame::{DeviceIp, ETH_OVERHEAD, IPV4_HEADER, UDP_HEADER, WIRE_OVERHEAD};
 pub use packet::{AggEntry, AggMeta, Packet, MAX_AGG_ENTRIES};
 pub use payload::Payload;
-pub use srou_hdr::{Segment, SrouHeader, FUNC_NONE};
+pub use srou_hdr::{SegVec, Segment, SrouHeader, FUNC_NONE};

@@ -1,4 +1,15 @@
 //! The NetDAM packet: structured form + exact byte codec.
+//!
+//! The in-memory form is tuned for the DES hot path: the heavy parts of
+//! a packet — the payload bytes, the aggregation manifest, a carried
+//! program — are all behind `Arc`s, so cloning a packet for fan-out,
+//! retransmit buffering, or a duplicate-delivery fault is a few refcount
+//! bumps plus a `memcpy` of the inline header (the SROU segment list is
+//! a fixed array). Hops that genuinely mutate shared state (an AGG
+//! manifest merge, a program-counter advance) go copy-on-write via
+//! `Arc::make_mut`.
+
+use std::sync::Arc;
 
 use anyhow::{bail, Result};
 
@@ -100,7 +111,9 @@ pub struct Packet {
     pub instr: Instruction,
     pub flags: Flags,
     /// Aggregation metadata; present iff [`Flags::AGG`] is set.
-    pub agg: Option<AggMeta>,
+    /// `Arc`-shared: cloned packets (retransmit buffer, fan-out) share
+    /// the manifest; switches merging manifests copy-on-write.
+    pub agg: Option<Arc<AggMeta>>,
     /// SIMD data payload.
     pub payload: Payload,
 }
@@ -133,7 +146,7 @@ impl Packet {
     /// the metadata the switches and the root collector key on.
     pub fn with_agg(mut self, agg: AggMeta) -> Self {
         self.flags = self.flags.with(Flags::AGG);
-        self.agg = Some(agg);
+        self.agg = Some(Arc::new(agg));
         self
     }
 
@@ -213,7 +226,7 @@ impl Packet {
             flags = flags.with(Flags::ECN);
         }
         let agg = if flags.agg() {
-            Some(AggMeta::decode(&mut r)?)
+            Some(Arc::new(AggMeta::decode(&mut r)?))
         } else {
             None
         };
@@ -338,7 +351,7 @@ mod tests {
             ip(1),
             11,
             SrouHeader::through(segs),
-            Instruction::Program(Box::new(prog)),
+            Instruction::Program(Arc::new(prog)),
         )
         .with_payload(Payload::from_f32s(&[1.5; 16]));
         let bytes = pkt.encode().unwrap();

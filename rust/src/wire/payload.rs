@@ -1,14 +1,22 @@
-//! Packet payloads: real bytes, or a phantom length.
+//! Packet payloads: real bytes, a small inline scalar, or a phantom length.
 //!
 //! The full paper-scale experiment (E2: 2 GiB allreduce) would need ~8 GiB
 //! of payload buffers if every in-flight packet carried real data. The DES
-//! therefore supports two payload modes:
+//! therefore supports three payload modes:
 //!
 //! * [`Payload::Data`] — real bytes (`Arc`-shared so store-and-forward
 //!   hops don't copy). All correctness tests run in this mode; the ALU
 //!   actually computes.
+//! * [`Payload::Inline`] — up to 8 bytes stored in the enum itself. The
+//!   empty payload and the forwarded-scalar shape (`from_u64`, e.g. a
+//!   `BlockHash` digest) are by far the most-constructed payloads (every
+//!   ack/done/reply packet), and neither deserves an `Arc<Vec>` — inline
+//!   storage keeps them heap-allocation-free on the DES hot path.
 //! * [`Payload::Phantom`] — length only. Timing-exact, contents elided;
 //!   used for paper-scale timing runs. ALU cost is still charged.
+//!
+//! Equality is by *content*, not representation: an 8-byte `Data` equals
+//! the same 8 bytes `Inline` (the codec is free to pick either).
 
 use std::sync::Arc;
 
@@ -16,17 +24,26 @@ use anyhow::Result;
 
 use crate::util::bytes::{bytes_to_f32s, f32s_to_bytes};
 
-#[derive(Debug, Clone, PartialEq)]
+/// Capacity of the inline representation.
+pub const INLINE_CAP: usize = 8;
+
+#[derive(Debug, Clone)]
 pub enum Payload {
     /// Real data, shared between hops.
     Data(Arc<Vec<u8>>),
+    /// Up to [`INLINE_CAP`] real bytes stored inline (no heap).
+    Inline { len: u8, buf: [u8; INLINE_CAP] },
     /// Timing-only payload of the given byte length.
     Phantom(u32),
 }
 
 impl Payload {
+    /// The empty payload. Allocation-free (inline representation).
     pub fn empty() -> Self {
-        Payload::Data(Arc::new(Vec::new()))
+        Payload::Inline {
+            len: 0,
+            buf: [0; INLINE_CAP],
+        }
     }
 
     pub fn from_bytes(v: Vec<u8>) -> Self {
@@ -39,8 +56,12 @@ impl Payload {
 
     /// A single little-endian u64 — the shape program steps forward
     /// scalar results in (e.g. a `BlockHash` step's digest).
+    /// Allocation-free (inline representation).
     pub fn from_u64(v: u64) -> Self {
-        Payload::Data(Arc::new(v.to_le_bytes().to_vec()))
+        Payload::Inline {
+            len: INLINE_CAP as u8,
+            buf: v.to_le_bytes(),
+        }
     }
 
     pub fn phantom(len: usize) -> Self {
@@ -51,6 +72,7 @@ impl Payload {
     pub fn len(&self) -> usize {
         match self {
             Payload::Data(d) => d.len(),
+            Payload::Inline { len, .. } => *len as usize,
             Payload::Phantom(n) => *n as usize,
         }
     }
@@ -67,6 +89,7 @@ impl Payload {
     pub fn bytes(&self) -> Option<&[u8]> {
         match self {
             Payload::Data(d) => Some(d),
+            Payload::Inline { len, buf } => Some(&buf[..*len as usize]),
             Payload::Phantom(_) => None,
         }
     }
@@ -74,6 +97,18 @@ impl Payload {
     /// Decode as f32 lanes; `None` for phantom.
     pub fn f32s(&self) -> Option<Result<Vec<f32>>> {
         self.bytes().map(bytes_to_f32s)
+    }
+}
+
+/// Content equality: phantoms match phantoms by length; data payloads
+/// match by bytes regardless of `Data` vs `Inline` representation.
+impl PartialEq for Payload {
+    fn eq(&self, other: &Self) -> bool {
+        match (self, other) {
+            (Payload::Phantom(a), Payload::Phantom(b)) => a == b,
+            (Payload::Phantom(_), _) | (_, Payload::Phantom(_)) => false,
+            _ => self.bytes() == other.bytes(),
+        }
     }
 }
 
@@ -113,5 +148,25 @@ mod tests {
         } else {
             panic!("expected data payloads");
         }
+    }
+
+    #[test]
+    fn empty_and_scalar_are_inline() {
+        assert!(matches!(Payload::empty(), Payload::Inline { len: 0, .. }));
+        assert!(matches!(
+            Payload::from_u64(7),
+            Payload::Inline { len: 8, .. }
+        ));
+    }
+
+    #[test]
+    fn equality_is_by_content_across_representations() {
+        let v = 0xDEAD_BEEF_u64;
+        let inline = Payload::from_u64(v);
+        let heap = Payload::from_bytes(v.to_le_bytes().to_vec());
+        assert_eq!(inline, heap);
+        assert_eq!(Payload::empty(), Payload::from_bytes(Vec::new()));
+        assert_ne!(Payload::empty(), Payload::phantom(0), "phantom is a mode");
+        assert_ne!(inline, Payload::from_u64(v + 1));
     }
 }

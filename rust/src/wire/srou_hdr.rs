@@ -9,6 +9,13 @@
 //!
 //! Ring Reduce-Scatter is literally a segment list `[n2:RS, n3:RS, n4:RS]`
 //! — each hop executes the reduce function and self-routes onward.
+//!
+//! Segments are stored in a fixed inline array ([`SegVec`]) rather than a
+//! `Vec`: the cap is [`MAX_SEGMENTS`] = 16 anyway (one wire byte), and the
+//! header is cloned on every fan-out/retransmit — inline storage makes
+//! that clone a `memcpy` with no heap traffic on the DES hot path.
+
+use std::ops::{Deref, DerefMut};
 
 use anyhow::{bail, Result};
 
@@ -41,25 +48,110 @@ impl Segment {
     }
 }
 
+/// Hard cap (wire field is one byte; real SROU stacks are short).
+pub const MAX_SEGMENTS: usize = 16;
+
+/// A fixed-capacity inline segment list. Derefs to `&[Segment]`, so all
+/// slice reads (`iter`, indexing, `len`, `last`) work unchanged; `Copy`
+/// because 16 segments is 96 bytes of plain data.
+#[derive(Clone, Copy)]
+pub struct SegVec {
+    buf: [Segment; MAX_SEGMENTS],
+    len: u8,
+}
+
+impl SegVec {
+    pub fn new() -> Self {
+        Self {
+            buf: [Segment {
+                node: DeviceIp(0),
+                func: FUNC_NONE,
+            }; MAX_SEGMENTS],
+            len: 0,
+        }
+    }
+
+    /// Append a segment. Panics past [`MAX_SEGMENTS`] (the wire cap).
+    pub fn push(&mut self, seg: Segment) {
+        assert!((self.len as usize) < MAX_SEGMENTS, "segment list overflow");
+        self.buf[self.len as usize] = seg;
+        self.len += 1;
+    }
+
+    pub fn as_slice(&self) -> &[Segment] {
+        &self.buf[..self.len as usize]
+    }
+}
+
+impl Default for SegVec {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Deref for SegVec {
+    type Target = [Segment];
+    fn deref(&self) -> &[Segment] {
+        self.as_slice()
+    }
+}
+
+impl DerefMut for SegVec {
+    fn deref_mut(&mut self) -> &mut [Segment] {
+        let n = self.len as usize;
+        &mut self.buf[..n]
+    }
+}
+
+impl PartialEq for SegVec {
+    fn eq(&self, other: &Self) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+impl Eq for SegVec {}
+
+impl std::fmt::Debug for SegVec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        self.as_slice().fmt(f)
+    }
+}
+
+impl From<Vec<Segment>> for SegVec {
+    fn from(v: Vec<Segment>) -> Self {
+        let mut s = SegVec::new();
+        for seg in v {
+            s.push(seg);
+        }
+        s
+    }
+}
+
+impl<'a> IntoIterator for &'a SegVec {
+    type Item = &'a Segment;
+    type IntoIter = std::slice::Iter<'a, Segment>;
+    fn into_iter(self) -> Self::IntoIter {
+        self.as_slice().iter()
+    }
+}
+
 /// The SROU segment stack.
 #[derive(Debug, Clone, PartialEq, Eq, Default)]
 pub struct SrouHeader {
     /// Segment list in travel order: `segments[0]` is the first hop.
     /// (SRv6 stores it reversed on the wire; we keep travel order in
     /// memory and reverse in the codec to stay faithful to the RFC style.)
-    pub segments: Vec<Segment>,
+    pub segments: SegVec,
     /// Index of the next segment to visit. `== segments.len()` means the
     /// packet hasn't departed; 0 means final delivery done.
     pub left: u8,
 }
 
-/// Hard cap (wire field is one byte; real SROU stacks are short).
-pub const MAX_SEGMENTS: usize = 16;
-
 impl SrouHeader {
     /// A direct path to one destination (degenerate single segment).
     pub fn direct(dst: DeviceIp) -> Self {
-        Self::through(vec![Segment::to(dst)])
+        let mut segments = SegVec::new();
+        segments.push(Segment::to(dst));
+        Self { segments, left: 1 }
     }
 
     /// A path through the given segments, ready to travel.
@@ -70,7 +162,10 @@ impl SrouHeader {
             segments.len()
         );
         let left = segments.len() as u8;
-        Self { segments, left }
+        Self {
+            segments: SegVec::from(segments),
+            left,
+        }
     }
 
     /// The segment the packet is currently travelling toward.
@@ -122,15 +217,10 @@ impl SrouHeader {
         if left as usize > n {
             bail!("segments-left {left} exceeds count {n}");
         }
-        let mut segments = vec![
-            Segment {
-                node: DeviceIp(0),
-                func: 0
-            };
-            n
-        ];
+        let mut segments = SegVec::new();
+        segments.len = n as u8;
         for i in (0..n).rev() {
-            segments[i] = Segment {
+            segments.buf[i] = Segment {
                 node: DeviceIp(r.u32()?),
                 func: r.u16()?,
             };
@@ -203,5 +293,28 @@ mod tests {
         assert!(SrouHeader::decode(&mut Reader::new(&[1, 2, 0, 0, 0, 1, 0, 0])).is_err());
         // truncated segment
         assert!(SrouHeader::decode(&mut Reader::new(&[1, 1, 0, 0])).is_err());
+    }
+
+    #[test]
+    fn segvec_is_inline_slice_compatible() {
+        let mut s = SegVec::new();
+        assert!(s.is_empty());
+        for i in 0..MAX_SEGMENTS {
+            s.push(Segment::call(ip(i as u8 + 1), i as u16));
+        }
+        assert_eq!(s.len(), MAX_SEGMENTS);
+        assert_eq!(s[0].node, ip(1));
+        assert_eq!(s.last().unwrap().func, (MAX_SEGMENTS - 1) as u16);
+        let copy = s; // Copy, not a heap clone
+        assert_eq!(copy, s);
+    }
+
+    #[test]
+    #[should_panic(expected = "segment list overflow")]
+    fn segvec_rejects_overflow() {
+        let mut s = SegVec::new();
+        for i in 0..=MAX_SEGMENTS {
+            s.push(Segment::call(ip(1), i as u16));
+        }
     }
 }

@@ -1,0 +1,154 @@
+//! PR 9 regression: the allocation-free hot path — typed packet events,
+//! Arc-shared packet bodies, and timer-wheel retransmit timers — must
+//! not move a single observable bit. These tests pin the full shard
+//! grid {0, 1, 2, 4} under 5% loss: reports, metrics counters, final
+//! data, and DCQCN rate trajectories.
+//!
+//! Grid convention (same as `sharded_determinism.rs`): sharded arms are
+//! bit-compared against *each other*; the classic engine (shards = 0)
+//! draws from a different RNG stream layout under loss by design, so
+//! its arm is pinned by **self-reproduction** (two identical runs) plus
+//! the data oracle shared with every sharded arm.
+
+use netdam::collectives::{naive_sum, CollectiveReport};
+use netdam::comm::Fabric;
+use netdam::net::LinkConfig;
+use netdam::roce::DcqcnConfig;
+use netdam::transport::CcMode;
+
+/// A lossy, reliable ring allreduce on the 2-pod fat-tree. `shards == 0`
+/// runs the classic single-heap engine (wheel-armed retransmit timers,
+/// exact cancellation); `shards > 0` runs the sharded core (epoch-guarded
+/// heap retries). Returns the report, a counter snapshot, and every
+/// rank's final vector.
+fn lossy_run(shards: usize) -> (CollectiveReport, Vec<(String, u64)>, Vec<Vec<f32>>) {
+    let elements = 8 * 512;
+    let mut builder = Fabric::builder()
+        .fat_tree(2, 4, 2)
+        .seed(0xD15C)
+        .reliable(true)
+        .loss(0.05)
+        .window(4)
+        .with_shards(shards);
+    if shards > 0 {
+        builder = builder.shard_threads(1);
+    }
+    let mut f = builder.build().unwrap();
+    let comm = f.communicator(elements as u64 * 4).unwrap();
+    let grads = comm.seed_gradients_exact(&mut f, elements, 0x5EED);
+    let h = comm.iallreduce(&mut f, elements).unwrap();
+    let out = f.wait(h).unwrap();
+    assert!(
+        out.complete(),
+        "shards={shards}: {}/{} ops",
+        out.ops_done,
+        out.ops
+    );
+    let report = f.report(&out);
+    let counters: Vec<(String, u64)> = ["link_drops", "fault_lost", "retransmits", "fault_duplicated"]
+        .iter()
+        .map(|&k| (k.to_string(), f.cluster().metrics.counter(k)))
+        .collect();
+    let oracle = naive_sum(&grads);
+    let mut vecs = Vec::with_capacity(f.ranks());
+    for r in 0..f.ranks() {
+        let v = comm.read_vector(&mut f, r, elements).unwrap();
+        assert_eq!(v, oracle, "shards={shards}: rank {r} diverged from oracle");
+        vecs.push(v);
+    }
+    (report, counters, vecs)
+}
+
+/// Classic engine, 5% loss, run twice: the wheel-based retransmit path
+/// (arm on inject, exact cancel on completion, fire + re-arm on loss)
+/// reproduces the report, every counter, and every byte of data.
+#[test]
+fn classic_engine_lossy_run_is_bit_reproducible() {
+    let (ra, ca, va) = lossy_run(0);
+    let (rb, cb, vb) = lossy_run(0);
+    assert!(ra.link_drops > 0, "the loss model never fired: {ra:?}");
+    assert!(ra.retransmits > 0, "loss recovered without retransmits?");
+    assert_eq!(ra, rb, "classic report, run A vs run B");
+    assert_eq!(ca, cb, "classic counters, run A vs run B");
+    assert_eq!(va, vb, "classic data, run A vs run B");
+}
+
+/// The full grid under loss: sharded arms {1, 2, 4} bit-agree on report,
+/// counters, and data; the classic arm recovers the same oracle through
+/// its own retransmit machinery.
+#[test]
+fn lossy_grid_reports_counters_and_data_pin_the_hot_path() {
+    let (r0, c0, v0) = lossy_run(0);
+    let (r1, c1, v1) = lossy_run(1);
+    let (r2, c2, v2) = lossy_run(2);
+    let (r4, c4, v4) = lossy_run(4);
+    assert!(r1.link_drops > 0 && r1.retransmits > 0, "{r1:?}");
+    assert_eq!(r1, r2, "report, 1 vs 2 shards");
+    assert_eq!(r1, r4, "report, 1 vs 4 shards");
+    assert_eq!(c1, c2, "counters, 1 vs 2 shards");
+    assert_eq!(c1, c4, "counters, 1 vs 4 shards");
+    assert_eq!(v1, v2, "data, 1 vs 2 shards");
+    assert_eq!(v1, v4, "data, 1 vs 4 shards");
+    // Classic and sharded agree on the *semantics* even though their
+    // loss draws differ: same element count, same final data.
+    assert!(r0.retransmits > 0);
+    assert_eq!(r0.elements, r1.elements);
+    assert_eq!(v0, v1, "classic data matches the sharded grid");
+    assert!(c0.iter().any(|(k, v)| k == "retransmits" && *v > 0));
+}
+
+/// Same fabric with closed-loop DCQCN active: RED marks, CE echo, CNPs,
+/// multiplicative cuts. Returns the report, the CE counter, and the full
+/// per-slot rate trajectory.
+fn dcqcn_run(shards: usize) -> (CollectiveReport, u64, Vec<(usize, u64, u64)>) {
+    let elements = 8 * 512;
+    let mut builder = Fabric::builder()
+        .fat_tree(2, 4, 2)
+        .link(LinkConfig::dc_100g().with_ecn(2_000, 20_000))
+        .seed(0xD15C)
+        .reliable(true)
+        .loss(0.05)
+        .window(4)
+        .with_congestion_control(CcMode::Dcqcn(DcqcnConfig::default()))
+        .with_shards(shards);
+    if shards > 0 {
+        builder = builder.shard_threads(1);
+    }
+    let mut f = builder.build().unwrap();
+    let comm = f.communicator(elements as u64 * 4).unwrap();
+    let grads = comm.seed_gradients_exact(&mut f, elements, 0x5EED);
+    let h = comm.iallreduce(&mut f, elements).unwrap();
+    let out = f.wait(h).unwrap();
+    assert!(out.complete(), "shards={shards}");
+    let oracle = naive_sum(&grads);
+    let v = comm.read_vector(&mut f, 0, elements).unwrap();
+    assert_eq!(v, oracle, "shards={shards}: data diverged");
+    let ce = f.cluster().metrics.counter("ecn_ce_received");
+    (f.report(&out), ce, f.rate_log())
+}
+
+/// Rate trajectories across the grid: the control loop replays
+/// bit-identically at shards {1, 2, 4}, and the classic engine replays
+/// itself exactly — every CNP absorbed at the same instant with the
+/// same f64 rate bits, now with its retransmit timers on the wheel.
+#[test]
+fn dcqcn_rate_trajectories_pin_the_hot_path() {
+    let (r0a, ce0a, t0a) = dcqcn_run(0);
+    let (r0b, ce0b, t0b) = dcqcn_run(0);
+    assert!(ce0a > 0, "classic: no CE marks echoed");
+    assert!(!t0a.is_empty(), "classic: DCQCN never absorbed a CNP");
+    assert_eq!(r0a, r0b, "classic report, run A vs run B");
+    assert_eq!(ce0a, ce0b, "classic CE count, run A vs run B");
+    assert_eq!(t0a, t0b, "classic rate trajectory, run A vs run B");
+
+    let (r1, ce1, t1) = dcqcn_run(1);
+    let (r2, ce2, t2) = dcqcn_run(2);
+    let (r4, ce4, t4) = dcqcn_run(4);
+    assert!(ce1 > 0 && !t1.is_empty());
+    assert_eq!(r1, r2, "report, 1 vs 2 shards");
+    assert_eq!(r1, r4, "report, 1 vs 4 shards");
+    assert_eq!(ce1, ce2, "CE count, 1 vs 2 shards");
+    assert_eq!(ce1, ce4, "CE count, 1 vs 4 shards");
+    assert_eq!(t1, t2, "rate trajectory, 1 vs 2 shards");
+    assert_eq!(t1, t4, "rate trajectory, 1 vs 4 shards");
+}

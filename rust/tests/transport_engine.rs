@@ -77,7 +77,7 @@ fn done_ops(
                 origin_ip,
                 seq,
                 SrouHeader::direct(target_ip),
-                Instruction::Program(Box::new(prog)),
+                Instruction::Program(std::sync::Arc::new(prog)),
             )
             .with_flags(Flags(Flags::RELIABLE))
             .with_payload(Payload::from_f32s(&[i as f32; 16]));

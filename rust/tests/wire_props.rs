@@ -103,7 +103,7 @@ fn rand_program(rng: &mut Xoshiro256) -> Instruction {
     if (p.pc as usize) < p.steps.len() {
         p.reps_done = rng.next_below(p.steps[p.pc as usize].repeat as u64) as u8;
     }
-    Instruction::Program(Box::new(p))
+    Instruction::Program(std::sync::Arc::new(p))
 }
 
 /// Step-legal instruction kinds for random fused tails.
