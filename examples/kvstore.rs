@@ -1,135 +1,88 @@
-//! A KV store on the **pooled memory plane** (paper §2.4–§2.6): the SDN
-//! controller leases lock and value regions out of the block-interleaved
-//! global pool and programs every device IOMMU with the lease; the store
-//! then runs entirely on global virtual addresses through `MemClient` —
-//! a CAS word serializes writers (the paper's atomic-instruction
-//! pattern), values spray across all devices via scatter-gather WRITEs,
-//! and a foreign tenant is fenced *by the devices themselves*: its reads
-//! come back as wire-level NAKs, not host-side errors.
+//! A multi-tenant KV/embedding store on the **pooled memory plane**
+//! (paper §2.4–§2.6), driven through the serving tier (`netdam::serve`):
+//! every tenant gets leases out of the block-interleaved global pool and
+//! a private seeded request stream — Zipf-skewed GET/PUT/CAS plus
+//! TensorDIMM-style embedding bags lowered onto near-memory `gather_sum`
+//! programs — all contending on ONE fabric. The devices themselves fence
+//! tenants: when an aggressor replays plans against a lease the SDN
+//! controller already revoked, every access dies as a wire-level NAK and
+//! per-plan cancellation while its neighbors' schedules complete
+//! untouched.
 //!
 //! ```sh
 //! cargo run --release --example kvstore
 //! ```
 
-use anyhow::Result;
-use netdam::mem::{MemClient, MemError};
-use netdam::net::{Cluster, LinkConfig, Topology};
-use netdam::pool::{InterleaveMap, SdnController, TenantId};
-use netdam::sim::Engine;
-use netdam::util::bytes::{bytes_to_f32s, f32s_to_bytes};
-use netdam::wire::DeviceIp;
-
-const SLOT_BYTES: u64 = 256;
-// 128 slots x 256 B = 4 interleave blocks: the value region genuinely
-// spans every device of the 4-wide pool.
-const N_KEYS: u64 = 128;
-const KV_TENANT: TenantId = 1;
-
-struct Kv {
-    client: MemClient,
-    /// GVA of the lock word region (one u64 per key).
-    locks: u64,
-    /// GVA of the value region (one slot per key).
-    data: u64,
-}
-
-impl Kv {
-    fn slot(&self, key: u64) -> (u64, u64) {
-        (self.locks + key * 8, self.data + key * SLOT_BYTES)
-    }
-
-    /// CAS-acquire the slot lock, scatter the value over the pool,
-    /// release the lock. Returns false if another writer holds the lock.
-    fn put(
-        &self,
-        cl: &mut Cluster,
-        eng: &mut Engine<Cluster>,
-        key: u64,
-        value: &[f32],
-    ) -> Result<bool> {
-        let (lock, slot) = self.slot(key);
-        let (_, acquired) = self.client.cas(cl, eng, lock, 0, 1)?;
-        if !acquired {
-            return Ok(false); // contended
-        }
-        self.client.write(cl, eng, slot, &f32s_to_bytes(value))?;
-        let (_, released) = self.client.cas(cl, eng, lock, 1, 0)?;
-        assert!(released, "lock holder always releases");
-        Ok(true)
-    }
-
-    fn get(
-        &self,
-        cl: &mut Cluster,
-        eng: &mut Engine<Cluster>,
-        key: u64,
-        len: usize,
-    ) -> Result<Vec<f32>> {
-        let (_, slot) = self.slot(key);
-        let bytes = self.client.read(cl, eng, slot, len * 4)?;
-        bytes_to_f32s(&bytes)
-    }
-}
+use anyhow::{ensure, Result};
+use netdam::comm::Fabric;
+use netdam::serve::{run, Mix, ServeConfig};
+use netdam::sim::fmt_ns;
 
 fn main() -> Result<()> {
-    println!("== KV store on the pooled memory plane ==\n");
-    // The paper testbed (4 devices, one ToR) plus a second host that will
-    // play the intruder.
-    let t = Topology::star(11, 4, 2, LinkConfig::dc_100g());
-    let mut cl = t.cluster;
-    let mut eng: Engine<Cluster> = Engine::new();
+    println!("== multi-tenant KV/embedding store on the pooled memory plane ==\n");
 
-    // Control plane: the SDN controller leases the store's regions and
-    // programs every device IOMMU (malloc → map + perms + tenant fence).
-    let map = InterleaveMap::paper_default((1..=4).map(DeviceIp::lan).collect());
-    let mut ctl = SdnController::new(map, 2 << 30);
-    ctl.grant_host(&mut cl, KV_TENANT, DeviceIp::lan(101));
-    let locks = ctl.malloc_mapped(&mut cl, KV_TENANT, N_KEYS * 8, true)?;
-    let data = ctl.malloc_mapped(&mut cl, KV_TENANT, N_KEYS * SLOT_BYTES, true)?;
-    println!(
-        "leases: locks at gva {:#x} (+{}), values at gva {:#x} (+{})",
-        locks.gva, locks.len, data.gva, data.len
+    // Value integrity first, outside the statistics: one tenant, one
+    // key, a put/get round trip through the interleaved pool.
+    let mut fabric = Fabric::builder()
+        .star(4)
+        .hosts(1)
+        .seed(7)
+        .with_pool(4 << 20)
+        .build()?;
+    let client = fabric.mem_client()?;
+    let lease = fabric.malloc(client.tenant, 16 * 512, true)?;
+    let value: Vec<u8> = (0..512u32).map(|i| (i as u8).wrapping_mul(29)).collect();
+    let mut b = client.batch();
+    b.write(fabric.cluster_mut(), lease.gva + 3 * 512, &value);
+    let h = fabric.submit_mem(b)?;
+    fabric.wait_mem(h)?;
+    let mut b = client.batch();
+    let rb = b.read(fabric.cluster_mut(), lease.gva + 3 * 512, value.len());
+    let h = fabric.submit_mem(b)?;
+    let mut out = fabric.wait_mem(h)?;
+    ensure!(
+        out.take_read(rb).as_deref() == Some(&value[..]),
+        "value must reassemble in GVA order"
     );
-    let kv = Kv {
-        client: MemClient::new(t.hosts[0], DeviceIp::lan(101), KV_TENANT, ctl.map().clone()),
-        locks: locks.gva,
-        data: data.gva,
+    println!("PUT/GET key round-trips through the interleaved pool ✓\n");
+
+    // The fleet: three tenants with Zipf(0.99) keys and the serving mix
+    // (GET/PUT/CAS + embedding bags), scratch leases churning under live
+    // traffic, and a fourth, misbehaving tenant running alongside — a
+    // NAK storm from a revoked lease plus an incast burst.
+    let cfg = ServeConfig {
+        tenants: 3,
+        devices: 4,
+        keys_per_tenant: 128,
+        value_bytes: 512,
+        waves: 3,
+        ops_per_wave: 16,
+        skew: 0.99,
+        mix: Mix::serving_default(),
+        aggressor: true,
+        seed: 0x570_4E5E,
+        ..Default::default()
     };
+    let report = run(&cfg)?;
+    print!("{}", report.render());
 
-    let v1: Vec<f32> = (0..32).map(|i| i as f32 * 1.5).collect();
-    assert!(kv.put(&mut cl, &mut eng, 3, &v1)?);
-    println!("PUT key=3 (32 x f32, scatter-gathered over the pool)");
-
-    let got = kv.get(&mut cl, &mut eng, 3, 32)?;
-    assert_eq!(got, v1, "value reassembles in GVA order");
-    println!("GET key=3 == written value ✓");
-
-    // The slot genuinely interleaves: the controller's translation shows
-    // the value region spread over every device.
-    let extents = ctl.access(KV_TENANT, data.gva, data.len, false)?;
-    let devs: std::collections::BTreeSet<_> = extents.iter().map(|e| e.device).collect();
-    println!("value region interleaves over {} devices", devs.len());
-    assert_eq!(devs.len(), 4);
-
-    // Lock contention: a second writer fails the CAS while locked.
-    let (lock9, _) = kv.slot(9);
-    let (_, held) = kv.client.cas(&mut cl, &mut eng, lock9, 0, 1)?;
-    assert!(held);
-    let stole = kv.put(&mut cl, &mut eng, 9, &v1)?;
-    println!("second writer while locked: put accepted = {stole} (expected false)");
-    assert!(!stole);
-
-    // Device-enforced ACL: an intruder host (never granted) reads the
-    // value region — the *device IOMMU* rejects it with a wire NAK.
-    let intruder = MemClient::new(t.hosts[1], DeviceIp::lan(102), 9, kv.client.map().clone());
-    match intruder.read(&mut cl, &mut eng, data.gva, 64) {
-        Err(MemError::Nak { device, reason, .. }) => {
-            println!("intruder read NAK'd by device {device}: {reason}")
-        }
-        other => panic!("expected a device NAK, got {other:?}"),
+    let agg = report.aggressor.as_ref().expect("aggressor ran");
+    ensure!(
+        agg.naks > 0 && agg.cancelled > 0,
+        "the storm must die as device NAKs + cancellation"
+    );
+    for t in &report.tenants {
+        ensure!(
+            t.naks == 0 && t.done == t.ops,
+            "a neighbor's schedule was disturbed"
+        );
     }
-
-    println!("\nfabric counters:");
-    print!("{}", cl.metrics.render());
+    println!(
+        "\naggressor fenced by the devices ({} NAKs, {} ops cancelled); \
+         neighbors NAK-free, worst p99 {}",
+        agg.naks,
+        agg.cancelled,
+        fmt_ns(report.worst_p99())
+    );
     Ok(())
 }

@@ -1,0 +1,174 @@
+//! Bench `serving` — the multi-tenant KV/embedding serving tier
+//! (`netdam::serve`) across the tenant-count x Zipf-skew x cc-mode
+//! grid, reporting per-tenant p50/p99/p99.9 latency, goodput, and
+//! NAK/CNP counters per cell. Writes the machine-readable artifact
+//! `BENCH_serving.json`; the in-bench row-count assertion plus the CI
+//! python check make a silently skipped cell a hard failure.
+//!
+//! Set `NETDAM_BENCH_SMOKE=1` for a small grid (CI smoke). The full
+//! grid leases each fleet out of a 2 GiB pooled GVA space (8 devices x
+//! 256 MiB) — the devices' HBM backing is page-sparse, so only touched
+//! pages cost host memory.
+
+use netdam::metrics::Table;
+use netdam::roce::DcqcnConfig;
+use netdam::serve::{run, ServeConfig, ServeReport};
+use netdam::sim::fmt_ns;
+use netdam::transport::CcMode;
+
+fn cc_of(name: &str) -> CcMode {
+    match name {
+        "dcqcn" => CcMode::Dcqcn(DcqcnConfig::default()),
+        _ => CcMode::Static,
+    }
+}
+
+fn cell_cfg(smoke: bool, tenants: usize, skew: f64, cc: &str) -> ServeConfig {
+    let base = if smoke {
+        ServeConfig {
+            devices: 4,
+            keys_per_tenant: 128,
+            value_bytes: 256,
+            waves: 2,
+            ops_per_wave: 8,
+            pool_per_device: 4 << 20,
+            ..Default::default()
+        }
+    } else {
+        ServeConfig {
+            devices: 8,
+            keys_per_tenant: 8192,
+            value_bytes: 512,
+            waves: 6,
+            ops_per_wave: 32,
+            pool_per_device: 256 << 20, // 8 devices -> a 2 GiB GVA pool
+            ..Default::default()
+        }
+    };
+    ServeConfig {
+        tenants,
+        skew,
+        cc: cc_of(cc),
+        seed: 0x5E24E,
+        shard_threads: 0,
+        ..base
+    }
+}
+
+fn json_u64s(xs: impl Iterator<Item = u64>) -> String {
+    let v: Vec<String> = xs.map(|x| x.to_string()).collect();
+    format!("[{}]", v.join(", "))
+}
+
+fn json_f64s(xs: impl Iterator<Item = f64>) -> String {
+    let v: Vec<String> = xs.map(|x| format!("{x:.3}")).collect();
+    format!("[{}]", v.join(", "))
+}
+
+fn row_json(cfg: &ServeConfig, cc: &str, r: &ServeReport, wall_ms: f64) -> String {
+    let requests: usize = r.tenants.iter().map(|t| t.requests).sum();
+    let naks: usize = r.tenants.iter().map(|t| t.naks).sum();
+    let cancelled: usize = r.tenants.iter().map(|t| t.cancelled).sum();
+    let agg_goodput: f64 = r.tenants.iter().map(|t| t.goodput_gbps).sum();
+    format!(
+        "    {{\"tenants\": {}, \"skew\": {}, \"cc\": \"{cc}\", \"devices\": {}, \
+         \"keys_per_tenant\": {}, \"value_bytes\": {}, \"waves\": {}, \"ops_per_wave\": {}, \
+         \"requests\": {requests}, \"elapsed_ns\": {}, \"wall_ms\": {wall_ms:.3}, \
+         \"p50_ns\": {}, \"p99_ns\": {}, \"p999_ns\": {}, \"goodput_gbps\": {}, \
+         \"agg_goodput_gbps\": {agg_goodput:.3}, \"naks\": {naks}, \"cancelled\": {cancelled}, \
+         \"retx\": {}, \"cnps\": {}, \"churn_events\": {}}}",
+        cfg.tenants,
+        cfg.skew,
+        cfg.devices,
+        cfg.keys_per_tenant,
+        cfg.value_bytes,
+        cfg.waves,
+        cfg.ops_per_wave,
+        r.elapsed_ns,
+        json_u64s(r.tenants.iter().map(|t| t.tail.p50)),
+        json_u64s(r.tenants.iter().map(|t| t.tail.p99)),
+        json_u64s(r.tenants.iter().map(|t| t.tail.p999)),
+        json_f64s(r.tenants.iter().map(|t| t.goodput_gbps)),
+        r.retransmits,
+        r.cnps,
+        r.churn_events,
+    )
+}
+
+fn main() {
+    let wall_total = std::time::Instant::now();
+    let smoke = std::env::var("NETDAM_BENCH_SMOKE").is_ok();
+    let (tenant_grid, skew_grid): (&[usize], &[f64]) = if smoke {
+        (&[2, 3], &[0.0, 0.99])
+    } else {
+        (&[4, 8, 16], &[0.0, 0.9, 1.2])
+    };
+    let cc_grid = ["static", "dcqcn"];
+    let expected_rows = tenant_grid.len() * skew_grid.len() * cc_grid.len();
+    println!(
+        "# serving — multi-tenant KV/embedding tier: {} tenant-counts x {} skews x \
+         {} cc-modes ({expected_rows} cells)\n",
+        tenant_grid.len(),
+        skew_grid.len(),
+        cc_grid.len()
+    );
+
+    let mut table = Table::new(&[
+        "tenants", "skew", "cc", "worst p99", "worst p99.9", "fleet goodput", "cnps", "wall",
+    ]);
+    let mut json_rows: Vec<String> = Vec::new();
+    for &tenants in tenant_grid {
+        for &skew in skew_grid {
+            for cc in cc_grid {
+                let cfg = cell_cfg(smoke, tenants, skew, cc);
+                let wall = std::time::Instant::now();
+                let r = run(&cfg).expect("serving cell");
+                let wall_ms = wall.elapsed().as_secs_f64() * 1e3;
+                // Every cell must complete its whole schedule NAK-free —
+                // a stranded or NAK'd fleet is a bench failure, not a
+                // quieter report.
+                for t in &r.tenants {
+                    assert_eq!(t.done, t.ops, "cell {tenants}/{skew}/{cc}: stranded ops");
+                    assert_eq!(t.naks, 0, "cell {tenants}/{skew}/{cc}: unexpected NAK");
+                    assert!(t.tail.count > 0, "cell {tenants}/{skew}/{cc}: no latencies");
+                }
+                let worst_p999 = r.tenants.iter().map(|t| t.tail.p999).max().unwrap_or(0);
+                table.row(&[
+                    tenants.to_string(),
+                    format!("{skew}"),
+                    cc.to_string(),
+                    fmt_ns(r.worst_p99()),
+                    fmt_ns(worst_p999),
+                    format!(
+                        "{:.2} Gbps",
+                        r.tenants.iter().map(|t| t.goodput_gbps).sum::<f64>()
+                    ),
+                    r.cnps.to_string(),
+                    format!("{wall_ms:.0} ms"),
+                ]);
+                json_rows.push(row_json(&cfg, cc, &r, wall_ms));
+            }
+        }
+    }
+    println!("{}", table.render());
+
+    assert_eq!(
+        json_rows.len(),
+        expected_rows,
+        "a grid cell was silently skipped: {}/{expected_rows} rows",
+        json_rows.len()
+    );
+
+    let json = format!(
+        "{{\n  \"bench\": \"serving\",\n  \"smoke\": {smoke},\n  \"meta\": {{\"expected_rows\": \
+         {expected_rows}, \"tenant_grid\": {:?}, \"skew_grid\": {:?}, \"cc_grid\": \
+         [\"static\", \"dcqcn\"], \"total_wall_ms\": {:.3}}},\n  \"results\": [\n{}\n  ]\n}}\n",
+        tenant_grid,
+        skew_grid,
+        wall_total.elapsed().as_secs_f64() * 1e3,
+        json_rows.join(",\n")
+    );
+    std::fs::write("BENCH_serving.json", &json).expect("write BENCH_serving.json");
+    println!("wrote BENCH_serving.json ({} rows)", json_rows.len());
+    println!("bench wallclock: {:.2?}", wall_total.elapsed());
+}

@@ -8,8 +8,10 @@
 //! Perf observability (PR 9): the bench bin installs a counting global
 //! allocator and reports **allocations per event** for every arm — the
 //! number the allocation-free hot path is supposed to drive toward zero
-//! — plus run metadata (host cores, total wallclock) and the classic
-//! engine's peak live-event count. The strict zero-alloc *assertion*
+//! — plus run metadata (host cores, total wallclock) and each core's
+//! peak live-event count (classic: the engine heap's high-water mark;
+//! sharded: per-shard heap peaks summed per round, maxed across rounds —
+//! `Fabric::sharded_peak_live`). The strict zero-alloc *assertion*
 //! lives in `rust/tests/alloc_free_hot_path.rs`; the bench reports the
 //! whole-run average, which also pays one-time warmup growth.
 //!
@@ -64,7 +66,8 @@ struct ArmResult {
     wall: std::time::Duration,
     /// Heap allocations during the measured rounds (fabric build excluded).
     allocs: u64,
-    /// Classic engine only: high-water mark of live scheduled events.
+    /// High-water mark of live scheduled events (classic: engine heap;
+    /// sharded: sum of per-shard heap peaks).
     peak_live: usize,
 }
 
@@ -100,7 +103,7 @@ fn run_arm(
     let sim_ns = f.now() - t0;
     let wall = wall.elapsed();
     let (events, peak_live) = if shards > 0 {
-        (f.sharded_events(), 0)
+        (f.sharded_events(), f.sharded_peak_live() as usize)
     } else {
         let eng = f.raw_parts().1;
         (eng.events_processed(), eng.peak_live())
@@ -237,6 +240,7 @@ fn main() {
         assert!(out.complete(), "1024-rank allreduce stopped short");
         let allocs = ALLOCS.load(Ordering::Relaxed) - allocs0;
         let events = f.sharded_events();
+        let peak_live = f.sharded_peak_live();
         let eps = events as f64 / wall.elapsed().as_secs_f64().max(1e-9);
         let ape = allocs as f64 / (events as f64).max(1.0);
         println!(
@@ -253,7 +257,7 @@ fn main() {
              \"shards\": 8, \"ranks\": 1024, \"elements\": {scale_elements}, \"rounds\": 1, \
              \"events\": {events}, \"sim_elapsed_ns\": {}, \"wall_ms\": {:.3}, \
              \"events_per_sec\": {eps:.0}, \"allocs\": {allocs}, \
-             \"allocs_per_event\": {ape:.4}, \"peak_live_events\": 0}}",
+             \"allocs_per_event\": {ape:.4}, \"peak_live_events\": {peak_live}}}",
             out.elapsed_ns(),
             wall.elapsed().as_secs_f64() * 1e3,
         ));

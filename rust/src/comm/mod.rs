@@ -822,6 +822,15 @@ impl Fabric {
         self.sharded.as_ref().map_or(0, |rt| rt.events)
     }
 
+    /// High-water mark of live scheduled events on the sharded core:
+    /// per-shard heap peaks summed within a drive round, maxed across
+    /// rounds (`0` on the classic path — read the engine's `peak_live`
+    /// there). The sharded counterpart of `Engine::peak_live` for bench
+    /// metadata.
+    pub fn sharded_peak_live(&self) -> u64 {
+        self.sharded.as_ref().map_or(0, |rt| rt.peak_live)
+    }
+
     /// Shards the DES runs on (`1` for the classic single-heap engine).
     pub fn shard_count(&self) -> usize {
         self.sharded.as_ref().map_or(1, ShardedRuntime::shard_count)
@@ -1038,6 +1047,74 @@ impl Fabric {
             }
         }
     }
+
+    /// Like [`wait_mem`](Self::wait_mem), but also surfaces the plan's
+    /// transport stats (per-op latencies, submit/finish times, NAK
+    /// cancellation counts) — and surfaces them even when redemption
+    /// fails, which is exactly the case the serving aggressor exercises:
+    /// a NAK'd plan still carries latencies for the ops that retired
+    /// before cancellation, and the serving report needs them.
+    pub fn wait_mem_timed(
+        &mut self,
+        h: MemHandle,
+    ) -> (Result<BatchResult, MemError>, MemPlanStats) {
+        if let Err(e) = self.drive() {
+            return (Err(MemError::Plan(e.to_string())), MemPlanStats::default());
+        }
+        let st = &mut self.mem_plans[h.0];
+        let plan = st.plan;
+        let Some(prepared) = st.prepared.take() else {
+            return (
+                Err(MemError::Plan("mem handle already redeemed".into())),
+                MemPlanStats::default(),
+            );
+        };
+        match plan {
+            None => (
+                prepared.redeem(&mut self.cl, 0, None, &[]),
+                MemPlanStats::default(),
+            ),
+            Some(p) => {
+                let out = self.session.outcome(p);
+                if self.session.release(p).is_ok() {
+                    self.mem_plans[h.0].plan = None;
+                }
+                let res = prepared.redeem(&mut self.cl, out.done, out.nak.as_ref(), &out.responses);
+                let stats = MemPlanStats {
+                    ops: out.ops,
+                    done: out.done,
+                    cancelled: out.cancelled,
+                    nakked: out.nak.is_some(),
+                    submitted_at: out.submitted_at,
+                    last_done: out.last_done,
+                    latencies: out.latencies,
+                };
+                (res, stats)
+            }
+        }
+    }
+}
+
+/// Transport-level outcome of one pooled-memory plan, captured alongside
+/// redemption by [`Fabric::wait_mem_timed`]. All-integer timing so
+/// serving reports built from it stay `Eq`-comparable across DES shard
+/// counts.
+#[derive(Debug, Clone, Default)]
+pub struct MemPlanStats {
+    /// Ops the plan submitted.
+    pub ops: usize,
+    /// Ops retired exactly once.
+    pub done: usize,
+    /// Queued ops of this plan dropped by its NAK cancellation.
+    pub cancelled: usize,
+    /// Whether a wire NAK cancelled the plan.
+    pub nakked: bool,
+    /// Simulated time the plan was submitted.
+    pub submitted_at: SimTime,
+    /// Time of the plan's last retirement (submit time if none).
+    pub last_done: SimTime,
+    /// Per-op completion latency (wire release → retirement, ns).
+    pub latencies: Vec<SimTime>,
 }
 
 // -------------------------------------------------------- communicator

@@ -1,0 +1,149 @@
+//! E5 — multi-tenant serving isolation A/B (PR 10).
+//!
+//! The serving subsystem ([`crate::serve`]) can run any fleet; this
+//! harness pins the experiment the paper's pooled-memory story implies
+//! but never measures: *does one misbehaving tenant move a neighbor's
+//! tail?* Two congestion-control arms run the same seeded fleet, each
+//! as a full aggressor A/B ([`crate::serve::isolation_check`]):
+//!
+//! * **static** — fixed token-bucket budgets only; isolation rests on
+//!   per-plan windows and per-plan NAK cancellation.
+//! * **dcqcn** — the closed loop: the aggressor's incast burst earns CE
+//!   marks, its slots get rate-controlled, neighbors keep their share.
+//!
+//! Reported per arm: the fleet's worst p99 without/with the aggressor,
+//! the worst per-tenant inflation ratio, the aggressor's NAK/cancel
+//! counts, CNPs, and the verdict against the 2x bound.
+
+use anyhow::Result;
+
+use crate::metrics::Table;
+use crate::roce::DcqcnConfig;
+use crate::serve::{isolation_check, IsolationVerdict, ServeConfig};
+use crate::sim::fmt_ns;
+use crate::transport::CcMode;
+
+#[derive(Debug, Clone)]
+pub struct E5Config {
+    pub tenants: usize,
+    pub skew: f64,
+    pub waves: usize,
+    pub ops_per_wave: usize,
+    pub seed: u64,
+    /// Allowed p99 inflation in thousandths (2000 = "at most 2x").
+    pub bound_milli: u64,
+}
+
+impl Default for E5Config {
+    fn default() -> Self {
+        Self {
+            tenants: 4,
+            skew: 0.99,
+            waves: 4,
+            ops_per_wave: 24,
+            seed: 0xE5,
+            bound_milli: 2_000,
+        }
+    }
+}
+
+/// One congestion-control arm's A/B outcome.
+#[derive(Debug, Clone)]
+pub struct E5Arm {
+    pub label: String,
+    pub verdict: IsolationVerdict,
+}
+
+#[derive(Debug)]
+pub struct E5Result {
+    /// `static` then `dcqcn`, each a full aggressor A/B.
+    pub arms: Vec<E5Arm>,
+    pub table: Table,
+}
+
+fn serve_cfg(cfg: &E5Config, cc: CcMode) -> ServeConfig {
+    ServeConfig {
+        tenants: cfg.tenants,
+        skew: cfg.skew,
+        waves: cfg.waves,
+        ops_per_wave: cfg.ops_per_wave,
+        seed: cfg.seed,
+        cc,
+        ..Default::default()
+    }
+}
+
+pub fn run_e5(cfg: &E5Config) -> Result<E5Result> {
+    let arms_spec = [
+        ("static", CcMode::Static),
+        ("dcqcn", CcMode::Dcqcn(DcqcnConfig::default())),
+    ];
+    let mut arms = Vec::with_capacity(arms_spec.len());
+    let mut table = Table::new(&[
+        "arm",
+        "p99 (quiet)",
+        "p99 (aggressed)",
+        "worst inflation",
+        "agg naks",
+        "agg cancelled",
+        "cnps",
+        "verdict",
+    ]);
+    for (label, cc) in arms_spec {
+        let v = isolation_check(&serve_cfg(cfg, cc), cfg.bound_milli)?;
+        let agg = v
+            .contended
+            .aggressor
+            .as_ref()
+            .expect("contended arm always carries the aggressor");
+        table.row(&[
+            label.to_string(),
+            fmt_ns(v.baseline.worst_p99()),
+            fmt_ns(v.contended.worst_p99()),
+            format!("{:.2}x", v.worst_ratio_milli as f64 / 1000.0),
+            agg.naks.to_string(),
+            agg.cancelled.to_string(),
+            v.contended.cnps.to_string(),
+            if v.ok { "isolated ✓" } else { "VIOLATED" }.to_string(),
+        ]);
+        arms.push(E5Arm {
+            label: label.to_string(),
+            verdict: v,
+        });
+    }
+    Ok(E5Result { arms, table })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn both_arms_report_a_complete_ab() {
+        let cfg = E5Config {
+            tenants: 3,
+            waves: 2,
+            ops_per_wave: 12,
+            ..Default::default()
+        };
+        let r = run_e5(&cfg).unwrap();
+        assert_eq!(r.arms.len(), 2);
+        for arm in &r.arms {
+            let v = &arm.verdict;
+            // The aggressor genuinely misbehaved in the contended run...
+            let agg = v.contended.aggressor.as_ref().unwrap();
+            assert!(agg.naks > 0 && agg.cancelled > 0, "{}: storm never fired", arm.label);
+            // ...and the quiet run had none of it.
+            assert!(v.baseline.aggressor.is_none());
+            // Well-behaved tenants complete NAK-free in both runs.
+            for t in v.baseline.tenants.iter().chain(&v.contended.tenants) {
+                assert_eq!(t.naks, 0);
+                assert_eq!(t.done, t.ops);
+            }
+            assert!(v.worst_ratio_milli > 0);
+        }
+        // The DCQCN arm's closed loop actually closed under the burst.
+        let dcqcn = &r.arms[1].verdict;
+        assert!(dcqcn.contended.cnps > 0, "no CNPs under the incast burst");
+    }
+}

@@ -1,16 +1,19 @@
 //! The experiment coordinator: reusable drivers for every paper
-//! experiment (E1–E4), shared by the `netdam` CLI, the benches, and the
-//! examples. Each driver builds a cluster, runs the DES, and returns a
-//! rendered table plus structured numbers for assertions.
+//! experiment (E1–E4) plus the serving-isolation A/B (E5), shared by
+//! the `netdam` CLI, the benches, and the examples. Each driver builds
+//! a cluster, runs the DES, and returns a rendered table plus
+//! structured numbers for assertions.
 
 pub mod e1_latency;
 pub mod e2_allreduce;
 pub mod e3_incast;
 pub mod e4_multipath;
+pub mod e5_serving;
 pub mod incast_cc;
 
 pub use e1_latency::{run_e1, E1Config, E1Result};
 pub use e2_allreduce::{run_e2, E2Config, E2Result};
 pub use e3_incast::{run_e3, E3Config, E3Result};
 pub use e4_multipath::{run_e4, E4Config, E4Mode, E4Result};
+pub use e5_serving::{run_e5, E5Arm, E5Config, E5Result};
 pub use incast_cc::{run_incast_cc, ArmStats, IncastCcConfig, IncastCcResult};

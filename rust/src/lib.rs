@@ -177,6 +177,30 @@
 //! goodput, p50/p99 completion latency, and Jain fairness
 //! (`BENCH_incast.json`); `--cc dcqcn` turns it on from the CLI.
 //!
+//! # The serving tier (multi-tenant KV/embedding over the pool)
+//!
+//! [`serve`] drives the pooled fabric like a production inference
+//! tier: a fleet of tenants, each with a private seeded request stream
+//! ([`serve::TenantWorkload`]) of Zipf-skewed GET/PUT/CAS plus
+//! TensorDIMM-style embedding bags (`gather_sum` packet programs),
+//! runs open-loop on ONE [`comm::Fabric`] — every tenant's wave plan
+//! submitted before any is redeemed — while scratch leases churn
+//! (free + malloc reprogramming the device IOMMUs under live neighbor
+//! traffic). The subsystem owns its reporting
+//! ([`serve::ServeReport`]): per-tenant p50/p99/p99.9 tails
+//! ([`util::stats::TailNs`] — all-integer, bit-comparable across DES
+//! shard counts), goodput, NAK/cancellation counts, and fabric-wide
+//! retransmit/CNP/churn counters. [`serve::isolation_check`] is the
+//! tail-at-scale verdict: the same fleet replays with a deliberately
+//! misbehaving tenant (a NAK storm compiled against a revoked lease —
+//! killed by per-plan cancellation — plus an incast burst that DCQCN
+//! rate-controls), and every well-behaved tenant's p99 must stay
+//! within a configured bound of its aggressor-free baseline
+//! (`rust/tests/serving_isolation.rs` pins 2x, bit-identical across
+//! shard counts {1, 2, 4}). Surfaces: `netdam serve`,
+//! `coordinator::run_e5`, and `cargo bench --bench serving`
+//! (`BENCH_serving.json`: tenant-count x skew x cc-mode grid).
+//!
 //! # The allocation-free event model (typed events, shared bodies, wheel)
 //!
 //! Steady-state packet flow performs **no per-event heap allocation**.
@@ -226,6 +250,7 @@ pub mod net;
 pub mod pool;
 pub mod roce;
 pub mod runtime;
+pub mod serve;
 pub mod sim;
 pub mod srou;
 pub mod transport;

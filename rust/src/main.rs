@@ -6,6 +6,7 @@
 //! netdam incast     [--senders N] [--bytes B]            # E3 (§2.5)
 //! netdam multipath  [--bytes B]                          # E4 (§2.3)
 //! netdam alu        [--lanes N]                          # E6: native vs Pallas/PJRT
+//! netdam serve      [--tenants N] [--aggressor] ...      # E5: serving fleet (§2.5/§2.6)
 //! netdam train      [--steps N] [--workers N]            # e2e data-parallel MLP
 //! netdam info                                            # artifact inventory
 //! ```
@@ -136,6 +137,9 @@ fn main() -> Result<()> {
         }
         "comm" => {
             run_comm_demo(&args)?;
+        }
+        "serve" => {
+            run_serve(&args, &cfg)?;
         }
         "train" => {
             let steps = args.opt_usize("steps", 50)?;
@@ -515,6 +519,69 @@ fn run_comm_demo(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// The serving tier: a multi-tenant KV/embedding fleet on one pooled
+/// fabric, with per-tenant tail reporting and (with `--isolation`) the
+/// full aggressor A/B verdict.
+fn run_serve(args: &Args, cfg: &Config) -> Result<()> {
+    use netdam::serve::{isolation_check, run, Mix, ServeConfig};
+
+    let d = ServeConfig::default();
+    let mix = match args.opt("mix") {
+        Some(s) => Mix::parse(s).ok_or_else(|| {
+            anyhow::anyhow!("--mix wants get/put/cas/gather weights, e.g. 60/25/10/5")
+        })?,
+        None => d.mix,
+    };
+    let c = ServeConfig {
+        tenants: args.opt_usize("tenants", cfg.usize("serve.tenants", d.tenants))?,
+        devices: args.opt_usize("devices", cfg.usize("serve.devices", d.devices))?,
+        keys_per_tenant: args.opt_u64("keys", d.keys_per_tenant)?,
+        waves: args.opt_usize("waves", d.waves)?,
+        ops_per_wave: args.opt_usize("ops", d.ops_per_wave)?,
+        skew: args.opt_f64("skew", d.skew)?,
+        churn: args.opt_f64("churn", d.churn)?,
+        burst_bytes: args.opt_usize("burst", d.burst_bytes)?,
+        aggressor: args.flag("aggressor"),
+        seed: args.opt_u64("seed", cfg.u64("seed", d.seed))?,
+        shards: args.opt_usize("shards", d.shards)?,
+        shard_threads: args.opt_usize("shard-threads", 0)?,
+        cc: parse_cc(args)?,
+        mix,
+        ..d
+    };
+    println!(
+        "serve — {} tenants x {} waves x {} ops, zipf θ={}, churn {:.0}%, {} core, cc {}",
+        c.tenants,
+        c.waves,
+        c.ops_per_wave,
+        c.skew,
+        c.churn * 100.0,
+        if c.shards > 0 { "sharded" } else { "classic" },
+        if matches!(c.cc, netdam::transport::CcMode::Dcqcn(_)) {
+            "dcqcn"
+        } else {
+            "static"
+        }
+    );
+    if args.flag("isolation") {
+        // The full A/B: same fleet without, then with the aggressor.
+        let v = isolation_check(&c, args.opt_u64("bound-milli", 2_000)?)?;
+        println!("\n-- quiet fleet --\n{}", v.baseline.render());
+        println!("-- aggressed fleet --\n{}", v.contended.render());
+        println!(
+            "isolation: worst p99 inflation {:.2}x vs bound {:.2}x -> {}",
+            v.worst_ratio_milli as f64 / 1000.0,
+            v.bound_milli as f64 / 1000.0,
+            if v.ok { "isolated ✓" } else { "VIOLATED" }
+        );
+        anyhow::ensure!(v.ok, "isolation bound violated");
+    } else {
+        let r = run(&c)?;
+        println!("\n{}", r.render());
+    }
+    Ok(())
+}
+
 /// E6: ALU backend comparison — native rust vs the compiled Pallas kernel.
 fn run_alu_compare(args: &Args) -> Result<()> {
     use netdam::alu::{AluBackend, NativeAlu};
@@ -559,7 +626,7 @@ fn run_alu_compare(args: &Args) -> Result<()> {
 fn print_usage() {
     println!(
         "netdam — NetDAM reproduction launcher\n\
-         subcommands: latency | allreduce | incast | multipath | alu | prog | mem | comm | train | info\n\
+         subcommands: latency | allreduce | incast | multipath | alu | prog | mem | comm | serve | train | info\n\
          common flags: --config FILE, --set key=value, --seed N\n\
          allreduce: --algo netdam-ring|halving-doubling|hierarchical|switch-reduce|\n\
                     reduce-scatter|all-gather|broadcast|tree-bcast|reduce|ring-roce|\n\
@@ -576,6 +643,11 @@ fn print_usage() {
          comm:      session-API demo — two tenant jobs' allreduces + a pooled-memory plan\n\
                     overlapping on ONE fabric, then gradient bucketing fused vs unfused;\n\
                     --ranks N --elements N\n\
+         serve:     multi-tenant KV/embedding serving fleet on the pooled fabric with\n\
+                    per-tenant p50/p99/p99.9 + goodput reporting; --tenants N --skew θ\n\
+                    --mix G/P/C/B --churn P --waves N --ops N --aggressor (add the\n\
+                    misbehaving tenant: NAK storm + incast burst) --isolation (full A/B,\n\
+                    asserts every neighbor's p99 within --bound-milli of baseline)\n\
          scaling the simulator: comm also takes --shards N (run the DES on N parallel\n\
                     event shards under conservative lookahead; same seed => bit-identical\n\
                     results at any shard count) and --shard-threads T (0 = auto)"

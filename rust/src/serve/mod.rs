@@ -1,0 +1,272 @@
+//! The serving tier: a disaggregated multi-tenant KV/embedding workload
+//! driving the pooled fabric the way a production inference tier would.
+//!
+//! A [`ServeConfig`] describes a fleet of tenants, each with a private
+//! seeded request stream ([`workload::TenantWorkload`]): Zipf-skewed
+//! keys over leases in the block-interleaved GVA pool, mixed
+//! GET/PUT/CAS plus TensorDIMM-style embedding bags lowered onto
+//! near-memory `gather_sum` programs. [`run`] executes the fleet on ONE
+//! [`crate::comm::Fabric`] — every tenant's wave plan is submitted
+//! before any is redeemed, so plans genuinely contend on the shared
+//! session, the devices, and the switch ports — while scratch leases
+//! churn (`free` + `malloc` under live neighbor traffic) and, when
+//! enabled, a deliberately misbehaving **aggressor** runs alongside:
+//!
+//! * a **NAK storm** — its plans are compiled against a lease the
+//!   controller already revoked, so every access dies as a typed wire
+//!   NAK and per-plan cancellation (never touching a neighbor's plan);
+//! * an **incast burst** — bulk reads whose responses converge on the
+//!   aggressor's host port, pressuring the shared device egress links
+//!   (and, under [`CcMode::Dcqcn`], getting rate-controlled for it).
+//!
+//! The subsystem owns its reporting: per-tenant p50/p99/p99.9 latency
+//! ([`crate::util::stats::TailNs`] — all-integer, so reports are
+//! bit-comparable across DES shard counts), goodput, NAK/cancellation
+//! counts, plus fabric-wide retransmit/CNP/churn counters
+//! ([`ServeReport`]). [`isolation_check`] turns that into a verdict:
+//! the same seeded fleet runs with and without the aggressor on an
+//! identical topology, and every well-behaved tenant's p99 must stay
+//! within a configured bound of its aggressor-free baseline.
+//!
+//! Surfaces: `netdam serve` (CLI), `coordinator::run_e5` (experiment
+//! arm), `cargo bench --bench serving` (`BENCH_serving.json` grid), and
+//! `rust/tests/serving_isolation.rs` (the isolation + cross-shard
+//! determinism contract).
+
+pub mod workload;
+
+mod runner;
+
+use anyhow::{ensure, Result};
+
+use crate::isa::MAX_PROGRAM_STEPS;
+use crate::transport::CcMode;
+
+pub use runner::{run, ServeReport, TenantReport};
+pub use workload::{Mix, Request, TenantWorkload};
+
+/// The pool interleave block (and lease granule) — serving layouts are
+/// sized so no value, CAS word, or gather row ever straddles one.
+pub const BLOCK: u64 = 8192;
+
+/// Packets per storm plan the aggressor throws at its revoked lease
+/// each wave (all die as typed NAKs; the tail is cancelled).
+pub const STORM_OPS: usize = 8;
+
+/// Full description of one serving run. Every field is data — two runs
+/// with equal configs produce bit-identical [`ServeReport`] integer
+/// fields at any DES shard count.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Well-behaved tenants (each gets its own host and pool tenant id).
+    pub tenants: usize,
+    /// Devices in the star fabric (the pool interleaves across all).
+    pub devices: usize,
+    /// Keys per tenant; key `k` lives at `data_gva + k * value_bytes`.
+    pub keys_per_tenant: u64,
+    /// Value size. Must be ≥ 8 and divide [`BLOCK`] so values, CAS
+    /// words, and gather rows stay within one interleave block.
+    pub value_bytes: usize,
+    /// Scheduling rounds; each wave submits every tenant's plan before
+    /// redeeming any (open-loop contention).
+    pub waves: usize,
+    /// Logical requests per tenant per wave.
+    pub ops_per_wave: usize,
+    /// Rows per embedding bag (bounded by the packet-program budget).
+    pub gather_bag: usize,
+    /// Zipf skew θ (0.0 = uniform; ~0.99 = classic serving-cache skew).
+    pub skew: f64,
+    /// GET/PUT/CAS/GATHER weights.
+    pub mix: Mix,
+    /// Per-tenant per-wave probability of scratch-lease churn
+    /// (free + malloc re-programming every device IOMMU under live
+    /// neighbor traffic).
+    pub churn: f64,
+    /// Run the misbehaving tenant alongside the fleet.
+    pub aggressor: bool,
+    /// Bytes the aggressor's incast burst pulls per wave.
+    pub burst_bytes: usize,
+    pub seed: u64,
+    /// DES shards (0 = classic single-heap engine).
+    pub shards: usize,
+    /// Shard worker threads (0 = auto; tests pin 1).
+    pub shard_threads: usize,
+    pub cc: CcMode,
+    /// RED ECN ramp override for every link (`None` keeps the
+    /// `dc_100g` default of 100–300 KB, which small serving runs never
+    /// reach; the serving default forces marks early so DCQCN engages).
+    pub ecn: Option<(usize, usize)>,
+    /// Pool capacity contributed per device (multiple of [`BLOCK`]).
+    pub pool_per_device: u64,
+    /// Per-device in-flight window per plan.
+    pub window: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        Self {
+            tenants: 4,
+            devices: 4,
+            keys_per_tenant: 256,
+            value_bytes: 512,
+            waves: 4,
+            ops_per_wave: 24,
+            gather_bag: 4,
+            skew: 0.99,
+            mix: Mix::serving_default(),
+            churn: 0.25,
+            aggressor: false,
+            burst_bytes: 64 << 10,
+            seed: 0x5E11E,
+            shards: 1,
+            shard_threads: 1,
+            cc: CcMode::Static,
+            ecn: Some((2_000, 20_000)),
+            pool_per_device: 4 << 20,
+            window: 4,
+        }
+    }
+}
+
+impl ServeConfig {
+    /// Shape checks, including that the whole fleet's leases fit the
+    /// pool. Called by [`run`]; errors carry the violated constraint.
+    pub fn validate(&self) -> Result<()> {
+        ensure!(self.tenants >= 1, "need at least one tenant");
+        ensure!(self.devices >= 1, "need at least one device");
+        ensure!(self.keys_per_tenant >= 1, "need at least one key per tenant");
+        ensure!(self.waves >= 1 && self.ops_per_wave >= 1, "need a non-empty schedule");
+        ensure!(
+            self.value_bytes >= 8 && BLOCK % self.value_bytes as u64 == 0,
+            "value_bytes must be >= 8 and divide the {BLOCK} B interleave block \
+             (got {})",
+            self.value_bytes
+        );
+        ensure!(
+            (1..MAX_PROGRAM_STEPS).contains(&self.gather_bag),
+            "gather_bag must be 1..={} (packet-program step budget)",
+            MAX_PROGRAM_STEPS - 1
+        );
+        ensure!(
+            self.skew.is_finite() && self.skew >= 0.0,
+            "skew must be a finite non-negative Zipf theta"
+        );
+        ensure!((0.0..=1.0).contains(&self.churn), "churn must be a probability");
+        ensure!(self.mix.total() > 0, "request mix must have a positive weight");
+        ensure!(
+            self.pool_per_device >= BLOCK && self.pool_per_device % BLOCK == 0,
+            "pool_per_device must be a positive multiple of {BLOCK}"
+        );
+        ensure!(self.window >= 1, "window must be >= 1");
+        let round = |b: u64| b.div_ceil(BLOCK) * BLOCK;
+        // data + gather dst + scratch per tenant; the aggressor adds a
+        // revoked granule plus its burst lease.
+        let per_tenant = round(self.keys_per_tenant * self.value_bytes as u64) + 2 * BLOCK;
+        let aggressor = BLOCK + round(self.burst_bytes.max(1) as u64);
+        let need = self.tenants as u64 * per_tenant + aggressor;
+        let capacity = self.pool_per_device * self.devices as u64;
+        ensure!(
+            need <= capacity,
+            "fleet needs {need} B of pool but capacity is {capacity} B \
+             ({} B/device x {} devices)",
+            self.pool_per_device,
+            self.devices
+        );
+        Ok(())
+    }
+}
+
+/// The outcome of an aggressor A/B: the same seeded fleet with and
+/// without the misbehaving tenant, on an identical topology.
+#[derive(Debug, Clone)]
+pub struct IsolationVerdict {
+    pub baseline: ServeReport,
+    pub contended: ServeReport,
+    /// `max_i 1000 * p99_contended(i) / p99_baseline(i)` over the
+    /// well-behaved tenants (integer thousandths, so verdicts stay
+    /// bit-comparable across shard counts).
+    pub worst_ratio_milli: u64,
+    /// The bound the verdict was judged against.
+    pub bound_milli: u64,
+    /// True when every well-behaved tenant's p99 stayed within the
+    /// bound *and* completed its work NAK-free.
+    pub ok: bool,
+}
+
+/// Run the isolation A/B: `cfg` with `aggressor` forced off, then on,
+/// same seed and topology (the aggressor's host exists but stays idle
+/// in the baseline, so only the traffic differs). `bound_milli` is the
+/// allowed p99 inflation in thousandths — `2000` = "p99 may at most
+/// double".
+pub fn isolation_check(cfg: &ServeConfig, bound_milli: u64) -> Result<IsolationVerdict> {
+    let mut base = cfg.clone();
+    base.aggressor = false;
+    let mut contested = cfg.clone();
+    contested.aggressor = true;
+    let baseline = run(&base)?;
+    let contended = run(&contested)?;
+    ensure!(
+        baseline.tenants.len() == contended.tenants.len(),
+        "A/B arms disagree on tenant count"
+    );
+    let mut worst = 0u64;
+    let mut clean = true;
+    for (b, c) in baseline.tenants.iter().zip(&contended.tenants) {
+        ensure!(b.tenant == c.tenant, "A/B arms disagree on tenant order");
+        let ratio = c.tail.p99 * 1000 / b.tail.p99.max(1);
+        worst = worst.max(ratio);
+        clean &= c.naks == 0 && c.done == c.ops;
+    }
+    Ok(IsolationVerdict {
+        ok: clean && worst <= bound_milli,
+        baseline,
+        contended,
+        worst_ratio_milli: worst,
+        bound_milli,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn validate_catches_bad_shapes() {
+        let ok = ServeConfig::default();
+        ok.validate().unwrap();
+        let mut bad = ok.clone();
+        bad.value_bytes = 600; // does not divide 8192
+        assert!(bad.validate().is_err());
+        let mut bad = ok.clone();
+        bad.gather_bag = MAX_PROGRAM_STEPS; // one over the step budget
+        assert!(bad.validate().is_err());
+        let mut bad = ok.clone();
+        bad.pool_per_device = BLOCK; // 4 devices x 8 KiB cannot hold the fleet
+        assert!(bad.validate().is_err());
+        let mut bad = ok;
+        bad.churn = 1.5;
+        assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn isolation_verdict_on_a_tiny_fleet() {
+        let cfg = ServeConfig {
+            tenants: 3,
+            keys_per_tenant: 64,
+            waves: 2,
+            ops_per_wave: 12,
+            seed: 0x15_0A7E,
+            ..Default::default()
+        };
+        // A generous bound: this test pins the A/B *mechanics* (the
+        // 2x-bound contract lives in rust/tests/serving_isolation.rs).
+        let v = isolation_check(&cfg, 10_000).unwrap();
+        assert!(v.ok, "worst ratio {} exceeded 10x", v.worst_ratio_milli);
+        assert!(v.worst_ratio_milli >= 1, "ratio should be a positive milli value");
+        assert!(v.baseline.aggressor.is_none());
+        let agg = v.contended.aggressor.as_ref().expect("aggressor report");
+        assert!(agg.naks > 0, "the storm never NAK'd");
+        // The baseline fleet never even sees a NAK.
+        assert!(v.baseline.tenants.iter().all(|t| t.naks == 0));
+    }
+}

@@ -1,0 +1,502 @@
+//! The serving fleet runner: builds ONE pooled fabric, leases every
+//! tenant's key space, and drives the wave schedule — submit every
+//! tenant's plan, churn scratch leases under the live traffic, then
+//! redeem — while the optional aggressor storms its revoked lease and
+//! pulls incast bursts alongside. See the module docs in
+//! [`super`](crate::serve) for the full picture.
+
+use anyhow::{anyhow, bail, ensure, Result};
+
+use super::workload::{stream_seed, Request, TenantWorkload};
+use super::{ServeConfig, BLOCK, STORM_OPS};
+use crate::comm::{Fabric, MemHandle, MemPlanStats};
+use crate::mem::{MemClient, MemError};
+use crate::metrics::Table;
+use crate::net::LinkConfig;
+use crate::pool::{Allocation, TenantId};
+use crate::sim::fmt_ns;
+use crate::util::stats::{tail_ns, TailNs};
+use crate::util::Xoshiro256;
+
+/// One tenant's scoreboard (well-behaved or aggressor).
+#[derive(Debug, Clone)]
+pub struct TenantReport {
+    pub tenant: TenantId,
+    /// Logical serving requests issued (GET/PUT/CAS/GATHER count as one
+    /// each; the aggressor's storm + burst plans count per packet-op).
+    pub requests: usize,
+    /// Transport ops submitted (one windowed packet-op can back several
+    /// interleave pieces of one logical request).
+    pub ops: usize,
+    /// Transport ops retired exactly once.
+    pub done: usize,
+    /// Plans killed by a typed wire NAK.
+    pub naks: usize,
+    /// Queued ops dropped by per-plan NAK cancellation.
+    pub cancelled: usize,
+    /// Payload bytes the tenant's requests moved (planned).
+    pub bytes: u64,
+    /// Whole-run latency tail (per retired transport op, ns).
+    pub tail: TailNs,
+    /// `bytes * 8 / elapsed_ns` — Gbit/s over the whole run.
+    pub goodput_gbps: f64,
+}
+
+/// The whole run's report. All integer fields (everything except
+/// `goodput_gbps`) are bit-identical across DES shard counts —
+/// [`Self::fingerprint`] is the comparison key the determinism tests
+/// use.
+#[derive(Debug, Clone)]
+pub struct ServeReport {
+    /// Well-behaved tenants, in tenant order.
+    pub tenants: Vec<TenantReport>,
+    /// The misbehaving tenant, when the config enabled it.
+    pub aggressor: Option<TenantReport>,
+    pub elapsed_ns: u64,
+    /// Fabric-cumulative timeout retransmits.
+    pub retransmits: u64,
+    /// CE-marked completions absorbed as CNPs (DCQCN runs only).
+    pub cnps: usize,
+    /// Scratch leases recycled (free + malloc) under live traffic.
+    pub churn_events: usize,
+    /// High-water mark of concurrently live session plans.
+    pub max_concurrent_plans: usize,
+}
+
+/// One fingerprint row: tenant id, requests, done, naks, cancelled,
+/// bytes, latency tail.
+pub type FingerprintRow = (TenantId, usize, usize, usize, usize, u64, TailNs);
+
+impl ServeReport {
+    /// Integer-only comparison key (per-tenant rows with the aggressor
+    /// appended, plus the global counters): equal configs must produce
+    /// equal fingerprints at any shard count.
+    pub fn fingerprint(&self) -> (Vec<FingerprintRow>, u64, u64, usize) {
+        let rows = self
+            .tenants
+            .iter()
+            .chain(self.aggressor.iter())
+            .map(|t| (t.tenant, t.requests, t.done, t.naks, t.cancelled, t.bytes, t.tail))
+            .collect();
+        (rows, self.elapsed_ns, self.retransmits, self.cnps)
+    }
+
+    /// Worst well-behaved p99 (the isolation bound's left-hand side).
+    pub fn worst_p99(&self) -> u64 {
+        self.tenants.iter().map(|t| t.tail.p99).max().unwrap_or(0)
+    }
+
+    /// Human-readable per-tenant table plus the fabric-wide footer.
+    pub fn render(&self) -> String {
+        let mut table = Table::new(&[
+            "tenant", "requests", "done/ops", "p50", "p99", "p99.9", "goodput", "naks",
+            "cancelled",
+        ]);
+        for t in self.tenants.iter().chain(self.aggressor.iter()) {
+            let label = if self.aggressor.as_ref().is_some_and(|a| a.tenant == t.tenant) {
+                format!("{} (aggressor)", t.tenant)
+            } else {
+                t.tenant.to_string()
+            };
+            table.row(&[
+                label,
+                t.requests.to_string(),
+                format!("{}/{}", t.done, t.ops),
+                fmt_ns(t.tail.p50),
+                fmt_ns(t.tail.p99),
+                fmt_ns(t.tail.p999),
+                format!("{:.2} Gbps", t.goodput_gbps),
+                t.naks.to_string(),
+                t.cancelled.to_string(),
+            ]);
+        }
+        format!(
+            "{}\nelapsed {} | retx {} | cnps {} | churn {} | {} plans live at peak\n",
+            table.render(),
+            fmt_ns(self.elapsed_ns),
+            self.retransmits,
+            self.cnps,
+            self.churn_events,
+            self.max_concurrent_plans
+        )
+    }
+}
+
+/// Host-side state of one well-behaved tenant.
+struct TenantState {
+    client: MemClient,
+    wl: TenantWorkload,
+    /// Base GVA of the key region; key `k` is at `data + k * value`.
+    data: u64,
+    /// One-block lease gather bags fold into.
+    gather_dst: u64,
+    /// The churn victim: recycled (free + malloc) between waves.
+    scratch: Allocation,
+    /// The PUT payload (per-tenant pattern, written repeatedly).
+    payload: Vec<u8>,
+    requests: usize,
+    ops: usize,
+    done: usize,
+    naks: usize,
+    cancelled: usize,
+    bytes: u64,
+    latencies: Vec<u64>,
+    churn_events: usize,
+}
+
+impl TenantState {
+    fn key_gva(&self, key: u64, value_bytes: usize) -> u64 {
+        self.data + key * value_bytes as u64
+    }
+
+    fn absorb(&mut self, stats: &MemPlanStats) {
+        self.ops += stats.ops;
+        self.done += stats.done;
+        self.cancelled += stats.cancelled;
+        if stats.nakked {
+            self.naks += 1;
+        }
+        self.latencies.extend_from_slice(&stats.latencies);
+    }
+
+    fn report(&self, tenant: TenantId, elapsed_ns: u64) -> TenantReport {
+        TenantReport {
+            tenant,
+            requests: self.requests,
+            ops: self.ops,
+            done: self.done,
+            naks: self.naks,
+            cancelled: self.cancelled,
+            bytes: self.bytes,
+            tail: tail_ns(&self.latencies),
+            goodput_gbps: self.bytes as f64 * 8.0 / elapsed_ns.max(1) as f64,
+        }
+    }
+}
+
+/// The misbehaving tenant: a lease the controller already revoked (its
+/// plans compile fine against the client's stale map and die as typed
+/// wire NAKs) plus a valid lease it pulls incast bursts from.
+struct AggressorState {
+    revoked_gva: u64,
+    burst: Allocation,
+    state: TenantState,
+}
+
+/// Execute the serving schedule. See [`ServeConfig`] for the knobs.
+pub fn run(cfg: &ServeConfig) -> Result<ServeReport> {
+    cfg.validate()?;
+    ensure!(cfg.tenants <= 4096, "tenant fleet capped at 4096");
+
+    // One host per tenant plus one for the aggressor — reserved even in
+    // baseline runs so the A/B compares identical topologies.
+    let mut link = LinkConfig::dc_100g();
+    if let Some((lo, hi)) = cfg.ecn {
+        link = link.with_ecn(lo, hi);
+    }
+    let mut builder = Fabric::builder()
+        .star(cfg.devices)
+        .hosts(cfg.tenants + 1)
+        .seed(cfg.seed)
+        .window(cfg.window)
+        .link(link)
+        .with_pool(cfg.pool_per_device)
+        .with_congestion_control(cfg.cc.clone());
+    if cfg.shards > 0 {
+        builder = builder.with_shards(cfg.shards).shard_threads(cfg.shard_threads);
+    }
+    let mut fabric = builder.build()?;
+
+    // Lease the fleet: per tenant a key region, a gather-dst block, and
+    // the scratch block that churns. Leases are granule-aligned and
+    // value_bytes divides the block, so no value/CAS word/gather row
+    // ever straddles an interleave block.
+    let mut tenants: Vec<TenantState> = Vec::with_capacity(cfg.tenants);
+    for i in 0..cfg.tenants {
+        let client = fabric.mem_client()?;
+        let tenant = client.tenant;
+        let data = fabric.malloc(tenant, cfg.keys_per_tenant * cfg.value_bytes as u64, true)?;
+        let dst = fabric.malloc(tenant, BLOCK, true)?;
+        let scratch = fabric.malloc(tenant, BLOCK, true)?;
+        let payload: Vec<u8> = (0..cfg.value_bytes)
+            .map(|b| (b as u8).wrapping_mul(31).wrapping_add(i as u8))
+            .collect();
+        tenants.push(TenantState {
+            wl: TenantWorkload::new(
+                cfg.seed,
+                i,
+                cfg.keys_per_tenant,
+                cfg.skew,
+                cfg.mix,
+                cfg.gather_bag,
+            ),
+            client,
+            data: data.gva,
+            gather_dst: dst.gva,
+            scratch,
+            payload,
+            requests: 0,
+            ops: 0,
+            done: 0,
+            naks: 0,
+            cancelled: 0,
+            bytes: 0,
+            latencies: Vec::new(),
+            churn_events: 0,
+        });
+    }
+
+    let mut aggressor = if cfg.aggressor {
+        let client = fabric.mem_client()?;
+        let tenant = client.tenant;
+        // The revoked lease: mapped, then immediately freed — the
+        // client's map clone still compiles plans against it, so every
+        // storm op is enforced (and NAK'd) by the device IOMMUs.
+        let revoked = fabric.malloc(tenant, BLOCK, true)?;
+        fabric.free(tenant, revoked.gva)?;
+        let burst = fabric.malloc(tenant, cfg.burst_bytes.max(1) as u64, true)?;
+        Some(AggressorState {
+            revoked_gva: revoked.gva,
+            burst,
+            state: TenantState {
+                wl: TenantWorkload::new(
+                    cfg.seed,
+                    cfg.tenants,
+                    cfg.keys_per_tenant,
+                    cfg.skew,
+                    cfg.mix,
+                    cfg.gather_bag,
+                ),
+                data: 0,
+                gather_dst: 0,
+                scratch: Allocation {
+                    gva: 0,
+                    len: 0,
+                    tenant,
+                    writable: false,
+                },
+                payload: Vec::new(),
+                requests: 0,
+                ops: 0,
+                done: 0,
+                naks: 0,
+                cancelled: 0,
+                bytes: 0,
+                latencies: Vec::new(),
+                churn_events: 0,
+                client,
+            },
+        })
+    } else {
+        None
+    };
+
+    // Control-plane stream (churn coin flips) — decorrelated from every
+    // tenant's request stream.
+    let mut ctl_rng = Xoshiro256::seed_from(stream_seed(cfg.seed, 0xC0DE));
+    let t0 = fabric.now();
+
+    for wave in 0..cfg.waves {
+        // 1. Submit every tenant's wave plan before redeeming any: the
+        //    open-loop moment where plans contend on the shared session,
+        //    the devices, and the switch ports.
+        let mut handles: Vec<(usize, MemHandle)> = Vec::with_capacity(cfg.tenants);
+        for (i, t) in tenants.iter_mut().enumerate() {
+            let mut b = t.client.batch();
+            for _ in 0..cfg.ops_per_wave {
+                t.requests += 1;
+                match t.wl.next_request() {
+                    Request::Get(k) => {
+                        let gva = t.key_gva(k, cfg.value_bytes);
+                        b.read(fabric.cluster_mut(), gva, cfg.value_bytes);
+                        t.bytes += cfg.value_bytes as u64;
+                    }
+                    Request::Put(k) => {
+                        let gva = t.key_gva(k, cfg.value_bytes);
+                        b.write(fabric.cluster_mut(), gva, &t.payload);
+                        t.bytes += cfg.value_bytes as u64;
+                    }
+                    Request::Cas(k) => {
+                        // Optimistic bump: losing the compare is a valid
+                        // serving outcome, not an error.
+                        let gva = t.key_gva(k, cfg.value_bytes);
+                        b.cas(fabric.cluster_mut(), gva, 0, wave as u64 + 1)?;
+                        t.bytes += 8;
+                    }
+                    Request::Gather(rows) => {
+                        let gvas: Vec<u64> =
+                            rows.iter().map(|&k| t.key_gva(k, cfg.value_bytes)).collect();
+                        b.gather_sum(fabric.cluster_mut(), &gvas, cfg.value_bytes, t.gather_dst)?;
+                        t.bytes += cfg.value_bytes as u64;
+                    }
+                }
+            }
+            let h = fabric.submit_mem(b).map_err(|e| anyhow!("tenant {i} submit: {e}"))?;
+            handles.push((i, h));
+        }
+
+        // 2. The aggressor's two plans ride the same session: the NAK
+        //    storm against its revoked lease, and the incast burst whose
+        //    responses converge on its one host port.
+        let mut agg_handles: Vec<(bool, MemHandle)> = Vec::new();
+        if let Some(a) = aggressor.as_mut() {
+            let mut storm = a.state.client.batch();
+            for _ in 0..STORM_OPS {
+                storm.read(fabric.cluster_mut(), a.revoked_gva, cfg.value_bytes);
+                a.state.requests += 1;
+            }
+            agg_handles.push((true, fabric.submit_mem(storm).map_err(|e| anyhow!("storm: {e}"))?));
+            let mut burst = a.state.client.batch();
+            let mut off = 0u64;
+            while off < a.burst.len {
+                let chunk = (a.burst.len - off).min(BLOCK) as usize;
+                burst.read(fabric.cluster_mut(), a.burst.gva + off, chunk);
+                a.state.requests += 1;
+                a.state.bytes += chunk as u64;
+                off += chunk as u64;
+            }
+            agg_handles.push((false, fabric.submit_mem(burst).map_err(|e| anyhow!("burst: {e}"))?));
+        }
+
+        // 3. Lease churn UNDER the live traffic: free + malloc reprogram
+        //    every device IOMMU while neighbors' plans are in flight.
+        //    Well-behaved streams never touch scratch, so churn exercises
+        //    the control plane concurrency without self-NAKs (the freed-
+        //    lease-with-inflight-ops case is the aggressor's storm and
+        //    the pool_props property test).
+        for t in tenants.iter_mut() {
+            if ctl_rng.chance(cfg.churn) {
+                let tenant = t.client.tenant;
+                fabric.free(tenant, t.scratch.gva)?;
+                t.scratch = fabric.malloc(tenant, BLOCK, true)?;
+                t.churn_events += 1;
+            }
+        }
+
+        // 4. Redeem. The first wait drives the shared DES to quiescence,
+        //    so every plan of the wave completes under full contention.
+        for (i, h) in handles.drain(..) {
+            let (res, stats) = fabric.wait_mem_timed(h);
+            tenants[i].absorb(&stats);
+            res.map_err(|e| anyhow!("tenant {i} wave {wave}: {e}"))?;
+        }
+        if let Some(a) = aggressor.as_mut() {
+            for (is_storm, h) in agg_handles.drain(..) {
+                let (res, stats) = fabric.wait_mem_timed(h);
+                a.state.absorb(&stats);
+                match res {
+                    Err(MemError::Nak { .. }) if is_storm => {} // the storm's designed fate
+                    Ok(_) if !is_storm => {}
+                    Ok(_) => bail!("storm plan against a revoked lease completed"),
+                    Err(e) => bail!("aggressor wave {wave}: {e}"),
+                }
+            }
+        }
+    }
+
+    let elapsed_ns = fabric.now() - t0;
+    let tenant_reports = tenants
+        .iter()
+        .map(|t| t.report(t.client.tenant, elapsed_ns))
+        .collect();
+    Ok(ServeReport {
+        tenants: tenant_reports,
+        aggressor: aggressor
+            .as_ref()
+            .map(|a| a.state.report(a.state.client.tenant, elapsed_ns)),
+        elapsed_ns,
+        retransmits: fabric.cluster().xport.retransmits,
+        cnps: fabric.cnps(),
+        churn_events: tenants.iter().map(|t| t.churn_events).sum(),
+        max_concurrent_plans: fabric.max_concurrent_plans(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::ServeConfig;
+    use super::*;
+
+    fn tiny() -> ServeConfig {
+        ServeConfig {
+            tenants: 3,
+            keys_per_tenant: 64,
+            waves: 2,
+            ops_per_wave: 16,
+            seed: 0x7E57,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn fleet_completes_cleanly_and_deterministically() {
+        let r1 = run(&tiny()).unwrap();
+        let r2 = run(&tiny()).unwrap();
+        assert_eq!(r1.fingerprint(), r2.fingerprint(), "same config, same report");
+        assert_eq!(r1.tenants.len(), 3);
+        for t in &r1.tenants {
+            assert_eq!(t.requests, 2 * 16);
+            assert_eq!(t.done, t.ops, "tenant {} stranded ops", t.tenant);
+            assert_eq!(t.naks, 0);
+            assert_eq!(t.cancelled, 0);
+            assert!(t.tail.count > 0 && t.tail.p50 > 0);
+            assert!(t.bytes > 0 && t.goodput_gbps > 0.0);
+        }
+        // Open-loop really happened: all wave plans were live at once.
+        assert!(r1.max_concurrent_plans >= 3, "plans never overlapped");
+        assert!(r1.elapsed_ns > 0);
+    }
+
+    #[test]
+    fn aggressor_is_cancelled_not_the_neighbors() {
+        let cfg = ServeConfig {
+            aggressor: true,
+            ..tiny()
+        };
+        let r = run(&cfg).unwrap();
+        let agg = r.aggressor.as_ref().expect("aggressor report");
+        // One storm plan per wave dies as a typed NAK; its queued tail
+        // is cancelled rather than retried.
+        assert_eq!(agg.naks, cfg.waves, "every storm plan must NAK");
+        assert!(agg.cancelled > 0, "NAK cancellation never dropped queued ops");
+        // The burst plans completed — the aggressor moved real bytes too.
+        assert!(agg.done > 0 && agg.bytes > 0);
+        // Neighbors: correctness untouched (the latency bound is the
+        // integration test's job).
+        for t in &r.tenants {
+            assert_eq!(t.naks, 0, "tenant {} caught a foreign NAK", t.tenant);
+            assert_eq!(t.done, t.ops, "tenant {} lost ops to the aggressor", t.tenant);
+        }
+    }
+
+    #[test]
+    fn churn_reprograms_every_wave_under_live_traffic() {
+        let cfg = ServeConfig {
+            churn: 1.0,
+            ..tiny()
+        };
+        let r = run(&cfg).unwrap();
+        assert_eq!(r.churn_events, 3 * 2, "every tenant churns every wave");
+        for t in &r.tenants {
+            assert_eq!(t.done, t.ops);
+            assert_eq!(t.naks, 0, "churned scratch must never NAK live plans");
+        }
+    }
+
+    #[test]
+    fn classic_and_dcqcn_arms_run() {
+        let classic = ServeConfig {
+            shards: 0,
+            ..tiny()
+        };
+        let r = run(&classic).unwrap();
+        assert!(r.tenants.iter().all(|t| t.done == t.ops));
+
+        let dcqcn = ServeConfig {
+            cc: crate::transport::CcMode::Dcqcn(crate::roce::DcqcnConfig::default()),
+            ..tiny()
+        };
+        let r = run(&dcqcn).unwrap();
+        assert!(r.tenants.iter().all(|t| t.done == t.ops && t.naks == 0));
+    }
+}

@@ -1,0 +1,179 @@
+//! Deterministic multi-tenant request generation for the serving tier.
+//!
+//! Every tenant owns a private, seeded request stream: Zipf-distributed
+//! keys (the classic serving-cache skew — see [`crate::util::Zipf`])
+//! drawn through a weighted GET/PUT/CAS/GATHER mix, with GATHER emitting
+//! TensorDIMM-style embedding bags (several rows folded by one
+//! near-memory `gather_sum` program). Streams are derived from the run
+//! seed with [`stream_seed`], so adding or removing a tenant never
+//! perturbs the sequences of the others — the property the isolation
+//! A/B leans on when it replays the same tenants with and without an
+//! aggressor.
+
+use crate::util::{SplitMix64, Xoshiro256, Zipf};
+
+/// Request-mix weights (parts, not percentages — any positive total
+/// works). The serving default leans read-heavy like a production
+/// KV/embedding tier: 60/25/10/5 GET/PUT/CAS/GATHER.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Mix {
+    pub get: u32,
+    pub put: u32,
+    pub cas: u32,
+    pub gather: u32,
+}
+
+impl Mix {
+    /// The read-heavy serving default: 60/25/10/5.
+    pub const fn serving_default() -> Self {
+        Self {
+            get: 60,
+            put: 25,
+            cas: 10,
+            gather: 5,
+        }
+    }
+
+    /// Parse `"get/put/cas/gather"` weights, e.g. `"60/25/10/5"`.
+    /// Returns `None` on malformed input or an all-zero mix.
+    pub fn parse(s: &str) -> Option<Self> {
+        let parts: Vec<&str> = s.split('/').collect();
+        if parts.len() != 4 {
+            return None;
+        }
+        let mut w = [0u32; 4];
+        for (slot, p) in w.iter_mut().zip(&parts) {
+            *slot = p.trim().parse().ok()?;
+        }
+        if w.iter().sum::<u32>() == 0 {
+            return None;
+        }
+        Some(Self {
+            get: w[0],
+            put: w[1],
+            cas: w[2],
+            gather: w[3],
+        })
+    }
+
+    pub fn total(&self) -> u32 {
+        self.get + self.put + self.cas + self.gather
+    }
+}
+
+/// One logical serving request, keys resolved (0-based, tenant-local).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Request {
+    Get(u64),
+    Put(u64),
+    Cas(u64),
+    /// An embedding bag: the rows to fold with one near-memory
+    /// `gather_sum` program (duplicates allowed, as in real bags).
+    Gather(Vec<u64>),
+}
+
+/// The `idx`-th decorrelated stream seed derived from one run seed —
+/// SplitMix64's `idx`-th output, the generator's intended use for
+/// spawning independent streams.
+pub fn stream_seed(seed: u64, idx: u64) -> u64 {
+    SplitMix64::new(seed.wrapping_add(idx.wrapping_mul(0x9E37_79B9_7F4A_7C15))).next_u64()
+}
+
+/// A tenant's private open-loop request stream.
+#[derive(Debug, Clone)]
+pub struct TenantWorkload {
+    rng: Xoshiro256,
+    zipf: Zipf,
+    mix: Mix,
+    bag: usize,
+}
+
+impl TenantWorkload {
+    /// Build tenant `idx`'s stream over `keys` keys at Zipf skew `theta`
+    /// (`0.0` = uniform). `bag` rows per GATHER; must stay within the
+    /// packet-program step budget (the runner validates that).
+    pub fn new(seed: u64, idx: usize, keys: u64, theta: f64, mix: Mix, bag: usize) -> Self {
+        assert!(mix.total() > 0, "request mix must have a positive weight");
+        assert!(bag >= 1, "gather bags need at least one row");
+        Self {
+            rng: Xoshiro256::seed_from(stream_seed(seed, idx as u64)),
+            zipf: Zipf::new(keys, theta),
+            mix,
+            bag,
+        }
+    }
+
+    /// Draw the next request.
+    pub fn next_request(&mut self) -> Request {
+        let w = self.rng.next_below(self.mix.total() as u64) as u32;
+        if w < self.mix.get {
+            Request::Get(self.zipf.sample(&mut self.rng))
+        } else if w < self.mix.get + self.mix.put {
+            Request::Put(self.zipf.sample(&mut self.rng))
+        } else if w < self.mix.get + self.mix.put + self.mix.cas {
+            Request::Cas(self.zipf.sample(&mut self.rng))
+        } else {
+            let rows = (0..self.bag).map(|_| self.zipf.sample(&mut self.rng)).collect();
+            Request::Gather(rows)
+        }
+    }
+
+    pub fn keys(&self) -> u64 {
+        self.zipf.keys()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mix_parses_and_rejects() {
+        assert_eq!(Mix::parse("60/25/10/5"), Some(Mix::serving_default()));
+        assert_eq!(
+            Mix::parse(" 1/0/0/0 "), // whitespace around parts trims away
+            Some(Mix { get: 1, put: 0, cas: 0, gather: 0 })
+        );
+        assert_eq!(Mix::parse("0/0/0/0"), None);
+        assert_eq!(Mix::parse("60/25/10"), None);
+        assert_eq!(Mix::parse("a/b/c/d"), None);
+    }
+
+    #[test]
+    fn streams_are_deterministic_and_tenant_private() {
+        let mk = |idx| TenantWorkload::new(0xFEED, idx, 512, 0.99, Mix::serving_default(), 4);
+        let walk = |mut w: TenantWorkload| -> Vec<Request> {
+            (0..64).map(|_| w.next_request()).collect()
+        };
+        // Same seed + tenant index replays the identical sequence.
+        assert_eq!(walk(mk(0)), walk(mk(0)));
+        // A different tenant index yields a different stream.
+        assert_ne!(walk(mk(0)), walk(mk(1)));
+    }
+
+    #[test]
+    fn requests_respect_key_space_and_bag_size() {
+        let mut w = TenantWorkload::new(7, 3, 100, 1.1, Mix::serving_default(), 5);
+        let mut saw_gather = false;
+        for _ in 0..2000 {
+            match w.next_request() {
+                Request::Get(k) | Request::Put(k) | Request::Cas(k) => assert!(k < 100),
+                Request::Gather(rows) => {
+                    saw_gather = true;
+                    assert_eq!(rows.len(), 5);
+                    assert!(rows.iter().all(|&k| k < 100));
+                }
+            }
+        }
+        assert!(saw_gather, "5/100 gather weight never fired in 2000 draws");
+    }
+
+    #[test]
+    fn degenerate_mix_emits_only_that_op() {
+        let mix = Mix { get: 0, put: 1, cas: 0, gather: 0 };
+        let mut w = TenantWorkload::new(1, 0, 10, 0.0, mix, 1);
+        for _ in 0..100 {
+            assert!(matches!(w.next_request(), Request::Put(_)));
+        }
+    }
+}

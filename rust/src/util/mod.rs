@@ -7,5 +7,7 @@ pub mod crc32;
 pub mod prop;
 pub mod rng;
 pub mod stats;
+pub mod zipf;
 
 pub use rng::{SplitMix64, Xoshiro256};
+pub use zipf::Zipf;

@@ -129,6 +129,40 @@ pub fn percentile_ns(samples: &[u64], p: f64) -> u64 {
     v[rank.saturating_sub(1).min(v.len() - 1)]
 }
 
+/// Nearest-rank tail summary over whole-ns latency samples: p50 / p99 /
+/// p99.9 / max from **one** sort instead of three `percentile_ns` passes.
+/// All-integer, so reports carrying it stay `Eq`-comparable — the serving
+/// isolation tests compare per-tenant tails bit-exactly across shard
+/// counts.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq, Hash)]
+pub struct TailNs {
+    pub count: usize,
+    pub p50: u64,
+    pub p99: u64,
+    pub p999: u64,
+    pub max: u64,
+}
+
+/// Summarise a latency sample set (empty in → all-zero summary out).
+pub fn tail_ns(samples: &[u64]) -> TailNs {
+    if samples.is_empty() {
+        return TailNs::default();
+    }
+    let mut v = samples.to_vec();
+    v.sort_unstable();
+    let at = |p: f64| {
+        let rank = ((p / 100.0) * v.len() as f64).ceil() as usize;
+        v[rank.saturating_sub(1).min(v.len() - 1)]
+    };
+    TailNs {
+        count: v.len(),
+        p50: at(50.0),
+        p99: at(99.0),
+        p999: at(99.9),
+        max: *v.last().unwrap(),
+    }
+}
+
 /// Jain's fairness index `(Σx)² / (n·Σx²)` — 1.0 when every flow gets the
 /// same share, → 1/n when one flow takes everything. The incast bench
 /// uses it to show DCQCN converging senders to equal goodput.
@@ -222,6 +256,34 @@ mod tests {
         assert_eq!(percentile_ns(&xs, 0.0), 10);
         assert_eq!(percentile_ns(&[], 99.0), 0);
         assert_eq!(percentile_ns(&[7], 50.0), 7);
+    }
+
+    #[test]
+    fn percentile_ns_supports_p999() {
+        // 1000 distinct samples: nearest rank for p99.9 is the 999th
+        // order statistic — the second-largest value.
+        let xs: Vec<u64> = (1..=1000).collect();
+        assert_eq!(percentile_ns(&xs, 99.9), 999);
+        assert_eq!(percentile_ns(&xs, 99.0), 990);
+        // Below 1000 samples p99.9 collapses onto the max.
+        let small: Vec<u64> = (1..=100).collect();
+        assert_eq!(percentile_ns(&small, 99.9), 100);
+    }
+
+    #[test]
+    fn tail_summary_matches_percentile_ns() {
+        let mut xs: Vec<u64> = (1..=2000).rev().collect();
+        xs.push(5_000_000); // one outlier only the max should record
+        let t = tail_ns(&xs);
+        assert_eq!(t.count, xs.len());
+        assert_eq!(t.p50, percentile_ns(&xs, 50.0));
+        assert_eq!(t.p99, percentile_ns(&xs, 99.0));
+        assert_eq!(t.p999, percentile_ns(&xs, 99.9));
+        assert_eq!(t.max, 5_000_000);
+        assert!(t.p50 <= t.p99 && t.p99 <= t.p999 && t.p999 <= t.max);
+        // The outlier is invisible at p99 but the max records it.
+        assert!(t.p99 < 5_000_000);
+        assert_eq!(tail_ns(&[]), TailNs::default());
     }
 
     #[test]

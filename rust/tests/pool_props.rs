@@ -1,8 +1,12 @@
 //! Property tests for the SDN controller's allocator + ACL (§2.6),
 //! driven by the in-tree `util::prop` harness: random malloc/free
 //! interleavings never overlap, freed space always coalesces back to a
-//! canonical free list, and the ACL agrees with the live lease set.
+//! canonical free list, the ACL agrees with the live lease set, and —
+//! on a live fabric — a lease revoked mid-flight resolves its in-flight
+//! ops to typed NAKs (plan cancelled), never to stale or foreign data.
 
+use netdam::comm::Fabric;
+use netdam::mem::MemError;
 use netdam::pool::{AllocError, Allocation, InterleaveMap, SdnController};
 use netdam::util::prop;
 use netdam::util::Xoshiro256;
@@ -121,6 +125,87 @@ fn acl_agrees_with_the_live_lease_set() {
                 Err(AllocError::Denied { .. })
             ));
         }
+    });
+}
+
+#[test]
+fn inflight_ops_on_a_freed_lease_die_as_typed_naks_never_stale_reads() {
+    prop::check(|rng, _case| {
+        let mut fabric = Fabric::builder()
+            .star(2)
+            .hosts(2)
+            .seed(rng.next_u64())
+            .with_pool(1 << 20)
+            .build()
+            .unwrap();
+        let victim = fabric.mem_client().unwrap();
+        let neighbor = fabric.mem_client().unwrap();
+
+        let blocks = 1 + rng.next_below(4);
+        let lease = fabric.malloc(victim.tenant, blocks * BLOCK, true).unwrap();
+        let nb = fabric.malloc(neighbor.tenant, BLOCK, true).unwrap();
+
+        // Prime the victim's lease so a stale read would have real
+        // bytes to leak, and quiesce.
+        let mut b = victim.batch();
+        b.write(fabric.cluster_mut(), lease.gva, &[0xAB; 512]);
+        let h = fabric.submit_mem(b).unwrap();
+        fabric.wait_mem(h).unwrap();
+
+        // Put a fresh victim read plan in flight (submitted, not yet
+        // driven), with neighbor traffic alongside.
+        let mut b = victim.batch();
+        let n_ops = 2 + rng.next_below(6) as usize;
+        for _ in 0..n_ops {
+            let off = 512 * rng.next_below(blocks * BLOCK / 512);
+            b.read(fabric.cluster_mut(), lease.gva + off, 512);
+        }
+        let victim_h = fabric.submit_mem(b).unwrap();
+
+        let payload: Vec<u8> = (0..768).map(|i| (i as u8).wrapping_mul(13)).collect();
+        let mut b = neighbor.batch();
+        b.write(fabric.cluster_mut(), nb.gva, &payload);
+        let nb_write = fabric.submit_mem(b).unwrap();
+
+        // Revoke the victim's lease while both plans are in flight —
+        // and let the neighbor's next malloc reuse the hole at once, so
+        // a fenceless device would now serve FOREIGN data to the victim.
+        fabric.free(victim.tenant, lease.gva).unwrap();
+        let reuse = fabric
+            .malloc(neighbor.tenant, blocks * BLOCK, true)
+            .unwrap();
+        assert_eq!(reuse.gva, lease.gva, "first-fit reuses the freed hole");
+
+        // The victim's plan resolves to a typed NAK inside the revoked
+        // lease; nothing completed, the tail was cancelled with it.
+        let (res, stats) = fabric.wait_mem_timed(victim_h);
+        match res {
+            Err(MemError::Nak { gva, .. }) => {
+                assert!(
+                    gva >= lease.gva && gva < lease.gva + lease.len,
+                    "NAK names a gva outside the revoked lease: {gva:#x}"
+                );
+            }
+            other => panic!("expected a typed NAK for the revoked lease, got {other:?}"),
+        }
+        assert!(stats.nakked);
+        assert_eq!(stats.done, 0, "an op completed against a revoked lease");
+
+        // The neighbor never noticed: its in-flight write landed, and
+        // both its old lease and the reused granules round-trip.
+        fabric.wait_mem(nb_write).unwrap();
+        let mut b = neighbor.batch();
+        let rb_old = b.read(fabric.cluster_mut(), nb.gva, payload.len());
+        b.write(fabric.cluster_mut(), reuse.gva, &payload);
+        let h = fabric.submit_mem(b).unwrap();
+        let mut out = fabric.wait_mem(h).unwrap();
+        assert_eq!(out.take_read(rb_old).unwrap(), payload);
+
+        let mut b = neighbor.batch();
+        let rb_new = b.read(fabric.cluster_mut(), reuse.gva, payload.len());
+        let h = fabric.submit_mem(b).unwrap();
+        let mut out = fabric.wait_mem(h).unwrap();
+        assert_eq!(out.take_read(rb_new).unwrap(), payload);
     });
 }
 

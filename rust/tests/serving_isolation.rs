@@ -1,0 +1,74 @@
+//! PR 10 acceptance contract: the serving tier's isolation verdict.
+//!
+//! One seeded multi-tenant fleet runs twice per shard count — quiet,
+//! then with the aggressor (NAK storm from a revoked lease + incast
+//! burst) — on a shared DCQCN fabric. Every well-behaved tenant must
+//! finish its full schedule NAK-free with its p99 within 2x of the
+//! aggressor-free baseline, and both reports must be bit-identical
+//! across DES shard counts {1, 2, 4}.
+
+use netdam::roce::DcqcnConfig;
+use netdam::serve::{isolation_check, ServeConfig};
+use netdam::transport::CcMode;
+
+fn fleet(shards: usize) -> ServeConfig {
+    ServeConfig {
+        tenants: 4,
+        devices: 4,
+        keys_per_tenant: 128,
+        value_bytes: 512,
+        waves: 4,
+        ops_per_wave: 24,
+        burst_bytes: 64 << 10,
+        cc: CcMode::Dcqcn(DcqcnConfig::default()),
+        seed: 0x150_1A7E,
+        shards,
+        shard_threads: 1,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn aggressor_cannot_move_a_neighbors_tail_and_shards_agree() {
+    let mut prints = Vec::new();
+    for shards in [1usize, 2, 4] {
+        let v = isolation_check(&fleet(shards), 2_000).expect("isolation A/B");
+
+        // The verdict itself: every neighbor's p99 within 2x of quiet.
+        assert!(
+            v.ok,
+            "shards={shards}: isolation violated (worst inflation {} milli > {} milli)",
+            v.worst_ratio_milli, v.bound_milli
+        );
+
+        // The aggressor genuinely misbehaved — one NAK'd (and partly
+        // cancelled) storm plan per wave — and only in the contended run.
+        assert!(v.baseline.aggressor.is_none());
+        let agg = v.contended.aggressor.as_ref().unwrap();
+        assert!(agg.naks > 0, "shards={shards}: storm never NAK'd");
+        assert!(agg.cancelled > 0, "shards={shards}: no storm tail cancelled");
+
+        // Blast radius: the aggressor's failures stay its own. Every
+        // well-behaved tenant completes its whole schedule NAK-free in
+        // BOTH runs.
+        for (which, rep) in [("baseline", &v.baseline), ("contended", &v.contended)] {
+            for t in &rep.tenants {
+                assert_eq!(t.naks, 0, "shards={shards}/{which}: neighbor NAK'd");
+                assert_eq!(t.cancelled, 0, "shards={shards}/{which}: neighbor cancelled");
+                assert_eq!(t.done, t.ops, "shards={shards}/{which}: stranded ops");
+                assert!(t.tail.p99 > 0, "shards={shards}/{which}: empty tail");
+            }
+        }
+
+        prints.push((shards, v.baseline.fingerprint(), v.contended.fingerprint()));
+    }
+
+    // Cross-shard determinism: the whole A/B — per-tenant counters,
+    // byte totals, integer latency tails, fabric clock, retransmit and
+    // CNP counts — is bit-identical at every shard count.
+    let (_, b1, c1) = &prints[0];
+    for (shards, b, c) in &prints[1..] {
+        assert_eq!(b, b1, "baseline fingerprint diverges at shards={shards}");
+        assert_eq!(c, c1, "contended fingerprint diverges at shards={shards}");
+    }
+}
